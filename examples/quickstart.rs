@@ -1,0 +1,67 @@
+//! Quickstart: the MIOpen workflow in five steps (paper §IV-A).
+//!
+//! 1. create a handle   2. describe the problem   3. run the find step
+//! 4. execute with the best algorithm   5. reuse the memoized result.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use miopen_rs::prelude::*;
+use miopen_rs::primitives::conv;
+use miopen_rs::runtime::HostTensor;
+use miopen_rs::util::rng::SplitMix64;
+
+fn main() -> Result<()> {
+    // 1. the handle owns the PJRT backend, caches and databases
+    let handle = Handle::new(Default::default())?;
+    println!("platform: {}\n", handle.platform());
+
+    // 2. a GoogLeNet-style 3x3 convolution (Figure 6 config)
+    let x_desc = TensorDesc::nchw(4, 16, 28, 28, DType::F32);
+    let w_desc = FilterDesc::kcrs(32, 16, 3, 3, DType::F32);
+    let conv_desc = ConvDesc::simple(1, 1);
+    let problem = ConvProblem::forward(x_desc, w_desc, conv_desc);
+
+    // 3. the find step benchmarks every applicable solver
+    println!("find step (first call benchmarks all solvers):");
+    let results = handle.find_convolution(&problem)?;
+    println!("{:<10} {:>12} {:>14} {:>12}", "algo", "measured_us",
+             "gcn_model_us", "workspace");
+    for r in &results {
+        println!("{:<10} {:>12.1} {:>14.1} {:>12}", r.algo, r.time_us,
+                 r.modeled_time_us, r.workspace_bytes);
+    }
+
+    // 4. execute with the winner
+    let mut rng = SplitMix64::new(1);
+    let x = HostTensor::random_normal(
+        &miopen_rs::manifest::TensorSpec {
+            shape: vec![4, 16, 28, 28],
+            dtype: DType::F32,
+        },
+        &mut rng,
+    );
+    let w = HostTensor::random_normal(
+        &miopen_rs::manifest::TensorSpec {
+            shape: vec![32, 16, 3, 3],
+            dtype: DType::F32,
+        },
+        &mut rng,
+    );
+    let best = &results[0].algo;
+    let y = conv::forward_with_algo(&handle, best, &x, &w, &conv_desc)?;
+    println!("\nexecuted '{best}': output {:?}, first values {:?}",
+             y.spec.shape,
+             &y.as_f32()?[..4]);
+
+    // 5. second find call hits the find-db — no benchmarking
+    let again = handle.find_convolution(&problem)?;
+    println!("\nmemoized find returned {} algos instantly (best: {})",
+             again.len(), again[0].algo);
+
+    // persist the dbs so the NEXT PROCESS skips the find step too
+    handle.save_dbs()?;
+    let (exec, disk) = handle.cache_stats();
+    println!("\nexec cache: {} lookups, {} hits", exec.lookups, exec.hits);
+    println!("disk cache: {} lookups, {} hits", disk.lookups, disk.hits);
+    Ok(())
+}

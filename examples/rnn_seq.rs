@@ -1,0 +1,73 @@
+//! RNN workload (paper §IV-C): run the fused-GEMM LSTM over a sequence
+//! batch and compare against the naive per-gate formulation — the
+//! measured version of equations 11–12's claimed savings.
+//!
+//! Run: `cargo run --release --example rnn_seq`
+
+use std::time::Instant;
+
+use miopen_rs::handle::Handle;
+use miopen_rs::types::Result;
+use miopen_rs::util::rng::SplitMix64;
+use miopen_rs::runtime::HostTensor;
+
+fn time_sig(handle: &Handle, sig: &str, iters: usize) -> Result<(f64, Vec<f32>)> {
+    let art = handle.manifest().require(sig)?;
+    let mut rng = SplitMix64::new(3);
+    let inputs: Vec<HostTensor> = art
+        .inputs
+        .iter()
+        .map(|s| HostTensor::random_normal(s, &mut rng))
+        .collect();
+    let exe = handle.compile_sig(sig)?;
+    exe.run(&inputs)?; // warmup
+    let t = Instant::now();
+    let mut out = Vec::new();
+    for _ in 0..iters {
+        out = exe.run(&inputs)?;
+    }
+    Ok((t.elapsed().as_secs_f64() * 1e6 / iters as f64,
+        out[0].as_f32()?))
+}
+
+fn main() -> Result<()> {
+    let handle = Handle::new(Default::default())?;
+
+    println!("# LSTM fused-GEMM (eqs. 11-12) vs naive per-gate formulation");
+    println!("{:<6} {:>12} {:>12} {:>9}", "T", "fused_us", "naive_us",
+             "speedup");
+    for t in [4, 8, 16, 32] {
+        let fused_sig = format!("rnn-lstm-fused-t{t}b8x32h32-f32");
+        let naive_sig = format!("rnn-lstm-naive-t{t}b8x32h32-f32");
+        let (fused_us, hf) = time_sig(&handle, &fused_sig, 5)?;
+        let (naive_us, hn) = time_sig(&handle, &naive_sig, 5)?;
+        // same inputs seed -> outputs must agree
+        let max_err = hf
+            .iter()
+            .zip(&hn)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "fused/naive disagree: {max_err}");
+        println!("{:<6} {:>12.1} {:>12.1} {:>8.2}x", t, fused_us, naive_us,
+                 naive_us / fused_us);
+    }
+
+    println!("\n# bidirectional LSTM (miopenRNNbidirection)");
+    let (us, h) = time_sig(&handle, "rnn-lstm-bidir-t16b8x32h32-f32", 3)?;
+    println!("T=16 B=8 H=32x2: {us:.1}us, output len {}", h.len());
+
+    println!("\n# GRU + vanilla cells");
+    for sig in ["rnn-gru-fused-t16b8x32h32-f32",
+                "rnn-vanilla-fused-t16b8x32h32-f32"] {
+        let (us, _) = time_sig(&handle, sig, 3)?;
+        println!("{sig}: {us:.1}us");
+    }
+
+    println!("\n# length-descending batch rule (paper §IV-C)");
+    use miopen_rs::descriptors::RnnDesc;
+    println!("batches [8,8,4,2] -> {:?}",
+             RnnDesc::validate_batch_layout(&[8, 8, 4, 2]).is_ok());
+    println!("batches [4,8]     -> {:?} (rejected: would need T+1 GEMMs)",
+             RnnDesc::validate_batch_layout(&[4, 8]).is_ok());
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Auto-tuning session (paper §III-B): race the direct solver's block_k
+//! grid on a problem, persist the winner in the user perf-db, and show the
+//! find step picking the tuned variant afterwards.
+//!
+//! Run: `cargo run --release --example tune_conv`
+
+use miopen_rs::descriptors::{ConvDesc, FilterDesc, TensorDesc};
+use miopen_rs::find::{ConvProblem, FindOptions};
+use miopen_rs::handle::Handle;
+use miopen_rs::prelude::DType;
+use miopen_rs::tuning::{format_params, TuneOptions, TuningSession};
+use miopen_rs::types::Result;
+
+fn main() -> Result<()> {
+    let handle = Handle::new(Default::default())?;
+
+    // TUNE_CONFIGS[0]: block_k variants {4, 8, 16, 32} were AOT'd
+    let problem = ConvProblem::forward(
+        TensorDesc::nchw(4, 16, 28, 28, DType::F32),
+        FilterDesc::kcrs(32, 16, 3, 3, DType::F32),
+        ConvDesc::simple(1, 1),
+    );
+    println!("tuning {}", problem.sig()?.db_key());
+
+    println!("\n== full grid ==");
+    let results = TuningSession::new(&handle).tune_convolution(&problem)?;
+    for r in &results {
+        println!("solver {}", r.solver);
+        for (params, us) in &r.evaluated {
+            let marker = if *params == r.best_params { "  <-- best" } else { "" };
+            println!("  [{}] {:>10.1}us{}", format_params(params), us, marker);
+        }
+        if let Some(sp) = r.speedup_vs_default() {
+            println!("  speedup vs shipped default: {sp:.2}x");
+        }
+    }
+
+    println!("\n== pruned search (keep 2, paper's pruned-space approach) ==");
+    let pruned = TuningSession::with_options(&handle,
+                                             TuneOptions { prune_keep: 2 })
+        .tune_convolution(&problem)?;
+    for r in &pruned {
+        println!("solver {}: evaluated {} points ({} pruned away), best [{}]",
+                 r.solver, r.evaluated.len(), r.pruned_out,
+                 format_params(&r.best_params));
+    }
+
+    println!("\n== find step after tuning (uses the tuned variant) ==");
+    let found = handle.find_convolution_opt(
+        &problem,
+        &FindOptions { exhaustive: true, rank_by_model: false },
+    )?;
+    for f in &found {
+        println!("{:<10} {:>10.1}us  artifact {}", f.algo, f.time_us,
+                 f.artifact_sig);
+    }
+
+    handle.save_dbs()?;
+    println!("\nperf-db + find-db persisted (future processes skip both \
+              the grid race and the find benchmarking).");
+    Ok(())
+}

@@ -1,0 +1,602 @@
+"""AOT artifact generator: lower every (primitive, algorithm, config,
+dtype, direction, tuning-variant) to HLO **text** + write manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). Everything is lowered with return_tuple=True
+and unwrapped with to_tupleN() on the Rust side.
+
+Run via `make artifacts`:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .kernels import (activations, batchnorm, ctc, direct, fft_conv, fused,
+                      gemm, im2col_gemm, implicit_gemm, lrn, pooling,
+                      rnn_cells, softmax, tensor_ops, winograd)
+
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16,
+          "i32": jnp.int32, "u32": jnp.uint32, "i8": jnp.int8}
+DTYPE_NAMES = {v: k for k, v in DTYPES.items()}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is load-bearing: the default ELIDES big
+    # constant tensors as `constant({...})`, which the HLO parser then
+    # silently reads back as zeros — corrupting e.g. Winograd transform
+    # tables and the seeded CNN init.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+class Emitter:
+    def __init__(self, out_dir, force=False, only=None):
+        self.out_dir = out_dir
+        self.force = force
+        self.only = only
+        self.manifest = []
+        self.count = 0
+        self.skipped = 0
+
+    def emit(self, sig, fn, in_specs, *, primitive, algo="", direction="",
+             dtype="f32", tags=(), params=None, workspace_bytes=0,
+             tuning=None):
+        if self.only and self.only not in sig:
+            return
+        for e in self.manifest:
+            if e["sig"] == sig:
+                # dedupe (configs can overlap across sets) but merge tags
+                # so every experiment set still finds its artifacts
+                e["tags"] = sorted(set(e["tags"]) | set(tags))
+                return
+        path = os.path.join(self.out_dir, f"{sig}.hlo.txt")
+        out_avals = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        if self.force or not os.path.exists(path):
+            # lowering is the expensive step — only done when (re)writing
+            text = to_hlo_text(jax.jit(fn).lower(*in_specs))
+            with open(path, "w") as f:
+                f.write(text)
+            self.count += 1
+        else:
+            self.skipped += 1
+        self.manifest.append({
+            "sig": sig,
+            "file": f"{sig}.hlo.txt",
+            "primitive": primitive,
+            "algo": algo,
+            "direction": direction,
+            "dtype": dtype,
+            "tags": list(tags),
+            "params": params or {},
+            "inputs": [{"shape": list(s.shape),
+                        "dtype": DTYPE_NAMES[s.dtype.type
+                                             if hasattr(s.dtype, "type")
+                                             else s.dtype]}
+                       for s in [jax.ShapeDtypeStruct(a.shape, a.dtype)
+                                 for a in in_specs]],
+            "outputs": [{"shape": list(a.shape),
+                         "dtype": DTYPE_NAMES[a.dtype.type
+                                              if hasattr(a.dtype, "type")
+                                              else a.dtype]}
+                        for a in out_avals],
+            "workspace_bytes": int(workspace_bytes),
+            "tuning": tuning or {},
+        })
+        if (self.count + self.skipped) % 25 == 0:
+            print(f"  ... {self.count} lowered, {self.skipped} kept",
+                  flush=True)
+
+    def write_manifest(self):
+        if self.only:
+            print(f"--only {self.only}: {self.count} lowered; manifest NOT "
+                  "rewritten (partial run)")
+            return
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "artifacts": self.manifest}, f, indent=1)
+        print(f"manifest: {len(self.manifest)} artifacts "
+              f"({self.count} lowered, {self.skipped} reused)")
+
+
+# ---------------------------------------------------------------------------
+# Convolution artifacts
+# ---------------------------------------------------------------------------
+
+
+def conv_sig(direction, algo, cc, dtype, bk=None):
+    t = f"-bk{bk}" if bk is not None else ""
+    return f"conv_{direction}-{algo}-{cc.sig_params()}-{dtype}{t}"
+
+
+def fwd_algos(cc):
+    """Applicable forward algorithms for a config (mirrors rust solvers)."""
+    algos = ["gemm", "direct", "implicit"]
+    if (cc.r, cc.s) == (3, 3) and (cc.u, cc.v) == (1, 1) \
+            and (cc.l, cc.j) == (1, 1) and cc.g == 1:
+        algos.append("winograd")
+    if max(cc.r, cc.s) >= 5 and (cc.l, cc.j) == (1, 1) and cc.g == 1:
+        algos.append("fft")
+    return algos
+
+
+def bwd_algos(cc):
+    algos = ["gemm", "direct"]
+    if (cc.r, cc.s) == (3, 3) and (cc.u, cc.v) == (1, 1) \
+            and (cc.l, cc.j) == (1, 1) and cc.g == 1:
+        algos.append("winograd")
+    return algos
+
+
+def make_conv_fn(direction, algo, cc, bk=16):
+    stride, pad, dil = (cc.u, cc.v), (cc.p, cc.q), (cc.l, cc.j)
+    xs = (cc.n, cc.c, cc.h, cc.w)
+    ws = (cc.k, cc.c // cc.g, cc.r, cc.s)
+
+    if direction == "fwd":
+        if algo == "gemm":
+            return lambda x, w: (im2col_gemm.conv2d_im2col(
+                x, w, stride=stride, pad=pad, dilation=dil),)
+        if algo == "direct":
+            return lambda x, w: (direct.conv2d_direct(
+                x, w, stride=stride, pad=pad, dilation=dil, groups=cc.g,
+                block_k=bk),)
+        if algo == "implicit":
+            return lambda x, w: (implicit_gemm.conv2d_implicit_gemm(
+                x, w, stride=stride, pad=pad, dilation=dil, block_k=bk),)
+        if algo == "winograd":
+            return lambda x, w: (winograd.conv2d_winograd(x, w, pad=pad),)
+        if algo == "fft":
+            return lambda x, w: (fft_conv.conv2d_fft(
+                x, w, stride=stride, pad=pad),)
+    if direction == "bwd":
+        if algo == "gemm":
+            return lambda dy, w: (im2col_gemm.conv2d_im2col_bwd_data(
+                dy, w, xs, stride=stride, pad=pad, dilation=dil),)
+        if algo == "direct":
+            return lambda dy, w: (direct.conv2d_direct_bwd_data(
+                dy, w, xs, stride=stride, pad=pad, dilation=dil,
+                block_k=bk),)
+        if algo == "winograd":
+            return lambda dy, w: (winograd.conv2d_winograd_bwd_data(
+                dy, w, xs, pad=pad),)
+    if direction == "wrw":
+        if algo == "gemm":
+            return lambda dy, x: (im2col_gemm.conv2d_im2col_bwd_weights(
+                dy, x, ws, stride=stride, pad=pad, dilation=dil),)
+        if algo == "direct":
+            return lambda dy, x: (direct.conv2d_direct_bwd_weights(
+                dy, x, ws, stride=stride, pad=pad, dilation=dil,
+                block_k=bk),)
+    raise ValueError(f"{direction}/{algo}")
+
+
+def conv_in_specs(direction, cc, dtype):
+    xs = (cc.n, cc.c, cc.h, cc.w)
+    ws = (cc.k, cc.c // cc.g, cc.r, cc.s)
+    ho, wo = cc.out_hw()
+    ys = (cc.n, cc.k, ho, wo)
+    if direction == "fwd":
+        return [spec(xs, dtype), spec(ws, dtype)]
+    if direction == "bwd":
+        return [spec(ys, dtype), spec(ws, dtype)]
+    if direction == "wrw":
+        return [spec(ys, dtype), spec(xs, dtype)]
+    raise ValueError(direction)
+
+
+def conv_workspace(direction, algo, cc):
+    ho, wo = cc.out_hw()
+    if algo == "gemm":
+        return im2col_gemm.workspace_bytes(
+            (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
+            (cc.n, cc.k, ho, wo))
+    if algo == "fft":
+        return fft_conv.workspace_bytes(
+            (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
+            pad=(cc.p, cc.q))
+    return 0
+
+
+def emit_conv_family(em):
+    dir_tags = {"fwd": ("a", "b"), "bwd": ("c", "d"), "wrw": ("e", "f")}
+    for cset, one_by_one in ((configs.FIG6_1X1, True),
+                             (configs.FIG6_NON1X1, False)):
+        for cc in cset:
+            for direction in ("fwd", "bwd", "wrw"):
+                panel = dir_tags[direction][0 if one_by_one else 1]
+                algos = fwd_algos(cc) if direction == "fwd" else (
+                    bwd_algos(cc) if direction == "bwd" else ["gemm", "direct"])
+                for algo in algos:
+                    em.emit(
+                        conv_sig(direction, algo, cc, "f32"),
+                        make_conv_fn(direction, algo, cc),
+                        conv_in_specs(direction, cc, "f32"),
+                        primitive="conv", algo=algo, direction=direction,
+                        dtype="f32", tags=(f"fig6{panel}",),
+                        params=cc.as_dict(),
+                        workspace_bytes=conv_workspace(direction, algo, cc),
+                    )
+    # bf16 extras: a subset proving low-precision support end to end
+    for cc in configs.FIG6_1X1[:2] + configs.FIG6_NON1X1[:2]:
+        for algo in ("gemm", "direct"):
+            em.emit(
+                conv_sig("fwd", algo, cc, "bf16"),
+                make_conv_fn("fwd", algo, cc),
+                conv_in_specs("fwd", cc, "bf16"),
+                primitive="conv", algo=algo, direction="fwd", dtype="bf16",
+                tags=("bf16",), params=cc.as_dict(),
+                workspace_bytes=conv_workspace("fwd", algo, cc),
+            )
+    # grouped / depthwise convolutions (direct solver only, as in rust)
+    for cc in configs.GROUPED_CONFIGS:
+        em.emit(
+            conv_sig("fwd", "direct", cc, "f32"),
+            make_conv_fn("fwd", "direct", cc),
+            conv_in_specs("fwd", cc, "f32"),
+            primitive="conv", algo="direct", direction="fwd", dtype="f32",
+            tags=("grouped",), params=cc.as_dict(),
+        )
+    # int8 inference: i8 inputs, exact f32 accumulation/output
+    for cc in configs.INT8_CONFIGS:
+        em.emit(
+            f"conv_fwd-direct-{cc.sig_params()}-i8",
+            lambda x, w, _cc=cc: (direct.conv2d_direct(
+                x, w, stride=(_cc.u, _cc.v), pad=(_cc.p, _cc.q),
+                out_dtype=jnp.float32),),
+            [spec((cc.n, cc.c, cc.h, cc.w), "i8"),
+             spec((cc.k, cc.c, cc.r, cc.s), "i8")],
+            primitive="conv", algo="direct", direction="fwd", dtype="i8",
+            tags=("int8",), params=cc.as_dict(),
+        )
+    # tuning variants of the direct solver
+    for cc in configs.TUNE_CONFIGS:
+        for bk in configs.DIRECT_BLOCK_K:
+            em.emit(
+                conv_sig("fwd", "direct", cc, "f32", bk=bk),
+                make_conv_fn("fwd", "direct", cc, bk=bk),
+                conv_in_specs("fwd", cc, "f32"),
+                primitive="conv", algo="direct", direction="fwd",
+                dtype="f32", tags=("tune",), params=cc.as_dict(),
+                tuning={"block_k": bk},
+            )
+
+
+# ---------------------------------------------------------------------------
+# Fusion artifacts (Figure 7 + fusion-plan execution)
+# ---------------------------------------------------------------------------
+
+
+def emit_fusion_family(em):
+    # Figure 7a: CBA fused vs {conv, bias, act} separate
+    for cc in configs.FIG7A:
+        stride, pad = (cc.u, cc.v), (cc.p, cc.q)
+        xs = (cc.n, cc.c, cc.h, cc.w)
+        ws = (cc.k, cc.c, cc.r, cc.s)
+        ho, wo = cc.out_hw()
+        ys = (cc.n, cc.k, ho, wo)
+        base = cc.sig_params()
+        em.emit(f"cba-relu-{base}-f32",
+                lambda x, w, b, _s=stride, _p=pad: (
+                    fused.conv_bias_act(x, w, b, stride=_s, pad=_p,
+                                        mode="relu"),),
+                [spec(xs), spec(ws), spec((cc.k,))],
+                primitive="fusion", algo="cba", direction="fwd",
+                tags=("fig7a",), params=cc.as_dict())
+        em.emit(f"conv_fwd-direct-{base}-f32",
+                make_conv_fn("fwd", "direct", cc),
+                conv_in_specs("fwd", cc, "f32"),
+                primitive="conv", algo="direct", direction="fwd",
+                tags=("fig7a-sep",), params=cc.as_dict())
+        em.emit(f"bias-{cc.n}x{cc.k}x{ho}x{wo}-f32",
+                lambda y, b: (tensor_ops.op_tensor_bias(y, b),),
+                [spec(ys), spec((cc.k,))],
+                primitive="tensor_op", algo="bias", direction="fwd",
+                tags=("fig7a-sep",), params=cc.as_dict())
+        em.emit(f"act-relu-{cc.n}x{cc.k}x{ho}x{wo}-f32",
+                lambda y: (activations.activation_fwd(y, "relu"),),
+                [spec(ys)],
+                primitive="activation", algo="relu", direction="fwd",
+                tags=("fig7a-sep",), params=cc.as_dict())
+
+    # Figure 7b: BN+A fused vs {bn_infer, act} separate
+    n = 4
+    for (c, h, w) in configs.FIG7B:
+        shape = (n, c, h, w)
+        label = f"{c}x{h}x{w}"
+        pv = {"n": n, "c": c, "h": h, "w": w, "label": label}
+        em.emit(f"bna-relu-n{n}c{c}h{h}w{w}-f32",
+                lambda x, g, b, m, v: (
+                    fused.bn_act(x, g, b, m, v, mode="relu"),),
+                [spec(shape), spec((c,)), spec((c,)), spec((c,)),
+                 spec((c,))],
+                primitive="fusion", algo="bna", direction="fwd",
+                tags=("fig7b",), params=pv)
+        em.emit(f"bn_infer-spatial-n{n}c{c}h{h}w{w}-f32",
+                lambda x, g, b, m, v: (
+                    batchnorm.spatial_fwd_infer(x, g, b, m, v),),
+                [spec(shape), spec((c,)), spec((c,)), spec((c,)),
+                 spec((c,))],
+                primitive="batchnorm", algo="spatial_infer",
+                direction="fwd", tags=("fig7b-sep",), params=pv)
+        em.emit(f"act-relu-{n}x{c}x{h}x{w}-f32",
+                lambda x: (activations.activation_fwd(x, "relu"),),
+                [spec(shape)],
+                primitive="activation", algo="relu", direction="fwd",
+                tags=("fig7b-sep",), params=pv)
+
+    # CBNA (Tables I/II row 1) — one exemplar per stride for plan execution
+    for cc in (configs.ConvConfig(2, 8, 14, 14, 8, 3, 3, p=1, q=1),
+               configs.ConvConfig(2, 8, 14, 14, 8, 3, 3, u=2, v=2, p=1, q=1)):
+        xs = (cc.n, cc.c, cc.h, cc.w)
+        ws = (cc.k, cc.c, cc.r, cc.s)
+        em.emit(f"cbna-relu-{cc.sig_params()}-f32",
+                lambda x, w, b, g, bb, m, v, _cc=cc: (
+                    fused.conv_bias_bn_act(
+                        x, w, b, g, bb, m, v, stride=(_cc.u, _cc.v),
+                        pad=(_cc.p, _cc.q), mode="relu"),),
+                [spec(xs), spec(ws), spec((cc.k,)), spec((cc.k,)),
+                 spec((cc.k,)), spec((cc.k,)), spec((cc.k,))],
+                primitive="fusion", algo="cbna", direction="fwd",
+                tags=("fusion-exec",), params=cc.as_dict())
+
+
+# ---------------------------------------------------------------------------
+# Other primitives
+# ---------------------------------------------------------------------------
+
+
+def emit_primitives(em):
+    for shape in configs.BN_SHAPES:
+        n, c, h, w = shape
+        base = f"n{n}c{c}h{h}w{w}"
+        pv = {"n": n, "c": c, "h": h, "w": w}
+        em.emit(f"bn_train-spatial-{base}-f32",
+                lambda x, g, b: batchnorm.spatial_fwd_train(x, g, b),
+                [spec(shape), spec((c,)), spec((c,))],
+                primitive="batchnorm", algo="spatial_train",
+                direction="fwd", tags=("prim",), params=pv)
+        em.emit(f"bn_bwd-spatial-{base}-f32",
+                lambda x, dy, g, m, v: batchnorm.spatial_bwd(x, dy, g, m, v),
+                [spec(shape), spec(shape), spec((c,)), spec((c,)),
+                 spec((c,))],
+                primitive="batchnorm", algo="spatial_bwd", direction="bwd",
+                tags=("prim",), params=pv)
+        em.emit(f"bn_train-peract-{base}-f32",
+                lambda x, g, b: batchnorm.peract_fwd_train(x, g, b),
+                [spec(shape), spec((c, h, w)), spec((c, h, w))],
+                primitive="batchnorm", algo="peract_train", direction="fwd",
+                tags=("prim",), params=pv)
+        em.emit(f"bn_bwd-peract-{base}-f32",
+                lambda x, dy, g, m, v: batchnorm.peract_bwd(x, dy, g, m, v),
+                [spec(shape), spec(shape)] + [spec((c, h, w))] * 3,
+                primitive="batchnorm", algo="peract_bwd", direction="bwd",
+                tags=("prim",), params=pv)
+        em.emit(f"bn_infer-peract-{base}-f32",
+                lambda x, g, b, m, v: (
+                    batchnorm.peract_fwd_infer(x, g, b, m, v),),
+                [spec(shape)] + [spec((c, h, w))] * 4,
+                primitive="batchnorm", algo="peract_infer", direction="fwd",
+                tags=("prim",), params=pv)
+
+    for shape, win, stride, pad, mode in configs.POOL_SHAPES:
+        n, c, h, w = shape
+        ho = (h + 2 * pad[0] - win[0]) // stride[0] + 1
+        wo = (w + 2 * pad[1] - win[1]) // stride[1] + 1
+        base = f"{mode}-n{n}c{c}h{h}w{w}k{win[0]}x{win[1]}u{stride[0]}p{pad[0]}"
+        pv = {"n": n, "c": c, "h": h, "w": w, "win": list(win),
+              "stride": list(stride), "pad": list(pad), "mode": mode}
+        em.emit(f"pool_fwd-{base}-f32",
+                lambda x, _w=win, _s=stride, _p=pad, _m=mode: (
+                    pooling.pool2d_fwd(x, window=_w, stride=_s, pad=_p,
+                                       mode=_m),),
+                [spec(shape)],
+                primitive="pooling", algo=mode, direction="fwd",
+                tags=("prim",), params=pv)
+        em.emit(f"pool_bwd-{base}-f32",
+                lambda x, y, dy, _w=win, _s=stride, _p=pad, _m=mode: (
+                    pooling.pool2d_bwd(x, y, dy, window=_w, stride=_s,
+                                       pad=_p, mode=_m),),
+                [spec(shape), spec((n, c, ho, wo)), spec((n, c, ho, wo))],
+                primitive="pooling", algo=mode, direction="bwd",
+                tags=("prim",), params=pv)
+
+    for shape in configs.SOFTMAX_SHAPES:
+        n, c, h, w = shape
+        base = f"n{n}c{c}h{h}w{w}"
+        for log in (False, True):
+            nm = "log_softmax" if log else "softmax"
+            em.emit(f"{nm}_fwd-{base}-f32",
+                    lambda x, _l=log: (softmax.softmax_fwd(x, log=_l),),
+                    [spec(shape)],
+                    primitive="softmax", algo=nm, direction="fwd",
+                    tags=("prim",), params={"n": n, "c": c, "h": h, "w": w})
+            em.emit(f"{nm}_bwd-{base}-f32",
+                    lambda y, dy, _l=log: (softmax.softmax_bwd(y, dy, log=_l),),
+                    [spec(shape), spec(shape)],
+                    primitive="softmax", algo=nm, direction="bwd",
+                    tags=("prim",), params={"n": n, "c": c, "h": h, "w": w})
+
+    for shape in configs.ACT_SHAPES:
+        n, c, h, w = shape
+        for mode in configs.ACT_MODES:
+            alpha = {"leaky_relu": 0.01}.get(mode, 0.0)
+            em.emit(f"act_fwd-{mode}-n{n}c{c}h{h}w{w}-f32",
+                    lambda x, _m=mode, _a=alpha: (
+                        activations.activation_fwd(x, _m, _a),),
+                    [spec(shape)],
+                    primitive="activation", algo=mode, direction="fwd",
+                    tags=("prim",), params={"n": n, "c": c, "h": h, "w": w})
+            em.emit(f"act_bwd-{mode}-n{n}c{c}h{h}w{w}-f32",
+                    lambda x, dy, _m=mode, _a=alpha: (
+                        activations.activation_bwd(x, dy, _m, _a),),
+                    [spec(shape), spec(shape)],
+                    primitive="activation", algo=mode, direction="bwd",
+                    tags=("prim",), params={"n": n, "c": c, "h": h, "w": w})
+
+    for shape in configs.LRN_SHAPES:
+        n, c, h, w = shape
+        em.emit(f"lrn_fwd-n{n}c{c}h{h}w{w}-f32",
+                lambda x: (lrn.lrn_fwd(x),),
+                [spec(shape)],
+                primitive="lrn", algo="cross_channel", direction="fwd",
+                tags=("prim",), params={"n": n, "c": c, "h": h, "w": w})
+
+    shape = (4, 16, 14, 14)
+    n, c, h, w = shape
+    for op in ("add", "mul"):
+        em.emit(f"op_tensor-{op}-n{n}c{c}h{h}w{w}-f32",
+                lambda a, b, _o=op: (tensor_ops.op_tensor(a, b, op=_o),),
+                [spec(shape), spec(shape)],
+                primitive="tensor_op", algo=op, direction="fwd",
+                tags=("prim",), params={"n": n, "c": c, "h": h, "w": w})
+
+    # CTC loss
+    b_, t_, v_, l_ = 4, 8, 6, 3
+    em.emit(f"ctc_loss-b{b_}t{t_}v{v_}l{l_}-f32",
+            lambda lp, lab, il, ll: (ctc.ctc_loss(lp, lab, il, ll),),
+            [spec((b_, t_, v_)), spec((b_, l_), "i32"), spec((b_,), "i32"),
+             spec((b_,), "i32")],
+            primitive="ctc", algo="forward", direction="fwd",
+            tags=("prim",), params={"b": b_, "t": t_, "v": v_, "l": l_})
+
+
+# ---------------------------------------------------------------------------
+# RNN artifacts
+# ---------------------------------------------------------------------------
+
+
+def emit_rnn_family(em):
+    def emit_one(rc, variant, tags):
+        t, b, x, h = rc.t, rc.b, rc.x, rc.hid
+        if rc.cell == "lstm":
+            gates = 4
+            fn = (rnn_cells.lstm_seq_fused if variant == "fused"
+                  else rnn_cells.lstm_seq_naive)
+            f = lambda xs, h0, c0, W, R: (fn(xs, h0, c0, W, R),)
+            ins = [spec((t, b, x)), spec((b, h)), spec((b, h)),
+                   spec((gates * h, x)), spec((gates * h, h))]
+        elif rc.cell == "gru":
+            gates = 3
+            f = lambda xs, h0, W, R: (rnn_cells.gru_seq_fused(xs, h0, W, R),)
+            ins = [spec((t, b, x)), spec((b, h)),
+                   spec((gates * h, x)), spec((gates * h, h))]
+        else:
+            f = lambda xs, h0, W, R, _a=rc.act: (
+                rnn_cells.vanilla_seq_fused(xs, h0, W, R, act=_a),)
+            ins = [spec((t, b, x)), spec((b, h)), spec((h, x)),
+                   spec((h, h))]
+        em.emit(f"rnn-{rc.cell}-{variant}-{rc.sig_params()}-f32",
+                f, ins, primitive="rnn", algo=f"{rc.cell}_{variant}",
+                direction="fwd", tags=tags, params=rc.as_dict())
+
+    for rc in configs.RNN_CONFIGS:
+        emit_one(rc, "fused", ("rnn",))
+
+    # ablation sweep: fused vs naive LSTM over T
+    base = configs.RNN_ABLATION_BASE
+    for t in configs.RNN_ABLATION_T:
+        rc = configs.RnnConfig("lstm", t, base.b, base.x, base.hid)
+        emit_one(rc, "fused", ("abl-rnn",))
+        emit_one(rc, "naive", ("abl-rnn",))
+
+    # bidirectional exemplar
+    rc = configs.RNN_CONFIGS[0]
+    t, b, x, h = rc.t, rc.b, rc.x, rc.hid
+    em.emit(f"rnn-lstm-bidir-{rc.sig_params()}-f32",
+            lambda xs, h0, c0, W, R: (
+                rnn_cells.bidirectional(rnn_cells.lstm_seq_fused, xs, h0,
+                                        c0, W, R),),
+            [spec((t, b, x)), spec((b, h)), spec((b, h)),
+             spec((4 * h, x)), spec((4 * h, h))],
+            primitive="rnn", algo="lstm_bidir", direction="fwd",
+            tags=("rnn",), params=rc.as_dict())
+
+
+# ---------------------------------------------------------------------------
+# E2E CNN artifacts
+# ---------------------------------------------------------------------------
+
+
+def emit_cnn(em):
+    cfg = configs.CNN
+    p = model.cnn_init(cfg)
+    pspecs = [spec(p[k].shape) for k in model.PARAM_ORDER]
+    b, c, s = cfg["batch"], cfg["channels"], cfg["image"]
+    xspec = spec((b, c, s, s))
+    lspec = spec((b,), "i32")
+
+    def train_fn(*args):
+        params = dict(zip(model.PARAM_ORDER, args[:7]))
+        x, labels = args[7], args[8]
+        return model.cnn_train_step(params, x, labels, cfg["lr"])
+
+    em.emit("cnn_train-f32", train_fn, pspecs + [xspec, lspec],
+            primitive="model", algo="cnn_train", direction="fwd",
+            tags=("e2e",), params=cfg)
+
+    def infer_fn(*args):
+        params = dict(zip(model.PARAM_ORDER, args[:7]))
+        return model.cnn_infer(params, args[7])
+
+    em.emit("cnn_infer-f32", infer_fn, pspecs + [xspec],
+            primitive="model", algo="cnn_infer", direction="fwd",
+            tags=("e2e",), params=cfg)
+
+    em.emit("cnn_datagen-f32", model.cnn_datagen, [spec((2,), "u32")],
+            primitive="model", algo="cnn_datagen", direction="fwd",
+            tags=("e2e",), params=cfg)
+
+    # initial parameters as a constant-producing artifact (seeded init):
+    def init_fn():
+        return tuple(p[k] for k in model.PARAM_ORDER)
+
+    em.emit("cnn_init-f32", init_fn, [],
+            primitive="model", algo="cnn_init", direction="fwd",
+            tags=("e2e",), params=cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    ap.add_argument("--only", default=None,
+                    help="only emit artifacts whose signature contains this")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    em = Emitter(args.out, force=args.force, only=args.only)
+    print("emitting conv family ...", flush=True)
+    emit_conv_family(em)
+    print("emitting fusion family ...", flush=True)
+    emit_fusion_family(em)
+    print("emitting primitives ...", flush=True)
+    emit_primitives(em)
+    print("emitting rnn family ...", flush=True)
+    emit_rnn_family(em)
+    print("emitting cnn ...", flush=True)
+    emit_cnn(em)
+    em.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Problem-configuration sets — the single source of truth shared by the
+AOT generator (aot.py) and the Rust workload layer (via manifest.json).
+
+Figure 6 configs are sampled from the same networks the paper used
+(GoogLeNet / Inception v3 / Inception v4); Figure 7 configs follow the
+paper's sweeps (output-channel sweep for CBA, image-size sweep for BN+A).
+
+SCALING NOTE (DESIGN.md §Substitutions): the paper ran full-size ImageNet
+layers on Radeon Instinct GPUs. Our measured series executes on CPU-PJRT
+through interpret-lowered Pallas kernels, so each config is scaled down
+(channels /4, batch 4) to keep the find/bench loops tractable. The GCN
+perf model is evaluated on the *same* scaled config, so the measured and
+modeled series are directly comparable; relative algorithm ordering is
+scale-stable because it is driven by FLOP/byte/launch ratios.
+
+Label format matches Figure 6's x-axis:
+  filterH-filterW-inChannels-imageH-imageW-outChannels-padH-padW
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ConvConfig:
+    n: int          # batch
+    c: int          # input channels
+    h: int          # image height
+    w: int          # image width
+    k: int          # output channels
+    r: int          # filter height
+    s: int          # filter width
+    u: int = 1      # stride h
+    v: int = 1      # stride w
+    p: int = 0      # pad h
+    q: int = 0      # pad w
+    l: int = 1      # dilation h
+    j: int = 1      # dilation w
+    g: int = 1      # groups
+
+    @property
+    def label(self) -> str:
+        """Figure 6 x-axis label."""
+        return f"{self.r}-{self.s}-{self.c}-{self.h}-{self.w}-{self.k}-{self.p}-{self.q}"
+
+    def sig_params(self) -> str:
+        return (f"n{self.n}c{self.c}h{self.h}w{self.w}k{self.k}"
+                f"r{self.r}s{self.s}u{self.u}v{self.v}p{self.p}q{self.q}"
+                f"l{self.l}j{self.j}g{self.g}")
+
+    def out_hw(self):
+        er = (self.r - 1) * self.l + 1
+        es = (self.s - 1) * self.j + 1
+        ho = (self.h + 2 * self.p - er) // self.u + 1
+        wo = (self.w + 2 * self.q - es) // self.v + 1
+        return ho, wo
+
+    def as_dict(self):
+        d = {k: getattr(self, k) for k in
+             ("n", "c", "h", "w", "k", "r", "s", "u", "v", "p", "q", "l",
+              "j", "g")}
+        d["label"] = self.label
+        return d
+
+
+# -- Figure 6: convolution configs -------------------------------------------
+# 1x1 set: sampled 1x1 layers (GoogLeNet inception branches, Inception v3
+# reductions). Scaled: channels/4, N=4, spatial as in the networks' deeper
+# stages.
+
+FIG6_1X1 = [
+    ConvConfig(4, 16, 28, 28, 16, 1, 1),          # googlenet 3a 1x1 branch
+    ConvConfig(4, 48, 28, 28, 16, 1, 1),          # 3b squeeze
+    ConvConfig(4, 120, 14, 14, 32, 1, 1),         # 4a squeeze
+    ConvConfig(4, 128, 14, 14, 32, 1, 1),         # 4c
+    ConvConfig(4, 208, 7, 7, 64, 1, 1),           # 5a
+    ConvConfig(4, 32, 28, 28, 64, 1, 1, u=2, v=2),# inception-v3 reduction
+    ConvConfig(4, 64, 14, 14, 96, 1, 1),          # v4 branch
+    ConvConfig(4, 96, 7, 7, 128, 1, 1),           # v4 deep
+]
+
+# non-1x1 set: 3x3 / 5x5 / 7x7 layers (Winograd's home turf plus cases
+# where direct/FFT step in).
+
+FIG6_NON1X1 = [
+    ConvConfig(4, 16, 28, 28, 32, 3, 3, p=1, q=1),      # googlenet 3a 3x3
+    ConvConfig(4, 32, 28, 28, 48, 3, 3, p=1, q=1),      # 3b 3x3
+    ConvConfig(4, 28, 14, 14, 52, 3, 3, p=1, q=1),      # 4b 3x3
+    ConvConfig(4, 40, 14, 14, 80, 3, 3, p=1, q=1),      # 4e 3x3
+    ConvConfig(4, 4, 28, 28, 8, 5, 5, p=2, q=2),        # 3a 5x5
+    ConvConfig(4, 8, 14, 14, 16, 5, 5, p=2, q=2),       # 4e 5x5
+    ConvConfig(4, 3, 32, 32, 16, 7, 7, u=2, v=2, p=3, q=3),  # stem 7x7/2
+    ConvConfig(4, 16, 14, 14, 48, 3, 3, u=2, v=2, p=1, q=1), # v3 reduction
+]
+
+# -- Figure 7a: Conv+Bias+Activation fusion ----------------------------------
+# The paper sweeps output channels (speedup shrinks as K grows — bias
+# vector pressure). Fixed 3x3 s1 conv, varying K.
+
+FIG7A = [
+    ConvConfig(4, 16, 14, 14, k, 3, 3, p=1, q=1)
+    for k in (4, 8, 16, 32, 64, 96)
+] + [
+    ConvConfig(4, 16, 28, 28, k, 1, 1)
+    for k in (8, 32)
+]
+
+# -- Figure 7b: BatchNorm+Activation fusion -----------------------------------
+# The paper sweeps (C, H, W): larger images/channels benefit more.
+# Entries are (C, H, W) with N fixed at 4.
+
+FIG7B = [
+    (4, 7, 7), (8, 7, 7), (16, 14, 14), (8, 28, 28),
+    (16, 28, 28), (32, 28, 28), (16, 56, 56), (32, 56, 56),
+]
+
+# -- Grouped / depthwise convolutions (paper §IV-A "Types of convolution") -----
+# MobileNet-style depthwise (g == C) and AlexNet-style grouped (g == 2).
+
+GROUPED_CONFIGS = [
+    ConvConfig(4, 32, 14, 14, 32, 3, 3, p=1, q=1, g=32),   # depthwise
+    ConvConfig(4, 16, 14, 14, 32, 3, 3, p=1, q=1, g=2),    # grouped
+    ConvConfig(2, 8, 28, 28, 8, 3, 3, u=2, v=2, p=1, q=1, g=8),
+]
+
+# int8 inference configs (paper §I: int8 support; i32-exact f32 accum)
+INT8_CONFIGS = [
+    ConvConfig(4, 16, 14, 14, 32, 3, 3, p=1, q=1),
+    ConvConfig(4, 16, 28, 28, 16, 1, 1),
+]
+
+# -- Tuning ablation configs ---------------------------------------------------
+
+TUNE_CONFIGS = [
+    ConvConfig(4, 16, 28, 28, 32, 3, 3, p=1, q=1),
+    ConvConfig(4, 64, 14, 14, 64, 1, 1),
+]
+DIRECT_BLOCK_K = [4, 8, 16, 32]
+
+# -- RNN configs ----------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RnnConfig:
+    cell: str       # lstm | gru | vanilla
+    t: int          # sequence length
+    b: int          # batch
+    x: int          # input size
+    hid: int        # hidden size
+    act: str = "tanh"   # vanilla only
+    bias: bool = False
+
+    def sig_params(self) -> str:
+        return f"t{self.t}b{self.b}x{self.x}h{self.hid}"
+
+    def as_dict(self):
+        return {"cell": self.cell, "t": self.t, "b": self.b, "x": self.x,
+                "hid": self.hid, "act": self.act, "bias": self.bias}
+
+
+RNN_CONFIGS = [
+    RnnConfig("lstm", 16, 8, 32, 32),
+    RnnConfig("lstm", 32, 8, 64, 64),
+    RnnConfig("gru", 16, 8, 32, 32),
+    RnnConfig("vanilla", 16, 8, 32, 32, act="relu"),
+]
+
+# ablation: fused vs naive LSTM over sequence lengths
+RNN_ABLATION_T = [4, 8, 16, 32]
+RNN_ABLATION_BASE = RnnConfig("lstm", 0, 8, 32, 32)  # t filled per point
+
+# -- primitive (non-conv) artifact shapes --------------------------------------
+
+BN_SHAPES = [(4, 16, 14, 14), (4, 32, 28, 28)]
+POOL_SHAPES = [((4, 16, 28, 28), (2, 2), (2, 2), (0, 0), "max"),
+               ((4, 16, 28, 28), (2, 2), (2, 2), (0, 0), "avg"),
+               ((4, 8, 14, 14), (3, 3), (2, 2), (1, 1), "max")]
+SOFTMAX_SHAPES = [(4, 10, 1, 1), (4, 16, 14, 14)]
+ACT_SHAPES = [(4, 16, 28, 28)]
+ACT_MODES = ["relu", "leaky_relu", "tanh", "sigmoid"]
+LRN_SHAPES = [(4, 16, 14, 14)]
+
+# -- E2E CNN (examples/train_cnn.rs, serve_inference.rs) -----------------------
+
+CNN = {
+    "image": 16,        # 16x16 inputs
+    "channels": 3,
+    "classes": 3,
+    "c1": 8,            # conv1 output channels
+    "c2": 16,           # conv2 output channels
+    "hidden_hw": 4,     # after two 2x2 pools: 16 -> 8 -> 4
+    "batch": 16,
+    "lr": 0.05,
+}
+
+# dtypes per artifact family (paper: fp32, fp16, bf16, int8)
+CONV_DTYPES = ["f32"]
+CONV_DTYPES_EXTRA = ["bf16"]   # a subset of configs also emitted in bf16

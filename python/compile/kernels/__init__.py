@@ -1,0 +1,1 @@
+"""MIOpen-rs L1 kernels: Pallas implementations of the paper's primitives."""

@@ -1,0 +1,111 @@
+"""Activation Pallas kernels (paper §IV-D #1): the miopenActivationDescriptor
+modes, forward and backward, as tiled elementwise kernels.
+
+The mode is a compile-time constant (each mode is its own artifact, exactly
+as MIOpen compiles one kernel per activation mode), so the kernel body is
+branch-free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MODES = ("relu", "leaky_relu", "tanh", "sigmoid", "elu", "clipped_relu",
+         "abs", "identity")
+
+
+def _apply(x, mode, alpha):
+    if mode == "relu":
+        return jnp.maximum(x, 0.0)
+    if mode == "leaky_relu":
+        return jnp.where(x >= 0, x, alpha * x)
+    if mode == "tanh":
+        return jnp.tanh(x)
+    if mode == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    if mode == "elu":
+        return jnp.where(x >= 0, x, alpha * (jnp.exp(x) - 1.0))
+    if mode == "clipped_relu":
+        return jnp.clip(x, 0.0, alpha)
+    if mode == "abs":
+        return jnp.abs(x)
+    if mode == "identity":
+        return x
+    raise ValueError(mode)
+
+
+def _grad(x, mode, alpha):
+    if mode == "relu":
+        return jnp.where(x > 0, 1.0, 0.0)
+    if mode == "leaky_relu":
+        return jnp.where(x >= 0, 1.0, alpha)
+    if mode == "tanh":
+        t = jnp.tanh(x)
+        return 1.0 - t * t
+    if mode == "sigmoid":
+        s = 1.0 / (1.0 + jnp.exp(-x))
+        return s * (1.0 - s)
+    if mode == "elu":
+        return jnp.where(x >= 0, 1.0, alpha * jnp.exp(x))
+    if mode == "clipped_relu":
+        return jnp.where((x > 0) & (x < alpha), 1.0, 0.0)
+    if mode == "abs":
+        return jnp.sign(x)
+    if mode == "identity":
+        return jnp.ones_like(x)
+    raise ValueError(mode)
+
+
+def _tile(total, block):
+    return (total + block - 1) // block
+
+
+def _fwd_kernel(x_ref, y_ref, *, mode, alpha):
+    y_ref[...] = _apply(x_ref[...].astype(jnp.float32), mode, alpha).astype(y_ref.dtype)
+
+
+def activation_fwd(x, mode, alpha=0.0, *, block=4096, interpret=True):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    b = min(block, n)
+    npad = (-n) % b
+    fp = jnp.pad(flat, (0, npad))
+    y = pl.pallas_call(
+        functools.partial(_fwd_kernel, mode=mode, alpha=alpha),
+        grid=(_tile(n + npad, b),),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(fp.shape, x.dtype),
+        interpret=interpret,
+    )(fp)
+    return y[:n].reshape(x.shape)
+
+
+def _bwd_kernel(x_ref, dy_ref, dx_ref, *, mode, alpha):
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    dx_ref[...] = (dy * _grad(x, mode, alpha)).astype(dx_ref.dtype)
+
+
+def activation_bwd(x, dy, mode, alpha=0.0, *, block=4096, interpret=True):
+    flat_x = x.reshape(-1)
+    flat_dy = dy.reshape(-1)
+    n = flat_x.shape[0]
+    b = min(block, n)
+    npad = (-n) % b
+    xp = jnp.pad(flat_x, (0, npad))
+    dyp = jnp.pad(flat_dy, (0, npad))
+    dx = pl.pallas_call(
+        functools.partial(_bwd_kernel, mode=mode, alpha=alpha),
+        grid=(_tile(n + npad, b),),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,)),
+                  pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, dyp)
+    return dx[:n].reshape(x.shape)

@@ -1,0 +1,205 @@
+"""Batch normalization Pallas kernels (paper §IV-B).
+
+MIOpen ships specific kernels for {training fwd, inference fwd, backward}
+× {spatial, per-activation}; we mirror that six-way split. Spatial kernels
+grid over channels (one channel's full (N,H,W) slab per step — the
+reduction lives in VMEM); per-activation kernels also grid over channels
+with per-(H,W)-element parameters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# -- spatial: stats over (N, H, W), params per channel ----------------------
+
+def _spatial_train_kernel(x_ref, g_ref, b_ref, y_ref, mu_ref, var_ref, *, eps):
+    """x_ref: (N,1,H,W); g/b: (1,); y: (N,1,H,W); mu/var: (1,)."""
+    x = x_ref[...].astype(jnp.float32)
+    m = x.size
+    mu = jnp.sum(x) / m
+    var = jnp.sum((x - mu) ** 2) / m
+    inv = jax.lax.rsqrt(var + eps)
+    y = g_ref[0] * (x - mu) * inv + b_ref[0]
+    y_ref[...] = y.astype(y_ref.dtype)
+    mu_ref[0] = mu
+    var_ref[0] = var
+
+
+def spatial_fwd_train(x, gamma, beta, *, eps=1e-5, interpret=True):
+    n, c, h, w = x.shape
+    y, mu, var = pl.pallas_call(
+        functools.partial(_spatial_train_kernel, eps=eps),
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, c, h, w), x.dtype),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, gamma, beta)
+    return y, mu, var
+
+
+def _spatial_infer_kernel(x_ref, g_ref, b_ref, m_ref, v_ref, y_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    inv = jax.lax.rsqrt(v_ref[0] + eps)
+    y_ref[...] = (g_ref[0] * (x - m_ref[0]) * inv + b_ref[0]).astype(y_ref.dtype)
+
+
+def spatial_fwd_infer(x, gamma, beta, mean, var, *, eps=1e-5, interpret=True):
+    n, c, h, w = x.shape
+    vec = lambda: pl.BlockSpec((1,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_spatial_infer_kernel, eps=eps),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+                  vec(), vec(), vec(), vec()],
+        out_specs=pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, h, w), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta, mean, var)
+
+
+def _spatial_bwd_kernel(x_ref, dy_ref, g_ref, mu_ref, var_ref,
+                        dx_ref, dg_ref, db_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    m = x.size
+    inv = jax.lax.rsqrt(var_ref[0] + eps)
+    xhat = (x - mu_ref[0]) * inv
+    dg = jnp.sum(dy * xhat)
+    db = jnp.sum(dy)
+    dx = (g_ref[0] * inv / m) * (m * dy - db - xhat * dg)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dg_ref[0] = dg
+    db_ref[0] = db
+
+
+def spatial_bwd(x, dy, gamma, mu, var, *, eps=1e-5, interpret=True):
+    n, c, h, w = x.shape
+    vec = lambda: pl.BlockSpec((1,), lambda i: (i,))
+    slab = lambda: pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0))
+    dx, dg, db = pl.pallas_call(
+        functools.partial(_spatial_bwd_kernel, eps=eps),
+        grid=(c,),
+        in_specs=[slab(), slab(), vec(), vec(), vec()],
+        out_specs=[slab(), vec(), vec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, c, h, w), x.dtype),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dy, gamma, mu, var)
+    return dx, dg, db
+
+
+# -- per-activation: stats over N, params per (C,H,W) -----------------------
+
+def _peract_train_kernel(x_ref, g_ref, b_ref, y_ref, mu_ref, var_ref, *, eps):
+    """x_ref: (N,1,H,W); g/b/mu/var: (1,H,W)."""
+    x = x_ref[...].astype(jnp.float32)
+    n = x.shape[0]
+    mu = jnp.sum(x, axis=0) / n               # (1,H,W)
+    var = jnp.sum((x - mu[None]) ** 2, axis=0) / n
+    inv = jax.lax.rsqrt(var + eps)
+    y = g_ref[...] * (x - mu[None]) * inv[None] + b_ref[...]
+    y_ref[...] = y.astype(y_ref.dtype)
+    mu_ref[...] = mu
+    var_ref[...] = var
+
+
+def peract_fwd_train(x, gamma, beta, *, eps=1e-5, interpret=True):
+    """gamma/beta: (C,H,W)."""
+    n, c, h, w = x.shape
+    plane = lambda: pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))
+    y, mu, var = pl.pallas_call(
+        functools.partial(_peract_train_kernel, eps=eps),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+                  plane(), plane()],
+        out_specs=[pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+                   plane(), plane()],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, c, h, w), x.dtype),
+            jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, gamma, beta)
+    return y, mu, var
+
+
+def _peract_bwd_kernel(x_ref, dy_ref, g_ref, mu_ref, var_ref,
+                       dx_ref, dg_ref, db_ref, *, eps):
+    """Per-activation backward: reductions over N only, per (C,H,W) elem."""
+    x = x_ref[...].astype(jnp.float32)       # (N, 1, H, W)
+    dy = dy_ref[...].astype(jnp.float32)
+    n = x.shape[0]
+    mu = mu_ref[...][None]                   # (1, 1, H, W)
+    inv = jax.lax.rsqrt(var_ref[...] + eps)[None]
+    xhat = (x - mu) * inv
+    dg = jnp.sum(dy * xhat, axis=0)          # (1, H, W)
+    db = jnp.sum(dy, axis=0)
+    g = g_ref[...][None]
+    dx = (g * inv / n) * (n * dy - db[None] - xhat * dg[None])
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dg_ref[...] = dg
+    db_ref[...] = db
+
+
+def peract_bwd(x, dy, gamma, mu, var, *, eps=1e-5, interpret=True):
+    """gamma/mu/var: (C,H,W) -> (dx, dgamma, dbeta)."""
+    n, c, h, w = x.shape
+    plane = lambda: pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))
+    slab = lambda: pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0))
+    dx, dg, db = pl.pallas_call(
+        functools.partial(_peract_bwd_kernel, eps=eps),
+        grid=(c,),
+        in_specs=[slab(), slab(), plane(), plane(), plane()],
+        out_specs=[slab(), plane(), plane()],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, c, h, w), x.dtype),
+            jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dy, gamma, mu, var)
+    return dx, dg, db
+
+
+def _peract_infer_kernel(x_ref, g_ref, b_ref, m_ref, v_ref, y_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    inv = jax.lax.rsqrt(v_ref[...] + eps)
+    y = g_ref[...][None] * (x - m_ref[...][None]) * inv[None] + b_ref[...][None]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def peract_fwd_infer(x, gamma, beta, mean, var, *, eps=1e-5, interpret=True):
+    n, c, h, w = x.shape
+    plane = lambda: pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_peract_infer_kernel, eps=eps),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+                  plane(), plane(), plane(), plane()],
+        out_specs=pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, h, w), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta, mean, var)

@@ -1,0 +1,75 @@
+"""CTC loss (paper §IV-D #4) — batched, scan-based, AOT-compatible.
+
+Log-space alpha recursion over the extended (blank-interleaved) label
+sequence, vectorized over the batch with static padded label length. The
+python-loop oracle lives in ref.py; this version lowers cleanly through
+`jax.jit` for the artifact path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ctc_loss(log_probs, labels, input_lens, label_lens, blank=0):
+    """Batched CTC negative log-likelihood.
+
+    log_probs: (B, T, V) log-softmax outputs
+    labels:    (B, L) padded label ids (no blanks)
+    input_lens/label_lens: (B,) actual lengths
+    Returns (B,) losses.
+    """
+    B, T, V = log_probs.shape
+    L = labels.shape[1]
+    S = 2 * L + 1
+
+    # extended sequence: [blank, l1, blank, l2, ..., blank]
+    ext = jnp.full((B, S), blank, labels.dtype)
+    ext = ext.at[:, 1::2].set(labels)
+
+    # allowed skip: ext[s] != blank and ext[s] != ext[s-2]
+    skip_ok = jnp.zeros((B, S), bool)
+    skip_ok = skip_ok.at[:, 2:].set(
+        (ext[:, 2:] != blank) & (ext[:, 2:] != ext[:, :-2]))
+
+    batch_idx = jnp.arange(B)[:, None]
+
+    def emit(t):
+        # log_probs[b, t, ext[b, s]] -> (B, S)
+        return log_probs[batch_idx, t, ext]
+
+    alpha0 = jnp.full((B, S), NEG_INF)
+    alpha0 = alpha0.at[:, 0].set(log_probs[:, 0, blank])
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.where(label_lens > 0, log_probs[batch_idx[:, 0], 0, ext[:, 1]],
+                  NEG_INF))
+
+    def step(alpha, t):
+        a0 = alpha
+        a1 = jnp.concatenate([jnp.full((B, 1), NEG_INF), alpha[:, :-1]], 1)
+        a2 = jnp.concatenate([jnp.full((B, 2), NEG_INF), alpha[:, :-2]], 1)
+        a2 = jnp.where(skip_ok, a2, NEG_INF)
+        m = jnp.maximum(jnp.maximum(a0, a1), a2)
+        msafe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+        tot = msafe + jnp.log(
+            jnp.exp(a0 - msafe) + jnp.exp(a1 - msafe) + jnp.exp(a2 - msafe))
+        tot = jnp.where(m <= NEG_INF / 2, NEG_INF, tot)
+        new = tot + emit(t)
+        # freeze past each sequence's end
+        new = jnp.where((t < input_lens)[:, None], new, alpha)
+        return new, None
+
+    alpha, _ = jax.lax.scan(step, alpha0, jnp.arange(1, T))
+
+    send = 2 * label_lens     # index of final blank
+    send_m1 = send - 1        # final label
+    a_last = alpha[batch_idx[:, 0], send]
+    a_prev = jnp.where(label_lens > 0,
+                       alpha[batch_idx[:, 0], send_m1], NEG_INF)
+    m = jnp.maximum(a_last, a_prev)
+    msafe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    ll = msafe + jnp.log(jnp.exp(a_last - msafe) + jnp.exp(a_prev - msafe))
+    return -ll

@@ -1,0 +1,227 @@
+"""Direct convolution as a Pallas kernel (paper §IV-A, the "direct" algo).
+
+MIOpen's direct algorithm is a family of hand-tuned GCN-assembly/OpenCL
+kernels that compute the convolution without materializing im2col buffers.
+The TPU adaptation (DESIGN.md §Hardware-Adaptation): each grid step owns an
+output tile (one batch image × a K-tile of output channels), the filter
+block and the input plane live in VMEM, and the R×S accumulation loop is
+unrolled at trace time (R, S are compile-time constants, exactly like the
+asm kernels specialize on filter size).
+
+Tuning parameter (paper §III-B): `block_k` — the number of output channels
+per grid step. The tuning grid is exported by `tuning_grid()`; aot.py emits
+one artifact per variant so the Rust tuner can race them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, stride, dilation, r, s, ho, wo):
+    """One (n, k-tile) output block.
+
+    x_ref: (1, C, Hp, Wp) padded input plane   (VMEM)
+    w_ref: (BK, C, R, S) filter block          (VMEM)
+    o_ref: (1, BK, Ho, Wo) output tile         (VMEM)
+    """
+    xb = x_ref[0]  # (C, Hp, Wp)
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for i in range(r):
+        for j in range(s):
+            di, dj = i * dilation[0], j * dilation[1]
+            # Strided window of the input aligned with filter tap (i, j):
+            # shape (C, Ho, Wo).
+            xs = jax.lax.slice(
+                xb,
+                (0, di, dj),
+                (xb.shape[0],
+                 di + (ho - 1) * stride[0] + 1,
+                 dj + (wo - 1) * stride[1] + 1),
+                (1, stride[0], stride[1]),
+            ).astype(jnp.float32)
+            # (BK, C) x (C, Ho*Wo) — MXU-shaped contraction per tap.
+            wt = w_ref[:, :, i, j].astype(jnp.float32)
+            acc += jnp.einsum("kc,chw->khw", wt, xs,
+                              preferred_element_type=jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv2d_direct(x, w, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1),
+                  groups=1, block_k=16, out_dtype=None, interpret=True):
+    """Direct Pallas convolution. x: (N,C,H,W), w: (K,C/g,R,S) -> (N,K,Ho,Wo).
+
+    `out_dtype` overrides the output element type (int8 inputs accumulate
+    exactly in f32 and emit f32, MIOpen's int8 output-conversion mode).
+    """
+    if groups != 1:
+        return _grouped(x, w, stride=stride, pad=pad, dilation=dilation,
+                        groups=groups, block_k=block_k, out_dtype=out_dtype,
+                        interpret=interpret)
+    out_dtype = out_dtype or x.dtype
+
+    n, c, h, wd = x.shape
+    k, cw, r, s = w.shape
+    assert cw == c, f"channel mismatch {cw} != {c}"
+    er = (r - 1) * dilation[0] + 1
+    es = (s - 1) * dilation[1] + 1
+    ho = (h + 2 * pad[0] - er) // stride[0] + 1
+    wo = (wd + 2 * pad[1] - es) // stride[1] + 1
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    hp, wp = xp.shape[2], xp.shape[3]
+
+    bk = min(block_k, k)
+    kpad = (-k) % bk
+    wpadded = jnp.pad(w, ((0, kpad), (0, 0), (0, 0), (0, 0)))
+    ktiles = (k + kpad) // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, stride=stride, dilation=dilation,
+                          r=r, s=s, ho=ho, wo=wo),
+        grid=(n, ktiles),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((bk, c, r, s), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k + kpad, ho, wo), out_dtype),
+        interpret=interpret,
+    )(xp, wpadded)
+    return out[:, :k]
+
+
+def _grouped(x, w, *, stride, pad, dilation, groups, block_k, interpret,
+             out_dtype=None):
+    """Grouped/depthwise convolution: split along channels, convolve, stack.
+
+    This mirrors the paper's definition of grouped convolution (§IV-A):
+    depthwise is the groups == C special case.
+    """
+    n, c, _, _ = x.shape
+    k = w.shape[0]
+    assert c % groups == 0 and k % groups == 0
+    cg, kg = c // groups, k // groups
+    outs = []
+    for g in range(groups):
+        xg = x[:, g * cg : (g + 1) * cg]
+        wg = w[g * kg : (g + 1) * kg]
+        outs.append(conv2d_direct(xg, wg, stride=stride, pad=pad,
+                                  dilation=dilation, groups=1,
+                                  block_k=block_k, out_dtype=out_dtype,
+                                  interpret=interpret))
+    return jnp.concatenate(outs, axis=1)
+
+
+def conv2d_direct_bwd_data(dy, w, x_shape, *, stride=(1, 1), pad=(0, 0),
+                           dilation=(1, 1), block_k=16, interpret=True):
+    """BackwardData as a forward direct conv over the dilated dy.
+
+    dx = conv(dy dilated by `stride`, w rotated 180° and C<->K swapped),
+    with padding (effective_filter - 1 - pad). Same trick the GCN direct
+    bwd kernels use, so the Pallas kernel is reused as-is.
+    """
+    n, c, h, wd = x_shape
+    k, cw, r, s = w.shape
+    er = (r - 1) * dilation[0] + 1
+    es = (s - 1) * dilation[1] + 1
+    # dilate dy by stride
+    dyd = _dilate(dy, stride)
+    ph, pw = er - 1 - pad[0], es - 1 - pad[1]
+    # When the stride does not divide (H + 2p - er) evenly, the dilated dy
+    # is short of the rows/cols needed to produce all H input gradients;
+    # zero-pad the bottom/right remainder (those inputs touch no output).
+    extra_h = h - (dyd.shape[2] + 2 * ph - er + 1)
+    extra_w = wd - (dyd.shape[3] + 2 * pw - es + 1)
+    if extra_h > 0 or extra_w > 0:
+        dyd = jnp.pad(dyd, ((0, 0), (0, 0),
+                            (0, max(extra_h, 0)), (0, max(extra_w, 0))))
+    # rotate + swap: (K,C,R,S) -> (C,K,R,S) flipped spatially
+    wrot = jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)
+    dx = conv2d_direct(dyd, wrot, stride=(1, 1), pad=(ph, pw),
+                       dilation=dilation, block_k=block_k,
+                       interpret=interpret)
+    # crop to x_shape (bottom/right may include extra rows when stride
+    # doesn't divide the input size evenly)
+    return dx[:, :, :h, :wd]
+
+
+def conv2d_direct_bwd_weights(dy, x, w_shape, *, stride=(1, 1), pad=(0, 0),
+                              dilation=(1, 1), block_k=16, interpret=True):
+    """BackwardWeights: dw[k,c,i,j] = Σ_{n,oh,ow} dy·x(shifted by tap).
+
+    Grid over the R·S filter taps; each step reduces over (N, Ho, Wo) with
+    one GEMM-shaped contraction. Tap selection happens through the
+    BlockSpec index map (the HBM→VMEM schedule), not inside the kernel.
+    """
+    del block_k
+    k, c, r, s = w_shape
+    n = x.shape[0]
+    _, _, ho, wo = dy.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+
+    # per-tap window extent
+    wh = (ho - 1) * stride[0] + 1
+    ww = (wo - 1) * stride[1] + 1
+    # Blocks must tile the array in pallas; gather per-tap windows up
+    # front as a (R*S, N, C, wh, ww) tensor (pure data movement, XLA
+    # fuses the slices), then grid over the leading axis.
+    taps = []
+    for i in range(r):
+        for j in range(s):
+            di, dj = i * dilation[0], j * dilation[1]
+            taps.append(jax.lax.slice(
+                xp, (0, 0, di, dj), (n, c, di + wh, dj + ww)))
+    xtaps = jnp.stack(taps, axis=0)
+
+    def kernel(dy_ref, xt_ref, o_ref):
+        dyf = dy_ref[...].astype(jnp.float32)        # (N, K, Ho, Wo)
+        xsw = jax.lax.slice(
+            xt_ref[0], (0, 0, 0, 0), (n, c, wh, ww),
+            (1, 1, stride[0], stride[1]),
+        ).astype(jnp.float32)                        # (N, C, Ho, Wo)
+        a = dyf.transpose(1, 0, 2, 3).reshape(k, -1)
+        b = xsw.transpose(1, 0, 2, 3).reshape(c, -1)
+        o_ref[0] = (a @ b.T).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(r * s,),
+        in_specs=[
+            pl.BlockSpec((n, k, ho, wo), lambda t: (0, 0, 0, 0)),
+            pl.BlockSpec((1, n, c, wh, ww), lambda t: (t, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, c), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r * s, k, c), x.dtype),
+        interpret=interpret,
+    )(dy, xtaps)
+    return out.reshape(r, s, k, c).transpose(2, 3, 0, 1)
+
+
+def _dilate(y, stride):
+    """Insert stride-1 zeros between elements along H and W."""
+    if stride == (1, 1):
+        return y
+    n, k, h, w = y.shape
+    out = jnp.zeros((n, k, (h - 1) * stride[0] + 1, (w - 1) * stride[1] + 1),
+                    y.dtype)
+    return out.at[:, :, :: stride[0], :: stride[1]].set(y)
+
+
+def tuning_grid(k):
+    """Tuning-parameter grid for the direct solver (paper §III-B).
+
+    block_k candidates, pruned to divisors-of-padded-K ≤ K (the pruned
+    search space the paper describes).
+    """
+    cands = [4, 8, 16, 32, 64]
+    return [b for b in cands if b <= max(k, 4)]
+
+
+def vmem_bytes(c, hp, wp, bk, r, s, ho, wo, itemsize=4):
+    """VMEM footprint of one grid step (used by the L1 perf estimate)."""
+    return itemsize * (c * hp * wp + bk * c * r * s + bk * ho * wo)

@@ -1,0 +1,56 @@
+"""FFT convolution (§IV-A): for large filters, transform image and filter
+to the frequency domain, multiply point-wise, transform back.
+
+Pure-jnp implementation: Pallas has no complex-number support, so the FFT
+algorithm lives entirely in the L2 graph (DESIGN.md §Known-limitations).
+It is still a first-class solver — AOT'd per config, raced by the find
+step, costed by the perf model (where its win over direct on big R×S comes
+from the O(HW log HW) vs O(HW·RS) term).
+
+The paper notes the filter transform is paid once when reused; the AOT
+artifact keeps the filter transform inside (stateless API), and the rust
+solver's perf model credits the amortized case separately.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d_fft(x, w, *, stride=(1, 1), pad=(0, 0)):
+    """x: (N,C,H,W), w: (K,C,R,S) -> (N,K,Ho,Wo). Cross-correlation."""
+    n, c, h, wd = x.shape
+    k, cw, r, s = w.shape
+    assert cw == c
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    hp, wp = xp.shape[2], xp.shape[3]
+    ho = (hp - r) // stride[0] + 1
+    wo = (wp - s) // stride[1] + 1
+
+    # FFT size: linear-convolution-safe padded extent.
+    fh = hp + r - 1
+    fw = wp + s - 1
+
+    xf = jnp.fft.rfft2(xp.astype(jnp.float32), s=(fh, fw))
+    # Cross-correlation == convolution with the flipped filter; flip here so
+    # the pointwise product in frequency space yields cross-correlation.
+    wf = jnp.fft.rfft2(jnp.flip(w.astype(jnp.float32), (2, 3)), s=(fh, fw))
+
+    # (N,1,C,fh,fw̃) * (1,K,C,fh,fw̃) summed over C
+    yf = jnp.einsum("nchw,kchw->nkhw", xf, wf)
+    y = jnp.fft.irfft2(yf, s=(fh, fw))
+
+    # 'valid' region of the correlation starts at offset (r-1, s-1)
+    y = y[:, :, r - 1 : r - 1 + (ho - 1) * stride[0] + 1 : stride[0],
+          s - 1 : s - 1 + (wo - 1) * stride[1] + 1 : stride[1]]
+    return y.astype(x.dtype)
+
+
+def workspace_bytes(x_shape, w_shape, pad=(0, 0), itemsize=8):
+    """Frequency-domain buffers the find step reports (complex64)."""
+    n, c, h, wd = x_shape
+    k, _, r, s = w_shape
+    fh = h + 2 * pad[0] + r - 1
+    fw = (wd + 2 * pad[1] + s - 1) // 2 + 1
+    return itemsize * fh * fw * (n * c + k * c + n * k)

@@ -1,0 +1,161 @@
+"""Fused kernels for the Fusion API (paper §V).
+
+Each supported fusion combination (Tables I/II) gets a single Pallas kernel
+that keeps the intermediate in VMEM — the on-chip-memory argument of §V:
+
+  CBA  — Conv + Bias + Activation          (Figure 7a)
+  NA   — BatchNorm (inference) + Activation (Figure 7b)
+  CBNA — Conv + Bias + BatchNorm + Activation
+
+The conv stage reuses direct.py's per-tap accumulation; bias/normalize/
+activate are applied to the accumulator before the single write-back, so
+global-memory traffic drops from (write + read) per stage to one write.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .activations import _apply
+
+
+def _cba_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, r, s, ho, wo,
+                mode, alpha):
+    xb = x_ref[0]
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for i in range(r):
+        for j in range(s):
+            xs = jax.lax.slice(
+                xb, (0, i, j),
+                (xb.shape[0],
+                 i + (ho - 1) * stride[0] + 1,
+                 j + (wo - 1) * stride[1] + 1),
+                (1, stride[0], stride[1]),
+            ).astype(jnp.float32)
+            wt = w_ref[:, :, i, j].astype(jnp.float32)
+            acc += jnp.einsum("kc,chw->khw", wt, xs,
+                              preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[:, None, None]   # bias
+    acc = _apply(acc, mode, alpha)                              # activation
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv_bias_act(x, w, bias, *, stride=(1, 1), pad=(0, 0), mode="relu",
+                  alpha=0.0, block_k=16, interpret=True):
+    """Fused CBA: one kernel, one write-back. x NCHW, w KCRS, bias (K,)."""
+    n, c, h, wd = x.shape
+    k, cw, r, s = w.shape
+    assert cw == c
+    ho = (h + 2 * pad[0] - r) // stride[0] + 1
+    wo = (wd + 2 * pad[1] - s) // stride[1] + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    hp, wp = xp.shape[2], xp.shape[3]
+
+    bk = min(block_k, k)
+    kpad = (-k) % bk
+    wpad = jnp.pad(w, ((0, kpad), (0, 0), (0, 0), (0, 0)))
+    bpad = jnp.pad(bias, (0, kpad))
+
+    out = pl.pallas_call(
+        functools.partial(_cba_kernel, stride=stride, r=r, s=s, ho=ho,
+                          wo=wo, mode=mode, alpha=alpha),
+        grid=(n, (k + kpad) // bk),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((bk, c, r, s), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k + kpad, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xp, wpad, bpad)
+    return out[:, :k]
+
+
+def _bn_act_kernel(x_ref, g_ref, b_ref, m_ref, v_ref, y_ref, *, eps, mode,
+                   alpha):
+    x = x_ref[...].astype(jnp.float32)
+    inv = jax.lax.rsqrt(v_ref[0] + eps)
+    y = g_ref[0] * (x - m_ref[0]) * inv + b_ref[0]
+    y_ref[...] = _apply(y, mode, alpha).astype(y_ref.dtype)
+
+
+def bn_act(x, gamma, beta, mean, var, *, eps=1e-5, mode="relu", alpha=0.0,
+           interpret=True):
+    """Fused NA (spatial BN inference + activation), Figure 7b's fused arm."""
+    n, c, h, w = x.shape
+    vec = lambda: pl.BlockSpec((1,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_bn_act_kernel, eps=eps, mode=mode, alpha=alpha),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+                  vec(), vec(), vec(), vec()],
+        out_specs=pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta, mean, var)
+
+
+def _cbna_kernel(x_ref, w_ref, bias_ref, g_ref, b_ref, m_ref, v_ref, o_ref,
+                 *, stride, r, s, ho, wo, eps, mode, alpha):
+    xb = x_ref[0]
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for i in range(r):
+        for j in range(s):
+            xs = jax.lax.slice(
+                xb, (0, i, j),
+                (xb.shape[0],
+                 i + (ho - 1) * stride[0] + 1,
+                 j + (wo - 1) * stride[1] + 1),
+                (1, stride[0], stride[1]),
+            ).astype(jnp.float32)
+            wt = w_ref[:, :, i, j].astype(jnp.float32)
+            acc += jnp.einsum("kc,chw->khw", wt, xs,
+                              preferred_element_type=jnp.float32)
+    acc = acc + bias_ref[...].astype(jnp.float32)[:, None, None]
+    inv = jax.lax.rsqrt(v_ref[...].astype(jnp.float32) + eps)
+    acc = g_ref[...].astype(jnp.float32)[:, None, None] * \
+        (acc - m_ref[...].astype(jnp.float32)[:, None, None]) * \
+        inv[:, None, None] + b_ref[...].astype(jnp.float32)[:, None, None]
+    o_ref[0] = _apply(acc, mode, alpha).astype(o_ref.dtype)
+
+
+def conv_bias_bn_act(x, w, bias, gamma, beta, mean, var, *, stride=(1, 1),
+                     pad=(0, 0), eps=1e-5, mode="relu", alpha=0.0,
+                     block_k=16, interpret=True):
+    """Fused CBNA (Tables I/II row 1): conv + bias + BN(inference) + act."""
+    n, c, h, wd = x.shape
+    k, cw, r, s = w.shape
+    assert cw == c
+    ho = (h + 2 * pad[0] - r) // stride[0] + 1
+    wo = (wd + 2 * pad[1] - s) // stride[1] + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    hp, wp = xp.shape[2], xp.shape[3]
+
+    bk = min(block_k, k)
+    kpad = (-k) % bk
+    pk = lambda t: jnp.pad(t, (0, kpad))
+    wpad = jnp.pad(w, ((0, kpad), (0, 0), (0, 0), (0, 0)))
+    # pad var with ones to keep rsqrt finite in the dead K-tail
+    vpad = jnp.pad(var, (0, kpad), constant_values=1.0)
+
+    vecs = [pk(bias), pk(gamma), pk(beta), pk(mean), vpad]
+    vspec = lambda: pl.BlockSpec((bk,), lambda i, j: (j,))
+    out = pl.pallas_call(
+        functools.partial(_cbna_kernel, stride=stride, r=r, s=s, ho=ho,
+                          wo=wo, eps=eps, mode=mode, alpha=alpha),
+        grid=(n, (k + kpad) // bk),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((bk, c, r, s), lambda i, j: (j, 0, 0, 0)),
+            vspec(), vspec(), vspec(), vspec(), vspec(),
+        ],
+        out_specs=pl.BlockSpec((1, bk, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k + kpad, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xp, wpad, *vecs)
+    return out[:, :k]

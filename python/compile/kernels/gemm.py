@@ -1,0 +1,100 @@
+"""Tiled GEMM Pallas kernel — the MIOpenGEMM / rocBLAS analog.
+
+Every GEMM in the library (im2col convolution, Winograd's elementwise
+stage, RNN cell updates) routes through this kernel so all algorithms sit
+on the same substrate (important for the fairness of Figure 6's relative
+timings — see DESIGN.md §Substitutions).
+
+Tiling: grid (M/bm, N/bn), accumulation loop over K tiles inside the
+kernel. bm/bn/bk are tuning parameters in the paper's sense (§III-B); the
+defaults are MXU-friendly multiples of 8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref, *, bk, ksize):
+    """a_ref: (bm, K)  b_ref: (K, bn)  o_ref: (bm, bn)."""
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    steps = (ksize + bk - 1) // bk
+    for t in range(steps):
+        lo = t * bk
+        hi = min(lo + bk, ksize)
+        a = a_ref[:, lo:hi].astype(jnp.float32)
+        b = b_ref[lo:hi, :].astype(jnp.float32)
+        acc += a @ b
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def matmul(a, b, *, bm=32, bn=32, bk=128, out_dtype=None, interpret=True):
+    """C = A @ B with A: (M, K), B: (K, N)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    out_dtype = out_dtype or a.dtype
+
+    bm_, bn_ = min(bm, m), min(bn, n)
+    mp, np_ = (-m) % bm_, (-n) % bn_
+    ap = jnp.pad(a, ((0, mp), (0, 0)))
+    bp = jnp.pad(b, ((0, 0), (0, np_)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, ksize=k),
+        grid=((m + mp) // bm_, (n + np_) // bn_),
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + mp, n + np_), out_dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def batched_matmul(a, b, *, bm=32, bn=32, bk=128, out_dtype=None,
+                   interpret=True):
+    """C[g] = A[g] @ B[g] for g in the leading axis (Winograd's 16 stages)."""
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 and k == k2
+    out_dtype = out_dtype or a.dtype
+
+    bm_, bn_ = min(bm, m), min(bn, n)
+    mp, np_ = (-m) % bm_, (-n) % bn_
+    ap = jnp.pad(a, ((0, 0), (0, mp), (0, 0)))
+    bp = jnp.pad(b, ((0, 0), (0, 0), (0, np_)))
+
+    def kern(a_ref, b_ref, o_ref):
+        acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+        steps = (k + bk - 1) // bk
+        for t in range(steps):
+            lo, hi = t * bk, min(t * bk + bk, k)
+            acc += a_ref[0, :, lo:hi].astype(jnp.float32) @ \
+                   b_ref[0, lo:hi, :].astype(jnp.float32)
+        o_ref[0] = acc.astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(g, (m + mp) // bm_, (n + np_) // bn_),
+        in_specs=[
+            pl.BlockSpec((1, bm_, k), lambda gi, i, j: (gi, i, 0)),
+            pl.BlockSpec((1, k, bn_), lambda gi, i, j: (gi, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda gi, i, j: (gi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m + mp, n + np_), out_dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:, :m, :n]
+
+
+def tuning_grid(m, n):
+    """(bm, bn) tuning candidates, pruned to the problem size."""
+    cands = [(16, 16), (32, 32), (64, 64), (32, 128), (128, 32)]
+    return [(a, b) for (a, b) in cands if a <= max(m, 16) and b <= max(n, 16)]

@@ -1,0 +1,76 @@
+"""im2col + GEMM convolution — the paper's baseline algorithm (§IV-A).
+
+"The most general and arguably most expensive in terms of additional
+storage": the input is unfolded into a (C·R·S, Ho·Wo) column matrix (the
+*workspace* the find step reports), then a single GEMM with the (K, C·R·S)
+filter matrix produces the output. The unfold happens in jnp (it is pure
+data movement); the GEMM goes through the Pallas `gemm` kernel so the
+baseline shares the solvers' substrate.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import gemm
+from .ref import im2col
+
+
+def conv2d_im2col(x, w, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1),
+                  bm=64, bn=1024, interpret=True):
+    """x: (N,C,H,W), w: (K,C,R,S) -> (N,K,Ho,Wo)."""
+    n = x.shape[0]
+    k, c, r, s = w.shape
+    col, (ho, wo) = im2col(x, r, s, stride=stride, pad=pad, dilation=dilation)
+    # One GEMM over the whole batch: (K, CRS) @ (CRS, N*Ho*Wo)
+    a = w.reshape(k, c * r * s)
+    b = col.transpose(1, 0, 2).reshape(c * r * s, n * ho * wo)
+    out = gemm.matmul(a, b, bm=bm, bn=bn, interpret=interpret)
+    return out.reshape(k, n, ho, wo).transpose(1, 0, 2, 3)
+
+
+def conv2d_im2col_bwd_data(dy, w, x_shape, *, stride=(1, 1), pad=(0, 0),
+                           dilation=(1, 1), bm=64, bn=1024, interpret=True):
+    """BackwardData baseline: col = Wᵀ·dy (GEMM), then col2im scatter-add."""
+    n, c, h, wd = x_shape
+    k, cw, r, s = w.shape
+    _, _, ho, wo = dy.shape
+    # (CRS, K) @ (K, N*Ho*Wo) -> (CRS, N*Ho*Wo)
+    a = w.reshape(k, c * r * s).T
+    b = dy.transpose(1, 0, 2, 3).reshape(k, n * ho * wo)
+    col = gemm.matmul(a, b, bm=bm, bn=bn, interpret=interpret)
+    col = col.reshape(c, r * s, n, ho, wo)
+
+    hp, wp = h + 2 * pad[0], wd + 2 * pad[1]
+    dxp = jnp.zeros((n, c, hp, wp), dy.dtype)
+    idx = 0
+    for i in range(r):
+        for j in range(s):
+            di, dj = i * dilation[0], j * dilation[1]
+            patch = col[:, idx].transpose(1, 0, 2, 3)  # (N, C, Ho, Wo)
+            dxp = dxp.at[:, :,
+                         di : di + (ho - 1) * stride[0] + 1 : stride[0],
+                         dj : dj + (wo - 1) * stride[1] + 1 : stride[1]].add(patch)
+            idx += 1
+    return dxp[:, :, pad[0] : pad[0] + h, pad[1] : pad[1] + wd]
+
+
+def conv2d_im2col_bwd_weights(dy, x, w_shape, *, stride=(1, 1), pad=(0, 0),
+                              dilation=(1, 1), bm=64, bn=256, interpret=True):
+    """BackwardWeights baseline: dW = dy·colᵀ (GEMM over N·Ho·Wo)."""
+    k, c, r, s = w_shape
+    n = x.shape[0]
+    col, (ho, wo) = im2col(x, r, s, stride=stride, pad=pad, dilation=dilation)
+    # (K, N*Ho*Wo) @ (N*Ho*Wo, CRS)
+    a = dy.transpose(1, 0, 2, 3).reshape(k, n * ho * wo)
+    b = col.transpose(1, 0, 2).reshape(c * r * s, n * ho * wo).T
+    dw = gemm.matmul(a, b, bm=bm, bn=bn, interpret=interpret)
+    return dw.reshape(k, c, r, s)
+
+
+def workspace_bytes(x_shape, w_shape, out_shape, itemsize=4):
+    """Workspace the find step reports for this algorithm (the col buffer)."""
+    n, c, _, _ = x_shape
+    _, _, r, s = w_shape
+    _, _, ho, wo = out_shape
+    return itemsize * c * r * s * n * ho * wo

@@ -1,0 +1,88 @@
+"""Implicit GEMM convolution — the composable-kernels algorithm (§IV-A).
+
+MIOpen v2.0's composable-kernel implementation expresses convolution as a
+GEMM whose A-matrix (the im2col patch matrix) is never materialized in
+global memory: each workgroup gathers its patch tile on the fly into LDS
+and feeds the MACs. The TPU adaptation: each grid step owns one batch
+image × one K-tile; the kernel gathers the (Ho·Wo, C·R·S) patch matrix
+*in VMEM* from the resident input plane and performs a single MXU-shaped
+matmul against the (C·R·S, BK) filter tile.
+
+Contrast with `direct.py`: direct accumulates per filter tap (R·S small
+contractions); implicit GEMM builds the full patch matrix and issues one
+large matmul — it trades VMEM for MXU occupancy, which is exactly the
+trade the paper's composable kernels make with LDS.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, stride, dilation, r, s, ho, wo):
+    """x_ref: (1,C,Hp,Wp), w_ref: (CRS, BK), o_ref: (1,BK,Ho,Wo)."""
+    xb = x_ref[0]
+    c = xb.shape[0]
+    patches = []
+    for i in range(r):
+        for j in range(s):
+            di, dj = i * dilation[0], j * dilation[1]
+            xs = jax.lax.slice(
+                xb,
+                (0, di, dj),
+                (c,
+                 di + (ho - 1) * stride[0] + 1,
+                 dj + (wo - 1) * stride[1] + 1),
+                (1, stride[0], stride[1]),
+            )  # (C, Ho, Wo)
+            patches.append(xs.reshape(c, ho * wo))
+    # (C, R*S, Ho*Wo) -> (Ho*Wo, C*R*S): C-major to match the filter reshape
+    p = jnp.stack(patches, axis=1).reshape(c * r * s, ho * wo)
+    a = p.T.astype(jnp.float32)            # (M=Ho*Wo, K=CRS)
+    b = w_ref[...].astype(jnp.float32)     # (CRS, BK)
+    acc = a @ b                            # one MXU matmul
+    o_ref[0] = acc.T.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+def conv2d_implicit_gemm(x, w, *, stride=(1, 1), pad=(0, 0),
+                         dilation=(1, 1), block_k=32, interpret=True):
+    """x: (N,C,H,W), w: (K,C,R,S) -> (N,K,Ho,Wo). Zero workspace."""
+    n, c, h, wd = x.shape
+    k, cw, r, s = w.shape
+    assert cw == c
+    er = (r - 1) * dilation[0] + 1
+    es = (s - 1) * dilation[1] + 1
+    ho = (h + 2 * pad[0] - er) // stride[0] + 1
+    wo = (wd + 2 * pad[1] - es) // stride[1] + 1
+
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    hp, wp = xp.shape[2], xp.shape[3]
+
+    bk = min(block_k, k)
+    kpad = (-k) % bk
+    # filter as (CRS, K+pad), C-major rows
+    wmat = jnp.pad(w, ((0, kpad), (0, 0), (0, 0), (0, 0)))
+    wmat = wmat.reshape(k + kpad, c * r * s).T
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, stride=stride, dilation=dilation,
+                          r=r, s=s, ho=ho, wo=wo),
+        grid=(n, (k + kpad) // bk),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((c * r * s, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k + kpad, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xp, wmat)
+    return out[:, :k]
+
+
+def tuning_grid(k):
+    cands = [8, 16, 32, 64, 128]
+    return [b for b in cands if b <= max(k, 8)]

@@ -1,0 +1,38 @@
+"""Cross-channel Local Response Normalization (paper §IV-D #6).
+
+AlexNet-style LRN: y = x / (k + alpha/n * sum_{window} x^2)^beta with the
+window sliding over channels. Grid over N; the channel window loop is
+unrolled (n is a small compile-time constant, typically 5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, *, n, alpha, beta, k, c):
+    x = x_ref[0].astype(jnp.float32)  # (C, H, W)
+    half = n // 2
+    sq = x * x
+    padded = jnp.pad(sq, ((half, half), (0, 0), (0, 0)))
+    win = padded[0:c]
+    for i in range(1, n):
+        win = win + padded[i : i + c]
+    denom = (k + (alpha / n) * win) ** beta
+    y_ref[0] = (x / denom).astype(y_ref.dtype)
+
+
+def lrn_fwd(x, *, n=5, alpha=1e-4, beta=0.75, k=2.0, interpret=True):
+    nb, c, h, w = x.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, alpha=alpha, beta=beta, k=k, c=c),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,116 @@
+"""Pooling Pallas kernels (paper §IV-D #2): max and average, fwd + bwd.
+
+Grid over (N, C); each step owns one (H, W) plane in VMEM. The window loop
+is unrolled at trace time exactly like the conv taps in direct.py.
+
+Max-pool backward distributes the gradient to *every* element equal to the
+window max (ties are measure-zero for float inputs; see DESIGN.md
+§Known-limitations vs XLA's first-match SelectAndScatter).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _out_hw(h, w, window, stride, pad):
+    ho = (h + 2 * pad[0] - window[0]) // stride[0] + 1
+    wo = (w + 2 * pad[1] - window[1]) // stride[1] + 1
+    return ho, wo
+
+
+def _fwd_kernel(x_ref, y_ref, *, window, stride, ho, wo, mode):
+    xb = x_ref[0, 0]  # (Hp, Wp)
+    acc = None
+    for i in range(window[0]):
+        for j in range(window[1]):
+            xs = jax.lax.slice(
+                xb, (i, j),
+                (i + (ho - 1) * stride[0] + 1, j + (wo - 1) * stride[1] + 1),
+                (stride[0], stride[1]),
+            ).astype(jnp.float32)
+            acc = xs if acc is None else (
+                jnp.maximum(acc, xs) if mode == "max" else acc + xs)
+    if mode == "avg":
+        acc = acc / (window[0] * window[1])
+    y_ref[0, 0] = acc.astype(y_ref.dtype)
+
+
+def pool2d_fwd(x, *, window=(2, 2), stride=(2, 2), pad=(0, 0), mode="max",
+               interpret=True):
+    n, c, h, w = x.shape
+    ho, wo = _out_hw(h, w, window, stride, pad)
+    fill = -jnp.inf if mode == "max" else 0.0
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+                 constant_values=fill)
+    hp, wp = xp.shape[2], xp.shape[3]
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, window=window, stride=stride,
+                          ho=ho, wo=wo, mode=mode),
+        grid=(n, c),
+        in_specs=[pl.BlockSpec((1, 1, hp, wp), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xp)
+
+
+def _bwd_kernel(x_ref, y_ref, dy_ref, dx_ref, *, window, stride, ho, wo, mode):
+    """dx via scatter-back over the (unrolled) window taps."""
+    xb = x_ref[0, 0].astype(jnp.float32)    # (Hp, Wp) padded input
+    dy = dy_ref[0, 0].astype(jnp.float32)   # (Ho, Wo)
+    dx = jnp.zeros_like(xb)
+    if mode == "avg":
+        g = dy / (window[0] * window[1])
+    else:
+        ymax = y_ref[0, 0].astype(jnp.float32)  # forward output = window max
+    for i in range(window[0]):
+        for j in range(window[1]):
+            lims = (i + (ho - 1) * stride[0] + 1, j + (wo - 1) * stride[1] + 1)
+            if mode == "max":
+                xs = jax.lax.slice(xb, (i, j), lims, (stride[0], stride[1]))
+                tap = jnp.where(xs == ymax, dy, 0.0)
+            else:
+                tap = g
+            # scatter-add the tap back to the strided window positions
+            cur = jax.lax.slice(dx, (i, j), lims, (stride[0], stride[1]))
+            dx = jax.lax.dynamic_update_slice(
+                dx,
+                _strided_set(dx, cur + tap, (i, j), stride, lims),
+                (0, 0),
+            ) if False else _strided_add(dx, tap, (i, j), stride, lims)
+    dx_ref[0, 0] = dx.astype(dx_ref.dtype)
+
+
+def _strided_add(dx, tap, start, stride, lims):
+    """dx[start0:lims0:stride0, start1:lims1:stride1] += tap (trace-time)."""
+    return dx.at[start[0]:lims[0]:stride[0], start[1]:lims[1]:stride[1]].add(tap)
+
+
+def pool2d_bwd(x, y, dy, *, window=(2, 2), stride=(2, 2), pad=(0, 0),
+               mode="max", interpret=True):
+    """x: fwd input, y: fwd output (MIOpen's bwd takes both), dy -> dx."""
+    n, c, h, w = x.shape
+    ho, wo = dy.shape[2], dy.shape[3]
+    fill = -jnp.inf if mode == "max" else 0.0
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+                 constant_values=fill)
+    hp, wp = xp.shape[2], xp.shape[3]
+    dxp = pl.pallas_call(
+        functools.partial(_bwd_kernel, window=window, stride=stride,
+                          ho=ho, wo=wo, mode=mode),
+        grid=(n, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, hp, wp), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, ho, wo), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, ho, wo), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hp, wp), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, hp, wp), x.dtype),
+        interpret=interpret,
+    )(xp, y, dy)
+    return dxp[:, :, pad[0] : pad[0] + h, pad[1] : pad[1] + w]

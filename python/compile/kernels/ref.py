@@ -1,0 +1,461 @@
+"""Pure-jnp reference oracles for every MIOpen primitive.
+
+These are the correctness ground truth for the Pallas kernels (L1) and the
+fused/RNN compositions (L2). Everything here is written for clarity, not
+speed: straightforward `lax.conv_general_dilated` / explicit loops in
+`lax.scan`, matching the operator definitions in the MIOpen paper §IV.
+
+Layout conventions (MIOpen defaults):
+  activations: NCHW   filters: KCRS (K = output channels, R×S filter)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Convolution (paper §IV-A)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_fwd(x, w, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1), groups=1):
+    """Forward convolution. x: (N,C,H,W)  w: (K,C/g,R,S) -> (N,K,Ho,Wo).
+
+    This is MIOpen's cross-correlation convention (`miopenConvolution`):
+    no filter flip.
+    """
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        rhs_dilation=dilation,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def conv2d_bwd_data(dy, w, x_shape, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1), groups=1):
+    """Gradient w.r.t. the input (MIOpen BackwardData direction)."""
+
+    def f(x):
+        return conv2d_fwd(x, w, stride=stride, pad=pad, dilation=dilation, groups=groups)
+
+    x0 = jnp.zeros(x_shape, dy.dtype)
+    _, vjp = jax.vjp(f, x0)
+    return vjp(dy)[0]
+
+
+def conv2d_bwd_weights(dy, x, w_shape, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1), groups=1):
+    """Gradient w.r.t. the filter (MIOpen BackwardWeights direction)."""
+
+    def f(w):
+        return conv2d_fwd(x, w, stride=stride, pad=pad, dilation=dilation, groups=groups)
+
+    w0 = jnp.zeros(w_shape, dy.dtype)
+    _, vjp = jax.vjp(f, w0)
+    return vjp(dy)[0]
+
+
+def conv2d_transpose(x, w, *, stride=(1, 1), pad=(0, 0), groups=1):
+    """Transpose (fractionally-strided) convolution, `miopenTranspose` mode.
+
+    Defined, as in MIOpen, as the data-gradient of the forward convolution
+    whose input has the transpose-conv's output shape. Filter layout stays
+    KCRS with K = the transpose-conv *input* channels.
+    """
+    n, c, h, wd = x.shape
+    r, s = w.shape[2], w.shape[3]
+    ho = (h - 1) * stride[0] - 2 * pad[0] + r
+    wo = (wd - 1) * stride[1] - 2 * pad[1] + s
+    out_shape = (n, w.shape[1] * groups, ho, wo)
+    return conv2d_bwd_data(x, w, out_shape, stride=stride, pad=pad, groups=groups)
+
+
+def conv_out_shape(x_shape, w_shape, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1)):
+    """Output spatial shape formula (shared with the Rust descriptor layer)."""
+    n, _, h, w = x_shape
+    k, _, r, s = w_shape
+    er = (r - 1) * dilation[0] + 1
+    es = (s - 1) * dilation[1] + 1
+    ho = (h + 2 * pad[0] - er) // stride[0] + 1
+    wo = (w + 2 * pad[1] - es) // stride[1] + 1
+    return (n, k, ho, wo)
+
+
+def im2col(x, r, s, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1)):
+    """The paper's most-general path: unfold into a (N, C*R*S, Ho*Wo) matrix."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    _, _, hp, wp = xp.shape
+    ho = (hp - ((r - 1) * dilation[0] + 1)) // stride[0] + 1
+    wo = (wp - ((s - 1) * dilation[1] + 1)) // stride[1] + 1
+    cols = []
+    for i in range(r):
+        for j in range(s):
+            di, dj = i * dilation[0], j * dilation[1]
+            patch = xp[:, :, di : di + (ho - 1) * stride[0] + 1 : stride[0],
+                       dj : dj + (wo - 1) * stride[1] + 1 : stride[1]]
+            cols.append(patch.reshape(n, c, ho * wo))
+    # stack as (N, C, R*S, Ho*Wo) -> (N, C*R*S, Ho*Wo), C-major to match the
+    # (K, C*R*S) filter reshape.
+    col = jnp.stack(cols, axis=2).reshape(n, c * r * s, ho * wo)
+    return col, (ho, wo)
+
+
+def conv2d_im2col_gemm(x, w, *, stride=(1, 1), pad=(0, 0), dilation=(1, 1)):
+    """im2col + GEMM convolution — the baseline of Figure 6."""
+    n = x.shape[0]
+    k, c, r, s = w.shape
+    col, (ho, wo) = im2col(x, r, s, stride=stride, pad=pad, dilation=dilation)
+    wmat = w.reshape(k, c * r * s).astype(jnp.float32)
+    out = jnp.einsum("kp,npq->nkq", wmat, col.astype(jnp.float32))
+    return out.reshape(n, k, ho, wo).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Batch normalization (paper §IV-B)
+# ---------------------------------------------------------------------------
+
+
+def batchnorm_spatial_fwd_train(x, gamma, beta, eps=1e-5):
+    """Spatial BN: one (mean, var, gamma, beta) per channel, stats over N,H,W."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=(0, 2, 3), keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=(0, 2, 3), keepdims=True)
+    xhat = (xf - mu) / jnp.sqrt(var + eps)
+    y = gamma.reshape(1, -1, 1, 1) * xhat + beta.reshape(1, -1, 1, 1)
+    return y.astype(x.dtype), mu.reshape(-1), var.reshape(-1)
+
+
+def batchnorm_spatial_fwd_infer(x, gamma, beta, mean, var, eps=1e-5):
+    inv = 1.0 / jnp.sqrt(var.reshape(1, -1, 1, 1) + eps)
+    y = gamma.reshape(1, -1, 1, 1) * (x.astype(jnp.float32) - mean.reshape(1, -1, 1, 1)) * inv \
+        + beta.reshape(1, -1, 1, 1)
+    return y.astype(x.dtype)
+
+
+def batchnorm_peract_fwd_train(x, gamma, beta, eps=1e-5):
+    """Per-activation BN: parameters/statistics per (C,H,W) element, over N."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=0, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=0, keepdims=True)
+    xhat = (xf - mu) / jnp.sqrt(var + eps)
+    y = gamma[None] * xhat + beta[None]
+    return y.astype(x.dtype), mu[0], var[0]
+
+
+def batchnorm_peract_fwd_infer(x, gamma, beta, mean, var, eps=1e-5):
+    y = gamma[None] * (x.astype(jnp.float32) - mean[None]) / jnp.sqrt(var[None] + eps) + beta[None]
+    return y.astype(x.dtype)
+
+
+def batchnorm_spatial_bwd(x, dy, gamma, mu, var, eps=1e-5):
+    """Backward pass for spatial BN -> (dx, dgamma, dbeta)."""
+    m = x.shape[0] * x.shape[2] * x.shape[3]
+    mu_ = mu.reshape(1, -1, 1, 1)
+    var_ = var.reshape(1, -1, 1, 1)
+    inv = 1.0 / jnp.sqrt(var_ + eps)
+    xhat = (x - mu_) * inv
+    dgamma = jnp.sum(dy * xhat, axis=(0, 2, 3))
+    dbeta = jnp.sum(dy, axis=(0, 2, 3))
+    g = gamma.reshape(1, -1, 1, 1)
+    dx = (g * inv / m) * (
+        m * dy - dbeta.reshape(1, -1, 1, 1) - xhat * dgamma.reshape(1, -1, 1, 1)
+    )
+    return dx, dgamma, dbeta
+
+
+def batchnorm_peract_bwd(x, dy, gamma, mu, var, eps=1e-5):
+    """Per-activation BN backward -> (dx, dgamma, dbeta); stats over N."""
+    n = x.shape[0]
+    inv = 1.0 / jnp.sqrt(var[None] + eps)
+    xhat = (x - mu[None]) * inv
+    dgamma = jnp.sum(dy * xhat, axis=0)
+    dbeta = jnp.sum(dy, axis=0)
+    dx = (gamma[None] * inv / n) * (
+        n * dy - dbeta[None] - xhat * dgamma[None])
+    return dx, dgamma, dbeta
+
+
+# ---------------------------------------------------------------------------
+# Activations (§IV-D)
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = {
+    "relu": lambda x, alpha=0.0: jnp.maximum(x, 0.0),
+    "leaky_relu": lambda x, alpha=0.01: jnp.where(x >= 0, x, alpha * x),
+    "tanh": lambda x, alpha=0.0: jnp.tanh(x),
+    "sigmoid": lambda x, alpha=0.0: jax.nn.sigmoid(x),
+    "elu": lambda x, alpha=1.0: jnp.where(x >= 0, x, alpha * (jnp.exp(x) - 1.0)),
+    "clipped_relu": lambda x, alpha=6.0: jnp.clip(x, 0.0, alpha),
+    "abs": lambda x, alpha=0.0: jnp.abs(x),
+    "identity": lambda x, alpha=0.0: x,
+}
+
+
+def activation_fwd(x, mode, alpha=0.0):
+    return ACTIVATIONS[mode](x, alpha)
+
+
+def activation_bwd(x, dy, mode, alpha=0.0):
+    f = lambda t: ACTIVATIONS[mode](t, alpha)
+    _, vjp = jax.vjp(f, x)
+    return vjp(dy)[0]
+
+
+# ---------------------------------------------------------------------------
+# Pooling (§IV-D)
+# ---------------------------------------------------------------------------
+
+
+def pool2d_fwd(x, *, window=(2, 2), stride=(2, 2), pad=(0, 0), mode="max"):
+    init = -jnp.inf if mode == "max" else 0.0
+    op = lax.max if mode == "max" else lax.add
+    y = lax.reduce_window(
+        x,
+        jnp.array(init, x.dtype),
+        op,
+        window_dimensions=(1, 1) + tuple(window),
+        window_strides=(1, 1) + tuple(stride),
+        padding=((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+    )
+    if mode == "avg":
+        y = y / (window[0] * window[1])
+    return y
+
+
+def pool2d_bwd(x, dy, *, window=(2, 2), stride=(2, 2), pad=(0, 0), mode="max"):
+    f = lambda t: pool2d_fwd(t, window=window, stride=stride, pad=pad, mode=mode)
+    _, vjp = jax.vjp(f, x)
+    return vjp(dy)[0]
+
+
+# ---------------------------------------------------------------------------
+# Softmax / LogSoftmax (§IV-D) — over the channel axis, per MIOpen default
+# ---------------------------------------------------------------------------
+
+
+def softmax_fwd(x, *, log=False, axis=1):
+    if log:
+        return jax.nn.log_softmax(x, axis=axis)
+    return jax.nn.softmax(x, axis=axis)
+
+
+def softmax_bwd(y, dy, *, log=False, axis=1):
+    """Backward given the *forward output* y (MIOpen convention)."""
+    if log:
+        return dy - jnp.exp(y) * jnp.sum(dy, axis=axis, keepdims=True)
+    return y * (dy - jnp.sum(dy * y, axis=axis, keepdims=True))
+
+
+# ---------------------------------------------------------------------------
+# Local Response Normalization (§IV-D), cross-channel mode
+# ---------------------------------------------------------------------------
+
+
+def lrn_fwd(x, *, n=5, alpha=1e-4, beta=0.75, k=2.0):
+    c = x.shape[1]
+    half = n // 2
+    sq = x.astype(jnp.float32) ** 2
+    padded = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+    win = sum(padded[:, i : i + c] for i in range(n))
+    denom = (k + (alpha / n) * win) ** beta
+    return (x / denom).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RNN cells (§IV-C): per-timestep references, eqs. (1)-(10)
+# ---------------------------------------------------------------------------
+
+
+def lstm_cell_ref(x_t, h_prev, c_prev, W, R, b=None):
+    """One LSTM step. W: (4H, X) rows ordered [i, f, o, c~]; R: (4H, H)."""
+    s = x_t @ W.T + h_prev @ R.T
+    if b is not None:
+        s = s + b
+    si, sf, so, sc = jnp.split(s, 4, axis=-1)
+    i = jax.nn.sigmoid(si)
+    f = jax.nn.sigmoid(sf)
+    o = jax.nn.sigmoid(so)
+    cbar = jnp.tanh(sc)
+    c_t = f * c_prev + i * cbar
+    h_t = o * jnp.tanh(c_t)
+    return h_t, c_t
+
+
+def gru_cell_ref(x_t, h_prev, W, R, b=None):
+    """One GRU step. W: (3H, X) rows ordered [r, z, n]; R: (3H, H).
+
+    cuDNN/MIOpen variant: n_t = tanh(W_n x + r_t * (R_n h_prev (+ b_n))).
+    """
+    s_x = x_t @ W.T
+    s_h = h_prev @ R.T
+    if b is not None:
+        bx, bh = b
+        s_x = s_x + bx
+        s_h = s_h + bh
+    xr, xz, xn = jnp.split(s_x, 3, axis=-1)
+    hr, hz, hn = jnp.split(s_h, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    return (1.0 - z) * n + z * h_prev
+
+
+def vanilla_cell_ref(x_t, h_prev, W, R, b=None, act="tanh"):
+    s = x_t @ W.T + h_prev @ R.T
+    if b is not None:
+        s = s + b
+    return jnp.tanh(s) if act == "tanh" else jnp.maximum(s, 0.0)
+
+
+def lstm_seq_ref(xs, h0, c0, W, R, b=None):
+    """Reference LSTM over a sequence. xs: (T, B, X) -> hs: (T, B, H)."""
+
+    def step(carry, x_t):
+        h, c = carry
+        h2, c2 = lstm_cell_ref(x_t, h, c, W, R, b)
+        return (h2, c2), h2
+
+    (_, _), hs = lax.scan(step, (h0, c0), xs)
+    return hs
+
+
+def gru_seq_ref(xs, h0, W, R, b=None):
+    def step(h, x_t):
+        h2 = gru_cell_ref(x_t, h, W, R, b)
+        return h2, h2
+
+    _, hs = lax.scan(step, h0, xs)
+    return hs
+
+
+def vanilla_seq_ref(xs, h0, W, R, b=None, act="tanh"):
+    def step(h, x_t):
+        h2 = vanilla_cell_ref(x_t, h, W, R, b, act)
+        return h2, h2
+
+    _, hs = lax.scan(step, h0, xs)
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# CTC loss (§IV-D) — log-space forward algorithm
+# ---------------------------------------------------------------------------
+
+
+def ctc_loss_ref(log_probs, labels, input_len, label_len, blank=0):
+    """CTC negative log-likelihood for a single sequence.
+
+    log_probs: (T, V) log-softmax outputs; labels: (L,) int sequence
+    (no blanks). Standard alpha recursion over the 2L+1 extended sequence.
+    Python-loop implementation used as the test oracle (static lengths).
+    """
+    L = int(label_len)
+    ext = []
+    for l in labels[:L]:
+        ext.extend([blank, int(l)])
+    ext.append(blank)
+    S = len(ext)
+    ext = jnp.array(ext)
+
+    neg_inf = jnp.array(-1e30, jnp.float32)
+    alpha = jnp.full((S,), neg_inf)
+    alpha = alpha.at[0].set(log_probs[0, ext[0]])
+    if S > 1:
+        alpha = alpha.at[1].set(log_probs[0, ext[1]])
+
+    for t in range(1, int(input_len)):
+        prev = alpha
+        new = jnp.full((S,), neg_inf)
+        for s in range(S):
+            cand = prev[s]
+            if s >= 1:
+                cand = jnp.logaddexp(cand, prev[s - 1])
+            if s >= 2 and int(ext[s]) != blank and int(ext[s]) != int(ext[s - 2]):
+                cand = jnp.logaddexp(cand, prev[s - 2])
+            new = new.at[s].set(cand + log_probs[t, ext[s]])
+        alpha = new
+
+    ll = alpha[S - 1]
+    if S > 1:
+        ll = jnp.logaddexp(ll, alpha[S - 2])
+    return -ll
+
+
+def ctc_loss_brute(log_probs, labels, input_len, label_len, blank=0):
+    """Brute-force CTC by path enumeration (tiny T/V only; test oracle)."""
+    import itertools
+
+    T = int(input_len)
+    V = log_probs.shape[1]
+    target = tuple(int(l) for l in labels[: int(label_len)])
+    total = -jnp.inf
+    for path in itertools.product(range(V), repeat=T):
+        collapsed = []
+        prev = None
+        for p in path:
+            if p != prev:
+                collapsed.append(p)
+            prev = p
+        decoded = tuple(p for p in collapsed if p != blank)
+        if decoded == target:
+            lp = sum(float(log_probs[t, path[t]]) for t in range(T))
+            total = jnp.logaddexp(total, lp)
+    return -total
+
+
+# ---------------------------------------------------------------------------
+# Tensor ops (§IV-D): the miopenOpTensor family
+# ---------------------------------------------------------------------------
+
+
+def op_tensor(a, b, alpha1=1.0, alpha2=1.0, beta=0.0, c=None, op="add"):
+    """C = op(alpha1*A, alpha2*B) + beta*C with numpy broadcasting on B."""
+    fa, fb = alpha1 * a, alpha2 * b
+    if op == "add":
+        r = fa + fb
+    elif op == "mul":
+        r = fa * fb
+    elif op == "min":
+        r = jnp.minimum(fa, fb)
+    elif op == "max":
+        r = jnp.maximum(fa, fb)
+    else:
+        raise ValueError(op)
+    if beta != 0.0 and c is not None:
+        r = r + beta * c
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Fusions (§V): references for the fused kernels
+# ---------------------------------------------------------------------------
+
+
+def fused_conv_bias_act_ref(x, w, bias, *, stride=(1, 1), pad=(0, 0),
+                            mode="relu", alpha=0.0):
+    y = conv2d_fwd(x, w, stride=stride, pad=pad)
+    y = y + bias.reshape(1, -1, 1, 1).astype(y.dtype)
+    return activation_fwd(y, mode, alpha)
+
+
+def fused_bn_act_ref(x, gamma, beta, mean, var, *, eps=1e-5, mode="relu",
+                     alpha=0.0, spatial=True):
+    if spatial:
+        y = batchnorm_spatial_fwd_infer(x, gamma, beta, mean, var, eps)
+    else:
+        y = batchnorm_peract_fwd_infer(x, gamma, beta, mean, var, eps)
+    return activation_fwd(y, mode, alpha)
+
+
+def fused_conv_bias_bn_act_ref(x, w, bias, gamma, beta, mean, var, *,
+                               stride=(1, 1), pad=(0, 0), eps=1e-5,
+                               mode="relu", alpha=0.0):
+    y = conv2d_fwd(x, w, stride=stride, pad=pad) + bias.reshape(1, -1, 1, 1).astype(x.dtype)
+    y = batchnorm_spatial_fwd_infer(y, gamma, beta, mean, var, eps)
+    return activation_fwd(y, mode, alpha)

@@ -1,0 +1,207 @@
+"""RNN cell kernels and sequence assemblies (paper §IV-C, eqs. 1–21).
+
+The paper's optimization: (a) all four LSTM gate pre-activations for all
+timesteps share one input GEMM (eq. 12) because x_t are time-independent;
+(b) per step, the four hidden-state GEMMs collapse into one (eq. 11); and
+(c) the gate nonlinearities (eqs. 5–8) fuse into a single kernel thanks to
+"computational homogeneity and contiguous memory-layout".
+
+Here (a)/(b) are the fused-GEMM assemblies below (GEMMs on the Pallas
+`gemm` substrate inside a `lax.scan`), and (c) is the fused pointwise
+Pallas kernel `lstm_pointwise` that turns s=[si|sf|so|sc̃] + c_{t-1} into
+(h_t, c_t) in one pass. `lstm_seq_naive` keeps the textbook layout —
+separate GEMM + separate activation per gate per step — as the ablation
+baseline (bench `abl-rnn`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import gemm
+
+
+# -- fused pointwise gate kernels -------------------------------------------
+
+def _lstm_pointwise_kernel(s_ref, c_ref, h_ref, cout_ref, *, hidden):
+    s = s_ref[...].astype(jnp.float32)          # (B, 4H), [i|f|o|c~]
+    c_prev = c_ref[...].astype(jnp.float32)     # (B, H)
+    si = s[:, 0 * hidden : 1 * hidden]
+    sf = s[:, 1 * hidden : 2 * hidden]
+    so = s[:, 2 * hidden : 3 * hidden]
+    sc = s[:, 3 * hidden : 4 * hidden]
+    sig = lambda t: 1.0 / (1.0 + jnp.exp(-t))
+    i, f, o = sig(si), sig(sf), sig(so)
+    cbar = jnp.tanh(sc)
+    c_t = f * c_prev + i * cbar
+    h_t = o * jnp.tanh(c_t)
+    h_ref[...] = h_t.astype(h_ref.dtype)
+    cout_ref[...] = c_t.astype(cout_ref.dtype)
+
+
+def lstm_pointwise(s, c_prev, *, interpret=True):
+    """s: (B, 4H) fused pre-activations, c_prev: (B, H) -> (h_t, c_t)."""
+    b, four_h = s.shape
+    hidden = four_h // 4
+    return pl.pallas_call(
+        functools.partial(_lstm_pointwise_kernel, hidden=hidden),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, four_h), lambda i: (0, 0)),
+                  pl.BlockSpec((b, hidden), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((b, hidden), lambda i: (0, 0)),
+                   pl.BlockSpec((b, hidden), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, hidden), s.dtype),
+                   jax.ShapeDtypeStruct((b, hidden), s.dtype)],
+        interpret=interpret,
+    )(s, c_prev)
+
+
+def _gru_pointwise_kernel(sx_ref, sh_ref, h_ref, hout_ref, *, hidden):
+    sx = sx_ref[...].astype(jnp.float32)   # (B, 3H), [r|z|n]
+    sh = sh_ref[...].astype(jnp.float32)
+    h_prev = h_ref[...].astype(jnp.float32)
+    sig = lambda t: 1.0 / (1.0 + jnp.exp(-t))
+    r = sig(sx[:, :hidden] + sh[:, :hidden])
+    z = sig(sx[:, hidden : 2 * hidden] + sh[:, hidden : 2 * hidden])
+    n = jnp.tanh(sx[:, 2 * hidden :] + r * sh[:, 2 * hidden :])
+    hout_ref[...] = ((1.0 - z) * n + z * h_prev).astype(hout_ref.dtype)
+
+
+def gru_pointwise(sx, sh, h_prev, *, interpret=True):
+    b, three_h = sx.shape
+    hidden = three_h // 3
+    return pl.pallas_call(
+        functools.partial(_gru_pointwise_kernel, hidden=hidden),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, three_h), lambda i: (0, 0)),
+                  pl.BlockSpec((b, three_h), lambda i: (0, 0)),
+                  pl.BlockSpec((b, hidden), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((b, hidden), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hidden), sx.dtype),
+        interpret=interpret,
+    )(sx, sh, h_prev)
+
+
+def _vanilla_pointwise_kernel(s_ref, h_ref, *, act):
+    s = s_ref[...].astype(jnp.float32)
+    h = jnp.tanh(s) if act == "tanh" else jnp.maximum(s, 0.0)
+    h_ref[...] = h.astype(h_ref.dtype)
+
+
+def vanilla_pointwise(s, *, act="tanh", interpret=True):
+    b, hidden = s.shape
+    return pl.pallas_call(
+        functools.partial(_vanilla_pointwise_kernel, act=act),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, hidden), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((b, hidden), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hidden), s.dtype),
+        interpret=interpret,
+    )(s)
+
+
+# -- fused-GEMM sequence assemblies (the paper's optimization) ---------------
+
+def lstm_seq_fused(xs, h0, c0, W, R, b=None, *, interpret=True):
+    """Eqs. 11–12: ONE input GEMM for all T, one hidden GEMM + one fused
+    pointwise kernel per step.
+
+    xs: (T, B, X); W: (4H, X); R: (4H, H) -> hs: (T, B, H).
+    """
+    T, B, X = xs.shape
+    H4 = W.shape[0]
+    # eq. 12: [s_0 ... s_{T-1}] = W [x_0 ... x_{T-1}] — one GEMM, weights
+    # loaded once for the whole sequence.
+    sx_all = gemm.matmul(xs.reshape(T * B, X), W.T,
+                         interpret=interpret).reshape(T, B, H4)
+    if b is not None:
+        sx_all = sx_all + b
+
+    def step(carry, sx_t):
+        h, c = carry
+        # eq. 11: one GEMM for all four gates' hidden contribution.
+        sh = gemm.matmul(h, R.T, interpret=interpret)
+        h2, c2 = lstm_pointwise(sx_t + sh, c, interpret=interpret)
+        return (h2, c2), h2
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), sx_all)
+    return hs
+
+
+def lstm_seq_naive(xs, h0, c0, W, R, b=None, *, interpret=True):
+    """Ablation baseline: per-gate GEMMs (4 + 4 per step, eq. 1–4 verbatim)
+    and per-gate activation kernels (eqs. 5–8 unfused)."""
+    T, B, X = xs.shape
+    H = R.shape[1]
+    Ws = jnp.split(W, 4, axis=0)
+    Rs = jnp.split(R, 4, axis=0)
+    bs = jnp.split(b, 4) if b is not None else [None] * 4
+
+    def step(carry, x_t):
+        h, c = carry
+        pre = []
+        for Wg, Rg, bg in zip(Ws, Rs, bs):
+            s = gemm.matmul(x_t, Wg.T, interpret=interpret) + \
+                gemm.matmul(h, Rg.T, interpret=interpret)
+            if bg is not None:
+                s = s + bg
+            pre.append(s)
+        si, sf, so, sc = pre
+        sig = lambda t: 1.0 / (1.0 + jnp.exp(-t))
+        i, f, o = sig(si), sig(sf), sig(so)      # separate kernels in MIOpen
+        cbar = jnp.tanh(sc)
+        c2 = f * c + i * cbar
+        h2 = o * jnp.tanh(c2)
+        return (h2, c2), h2
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs
+
+
+def gru_seq_fused(xs, h0, W, R, b=None, *, interpret=True):
+    """GRU with the same eq.-12 treatment. b = (bx, bh) if given."""
+    T, B, X = xs.shape
+    H3 = W.shape[0]
+    sx_all = gemm.matmul(xs.reshape(T * B, X), W.T,
+                         interpret=interpret).reshape(T, B, H3)
+    if b is not None:
+        sx_all = sx_all + b[0]
+
+    def step(h, sx_t):
+        sh = gemm.matmul(h, R.T, interpret=interpret)
+        if b is not None:
+            sh = sh + b[1]
+        h2 = gru_pointwise(sx_t, sh, h, interpret=interpret)
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, h0, sx_all)
+    return hs
+
+
+def vanilla_seq_fused(xs, h0, W, R, b=None, *, act="tanh", interpret=True):
+    T, B, X = xs.shape
+    H = W.shape[0]
+    sx_all = gemm.matmul(xs.reshape(T * B, X), W.T,
+                         interpret=interpret).reshape(T, B, H)
+    if b is not None:
+        sx_all = sx_all + b
+
+    def step(h, sx_t):
+        s = sx_t + gemm.matmul(h, R.T, interpret=interpret)
+        h2 = vanilla_pointwise(s, act=act, interpret=interpret)
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, h0, sx_all)
+    return hs
+
+
+def bidirectional(seq_fn, xs, *args, **kwargs):
+    """miopenRNNbidirection: forward pass + reversed pass, concatenated on
+    the hidden axis (MIOpen's layout)."""
+    fwd = seq_fn(xs, *args, **kwargs)
+    bwd = seq_fn(jnp.flip(xs, axis=0), *args, **kwargs)
+    return jnp.concatenate([fwd, jnp.flip(bwd, axis=0)], axis=-1)

@@ -1,0 +1,62 @@
+"""Softmax / LogSoftmax Pallas kernels (paper §IV-D #3).
+
+MIOpen's softmax operates over the channel axis of an NCHW tensor. Grid
+over N; each step reduces the (C,H,W) slab in VMEM with the numerically
+stable max-shift.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(x_ref, y_ref, *, log):
+    x = x_ref[0].astype(jnp.float32)                 # (C,H,W)
+    m = jnp.max(x, axis=0, keepdims=True)
+    e = jnp.exp(x - m)
+    z = jnp.sum(e, axis=0, keepdims=True)
+    if log:
+        y = (x - m) - jnp.log(z)
+    else:
+        y = e / z
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def softmax_fwd(x, *, log=False, interpret=True):
+    n, c, h, w = x.shape
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, log=log),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _bwd_kernel(y_ref, dy_ref, dx_ref, *, log):
+    y = y_ref[0].astype(jnp.float32)
+    dy = dy_ref[0].astype(jnp.float32)
+    if log:
+        dx = dy - jnp.exp(y) * jnp.sum(dy, axis=0, keepdims=True)
+    else:
+        dx = y * (dy - jnp.sum(dy * y, axis=0, keepdims=True))
+    dx_ref[0] = dx.astype(dx_ref.dtype)
+
+
+def softmax_bwd(y, dy, *, log=False, interpret=True):
+    """Backward from the forward *output* (MIOpen convention)."""
+    n, c, h, w = y.shape
+    blk = lambda: pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, log=log),
+        grid=(n,),
+        in_specs=[blk(), blk()],
+        out_specs=blk(),
+        out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
+        interpret=interpret,
+    )(y, dy)

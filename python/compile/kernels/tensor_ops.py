@@ -1,0 +1,84 @@
+"""Tensor-operator Pallas kernels (paper §IV-D #5): the miopenOpTensor
+family — C = op(alpha1·A, alpha2·B) + beta·C with B broadcastable, plus the
+bias-add specialization used by the fusion benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OPS = ("add", "mul", "min", "max")
+
+
+def _combine(a, b, op):
+    if op == "add":
+        return a + b
+    if op == "mul":
+        return a * b
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    raise ValueError(op)
+
+
+def _full_kernel(a_ref, b_ref, c_ref, o_ref, *, op, alpha1, alpha2, beta):
+    a = alpha1 * a_ref[...].astype(jnp.float32)
+    b = alpha2 * b_ref[...].astype(jnp.float32)
+    r = _combine(a, b, op)
+    if beta != 0.0:
+        r = r + beta * c_ref[...].astype(jnp.float32)
+    o_ref[...] = r.astype(o_ref.dtype)
+
+
+def op_tensor(a, b, *, op="add", alpha1=1.0, alpha2=1.0, beta=0.0, c=None,
+              block=4096, interpret=True):
+    """Full-shape variant: A, B, C all the same shape."""
+    assert a.shape == b.shape
+    cin = c if c is not None else jnp.zeros_like(a)
+    flat_a, flat_b, flat_c = a.reshape(-1), b.reshape(-1), cin.reshape(-1)
+    n = flat_a.shape[0]
+    blk = min(block, n)
+    npad = (-n) % blk
+    pads = lambda t: jnp.pad(t, (0, npad))
+    spec = lambda: pl.BlockSpec((blk,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_full_kernel, op=op, alpha1=alpha1, alpha2=alpha2,
+                          beta=beta),
+        grid=((n + npad) // blk,),
+        in_specs=[spec(), spec(), spec()],
+        out_specs=spec(),
+        out_shape=jax.ShapeDtypeStruct((n + npad,), a.dtype),
+        interpret=interpret,
+    )(pads(flat_a), pads(flat_b), pads(flat_c))
+    return out[:n].reshape(a.shape)
+
+
+def _bias_kernel(a_ref, b_ref, o_ref, *, op, alpha1, alpha2):
+    a = alpha1 * a_ref[...].astype(jnp.float32)   # (N,1,H,W)
+    b = alpha2 * b_ref[0].astype(jnp.float32)     # scalar per channel
+    o_ref[...] = _combine(a, b, op).astype(o_ref.dtype)
+
+
+def op_tensor_bias(a, bias, *, op="add", alpha1=1.0, alpha2=1.0,
+                   interpret=True):
+    """Broadcast variant: B is a per-channel (C,) vector over NCHW A.
+
+    This is the `conv + bias` building block of Figure 7a's *unfused*
+    arm: a separate kernel launch that re-reads the whole activation.
+    """
+    n, c, h, w = a.shape
+    assert bias.shape == (c,)
+    return pl.pallas_call(
+        functools.partial(_bias_kernel, op=op, alpha1=alpha1, alpha2=alpha2),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n, 1, h, w), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, bias)

@@ -1,0 +1,101 @@
+"""Winograd F(2×2, 3×3) convolution (§IV-A, [Lavin & Gray 2015]).
+
+The paper's workhorse for 3×3/stride-1: 2.25× fewer multiplies than direct
+at the cost of transform overhead, and (as the paper stresses) *no
+workspace* — transforms are fused around the batched GEMM.
+
+Pipeline:
+  V = Bᵀ d B      per 4×4 input tile           (data transform, jnp)
+  U = G g Gᵀ      per (k, c) filter            (filter transform, jnp)
+  M[ξν] = U[ξν] @ V[ξν]   for the 16 positions (batched Pallas GEMM — the
+                                                 hot stage, MXU-shaped)
+  Y = Aᵀ M A      per tile                      (output transform, jnp)
+
+Applicability (mirrored by the Rust solver): r = s = 3, stride 1,
+dilation 1, groups 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import gemm
+
+# F(2x2, 3x3) transform matrices (Lavin & Gray).
+BT = jnp.array([[1, 0, -1, 0],
+                [0, 1, 1, 0],
+                [0, -1, 1, 0],
+                [0, 1, 0, -1]], jnp.float32)
+G = jnp.array([[1, 0, 0],
+               [0.5, 0.5, 0.5],
+               [0.5, -0.5, 0.5],
+               [0, 0, 1]], jnp.float32)
+AT = jnp.array([[1, 1, 1, 0],
+                [0, 1, -1, -1]], jnp.float32)
+
+
+def conv2d_winograd(x, w, *, pad=(1, 1), bm=64, bn=1024, interpret=True):
+    """x: (N,C,H,W), w: (K,C,3,3), stride 1 -> (N,K,Ho,Wo)."""
+    n, c, h, wd = x.shape
+    k, cw, r, s = w.shape
+    assert (r, s) == (3, 3), "Winograd F(2,3) requires 3x3 filters"
+    assert cw == c
+
+    ho = h + 2 * pad[0] - 2
+    wo = wd + 2 * pad[1] - 2
+
+    # pad: conv padding + round Ho/Wo up to multiples of the m=2 tile
+    th, tw = (ho + 1) // 2, (wo + 1) // 2
+    hp_need = 2 * th + 2   # input extent covered by th tiles
+    wp_need = 2 * tw + 2
+    xp = jnp.pad(x, ((0, 0), (0, 0),
+                     (pad[0], hp_need - h - pad[0]),
+                     (pad[1], wp_need - wd - pad[1])))
+
+    # Extract overlapping 4x4 tiles with stride 2: (N, C, th, tw, 4, 4).
+    # Perf (EXPERIMENTS.md §Perf L2-1): gather by intra-tile offset — 16
+    # strided slices — instead of one slice per tile (O(th·tw) HLO ops,
+    # which dominated the measured time at 28x28).
+    offs = []
+    for i in range(4):
+        for j in range(4):
+            offs.append(xp[:, :, i : i + 2 * (th - 1) + 1 : 2,
+                           j : j + 2 * (tw - 1) + 1 : 2])  # (N, C, th, tw)
+    tiles = jnp.stack(offs, axis=-1).reshape(n, c, th, tw, 4, 4)
+
+    xf = tiles.astype(jnp.float32)
+    # V = BT @ d @ B  -> (N, C, th, tw, 4, 4)
+    V = jnp.einsum("ab,nctwbd,ed->nctwae", BT, xf, BT)
+    # U = G @ g @ GT  -> (K, C, 4, 4)
+    U = jnp.einsum("ab,kcbd,ed->kcae", G, w.astype(jnp.float32), G)
+
+    p = n * th * tw
+    # (16, C, P) and (16, K, C)
+    Vm = V.transpose(4, 5, 1, 0, 2, 3).reshape(16, c, p)
+    Um = U.transpose(2, 3, 0, 1).reshape(16, k, c)
+
+    # Hot stage: 16 independent GEMMs (K×C)·(C×P) on the Pallas substrate.
+    Mm = gemm.batched_matmul(Um, Vm, bm=bm, bn=bn, interpret=interpret)
+
+    M = Mm.reshape(4, 4, k, n, th, tw).transpose(3, 2, 4, 5, 0, 1)
+    # Y = AT @ M @ A -> (N, K, th, tw, 2, 2)
+    Y = jnp.einsum("ab,nktwbd,ed->nktwae", AT, M, AT)
+    y = Y.transpose(0, 1, 2, 4, 3, 5).reshape(n, k, 2 * th, 2 * tw)
+    return y[:, :, :ho, :wo].astype(x.dtype)
+
+
+def conv2d_winograd_bwd_data(dy, w, x_shape, *, pad=(1, 1), bm=32, bn=32,
+                             interpret=True):
+    """BackwardData for a 3×3/stride-1 conv is itself a 3×3/stride-1 conv
+    (flipped, channel-swapped filter, complementary padding) — so Winograd
+    applies to the backward-data direction too, as in MIOpen."""
+    n, c, h, wd = x_shape
+    wrot = jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)  # (C, K, 3, 3)
+    dx = conv2d_winograd(dy, wrot, pad=(2 - pad[0], 2 - pad[1]),
+                         bm=bm, bn=bn, interpret=interpret)
+    return dx[:, :, :h, :wd]
+
+
+def flops_ratio():
+    """Multiplication saving vs direct for F(2x2,3x3): 36 MACs -> 16."""
+    return 2.25

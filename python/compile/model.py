@@ -1,0 +1,279 @@
+"""L2: JAX compute graphs built from the L1 Pallas kernels.
+
+Two responsibilities:
+
+1. `layers` — differentiable wrappers (`jax.custom_vjp`) that route both
+   the forward AND backward pass through the library's own kernels, the
+   exact structure MIOpen exposes (Forward / BackwardData / BackwardWeights
+   kernels per primitive).
+
+2. `cnn_*` — the end-to-end tiny CNN used by examples/train_cnn.rs and
+   serve_inference.rs: conv→BN→ReLU→pool ×2 → GEMM classifier, with a full
+   SGD train step lowered into a single AOT artifact.
+
+Python never runs at serving/training time — these functions exist only to
+be lowered by aot.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import activations, batchnorm, direct, gemm, pooling, softmax
+
+
+# ---------------------------------------------------------------------------
+# Differentiable layer wrappers (fwd AND bwd on library kernels)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def conv2d(x, w, stride=(1, 1), pad=(1, 1)):
+    return direct.conv2d_direct(x, w, stride=stride, pad=pad)
+
+
+def _conv_fwd(x, w, stride, pad):
+    return conv2d(x, w, stride, pad), (x, w)
+
+
+def _conv_bwd(stride, pad, res, dy):
+    x, w = res
+    dx = direct.conv2d_direct_bwd_data(dy, w, x.shape, stride=stride, pad=pad)
+    dw = direct.conv2d_direct_bwd_weights(dy, x, w.shape, stride=stride,
+                                          pad=pad)
+    return dx, dw
+
+
+conv2d.defvjp(_conv_fwd, _conv_bwd)
+
+
+@jax.custom_vjp
+def bn_train(x, gamma, beta):
+    y, _, _ = batchnorm.spatial_fwd_train(x, gamma, beta)
+    return y
+
+
+def _bn_fwd(x, gamma, beta):
+    y, mu, var = batchnorm.spatial_fwd_train(x, gamma, beta)
+    return y, (x, gamma, mu, var)
+
+
+def _bn_bwd(res, dy):
+    x, gamma, mu, var = res
+    dx, dg, db = batchnorm.spatial_bwd(x, dy, gamma, mu, var)
+    return dx, dg, db
+
+
+bn_train.defvjp(_bn_fwd, _bn_bwd)
+
+
+@jax.custom_vjp
+def relu(x):
+    return activations.activation_fwd(x, "relu")
+
+
+def _relu_fwd(x):
+    return relu(x), (x,)
+
+
+def _relu_bwd(res, dy):
+    (x,) = res
+    return (activations.activation_bwd(x, dy, "relu"),)
+
+
+relu.defvjp(_relu_fwd, _relu_bwd)
+
+
+@jax.custom_vjp
+def maxpool2(x):
+    return pooling.pool2d_fwd(x, window=(2, 2), stride=(2, 2), mode="max")
+
+
+def _mp_fwd(x):
+    y = maxpool2(x)
+    return y, (x, y)
+
+
+def _mp_bwd(res, dy):
+    x, y = res
+    return (pooling.pool2d_bwd(x, y, dy, window=(2, 2), stride=(2, 2),
+                               mode="max"),)
+
+
+maxpool2.defvjp(_mp_fwd, _mp_bwd)
+
+
+@jax.custom_vjp
+def dense(x, w):
+    """x: (B, F), w: (F, O) -> (B, O), on the Pallas GEMM."""
+    return gemm.matmul(x, w)
+
+
+def _dense_fwd(x, w):
+    return dense(x, w), (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    dx = gemm.matmul(dy, w.T)
+    dw = gemm.matmul(x.T, dy)
+    return dx, dw
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+@jax.custom_vjp
+def log_softmax_rows(x):
+    """x: (B, V) -> log-softmax over V, on the softmax kernel."""
+    return softmax.softmax_fwd(x[:, :, None, None], log=True)[:, :, 0, 0]
+
+
+def _lsm_fwd(x):
+    y = log_softmax_rows(x)
+    return y, (y,)
+
+
+def _lsm_bwd(res, dy):
+    (y,) = res
+    dx = softmax.softmax_bwd(y[:, :, None, None], dy[:, :, None, None],
+                             log=True)[:, :, 0, 0]
+    return (dx,)
+
+
+log_softmax_rows.defvjp(_lsm_fwd, _lsm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Tiny CNN (E2E validation model)
+# ---------------------------------------------------------------------------
+
+
+def cnn_init(cfg, seed=0):
+    """He-initialized parameter pytree (pure numpy -> jnp)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+
+    def he(shape, fan_in):
+        return jnp.asarray(
+            rng.standard_normal(shape) * np.sqrt(2.0 / fan_in), jnp.float32)
+
+    c, c1, c2 = cfg["channels"], cfg["c1"], cfg["c2"]
+    feat = c2 * cfg["hidden_hw"] * cfg["hidden_hw"]
+    return {
+        "w1": he((c1, c, 3, 3), c * 9),
+        "g1": jnp.ones((c1,), jnp.float32),
+        "b1": jnp.zeros((c1,), jnp.float32),
+        "w2": he((c2, c1, 3, 3), c1 * 9),
+        "g2": jnp.ones((c2,), jnp.float32),
+        "b2": jnp.zeros((c2,), jnp.float32),
+        "wd": he((feat, cfg["classes"]), feat),
+    }
+
+
+PARAM_ORDER = ("w1", "g1", "b1", "w2", "g2", "b2", "wd")
+
+
+def cnn_logits(params, x, train=True):
+    """x: (B, C, 16, 16) -> logits (B, classes). All ops on L1 kernels."""
+    y = conv2d(x, params["w1"], (1, 1), (1, 1))
+    y = bn_train(y, params["g1"], params["b1"]) if train else \
+        _bn_infer_free(y, params["g1"], params["b1"])
+    y = relu(y)
+    y = maxpool2(y)
+    y = conv2d(y, params["w2"], (1, 1), (1, 1))
+    y = bn_train(y, params["g2"], params["b2"]) if train else \
+        _bn_infer_free(y, params["g2"], params["b2"])
+    y = relu(y)
+    y = maxpool2(y)
+    b = y.shape[0]
+    return dense(y.reshape(b, -1), params["wd"])
+
+
+def _bn_infer_free(y, g, b):
+    """Inference-mode BN without running stats (batch stats, no grad)."""
+    out, _, _ = batchnorm.spatial_fwd_train(y, g, b)
+    return out
+
+
+def cnn_loss(params, x, labels):
+    logits = cnn_logits(params, x, train=True)
+    lp = log_softmax_rows(logits)
+    b = x.shape[0]
+    nll = -jnp.mean(lp[jnp.arange(b), labels])
+    return nll
+
+
+def cnn_train_step(params, x, labels, lr):
+    """One SGD step; returns (new_params..., loss). AOT'd as cnn_train."""
+    loss, grads = jax.value_and_grad(cnn_loss)(params, x, labels)
+    new = {k: params[k] - lr * grads[k] for k in params}
+    return tuple(new[k] for k in PARAM_ORDER) + (loss,)
+
+
+def cnn_infer(params, x):
+    """Inference logits + predicted class. AOT'd as cnn_infer."""
+    logits = cnn_logits(params, x, train=False)
+    return logits, jnp.argmax(logits, axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus (shared with the Rust driver via seed convention)
+# ---------------------------------------------------------------------------
+
+
+def synth_batch(cfg, seed):
+    """Deterministic 3-class toy images: class-dependent oriented gratings
+    plus noise. Rust regenerates identical batches from the same seed via
+    the artifact `cnn_datagen` below (so the corpus itself is part of the
+    lowered graph — no Python at train time)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    b, c, s = cfg["batch"], cfg["channels"], cfg["image"]
+    labels = rng.integers(0, cfg["classes"], b)
+    xs = np.zeros((b, c, s, s), np.float32)
+    yy, xx = np.mgrid[0:s, 0:s].astype(np.float32) / s
+    for i, lab in enumerate(labels):
+        phase = rng.uniform(0, np.pi)
+        if lab == 0:
+            base = np.sin(2 * np.pi * 2 * xx + phase)
+        elif lab == 1:
+            base = np.sin(2 * np.pi * 2 * yy + phase)
+        else:
+            base = np.sin(2 * np.pi * 2 * (xx + yy) + phase)
+        xs[i] = base[None] + 0.3 * rng.standard_normal((c, s, s))
+    return jnp.asarray(xs), jnp.asarray(labels, jnp.int32)
+
+
+def cnn_datagen(seed_arr):
+    """Batch generator AS AN ARTIFACT: threefry bits -> images + labels.
+
+    seed_arr: (2,) uint32. Returns (x (B,C,S,S) f32, labels (B,) i32).
+    Keeps the training loop 100% Python-free: Rust feeds a step counter.
+    """
+    cfg = _CFG
+    b, c, s = cfg["batch"], cfg["channels"], cfg["image"]
+    key = jax.random.wrap_key_data(seed_arr.astype(jnp.uint32),
+                                   impl="threefry2x32")
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (b,), 0, cfg["classes"])
+    yy, xx = jnp.mgrid[0:s, 0:s].astype(jnp.float32) / s
+    phase = jax.random.uniform(k2, (b, 1, 1), minval=0.0, maxval=jnp.pi)
+    g0 = jnp.sin(2 * jnp.pi * 2 * xx[None] + phase)
+    g1 = jnp.sin(2 * jnp.pi * 2 * yy[None] + phase)
+    g2 = jnp.sin(2 * jnp.pi * 2 * (xx + yy)[None] + phase)
+    base = jnp.where((labels == 0)[:, None, None], g0,
+                     jnp.where((labels == 1)[:, None, None], g1, g2))
+    noise = 0.3 * jax.random.normal(k3, (b, c, s, s))
+    x = base[:, None, :, :] + noise
+    return x.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+from . import configs as _configs  # noqa: E402
+
+_CFG = _configs.CNN

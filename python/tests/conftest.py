@@ -1,0 +1,19 @@
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+# Allow `from compile.kernels import ...` when pytest is run from python/.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)
+
+
+def allclose(a, b, rtol=2e-4, atol=2e-4):
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    np.testing.assert_allclose(a, b, rtol=rtol, atol=atol)

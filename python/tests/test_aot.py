@@ -1,0 +1,117 @@
+"""AOT layer tests: HLO-text lowering contract + manifest consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs
+
+
+def test_to_hlo_text_keeps_large_constants():
+    # Regression for the constant({...}) elision bug: a 1000-element
+    # constant must survive lowering (it parses back as ZEROS otherwise).
+    # Use an opaque numpy payload (arange would lower to an iota instead).
+    payload = np.linspace(0.0, 999.0, 1000).astype(np.float32)
+    payload[500] = 1234.5
+    const = jnp.asarray(payload)
+    fn = lambda x: (x + const,)
+    text = aot.to_hlo_text(jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((1000,), jnp.float32)))
+    assert "constant({...})" not in text
+    assert "1234.5" in text  # an actual payload value
+
+
+def test_to_hlo_text_returns_tuple_root():
+    fn = lambda x: (x + 1.0, x * 2.0)
+    text = aot.to_hlo_text(jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((2,), jnp.float32)))
+    assert "ROOT" in text and "tuple" in text
+
+
+def test_fwd_algos_applicability():
+    # must mirror rust solvers::applicable (checked there against the
+    # manifest; here against the spec directly)
+    cc33 = configs.ConvConfig(4, 16, 28, 28, 32, 3, 3, p=1, q=1)
+    assert aot.fwd_algos(cc33) == ["gemm", "direct", "implicit", "winograd"]
+    cc11 = configs.ConvConfig(4, 16, 28, 28, 32, 1, 1)
+    assert aot.fwd_algos(cc11) == ["gemm", "direct", "implicit"]
+    cc55 = configs.ConvConfig(4, 4, 28, 28, 8, 5, 5, p=2, q=2)
+    assert "fft" in aot.fwd_algos(cc55)
+    cc33s2 = configs.ConvConfig(4, 16, 14, 14, 48, 3, 3, u=2, v=2, p=1, q=1)
+    assert "winograd" not in aot.fwd_algos(cc33s2)
+    assert aot.bwd_algos(cc33) == ["gemm", "direct", "winograd"]
+
+
+def test_conv_sig_format():
+    cc = configs.ConvConfig(4, 16, 28, 28, 32, 3, 3, p=1, q=1)
+    assert aot.conv_sig("fwd", "direct", cc, "f32") == \
+        "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32"
+    assert aot.conv_sig("wrw", "gemm", cc, "bf16", bk=8).endswith("-bf16-bk8")
+
+
+def test_config_labels_match_paper_format():
+    cc = configs.ConvConfig(4, 16, 28, 28, 32, 3, 3, p=1, q=1)
+    assert cc.label == "3-3-16-28-28-32-1-1"
+    assert cc.out_hw() == (28, 28)
+    cc2 = configs.ConvConfig(4, 3, 32, 32, 16, 7, 7, u=2, v=2, p=3, q=3)
+    assert cc2.out_hw() == (16, 16)
+
+
+MANIFEST_PATH = os.path.join(os.path.dirname(__file__), "..", "..",
+                             "artifacts", "manifest.json")
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST_PATH),
+                    reason="run `make artifacts` first")
+def test_manifest_consistency():
+    with open(MANIFEST_PATH) as f:
+        m = json.load(f)
+    arts = m["artifacts"]
+    assert len(arts) > 200
+    sigs = [a["sig"] for a in arts]
+    assert len(sigs) == len(set(sigs)), "duplicate signatures"
+    art_dir = os.path.dirname(MANIFEST_PATH)
+    for a in arts:
+        path = os.path.join(art_dir, a["file"])
+        assert os.path.exists(path), f"missing {a['file']}"
+        assert a["dtype"] in ("f32", "bf16", "f16", "i32", "u32", "i8")
+        for t in a["inputs"] + a["outputs"]:
+            assert all(d > 0 for d in t["shape"]), a["sig"]
+    # every fig6 panel populated
+    for panel in ["fig6a", "fig6b", "fig6c", "fig6d", "fig6e", "fig6f"]:
+        count = sum(1 for a in arts if panel in a["tags"])
+        assert count >= 12, f"{panel}: only {count} artifacts"
+    # the rnn ablation has fused+naive for every T
+    for t in configs.RNN_ABLATION_T:
+        tagged = [a for a in arts if "abl-rnn" in a["tags"]
+                  and a["params"].get("t") == t]
+        algos = {a["algo"] for a in tagged}
+        assert {"lstm_fused", "lstm_naive"} <= algos, (t, algos)
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST_PATH),
+                    reason="run `make artifacts` first")
+def test_manifest_conv_workspace_only_for_gemm_fft():
+    with open(MANIFEST_PATH) as f:
+        arts = json.load(f)["artifacts"]
+    for a in arts:
+        if a["primitive"] != "conv":
+            continue
+        if a["algo"] in ("gemm", "fft"):
+            assert a["workspace_bytes"] > 0, a["sig"]
+        else:
+            assert a["workspace_bytes"] == 0, a["sig"]
+
+
+def test_emitter_dedupes_and_merges_tags(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    fn = lambda x: (x * 2.0,)
+    sp = [aot.spec((2, 2))]
+    em.emit("dup-sig", fn, sp, primitive="test", tags=("a",))
+    em.emit("dup-sig", fn, sp, primitive="test", tags=("b",))
+    assert len(em.manifest) == 1
+    assert set(em.manifest[0]["tags"]) == {"a", "b"}

@@ -1,0 +1,238 @@
+"""L1 correctness: every convolution algorithm vs the pure-jnp oracle.
+
+This is the core correctness signal of the repo (DESIGN.md §6): the same
+kernels tested here are AOT-lowered into the artifacts the Rust library
+executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (direct, fft_conv, im2col_gemm, implicit_gemm,
+                             ref, winograd)
+from .conftest import allclose
+
+
+def mk(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+CONV_CASES = [
+    # (N, C, H, W, K, R, S, stride, pad, dilation)
+    (1, 1, 5, 5, 1, 3, 3, (1, 1), (1, 1), (1, 1)),
+    (2, 3, 10, 10, 5, 3, 3, (1, 1), (1, 1), (1, 1)),
+    (2, 3, 10, 10, 5, 3, 3, (2, 2), (1, 1), (1, 1)),
+    (1, 4, 9, 11, 6, 1, 1, (1, 1), (0, 0), (1, 1)),
+    (2, 8, 8, 8, 16, 1, 1, (2, 2), (0, 0), (1, 1)),
+    (1, 2, 12, 12, 3, 5, 5, (1, 1), (2, 2), (1, 1)),
+    (1, 3, 16, 16, 4, 7, 7, (1, 1), (3, 3), (1, 1)),
+    (1, 2, 14, 14, 3, 3, 3, (1, 1), (2, 2), (2, 2)),
+    (2, 3, 11, 9, 4, 3, 3, (2, 1), (1, 0), (1, 1)),
+    (1, 5, 6, 6, 7, 3, 3, (1, 1), (0, 0), (1, 1)),
+]
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+def test_direct_fwd(rng, case):
+    n, c, h, w, k, r, s, stride, pad, dil = case
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, s))
+    got = direct.conv2d_direct(x, wt, stride=stride, pad=pad, dilation=dil,
+                               block_k=4)
+    want = ref.conv2d_fwd(x, wt, stride=stride, pad=pad, dilation=dil)
+    allclose(got, want)
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+def test_direct_bwd_data(rng, case):
+    n, c, h, w, k, r, s, stride, pad, dil = case
+    out_shape = ref.conv_out_shape((n, c, h, w), (k, c, r, s),
+                                   stride=stride, pad=pad, dilation=dil)
+    dy = mk(rng, out_shape)
+    wt = mk(rng, (k, c, r, s))
+    got = direct.conv2d_direct_bwd_data(dy, wt, (n, c, h, w), stride=stride,
+                                        pad=pad, dilation=dil, block_k=4)
+    want = ref.conv2d_bwd_data(dy, wt, (n, c, h, w), stride=stride, pad=pad,
+                               dilation=dil)
+    allclose(got, want)
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+def test_direct_bwd_weights(rng, case):
+    n, c, h, w, k, r, s, stride, pad, dil = case
+    out_shape = ref.conv_out_shape((n, c, h, w), (k, c, r, s),
+                                   stride=stride, pad=pad, dilation=dil)
+    dy = mk(rng, out_shape)
+    x = mk(rng, (n, c, h, w))
+    got = direct.conv2d_direct_bwd_weights(dy, x, (k, c, r, s),
+                                           stride=stride, pad=pad,
+                                           dilation=dil, block_k=4)
+    want = ref.conv2d_bwd_weights(dy, x, (k, c, r, s), stride=stride,
+                                  pad=pad, dilation=dil)
+    allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+def test_im2col_gemm(rng, case):
+    n, c, h, w, k, r, s, stride, pad, dil = case
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, s))
+    got = im2col_gemm.conv2d_im2col(x, wt, stride=stride, pad=pad,
+                                    dilation=dil, bm=8, bn=8)
+    want = ref.conv2d_fwd(x, wt, stride=stride, pad=pad, dilation=dil)
+    allclose(got, want)
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+def test_implicit_gemm(rng, case):
+    n, c, h, w, k, r, s, stride, pad, dil = case
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, s))
+    got = implicit_gemm.conv2d_implicit_gemm(x, wt, stride=stride, pad=pad,
+                                             dilation=dil, block_k=4)
+    want = ref.conv2d_fwd(x, wt, stride=stride, pad=pad, dilation=dil)
+    allclose(got, want)
+
+
+WINO_CASES = [c for c in CONV_CASES
+              if c[5] == 3 and c[6] == 3 and c[7] == (1, 1) and c[9] == (1, 1)]
+
+
+@pytest.mark.parametrize("case", WINO_CASES)
+def test_winograd(rng, case):
+    n, c, h, w, k, r, s, stride, pad, dil = case
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, s))
+    got = winograd.conv2d_winograd(x, wt, pad=pad, bm=8, bn=8)
+    want = ref.conv2d_fwd(x, wt, stride=stride, pad=pad)
+    allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+FFT_CASES = [c for c in CONV_CASES if c[9] == (1, 1)]
+
+
+@pytest.mark.parametrize("case", FFT_CASES)
+def test_fft(rng, case):
+    n, c, h, w, k, r, s, stride, pad, dil = case
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, s))
+    got = fft_conv.conv2d_fft(x, wt, stride=stride, pad=pad)
+    want = ref.conv2d_fwd(x, wt, stride=stride, pad=pad)
+    allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_grouped_conv(rng):
+    x = mk(rng, (2, 6, 8, 8))
+    wt = mk(rng, (6, 3, 3, 3))
+    got = direct.conv2d_direct(x, wt, pad=(1, 1), groups=2, block_k=4)
+    want = ref.conv2d_fwd(x, wt, pad=(1, 1), groups=2)
+    allclose(got, want)
+
+
+def test_depthwise_conv(rng):
+    x = mk(rng, (2, 6, 8, 8))
+    wt = mk(rng, (6, 1, 3, 3))
+    got = direct.conv2d_direct(x, wt, pad=(1, 1), groups=6, block_k=4)
+    want = ref.conv2d_fwd(x, wt, pad=(1, 1), groups=6)
+    allclose(got, want)
+
+
+def test_transpose_conv_shape_and_value(rng):
+    # transpose conv == bwd-data of the matching forward conv
+    x = mk(rng, (1, 4, 5, 5))
+    wt = mk(rng, (4, 3, 3, 3))  # K=4 (transpose-input channels), C=3 out
+    y = ref.conv2d_transpose(x, wt, stride=(2, 2), pad=(1, 1))
+    assert y.shape == (1, 3, 9, 9)
+    got = direct.conv2d_direct_bwd_data(x, wt, (1, 3, 9, 9), stride=(2, 2),
+                                        pad=(1, 1), block_k=4)
+    allclose(got, y)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_direct_low_precision(rng, dtype):
+    x = mk(rng, (1, 3, 8, 8), dtype)
+    wt = mk(rng, (4, 3, 3, 3), dtype)
+    got = direct.conv2d_direct(x, wt, pad=(1, 1), block_k=4)
+    want = ref.conv2d_fwd(x, wt, pad=(1, 1))
+    assert got.dtype == dtype
+    allclose(got, want, rtol=0.05, atol=0.05)
+
+
+def test_direct_int8_upcast(rng):
+    x = jnp.asarray(rng.integers(-4, 4, (1, 3, 8, 8)), jnp.int8)
+    wt = jnp.asarray(rng.integers(-4, 4, (4, 3, 3, 3)), jnp.int8)
+    got = direct.conv2d_direct(x.astype(jnp.float32), wt.astype(jnp.float32),
+                               pad=(1, 1), block_k=4)
+    want = ref.conv2d_fwd(x.astype(jnp.float32), wt.astype(jnp.float32),
+                          pad=(1, 1))
+    allclose(got, want)
+    assert np.all(np.asarray(got) == np.round(np.asarray(got)))
+
+
+# -- hypothesis sweep over the conv parameter space --------------------------
+
+conv_params = st.tuples(
+    st.integers(1, 2),            # N
+    st.integers(1, 4),            # C
+    st.integers(5, 12),           # H
+    st.integers(5, 12),           # W
+    st.integers(1, 6),            # K
+    st.sampled_from([1, 3, 5]),   # R=S
+    st.sampled_from([1, 2]),      # stride
+    st.sampled_from([0, 1, 2]),   # pad
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(conv_params)
+def test_direct_hypothesis(params):
+    n, c, h, w, k, r, stride, pad = params
+    if h + 2 * pad < r or w + 2 * pad < r:
+        return
+    rng = np.random.default_rng(hash(params) % 2**32)
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, r))
+    got = direct.conv2d_direct(x, wt, stride=(stride, stride),
+                               pad=(pad, pad), block_k=4)
+    want = ref.conv2d_fwd(x, wt, stride=(stride, stride), pad=(pad, pad))
+    allclose(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(conv_params)
+def test_implicit_gemm_hypothesis(params):
+    n, c, h, w, k, r, stride, pad = params
+    if h + 2 * pad < r or w + 2 * pad < r:
+        return
+    rng = np.random.default_rng(hash(params) % 2**32)
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, r))
+    got = implicit_gemm.conv2d_implicit_gemm(
+        x, wt, stride=(stride, stride), pad=(pad, pad), block_k=4)
+    want = ref.conv2d_fwd(x, wt, stride=(stride, stride), pad=(pad, pad))
+    allclose(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 2), st.integers(1, 3), st.integers(6, 14),
+       st.integers(6, 14), st.integers(1, 5), st.sampled_from([0, 1]))
+def test_winograd_hypothesis(n, c, h, w, k, pad):
+    rng = np.random.default_rng(n * 1000 + c * 100 + h * 10 + w + k + pad)
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, 3, 3))
+    got = winograd.conv2d_winograd(x, wt, pad=(pad, pad), bm=8, bn=8)
+    want = ref.conv2d_fwd(x, wt, pad=(pad, pad))
+    allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_out_shape_formula():
+    for case in CONV_CASES:
+        n, c, h, w, k, r, s, stride, pad, dil = case
+        shp = ref.conv_out_shape((n, c, h, w), (k, c, r, s), stride=stride,
+                                 pad=pad, dilation=dil)
+        rng = np.random.default_rng(0)
+        y = ref.conv2d_fwd(mk(rng, (n, c, h, w)), mk(rng, (k, c, r, s)),
+                           stride=stride, pad=pad, dilation=dil)
+        assert y.shape == shp

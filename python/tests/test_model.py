@@ -1,0 +1,128 @@
+"""L2 correctness: the differentiable layer wrappers route fwd AND bwd
+through library kernels and must agree with plain-JAX autodiff; the CNN
+train step must learn."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.kernels import ref
+from .conftest import allclose
+
+
+def mk(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+def test_conv2d_custom_vjp_matches_autodiff(rng):
+    x = mk(rng, (2, 3, 10, 10))
+    w = mk(rng, (4, 3, 3, 3))
+    dy = mk(rng, (2, 4, 10, 10))
+
+    def lib(x, w):
+        return jnp.sum(model.conv2d(x, w, (1, 1), (1, 1)) * dy)
+
+    def plain(x, w):
+        return jnp.sum(ref.conv2d_fwd(x, w, stride=(1, 1), pad=(1, 1)) * dy)
+
+    gx1, gw1 = jax.grad(lib, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(plain, argnums=(0, 1))(x, w)
+    allclose(gx1, gx2, rtol=1e-3, atol=1e-3)
+    allclose(gw1, gw2, rtol=1e-3, atol=1e-3)
+
+
+def test_bn_train_custom_vjp_matches_autodiff(rng):
+    x = mk(rng, (4, 3, 6, 6))
+    g = mk(rng, (3,))
+    b = mk(rng, (3,))
+    dy = mk(rng, (4, 3, 6, 6))
+
+    def lib(x, g, b):
+        return jnp.sum(model.bn_train(x, g, b) * dy)
+
+    def plain(x, g, b):
+        y, _, _ = ref.batchnorm_spatial_fwd_train(x, g, b)
+        return jnp.sum(y * dy)
+
+    for i in range(3):
+        gl = jax.grad(lib, argnums=i)(x, g, b)
+        gp = jax.grad(plain, argnums=i)(x, g, b)
+        allclose(gl, gp, rtol=2e-3, atol=2e-3)
+
+
+def test_maxpool_and_relu_vjp(rng):
+    # unique values avoid max ties
+    x = jnp.asarray(rng.permutation(2 * 3 * 8 * 8).reshape(2, 3, 8, 8),
+                    jnp.float32) / 10.0
+    dy = mk(rng, (2, 3, 4, 4))
+
+    def lib(x):
+        return jnp.sum(model.maxpool2(model.relu(x - 5.0)) * dy)
+
+    def plain(x):
+        return jnp.sum(ref.pool2d_fwd(jnp.maximum(x - 5.0, 0.0)) * dy)
+
+    allclose(jax.grad(lib)(x), jax.grad(plain)(x), rtol=1e-3, atol=1e-3)
+
+
+def test_dense_and_logsoftmax_vjp(rng):
+    x = mk(rng, (4, 6))
+    w = mk(rng, (6, 3))
+    labels = jnp.array([0, 2, 1, 0])
+
+    def lib(x, w):
+        lp = model.log_softmax_rows(model.dense(x, w))
+        return -jnp.mean(lp[jnp.arange(4), labels])
+
+    def plain(x, w):
+        lp = jax.nn.log_softmax(x @ w, axis=1)
+        return -jnp.mean(lp[jnp.arange(4), labels])
+
+    for i in (0, 1):
+        allclose(jax.grad(lib, argnums=i)(x, w),
+                 jax.grad(plain, argnums=i)(x, w), rtol=1e-3, atol=1e-3)
+
+
+def test_train_step_reduces_loss():
+    cfg = configs.CNN
+    params = model.cnn_init(cfg, seed=0)
+    # jit once: the AOT path compiles this same graph via PJRT
+    step_fn = jax.jit(lambda p, x, lab: model.cnn_train_step(
+        p, x, lab, cfg["lr"]))
+    losses = []
+    for step in range(12):
+        x, lab = model.synth_batch(cfg, step)
+        out = step_fn(params, x, lab)
+        params = dict(zip(model.PARAM_ORDER, out[:-1]))
+        losses.append(float(out[-1]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) * 0.8, losses
+
+
+def test_datagen_deterministic_and_labeled():
+    seed = jnp.array([7, 9], jnp.uint32)
+    x1, l1 = model.cnn_datagen(seed)
+    x2, l2 = model.cnn_datagen(seed)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    x3, l3 = model.cnn_datagen(jnp.array([8, 9], jnp.uint32))
+    assert not np.array_equal(np.asarray(l1), np.asarray(l3)) or \
+        not np.array_equal(np.asarray(x1), np.asarray(x3))
+    assert set(np.asarray(l1)) <= {0, 1, 2}
+    assert x1.shape == (configs.CNN["batch"], configs.CNN["channels"],
+                        configs.CNN["image"], configs.CNN["image"])
+
+
+def test_infer_outputs_argmax():
+    cfg = configs.CNN
+    params = model.cnn_init(cfg, seed=1)
+    x, _ = model.synth_batch(cfg, 3)
+    logits, pred = model.cnn_infer(params, x)
+    np.testing.assert_array_equal(np.asarray(pred),
+                                  np.argmax(np.asarray(logits), axis=1))
+
+
+@pytest.mark.parametrize("key", list(configs.CNN.keys()))
+def test_cnn_config_complete(key):
+    assert configs.CNN[key] is not None

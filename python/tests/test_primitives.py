@@ -1,0 +1,307 @@
+"""L1 correctness: batchnorm, pooling, softmax, activations, LRN,
+tensor-ops kernels vs the jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (activations, batchnorm, lrn, pooling, ref,
+                             softmax, tensor_ops)
+from .conftest import allclose
+
+
+def mk(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# -- batch normalization -----------------------------------------------------
+
+BN_SHAPES = [(2, 3, 4, 4), (1, 8, 6, 5), (4, 2, 7, 7), (3, 1, 3, 9)]
+
+
+@pytest.mark.parametrize("shape", BN_SHAPES)
+def test_bn_spatial_train(rng, shape):
+    x = mk(rng, shape)
+    g = mk(rng, (shape[1],))
+    b = mk(rng, (shape[1],))
+    y, mu, var = batchnorm.spatial_fwd_train(x, g, b)
+    yr, mur, varr = ref.batchnorm_spatial_fwd_train(x, g, b)
+    allclose(y, yr)
+    allclose(mu, mur)
+    allclose(var, varr)
+
+
+@pytest.mark.parametrize("shape", BN_SHAPES)
+def test_bn_spatial_infer(rng, shape):
+    x = mk(rng, shape)
+    c = shape[1]
+    g, b, m = mk(rng, (c,)), mk(rng, (c,)), mk(rng, (c,))
+    v = jnp.abs(mk(rng, (c,))) + 0.1
+    y = batchnorm.spatial_fwd_infer(x, g, b, m, v)
+    yr = ref.batchnorm_spatial_fwd_infer(x, g, b, m, v)
+    allclose(y, yr)
+
+
+@pytest.mark.parametrize("shape", BN_SHAPES)
+def test_bn_spatial_bwd(rng, shape):
+    x = mk(rng, shape)
+    dy = mk(rng, shape)
+    g = mk(rng, (shape[1],))
+    b = mk(rng, (shape[1],))
+    _, mu, var = ref.batchnorm_spatial_fwd_train(x, g, b)
+    dx, dg, db = batchnorm.spatial_bwd(x, dy, g, mu, var)
+    dxr, dgr, dbr = ref.batchnorm_spatial_bwd(x, dy, g, mu, var)
+    allclose(dx, dxr, rtol=1e-3, atol=1e-3)
+    allclose(dg, dgr, rtol=1e-3, atol=1e-3)
+    allclose(db, dbr, rtol=1e-3, atol=1e-3)
+
+
+def test_bn_spatial_bwd_matches_autodiff(rng):
+    """spatial_bwd must equal jax.grad through the reference forward."""
+    import jax
+
+    x = mk(rng, (3, 4, 5, 5))
+    g = mk(rng, (4,))
+    b = mk(rng, (4,))
+    dy = mk(rng, (3, 4, 5, 5))
+
+    def f(x, g, b):
+        y, _, _ = ref.batchnorm_spatial_fwd_train(x, g, b)
+        return jnp.sum(y * dy)
+
+    dxr, dgr, dbr = jax.grad(f, argnums=(0, 1, 2))(x, g, b)
+    _, mu, var = ref.batchnorm_spatial_fwd_train(x, g, b)
+    dx, dg, db = batchnorm.spatial_bwd(x, dy, g, mu, var)
+    allclose(dx, dxr, rtol=1e-3, atol=1e-3)
+    allclose(dg, dgr, rtol=1e-3, atol=1e-3)
+    allclose(db, dbr, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", BN_SHAPES)
+def test_bn_peract_train(rng, shape):
+    x = mk(rng, shape)
+    chw = shape[1:]
+    g, b = mk(rng, chw), mk(rng, chw)
+    y, mu, var = batchnorm.peract_fwd_train(x, g, b)
+    yr, mur, varr = ref.batchnorm_peract_fwd_train(x, g, b)
+    allclose(y, yr)
+    allclose(mu, mur)
+    allclose(var, varr)
+
+
+@pytest.mark.parametrize("shape", BN_SHAPES)
+def test_bn_peract_infer(rng, shape):
+    x = mk(rng, shape)
+    chw = shape[1:]
+    g, b, m = mk(rng, chw), mk(rng, chw), mk(rng, chw)
+    v = jnp.abs(mk(rng, chw)) + 0.1
+    y = batchnorm.peract_fwd_infer(x, g, b, m, v)
+    yr = ref.batchnorm_peract_fwd_infer(x, g, b, m, v)
+    allclose(y, yr)
+
+
+@pytest.mark.parametrize("shape", BN_SHAPES)
+def test_bn_peract_bwd(rng, shape):
+    x = mk(rng, shape)
+    dy = mk(rng, shape)
+    chw = shape[1:]
+    g, b = mk(rng, chw), mk(rng, chw)
+    _, mu, var = ref.batchnorm_peract_fwd_train(x, g, b)
+    dx, dg, db = batchnorm.peract_bwd(x, dy, g, mu, var)
+    dxr, dgr, dbr = ref.batchnorm_peract_bwd(x, dy, g, mu, var)
+    allclose(dx, dxr, rtol=1e-3, atol=1e-3)
+    allclose(dg, dgr, rtol=1e-3, atol=1e-3)
+    allclose(db, dbr, rtol=1e-3, atol=1e-3)
+
+
+def test_bn_peract_bwd_matches_autodiff(rng):
+    import jax
+
+    x = mk(rng, (4, 2, 3, 3))
+    g, b = mk(rng, (2, 3, 3)), mk(rng, (2, 3, 3))
+    dy = mk(rng, (4, 2, 3, 3))
+
+    def f(x, g, b):
+        y, _, _ = ref.batchnorm_peract_fwd_train(x, g, b)
+        return jnp.sum(y * dy)
+
+    dxr, dgr, dbr = jax.grad(f, argnums=(0, 1, 2))(x, g, b)
+    _, mu, var = ref.batchnorm_peract_fwd_train(x, g, b)
+    dx, dg, db = batchnorm.peract_bwd(x, dy, g, mu, var)
+    allclose(dx, dxr, rtol=1e-3, atol=1e-3)
+    allclose(dg, dgr, rtol=1e-3, atol=1e-3)
+    allclose(db, dbr, rtol=1e-3, atol=1e-3)
+
+
+def test_direct_int8_out_dtype(rng):
+    from compile.kernels import direct
+
+    x = jnp.asarray(rng.integers(-4, 4, (1, 3, 8, 8)), jnp.int8)
+    w = jnp.asarray(rng.integers(-4, 4, (4, 3, 3, 3)), jnp.int8)
+    y = direct.conv2d_direct(x, w, pad=(1, 1), block_k=4,
+                             out_dtype=jnp.float32)
+    yr = ref.conv2d_fwd(x.astype(jnp.float32), w.astype(jnp.float32),
+                        pad=(1, 1))
+    assert y.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_bn_bf16(rng):
+    x = mk(rng, (2, 3, 4, 4), jnp.bfloat16)
+    g, b = mk(rng, (3,)), mk(rng, (3,))
+    y, _, _ = batchnorm.spatial_fwd_train(x, g, b)
+    yr, _, _ = ref.batchnorm_spatial_fwd_train(x, g, b)
+    assert y.dtype == jnp.bfloat16
+    allclose(y, yr, rtol=0.05, atol=0.05)
+
+
+# -- pooling ------------------------------------------------------------------
+
+POOL_CASES = [
+    ((2, 3, 8, 8), (2, 2), (2, 2), (0, 0)),
+    ((1, 2, 9, 9), (3, 3), (2, 2), (0, 0)),
+    ((2, 1, 10, 10), (3, 3), (1, 1), (1, 1)),
+    ((1, 4, 7, 5), (2, 3), (2, 1), (0, 1)),
+]
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+@pytest.mark.parametrize("case", POOL_CASES)
+def test_pool_fwd(rng, mode, case):
+    shape, win, stride, pad = case
+    x = mk(rng, shape)
+    got = pooling.pool2d_fwd(x, window=win, stride=stride, pad=pad, mode=mode)
+    want = ref.pool2d_fwd(x, window=win, stride=stride, pad=pad, mode=mode)
+    allclose(got, want)
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+@pytest.mark.parametrize("case", POOL_CASES)
+def test_pool_bwd(rng, mode, case):
+    shape, win, stride, pad = case
+    # unique values -> no max ties -> equality-scatter matches vjp oracle
+    n = int(np.prod(shape))
+    x = jnp.asarray(rng.permutation(n).reshape(shape), jnp.float32)
+    y = pooling.pool2d_fwd(x, window=win, stride=stride, pad=pad, mode=mode)
+    dy = mk(rng, y.shape)
+    got = pooling.pool2d_bwd(x, y, dy, window=win, stride=stride, pad=pad,
+                             mode=mode)
+    want = ref.pool2d_bwd(x, dy, window=win, stride=stride, pad=pad,
+                          mode=mode)
+    allclose(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2), st.integers(1, 3), st.integers(4, 10),
+       st.integers(4, 10), st.sampled_from([2, 3]), st.sampled_from([1, 2]),
+       st.booleans())
+def test_pool_hypothesis(n, c, h, w, win, stride, is_max):
+    if h < win or w < win:
+        return
+    rng = np.random.default_rng(n + c * 7 + h * 31 + w * 101 + win)
+    x = mk(rng, (n, c, h, w))
+    mode = "max" if is_max else "avg"
+    got = pooling.pool2d_fwd(x, window=(win, win), stride=(stride, stride),
+                             mode=mode)
+    want = ref.pool2d_fwd(x, window=(win, win), stride=(stride, stride),
+                          mode=mode)
+    allclose(got, want)
+
+
+# -- softmax ------------------------------------------------------------------
+
+SM_SHAPES = [(2, 5, 3, 3), (1, 10, 1, 1), (3, 4, 2, 5)]
+
+
+@pytest.mark.parametrize("log", [False, True])
+@pytest.mark.parametrize("shape", SM_SHAPES)
+def test_softmax_fwd(rng, log, shape):
+    x = mk(rng, shape)
+    got = softmax.softmax_fwd(x, log=log)
+    want = ref.softmax_fwd(x, log=log)
+    allclose(got, want)
+
+
+@pytest.mark.parametrize("log", [False, True])
+@pytest.mark.parametrize("shape", SM_SHAPES)
+def test_softmax_bwd(rng, log, shape):
+    x = mk(rng, shape)
+    y = ref.softmax_fwd(x, log=log)
+    dy = mk(rng, shape)
+    got = softmax.softmax_bwd(y, dy, log=log)
+    want = ref.softmax_bwd(y, dy, log=log)
+    allclose(got, want)
+
+
+def test_softmax_rows_sum_to_one(rng):
+    x = mk(rng, (2, 7, 3, 3)) * 10
+    y = softmax.softmax_fwd(x)
+    sums = np.asarray(jnp.sum(y, axis=1))
+    np.testing.assert_allclose(sums, np.ones_like(sums), rtol=1e-5)
+
+
+def test_softmax_stability_large_logits(rng):
+    x = mk(rng, (1, 5, 2, 2)) * 1000
+    y = softmax.softmax_fwd(x)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+# -- activations --------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", activations.MODES)
+def test_activation_fwd(rng, mode):
+    x = mk(rng, (2, 3, 5, 7))
+    alpha = {"leaky_relu": 0.01, "elu": 1.0, "clipped_relu": 6.0}.get(mode, 0.0)
+    got = activations.activation_fwd(x, mode, alpha, block=64)
+    want = ref.activation_fwd(x, mode, alpha)
+    allclose(got, want)
+
+
+@pytest.mark.parametrize("mode", [m for m in activations.MODES if m != "abs"])
+def test_activation_bwd(rng, mode):
+    # abs has a kink at 0 where sign() disagrees with vjp; skip exact-0 case
+    x = mk(rng, (2, 3, 5, 7)) + 0.01
+    dy = mk(rng, (2, 3, 5, 7))
+    alpha = {"leaky_relu": 0.01, "elu": 1.0, "clipped_relu": 6.0}.get(mode, 0.0)
+    got = activations.activation_bwd(x, dy, mode, alpha, block=64)
+    want = ref.activation_bwd(x, dy, mode, alpha)
+    allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_activation_nondivisible_block(rng):
+    x = mk(rng, (1, 1, 3, 11))   # 33 elements, block 8
+    got = activations.activation_fwd(x, "relu", block=8)
+    allclose(got, ref.activation_fwd(x, "relu"))
+
+
+# -- LRN ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,n", [((2, 8, 4, 4), 5), ((1, 3, 5, 5), 3),
+                                     ((2, 16, 3, 3), 5)])
+def test_lrn(rng, shape, n):
+    x = mk(rng, shape)
+    got = lrn.lrn_fwd(x, n=n)
+    want = ref.lrn_fwd(x, n=n)
+    allclose(got, want)
+
+
+# -- tensor ops ----------------------------------------------------------------
+
+@pytest.mark.parametrize("op", tensor_ops.OPS)
+def test_op_tensor(rng, op):
+    a = mk(rng, (2, 3, 4, 4))
+    b = mk(rng, (2, 3, 4, 4))
+    c = mk(rng, (2, 3, 4, 4))
+    got = tensor_ops.op_tensor(a, b, op=op, alpha1=1.5, alpha2=0.5,
+                               beta=0.25, c=c, block=32)
+    want = ref.op_tensor(a, b, alpha1=1.5, alpha2=0.5, beta=0.25, c=c, op=op)
+    allclose(got, want)
+
+
+def test_op_tensor_bias(rng):
+    a = mk(rng, (2, 5, 4, 4))
+    bias = mk(rng, (5,))
+    got = tensor_ops.op_tensor_bias(a, bias)
+    want = a + bias.reshape(1, -1, 1, 1)
+    allclose(got, want)

@@ -1,0 +1,218 @@
+"""L1/L2 correctness: RNN fused-GEMM assemblies, CTC, and fusion kernels."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ctc, fused, ref, rnn_cells
+from .conftest import allclose
+
+
+def mk(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# -- RNN ----------------------------------------------------------------------
+
+RNN_DIMS = [(3, 2, 4, 5), (5, 1, 3, 3), (2, 4, 6, 2)]  # (T, B, X, H)
+
+
+@pytest.mark.parametrize("dims", RNN_DIMS)
+def test_lstm_pointwise(rng, dims):
+    _, b, _, h = dims
+    s = mk(rng, (b, 4 * h))
+    c = mk(rng, (b, h))
+    ht, ct = rnn_cells.lstm_pointwise(s, c)
+    # reference: eqs 5-10 on the pre-activations
+    si, sf, so, sc = jnp.split(s, 4, axis=-1)
+    import jax
+    i, f, o = jax.nn.sigmoid(si), jax.nn.sigmoid(sf), jax.nn.sigmoid(so)
+    cr = f * c + i * jnp.tanh(sc)
+    hr = o * jnp.tanh(cr)
+    allclose(ht, hr)
+    allclose(ct, cr)
+
+
+@pytest.mark.parametrize("dims", RNN_DIMS)
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_lstm_fused_vs_ref(rng, dims, with_bias):
+    t, b, x, h = dims
+    xs = mk(rng, (t, b, x), scale=0.5)
+    h0, c0 = mk(rng, (b, h)), mk(rng, (b, h))
+    W, R = mk(rng, (4 * h, x), scale=0.5), mk(rng, (4 * h, h), scale=0.5)
+    bias = mk(rng, (4 * h,)) if with_bias else None
+    got = rnn_cells.lstm_seq_fused(xs, h0, c0, W, R, bias)
+    want = ref.lstm_seq_ref(xs, h0, c0, W, R, bias)
+    allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("dims", RNN_DIMS)
+def test_lstm_naive_vs_fused(rng, dims):
+    """The ablation baseline must agree with the fused path bit-for-trend."""
+    t, b, x, h = dims
+    xs = mk(rng, (t, b, x), scale=0.5)
+    h0, c0 = mk(rng, (b, h)), mk(rng, (b, h))
+    W, R = mk(rng, (4 * h, x), scale=0.5), mk(rng, (4 * h, h), scale=0.5)
+    a = rnn_cells.lstm_seq_fused(xs, h0, c0, W, R)
+    b_ = rnn_cells.lstm_seq_naive(xs, h0, c0, W, R)
+    allclose(a, b_, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("dims", RNN_DIMS)
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_gru_fused_vs_ref(rng, dims, with_bias):
+    t, b, x, h = dims
+    xs = mk(rng, (t, b, x), scale=0.5)
+    h0 = mk(rng, (b, h))
+    W, R = mk(rng, (3 * h, x), scale=0.5), mk(rng, (3 * h, h), scale=0.5)
+    bias = (mk(rng, (3 * h,)), mk(rng, (3 * h,))) if with_bias else None
+    got = rnn_cells.gru_seq_fused(xs, h0, W, R, bias)
+    want = ref.gru_seq_ref(xs, h0, W, R, bias)
+    allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("act", ["tanh", "relu"])
+@pytest.mark.parametrize("dims", RNN_DIMS)
+def test_vanilla_fused_vs_ref(rng, act, dims):
+    t, b, x, h = dims
+    xs = mk(rng, (t, b, x), scale=0.5)
+    h0 = mk(rng, (b, h))
+    W, R = mk(rng, (h, x), scale=0.5), mk(rng, (h, h), scale=0.5)
+    got = rnn_cells.vanilla_seq_fused(xs, h0, W, R, act=act)
+    want = ref.vanilla_seq_ref(xs, h0, W, R, act=act)
+    allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_bidirectional_lstm(rng):
+    t, b, x, h = 4, 2, 3, 5
+    xs = mk(rng, (t, b, x), scale=0.5)
+    h0, c0 = mk(rng, (b, h)), mk(rng, (b, h))
+    W, R = mk(rng, (4 * h, x), scale=0.5), mk(rng, (4 * h, h), scale=0.5)
+    y = rnn_cells.bidirectional(rnn_cells.lstm_seq_fused, xs, h0, c0, W, R)
+    assert y.shape == (t, b, 2 * h)
+    fwd = ref.lstm_seq_ref(xs, h0, c0, W, R)
+    bwd = ref.lstm_seq_ref(jnp.flip(xs, 0), h0, c0, W, R)
+    allclose(y[..., :h], fwd, rtol=1e-3, atol=1e-3)
+    allclose(y[..., h:], jnp.flip(bwd, 0), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 3), st.integers(1, 4),
+       st.integers(1, 4))
+def test_lstm_hypothesis(t, b, x, h):
+    rng = np.random.default_rng(t * 997 + b * 101 + x * 13 + h)
+    xs = mk(rng, (t, b, x), scale=0.5)
+    h0, c0 = mk(rng, (b, h)), mk(rng, (b, h))
+    W, R = mk(rng, (4 * h, x), scale=0.5), mk(rng, (4 * h, h), scale=0.5)
+    got = rnn_cells.lstm_seq_fused(xs, h0, c0, W, R)
+    want = ref.lstm_seq_ref(xs, h0, c0, W, R)
+    allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# -- CTC ------------------------------------------------------------------------
+
+def _log_probs(rng, t, v):
+    x = rng.standard_normal((t, v)).astype(np.float32)
+    x = x - np.log(np.sum(np.exp(x), axis=1, keepdims=True))
+    return jnp.asarray(x)
+
+
+@pytest.mark.parametrize("t,v,label", [(3, 3, [1]), (4, 3, [1, 2]),
+                                       (5, 4, [2, 2]), (4, 2, [1, 1]),
+                                       (5, 3, [1, 2, 1])])
+def test_ctc_vs_brute(rng, t, v, label):
+    lp = _log_probs(rng, t, v)
+    want = ref.ctc_loss_brute(lp, jnp.array(label), t, len(label))
+    got_ref = ref.ctc_loss_ref(lp, jnp.array(label), t, len(label))
+    batched = ctc.ctc_loss(lp[None], jnp.array([label + [0] * (4 - len(label))])[:, :4],
+                           jnp.array([t]), jnp.array([len(label)]))
+    allclose(got_ref, want, rtol=1e-3, atol=1e-3)
+    allclose(batched[0], want, rtol=1e-3, atol=1e-3)
+
+
+def test_ctc_batch_mixed_lengths(rng):
+    t, v = 6, 4
+    lp = jnp.stack([_log_probs(rng, t, v) for _ in range(3)])
+    labels = jnp.array([[1, 2, 0], [3, 0, 0], [1, 1, 2]])
+    input_lens = jnp.array([6, 4, 5])
+    label_lens = jnp.array([2, 1, 3])
+    got = ctc.ctc_loss(lp, labels, input_lens, label_lens)
+    for i in range(3):
+        want = ref.ctc_loss_ref(lp[i], labels[i], int(input_lens[i]),
+                                int(label_lens[i]))
+        allclose(got[i], want, rtol=1e-3, atol=1e-3)
+
+
+def test_ctc_impossible_label_is_inf_like(rng):
+    # label longer than input -> probability 0 -> loss very large
+    lp = _log_probs(rng, 2, 3)
+    got = ctc.ctc_loss(lp[None], jnp.array([[1, 2, 1]]), jnp.array([2]),
+                       jnp.array([3]))
+    assert float(got[0]) > 1e20
+
+
+# -- fusion kernels --------------------------------------------------------------
+
+CBA_CASES = [
+    # (N, C, H, W, K, R, stride, pad, mode)
+    (1, 3, 8, 8, 4, 3, (1, 1), (1, 1), "relu"),
+    (2, 4, 10, 10, 8, 1, (1, 1), (0, 0), "leaky_relu"),
+    (1, 2, 12, 12, 4, 5, (2, 2), (2, 2), "tanh"),
+    (2, 3, 9, 9, 5, 3, (2, 2), (1, 1), "sigmoid"),
+]
+
+
+@pytest.mark.parametrize("case", CBA_CASES)
+def test_fused_cba(rng, case):
+    n, c, h, w, k, r, stride, pad, mode = case
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, r))
+    bias = mk(rng, (k,))
+    alpha = 0.01 if mode == "leaky_relu" else 0.0
+    got = fused.conv_bias_act(x, wt, bias, stride=stride, pad=pad,
+                              mode=mode, alpha=alpha, block_k=4)
+    want = ref.fused_conv_bias_act_ref(x, wt, bias, stride=stride, pad=pad,
+                                       mode=mode, alpha=alpha)
+    allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 6, 6), (1, 8, 3, 3)])
+@pytest.mark.parametrize("mode", ["relu", "tanh"])
+def test_fused_bn_act(rng, shape, mode):
+    x = mk(rng, shape)
+    c = shape[1]
+    g, b, m = mk(rng, (c,)), mk(rng, (c,)), mk(rng, (c,))
+    v = jnp.abs(mk(rng, (c,))) + 0.1
+    got = fused.bn_act(x, g, b, m, v, mode=mode)
+    want = ref.fused_bn_act_ref(x, g, b, m, v, mode=mode)
+    allclose(got, want)
+
+
+@pytest.mark.parametrize("case", CBA_CASES[:2])
+def test_fused_cbna(rng, case):
+    n, c, h, w, k, r, stride, pad, mode = case
+    x = mk(rng, (n, c, h, w))
+    wt = mk(rng, (k, c, r, r))
+    bias = mk(rng, (k,))
+    g, b, m = mk(rng, (k,)), mk(rng, (k,)), mk(rng, (k,))
+    v = jnp.abs(mk(rng, (k,))) + 0.1
+    got = fused.conv_bias_bn_act(x, wt, bias, g, b, m, v, stride=stride,
+                                 pad=pad, mode="relu", block_k=4)
+    want = ref.fused_conv_bias_bn_act_ref(x, wt, bias, g, b, m, v,
+                                          stride=stride, pad=pad, mode="relu")
+    allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_fused_cba_equals_separate_pipeline(rng):
+    """Fused result == conv kernel, then bias kernel, then act kernel."""
+    from compile.kernels import activations, direct, tensor_ops
+
+    x = mk(rng, (1, 3, 8, 8))
+    wt = mk(rng, (4, 3, 3, 3))
+    bias = mk(rng, (4,))
+    y1 = direct.conv2d_direct(x, wt, pad=(1, 1), block_k=4)
+    y2 = tensor_ops.op_tensor_bias(y1, bias)
+    y3 = activations.activation_fwd(y2, "relu")
+    got = fused.conv_bias_act(x, wt, bias, pad=(1, 1), mode="relu", block_k=4)
+    allclose(got, y3, rtol=5e-4, atol=5e-4)

@@ -1,0 +1,129 @@
+//! Figure 6 reproduction: "Relative performance improvement for different
+//! convolution configurations as compared to im2col+GEMM".
+//!
+//! Six panels — {1×1, non-1×1} × {forward, backward-data,
+//! backward-weights}. For each config the harness times every algorithm's
+//! artifact on this host (measured series) and evaluates the GCN roofline
+//! model (predicted series — the substitution for the paper's Radeon
+//! Instinct testbed, DESIGN.md §Substitutions #1). The paper's y-axis is
+//! log10(speedup vs im2col+GEMM); we print both the best-algo speedup and
+//! its log10, plus per-algorithm times.
+//!
+//! Run: `cargo bench --bench fig6_conv` (optionally `-- fig6a` etc.)
+
+use miopen_rs::bench::{section_enabled, time_fn, BenchConfig, Table};
+use miopen_rs::handle::Handle;
+use miopen_rs::runtime::HostTensor;
+use miopen_rs::util::rng::SplitMix64;
+use miopen_rs::workload::fig6_panel;
+
+fn main() {
+    if !miopen_rs::testutil::artifacts_available() {
+        eprintln!("fig6_conv: artifacts not built, run `make artifacts`");
+        return;
+    }
+    let handle = Handle::new(Default::default()).expect("handle");
+    let cfg = BenchConfig::from_env();
+
+    let panels = [
+        ("fig6a", "Figure 6a: forward, 1x1 filters"),
+        ("fig6b", "Figure 6b: forward, non-1x1 filters"),
+        ("fig6c", "Figure 6c: backward-data, 1x1 filters"),
+        ("fig6d", "Figure 6d: backward-data, non-1x1 filters"),
+        ("fig6e", "Figure 6e: backward-weights, 1x1 filters"),
+        ("fig6f", "Figure 6f: backward-weights, non-1x1 filters"),
+    ];
+
+    for (tag, title) in panels {
+        if !section_enabled(tag) {
+            continue;
+        }
+        println!("\n=== {title} ===");
+        println!("(label = fh-fw-C-H-W-K-padH-padW, as on the paper's x-axis)");
+        let points = fig6_panel(handle.manifest(), tag).expect("panel");
+        let mut table = Table::new(&[
+            "label", "best_algo", "meas_speedup", "log10",
+            "model_best", "model_speedup", "gemm_us",
+        ]);
+
+        for point in &points {
+            let model = handle.perf_model();
+            // measured: time each algorithm artifact on identical inputs
+            let mut rng = SplitMix64::new(42);
+            let base_sig = match point.baseline_sig() {
+                Some(s) => s.clone(),
+                None => continue,
+            };
+            let base_art = handle.manifest().require(&base_sig).unwrap();
+            let inputs: Vec<HostTensor> = base_art
+                .inputs
+                .iter()
+                .map(|s| HostTensor::random_normal(s, &mut rng))
+                .collect();
+
+            let mut measured: Vec<(String, f64)> = Vec::new();
+            for (algo, sig) in &point.algos {
+                let exe = match handle.compile_sig(sig) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("skip {sig}: {e}");
+                        continue;
+                    }
+                };
+                let stats = time_fn(&cfg, || {
+                    exe.run(&inputs).expect("exec");
+                });
+                measured.push((algo.clone(), stats.median()));
+            }
+            let gemm_us = measured
+                .iter()
+                .find(|(a, _)| a == "gemm")
+                .map(|(_, t)| *t)
+                .unwrap_or(f64::NAN);
+            let (best_algo, best_us) = measured
+                .iter()
+                .filter(|(a, _)| a != "gemm")
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .cloned()
+                .unwrap_or(("-".into(), f64::NAN));
+            let meas_speedup = gemm_us / best_us;
+
+            // modeled series (the paper-testbed substitution)
+            let mut modeled: Vec<(String, f64)> = point
+                .algos
+                .keys()
+                .map(|a| (a.clone(),
+                          model.conv_time_us(&point.sig, a)))
+                .collect();
+            modeled.sort_by(|a, b| a.1.total_cmp(&b.1));
+            let model_gemm = modeled
+                .iter()
+                .find(|(a, _)| a == "gemm")
+                .map(|(_, t)| *t)
+                .unwrap_or(f64::NAN);
+            let (model_best, model_best_us) = modeled
+                .iter()
+                .find(|(a, _)| a != "gemm")
+                .cloned()
+                .unwrap_or(("-".into(), f64::NAN));
+
+            table.row(vec![
+                point.label.clone(),
+                best_algo,
+                format!("{meas_speedup:.2}x"),
+                format!("{:+.2}", meas_speedup.log10()),
+                model_best,
+                format!("{:.2}x", model_gemm / model_best_us),
+                format!("{gemm_us:.0}"),
+            ]);
+        }
+        table.print();
+    }
+
+    println!(
+        "\nNOTE measured series runs interpret-lowered Pallas kernels on \
+         CPU-PJRT; the modeled series is the Vega64 roofline (who-wins and \
+         crossover structure — the figure's actual claim). See \
+         EXPERIMENTS.md fig6*."
+    );
+}

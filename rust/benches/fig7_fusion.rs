@@ -1,0 +1,140 @@
+//! Figure 7 reproduction: "Relative performance improvement for different
+//! fused configurations compared to their non-fused counterparts".
+//!
+//! 7a — Conv+Bias+Activation fused vs the three ops run separately,
+//!      swept over output channels (the paper: "higher speedup ... for
+//!      kernels with fewer output features").
+//! 7b — BatchNorm+Activation fused vs separate, swept over (C, H, W)
+//!      (the paper: "more effective for larger image sizes ... smaller
+//!      images are not able to benefit").
+//!
+//! Run: `cargo bench --bench fig7_fusion` (optionally `-- fig7a|fig7b`)
+
+use miopen_rs::bench::{section_enabled, time_fn, BenchConfig, Table};
+use miopen_rs::handle::Handle;
+use miopen_rs::runtime::HostTensor;
+use miopen_rs::types::ProblemSig;
+use miopen_rs::util::rng::SplitMix64;
+use miopen_rs::workload::{fig7a_points, fig7b_points};
+
+fn main() {
+    if !miopen_rs::testutil::artifacts_available() {
+        eprintln!("fig7_fusion: artifacts not built, run `make artifacts`");
+        return;
+    }
+    let handle = Handle::new(Default::default()).expect("handle");
+    let cfg = BenchConfig::from_env();
+
+    if section_enabled("fig7a") {
+        run_fig7a(&handle, &cfg);
+    }
+    if section_enabled("fig7b") {
+        run_fig7b(&handle, &cfg);
+    }
+}
+
+fn inputs_for(handle: &Handle, sig: &str, seed: u64) -> Vec<HostTensor> {
+    let art = handle.manifest().require(sig).unwrap();
+    let mut rng = SplitMix64::new(seed);
+    art.inputs
+        .iter()
+        .map(|s| HostTensor::random_normal(s, &mut rng))
+        .collect()
+}
+
+fn median_us(handle: &Handle, cfg: &BenchConfig, sig: &str,
+             inputs: &[HostTensor]) -> f64 {
+    let exe = handle.compile_sig(sig).expect(sig);
+    time_fn(cfg, || {
+        exe.run(inputs).expect("exec");
+    })
+    .median()
+}
+
+fn run_fig7a(handle: &Handle, cfg: &BenchConfig) {
+    println!("\n=== Figure 7a: fused Conv+Bias+Activation vs separate ===");
+    let points = fig7a_points(handle.manifest()).expect("fig7a");
+    let mut table = Table::new(&[
+        "label", "K", "fused_us", "separate_us", "meas_speedup",
+        "model_speedup",
+    ]);
+    for p in &points {
+        let fused_inputs = inputs_for(handle, &p.fused_sig, 1);
+        let fused_us = median_us(handle, cfg, &p.fused_sig, &fused_inputs);
+
+        // separate pipeline: conv (same x/w), then bias, then act — timed
+        // as the sum of the three kernel invocations, the intermediate
+        // result re-materialized between stages (the global-memory
+        // round-trips the paper's fusion removes).
+        let conv_inputs = fused_inputs[..2].to_vec();
+        let conv_exe = handle.compile_sig(&p.conv_sig).expect("conv");
+        let bias_exe = handle.compile_sig(&p.bias_sig).expect("bias");
+        let act_exe = handle.compile_sig(&p.act_sig).expect("act");
+        let bias_vec = fused_inputs[2].clone();
+        let sep_stats = time_fn(cfg, || {
+            let y = conv_exe.run(&conv_inputs).expect("conv").remove(0);
+            let b = bias_exe.run(&[y, bias_vec.clone()]).expect("bias")
+                .remove(0);
+            let _ = act_exe.run(&[b]).expect("act");
+        });
+        let sep_us = sep_stats.median();
+
+        // GCN model prediction
+        let (sig, _, _) =
+            ProblemSig::parse_artifact(&p.conv_sig).expect("conv sig");
+        let (model_fused, model_sep) = handle.perf_model().cba_times_us(&sig);
+
+        table.row(vec![
+            p.label.clone(),
+            p.k.to_string(),
+            format!("{fused_us:.0}"),
+            format!("{sep_us:.0}"),
+            format!("{:.2}x", sep_us / fused_us),
+            format!("{:.2}x", model_sep / model_fused),
+        ]);
+    }
+    table.print();
+    println!("paper: speedups up to ~2.5x, larger for fewer output \
+              channels (bias-vector pressure).");
+}
+
+fn run_fig7b(handle: &Handle, cfg: &BenchConfig) {
+    println!("\n=== Figure 7b: fused BatchNorm+Activation vs separate ===");
+    let points = fig7b_points(handle.manifest()).expect("fig7b");
+    let mut table = Table::new(&[
+        "CxHxW", "fused_us", "separate_us", "meas_speedup", "model_speedup",
+    ]);
+    for p in &points {
+        let mut fused_inputs = inputs_for(handle, &p.fused_sig, 2);
+        // positive variance
+        let var = fused_inputs[4].as_f32().unwrap()
+            .iter().map(|v| v.abs() + 0.1).collect::<Vec<_>>();
+        fused_inputs[4] = HostTensor::from_f32(
+            &fused_inputs[4].spec.shape.clone(), &var);
+
+        let fused_us = median_us(handle, cfg, &p.fused_sig, &fused_inputs);
+
+        let bn_exe = handle.compile_sig(&p.bn_sig).expect("bn");
+        let act_exe = handle.compile_sig(&p.act_sig).expect("act");
+        let bn_inputs = fused_inputs.clone();
+        let sep_us = time_fn(cfg, || {
+            let y = bn_exe.run(&bn_inputs).expect("bn").remove(0);
+            let _ = act_exe.run(&[y]).expect("act");
+        })
+        .median();
+
+        let (model_fused, model_sep) =
+            handle.perf_model().bna_times_us(4, p.c, p.h, p.w);
+
+        table.row(vec![
+            p.label.clone(),
+            format!("{fused_us:.0}"),
+            format!("{sep_us:.0}"),
+            format!("{:.2}x", sep_us / fused_us),
+            format!("{:.2}x", model_sep / model_fused),
+        ]);
+    }
+    table.print();
+    println!("paper: larger images/channels benefit more; smallest \
+              configs show no benefit.");
+}

@@ -1,0 +1,136 @@
+//! Bench harness (criterion stand-in, DESIGN.md §Substitutions #5):
+//! warmup + timed iterations with robust statistics, plus the table
+//! printer the figure-reproduction benches share.
+
+use std::time::Instant;
+
+use crate::metrics::TimingStats;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub timed_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 2, timed_iters: 5 }
+    }
+}
+
+impl BenchConfig {
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, timed_iters: 3 }
+    }
+
+    /// From env (MIOPEN_RS_BENCH_ITERS) for CI-speed control.
+    pub fn from_env() -> Self {
+        let iters = std::env::var("MIOPEN_RS_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5);
+        Self { warmup_iters: 2, timed_iters: iters }
+    }
+}
+
+/// Time a closure: returns stats over `timed_iters` runs (µs).
+pub fn time_fn(cfg: &BenchConfig, mut f: impl FnMut()) -> TimingStats {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut stats = TimingStats::new();
+    for _ in 0..cfg.timed_iters {
+        let t = Instant::now();
+        f();
+        stats.record(t.elapsed().as_secs_f64() * 1e6);
+    }
+    stats
+}
+
+/// Fixed-width table printer for the figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>()
+                                 + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Shared CLI filter for bench binaries: `cargo bench -- <filter>` runs
+/// only sections whose name contains the filter.
+pub fn section_enabled(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let cfg = BenchConfig { warmup_iters: 1, timed_iters: 4 };
+        let mut calls = 0;
+        let stats = time_fn(&cfg, || calls += 1);
+        assert_eq!(calls, 5);
+        assert_eq!(stats.count(), 4);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "us"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["longer".into(), "12.5".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+}

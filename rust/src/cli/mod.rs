@@ -1,0 +1,136 @@
+//! Hand-rolled CLI argument parsing (clap stand-in, DESIGN.md
+//! §Substitutions #5): subcommands + `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare token = subcommand, `--key value`
+    /// pairs become options, trailing `--flag` (no value) become flags.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.options.insert(name.to_string(),
+                                       argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.subcommand.is_none() {
+                    out.subcommand = Some(tok.clone());
+                } else {
+                    out.positional.push(tok.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub const USAGE: &str = "\
+miopen-rs — MIOpen reproduction on a Rust + JAX + Pallas stack
+
+USAGE: miopen <COMMAND> [OPTIONS]
+
+COMMANDS:
+  find         Run the find step for a convolution problem
+                 --n --c --h --w --k --r --s [--stride --pad --dilation
+                 --groups --direction fwd|bwd|wrw] [--exhaustive] [--model]
+  tune         Tuning session for a problem (same shape options)
+                 [--prune N]
+  run          Execute one artifact by signature with random inputs
+                 --sig <signature> [--iters N]
+  serve        Batched CNN inference server on synthetic load
+                 [--requests N] [--rate R] [--batch B] [--timeout-ms T]
+  train        E2E tiny-CNN training loop (same as examples/train_cnn)
+                 [--steps N]
+  fusion-check Check a fusion plan against the metadata graph
+                 --combination CBA|CBNA|NA [--filter F --stride S --pad P
+                 --channels C --act relu|...]
+  tables       Print the supported-fusion tables (Tables I & II)
+  artifacts-check  Verify every manifest artifact exists on disk
+  info         Platform + manifest + cache summary
+
+GLOBAL OPTIONS:
+  --artifacts DIR   artifact directory (default: ./artifacts)
+  --db-dir DIR      user db directory
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse("find --n 4 --c 16 --exhaustive --k 32");
+        assert_eq!(a.subcommand.as_deref(), Some("find"));
+        assert_eq!(a.opt_usize("n", 0), 4);
+        assert_eq!(a.opt_usize("c", 0), 16);
+        assert_eq!(a.opt_usize("k", 0), 32);
+        assert!(a.flag("exhaustive"));
+        assert!(!a.flag("model"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("run conv_fwd-direct-x --iters 3");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["conv_fwd-direct-x"]);
+        assert_eq!(a.opt_usize("iters", 0), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.opt_usize("requests", 64), 64);
+        assert_eq!(a.opt_f64("rate", 100.0), 100.0);
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+    }
+}

@@ -1,0 +1,328 @@
+//! Find-db and perf-db (paper §III-B, §IV-A).
+//!
+//! MIOpen persists two databases: the **perf-db** holds tuned kernel
+//! parameters per (problem, solver); the **find-db** memoizes find-step
+//! results so later runs skip benchmarking. Both ship as a read-only
+//! *system* db and are overlaid by a writable *user* db in the user's
+//! config directory — user entries shadow system entries.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::types::{MiopenError, Result};
+use crate::util::json::{self, Json};
+
+/// One algorithm's measured/modeled performance for a problem (the
+/// persisted form of `miopenConvAlgoPerf_t`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FindRecord {
+    pub algo: String,
+    pub time_us: f64,
+    pub modeled_time_us: f64,
+    pub workspace_bytes: u64,
+}
+
+/// find-db: problem key -> ranked records.
+#[derive(Debug, Default, Clone)]
+pub struct FindDb {
+    entries: BTreeMap<String, Vec<FindRecord>>,
+}
+
+impl FindDb {
+    pub fn get(&self, key: &str) -> Option<&[FindRecord]> {
+        self.entries.get(key).map(Vec::as_slice)
+    }
+
+    pub fn insert(&mut self, key: String, mut records: Vec<FindRecord>) {
+        records.sort_by(|a, b| a.time_us.total_cmp(&b.time_us));
+        self.entries.insert(key, records);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Overlay: entries in `user` shadow entries in `self`. Idempotent.
+    pub fn merged_with(&self, user: &FindDb) -> FindDb {
+        let mut out = self.clone();
+        for (k, v) in &user.entries {
+            out.entries.insert(k.clone(), v.clone());
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, recs) in &self.entries {
+            obj.insert(
+                k.clone(),
+                Json::Arr(
+                    recs.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("algo", Json::str(r.algo.clone())),
+                                ("time_us", Json::num(r.time_us)),
+                                ("modeled_time_us", Json::num(r.modeled_time_us)),
+                                ("workspace_bytes",
+                                 Json::num(r.workspace_bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FindDb> {
+        let obj = j.as_obj().ok_or_else(|| bad("find-db root not object"))?;
+        let mut entries = BTreeMap::new();
+        for (k, v) in obj {
+            let arr = v.as_arr().ok_or_else(|| bad("find-db entry not array"))?;
+            let mut recs = Vec::with_capacity(arr.len());
+            for r in arr {
+                recs.push(FindRecord {
+                    algo: r
+                        .get("algo")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| bad("missing algo"))?
+                        .to_string(),
+                    time_us: r.get("time_us").and_then(Json::as_f64)
+                        .unwrap_or(f64::INFINITY),
+                    modeled_time_us: r
+                        .get("modeled_time_us")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(f64::INFINITY),
+                    workspace_bytes: r
+                        .get("workspace_bytes")
+                        .and_then(Json::as_i64)
+                        .unwrap_or(0) as u64,
+                });
+            }
+            entries.insert(k.clone(), recs);
+        }
+        Ok(FindDb { entries })
+    }
+}
+
+/// perf-db: (problem key, solver) -> tuned parameters.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct PerfDb {
+    entries: BTreeMap<String, BTreeMap<String, i64>>,
+}
+
+impl PerfDb {
+    fn key(problem: &str, solver: &str) -> String {
+        format!("{problem}::{solver}")
+    }
+
+    pub fn get(&self, problem: &str, solver: &str)
+        -> Option<&BTreeMap<String, i64>> {
+        self.entries.get(&Self::key(problem, solver))
+    }
+
+    pub fn set(&mut self, problem: &str, solver: &str,
+               params: BTreeMap<String, i64>) {
+        self.entries.insert(Self::key(problem, solver), params);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn merged_with(&self, user: &PerfDb) -> PerfDb {
+        let mut out = self.clone();
+        for (k, v) in &user.entries {
+            out.entries.insert(k.clone(), v.clone());
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, params) in &self.entries {
+            let mut p = BTreeMap::new();
+            for (pk, pv) in params {
+                p.insert(pk.clone(), Json::num(*pv as f64));
+            }
+            obj.insert(k.clone(), Json::Obj(p));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PerfDb> {
+        let obj = j.as_obj().ok_or_else(|| bad("perf-db root not object"))?;
+        let mut entries = BTreeMap::new();
+        for (k, v) in obj {
+            let params = v.as_obj().ok_or_else(|| bad("perf-db entry"))?;
+            let mut p = BTreeMap::new();
+            for (pk, pv) in params {
+                p.insert(pk.clone(),
+                         pv.as_i64().ok_or_else(|| bad("perf param"))?);
+            }
+            entries.insert(k.clone(), p);
+        }
+        Ok(PerfDb { entries })
+    }
+}
+
+fn bad(msg: &str) -> MiopenError {
+    MiopenError::Db(msg.to_string())
+}
+
+/// Storage of the two dbs on disk (the "designated directory on the
+/// user's system" of §III-B).
+pub struct DbStore {
+    pub dir: PathBuf,
+}
+
+impl DbStore {
+    /// Default user directory: $MIOPEN_RS_DB_DIR or ~/.config/miopen-rs.
+    pub fn user_default() -> Self {
+        let dir = std::env::var("MIOPEN_RS_DB_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                let home = std::env::var("HOME").unwrap_or_else(|_| ".".into());
+                PathBuf::from(home).join(".config").join("miopen-rs")
+            });
+        Self { dir }
+    }
+
+    pub fn at(dir: impl AsRef<Path>) -> Self {
+        Self { dir: dir.as_ref().to_path_buf() }
+    }
+
+    fn load_json(&self, name: &str) -> Result<Option<Json>> {
+        let path = self.dir.join(name);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(path)?;
+        Ok(Some(json::parse(&text).map_err(|e| MiopenError::Db(e.to_string()))?))
+    }
+
+    fn save_json(&self, name: &str, j: &Json) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        // write-then-rename for crash consistency
+        let tmp = self.dir.join(format!("{name}.tmp"));
+        let path = self.dir.join(name);
+        std::fs::write(&tmp, j.to_string())?;
+        std::fs::rename(tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load_find_db(&self) -> Result<FindDb> {
+        Ok(match self.load_json("find.json")? {
+            Some(j) => FindDb::from_json(&j)?,
+            None => FindDb::default(),
+        })
+    }
+
+    pub fn save_find_db(&self, db: &FindDb) -> Result<()> {
+        self.save_json("find.json", &db.to_json())
+    }
+
+    pub fn load_perf_db(&self) -> Result<PerfDb> {
+        Ok(match self.load_json("perf.json")? {
+            Some(j) => PerfDb::from_json(&j)?,
+            None => PerfDb::default(),
+        })
+    }
+
+    pub fn save_perf_db(&self, db: &PerfDb) -> Result<()> {
+        self.save_json("perf.json", &db.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(algo: &str, t: f64) -> FindRecord {
+        FindRecord {
+            algo: algo.into(),
+            time_us: t,
+            modeled_time_us: t * 0.5,
+            workspace_bytes: 128,
+        }
+    }
+
+    #[test]
+    fn find_db_sorts_on_insert() {
+        let mut db = FindDb::default();
+        db.insert("p1".into(), vec![rec("slow", 30.0), rec("fast", 1.0),
+                                    rec("mid", 5.0)]);
+        let r = db.get("p1").unwrap();
+        assert_eq!(r[0].algo, "fast");
+        assert_eq!(r[2].algo, "slow");
+    }
+
+    #[test]
+    fn find_db_json_roundtrip() {
+        let mut db = FindDb::default();
+        db.insert("p1".into(), vec![rec("a", 2.0), rec("b", 1.0)]);
+        db.insert("p2".into(), vec![rec("c", 9.5)]);
+        let j = db.to_json();
+        let back = FindDb::from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.get("p1").unwrap().len(), 2);
+        assert_eq!(back.get("p1").unwrap()[0].algo, "b");
+        assert_eq!(back.get("p2").unwrap()[0].workspace_bytes, 128);
+    }
+
+    #[test]
+    fn user_db_shadows_system() {
+        let mut sys = FindDb::default();
+        sys.insert("p".into(), vec![rec("system", 10.0)]);
+        sys.insert("only_sys".into(), vec![rec("x", 1.0)]);
+        let mut user = FindDb::default();
+        user.insert("p".into(), vec![rec("user", 3.0)]);
+        let merged = sys.merged_with(&user);
+        assert_eq!(merged.get("p").unwrap()[0].algo, "user");
+        assert!(merged.get("only_sys").is_some());
+        // idempotent
+        let again = merged.merged_with(&user);
+        assert_eq!(again.get("p").unwrap().len(),
+                   merged.get("p").unwrap().len());
+    }
+
+    #[test]
+    fn perf_db_roundtrip_and_merge() {
+        let mut sys = PerfDb::default();
+        sys.set("p", "direct", BTreeMap::from([("block_k".into(), 16i64)]));
+        let mut user = PerfDb::default();
+        user.set("p", "direct", BTreeMap::from([("block_k".into(), 32i64)]));
+        let merged = sys.merged_with(&user);
+        assert_eq!(merged.get("p", "direct").unwrap()["block_k"], 32);
+
+        let j = merged.to_json();
+        let back = PerfDb::from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, merged);
+    }
+
+    #[test]
+    fn store_persists_to_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "miopen-rs-dbtest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DbStore::at(&dir);
+        assert!(store.load_find_db().unwrap().is_empty());
+
+        let mut db = FindDb::default();
+        db.insert("k".into(), vec![rec("a", 1.0)]);
+        store.save_find_db(&db).unwrap();
+        let loaded = store.load_find_db().unwrap();
+        assert_eq!(loaded.get("k").unwrap()[0].algo, "a");
+
+        let mut pdb = PerfDb::default();
+        pdb.set("k", "direct", BTreeMap::from([("block_k".into(), 8i64)]));
+        store.save_perf_db(&pdb).unwrap();
+        assert_eq!(store.load_perf_db().unwrap(), pdb);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,466 @@
+//! Operation descriptors — the `miopen*Descriptor_t` API surface (§IV).
+//!
+//! Descriptors are plain validated data: they carry no backend state, so
+//! (like MIOpen's) they are cheap to construct, clone and hash. All
+//! actual work happens when a descriptor meets a [`crate::handle::Handle`].
+
+pub use crate::types::{DType, TensorDesc};
+use crate::types::{MiopenError, ProblemSig, Result};
+
+/// `miopenConvolutionMode_t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvMode {
+    /// Standard (cross-correlation) convolution, `miopenConvolution`.
+    CrossCorrelation,
+    /// Transpose / fractionally-strided convolution, `miopenTranspose`
+    /// (paper §IV-A "Types of convolution").
+    Transpose,
+}
+
+/// `miopenConvolutionDescriptor_t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvDesc {
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+    pub dilation: (usize, usize),
+    pub mode: ConvMode,
+    /// `miopenSetConvolutionGroupCount`: 1 = dense, C = depthwise.
+    pub group_count: usize,
+}
+
+impl ConvDesc {
+    pub fn new(stride: (usize, usize), pad: (usize, usize),
+               dilation: (usize, usize), mode: ConvMode,
+               group_count: usize) -> Self {
+        Self { stride, pad, dilation, mode, group_count }
+    }
+
+    pub fn simple(stride: usize, pad: usize) -> Self {
+        Self::new((stride, stride), (pad, pad), (1, 1),
+                  ConvMode::CrossCorrelation, 1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.stride.0 == 0 || self.stride.1 == 0 {
+            return Err(MiopenError::BadDescriptor("stride must be >= 1".into()));
+        }
+        if self.dilation.0 == 0 || self.dilation.1 == 0 {
+            return Err(MiopenError::BadDescriptor("dilation must be >= 1".into()));
+        }
+        if self.group_count == 0 {
+            return Err(MiopenError::BadDescriptor("group count must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Forward output descriptor (`miopenGetConvolutionForwardOutputDim`).
+    pub fn output_desc(&self, x: &TensorDesc, w: &FilterDesc) -> Result<TensorDesc> {
+        self.validate()?;
+        let (n, c, h, wd) = x.nchw_dims()?;
+        if w.k % self.group_count != 0 {
+            return Err(MiopenError::ShapeMismatch(format!(
+                "K={} not divisible by groups {}", w.k, self.group_count)));
+        }
+        match self.mode {
+            ConvMode::CrossCorrelation => {
+                if w.c * self.group_count != c {
+                    return Err(MiopenError::ShapeMismatch(format!(
+                        "input C={} but filter C/g={} with g={}",
+                        c, w.c, self.group_count
+                    )));
+                }
+                let er = (w.r - 1) * self.dilation.0 + 1;
+                let es = (w.s - 1) * self.dilation.1 + 1;
+                let h_in = h + 2 * self.pad.0;
+                let w_in = wd + 2 * self.pad.1;
+                if h_in < er || w_in < es {
+                    return Err(MiopenError::ShapeMismatch(format!(
+                        "filter {}x{} (dilated {}x{}) exceeds padded input {}x{}",
+                        w.r, w.s, er, es, h_in, w_in
+                    )));
+                }
+                let ho = (h_in - er) / self.stride.0 + 1;
+                let wo = (w_in - es) / self.stride.1 + 1;
+                Ok(TensorDesc::nchw(n, w.k, ho, wo, x.dtype))
+            }
+            ConvMode::Transpose => {
+                // transpose-conv input channels == the forward conv's K
+                if w.k != c {
+                    return Err(MiopenError::ShapeMismatch(format!(
+                        "transpose input C={} but filter K={}", c, w.k)));
+                }
+                let ho = (h - 1) * self.stride.0 + w.r;
+                let wo = (wd - 1) * self.stride.1 + w.s;
+                let ho = ho.checked_sub(2 * self.pad.0).ok_or_else(|| {
+                    MiopenError::ShapeMismatch("transpose pad too large".into())
+                })?;
+                let wo = wo.checked_sub(2 * self.pad.1).ok_or_else(|| {
+                    MiopenError::ShapeMismatch("transpose pad too large".into())
+                })?;
+                Ok(TensorDesc::nchw(n, w.c * self.group_count, ho, wo, x.dtype))
+            }
+        }
+    }
+
+    /// Assemble the canonical problem signature for a direction.
+    pub fn problem_sig(&self, direction: &str, x: &TensorDesc,
+                       w: &FilterDesc) -> Result<ProblemSig> {
+        let (n, c, h, wd) = x.nchw_dims()?;
+        Ok(ProblemSig {
+            direction: direction.to_string(),
+            n, c, h, w: wd,
+            k: w.k, r: w.r, s: w.s,
+            u: self.stride.0, v: self.stride.1,
+            p: self.pad.0, q: self.pad.1,
+            l: self.dilation.0, j: self.dilation.1,
+            g: self.group_count,
+            dtype: x.dtype,
+        })
+    }
+}
+
+/// Filter (weight) descriptor, KCRS layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FilterDesc {
+    pub k: usize,
+    /// Input channels **per group**.
+    pub c: usize,
+    pub r: usize,
+    pub s: usize,
+    pub dtype: DType,
+}
+
+impl FilterDesc {
+    pub fn kcrs(k: usize, c: usize, r: usize, s: usize, dtype: DType) -> Self {
+        Self { k, c, r, s, dtype }
+    }
+    pub fn elem_count(&self) -> usize {
+        self.k * self.c * self.r * self.s
+    }
+}
+
+/// `miopenActivationMode_t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActivationMode {
+    Relu,
+    LeakyRelu,
+    Tanh,
+    Sigmoid,
+    Elu,
+    ClippedRelu,
+    Abs,
+    Identity,
+}
+
+impl ActivationMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ActivationMode::Relu => "relu",
+            ActivationMode::LeakyRelu => "leaky_relu",
+            ActivationMode::Tanh => "tanh",
+            ActivationMode::Sigmoid => "sigmoid",
+            ActivationMode::Elu => "elu",
+            ActivationMode::ClippedRelu => "clipped_relu",
+            ActivationMode::Abs => "abs",
+            ActivationMode::Identity => "identity",
+        }
+    }
+}
+
+/// `miopenActivationDescriptor_t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActivationDesc {
+    pub mode: ActivationMode,
+    pub alpha: f64,
+}
+
+impl ActivationDesc {
+    pub fn new(mode: ActivationMode) -> Self {
+        let alpha = match mode {
+            ActivationMode::LeakyRelu => 0.01,
+            ActivationMode::Elu => 1.0,
+            ActivationMode::ClippedRelu => 6.0,
+            _ => 0.0,
+        };
+        Self { mode, alpha }
+    }
+}
+
+/// `miopenPoolingMode_t` + descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolMode {
+    Max,
+    Average,
+}
+
+impl PoolMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolMode::Max => "max",
+            PoolMode::Average => "avg",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PoolDesc {
+    pub mode: PoolMode,
+    pub window: (usize, usize),
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+}
+
+impl PoolDesc {
+    pub fn new(mode: PoolMode, window: (usize, usize),
+               stride: (usize, usize), pad: (usize, usize)) -> Self {
+        Self { mode, window, stride, pad }
+    }
+
+    pub fn output_desc(&self, x: &TensorDesc) -> Result<TensorDesc> {
+        let (n, c, h, w) = x.nchw_dims()?;
+        let h_in = h + 2 * self.pad.0;
+        let w_in = w + 2 * self.pad.1;
+        if h_in < self.window.0 || w_in < self.window.1 {
+            return Err(MiopenError::ShapeMismatch(
+                "pool window exceeds padded input".into()));
+        }
+        let ho = (h_in - self.window.0) / self.stride.0 + 1;
+        let wo = (w_in - self.window.1) / self.stride.1 + 1;
+        Ok(TensorDesc::nchw(n, c, ho, wo, x.dtype))
+    }
+}
+
+/// `miopenBatchNormMode_t` (paper §IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BnMode {
+    /// `miopenBNPerActivation`: element-wise, for FC layers.
+    PerActivation,
+    /// `miopenBNSpatial`: per-channel, for conv layers.
+    Spatial,
+}
+
+/// LRN descriptor (cross-channel mode, §IV-D #6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LrnDesc {
+    pub n: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub k: f64,
+}
+
+impl Default for LrnDesc {
+    fn default() -> Self {
+        Self { n: 5, alpha: 1e-4, beta: 0.75, k: 2.0 }
+    }
+}
+
+/// `miopenSoftmaxAlgorithm_t`-ish: plain vs log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SoftmaxMode {
+    Softmax,
+    LogSoftmax,
+}
+
+/// RNN descriptors (paper §IV-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RnnCell {
+    Vanilla,
+    Lstm,
+    Gru,
+}
+
+impl RnnCell {
+    pub fn name(self) -> &'static str {
+        match self {
+            RnnCell::Vanilla => "vanilla",
+            RnnCell::Lstm => "lstm",
+            RnnCell::Gru => "gru",
+        }
+    }
+    pub fn gates(self) -> usize {
+        match self {
+            RnnCell::Vanilla => 1,
+            RnnCell::Lstm => 4,
+            RnnCell::Gru => 3,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RnnDirection {
+    /// `miopenRNNunidirection`
+    Unidirectional,
+    /// `miopenRNNbidirection`
+    Bidirectional,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RnnInputMode {
+    /// `miopenRNNlinear`: linear transform on the input.
+    Linear,
+    /// `miopenRNNskip`: direct input into the neuron (requires X == H).
+    Skip,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RnnDesc {
+    pub cell: RnnCell,
+    pub hidden_size: usize,
+    pub direction: RnnDirection,
+    pub input_mode: RnnInputMode,
+    /// miopenRNNWithBias / miopenRNNNoBias
+    pub with_bias: bool,
+    /// vanilla-cell activation: relu or tanh
+    pub relu_activation: bool,
+}
+
+impl RnnDesc {
+    pub fn lstm(hidden_size: usize) -> Self {
+        Self {
+            cell: RnnCell::Lstm,
+            hidden_size,
+            direction: RnnDirection::Unidirectional,
+            input_mode: RnnInputMode::Linear,
+            with_bias: false,
+            relu_activation: false,
+        }
+    }
+
+    pub fn validate(&self, input_size: usize) -> Result<()> {
+        if self.hidden_size == 0 {
+            return Err(MiopenError::BadDescriptor("hidden_size == 0".into()));
+        }
+        if self.input_mode == RnnInputMode::Skip && input_size != self.hidden_size {
+            return Err(MiopenError::BadDescriptor(format!(
+                "skip-input mode requires X == H (got X={input_size}, H={})",
+                self.hidden_size
+            )));
+        }
+        Ok(())
+    }
+
+    /// The paper's length-descending batching rule (§IV-C): batch sizes per
+    /// timestep must be non-increasing, otherwise weight update degrades to
+    /// T+1 GEMMs. Returns Err on violation.
+    pub fn validate_batch_layout(batch_per_step: &[usize]) -> Result<()> {
+        if batch_per_step.windows(2).any(|w| w[1] > w[0]) {
+            return Err(MiopenError::BadDescriptor(
+                "batched sequences must be length-descending (longest first)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_shape() {
+        let x = TensorDesc::nchw(4, 16, 28, 28, DType::F32);
+        let w = FilterDesc::kcrs(32, 16, 3, 3, DType::F32);
+        let d = ConvDesc::simple(1, 1);
+        assert_eq!(d.output_desc(&x, &w).unwrap().dims, vec![4, 32, 28, 28]);
+        let d2 = ConvDesc::simple(2, 1);
+        assert_eq!(d2.output_desc(&x, &w).unwrap().dims, vec![4, 32, 14, 14]);
+    }
+
+    #[test]
+    fn conv_dilated_shape() {
+        let x = TensorDesc::nchw(1, 2, 14, 14, DType::F32);
+        let w = FilterDesc::kcrs(3, 2, 3, 3, DType::F32);
+        let d = ConvDesc::new((1, 1), (2, 2), (2, 2),
+                              ConvMode::CrossCorrelation, 1);
+        assert_eq!(d.output_desc(&x, &w).unwrap().dims, vec![1, 3, 14, 14]);
+    }
+
+    #[test]
+    fn conv_rejects_channel_mismatch() {
+        let x = TensorDesc::nchw(1, 5, 8, 8, DType::F32);
+        let w = FilterDesc::kcrs(4, 3, 3, 3, DType::F32);
+        assert!(ConvDesc::simple(1, 1).output_desc(&x, &w).is_err());
+    }
+
+    #[test]
+    fn conv_grouped_channels() {
+        let x = TensorDesc::nchw(1, 6, 8, 8, DType::F32);
+        let w = FilterDesc::kcrs(6, 3, 3, 3, DType::F32); // C/g = 3, g = 2
+        let d = ConvDesc::new((1, 1), (1, 1), (1, 1),
+                              ConvMode::CrossCorrelation, 2);
+        assert_eq!(d.output_desc(&x, &w).unwrap().dims, vec![1, 6, 8, 8]);
+        // depthwise: g = C, filter C/g = 1
+        let wd = FilterDesc::kcrs(6, 1, 3, 3, DType::F32);
+        let dd = ConvDesc::new((1, 1), (1, 1), (1, 1),
+                               ConvMode::CrossCorrelation, 6);
+        assert_eq!(dd.output_desc(&x, &wd).unwrap().dims, vec![1, 6, 8, 8]);
+    }
+
+    #[test]
+    fn transpose_conv_shape() {
+        // matches python test: x (1,4,5,5), w (4,3,3,3), stride 2, pad 1
+        let x = TensorDesc::nchw(1, 4, 5, 5, DType::F32);
+        let w = FilterDesc::kcrs(4, 3, 3, 3, DType::F32);
+        let d = ConvDesc::new((2, 2), (1, 1), (1, 1), ConvMode::Transpose, 1);
+        assert_eq!(d.output_desc(&x, &w).unwrap().dims, vec![1, 3, 9, 9]);
+    }
+
+    #[test]
+    fn conv_rejects_filter_larger_than_input() {
+        let x = TensorDesc::nchw(1, 1, 3, 3, DType::F32);
+        let w = FilterDesc::kcrs(1, 1, 5, 5, DType::F32);
+        assert!(ConvDesc::simple(1, 0).output_desc(&x, &w).is_err());
+    }
+
+    #[test]
+    fn conv_validates_params() {
+        let mut d = ConvDesc::simple(1, 0);
+        d.stride = (0, 1);
+        assert!(d.validate().is_err());
+        let mut d2 = ConvDesc::simple(1, 0);
+        d2.group_count = 0;
+        assert!(d2.validate().is_err());
+    }
+
+    #[test]
+    fn pool_output_shape() {
+        let x = TensorDesc::nchw(2, 3, 8, 8, DType::F32);
+        let p = PoolDesc::new(PoolMode::Max, (2, 2), (2, 2), (0, 0));
+        assert_eq!(p.output_desc(&x).unwrap().dims, vec![2, 3, 4, 4]);
+        let p2 = PoolDesc::new(PoolMode::Average, (3, 3), (2, 2), (1, 1));
+        assert_eq!(p2.output_desc(&x).unwrap().dims, vec![2, 3, 4, 4]);
+    }
+
+    #[test]
+    fn rnn_skip_mode_validation() {
+        let mut d = RnnDesc::lstm(32);
+        d.input_mode = RnnInputMode::Skip;
+        assert!(d.validate(32).is_ok());
+        assert!(d.validate(64).is_err());
+    }
+
+    #[test]
+    fn rnn_batch_layout_rule() {
+        assert!(RnnDesc::validate_batch_layout(&[8, 8, 6, 2, 1]).is_ok());
+        assert!(RnnDesc::validate_batch_layout(&[8, 6, 7]).is_err());
+        assert!(RnnDesc::validate_batch_layout(&[]).is_ok());
+    }
+
+    #[test]
+    fn gate_counts() {
+        assert_eq!(RnnCell::Lstm.gates(), 4);
+        assert_eq!(RnnCell::Gru.gates(), 3);
+        assert_eq!(RnnCell::Vanilla.gates(), 1);
+    }
+
+    #[test]
+    fn problem_sig_assembly() {
+        let x = TensorDesc::nchw(4, 16, 28, 28, DType::F32);
+        let w = FilterDesc::kcrs(32, 16, 3, 3, DType::F32);
+        let d = ConvDesc::simple(1, 1);
+        let sig = d.problem_sig("fwd", &x, &w).unwrap();
+        assert_eq!(sig.artifact_sig("direct", None),
+                   "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32");
+    }
+}

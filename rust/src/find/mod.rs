@@ -1,0 +1,261 @@
+//! The find step (paper §IV-A): "the user calls the MIOpen convolution
+//! Find API which allows MIOpen to benchmark all the applicable kernels
+//! for the given problem configuration"; results come back as an array of
+//! `miopenConvAlgoPerf_t` (algorithm, estimated execution time, extra
+//! memory).
+//!
+//! Results are memoized in the find-db so the cost is paid once and
+//! amortized over subsequent invocations (the paper's recommendation),
+//! and solvers that fail to compile or execute are skipped — the ranking
+//! is built from the survivors (failure-injection tests cover this).
+
+use crate::descriptors::{ConvDesc, ConvMode, FilterDesc, TensorDesc};
+use crate::db::FindRecord;
+use crate::handle::Handle;
+use crate::types::{MiopenError, ProblemSig, Result};
+
+/// Convolution direction, MIOpen naming.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// `miopenConvolutionForward`
+    Forward,
+    /// `miopenConvolutionBackwardData`
+    BackwardData,
+    /// `miopenConvolutionBackwardWeights`
+    BackwardWeights,
+}
+
+impl Direction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Direction::Forward => "fwd",
+            Direction::BackwardData => "bwd",
+            Direction::BackwardWeights => "wrw",
+        }
+    }
+}
+
+/// A fully-specified convolution problem.
+#[derive(Debug, Clone)]
+pub struct ConvProblem {
+    pub x: TensorDesc,
+    pub w: FilterDesc,
+    pub conv: ConvDesc,
+    pub direction: Direction,
+}
+
+impl ConvProblem {
+    pub fn forward(x: TensorDesc, w: FilterDesc, conv: ConvDesc) -> Self {
+        Self { x, w, conv, direction: Direction::Forward }
+    }
+
+    pub fn backward_data(x: TensorDesc, w: FilterDesc, conv: ConvDesc) -> Self {
+        Self { x, w, conv, direction: Direction::BackwardData }
+    }
+
+    pub fn backward_weights(x: TensorDesc, w: FilterDesc, conv: ConvDesc)
+        -> Self {
+        Self { x, w, conv, direction: Direction::BackwardWeights }
+    }
+
+    /// Canonical problem signature. Transpose mode maps onto the
+    /// backward-data kernels of the mirrored forward problem (§IV-A).
+    pub fn sig(&self) -> Result<ProblemSig> {
+        self.conv.validate()?;
+        let dir = match (self.conv.mode, self.direction) {
+            (ConvMode::Transpose, Direction::Forward) => "bwd",
+            (ConvMode::Transpose, Direction::BackwardData) => "fwd",
+            (_, d) => d.as_str(),
+        };
+        self.conv.problem_sig(dir, &self.x, &self.w)
+    }
+}
+
+/// `miopenConvAlgoPerf_t`: one algorithm's result from the find step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvAlgoPerf {
+    pub algo: String,
+    /// Measured wall-clock on this backend (µs, median of find_iters).
+    pub time_us: f64,
+    /// Predicted time on the modeled GCN device (µs).
+    pub modeled_time_us: f64,
+    /// Extra device memory required (bytes).
+    pub workspace_bytes: u64,
+    /// Artifact signature that was benchmarked (incl. tuning variant).
+    pub artifact_sig: String,
+}
+
+/// Options for the find invocation.
+#[derive(Debug, Clone, Default)]
+pub struct FindOptions {
+    /// Re-benchmark even on a find-db hit (`MIOPEN_FIND_ENFORCE`-like).
+    pub exhaustive: bool,
+    /// Rank by the GCN model instead of measured CPU time — useful when
+    /// the host is noisy and for figure reproduction.
+    pub rank_by_model: bool,
+}
+
+impl Handle {
+    /// The find step. Returns algorithms sorted best-first.
+    pub fn find_convolution(&self, problem: &ConvProblem)
+        -> Result<Vec<ConvAlgoPerf>> {
+        self.find_convolution_opt(problem, &FindOptions::default())
+    }
+
+    pub fn find_convolution_opt(&self, problem: &ConvProblem,
+                                opts: &FindOptions)
+        -> Result<Vec<ConvAlgoPerf>> {
+        let sig = problem.sig()?;
+        let key = sig.db_key();
+
+        if !opts.exhaustive {
+            if let Some(records) = self.find_db().get(&key) {
+                return Ok(self.records_to_perf(&sig, records, opts));
+            }
+        }
+
+        let perf_db = self.perf_db();
+        let mut results = Vec::new();
+        let mut failures = Vec::new();
+        for solver in crate::solvers::applicable(&sig) {
+            // Tuned parameters (perf-db) select a tuned artifact variant
+            // when one exists in the manifest; otherwise the default.
+            let tuned = perf_db
+                .get(&key, solver.name())
+                .map(|params| solver.artifact_sig(&sig, Some(params)))
+                .filter(|s| self.manifest.get(s).is_some());
+            let art_sig = tuned
+                .unwrap_or_else(|| solver.artifact_sig(&sig, None));
+
+            if self.manifest.get(&art_sig).is_none() {
+                // No artifact for this (problem, solver) — not an error:
+                // the solver simply isn't available for this config set.
+                continue;
+            }
+
+            let run = (|| -> Result<f64> {
+                let exe = self.compile_sig(&art_sig)?;
+                let inputs = self.random_inputs(&art_sig)?;
+                self.time_exec(&exe, &inputs)
+            })();
+
+            match run {
+                Ok(time_us) => results.push(ConvAlgoPerf {
+                    algo: solver.name().to_string(),
+                    time_us,
+                    modeled_time_us: solver.modeled_time_us(&sig, &self.model),
+                    workspace_bytes: solver.workspace_bytes(&sig),
+                    artifact_sig: art_sig,
+                }),
+                Err(e) => failures.push((solver.name(), e.to_string())),
+            }
+        }
+
+        if results.is_empty() {
+            return Err(MiopenError::NotApplicable(format!(
+                "no solver produced a result for {key} (failures: {failures:?})"
+            )));
+        }
+
+        let sort_key = |p: &ConvAlgoPerf| {
+            if opts.rank_by_model { p.modeled_time_us } else { p.time_us }
+        };
+        results.sort_by(|a, b| sort_key(a).total_cmp(&sort_key(b)));
+
+        self.user_find.borrow_mut().insert(
+            key,
+            results
+                .iter()
+                .map(|p| FindRecord {
+                    algo: p.algo.clone(),
+                    time_us: p.time_us,
+                    modeled_time_us: p.modeled_time_us,
+                    workspace_bytes: p.workspace_bytes,
+                })
+                .collect(),
+        );
+        Ok(results)
+    }
+
+    fn records_to_perf(&self, sig: &ProblemSig, records: &[FindRecord],
+                       opts: &FindOptions) -> Vec<ConvAlgoPerf> {
+        let mut out: Vec<ConvAlgoPerf> = records
+            .iter()
+            .map(|r| ConvAlgoPerf {
+                algo: r.algo.clone(),
+                time_us: r.time_us,
+                modeled_time_us: r.modeled_time_us,
+                workspace_bytes: r.workspace_bytes,
+                artifact_sig: sig.artifact_sig(&r.algo, None),
+            })
+            .collect();
+        if opts.rank_by_model {
+            out.sort_by(|a, b| a.modeled_time_us.total_cmp(&b.modeled_time_us));
+        }
+        out
+    }
+
+    /// Immediate mode: best algorithm without benchmarking — find-db hit
+    /// if present, otherwise the GCN model's pick (MIOpen's
+    /// `miopenConvolutionForwardImmediate` analog).
+    pub fn immediate_algo(&self, problem: &ConvProblem) -> Result<String> {
+        let sig = problem.sig()?;
+        if let Some(records) = self.find_db().get(&sig.db_key()) {
+            if let Some(first) = records.first() {
+                return Ok(first.algo.clone());
+            }
+        }
+        crate::solvers::applicable(&sig)
+            .iter()
+            .map(|s| (s.name(), s.modeled_time_us(&sig, &self.model)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(n, _)| n.to_string())
+            .ok_or_else(|| {
+                MiopenError::NotApplicable("no applicable solver".into())
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DType;
+
+    fn problem() -> ConvProblem {
+        ConvProblem::forward(
+            TensorDesc::nchw(4, 16, 28, 28, DType::F32),
+            FilterDesc::kcrs(32, 16, 3, 3, DType::F32),
+            ConvDesc::simple(1, 1),
+        )
+    }
+
+    #[test]
+    fn direction_strings() {
+        assert_eq!(Direction::Forward.as_str(), "fwd");
+        assert_eq!(Direction::BackwardData.as_str(), "bwd");
+        assert_eq!(Direction::BackwardWeights.as_str(), "wrw");
+    }
+
+    #[test]
+    fn problem_sig_matches_config_format() {
+        let sig = problem().sig().unwrap();
+        assert_eq!(sig.db_key(),
+                   "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32");
+    }
+
+    #[test]
+    fn transpose_maps_to_bwd_kernels() {
+        let mut p = problem();
+        p.conv.mode = ConvMode::Transpose;
+        assert_eq!(p.sig().unwrap().direction, "bwd");
+        p.direction = Direction::BackwardData;
+        assert_eq!(p.sig().unwrap().direction, "fwd");
+    }
+
+    #[test]
+    fn invalid_conv_desc_rejected() {
+        let mut p = problem();
+        p.conv.stride = (0, 0);
+        assert!(p.sig().is_err());
+    }
+}

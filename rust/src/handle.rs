@@ -1,0 +1,233 @@
+//! The library handle (`miopenHandle_t` analog, paper §III-D).
+//!
+//! One `Handle` owns the backend (PJRT CPU client or the mock), the
+//! two-level kernel cache, the artifact manifest, the find/perf databases
+//! (system + user overlay) and the GCN perf model. All primitive and
+//! fusion entry points hang off it.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::cache::{compile_cached, CacheStats, DiskCache, ExecCache};
+use crate::db::{DbStore, FindDb, PerfDb};
+use crate::manifest::Manifest;
+use crate::perfmodel::GcnModel;
+use crate::runtime::{Backend, CpuBackend, Executable, HostTensor, MockBackend,
+                     MockConfig};
+use crate::types::{MiopenError, Result};
+use crate::util::rng::SplitMix64;
+
+/// Backend selection for handle creation — the analog of creating the
+/// `miopenHandle` with a HIP stream vs an OpenCL context (§III-D).
+pub enum BackendChoice {
+    Cpu,
+    Mock(MockConfig),
+}
+
+pub struct HandleOptions {
+    pub backend: BackendChoice,
+    /// Artifact directory; None = `<repo>/artifacts` or $MIOPEN_RS_ARTIFACTS.
+    pub artifacts_dir: Option<PathBuf>,
+    /// User db directory; None = $MIOPEN_RS_DB_DIR or ~/.config/miopen-rs.
+    pub db_dir: Option<PathBuf>,
+    /// In-memory executable cache capacity.
+    pub exec_cache_capacity: usize,
+    /// Timed iterations per algorithm in the find step.
+    pub find_iters: usize,
+    /// Warmup runs before timing (the §III-C warmup recommendation).
+    pub warmup_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for HandleOptions {
+    fn default() -> Self {
+        Self {
+            backend: BackendChoice::Cpu,
+            artifacts_dir: None,
+            db_dir: None,
+            exec_cache_capacity: 256,
+            find_iters: 3,
+            warmup_iters: 1,
+            seed: 0x5EED,
+        }
+    }
+}
+
+pub struct Handle {
+    pub(crate) backend: Box<dyn Backend>,
+    pub(crate) manifest: Manifest,
+    pub(crate) exec_cache: ExecCache,
+    pub(crate) disk_cache: DiskCache,
+    pub(crate) system_find: FindDb,
+    pub(crate) user_find: RefCell<FindDb>,
+    pub(crate) system_perf: PerfDb,
+    pub(crate) user_perf: RefCell<PerfDb>,
+    pub(crate) db_store: DbStore,
+    pub(crate) model: GcnModel,
+    pub(crate) rng: RefCell<SplitMix64>,
+    pub(crate) find_iters: usize,
+    pub(crate) warmup_iters: usize,
+}
+
+impl Handle {
+    pub fn new(opts: HandleOptions) -> Result<Self> {
+        let backend: Box<dyn Backend> = match opts.backend {
+            BackendChoice::Cpu => Box::new(CpuBackend::new()?),
+            BackendChoice::Mock(cfg) => Box::new(MockBackend::new(cfg)),
+        };
+        let dir = opts
+            .artifacts_dir
+            .unwrap_or_else(crate::testutil::artifacts_dir);
+        let manifest = Manifest::load(&dir)?;
+
+        // System dbs ship next to the artifacts (produced by tuning runs /
+        // CI); user dbs live in the config dir and shadow them.
+        let system_store = DbStore::at(dir.join("system_db"));
+        let system_find = system_store.load_find_db().unwrap_or_default();
+        let system_perf = system_store.load_perf_db().unwrap_or_default();
+
+        let db_store = match opts.db_dir {
+            Some(d) => DbStore::at(d),
+            None => DbStore::user_default(),
+        };
+        let user_find = db_store.load_find_db().unwrap_or_default();
+        let user_perf = db_store.load_perf_db().unwrap_or_default();
+
+        Ok(Self {
+            backend,
+            manifest,
+            exec_cache: ExecCache::new(opts.exec_cache_capacity),
+            disk_cache: DiskCache::new(),
+            system_find,
+            user_find: RefCell::new(user_find),
+            system_perf,
+            user_perf: RefCell::new(user_perf),
+            db_store,
+            model: GcnModel::default(),
+            rng: RefCell::new(SplitMix64::new(opts.seed)),
+            find_iters: opts.find_iters.max(1),
+            warmup_iters: opts.warmup_iters,
+        })
+    }
+
+    /// Convenience: mock-backed handle for tests (no PJRT, no artifacts
+    /// needed beyond the manifest).
+    pub fn mock_with_manifest(manifest: Manifest, cfg: MockConfig,
+                              db_dir: PathBuf) -> Self {
+        Self {
+            backend: Box::new(MockBackend::new(cfg)),
+            manifest,
+            exec_cache: ExecCache::new(64),
+            disk_cache: DiskCache::new(),
+            system_find: FindDb::default(),
+            user_find: RefCell::new(FindDb::default()),
+            system_perf: PerfDb::default(),
+            user_perf: RefCell::new(PerfDb::default()),
+            db_store: DbStore::at(db_dir),
+            model: GcnModel::default(),
+            rng: RefCell::new(SplitMix64::new(7)),
+            find_iters: 2,
+            warmup_iters: 1,
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn perf_model(&self) -> &GcnModel {
+        &self.model
+    }
+
+    pub fn cache_stats(&self) -> (CacheStats, CacheStats) {
+        (self.exec_cache.stats(), self.disk_cache.stats())
+    }
+
+    /// Compile (through both cache levels) the artifact with signature `sig`.
+    pub fn compile_sig(&self, sig: &str) -> Result<Rc<dyn Executable>> {
+        compile_cached(&self.exec_cache, &self.disk_cache, &self.manifest,
+                       self.backend.as_ref(), sig)
+    }
+
+    /// Compile bypassing the in-memory cache (cold-path measurement for
+    /// the cache ablation bench).
+    pub fn compile_sig_cold(&self, sig: &str) -> Result<Rc<dyn Executable>> {
+        let path = self.disk_cache.lookup(&self.manifest, sig)?;
+        let art = self.manifest.require(sig)?;
+        self.backend.compile(&path, &art.outputs)
+    }
+
+    /// Execute an artifact by signature with the given inputs.
+    pub fn execute_sig(&self, sig: &str, inputs: &[HostTensor])
+        -> Result<Vec<HostTensor>> {
+        let art = self.manifest.require(sig)?;
+        if inputs.len() != art.inputs.len() {
+            return Err(MiopenError::ShapeMismatch(format!(
+                "{sig}: expected {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&art.inputs).enumerate() {
+            if t.spec != *spec {
+                return Err(MiopenError::ShapeMismatch(format!(
+                    "{sig}: input {i} is {:?}/{}, expected {:?}/{}",
+                    t.spec.shape, t.spec.dtype, spec.shape, spec.dtype
+                )));
+            }
+        }
+        self.compile_sig(sig)?.run(inputs)
+    }
+
+    /// Generate manifest-conformant random inputs for an artifact (the
+    /// find step's benchmark data).
+    pub fn random_inputs(&self, sig: &str) -> Result<Vec<HostTensor>> {
+        let art = self.manifest.require(sig)?;
+        let mut rng = self.rng.borrow_mut();
+        Ok(art
+            .inputs
+            .iter()
+            .map(|spec| HostTensor::random_normal(spec, &mut rng))
+            .collect())
+    }
+
+    /// Time one executable: `warmup_iters` untimed + `find_iters` timed
+    /// runs, reporting the median (µs).
+    pub fn time_exec(&self, exe: &Rc<dyn Executable>, inputs: &[HostTensor])
+        -> Result<f64> {
+        for _ in 0..self.warmup_iters {
+            exe.run(inputs)?;
+        }
+        let mut times = Vec::with_capacity(self.find_iters);
+        for _ in 0..self.find_iters {
+            let t = Instant::now();
+            exe.run(inputs)?;
+            times.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        times.sort_by(f64::total_cmp);
+        Ok(times[times.len() / 2])
+    }
+
+    /// Merged find-db view (user shadows system).
+    pub fn find_db(&self) -> FindDb {
+        self.system_find.merged_with(&self.user_find.borrow())
+    }
+
+    /// Merged perf-db view.
+    pub fn perf_db(&self) -> PerfDb {
+        self.system_perf.merged_with(&self.user_perf.borrow())
+    }
+
+    /// Persist the user dbs (find results + tuned params survive the
+    /// process, §III-B "serialized to a designated directory").
+    pub fn save_dbs(&self) -> Result<()> {
+        self.db_store.save_find_db(&self.user_find.borrow())?;
+        self.db_store.save_perf_db(&self.user_perf.borrow())
+    }
+}

@@ -1,0 +1,61 @@
+//! # miopen-rs
+//!
+//! Reproduction of **"MIOpen: An Open Source Library For Deep Learning
+//! Primitives"** (AMD, 2019) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! - **L1/L2** (build time, Python): Pallas kernels + JAX graphs, AOT-lowered
+//!   to HLO text artifacts by `make artifacts`.
+//! - **L3** (this crate): the MIOpen library proper — descriptors, the
+//!   solver registry, the find step, auto-tuning with a persistent perf-db,
+//!   two-level kernel caching, the fusion API with its constraint metadata
+//!   graph, and a batched inference driver. Python never runs at request
+//!   time; the binary is self-contained once `artifacts/` exists.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//! ```no_run
+//! use miopen_rs::prelude::*;
+//! let handle = Handle::new(Default::default()).unwrap();
+//! let conv = ConvDesc::new((1, 1), (1, 1), (1, 1), ConvMode::CrossCorrelation, 1);
+//! let problem = ConvProblem::forward(
+//!     TensorDesc::nchw(4, 16, 28, 28, DType::F32),
+//!     FilterDesc::kcrs(32, 16, 3, 3, DType::F32),
+//!     conv,
+//! );
+//! let results = handle.find_convolution(&problem).unwrap();
+//! println!("best algo: {}", results[0].algo);
+//! ```
+
+pub mod bench;
+pub mod cache;
+pub mod cli;
+pub mod db;
+pub mod descriptors;
+pub mod find;
+pub mod fusion;
+pub mod handle;
+pub mod manifest;
+pub mod metrics;
+pub mod perfmodel;
+pub mod primitives;
+pub mod runtime;
+pub mod serve;
+pub mod solvers;
+pub mod testutil;
+pub mod tuning;
+pub mod types;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for library users.
+pub mod prelude {
+    pub use crate::descriptors::{
+        ActivationDesc, ActivationMode, BnMode, ConvDesc, ConvMode,
+        FilterDesc, LrnDesc, PoolDesc, PoolMode, RnnDesc, RnnCell,
+        RnnDirection, RnnInputMode, SoftmaxMode, TensorDesc,
+    };
+    pub use crate::find::{ConvAlgoPerf, ConvProblem, Direction};
+    pub use crate::fusion::{FusionOp, FusionPlan};
+    pub use crate::handle::{Handle, HandleOptions};
+    pub use crate::types::{DType, MiopenError, Result};
+}

@@ -1,0 +1,297 @@
+//! `miopen` — the L3 coordinator binary.
+//!
+//! Subcommands cover the library's workflows: the find step, tuning
+//! sessions, raw artifact execution, the batched inference server, the
+//! E2E training loop, fusion-plan checks and the supported-fusion tables.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use miopen_rs::cli::{Args, USAGE};
+use miopen_rs::descriptors::{ActivationDesc, ActivationMode, BnMode,
+                             ConvDesc, ConvMode, FilterDesc, TensorDesc};
+use miopen_rs::find::{ConvProblem, Direction, FindOptions};
+use miopen_rs::fusion::{enumerate_supported, FusionOp, FusionPlan};
+use miopen_rs::handle::{Handle, HandleOptions};
+use miopen_rs::prelude::DType;
+use miopen_rs::serve::{generate_load, run_server, ServeConfig};
+use miopen_rs::tuning::{format_params, TuneOptions, TuningSession};
+use miopen_rs::types::Result;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn make_handle(args: &Args) -> Result<Handle> {
+    let mut opts = HandleOptions::default();
+    if let Some(dir) = args.opt("artifacts") {
+        opts.artifacts_dir = Some(PathBuf::from(dir));
+    }
+    if let Some(dir) = args.opt("db-dir") {
+        opts.db_dir = Some(PathBuf::from(dir));
+    }
+    Handle::new(opts)
+}
+
+fn conv_problem(args: &Args) -> ConvProblem {
+    let n = args.opt_usize("n", 4);
+    let c = args.opt_usize("c", 16);
+    let h = args.opt_usize("h", 28);
+    let w = args.opt_usize("w", 28);
+    let k = args.opt_usize("k", 32);
+    let r = args.opt_usize("r", 3);
+    let s = args.opt_usize("s", args.opt_usize("r", 3));
+    let stride = args.opt_usize("stride", 1);
+    let pad = args.opt_usize("pad", 1);
+    let dil = args.opt_usize("dilation", 1);
+    let groups = args.opt_usize("groups", 1);
+    let direction = match args.opt("direction").unwrap_or("fwd") {
+        "bwd" => Direction::BackwardData,
+        "wrw" => Direction::BackwardWeights,
+        _ => Direction::Forward,
+    };
+    ConvProblem {
+        x: TensorDesc::nchw(n, c, h, w, DType::F32),
+        w: FilterDesc::kcrs(k, c / groups, r, s, DType::F32),
+        conv: ConvDesc::new((stride, stride), (pad, pad), (dil, dil),
+                            ConvMode::CrossCorrelation, groups),
+        direction,
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("find") => cmd_find(args),
+        Some("tune") => cmd_tune(args),
+        Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
+        Some("train") => cmd_train(args),
+        Some("fusion-check") => cmd_fusion_check(args),
+        Some("tables") => cmd_tables(),
+        Some("artifacts-check") => cmd_artifacts_check(args),
+        Some("info") => cmd_info(args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_find(args: &Args) -> Result<()> {
+    let handle = make_handle(args)?;
+    let problem = conv_problem(args);
+    let opts = FindOptions {
+        exhaustive: args.flag("exhaustive"),
+        rank_by_model: args.flag("model"),
+    };
+    let sig = problem.sig()?;
+    println!("find: {}", sig.db_key());
+    let results = handle.find_convolution_opt(&problem, &opts)?;
+    let mut table = miopen_rs::bench::Table::new(
+        &["algo", "measured_us", "gcn_model_us", "workspace_bytes"]);
+    for r in &results {
+        table.row(vec![
+            r.algo.clone(),
+            format!("{:.1}", r.time_us),
+            format!("{:.1}", r.modeled_time_us),
+            r.workspace_bytes.to_string(),
+        ]);
+    }
+    table.print();
+    handle.save_dbs()?;
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let handle = make_handle(args)?;
+    let problem = conv_problem(args);
+    let session = TuningSession::with_options(&handle, TuneOptions {
+        prune_keep: args.opt_usize("prune", 0),
+    });
+    for result in session.tune_convolution(&problem)? {
+        println!(
+            "solver {}: best [{}] at {:.1}us ({} grid points, {} pruned)",
+            result.solver,
+            format_params(&result.best_params),
+            result.best_time_us,
+            result.evaluated.len(),
+            result.pruned_out,
+        );
+        if let Some(sp) = result.speedup_vs_default() {
+            println!("  speedup vs default: {sp:.2}x");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let handle = make_handle(args)?;
+    let sig = args
+        .opt("sig")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| miopen_rs::types::MiopenError::BadDescriptor(
+            "run requires --sig <signature>".into()))?;
+    let iters = args.opt_usize("iters", 3);
+    let exe = handle.compile_sig(&sig)?;
+    let inputs = handle.random_inputs(&sig)?;
+    let mut stats = miopen_rs::metrics::TimingStats::new();
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        exe.run(&inputs)?;
+        stats.record(t.elapsed().as_secs_f64() * 1e6);
+    }
+    println!("{sig}: {}", stats.summary());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let handle = make_handle(args)?;
+    let n = args.opt_usize("requests", 64);
+    let rate = args.opt_f64("rate", 200.0);
+    let cfg = ServeConfig {
+        batch_max: args.opt_usize("batch", 16),
+        batch_timeout: Duration::from_millis(
+            args.opt_usize("timeout-ms", 5) as u64),
+    };
+    let infer = handle.manifest().require("cnn_infer-f32")?;
+    let image_elems: usize =
+        infer.inputs.last().unwrap().shape[1..].iter().product();
+
+    let (tx, rx) = mpsc::channel();
+    let loader = std::thread::spawn(move || {
+        generate_load(&tx, n, rate, image_elems, 42)
+    });
+    let stats = run_server(&handle, &cfg, rx)?;
+    let responses = loader.join().expect("load generator panicked");
+    let served = responses.iter().count();
+    println!("served {served}/{n} requests");
+    println!("latency: {}", stats.latency.summary());
+    println!("mean batch size: {:.2}", stats.throughput.mean_batch_size());
+    println!("throughput: {:.1} req/s", stats.throughput.req_per_s());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let handle = make_handle(args)?;
+    let steps = args.opt_usize("steps", 100);
+    let log_every = args.opt_usize("log-every", 10);
+    train_loop(&handle, steps, log_every)
+}
+
+/// The pure-Rust training loop over the AOT'd train-step artifact
+/// (exercised end-to-end by examples/train_cnn.rs).
+fn train_loop(handle: &Handle, steps: usize, log_every: usize) -> Result<()> {
+    let mut params = handle.execute_sig("cnn_init-f32", &[])?;
+    for step in 0..steps {
+        let seed = miopen_rs::runtime::HostTensor::from_u32(
+            &[2], &[step as u32, 0xDA7A]);
+        let batch = handle.execute_sig("cnn_datagen-f32", &[seed])?;
+        let mut inputs = params.clone();
+        inputs.extend(batch);
+        let mut out = handle.execute_sig("cnn_train-f32", &inputs)?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        params = out;
+        if step % log_every == 0 || step == steps - 1 {
+            println!("step {step:4}  loss {loss:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fusion_check(args: &Args) -> Result<()> {
+    let combo = args.opt("combination").unwrap_or("CBA");
+    let f = args.opt_usize("filter", 3);
+    let stride = args.opt_usize("stride", 1);
+    let pad = args.opt_usize("pad", 1);
+    let c = args.opt_usize("channels", 32);
+    let act = match args.opt("act").unwrap_or("relu") {
+        "leaky_relu" => ActivationMode::LeakyRelu,
+        "tanh" => ActivationMode::Tanh,
+        "sigmoid" => ActivationMode::Sigmoid,
+        _ => ActivationMode::Relu,
+    };
+    let input = TensorDesc::nchw(4, c, 28, 28, DType::F32);
+    let conv = FusionOp::Conv {
+        desc: ConvDesc::simple(stride, pad),
+        filter: FilterDesc::kcrs(32, c, f, f, DType::F32),
+    };
+    let act_op = FusionOp::Activation { desc: ActivationDesc::new(act) };
+    let plan = match combo {
+        "CBNA" => FusionPlan::new(input)
+            .add(conv)
+            .add(FusionOp::Bias)
+            .add(FusionOp::BatchNorm { mode: BnMode::Spatial })
+            .add(act_op),
+        "NA" => FusionPlan::new(input)
+            .add(FusionOp::BatchNorm { mode: BnMode::Spatial })
+            .add(act_op),
+        _ => FusionPlan::new(input).add(conv).add(FusionOp::Bias).add(act_op),
+    };
+    match plan.check() {
+        Ok(m) => println!("ACCEPTED: {} via {} kernels",
+                          m.combination, m.conv_algo),
+        Err(e) => println!("REJECTED: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_tables() -> Result<()> {
+    for (dtype, title) in [(DType::F32, "TABLE I (single precision)"),
+                           (DType::F16, "TABLE II (half precision)")] {
+        println!("\n{title}");
+        let mut table = miopen_rs::bench::Table::new(
+            &["Combination", "Conv Algo", "Stride", "Filter",
+              "Other Constraints"]);
+        for row in enumerate_supported(dtype) {
+            table.row(vec![
+                row.combination,
+                row.conv_algo.to_string(),
+                if row.stride == 0 { "-".into() }
+                else { row.stride.to_string() },
+                if row.filter == 0 { "-".into() }
+                else { format!("{0}x{0}", row.filter) },
+                row.channels_constraint,
+            ]);
+        }
+        table.print();
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let handle = make_handle(args)?;
+    let manifest = handle.manifest();
+    let mut missing = 0;
+    for art in &manifest.artifacts {
+        if !manifest.path_of(art).exists() {
+            println!("MISSING {}", art.sig);
+            missing += 1;
+        }
+    }
+    println!("{} artifacts, {missing} missing", manifest.len());
+    if missing > 0 {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let handle = make_handle(args)?;
+    println!("platform: {}", handle.platform());
+    println!("artifacts: {}", handle.manifest().len());
+    println!("perf model: {}", handle.perf_model().name);
+    let (exec, disk) = handle.cache_stats();
+    println!("exec cache: {exec:?}");
+    println!("disk cache: {disk:?}");
+    Ok(())
+}

@@ -1,0 +1,290 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Rust never re-derives shapes from HLO — the manifest is
+//! authoritative for input/output shapes, dtypes, workspace sizes, tags
+//! and tuning variants.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::types::{DType, MiopenError, Result};
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn size_bytes(&self) -> usize {
+        self.elem_count() * self.dtype.size_bytes()
+    }
+}
+
+/// One AOT'd computation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub sig: String,
+    pub file: String,
+    pub primitive: String,
+    pub algo: String,
+    pub direction: String,
+    pub dtype: DType,
+    pub tags: Vec<String>,
+    /// Free-form problem parameters (n/c/h/w/k/... for conv, t/b/x/hid for
+    /// rnn, ...). Values are integers where applicable.
+    pub params: HashMap<String, i64>,
+    pub label: Option<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub workspace_bytes: u64,
+    pub tuning: HashMap<String, i64>,
+}
+
+impl Artifact {
+    pub fn has_tag(&self, tag: &str) -> bool {
+        self.tags.iter().any(|t| t == tag)
+    }
+    pub fn param(&self, key: &str) -> Option<i64> {
+        self.params.get(key).copied()
+    }
+}
+
+/// Parsed manifest with index by signature.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+    index: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            MiopenError::ArtifactMissing(format!(
+                "{} (run `make artifacts`): {e}", path.display()))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = json::parse(text)
+            .map_err(|e| MiopenError::Manifest(e.to_string()))?;
+        let arr = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| MiopenError::Manifest("missing artifacts".into()))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            artifacts.push(parse_artifact(a)?);
+        }
+        let index = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.sig.clone(), i))
+            .collect();
+        Ok(Self { dir, artifacts, index })
+    }
+
+    pub fn get(&self, sig: &str) -> Option<&Artifact> {
+        self.index.get(sig).map(|&i| &self.artifacts[i])
+    }
+
+    pub fn require(&self, sig: &str) -> Result<&Artifact> {
+        self.get(sig).ok_or_else(|| {
+            MiopenError::ArtifactMissing(format!(
+                "signature '{sig}' not in manifest (re-run `make artifacts`)"
+            ))
+        })
+    }
+
+    pub fn path_of(&self, art: &Artifact) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+
+    /// All artifacts carrying a tag (figure/bench grouping).
+    pub fn by_tag<'a>(&'a self, tag: &'a str) -> impl Iterator<Item = &'a Artifact> {
+        self.artifacts.iter().filter(move |a| a.has_tag(tag))
+    }
+
+    pub fn by_primitive<'a>(&'a self, p: &'a str) -> impl Iterator<Item = &'a Artifact> {
+        self.artifacts.iter().filter(move |a| a.primitive == p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<Artifact> {
+    let str_field = |k: &str| -> Result<String> {
+        a.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| MiopenError::Manifest(format!("missing field {k}")))
+    };
+    let sig = str_field("sig")?;
+    let dtype_s = str_field("dtype")?;
+    let dtype = DType::parse(&dtype_s)
+        .ok_or_else(|| MiopenError::Manifest(format!("bad dtype {dtype_s}")))?;
+
+    let tags = a
+        .get("tags")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(Json::as_str)
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let mut params = HashMap::new();
+    let mut label = None;
+    if let Some(obj) = a.get("params").and_then(Json::as_obj) {
+        for (k, v) in obj {
+            match v {
+                Json::Num(n) => {
+                    params.insert(k.clone(), *n as i64);
+                }
+                Json::Str(s) if k == "label" => label = Some(s.clone()),
+                Json::Bool(b) => {
+                    params.insert(k.clone(), *b as i64);
+                }
+                _ => {} // nested lists (pool windows etc.) are re-derived
+            }
+        }
+    }
+
+    let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+        let arr = a
+            .get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| MiopenError::Manifest(format!("missing {k}")))?;
+        arr.iter()
+            .map(|t| {
+                let shape = t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| MiopenError::Manifest("missing shape".into()))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect();
+                let dt = t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .and_then(DType::parse)
+                    .ok_or_else(|| MiopenError::Manifest("bad tensor dtype".into()))?;
+                Ok(TensorSpec { shape, dtype: dt })
+            })
+            .collect()
+    };
+
+    let mut tuning = HashMap::new();
+    if let Some(obj) = a.get("tuning").and_then(Json::as_obj) {
+        for (k, v) in obj {
+            if let Some(n) = v.as_i64() {
+                tuning.insert(k.clone(), n);
+            }
+        }
+    }
+
+    Ok(Artifact {
+        sig,
+        file: str_field("file")?,
+        primitive: str_field("primitive")?,
+        algo: str_field("algo").unwrap_or_default(),
+        direction: str_field("direction").unwrap_or_default(),
+        dtype,
+        tags,
+        params,
+        label,
+        inputs: specs("inputs")?,
+        outputs: specs("outputs")?,
+        workspace_bytes: a
+            .get("workspace_bytes")
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64,
+        tuning,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"sig": "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
+         "file": "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32.hlo.txt",
+         "primitive": "conv", "algo": "direct", "direction": "fwd",
+         "dtype": "f32", "tags": ["fig6b"],
+         "params": {"n": 4, "c": 16, "h": 28, "w": 28, "k": 32,
+                    "label": "3-3-16-28-28-32-1-1"},
+         "inputs": [{"shape": [4,16,28,28], "dtype": "f32"},
+                    {"shape": [32,16,3,3], "dtype": "f32"}],
+         "outputs": [{"shape": [4,32,28,28], "dtype": "f32"}],
+         "workspace_bytes": 0, "tuning": {"block_k": 16}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32")
+            .unwrap();
+        assert_eq!(a.primitive, "conv");
+        assert_eq!(a.inputs[1].shape, vec![32, 16, 3, 3]);
+        assert_eq!(a.outputs[0].elem_count(), 4 * 32 * 28 * 28);
+        assert_eq!(a.param("k"), Some(32));
+        assert_eq!(a.label.as_deref(), Some("3-3-16-28-28-32-1-1"));
+        assert_eq!(a.tuning.get("block_k"), Some(&16));
+        assert!(a.has_tag("fig6b"));
+        assert!(m.by_tag("fig6b").count() == 1);
+        assert!(m.by_tag("fig6a").count() == 0);
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.require("nope").unwrap_err();
+        assert!(err.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn rejects_bad_docs() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("[1,2]", PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration sanity: if `make artifacts` has run, the real manifest
+        // must parse and every conv artifact's signature must round-trip.
+        let dir = crate::testutil::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.len() > 100, "expected full artifact set, got {}", m.len());
+        for a in m.by_primitive("conv") {
+            let (p, algo, _) =
+                crate::types::ProblemSig::parse_artifact(&a.sig).unwrap();
+            assert_eq!(algo, a.algo);
+            assert_eq!(p.dtype, a.dtype);
+            assert!(m.path_of(a).exists(), "missing file for {}", a.sig);
+        }
+    }
+}

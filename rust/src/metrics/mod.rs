@@ -1,0 +1,161 @@
+//! Timing statistics for the find step, benches, and the serving driver.
+
+/// Online summary of a set of duration samples (µs).
+#[derive(Debug, Clone, Default)]
+pub struct TimingStats {
+    samples: Vec<f64>,
+}
+
+impl TimingStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, us: f64) {
+        self.samples.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by linear interpolation between closest ranks.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p99={:.1}us min={:.1}us max={:.1}us",
+            self.count(),
+            self.mean(),
+            self.median(),
+            self.p99(),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+/// Throughput accounting for the serve driver.
+#[derive(Debug, Clone, Default)]
+pub struct Throughput {
+    pub requests: u64,
+    pub batches: u64,
+    pub wall_s: f64,
+}
+
+impl Throughput {
+    pub fn req_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.wall_s
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = TimingStats::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record(v);
+        }
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-9);
+        assert!((s.mean() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_stats() {
+        let mut s = TimingStats::new();
+        s.record(7.0);
+        assert_eq!(s.median(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = TimingStats::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn stddev_known_value() {
+        let mut s = TimingStats::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(v);
+        }
+        assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput { requests: 100, batches: 25, wall_s: 4.0 };
+        assert_eq!(t.req_per_s(), 25.0);
+        assert_eq!(t.mean_batch_size(), 4.0);
+        let zero = Throughput::default();
+        assert_eq!(zero.req_per_s(), 0.0);
+        assert_eq!(zero.mean_batch_size(), 0.0);
+    }
+}

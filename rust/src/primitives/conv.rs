@@ -1,0 +1,77 @@
+//! Convolution execution (paper §IV-A): find-then-run, or immediate mode.
+
+use crate::descriptors::{ConvDesc, FilterDesc, TensorDesc};
+use crate::find::{ConvProblem, Direction, FindOptions};
+use crate::handle::Handle;
+use crate::runtime::HostTensor;
+use crate::types::{MiopenError, Result};
+
+/// `miopenConvolutionForward` with an explicit algorithm choice.
+pub fn forward_with_algo(handle: &Handle, algo: &str, x: &HostTensor,
+                         w: &HostTensor, conv: &ConvDesc)
+    -> Result<HostTensor> {
+    run_direction(handle, algo, Direction::Forward, x, w, conv)
+}
+
+/// `miopenConvolutionForward` using the find step's best algorithm
+/// (memoized via the find-db).
+pub fn forward(handle: &Handle, x: &HostTensor, w: &HostTensor,
+               conv: &ConvDesc) -> Result<HostTensor> {
+    let problem = problem_for(Direction::Forward, x, w, conv)?;
+    let results = handle.find_convolution_opt(&problem,
+                                              &FindOptions::default())?;
+    forward_with_algo(handle, &results[0].algo, x, w, conv)
+}
+
+/// `miopenConvolutionBackwardData`: dy + w -> dx. `x_desc` fixes the
+/// input-gradient shape.
+pub fn backward_data(handle: &Handle, algo: &str, dy: &HostTensor,
+                     w: &HostTensor, x_desc: &TensorDesc, conv: &ConvDesc)
+    -> Result<HostTensor> {
+    let filter = filter_from(w)?;
+    let problem = ConvProblem::backward_data(x_desc.clone(), filter, *conv);
+    let sig = problem.sig()?;
+    let art_sig = sig.artifact_sig(algo, None);
+    let mut out = handle.execute_sig(&art_sig, &[dy.clone(), w.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+/// `miopenConvolutionBackwardWeights`: dy + x -> dw.
+pub fn backward_weights(handle: &Handle, algo: &str, dy: &HostTensor,
+                        x: &HostTensor, w_shape: &[usize], conv: &ConvDesc)
+    -> Result<HostTensor> {
+    let x_desc = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype);
+    let filter = FilterDesc::kcrs(w_shape[0], w_shape[1], w_shape[2],
+                                  w_shape[3], x.spec.dtype);
+    let problem = ConvProblem::backward_weights(x_desc, filter, *conv);
+    let sig = problem.sig()?;
+    let art_sig = sig.artifact_sig(algo, None);
+    let mut out = handle.execute_sig(&art_sig, &[dy.clone(), x.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+fn run_direction(handle: &Handle, algo: &str, dir: Direction,
+                 x: &HostTensor, w: &HostTensor, conv: &ConvDesc)
+    -> Result<HostTensor> {
+    let problem = problem_for(dir, x, w, conv)?;
+    let sig = problem.sig()?;
+    let art_sig = sig.artifact_sig(algo, None);
+    let mut out = handle.execute_sig(&art_sig, &[x.clone(), w.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+fn problem_for(dir: Direction, x: &HostTensor, w: &HostTensor,
+               conv: &ConvDesc) -> Result<ConvProblem> {
+    let x_desc = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype);
+    let filter = filter_from(w)?;
+    Ok(ConvProblem { x: x_desc, w: filter, conv: *conv, direction: dir })
+}
+
+fn filter_from(w: &HostTensor) -> Result<FilterDesc> {
+    if w.spec.shape.len() != 4 {
+        return Err(MiopenError::BadDescriptor(
+            "filter must be KCRS rank-4".into()));
+    }
+    Ok(FilterDesc::kcrs(w.spec.shape[0], w.spec.shape[1], w.spec.shape[2],
+                        w.spec.shape[3], w.spec.dtype))
+}

@@ -1,0 +1,223 @@
+//! High-level primitive entry points (paper §IV): the `miopen*Forward`
+//! family. Each wrapper assembles the artifact signature from its
+//! descriptors, validates shapes against the manifest, and executes
+//! through the handle's cache.
+//!
+//! Like MIOpen with its pre-tuned kernel database, immediate-mode
+//! execution requires the (primitive, config) to be covered by the AOT'd
+//! artifact set; unknown configs fail with `ArtifactMissing` and a pointer
+//! to configs.py (the analog of MIOpen falling back to runtime clang
+//! compilation, which an AOT deployment forbids on the request path).
+
+pub mod conv;
+
+use crate::descriptors::{ActivationDesc, BnMode, LrnDesc, PoolDesc,
+                         RnnCell, RnnDesc, SoftmaxMode, TensorDesc};
+use crate::handle::Handle;
+use crate::runtime::HostTensor;
+use crate::types::{MiopenError, Result};
+
+fn nchw_sig(t: &TensorDesc) -> Result<String> {
+    let (n, c, h, w) = t.nchw_dims()?;
+    Ok(format!("n{n}c{c}h{h}w{w}"))
+}
+
+// ---------------------------------------------------------------------------
+// Batch normalization (§IV-B)
+// ---------------------------------------------------------------------------
+
+/// `miopenBatchNormalizationForwardTraining`: returns (y, mean, var).
+pub fn batchnorm_fwd_train(handle: &Handle, mode: BnMode, x: &HostTensor,
+                           gamma: &HostTensor, beta: &HostTensor)
+    -> Result<(HostTensor, HostTensor, HostTensor)> {
+    let xd = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype);
+    let variant = match mode {
+        BnMode::Spatial => "spatial",
+        BnMode::PerActivation => "peract",
+    };
+    let sig = format!("bn_train-{variant}-{}-{}", nchw_sig(&xd)?,
+                      x.spec.dtype.name());
+    let mut out = handle.execute_sig(
+        &sig, &[x.clone(), gamma.clone(), beta.clone()])?;
+    let var = out.pop().unwrap();
+    let mean = out.pop().unwrap();
+    let y = out.pop().unwrap();
+    Ok((y, mean, var))
+}
+
+/// `miopenBatchNormalizationForwardInference` (spatial).
+pub fn batchnorm_fwd_infer(handle: &Handle, mode: BnMode, x: &HostTensor,
+                           gamma: &HostTensor, beta: &HostTensor,
+                           mean: &HostTensor, var: &HostTensor)
+    -> Result<HostTensor> {
+    let xd = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype);
+    let variant = match mode {
+        BnMode::Spatial => "spatial",
+        BnMode::PerActivation => "peract",
+    };
+    let sig = format!("bn_infer-{variant}-{}-{}", nchw_sig(&xd)?,
+                      x.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[
+        x.clone(), gamma.clone(), beta.clone(), mean.clone(), var.clone(),
+    ])?;
+    Ok(out.pop().unwrap())
+}
+
+/// `miopenBatchNormalizationBackward` (spatial): (dx, dgamma, dbeta).
+pub fn batchnorm_bwd(handle: &Handle, x: &HostTensor, dy: &HostTensor,
+                     gamma: &HostTensor, mean: &HostTensor, var: &HostTensor)
+    -> Result<(HostTensor, HostTensor, HostTensor)> {
+    let xd = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype);
+    let sig = format!("bn_bwd-spatial-{}-{}", nchw_sig(&xd)?,
+                      x.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[
+        x.clone(), dy.clone(), gamma.clone(), mean.clone(), var.clone(),
+    ])?;
+    let db = out.pop().unwrap();
+    let dg = out.pop().unwrap();
+    let dx = out.pop().unwrap();
+    Ok((dx, dg, db))
+}
+
+// ---------------------------------------------------------------------------
+// Pooling, softmax, activation, LRN, tensor ops (§IV-D)
+// ---------------------------------------------------------------------------
+
+pub fn pooling_fwd(handle: &Handle, desc: &PoolDesc, x: &HostTensor)
+    -> Result<HostTensor> {
+    let (n, c, h, w) = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype)
+        .nchw_dims()?;
+    let sig = format!(
+        "pool_fwd-{}-n{n}c{c}h{h}w{w}k{}x{}u{}p{}-{}",
+        desc.mode.name(), desc.window.0, desc.window.1, desc.stride.0,
+        desc.pad.0, x.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[x.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+pub fn pooling_bwd(handle: &Handle, desc: &PoolDesc, x: &HostTensor,
+                   y: &HostTensor, dy: &HostTensor) -> Result<HostTensor> {
+    let (n, c, h, w) = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype)
+        .nchw_dims()?;
+    let sig = format!(
+        "pool_bwd-{}-n{n}c{c}h{h}w{w}k{}x{}u{}p{}-{}",
+        desc.mode.name(), desc.window.0, desc.window.1, desc.stride.0,
+        desc.pad.0, x.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[x.clone(), y.clone(), dy.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+pub fn softmax_fwd(handle: &Handle, mode: SoftmaxMode, x: &HostTensor)
+    -> Result<HostTensor> {
+    let xd = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype);
+    let name = match mode {
+        SoftmaxMode::Softmax => "softmax",
+        SoftmaxMode::LogSoftmax => "log_softmax",
+    };
+    let sig = format!("{name}_fwd-{}-{}", nchw_sig(&xd)?, x.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[x.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+pub fn activation_fwd(handle: &Handle, desc: &ActivationDesc, x: &HostTensor)
+    -> Result<HostTensor> {
+    let (n, c, h, w) = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype)
+        .nchw_dims()?;
+    let sig = format!("act_fwd-{}-n{n}c{c}h{h}w{w}-{}", desc.mode.name(),
+                      x.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[x.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+pub fn lrn_fwd(handle: &Handle, _desc: &LrnDesc, x: &HostTensor)
+    -> Result<HostTensor> {
+    let xd = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype);
+    let sig = format!("lrn_fwd-{}-{}", nchw_sig(&xd)?, x.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[x.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+/// `miopenOpTensor` (add / mul between same-shape tensors).
+pub fn op_tensor(handle: &Handle, op: &str, a: &HostTensor, b: &HostTensor)
+    -> Result<HostTensor> {
+    if a.spec != b.spec {
+        return Err(MiopenError::ShapeMismatch(
+            "op_tensor operands differ".into()));
+    }
+    let ad = TensorDesc::new(a.spec.shape.clone(), a.spec.dtype);
+    let sig = format!("op_tensor-{op}-{}-{}", nchw_sig(&ad)?,
+                      a.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[a.clone(), b.clone()])?;
+    Ok(out.pop().unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// RNN (§IV-C)
+// ---------------------------------------------------------------------------
+
+/// `miopenRNNForward` (fused-GEMM path). Weight layout per cell:
+/// lstm: W (4H, X), R (4H, H); gru: (3H, ·); vanilla: (H, ·).
+/// Inputs in artifact order; lstm additionally takes c0.
+pub fn rnn_forward(handle: &Handle, desc: &RnnDesc, xs: &HostTensor,
+                   state: &[HostTensor], weights: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    let t = xs.spec.shape[0];
+    let b = xs.spec.shape[1];
+    let x = xs.spec.shape[2];
+    desc.validate(x)?;
+    let variant = match desc.direction {
+        crate::descriptors::RnnDirection::Bidirectional => "bidir",
+        _ => "fused",
+    };
+    let sig = format!("rnn-{}-{}-t{t}b{b}x{x}h{}-{}",
+                      desc.cell.name(), variant, desc.hidden_size,
+                      xs.spec.dtype.name());
+    let mut inputs = vec![xs.clone()];
+    inputs.extend_from_slice(state);
+    inputs.extend_from_slice(weights);
+    handle.execute_sig(&sig, &inputs)
+}
+
+/// CTC loss (§IV-D): log_probs (B,T,V), labels (B,L), lens (B,).
+pub fn ctc_loss(handle: &Handle, log_probs: &HostTensor, labels: &HostTensor,
+                input_lens: &HostTensor, label_lens: &HostTensor)
+    -> Result<HostTensor> {
+    let b = log_probs.spec.shape[0];
+    let t = log_probs.spec.shape[1];
+    let v = log_probs.spec.shape[2];
+    let l = labels.spec.shape[1];
+    let sig = format!("ctc_loss-b{b}t{t}v{v}l{l}-{}",
+                      log_probs.spec.dtype.name());
+    let mut out = handle.execute_sig(&sig, &[
+        log_probs.clone(), labels.clone(), input_lens.clone(),
+        label_lens.clone(),
+    ])?;
+    Ok(out.pop().unwrap())
+}
+
+/// Gate-count helper used by callers building RNN weights.
+pub fn rnn_weight_rows(cell: RnnCell, hidden: usize) -> usize {
+    cell.gates() * hidden
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DType;
+
+    #[test]
+    fn weight_rows() {
+        assert_eq!(rnn_weight_rows(RnnCell::Lstm, 32), 128);
+        assert_eq!(rnn_weight_rows(RnnCell::Gru, 32), 96);
+        assert_eq!(rnn_weight_rows(RnnCell::Vanilla, 32), 32);
+    }
+
+    #[test]
+    fn sig_assembly_shapes() {
+        // signature strings must match aot.py's emit_* naming
+        let x = HostTensor::from_f32(&[4, 16, 14, 14],
+                                     &vec![0.0; 4 * 16 * 14 * 14]);
+        let xd = TensorDesc::new(x.spec.shape.clone(), DType::F32);
+        assert_eq!(nchw_sig(&xd).unwrap(), "n4c16h14w14");
+    }
+}

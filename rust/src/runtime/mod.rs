@@ -1,0 +1,247 @@
+//! Runtime layer: loads AOT'd HLO-text artifacts and executes them on a
+//! PJRT client — the analog of MIOpen's device-code compile + dispatch
+//! path (§III-C/D).
+//!
+//! Two backends sit behind the [`Backend`] trait:
+//! - [`CpuBackend`] — the real thing: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`.
+//! - [`MockBackend`] — deterministic fake for unit tests and failure
+//!   injection (configurable compile/exec latency and error rates), the
+//!   analog of MIOpen's ability to enumerate kernels without a device.
+//!
+//! Host data travels as [`HostTensor`]s; conversion to/from `xla::Literal`
+//! happens only at the execution boundary.
+
+pub mod tensor;
+
+pub use tensor::HostTensor;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::manifest::TensorSpec;
+use crate::types::{MiopenError, Result};
+
+/// A compiled computation ready to run.
+pub trait Executable {
+    /// Execute with host inputs; returns the flattened output tuple.
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+    /// Declared output arity (from the manifest).
+    fn output_arity(&self) -> usize;
+}
+
+/// A compilation backend.
+pub trait Backend {
+    /// Compile the HLO text at `path`. `outputs` is the manifest's output
+    /// spec (used to unpack the result tuple / fake results in the mock).
+    fn compile(&self, path: &std::path::Path, outputs: &[TensorSpec])
+        -> Result<Rc<dyn Executable>>;
+    fn platform(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// CPU backend (PJRT)
+// ---------------------------------------------------------------------------
+
+pub struct CpuBackend {
+    client: xla::PjRtClient,
+}
+
+impl CpuBackend {
+    pub fn new() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+}
+
+impl Backend for CpuBackend {
+    fn compile(&self, path: &std::path::Path, outputs: &[TensorSpec])
+        -> Result<Rc<dyn Executable>> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Rc::new(PjrtExecutable { exe, outputs: outputs.to_vec() }))
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    outputs: Vec<TensorSpec>,
+}
+
+impl Executable for PjrtExecutable {
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| MiopenError::Runtime("no output buffer".into()))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            return Err(MiopenError::Runtime(format!(
+                "output arity mismatch: manifest {} vs tuple {}",
+                self.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&self.outputs)
+            .map(|(l, spec)| HostTensor::from_literal(l, spec))
+            .collect()
+    }
+
+    fn output_arity(&self) -> usize {
+        self.outputs.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock backend (tests, failure injection)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+pub struct MockConfig {
+    /// Simulated execution time for paths containing the key (µs).
+    pub exec_us_by_file: Vec<(String, u64)>,
+    /// Compile calls fail for paths containing any of these substrings.
+    pub fail_compile_containing: Vec<String>,
+    /// Exec calls fail for paths containing any of these substrings.
+    pub fail_exec_containing: Vec<String>,
+}
+
+/// Counters exposed for assertions.
+#[derive(Debug, Default, Clone)]
+pub struct MockStats {
+    pub compiles: usize,
+    pub execs: usize,
+}
+
+pub struct MockBackend {
+    cfg: MockConfig,
+    stats: Rc<RefCell<MockStats>>,
+}
+
+impl MockBackend {
+    pub fn new(cfg: MockConfig) -> Self {
+        Self { cfg, stats: Rc::new(RefCell::new(MockStats::default())) }
+    }
+
+    pub fn stats_handle(&self) -> Rc<RefCell<MockStats>> {
+        Rc::clone(&self.stats)
+    }
+}
+
+impl Backend for MockBackend {
+    fn compile(&self, path: &std::path::Path, outputs: &[TensorSpec])
+        -> Result<Rc<dyn Executable>> {
+        let name = path.to_string_lossy().to_string();
+        if self.cfg.fail_compile_containing.iter().any(|s| name.contains(s)) {
+            return Err(MiopenError::Runtime(format!(
+                "mock compile failure for {name}")));
+        }
+        self.stats.borrow_mut().compiles += 1;
+        let exec_us = self
+            .cfg
+            .exec_us_by_file
+            .iter()
+            .find(|(s, _)| name.contains(s))
+            .map(|(_, us)| *us)
+            .unwrap_or(10);
+        let fail = self.cfg.fail_exec_containing.iter().any(|s| name.contains(s));
+        Ok(Rc::new(MockExecutable {
+            outputs: outputs.to_vec(),
+            exec_us,
+            fail,
+            name,
+            stats: Rc::clone(&self.stats),
+        }))
+    }
+
+    fn platform(&self) -> String {
+        "mock".to_string()
+    }
+}
+
+struct MockExecutable {
+    outputs: Vec<TensorSpec>,
+    exec_us: u64,
+    fail: bool,
+    name: String,
+    stats: Rc<RefCell<MockStats>>,
+}
+
+impl Executable for MockExecutable {
+    fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if self.fail {
+            return Err(MiopenError::Runtime(format!(
+                "mock exec failure for {}", self.name)));
+        }
+        self.stats.borrow_mut().execs += 1;
+        // busy-wait so find-step timings are observable and stable
+        let start = Instant::now();
+        while start.elapsed().as_micros() < self.exec_us as u128 {}
+        Ok(self.outputs.iter().map(HostTensor::zeros).collect())
+    }
+
+    fn output_arity(&self) -> usize {
+        self.outputs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DType;
+    use std::path::Path;
+
+    fn spec(shape: &[usize]) -> TensorSpec {
+        TensorSpec { shape: shape.to_vec(), dtype: DType::F32 }
+    }
+
+    #[test]
+    fn mock_backend_counts_and_fakes() {
+        let be = MockBackend::new(MockConfig::default());
+        let stats = be.stats_handle();
+        let exe = be.compile(Path::new("/x/a.hlo.txt"), &[spec(&[2, 3])]).unwrap();
+        let out = exe.run(&[]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].spec.shape, vec![2, 3]);
+        assert_eq!(stats.borrow().compiles, 1);
+        assert_eq!(stats.borrow().execs, 1);
+    }
+
+    #[test]
+    fn mock_failure_injection() {
+        let be = MockBackend::new(MockConfig {
+            fail_compile_containing: vec!["bad".into()],
+            fail_exec_containing: vec!["flaky".into()],
+            ..Default::default()
+        });
+        assert!(be.compile(Path::new("/x/bad.hlo.txt"), &[]).is_err());
+        let exe = be.compile(Path::new("/x/flaky.hlo.txt"), &[spec(&[1])]).unwrap();
+        assert!(exe.run(&[]).is_err());
+    }
+
+    #[test]
+    fn mock_exec_time_is_respected() {
+        let be = MockBackend::new(MockConfig {
+            exec_us_by_file: vec![("slow".into(), 2000)],
+            ..Default::default()
+        });
+        let exe = be.compile(Path::new("/x/slow.hlo.txt"), &[spec(&[1])]).unwrap();
+        let t = Instant::now();
+        exe.run(&[]).unwrap();
+        assert!(t.elapsed().as_micros() >= 2000);
+    }
+}

@@ -1,0 +1,333 @@
+//! Host-side tensors and their conversion to/from `xla::Literal`.
+
+use crate::manifest::TensorSpec;
+use crate::types::{DType, MiopenError, Result};
+use crate::util::rng::SplitMix64;
+
+/// A host tensor: raw bytes + spec. Data is row-major (packed NCHW).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub spec: TensorSpec,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        Self { spec: spec.clone(), data: vec![0u8; spec.size_bytes()] }
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self {
+            spec: TensorSpec { shape: shape.to_vec(), dtype: DType::F32 },
+            data,
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self {
+            spec: TensorSpec { shape: shape.to_vec(), dtype: DType::I32 },
+            data,
+        }
+    }
+
+    pub fn from_u32(shape: &[usize], values: &[u32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self {
+            spec: TensorSpec { shape: shape.to_vec(), dtype: DType::U32 },
+            data,
+        }
+    }
+
+    /// Standard-normal random tensor (find-step input generator).
+    pub fn random_normal(spec: &TensorSpec, rng: &mut SplitMix64) -> Self {
+        match spec.dtype {
+            DType::F32 => {
+                let mut vals = vec![0f32; spec.elem_count()];
+                rng.fill_normal_f32(&mut vals);
+                Self::from_f32(&spec.shape, &vals)
+            }
+            DType::Bf16 => {
+                let mut data = Vec::with_capacity(spec.elem_count() * 2);
+                for _ in 0..spec.elem_count() {
+                    data.extend_from_slice(&f32_to_bf16(rng.normal_f32()));
+                }
+                Self { spec: spec.clone(), data }
+            }
+            DType::F16 => {
+                let mut data = Vec::with_capacity(spec.elem_count() * 2);
+                for _ in 0..spec.elem_count() {
+                    data.extend_from_slice(
+                        &f32_to_f16_bits(rng.normal_f32()).to_le_bytes());
+                }
+                Self { spec: spec.clone(), data }
+            }
+            DType::I32 => {
+                let vals: Vec<i32> = (0..spec.elem_count())
+                    .map(|_| rng.below(4) as i32)
+                    .collect();
+                Self::from_i32(&spec.shape, &vals)
+            }
+            DType::U32 => {
+                let vals: Vec<u32> = (0..spec.elem_count())
+                    .map(|_| rng.next_u64() as u32)
+                    .collect();
+                Self::from_u32(&spec.shape, &vals)
+            }
+            DType::I8 => {
+                let data: Vec<u8> = (0..spec.elem_count())
+                    .map(|_| (rng.below(8) as i8 - 4) as u8)
+                    .collect();
+                Self { spec: spec.clone(), data }
+            }
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        match self.spec.dtype {
+            DType::F32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect()),
+            DType::Bf16 => Ok(self
+                .data
+                .chunks_exact(2)
+                .map(|b| bf16_to_f32([b[0], b[1]]))
+                .collect()),
+            other => Err(MiopenError::Internal(format!(
+                "as_f32 on {other} tensor"))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.spec.dtype != DType::I32 {
+            return Err(MiopenError::Internal("as_i32 on non-i32".into()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first().copied().ok_or_else(|| {
+            MiopenError::Internal("scalar_f32 on empty tensor".into())
+        })
+    }
+
+    // -- literal boundary ----------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // Single-copy path for every dtype: hand the raw little-endian
+        // bytes straight to XLA instead of materializing a typed Vec and
+        // reshaping (perf pass L3-1, EXPERIMENTS.md §Perf — the old
+        // vec1+reshape route copied f32 payloads three times).
+        let ty = match self.spec.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+            DType::Bf16 => xla::ElementType::Bf16,
+            DType::F16 => xla::ElementType::F16,
+            DType::I8 => xla::ElementType::S8,
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, &self.spec.shape, &self.data)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        let mut data = vec![0u8; spec.size_bytes()];
+        match spec.dtype {
+            DType::F32 => {
+                let vals = lit.to_vec::<f32>()?;
+                for (chunk, v) in data.chunks_exact_mut(4).zip(&vals) {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                let vals = lit.to_vec::<i32>()?;
+                for (chunk, v) in data.chunks_exact_mut(4).zip(&vals) {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::U32 => {
+                let vals = lit.to_vec::<u32>()?;
+                for (chunk, v) in data.chunks_exact_mut(4).zip(&vals) {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::Bf16 | DType::F16 => {
+                // no Vec<half> in this xla version; go through f32 convert
+                let f32lit = lit.convert(xla::PrimitiveType::F32)?;
+                let vals = f32lit.to_vec::<f32>()?;
+                for (chunk, v) in data.chunks_exact_mut(2).zip(&vals) {
+                    let enc = if spec.dtype == DType::Bf16 {
+                        f32_to_bf16(*v)
+                    } else {
+                        f32_to_f16_bits(*v).to_le_bytes()
+                    };
+                    chunk.copy_from_slice(&enc);
+                }
+            }
+            DType::I8 => {
+                let vals = lit.to_vec::<i8>()?;
+                for (b, v) in data.iter_mut().zip(&vals) {
+                    *b = *v as u8;
+                }
+            }
+        }
+        Ok(Self { spec: spec.clone(), data })
+    }
+}
+
+/// Round-to-nearest-even f32 -> bf16 (2 LE bytes). Stands in for `half`.
+pub fn f32_to_bf16(v: f32) -> [u8; 2] {
+    let bits = v.to_bits();
+    let rounding = 0x7fff + ((bits >> 16) & 1);
+    let bf = ((bits + rounding) >> 16) as u16;
+    bf.to_le_bytes()
+}
+
+pub fn bf16_to_f32(b: [u8; 2]) -> f32 {
+    f32::from_bits((u16::from_le_bytes(b) as u32) << 16)
+}
+
+/// f32 -> IEEE f16 bit pattern (round-to-nearest-even, with denormal and
+/// overflow handling).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let mut exp = ((x >> 23) & 0xff) as i32 - 127 + 15;
+    let mut man = x & 0x7f_ffff;
+    if ((x >> 23) & 0xff) == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if man != 0 { 0x200 } else { 0 };
+    }
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow -> 0
+        }
+        man |= 0x80_0000;
+        let shift = 14 - exp;
+        let half_ulp = 1u32 << (shift - 1);
+        return sign | ((man + half_ulp) >> shift) as u16;
+    }
+    exp = exp.max(0);
+    let rounded = man + 0xfff + ((man >> 13) & 1);
+    if rounded & 0x80_0000 != 0 {
+        exp += 1;
+        man = 0;
+        if exp >= 0x1f {
+            return sign | 0x7c00;
+        }
+        return sign | ((exp as u16) << 10) | (man >> 13) as u16;
+    }
+    sign | ((exp as u16) << 10) | ((rounded >> 13) & 0x3ff) as u16
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x3ff) as u32;
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign
+            } else {
+                // subnormal: value = (man / 1024) * 2^-14; normalize so the
+                // leading 1 lands in the hidden-bit position.
+                let mut shift = 0i32;
+                let mut m = man;
+                while m & 0x400 == 0 {
+                    m <<= 1;
+                    shift += 1;
+                }
+                m &= 0x3ff;
+                sign | (((127 - 14 - shift) as u32) << 23) | (m << 13)
+            }
+        }
+        0x1f => sign | 0x7f80_0000 | (man << 13),
+        e => sign | (((e as u32) + 127 - 15) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_through_bytes() {
+        let t = HostTensor::from_f32(&[2, 2], &[1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.spec.size_bytes(), 16);
+    }
+
+    #[test]
+    fn bf16_conversion_roundtrip() {
+        for v in [0.0f32, 1.0, -1.5, 3.140625, 65280.0, -0.0078125] {
+            let enc = f32_to_bf16(v);
+            let dec = bf16_to_f32(enc);
+            let rel = if v == 0.0 { dec.abs() } else { ((dec - v) / v).abs() };
+            assert!(rel < 0.01, "{v} -> {dec}");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+        // subnormal roundtrip
+        let sub = f16_bits_to_f32(0x0001);
+        assert!(sub > 0.0 && sub < 1e-7);
+        // overflow saturates to inf
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00);
+    }
+
+    #[test]
+    fn f16_roundtrip_sweep() {
+        for v in [0.5f32, 1.0, 333.25, -0.124, 6.1e-5, 1024.0] {
+            let dec = f16_bits_to_f32(f32_to_f16_bits(v));
+            let rel = ((dec - v) / v).abs();
+            assert!(rel < 1e-3, "{v} -> {dec}");
+        }
+    }
+
+    #[test]
+    fn random_normal_respects_spec() {
+        let mut rng = SplitMix64::new(1);
+        let spec = TensorSpec { shape: vec![3, 4], dtype: DType::F32 };
+        let t = HostTensor::random_normal(&spec, &mut rng);
+        assert_eq!(t.data.len(), 48);
+        let vals = t.as_f32().unwrap();
+        assert!(vals.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn zeros_are_zero() {
+        let spec = TensorSpec { shape: vec![5], dtype: DType::Bf16 };
+        let t = HostTensor::zeros(&spec);
+        assert_eq!(t.data, vec![0u8; 10]);
+    }
+}

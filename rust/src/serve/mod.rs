@@ -1,0 +1,189 @@
+//! Batched inference driver — the library-as-deployed validation path
+//! (DESIGN.md S14).
+//!
+//! MIOpen itself is a primitives library; this module is the thin serving
+//! coordinator a framework would put on top: a request queue, a dynamic
+//! batcher (batch up to the model's AOT batch size or a timeout, whichever
+//! first), and a single executor loop that owns the PJRT objects (they are
+//! not `Send`; channel-based ownership is the honest design on CPU).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::handle::Handle;
+use crate::metrics::{TimingStats, Throughput};
+use crate::runtime::HostTensor;
+use crate::types::{MiopenError, Result};
+
+/// One inference request: a single image, flattened C*S*S f32.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub resp: mpsc::Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub predicted_class: i32,
+    pub logits: Vec<f32>,
+    /// queue + batch + execute latency, µs
+    pub latency_us: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max requests per batch (clamped to the artifact's AOT batch size).
+    pub batch_max: usize,
+    /// Flush a partial batch after this long.
+    pub batch_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { batch_max: 16, batch_timeout: Duration::from_millis(5) }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub latency: TimingStats,
+    pub batch_sizes: TimingStats,
+    pub throughput: Throughput,
+}
+
+/// Run the serving loop until the request channel closes. Executes the
+/// `cnn_infer` artifact; model parameters come from `cnn_init`.
+pub fn run_server(handle: &Handle, cfg: &ServeConfig,
+                  rx: mpsc::Receiver<Request>) -> Result<ServerStats> {
+    let infer = handle.manifest().require("cnn_infer-f32")?.clone();
+    let aot_batch = infer.inputs.last().map(|s| s.shape[0]).unwrap_or(16);
+    let image_elems: usize =
+        infer.inputs.last().map(|s| s.shape[1..].iter().product()).unwrap_or(0);
+    let image_shape: Vec<usize> =
+        infer.inputs.last().map(|s| s.shape.clone()).unwrap_or_default();
+    let batch_max = cfg.batch_max.min(aot_batch).max(1);
+
+    // parameters: the seeded-init artifact (zero inputs, 7 outputs)
+    let params = handle.execute_sig("cnn_init-f32", &[])?;
+
+    // warm the exec cache before timing anything (§III-C warmup)
+    let _ = handle.compile_sig("cnn_infer-f32")?;
+
+    let mut stats = ServerStats::default();
+    let start = Instant::now();
+    let mut pending: Vec<Request> = Vec::with_capacity(batch_max);
+
+    loop {
+        // blocking wait for the first request of a batch
+        match rx.recv() {
+            Ok(req) => pending.push(req),
+            Err(_) => break, // channel closed: drain and exit
+        }
+        let deadline = Instant::now() + cfg.batch_timeout;
+        while pending.len() < batch_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => pending.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        execute_batch(handle, &infer.sig, &params, &mut pending,
+                      aot_batch, image_elems, &image_shape, &mut stats)?;
+    }
+    if !pending.is_empty() {
+        execute_batch(handle, &infer.sig, &params, &mut pending,
+                      aot_batch, image_elems, &image_shape, &mut stats)?;
+    }
+
+    stats.throughput.wall_s = start.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_batch(handle: &Handle, sig: &str, params: &[HostTensor],
+                 pending: &mut Vec<Request>, aot_batch: usize,
+                 image_elems: usize, image_shape: &[usize],
+                 stats: &mut ServerStats) -> Result<()> {
+    if pending.is_empty() {
+        return Ok(());
+    }
+    let used = pending.len().min(aot_batch);
+    // assemble the fixed-size AOT batch, zero-padding unused rows
+    let mut batch = vec![0f32; aot_batch * image_elems];
+    for (i, req) in pending.iter().take(used).enumerate() {
+        if req.image.len() != image_elems {
+            return Err(MiopenError::ShapeMismatch(format!(
+                "request {} image has {} elems, expected {image_elems}",
+                req.id, req.image.len())));
+        }
+        batch[i * image_elems..(i + 1) * image_elems]
+            .copy_from_slice(&req.image);
+    }
+    let x = HostTensor::from_f32(image_shape, &batch);
+
+    let mut inputs: Vec<HostTensor> = params.to_vec();
+    inputs.push(x);
+    let out = handle.execute_sig(sig, &inputs)?;
+    let logits = out[0].as_f32()?;
+    let preds = out[1].as_i32()?;
+    let classes = out[0].spec.shape[1];
+
+    let done = Instant::now();
+    for (i, req) in pending.drain(..used).enumerate() {
+        let latency_us =
+            done.duration_since(req.submitted).as_secs_f64() * 1e6;
+        stats.latency.record(latency_us);
+        let _ = req.resp.send(Response {
+            id: req.id,
+            predicted_class: *preds.get(i).unwrap_or(&-1),
+            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+            latency_us,
+        });
+    }
+    stats.batch_sizes.record(used as f64);
+    stats.throughput.requests += used as u64;
+    stats.throughput.batches += 1;
+    Ok(())
+}
+
+/// Load generator: submits `n` requests with Poisson arrivals at `rate`
+/// req/s from the current thread; returns the response receiver.
+pub fn generate_load(tx: &mpsc::Sender<Request>, n: usize, rate: f64,
+                     image_elems: usize, seed: u64)
+    -> mpsc::Receiver<Response> {
+    let (resp_tx, resp_rx) = mpsc::channel();
+    let mut rng = crate::util::rng::SplitMix64::new(seed);
+    for id in 0..n {
+        let mut image = vec![0f32; image_elems];
+        rng.fill_normal_f32(&mut image);
+        let _ = tx.send(Request {
+            id: id as u64,
+            image,
+            submitted: Instant::now(),
+            resp: resp_tx.clone(),
+        });
+        if rate > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(rng.exp_f64(rate)));
+        }
+    }
+    resp_rx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let c = ServeConfig::default();
+        assert_eq!(c.batch_max, 16);
+        assert!(c.batch_timeout >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,269 @@
+//! Solvers (paper §III-A): "classes [that] together *solve* for the best
+//! convolution kernel given a problem description".
+//!
+//! Each solver is stateless and trivially constructible (the paper's
+//! design rule — "this ensures that kernel compilation launches do not
+//! have side effects"), exposing:
+//! - an applicability predicate over the problem signature,
+//! - the workspace requirement (`miopenConvAlgoPerf_t.memory`),
+//! - the artifact signature for (problem, tuning-variant),
+//! - the tuning-parameter grid (§III-B), and
+//! - its cost under the GCN perf model.
+//!
+//! Adding a kernel = add the Pallas file + emit artifacts in aot.py + add
+//! a `Solver` here; the find step then picks it up automatically, exactly
+//! as the paper describes for MIOpen developers.
+
+use std::collections::BTreeMap;
+
+use crate::perfmodel::GcnModel;
+use crate::types::ProblemSig;
+
+pub type TuningParams = BTreeMap<String, i64>;
+
+pub trait Solver {
+    /// Algorithm name as used in artifact signatures ("direct", "gemm", ...).
+    fn name(&self) -> &'static str;
+
+    /// Can this solver handle the problem? Mirrors `fwd_algos`/`bwd_algos`
+    /// in python/compile/aot.py — the two MUST stay in sync (checked by
+    /// integration tests against the manifest).
+    fn is_applicable(&self, sig: &ProblemSig) -> bool;
+
+    /// Additional device memory required (reported by the find step).
+    fn workspace_bytes(&self, sig: &ProblemSig) -> u64;
+
+    /// Tuning-parameter grid, pruned to the problem (paper §III-B).
+    /// Empty = untunable.
+    fn tuning_grid(&self, _sig: &ProblemSig) -> Vec<TuningParams> {
+        Vec::new()
+    }
+
+    /// Artifact signature for this (problem, optional tuning variant).
+    fn artifact_sig(&self, sig: &ProblemSig, tuning: Option<&TuningParams>)
+        -> String {
+        let bk = tuning.and_then(|t| t.get("block_k")).map(|v| *v as usize);
+        sig.artifact_sig(self.name(), bk)
+    }
+
+    /// Predicted time under the GCN model (µs).
+    fn modeled_time_us(&self, sig: &ProblemSig, model: &GcnModel) -> f64 {
+        model.conv_time_us(sig, self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// im2col + GEMM — the universal fallback and Figure 6's baseline.
+pub struct GemmSolver;
+
+impl Solver for GemmSolver {
+    fn name(&self) -> &'static str {
+        "gemm"
+    }
+
+    fn is_applicable(&self, sig: &ProblemSig) -> bool {
+        sig.g == 1 // grouped conv goes through direct
+    }
+
+    fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
+        let (ho, wo) = sig.out_hw();
+        (sig.c * sig.r * sig.s * sig.n * ho * wo) as u64
+            * sig.dtype.size_bytes() as u64
+    }
+}
+
+/// Direct convolution (the hand-tuned GCN-asm/OpenCL family).
+pub struct DirectSolver;
+
+impl Solver for DirectSolver {
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn is_applicable(&self, _sig: &ProblemSig) -> bool {
+        true // the direct kernels cover every variant incl. grouped
+    }
+
+    fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
+        0
+    }
+
+    fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
+        // mirrors direct.tuning_grid in python: block_k candidates pruned
+        // to the problem's K
+        [4i64, 8, 16, 32, 64]
+            .iter()
+            .filter(|&&b| b as usize <= sig.k.max(4))
+            .map(|&b| TuningParams::from([("block_k".to_string(), b)]))
+            .collect()
+    }
+}
+
+/// Implicit GEMM (composable kernels, §IV-A) — forward only in v2.0.
+pub struct ImplicitGemmSolver;
+
+impl Solver for ImplicitGemmSolver {
+    fn name(&self) -> &'static str {
+        "implicit"
+    }
+
+    fn is_applicable(&self, sig: &ProblemSig) -> bool {
+        sig.direction == "fwd" && sig.g == 1
+    }
+
+    fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
+        0 // the point of implicit GEMM
+    }
+}
+
+/// Winograd F(2×2, 3×3) — 3×3/stride-1/dense, fwd + bwd-data.
+pub struct WinogradSolver;
+
+impl Solver for WinogradSolver {
+    fn name(&self) -> &'static str {
+        "winograd"
+    }
+
+    fn is_applicable(&self, sig: &ProblemSig) -> bool {
+        (sig.direction == "fwd" || sig.direction == "bwd")
+            && sig.r == 3
+            && sig.s == 3
+            && sig.u == 1
+            && sig.v == 1
+            && sig.l == 1
+            && sig.j == 1
+            && sig.g == 1
+    }
+
+    fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
+        0 // paper: "not requiring additional workspace"
+    }
+}
+
+/// FFT convolution — large filters, forward.
+pub struct FftSolver;
+
+impl Solver for FftSolver {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn is_applicable(&self, sig: &ProblemSig) -> bool {
+        sig.direction == "fwd"
+            && sig.r.max(sig.s) >= 5
+            && sig.l == 1
+            && sig.j == 1
+            && sig.g == 1
+    }
+
+    fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
+        let fh = (sig.h + 2 * sig.p + sig.r - 1) as u64;
+        let fw = ((sig.w + 2 * sig.q + sig.s - 1) / 2 + 1) as u64;
+        8 * fh * fw
+            * (sig.n * sig.c + sig.k * sig.c + sig.n * sig.k) as u64
+    }
+}
+
+/// The registry: ordered list of all solvers (order = tie-break priority,
+/// as in MIOpen's solver list).
+pub fn registry() -> Vec<Box<dyn Solver>> {
+    vec![
+        Box::new(WinogradSolver),
+        Box::new(DirectSolver),
+        Box::new(ImplicitGemmSolver),
+        Box::new(FftSolver),
+        Box::new(GemmSolver),
+    ]
+}
+
+/// All solvers applicable to a problem, registry order.
+pub fn applicable(sig: &ProblemSig) -> Vec<Box<dyn Solver>> {
+    registry()
+        .into_iter()
+        .filter(|s| s.is_applicable(sig))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DType;
+
+    fn sig(direction: &str, r: usize, stride: usize, dil: usize, g: usize)
+        -> ProblemSig {
+        ProblemSig {
+            direction: direction.into(),
+            n: 4, c: 16, h: 28, w: 28, k: 32, r, s: r,
+            u: stride, v: stride, p: 1, q: 1, l: dil, j: dil, g,
+            dtype: DType::F32,
+        }
+    }
+
+    #[test]
+    fn applicability_matrix() {
+        let names = |s: &ProblemSig| {
+            applicable(s).iter().map(|x| x.name().to_string()).collect::<Vec<_>>()
+        };
+        // 3x3 stride-1 fwd: everyone except fft
+        assert_eq!(names(&sig("fwd", 3, 1, 1, 1)),
+                   vec!["winograd", "direct", "implicit", "gemm"]);
+        // 1x1 fwd: no winograd, no fft
+        assert_eq!(names(&sig("fwd", 1, 1, 1, 1)),
+                   vec!["direct", "implicit", "gemm"]);
+        // 5x5 fwd: fft joins
+        assert_eq!(names(&sig("fwd", 5, 1, 1, 1)),
+                   vec!["direct", "implicit", "fft", "gemm"]);
+        // 3x3 stride-2 fwd: winograd drops out
+        assert_eq!(names(&sig("fwd", 3, 2, 1, 1)),
+                   vec!["direct", "implicit", "gemm"]);
+        // bwd-data 3x3 s1: winograd, direct, gemm (no implicit/fft)
+        assert_eq!(names(&sig("bwd", 3, 1, 1, 1)),
+                   vec!["winograd", "direct", "gemm"]);
+        // wrw: direct + gemm
+        assert_eq!(names(&sig("wrw", 3, 1, 1, 1)), vec!["direct", "gemm"]);
+        // grouped: only direct
+        assert_eq!(names(&sig("fwd", 3, 1, 1, 4)), vec!["direct"]);
+        // dilated 3x3: no winograd/fft
+        assert_eq!(names(&sig("fwd", 3, 1, 2, 1)),
+                   vec!["direct", "implicit", "gemm"]);
+    }
+
+    #[test]
+    fn workspace_reporting() {
+        let p = sig("fwd", 3, 1, 1, 1);
+        assert_eq!(DirectSolver.workspace_bytes(&p), 0);
+        assert_eq!(WinogradSolver.workspace_bytes(&p), 0);
+        assert_eq!(ImplicitGemmSolver.workspace_bytes(&p), 0);
+        // gemm workspace = col matrix = CRS * N*Ho*Wo * 4
+        let (ho, wo) = p.out_hw();
+        assert_eq!(GemmSolver.workspace_bytes(&p),
+                   (16 * 9 * 4 * ho * wo * 4) as u64);
+        assert!(FftSolver.workspace_bytes(&sig("fwd", 5, 1, 1, 1)) > 0);
+    }
+
+    #[test]
+    fn tuning_grid_pruned_to_k() {
+        let mut p = sig("fwd", 3, 1, 1, 1);
+        p.k = 8;
+        let grid = DirectSolver.tuning_grid(&p);
+        assert_eq!(grid.len(), 2); // block_k 4, 8
+        p.k = 64;
+        assert_eq!(DirectSolver.tuning_grid(&p).len(), 5);
+    }
+
+    #[test]
+    fn artifact_sig_formats() {
+        let p = sig("fwd", 3, 1, 1, 1);
+        assert_eq!(DirectSolver.artifact_sig(&p, None),
+                   "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32");
+        let t = TuningParams::from([("block_k".to_string(), 32i64)]);
+        assert!(DirectSolver.artifact_sig(&p, Some(&t)).ends_with("-bk32"));
+    }
+
+    #[test]
+    fn solver_order_prefers_winograd() {
+        let sols = applicable(&sig("fwd", 3, 1, 1, 1));
+        assert_eq!(sols[0].name(), "winograd");
+    }
+}

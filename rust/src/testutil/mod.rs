@@ -1,0 +1,21 @@
+//! Test support: artifact location + a small property-testing harness
+//! (standing in for `proptest`, which is unavailable offline — DESIGN.md
+//! §Substitutions #5).
+
+pub mod prop;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: $MIOPEN_RS_ARTIFACTS or <repo>/artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MIOPEN_RS_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when the full artifact set exists (integration tests skip
+/// gracefully otherwise so `cargo test` works pre-`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,144 @@
+//! Minimal property-testing harness.
+//!
+//! `proptest` is not in the offline crate closure, so this module provides
+//! the subset the test suite needs: seeded generators, a `forall` runner
+//! with failure reporting (seed + case index for reproduction), and greedy
+//! input shrinking for integer vectors.
+
+use crate::util::rng::SplitMix64;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator: RNG -> value.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut SplitMix64) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut SplitMix64) -> T + 'static) -> Self {
+        Self { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut SplitMix64) -> T {
+        (self.f)(rng)
+    }
+
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g(self.sample(r)))
+    }
+}
+
+/// Uniform usize in [lo, hi] inclusive.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(move |r| lo + r.below((hi - lo + 1) as u64) as usize)
+}
+
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |r| r.range_f64(lo, hi))
+}
+
+pub fn choice<T: Clone + 'static>(items: Vec<T>) -> Gen<T> {
+    assert!(!items.is_empty());
+    Gen::new(move |r| items[r.below(items.len() as u64) as usize].clone())
+}
+
+pub fn vec_of<T: 'static>(item: Gen<T>, len: Gen<usize>) -> Gen<Vec<T>> {
+    Gen::new(move |r| {
+        let n = len.sample(r);
+        (0..n).map(|_| item.sample(r)).collect()
+    })
+}
+
+/// Run `check` over `cases` random inputs; panics with the seed and case
+/// number on the first failure so the case can be replayed exactly.
+pub fn forall<T: std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("MIOPEN_RS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  \
+                 input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink for a vec-shaped counterexample: try dropping elements
+/// while the failure persists; returns the smallest failing input found.
+pub fn shrink_vec<T: Clone>(
+    mut input: Vec<T>,
+    still_fails: impl Fn(&[T]) -> bool,
+) -> Vec<T> {
+    loop {
+        let mut shrunk = false;
+        let mut i = 0;
+        while i < input.len() {
+            let mut cand = input.clone();
+            cand.remove(i);
+            if still_fails(&cand) {
+                input = cand;
+                shrunk = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !shrunk {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall("sum-commutes", &vec_of(usize_in(0, 100), usize_in(0, 10)),
+               200, |v| {
+                   let a: usize = v.iter().sum();
+                   let b: usize = v.iter().rev().sum();
+                   if a == b { Ok(()) } else { Err("sum not commutative".into()) }
+               });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn forall_reports_failure() {
+        forall("always-fails", &usize_in(0, 10), 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_finds_minimal_case() {
+        // failure: vec contains a 7
+        let input = vec![1, 7, 3, 9, 7];
+        let out = shrink_vec(input, |v| v.contains(&7));
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = SplitMix64::new(5);
+        let g = usize_in(3, 9);
+        for _ in 0..500 {
+            let v = g.sample(&mut rng);
+            assert!((3..=9).contains(&v));
+        }
+        let c = choice(vec!["a", "b"]);
+        for _ in 0..50 {
+            let v = c.sample(&mut rng);
+            assert!(v == "a" || v == "b");
+        }
+    }
+}

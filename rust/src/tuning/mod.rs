@@ -1,0 +1,184 @@
+//! Auto-tuning infrastructure (paper §III-B).
+//!
+//! "The tuning parameters create a grid of possible values ... the tuning
+//! infrastructure compiles and launches a unique kernel for each of these
+//! combinations using a pruned search space approach. Once a kernel is
+//! tuned ... they are serialized to a designated directory on the user's
+//! system for future retrieval."
+//!
+//! A [`TuningSession`] races every tuning variant of every tunable solver
+//! for a problem, optionally pruning the grid with the GCN model before
+//! measuring, and records the winner in the user perf-db.
+
+use std::collections::BTreeMap;
+
+use crate::find::ConvProblem;
+use crate::handle::Handle;
+use crate::solvers::TuningParams;
+use crate::types::{MiopenError, Result};
+
+/// Result of tuning one solver on one problem.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub solver: String,
+    pub best_params: TuningParams,
+    pub best_time_us: f64,
+    pub default_time_us: Option<f64>,
+    /// (params, measured µs) for every evaluated grid point.
+    pub evaluated: Vec<(TuningParams, f64)>,
+    pub pruned_out: usize,
+}
+
+impl TuneResult {
+    /// Speedup of the tuned variant over the default artifact.
+    pub fn speedup_vs_default(&self) -> Option<f64> {
+        self.default_time_us.map(|d| d / self.best_time_us)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TuneOptions {
+    /// Keep only the `prune_keep` most promising grid points before
+    /// measuring (the paper's "pruned search space approach").
+    /// 0 = measure the full grid.
+    pub prune_keep: usize,
+}
+
+pub struct TuningSession<'h> {
+    handle: &'h Handle,
+    opts: TuneOptions,
+}
+
+impl<'h> TuningSession<'h> {
+    pub fn new(handle: &'h Handle) -> Self {
+        Self { handle, opts: TuneOptions::default() }
+    }
+
+    pub fn with_options(handle: &'h Handle, opts: TuneOptions) -> Self {
+        Self { handle, opts }
+    }
+
+    /// Tune every tunable solver applicable to `problem`; persist winners
+    /// in the user perf-db. Returns one result per tuned solver.
+    pub fn tune_convolution(&self, problem: &ConvProblem)
+        -> Result<Vec<TuneResult>> {
+        let sig = problem.sig()?;
+        let key = sig.db_key();
+        let mut results = Vec::new();
+
+        for solver in crate::solvers::applicable(&sig) {
+            let grid = solver.tuning_grid(&sig);
+            if grid.is_empty() {
+                continue;
+            }
+
+            // Keep only grid points whose tuned artifact actually exists.
+            let mut available: Vec<TuningParams> = grid
+                .into_iter()
+                .filter(|tp| {
+                    self.handle
+                        .manifest
+                        .get(&solver.artifact_sig(&sig, Some(tp)))
+                        .is_some()
+                })
+                .collect();
+            if available.is_empty() {
+                continue;
+            }
+
+            // Pruned search: larger K tiles amortize filter loads until
+            // they exceed K; prefer the biggest feasible tiles and drop
+            // the tail of the grid.
+            let mut pruned_out = 0;
+            if self.opts.prune_keep > 0 && available.len() > self.opts.prune_keep {
+                available.sort_by_key(|tp| {
+                    std::cmp::Reverse(tp.get("block_k").copied().unwrap_or(0))
+                });
+                pruned_out = available.len() - self.opts.prune_keep;
+                available.truncate(self.opts.prune_keep);
+            }
+
+            let mut evaluated = Vec::new();
+            for tp in &available {
+                let art_sig = solver.artifact_sig(&sig, Some(tp));
+                let time = (|| -> Result<f64> {
+                    let exe = self.handle.compile_sig(&art_sig)?;
+                    let inputs = self.handle.random_inputs(&art_sig)?;
+                    self.handle.time_exec(&exe, &inputs)
+                })();
+                match time {
+                    Ok(t) => evaluated.push((tp.clone(), t)),
+                    Err(_) => continue, // failed variant: skip, keep tuning
+                }
+            }
+            if evaluated.is_empty() {
+                continue;
+            }
+
+            let default_time = {
+                let default_sig = solver.artifact_sig(&sig, None);
+                self.handle.manifest.get(&default_sig).and_then(|_| {
+                    let exe = self.handle.compile_sig(&default_sig).ok()?;
+                    let inputs = self.handle.random_inputs(&default_sig).ok()?;
+                    self.handle.time_exec(&exe, &inputs).ok()
+                })
+            };
+
+            let (best_params, best_time_us) = evaluated
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(p, t)| (p.clone(), *t))
+                .expect("non-empty");
+
+            self.handle.user_perf.borrow_mut().set(
+                &key,
+                solver.name(),
+                best_params.clone(),
+            );
+
+            results.push(TuneResult {
+                solver: solver.name().to_string(),
+                best_params,
+                best_time_us,
+                default_time_us: default_time,
+                evaluated,
+                pruned_out,
+            });
+        }
+
+        if results.is_empty() {
+            return Err(MiopenError::NotApplicable(format!(
+                "no tunable solver with artifacts for {key}"
+            )));
+        }
+        self.handle.save_dbs()?;
+        Ok(results)
+    }
+}
+
+/// Pretty-print tuned params (CLI + logs).
+pub fn format_params(p: &BTreeMap<String, i64>) -> String {
+    p.iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_params_stable_order() {
+        let p = BTreeMap::from([
+            ("block_k".to_string(), 32i64),
+            ("a".to_string(), 1i64),
+        ]);
+        assert_eq!(format_params(&p), "a=1,block_k=32");
+    }
+
+    #[test]
+    fn default_options_measure_full_grid() {
+        assert_eq!(TuneOptions::default().prune_keep, 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Core types: data types, tensor descriptors, errors, problem signatures.
+
+pub mod signature;
+
+pub use signature::ProblemSig;
+
+/// Data types supported by the library (paper §I: "MIOpen supports four
+/// different data-types: float32, float16, bfloat16, and int8").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F32,
+    F16,
+    Bf16,
+    I8,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    /// Canonical name used in artifact signatures and the manifest.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+            DType::I8 => "i8",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "f16" => DType::F16,
+            "bf16" => DType::Bf16,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// N-d tensor descriptor (`miopenTensorDescriptor_t` analog). MIOpen's
+/// default and our only layout is NCHW; strides are derivable but kept
+/// explicit to support the `miopenSetTensorDescriptor` contract.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorDesc {
+    pub dims: Vec<usize>,
+    pub strides: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorDesc {
+    pub fn new(dims: Vec<usize>, dtype: DType) -> Self {
+        let strides = packed_strides(&dims);
+        Self { dims, strides, dtype }
+    }
+
+    pub fn nchw(n: usize, c: usize, h: usize, w: usize, dtype: DType) -> Self {
+        Self::new(vec![n, c, h, w], dtype)
+    }
+
+    pub fn vec(n: usize, dtype: DType) -> Self {
+        Self::new(vec![n], dtype)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elem_count() * self.dtype.size_bytes()
+    }
+
+    /// (N, C, H, W) accessor; errors if not rank 4.
+    pub fn nchw_dims(&self) -> Result<(usize, usize, usize, usize)> {
+        if self.dims.len() != 4 {
+            return Err(MiopenError::BadDescriptor(format!(
+                "expected rank-4 NCHW tensor, got rank {}",
+                self.dims.len()
+            )));
+        }
+        Ok((self.dims[0], self.dims[1], self.dims[2], self.dims[3]))
+    }
+
+    pub fn is_packed(&self) -> bool {
+        self.strides == packed_strides(&self.dims)
+    }
+}
+
+pub fn packed_strides(dims: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * dims[i + 1];
+    }
+    strides
+}
+
+/// Library error type (`miopenStatus_t` analog).
+#[derive(Debug, thiserror::Error)]
+pub enum MiopenError {
+    #[error("bad descriptor: {0}")]
+    BadDescriptor(String),
+    #[error("not applicable: {0}")]
+    NotApplicable(String),
+    #[error("artifact missing: {0}")]
+    ArtifactMissing(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("fusion plan rejected: {0}")]
+    FusionRejected(String),
+    #[error("db error: {0}")]
+    Db(String),
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+    #[error("internal error: {0}")]
+    Internal(String),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for MiopenError {
+    fn from(e: xla::Error) -> Self {
+        MiopenError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, MiopenError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_strides_nchw() {
+        assert_eq!(packed_strides(&[2, 3, 4, 5]), vec![60, 20, 5, 1]);
+        assert_eq!(packed_strides(&[7]), vec![1]);
+        assert_eq!(packed_strides(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn tensor_desc_basics() {
+        let t = TensorDesc::nchw(2, 3, 4, 5, DType::F32);
+        assert_eq!(t.elem_count(), 120);
+        assert_eq!(t.size_bytes(), 480);
+        assert!(t.is_packed());
+        assert_eq!(t.nchw_dims().unwrap(), (2, 3, 4, 5));
+    }
+
+    #[test]
+    fn nchw_dims_rejects_wrong_rank() {
+        let t = TensorDesc::vec(8, DType::F32);
+        assert!(t.nchw_dims().is_err());
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [DType::F32, DType::F16, DType::Bf16, DType::I8, DType::I32,
+                  DType::U32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("f64"), None);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::Bf16.size_bytes(), 2);
+        assert_eq!(DType::I8.size_bytes(), 1);
+    }
+}

@@ -1,0 +1,252 @@
+//! Canonical problem signatures — the contract between configs.py, the
+//! artifact manifest, the find/perf dbs, and the solver registry.
+//!
+//! Grammar (mirrors `ConvConfig.sig_params` in python/compile/configs.py):
+//!
+//! ```text
+//! conv_{dir}-{algo}-n{N}c{C}h{H}w{W}k{K}r{R}s{S}u{U}v{V}p{P}q{Q}l{L}j{J}g{G}-{dtype}[-bk{BK}]
+//! ```
+//!
+//! `dir ∈ {fwd, bwd, wrw}` following MIOpen's naming (forward,
+//! backward-data, backward-weights). The perf-db keys on everything except
+//! the algo/tuning suffix; the exec-cache keys on the full signature.
+
+use crate::types::{DType, MiopenError, Result};
+
+/// Convolution problem key (shapes + conv params + dtype, no algo).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProblemSig {
+    pub direction: String, // fwd | bwd | wrw
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub r: usize,
+    pub s: usize,
+    pub u: usize,
+    pub v: usize,
+    pub p: usize,
+    pub q: usize,
+    pub l: usize,
+    pub j: usize,
+    pub g: usize,
+    pub dtype: DType,
+}
+
+impl ProblemSig {
+    /// The `n4c16h28w28k32r3s3u1v1p1q1l1j1g1` parameter block.
+    pub fn params_str(&self) -> String {
+        format!(
+            "n{}c{}h{}w{}k{}r{}s{}u{}v{}p{}q{}l{}j{}g{}",
+            self.n, self.c, self.h, self.w, self.k, self.r, self.s, self.u,
+            self.v, self.p, self.q, self.l, self.j, self.g
+        )
+    }
+
+    /// Full artifact signature for a given algorithm (+ optional tuning).
+    pub fn artifact_sig(&self, algo: &str, block_k: Option<usize>) -> String {
+        let suffix = block_k.map(|b| format!("-bk{b}")).unwrap_or_default();
+        format!(
+            "conv_{}-{}-{}-{}{}",
+            self.direction,
+            algo,
+            self.params_str(),
+            self.dtype.name(),
+            suffix
+        )
+    }
+
+    /// Perf-db / find-db key: problem identity without algorithm.
+    pub fn db_key(&self) -> String {
+        format!("conv_{}-{}-{}", self.direction, self.params_str(),
+                self.dtype.name())
+    }
+
+    /// Parse a full artifact signature back into (problem, algo, block_k).
+    pub fn parse_artifact(sig: &str) -> Result<(ProblemSig, String, Option<usize>)> {
+        let mut parts = sig.split('-');
+        let head = parts.next().ok_or_else(|| bad(sig, "empty"))?;
+        let direction = head
+            .strip_prefix("conv_")
+            .ok_or_else(|| bad(sig, "missing conv_ prefix"))?
+            .to_string();
+        if !matches!(direction.as_str(), "fwd" | "bwd" | "wrw") {
+            return Err(bad(sig, "bad direction"));
+        }
+        let algo = parts.next().ok_or_else(|| bad(sig, "missing algo"))?.to_string();
+        let params = parts.next().ok_or_else(|| bad(sig, "missing params"))?;
+        let dtype_str = parts.next().ok_or_else(|| bad(sig, "missing dtype"))?;
+        let dtype = DType::parse(dtype_str).ok_or_else(|| bad(sig, "bad dtype"))?;
+        let block_k = match parts.next() {
+            None => None,
+            Some(t) => Some(
+                t.strip_prefix("bk")
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| bad(sig, "bad tuning suffix"))?,
+            ),
+        };
+        if parts.next().is_some() {
+            return Err(bad(sig, "trailing segments"));
+        }
+
+        let fields = parse_params(params).ok_or_else(|| bad(sig, "bad params"))?;
+        let get = |ch: char| -> Result<usize> {
+            fields
+                .iter()
+                .find(|(c, _)| *c == ch)
+                .map(|(_, v)| *v)
+                .ok_or_else(|| bad(sig, &format!("missing field {ch}")))
+        };
+        Ok((
+            ProblemSig {
+                direction,
+                n: get('n')?,
+                c: get('c')?,
+                h: get('h')?,
+                w: get('w')?,
+                k: get('k')?,
+                r: get('r')?,
+                s: get('s')?,
+                u: get('u')?,
+                v: get('v')?,
+                p: get('p')?,
+                q: get('q')?,
+                l: get('l')?,
+                j: get('j')?,
+                g: get('g')?,
+                dtype,
+            },
+            algo,
+            block_k,
+        ))
+    }
+
+    /// Output spatial dims (shared formula with ref.conv_out_shape).
+    pub fn out_hw(&self) -> (usize, usize) {
+        let er = (self.r - 1) * self.l + 1;
+        let es = (self.s - 1) * self.j + 1;
+        let ho = (self.h + 2 * self.p - er) / self.u + 1;
+        let wo = (self.w + 2 * self.q - es) / self.v + 1;
+        (ho, wo)
+    }
+
+    /// Figure-6 style label: fh-fw-C-H-W-K-padH-padW.
+    pub fn fig_label(&self) -> String {
+        format!("{}-{}-{}-{}-{}-{}-{}-{}",
+                self.r, self.s, self.c, self.h, self.w, self.k, self.p, self.q)
+    }
+
+    /// MAC count for this problem (both spatial directions included).
+    pub fn macs(&self) -> u64 {
+        let (ho, wo) = self.out_hw();
+        (self.n * self.k * ho * wo) as u64
+            * (self.c / self.g * self.r * self.s) as u64
+    }
+}
+
+/// Parse `n4c16h28w28...` into (letter, value) pairs. Single-letter keys.
+fn parse_params(s: &str) -> Option<Vec<(char, usize)>> {
+    let mut out = Vec::new();
+    let mut chars = s.chars().peekable();
+    while let Some(letter) = chars.next() {
+        if !letter.is_ascii_lowercase() {
+            return None;
+        }
+        let mut digits = String::new();
+        while matches!(chars.peek(), Some(c) if c.is_ascii_digit()) {
+            digits.push(chars.next().unwrap());
+        }
+        if digits.is_empty() {
+            return None;
+        }
+        out.push((letter, digits.parse().ok()?));
+    }
+    Some(out)
+}
+
+fn bad(sig: &str, why: &str) -> MiopenError {
+    MiopenError::Manifest(format!("bad signature '{sig}': {why}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ProblemSig {
+        ProblemSig {
+            direction: "fwd".into(),
+            n: 4, c: 16, h: 28, w: 28, k: 32, r: 3, s: 3,
+            u: 1, v: 1, p: 1, q: 1, l: 1, j: 1, g: 1,
+            dtype: DType::F32,
+        }
+    }
+
+    #[test]
+    fn roundtrip_plain() {
+        let sig = sample().artifact_sig("direct", None);
+        assert_eq!(sig, "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32");
+        let (p, algo, bk) = ProblemSig::parse_artifact(&sig).unwrap();
+        assert_eq!(p, sample());
+        assert_eq!(algo, "direct");
+        assert_eq!(bk, None);
+    }
+
+    #[test]
+    fn roundtrip_tuned() {
+        let sig = sample().artifact_sig("direct", Some(32));
+        let (p, algo, bk) = ProblemSig::parse_artifact(&sig).unwrap();
+        assert_eq!(p.params_str(), sample().params_str());
+        assert_eq!(algo, "direct");
+        assert_eq!(bk, Some(32));
+    }
+
+    #[test]
+    fn out_hw_formula() {
+        let p = sample();
+        assert_eq!(p.out_hw(), (28, 28));
+        let mut p2 = sample();
+        p2.u = 2;
+        p2.v = 2;
+        assert_eq!(p2.out_hw(), (14, 14));
+        let mut p3 = sample();
+        p3.l = 2;
+        p3.j = 2;
+        p3.p = 2;
+        p3.q = 2;
+        assert_eq!(p3.out_hw(), (28, 28));
+    }
+
+    #[test]
+    fn macs_formula() {
+        let p = sample();
+        // N*K*Ho*Wo * C*R*S = 4*32*28*28 * 16*9
+        assert_eq!(p.macs(), 4 * 32 * 28 * 28 * 16 * 9);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad_sig in [
+            "conv_fwd-direct",                   // missing params/dtype
+            "conv_xyz-direct-n1c1h1w1k1r1s1u1v1p1q1l1j1g1-f32", // bad dir
+            "foo_fwd-direct-n1c1h1w1k1r1s1u1v1p1q1l1j1g1-f32",  // bad prefix
+            "conv_fwd-direct-n1c1h1w1k1r1s1u1v1p1q1l1j1-f32",   // missing g
+            "conv_fwd-direct-n1c1h1w1k1r1s1u1v1p1q1l1j1g1-f64", // bad dtype
+            "conv_fwd-direct-n1c1h1w1k1r1s1u1v1p1q1l1j1g1-f32-zz9", // bad suffix
+        ] {
+            assert!(ProblemSig::parse_artifact(bad_sig).is_err(), "{bad_sig}");
+        }
+    }
+
+    #[test]
+    fn db_key_drops_algo() {
+        let p = sample();
+        assert!(!p.db_key().contains("direct"));
+        assert!(p.db_key().starts_with("conv_fwd-"));
+    }
+
+    #[test]
+    fn fig_label_matches_paper_format() {
+        assert_eq!(sample().fig_label(), "3-3-16-28-28-32-1-1");
+    }
+}

@@ -1,0 +1,6 @@
+//! In-repo substrates standing in for crates unavailable in the offline
+//! build environment (DESIGN.md §Substitutions #5): a JSON codec and a
+//! seedable RNG.
+
+pub mod json;
+pub mod rng;

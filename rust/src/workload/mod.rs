@@ -1,0 +1,248 @@
+//! Workload layer: groups manifest artifacts into the experiment sets the
+//! benches consume (Figure 6 panels, Figure 7 sweeps, ablations).
+//!
+//! configs.py is the single source of truth; tags flow through the
+//! manifest, so the bench harness never hard-codes shapes.
+
+use std::collections::BTreeMap;
+
+use crate::manifest::{Artifact, Manifest};
+use crate::types::{ProblemSig, Result};
+
+/// One Figure-6 data point: a problem config with per-algorithm artifacts.
+#[derive(Debug, Clone)]
+pub struct Fig6Point {
+    pub label: String,
+    pub sig: ProblemSig,
+    /// algorithm name -> artifact signature
+    pub algos: BTreeMap<String, String>,
+}
+
+impl Fig6Point {
+    pub fn baseline_sig(&self) -> Option<&String> {
+        self.algos.get("gemm")
+    }
+}
+
+/// Collect a Figure-6 panel ("fig6a" .. "fig6f") from the manifest.
+pub fn fig6_panel(manifest: &Manifest, panel: &str) -> Result<Vec<Fig6Point>> {
+    let mut by_key: BTreeMap<String, Fig6Point> = BTreeMap::new();
+    for art in manifest.by_tag(panel) {
+        if art.primitive != "conv" {
+            continue;
+        }
+        let (sig, algo, tuned) = ProblemSig::parse_artifact(&art.sig)?;
+        if tuned.is_some() {
+            continue; // tuning variants belong to the tuning ablation
+        }
+        let key = sig.db_key();
+        let entry = by_key.entry(key).or_insert_with(|| Fig6Point {
+            label: art.label.clone().unwrap_or_else(|| sig.fig_label()),
+            sig: sig.clone(),
+            algos: BTreeMap::new(),
+        });
+        entry.algos.insert(algo, art.sig.clone());
+    }
+    Ok(by_key.into_values().collect())
+}
+
+/// A Figure-7a point: fused CBA artifact + its separate-op pipeline.
+#[derive(Debug, Clone)]
+pub struct Fig7aPoint {
+    pub label: String,
+    pub k: usize,
+    pub fused_sig: String,
+    pub conv_sig: String,
+    pub bias_sig: String,
+    pub act_sig: String,
+}
+
+pub fn fig7a_points(manifest: &Manifest) -> Result<Vec<Fig7aPoint>> {
+    let mut points = Vec::new();
+    for fused in manifest.by_tag("fig7a") {
+        if fused.algo != "cba" {
+            continue;
+        }
+        // cba-relu-<params>-f32 -> match the separate ops emitted alongside
+        let params: String = fused
+            .sig
+            .trim_start_matches("cba-relu-")
+            .trim_end_matches("-f32")
+            .to_string();
+        let conv_sig = format!("conv_fwd-direct-{params}-f32");
+        let (n, k) = (fused.param("n").unwrap_or(0), fused.param("k").unwrap_or(0));
+        let conv_art = manifest.require(&conv_sig)?;
+        let out = &conv_art.outputs[0].shape;
+        let bias_sig = format!("bias-{}x{}x{}x{}-f32", out[0], out[1], out[2], out[3]);
+        let act_sig = format!("act-relu-{}x{}x{}x{}-f32", out[0], out[1], out[2], out[3]);
+        let _ = n;
+        points.push(Fig7aPoint {
+            label: fused.label.clone().unwrap_or_else(|| fused.sig.clone()),
+            k: k as usize,
+            fused_sig: fused.sig.clone(),
+            conv_sig,
+            bias_sig,
+            act_sig,
+        });
+    }
+    points.sort_by_key(|p| p.k);
+    Ok(points)
+}
+
+/// A Figure-7b point: fused BN+Act artifact + separate bn/act pipeline.
+#[derive(Debug, Clone)]
+pub struct Fig7bPoint {
+    pub label: String,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub fused_sig: String,
+    pub bn_sig: String,
+    pub act_sig: String,
+}
+
+pub fn fig7b_points(manifest: &Manifest) -> Result<Vec<Fig7bPoint>> {
+    let mut points = Vec::new();
+    for fused in manifest.by_tag("fig7b") {
+        if fused.algo != "bna" {
+            continue;
+        }
+        let n = fused.param("n").unwrap_or(4) as usize;
+        let c = fused.param("c").unwrap_or(0) as usize;
+        let h = fused.param("h").unwrap_or(0) as usize;
+        let w = fused.param("w").unwrap_or(0) as usize;
+        points.push(Fig7bPoint {
+            label: fused
+                .label
+                .clone()
+                .unwrap_or_else(|| format!("{c}x{h}x{w}")),
+            c, h, w,
+            fused_sig: fused.sig.clone(),
+            bn_sig: format!("bn_infer-spatial-n{n}c{c}h{h}w{w}-f32"),
+            act_sig: format!("act-relu-{n}x{c}x{h}x{w}-f32"),
+        });
+    }
+    points.sort_by_key(|p| p.c * p.h * p.w);
+    Ok(points)
+}
+
+/// RNN ablation points: (seq_len, fused_sig, naive_sig).
+#[derive(Debug, Clone)]
+pub struct RnnAblationPoint {
+    pub t: usize,
+    pub fused_sig: String,
+    pub naive_sig: String,
+}
+
+pub fn rnn_ablation_points(manifest: &Manifest) -> Vec<RnnAblationPoint> {
+    let mut by_t: BTreeMap<usize, (Option<String>, Option<String>)> =
+        BTreeMap::new();
+    for art in manifest.by_tag("abl-rnn") {
+        let t = art.param("t").unwrap_or(0) as usize;
+        let slot = by_t.entry(t).or_default();
+        if art.algo.ends_with("_fused") {
+            slot.0 = Some(art.sig.clone());
+        } else if art.algo.ends_with("_naive") {
+            slot.1 = Some(art.sig.clone());
+        }
+    }
+    by_t.into_iter()
+        .filter_map(|(t, (f, n))| {
+            Some(RnnAblationPoint { t, fused_sig: f?, naive_sig: n? })
+        })
+        .collect()
+}
+
+/// Tuning-ablation artifacts grouped by problem: db_key -> [(block_k, sig)].
+pub fn tuning_points(manifest: &Manifest)
+    -> BTreeMap<String, Vec<(usize, String)>> {
+    let mut out: BTreeMap<String, Vec<(usize, String)>> = BTreeMap::new();
+    for art in manifest.by_tag("tune") {
+        if let Ok((sig, _, Some(bk))) = ProblemSig::parse_artifact(&art.sig) {
+            out.entry(sig.db_key()).or_default().push((bk, art.sig.clone()));
+        }
+    }
+    for v in out.values_mut() {
+        v.sort();
+    }
+    out
+}
+
+/// Convenience: look up one artifact per tag for simple benches.
+pub fn first_by_tag<'m>(manifest: &'m Manifest, tag: &'m str)
+    -> Option<&'m Artifact> {
+    manifest.by_tag(tag).next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn fig6_panels_populated_from_real_manifest() {
+        if !testutil::artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(testutil::artifacts_dir()).unwrap();
+        for panel in ["fig6a", "fig6b", "fig6c", "fig6d", "fig6e", "fig6f"] {
+            let pts = fig6_panel(&m, panel).unwrap();
+            assert!(pts.len() >= 6, "{panel}: {} points", pts.len());
+            for p in &pts {
+                assert!(p.baseline_sig().is_some(),
+                        "{panel}/{} missing gemm baseline", p.label);
+                assert!(p.algos.len() >= 2,
+                        "{panel}/{} has no competitor", p.label);
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_1x1_panels_have_no_winograd() {
+        if !testutil::artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(testutil::artifacts_dir()).unwrap();
+        for p in fig6_panel(&m, "fig6a").unwrap() {
+            assert!(!p.algos.contains_key("winograd"), "{}", p.label);
+        }
+    }
+
+    #[test]
+    fn fig7_points_resolve_separate_ops() {
+        if !testutil::artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(testutil::artifacts_dir()).unwrap();
+        let a = fig7a_points(&m).unwrap();
+        assert!(a.len() >= 6);
+        for p in &a {
+            assert!(m.get(&p.fused_sig).is_some());
+            assert!(m.get(&p.conv_sig).is_some(), "{}", p.conv_sig);
+            assert!(m.get(&p.bias_sig).is_some(), "{}", p.bias_sig);
+            assert!(m.get(&p.act_sig).is_some(), "{}", p.act_sig);
+        }
+        let b = fig7b_points(&m).unwrap();
+        assert!(b.len() >= 6);
+        for p in &b {
+            assert!(m.get(&p.bn_sig).is_some(), "{}", p.bn_sig);
+            assert!(m.get(&p.act_sig).is_some(), "{}", p.act_sig);
+        }
+    }
+
+    #[test]
+    fn rnn_and_tuning_points_present() {
+        if !testutil::artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(testutil::artifacts_dir()).unwrap();
+        let rnn = rnn_ablation_points(&m);
+        assert!(rnn.len() >= 3);
+        assert!(rnn.windows(2).all(|w| w[0].t < w[1].t));
+        let tune = tuning_points(&m);
+        assert!(tune.len() >= 2);
+        for (_, variants) in tune {
+            assert!(variants.len() >= 3);
+        }
+    }
+}

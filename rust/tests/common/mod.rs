@@ -1,0 +1,71 @@
+//! Shared helpers for the integration tests.
+
+use std::path::PathBuf;
+
+use miopen_rs::handle::{BackendChoice, Handle, HandleOptions};
+use miopen_rs::manifest::Manifest;
+use miopen_rs::runtime::{HostTensor, MockConfig};
+use miopen_rs::types::Result;
+use miopen_rs::util::rng::SplitMix64;
+
+/// Unique temp dir per test for user dbs.
+pub fn temp_db_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "miopen-rs-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Real-backend handle over the repo artifacts, or None if `make
+/// artifacts` hasn't run (tests skip gracefully).
+pub fn cpu_handle(tag: &str) -> Option<Handle> {
+    if !miopen_rs::testutil::artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(
+        Handle::new(HandleOptions {
+            backend: BackendChoice::Cpu,
+            db_dir: Some(temp_db_dir(tag)),
+            find_iters: 2,
+            warmup_iters: 1,
+            ..Default::default()
+        })
+        .expect("handle"),
+    )
+}
+
+/// Mock handle over a synthetic manifest. Dummy artifact files are
+/// created on disk so the DiskCache level behaves normally; the mock
+/// backend never reads them.
+pub fn mock_handle(manifest_json: &str, cfg: MockConfig, tag: &str) -> Handle {
+    let art_dir = temp_db_dir(&format!("{tag}-artifacts"));
+    let manifest = Manifest::parse(manifest_json, art_dir.clone()).unwrap();
+    for art in &manifest.artifacts {
+        std::fs::write(art_dir.join(&art.file), "mock").unwrap();
+    }
+    Handle::mock_with_manifest(manifest, cfg, temp_db_dir(tag))
+}
+
+/// Deterministic random inputs for an artifact signature.
+pub fn seeded_inputs(handle: &Handle, sig: &str, seed: u64)
+    -> Result<Vec<HostTensor>> {
+    let art = handle.manifest().require(sig)?;
+    let mut rng = SplitMix64::new(seed);
+    Ok(art
+        .inputs
+        .iter()
+        .map(|spec| HostTensor::random_normal(spec, &mut rng))
+        .collect())
+}
+
+pub fn assert_allclose(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let mut worst = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        let denom = 1f32.max(x.abs()).max(y.abs());
+        worst = worst.max((x - y).abs() / denom);
+    }
+    assert!(worst <= tol, "{what}: max rel err {worst} > {tol}");
+}

@@ -1,0 +1,298 @@
+//! Integration: the find step over real artifacts — ranking, numerical
+//! cross-validation between algorithms, find-db memoization, and failure
+//! injection through the mock backend.
+
+mod common;
+
+use miopen_rs::descriptors::{ConvDesc, FilterDesc, TensorDesc};
+use miopen_rs::find::{ConvProblem, Direction, FindOptions};
+use miopen_rs::prelude::DType;
+
+fn fig6_problem() -> ConvProblem {
+    // FIG6_NON1X1[0]: n4 c16 h28 w28 k32 r3 s3 p1 q1
+    ConvProblem::forward(
+        TensorDesc::nchw(4, 16, 28, 28, DType::F32),
+        FilterDesc::kcrs(32, 16, 3, 3, DType::F32),
+        ConvDesc::simple(1, 1),
+    )
+}
+
+#[test]
+fn find_ranks_all_applicable_algorithms() {
+    let Some(handle) = common::cpu_handle("find-rank") else { return };
+    let results = handle.find_convolution(&fig6_problem()).unwrap();
+    let algos: Vec<&str> = results.iter().map(|r| r.algo.as_str()).collect();
+    for expected in ["gemm", "direct", "implicit", "winograd"] {
+        assert!(algos.contains(&expected), "missing {expected}: {algos:?}");
+    }
+    // sorted by measured time
+    for w in results.windows(2) {
+        assert!(w[0].time_us <= w[1].time_us);
+    }
+    // gemm reports its im2col workspace, the others none
+    let gemm = results.iter().find(|r| r.algo == "gemm").unwrap();
+    assert!(gemm.workspace_bytes > 0);
+    let wino = results.iter().find(|r| r.algo == "winograd").unwrap();
+    assert_eq!(wino.workspace_bytes, 0);
+}
+
+#[test]
+fn algorithms_agree_numerically() {
+    // The heart of the reproduction: every solver computes the same
+    // convolution. Run all fwd artifacts for one config on identical
+    // inputs and cross-check against the gemm baseline.
+    let Some(handle) = common::cpu_handle("find-numeric") else { return };
+    let sig = fig6_problem().sig().unwrap();
+    let base_sig = sig.artifact_sig("gemm", None);
+    let inputs = common::seeded_inputs(&handle, &base_sig, 99).unwrap();
+    let baseline = handle.execute_sig(&base_sig, &inputs).unwrap()[0]
+        .as_f32()
+        .unwrap();
+    for algo in ["direct", "implicit", "winograd"] {
+        let s = sig.artifact_sig(algo, None);
+        let out = handle.execute_sig(&s, &inputs).unwrap()[0]
+            .as_f32()
+            .unwrap();
+        common::assert_allclose(&baseline, &out, 2e-3, algo);
+    }
+}
+
+#[test]
+fn backward_algorithms_agree() {
+    let Some(handle) = common::cpu_handle("find-bwd") else { return };
+    let p = fig6_problem();
+    for (dir, algos) in [
+        (Direction::BackwardData, vec!["direct", "winograd"]),
+        (Direction::BackwardWeights, vec!["direct"]),
+    ] {
+        let mut problem = p.clone();
+        problem.direction = dir;
+        let sig = problem.sig().unwrap();
+        let base = sig.artifact_sig("gemm", None);
+        let inputs = common::seeded_inputs(&handle, &base, 7).unwrap();
+        let want = handle.execute_sig(&base, &inputs).unwrap()[0]
+            .as_f32()
+            .unwrap();
+        for algo in algos {
+            let out = handle
+                .execute_sig(&sig.artifact_sig(algo, None), &inputs)
+                .unwrap()[0]
+                .as_f32()
+                .unwrap();
+            common::assert_allclose(&want, &out, 2e-3,
+                                    &format!("{dir:?}/{algo}"));
+        }
+    }
+}
+
+#[test]
+fn find_db_memoizes_second_call() {
+    let Some(handle) = common::cpu_handle("find-memo") else { return };
+    let p = fig6_problem();
+    let first = handle.find_convolution(&p).unwrap();
+    let (exec_before, _) = handle.cache_stats();
+    let second = handle.find_convolution(&p).unwrap();
+    let (exec_after, _) = handle.cache_stats();
+    // no new compilations or lookups on the memoized path
+    assert_eq!(exec_before.lookups, exec_after.lookups,
+               "find-db hit must not touch the exec cache");
+    assert_eq!(first.len(), second.len());
+    assert_eq!(first[0].algo, second[0].algo);
+}
+
+#[test]
+fn find_db_persists_across_handles() {
+    if !miopen_rs::testutil::artifacts_available() {
+        return;
+    }
+    let db_dir = common::temp_db_dir("find-persist");
+    let p = fig6_problem();
+    let best = {
+        let handle = miopen_rs::handle::Handle::new(
+            miopen_rs::handle::HandleOptions {
+                db_dir: Some(db_dir.clone()),
+                find_iters: 2,
+                ..Default::default()
+            })
+        .unwrap();
+        let results = handle.find_convolution(&p).unwrap();
+        handle.save_dbs().unwrap();
+        results[0].algo.clone()
+    };
+    // A fresh handle sees the persisted find-db and answers immediately.
+    let handle2 = miopen_rs::handle::Handle::new(
+        miopen_rs::handle::HandleOptions {
+            db_dir: Some(db_dir),
+            ..Default::default()
+        })
+    .unwrap();
+    assert_eq!(handle2.immediate_algo(&p).unwrap(), best);
+    let (exec, _) = handle2.cache_stats();
+    assert_eq!(exec.lookups, 0);
+}
+
+#[test]
+fn exhaustive_flag_rebenchmarks() {
+    let Some(handle) = common::cpu_handle("find-exh") else { return };
+    let p = fig6_problem();
+    handle.find_convolution(&p).unwrap();
+    let (exec_before, _) = handle.cache_stats();
+    handle
+        .find_convolution_opt(&p, &FindOptions { exhaustive: true,
+                                                 rank_by_model: false })
+        .unwrap();
+    let (exec_after, _) = handle.cache_stats();
+    assert!(exec_after.lookups > exec_before.lookups,
+            "exhaustive find must re-execute solvers");
+}
+
+#[test]
+fn rank_by_model_prefers_winograd_for_3x3() {
+    let Some(handle) = common::cpu_handle("find-model") else { return };
+    let results = handle
+        .find_convolution_opt(
+            &fig6_problem(),
+            &FindOptions { exhaustive: true, rank_by_model: true },
+        )
+        .unwrap();
+    assert_eq!(results[0].algo, "winograd",
+               "GCN model must put winograd first on 3x3/s1: {results:?}");
+}
+
+#[test]
+fn grouped_and_depthwise_conv_execute() {
+    // paper §IV-A "Types of convolution": grouped (g=2) and depthwise
+    // (g=C) configs route to the direct solver and execute.
+    let Some(handle) = common::cpu_handle("find-grouped") else { return };
+    for (c, k, g, h) in [(32usize, 32usize, 32usize, 14usize),
+                         (16, 32, 2, 14)] {
+        let p = ConvProblem::forward(
+            TensorDesc::nchw(4, c, h, h, DType::F32),
+            FilterDesc::kcrs(k, c / g, 3, 3, DType::F32),
+            miopen_rs::descriptors::ConvDesc::new(
+                (1, 1), (1, 1), (1, 1),
+                miopen_rs::descriptors::ConvMode::CrossCorrelation, g),
+        );
+        let results = handle.find_convolution(&p).unwrap();
+        assert_eq!(results.len(), 1, "grouped: only the direct solver");
+        assert_eq!(results[0].algo, "direct");
+        let sig = p.sig().unwrap();
+        let art = sig.artifact_sig("direct", None);
+        let inputs = common::seeded_inputs(&handle, &art, 31).unwrap();
+        let out = handle.execute_sig(&art, &inputs).unwrap();
+        assert_eq!(out[0].spec.shape, vec![4, k, h, h]);
+    }
+}
+
+#[test]
+fn int8_conv_is_exact() {
+    // §I: int8 data-type support. i8 inputs, exact f32 accumulation —
+    // every output must be an integer.
+    let Some(handle) = common::cpu_handle("find-int8") else { return };
+    let sig = "conv_fwd-direct-n4c16h14w14k32r3s3u1v1p1q1l1j1g1-i8";
+    let inputs = common::seeded_inputs(&handle, sig, 77).unwrap();
+    assert_eq!(inputs[0].spec.dtype, DType::I8);
+    let out = handle.execute_sig(sig, &inputs).unwrap();
+    let vals = out[0].as_f32().unwrap();
+    assert!(vals.iter().any(|v| *v != 0.0));
+    for v in &vals {
+        assert_eq!(*v, v.round(), "int8 conv must be exact: {v}");
+    }
+}
+
+// -- failure injection (mock backend) ----------------------------------------
+
+const MOCK_MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {"sig": "conv_fwd-gemm-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32",
+     "file": "conv_fwd-gemm-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32.hlo.txt",
+     "primitive": "conv", "algo": "gemm", "direction": "fwd", "dtype": "f32",
+     "tags": [], "params": {},
+     "inputs": [{"shape": [1,2,8,8], "dtype": "f32"},
+                {"shape": [2,2,3,3], "dtype": "f32"}],
+     "outputs": [{"shape": [1,2,8,8], "dtype": "f32"}],
+     "workspace_bytes": 1024, "tuning": {}},
+    {"sig": "conv_fwd-direct-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32",
+     "file": "conv_fwd-direct-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32.hlo.txt",
+     "primitive": "conv", "algo": "direct", "direction": "fwd", "dtype": "f32",
+     "tags": [], "params": {},
+     "inputs": [{"shape": [1,2,8,8], "dtype": "f32"},
+                {"shape": [2,2,3,3], "dtype": "f32"}],
+     "outputs": [{"shape": [1,2,8,8], "dtype": "f32"}],
+     "workspace_bytes": 0, "tuning": {}},
+    {"sig": "conv_fwd-winograd-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32",
+     "file": "conv_fwd-winograd-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32.hlo.txt",
+     "primitive": "conv", "algo": "winograd", "direction": "fwd",
+     "dtype": "f32", "tags": [], "params": {},
+     "inputs": [{"shape": [1,2,8,8], "dtype": "f32"},
+                {"shape": [2,2,3,3], "dtype": "f32"}],
+     "outputs": [{"shape": [1,2,8,8], "dtype": "f32"}],
+     "workspace_bytes": 0, "tuning": {}},
+    {"sig": "conv_fwd-implicit-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32",
+     "file": "conv_fwd-implicit-n1c2h8w8k2r3s3u1v1p1q1l1j1g1-f32.hlo.txt",
+     "primitive": "conv", "algo": "implicit", "direction": "fwd",
+     "dtype": "f32", "tags": [], "params": {},
+     "inputs": [{"shape": [1,2,8,8], "dtype": "f32"},
+                {"shape": [2,2,3,3], "dtype": "f32"}],
+     "outputs": [{"shape": [1,2,8,8], "dtype": "f32"}],
+     "workspace_bytes": 0, "tuning": {}}
+  ]
+}"#;
+
+fn mock_problem() -> ConvProblem {
+    ConvProblem::forward(
+        TensorDesc::nchw(1, 2, 8, 8, DType::F32),
+        FilterDesc::kcrs(2, 2, 3, 3, DType::F32),
+        ConvDesc::simple(1, 1),
+    )
+}
+
+#[test]
+fn find_skips_failing_solvers() {
+    // winograd fails to compile, direct fails at exec: both must be
+    // skipped, ranking built from the survivors (paper behaviour).
+    let handle = common::mock_handle(
+        MOCK_MANIFEST,
+        miopen_rs::runtime::MockConfig {
+            fail_compile_containing: vec!["winograd".into()],
+            fail_exec_containing: vec!["direct".into()],
+            ..Default::default()
+        },
+        "find-inject",
+    );
+    let results = handle.find_convolution(&mock_problem()).unwrap();
+    let algos: Vec<&str> = results.iter().map(|r| r.algo.as_str()).collect();
+    assert!(!algos.contains(&"winograd"));
+    assert!(!algos.contains(&"direct"));
+    assert!(algos.contains(&"gemm"));
+    assert!(algos.contains(&"implicit"));
+}
+
+#[test]
+fn find_errors_when_all_solvers_fail() {
+    let handle = common::mock_handle(
+        MOCK_MANIFEST,
+        miopen_rs::runtime::MockConfig {
+            fail_compile_containing: vec!["conv_fwd".into()],
+            ..Default::default()
+        },
+        "find-allfail",
+    );
+    assert!(handle.find_convolution(&mock_problem()).is_err());
+}
+
+#[test]
+fn find_respects_mock_latencies() {
+    // gemm 5ms, others 100us: gemm must rank last.
+    let handle = common::mock_handle(
+        MOCK_MANIFEST,
+        miopen_rs::runtime::MockConfig {
+            exec_us_by_file: vec![("gemm".into(), 5000), ("".into(), 100)],
+            ..Default::default()
+        },
+        "find-latency",
+    );
+    let results = handle.find_convolution(&mock_problem()).unwrap();
+    assert_eq!(results.last().unwrap().algo, "gemm");
+}

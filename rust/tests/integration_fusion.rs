@@ -1,0 +1,165 @@
+//! Integration: fusion plans compile + execute on real artifacts and agree
+//! numerically with the separate-op pipeline (§V).
+
+mod common;
+
+use miopen_rs::descriptors::{ActivationDesc, ActivationMode, BnMode,
+                             ConvDesc, FilterDesc, TensorDesc};
+use miopen_rs::fusion::{FusionOp, FusionPlan};
+use miopen_rs::prelude::DType;
+
+/// FIG7A entry with c=16 h=14 w=14 k=32 r3 p1: CBA plan accepted by the
+/// winograd row (c=16 ... wait, 3x3 needs c>=18 even) — use c=16? The
+/// fig7a configs have c=16; 3x3 winograd row requires c>=18&even, so the
+/// mdgraph rejects them... but the 1x1 fig7a configs (c=16, k in {8,32})
+/// hit the CBA-direct-1x1 row. Use those for accepted-plan execution.
+fn cba_1x1_plan(k: usize) -> FusionPlan {
+    FusionPlan::new(TensorDesc::nchw(4, 16, 28, 28, DType::F32))
+        .add(FusionOp::Conv {
+            desc: ConvDesc::simple(1, 0),
+            filter: FilterDesc::kcrs(k, 16, 1, 1, DType::F32),
+        })
+        .add(FusionOp::Bias)
+        .add(FusionOp::Activation {
+            desc: ActivationDesc::new(ActivationMode::Relu),
+        })
+}
+
+#[test]
+fn cba_plan_compiles_and_matches_separate_ops() {
+    let Some(handle) = common::cpu_handle("fusion-cba") else { return };
+    let plan = cba_1x1_plan(32);
+    let compiled = plan.compile(&handle).unwrap();
+    assert_eq!(compiled.combination, "CBA");
+
+    let args = common::seeded_inputs(&handle, &compiled.sig, 5).unwrap();
+    let fused = compiled.execute(&args).unwrap()[0].as_f32().unwrap();
+
+    // separate pipeline: conv -> bias -> act artifacts on the same inputs
+    let conv_sig = "conv_fwd-direct-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32";
+    let y = handle
+        .execute_sig(conv_sig, &args[..2].to_vec())
+        .unwrap()
+        .remove(0);
+    let by = handle
+        .execute_sig("bias-4x32x28x28-f32", &[y, args[2].clone()])
+        .unwrap()
+        .remove(0);
+    let ay = handle
+        .execute_sig("act-relu-4x32x28x28-f32", &[by])
+        .unwrap()
+        .remove(0);
+    common::assert_allclose(&fused, &ay.as_f32().unwrap(), 1e-4,
+                            "CBA fused vs separate");
+}
+
+#[test]
+fn bna_plan_compiles_and_matches_separate_ops() {
+    let Some(handle) = common::cpu_handle("fusion-bna") else { return };
+    // FIG7B entry (16, 28, 28), n=4
+    let plan = FusionPlan::new(TensorDesc::nchw(4, 16, 28, 28, DType::F32))
+        .add(FusionOp::BatchNorm { mode: BnMode::Spatial })
+        .add(FusionOp::Activation {
+            desc: ActivationDesc::new(ActivationMode::Relu),
+        });
+    let compiled = plan.compile(&handle).unwrap();
+    assert_eq!(compiled.combination, "NA");
+
+    let mut args = common::seeded_inputs(&handle, &compiled.sig, 13).unwrap();
+    // variance must be positive
+    let var_vals: Vec<f32> = args[4].as_f32().unwrap()
+        .iter().map(|v| v.abs() + 0.1).collect();
+    args[4] = miopen_rs::runtime::HostTensor::from_f32(
+        &args[4].spec.shape.clone(), &var_vals);
+
+    let fused = compiled.execute(&args).unwrap()[0].as_f32().unwrap();
+
+    let bn = handle
+        .execute_sig("bn_infer-spatial-n4c16h28w28-f32", &args)
+        .unwrap()
+        .remove(0);
+    let act = handle
+        .execute_sig("act-relu-4x16x28x28-f32", &[bn])
+        .unwrap()
+        .remove(0);
+    common::assert_allclose(&fused, &act.as_f32().unwrap(), 1e-4,
+                            "BNA fused vs separate");
+}
+
+#[test]
+fn cbna_plan_executes() {
+    let Some(handle) = common::cpu_handle("fusion-cbna") else { return };
+    for stride in [1usize, 2] {
+        let plan = FusionPlan::new(TensorDesc::nchw(2, 8, 14, 14, DType::F32))
+            .add(FusionOp::Conv {
+                desc: ConvDesc::simple(stride, 1),
+                filter: FilterDesc::kcrs(8, 8, 3, 3, DType::F32),
+            })
+            .add(FusionOp::Bias)
+            .add(FusionOp::BatchNorm { mode: BnMode::Spatial })
+            .add(FusionOp::Activation {
+                desc: ActivationDesc::new(ActivationMode::Relu),
+            });
+        let compiled = plan.compile(&handle).unwrap();
+        assert_eq!(compiled.combination, "CBNA");
+        assert_eq!(compiled.conv_algo, "direct");
+        let mut args = common::seeded_inputs(&handle, &compiled.sig, 3).unwrap();
+        let var_vals: Vec<f32> = args[6].as_f32().unwrap()
+            .iter().map(|v| v.abs() + 0.1).collect();
+        args[6] = miopen_rs::runtime::HostTensor::from_f32(
+            &args[6].spec.shape.clone(), &var_vals);
+        let out = compiled.execute(&args).unwrap();
+        assert_eq!(out.len(), 1);
+        // relu output is non-negative
+        assert!(out[0].as_f32().unwrap().iter().all(|v| *v >= 0.0));
+    }
+}
+
+#[test]
+fn rejected_plan_does_not_compile() {
+    let Some(handle) = common::cpu_handle("fusion-reject") else { return };
+    // 4x4 filter CBNA is outside Table I
+    let plan = FusionPlan::new(TensorDesc::nchw(2, 8, 14, 14, DType::F32))
+        .add(FusionOp::Conv {
+            desc: ConvDesc::simple(1, 1),
+            filter: FilterDesc::kcrs(8, 8, 4, 4, DType::F32),
+        })
+        .add(FusionOp::Bias)
+        .add(FusionOp::BatchNorm { mode: BnMode::Spatial })
+        .add(FusionOp::Activation {
+            desc: ActivationDesc::new(ActivationMode::Relu),
+        });
+    assert!(plan.compile(&handle).is_err());
+}
+
+#[test]
+fn accepted_plan_without_artifact_reports_missing() {
+    let Some(handle) = common::cpu_handle("fusion-missing") else { return };
+    // accepted by the mdgraph (CBA direct 1x1) but no artifact AOT'd for
+    // this shape
+    let plan = cba_1x1_plan(13);
+    match plan.compile(&handle) {
+        Ok(_) => panic!("expected ArtifactMissing"),
+        Err(err) => assert!(
+            matches!(err, miopen_rs::types::MiopenError::ArtifactMissing(_)),
+            "{err}"),
+    }
+}
+
+#[test]
+fn compiled_plan_is_cached_for_reexecution() {
+    let Some(handle) = common::cpu_handle("fusion-cache") else { return };
+    let plan = cba_1x1_plan(32);
+    let c1 = plan.compile(&handle).unwrap();
+    let (stats1, _) = handle.cache_stats();
+    let _c2 = plan.compile(&handle).unwrap();
+    let (stats2, _) = handle.cache_stats();
+    assert_eq!(stats2.misses, stats1.misses,
+               "second compile must hit the exec cache");
+    // repeated execution with different data, no recompilation
+    let args = common::seeded_inputs(&handle, &c1.sig, 21).unwrap();
+    let args2 = common::seeded_inputs(&handle, &c1.sig, 22).unwrap();
+    let o1 = c1.execute(&args).unwrap()[0].as_f32().unwrap();
+    let o2 = c1.execute(&args2).unwrap()[0].as_f32().unwrap();
+    assert_ne!(o1, o2, "different inputs must give different outputs");
+}

@@ -1,0 +1,123 @@
+//! Integration: RNN artifacts (§IV-C) — fused vs naive numerical
+//! agreement, bidirectional layout, and the primitive wrapper.
+
+mod common;
+
+use miopen_rs::descriptors::{RnnCell, RnnDesc, RnnDirection};
+use miopen_rs::primitives;
+
+#[test]
+fn lstm_fused_and_naive_agree() {
+    let Some(handle) = common::cpu_handle("rnn-agree") else { return };
+    // abl-rnn t16 b8 x32 h32 artifacts exist in both variants
+    let fused_sig = "rnn-lstm-fused-t16b8x32h32-f32";
+    let naive_sig = "rnn-lstm-naive-t16b8x32h32-f32";
+    let inputs = common::seeded_inputs(&handle, fused_sig, 11).unwrap();
+    let hf = handle.execute_sig(fused_sig, &inputs).unwrap()[0]
+        .as_f32()
+        .unwrap();
+    let hn = handle.execute_sig(naive_sig, &inputs).unwrap()[0]
+        .as_f32()
+        .unwrap();
+    common::assert_allclose(&hf, &hn, 1e-3, "lstm fused vs naive");
+    // outputs are bounded by construction: h = o * tanh(c) in (-1, 1)
+    assert!(hf.iter().all(|v| v.abs() <= 1.0));
+}
+
+#[test]
+fn rnn_forward_wrapper_routes_to_artifact() {
+    let Some(handle) = common::cpu_handle("rnn-wrapper") else { return };
+    let desc = RnnDesc::lstm(32);
+    let sig = "rnn-lstm-fused-t16b8x32h32-f32";
+    let inputs = common::seeded_inputs(&handle, sig, 3).unwrap();
+    let out = primitives::rnn_forward(
+        &handle, &desc, &inputs[0],
+        &inputs[1..3], &inputs[3..5],
+    )
+    .unwrap();
+    assert_eq!(out[0].spec.shape, vec![16, 8, 32]);
+}
+
+#[test]
+fn bidirectional_doubles_hidden_axis() {
+    let Some(handle) = common::cpu_handle("rnn-bidir") else { return };
+    let sig = "rnn-lstm-bidir-t16b8x32h32-f32";
+    let inputs = common::seeded_inputs(&handle, sig, 5).unwrap();
+    let out = handle.execute_sig(sig, &inputs).unwrap();
+    assert_eq!(out[0].spec.shape, vec![16, 8, 64]);
+
+    let desc = RnnDesc {
+        direction: RnnDirection::Bidirectional,
+        ..RnnDesc::lstm(32)
+    };
+    let out2 = primitives::rnn_forward(
+        &handle, &desc, &inputs[0], &inputs[1..3], &inputs[3..5],
+    )
+    .unwrap();
+    common::assert_allclose(
+        &out[0].as_f32().unwrap(),
+        &out2[0].as_f32().unwrap(),
+        1e-6,
+        "wrapper vs direct execution",
+    );
+}
+
+#[test]
+fn gru_and_vanilla_artifacts_run() {
+    let Some(handle) = common::cpu_handle("rnn-cells") else { return };
+    for sig in ["rnn-gru-fused-t16b8x32h32-f32",
+                "rnn-vanilla-fused-t16b8x32h32-f32"] {
+        let inputs = common::seeded_inputs(&handle, sig, 9).unwrap();
+        let out = handle.execute_sig(sig, &inputs).unwrap();
+        assert_eq!(out[0].spec.shape, vec![16, 8, 32]);
+        let vals = out[0].as_f32().unwrap();
+        assert!(vals.iter().all(|v| v.is_finite()));
+        assert!(vals.iter().any(|v| *v != 0.0));
+    }
+}
+
+#[test]
+fn ctc_loss_artifact_is_positive_and_finite() {
+    let Some(handle) = common::cpu_handle("rnn-ctc") else { return };
+    let sig = "ctc_loss-b4t8v6l3-f32";
+    let art = handle.manifest().require(sig).unwrap().clone();
+
+    // build a proper batch: log-softmaxed probs, valid labels/lengths
+    let mut rng = miopen_rs::util::rng::SplitMix64::new(17);
+    let (b, t, v) = (4usize, 8usize, 6usize);
+    let mut lp = vec![0f32; b * t * v];
+    rng.fill_normal_f32(&mut lp);
+    for row in lp.chunks_exact_mut(v) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let z: f32 = row.iter().map(|x| (x - m).exp()).sum();
+        for x in row.iter_mut() {
+            *x = *x - m - z.ln();
+        }
+    }
+    let log_probs =
+        miopen_rs::runtime::HostTensor::from_f32(&[b, t, v], &lp);
+    let labels = miopen_rs::runtime::HostTensor::from_i32(
+        &[b, 3], &[1, 2, 3, 4, 5, 1, 2, 0, 0, 3, 3, 0]);
+    let input_lens =
+        miopen_rs::runtime::HostTensor::from_i32(&[b], &[8, 8, 6, 7]);
+    let label_lens =
+        miopen_rs::runtime::HostTensor::from_i32(&[b], &[3, 3, 2, 2]);
+
+    let loss = miopen_rs::primitives::ctc_loss(
+        &handle, &log_probs, &labels, &input_lens, &label_lens).unwrap();
+    let vals = loss.as_f32().unwrap();
+    assert_eq!(vals.len(), b);
+    for v in vals {
+        assert!(v.is_finite() && v > 0.0, "ctc loss {v}");
+    }
+    let _ = art;
+}
+
+#[test]
+fn batch_layout_rule_enforced_by_descriptor() {
+    // the paper's length-descending rule (§IV-C) — pure descriptor logic
+    assert!(RnnDesc::validate_batch_layout(&[8, 8, 4, 2]).is_ok());
+    assert!(RnnDesc::validate_batch_layout(&[4, 8]).is_err());
+    assert_eq!(RnnCell::Lstm.gates() * 32,
+               miopen_rs::primitives::rnn_weight_rows(RnnCell::Lstm, 32));
+}

@@ -1,0 +1,121 @@
+//! Integration: the batched inference driver + the E2E training loop
+//! (the library-as-deployed paths, DESIGN.md S14/S15).
+
+mod common;
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use miopen_rs::runtime::HostTensor;
+use miopen_rs::serve::{generate_load, run_server, Request, ServeConfig};
+
+#[test]
+fn server_answers_all_requests_with_batching() {
+    let Some(handle) = common::cpu_handle("serve-basic") else { return };
+    let infer = handle.manifest().require("cnn_infer-f32").unwrap();
+    let image_elems: usize =
+        infer.inputs.last().unwrap().shape[1..].iter().product();
+
+    let (tx, rx) = mpsc::channel();
+    let n = 40;
+    let loader = std::thread::spawn(move || {
+        generate_load(&tx, n, 2000.0, image_elems, 7)
+    });
+    let cfg = ServeConfig {
+        batch_max: 16,
+        batch_timeout: Duration::from_millis(10),
+    };
+    let stats = run_server(&handle, &cfg, rx).unwrap();
+    let responses: Vec<_> = loader.join().unwrap().iter().collect();
+
+    assert_eq!(responses.len(), n);
+    assert_eq!(stats.throughput.requests, n as u64);
+    assert!(stats.throughput.mean_batch_size() > 1.0,
+            "high-rate load must batch (got {:.2})",
+            stats.throughput.mean_batch_size());
+    for r in &responses {
+        assert!(r.predicted_class >= 0 && r.predicted_class < 3);
+        assert_eq!(r.logits.len(), 3);
+        assert!(r.latency_us > 0.0);
+    }
+    // ids are all answered exactly once
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+}
+
+#[test]
+fn server_rejects_malformed_request() {
+    let Some(handle) = common::cpu_handle("serve-badreq") else { return };
+    let (tx, rx) = mpsc::channel();
+    let (resp_tx, _resp_rx) = mpsc::channel();
+    tx.send(Request {
+        id: 0,
+        image: vec![0.0; 7], // wrong size
+        submitted: std::time::Instant::now(),
+        resp: resp_tx,
+    })
+    .unwrap();
+    drop(tx);
+    let err = run_server(&handle, &ServeConfig::default(), rx);
+    assert!(err.is_err());
+}
+
+#[test]
+fn e2e_training_loss_decreases() {
+    // The headline E2E validation (EXPERIMENTS.md e2e-train): a tiny CNN
+    // trained for a few dozen steps, entirely in Rust over the AOT
+    // train-step artifact built from the library's own Pallas kernels.
+    let Some(handle) = common::cpu_handle("serve-train") else { return };
+    let mut params = handle.execute_sig("cnn_init-f32", &[]).unwrap();
+    let mut first_losses = Vec::new();
+    let mut last_losses = Vec::new();
+    let steps = 30;
+    for step in 0..steps {
+        let seed = HostTensor::from_u32(&[2], &[step as u32, 0xDA7A]);
+        let batch = handle.execute_sig("cnn_datagen-f32", &[seed]).unwrap();
+        let mut inputs = params.clone();
+        inputs.extend(batch);
+        let mut out = handle.execute_sig("cnn_train-f32", &inputs).unwrap();
+        let loss = out.pop().unwrap().scalar_f32().unwrap();
+        assert!(loss.is_finite());
+        params = out;
+        if step < 5 {
+            first_losses.push(loss);
+        }
+        if step >= steps - 5 {
+            last_losses.push(loss);
+        }
+    }
+    let first: f32 = first_losses.iter().sum::<f32>() / first_losses.len() as f32;
+    let last: f32 = last_losses.iter().sum::<f32>() / last_losses.len() as f32;
+    assert!(last < first * 0.5,
+            "training must reduce loss: first5 {first:.3} -> last5 {last:.3}");
+}
+
+#[test]
+fn trained_model_predicts_its_corpus() {
+    let Some(handle) = common::cpu_handle("serve-acc") else { return };
+    // train briefly, then measure accuracy on a fresh batch
+    let mut params = handle.execute_sig("cnn_init-f32", &[]).unwrap();
+    for step in 0..40 {
+        let seed = HostTensor::from_u32(&[2], &[step as u32, 0xDA7A]);
+        let batch = handle.execute_sig("cnn_datagen-f32", &[seed]).unwrap();
+        let mut inputs = params.clone();
+        inputs.extend(batch);
+        let mut out = handle.execute_sig("cnn_train-f32", &inputs).unwrap();
+        out.pop();
+        params = out;
+    }
+    let seed = HostTensor::from_u32(&[2], &[9999, 0xDA7A]);
+    let batch = handle.execute_sig("cnn_datagen-f32", &[seed]).unwrap();
+    let (x, labels) = (batch[0].clone(), batch[1].clone());
+    let mut inputs = params;
+    inputs.push(x);
+    let out = handle.execute_sig("cnn_infer-f32", &inputs).unwrap();
+    let preds = out[1].as_i32().unwrap();
+    let labels = labels.as_i32().unwrap();
+    let correct = preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+    let acc = correct as f64 / labels.len() as f64;
+    assert!(acc >= 0.75, "held-out accuracy {acc} after 40 steps");
+}

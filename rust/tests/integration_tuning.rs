@@ -1,0 +1,134 @@
+//! Integration: tuning sessions (§III-B) — grid evaluation, perf-db
+//! persistence, pruning, and the find step consuming tuned variants.
+
+mod common;
+
+use miopen_rs::descriptors::{ConvDesc, FilterDesc, TensorDesc};
+use miopen_rs::find::ConvProblem;
+use miopen_rs::prelude::DType;
+use miopen_rs::tuning::{TuneOptions, TuningSession};
+
+/// TUNE_CONFIGS[0]: n4 c16 h28 w28 k32 r3 s3 p1 — has -bk{4,8,16,32}
+/// direct variants AOT'd.
+fn tunable_problem() -> ConvProblem {
+    ConvProblem::forward(
+        TensorDesc::nchw(4, 16, 28, 28, DType::F32),
+        FilterDesc::kcrs(32, 16, 3, 3, DType::F32),
+        ConvDesc::simple(1, 1),
+    )
+}
+
+#[test]
+fn tuning_evaluates_grid_and_persists_winner() {
+    let Some(handle) = common::cpu_handle("tune-grid") else { return };
+    let problem = tunable_problem();
+    let results = TuningSession::new(&handle)
+        .tune_convolution(&problem)
+        .unwrap();
+    let direct = results.iter().find(|r| r.solver == "direct").unwrap();
+    assert!(direct.evaluated.len() >= 3,
+            "grid points: {}", direct.evaluated.len());
+    assert!(direct.best_params.contains_key("block_k"));
+    // winner must be min over evaluated
+    let min = direct
+        .evaluated
+        .iter()
+        .map(|(_, t)| *t)
+        .fold(f64::INFINITY, f64::min);
+    assert_eq!(direct.best_time_us, min);
+
+    // persisted in the user perf-db
+    let key = problem.sig().unwrap().db_key();
+    let db = handle.perf_db();
+    assert_eq!(db.get(&key, "direct").unwrap()["block_k"],
+               direct.best_params["block_k"]);
+}
+
+#[test]
+fn tuned_best_not_worse_than_default_within_noise() {
+    let Some(handle) = common::cpu_handle("tune-best") else { return };
+    let results = TuningSession::new(&handle)
+        .tune_convolution(&tunable_problem())
+        .unwrap();
+    let direct = results.iter().find(|r| r.solver == "direct").unwrap();
+    if let Some(default_t) = direct.default_time_us {
+        // the default (bk16) is ONE of the grid points, so best <= default
+        // modulo timing noise
+        assert!(direct.best_time_us <= default_t * 1.25,
+                "tuned {} vs default {default_t}", direct.best_time_us);
+    }
+}
+
+#[test]
+fn pruning_reduces_evaluations() {
+    let Some(handle) = common::cpu_handle("tune-prune") else { return };
+    let full = TuningSession::new(&handle)
+        .tune_convolution(&tunable_problem())
+        .unwrap();
+    let pruned = TuningSession::with_options(&handle, TuneOptions {
+        prune_keep: 2,
+    })
+    .tune_convolution(&tunable_problem())
+    .unwrap();
+    let f = full.iter().find(|r| r.solver == "direct").unwrap();
+    let p = pruned.iter().find(|r| r.solver == "direct").unwrap();
+    assert!(p.evaluated.len() <= 2);
+    assert_eq!(p.pruned_out, f.evaluated.len() - p.evaluated.len());
+}
+
+#[test]
+fn find_uses_tuned_variant_after_tuning() {
+    let Some(handle) = common::cpu_handle("tune-find") else { return };
+    let problem = tunable_problem();
+    TuningSession::new(&handle).tune_convolution(&problem).unwrap();
+    let tuned_bk = {
+        let key = problem.sig().unwrap().db_key();
+        handle.perf_db().get(&key, "direct").unwrap()["block_k"]
+    };
+    let results = handle
+        .find_convolution_opt(
+            &problem,
+            &miopen_rs::find::FindOptions { exhaustive: true,
+                                            rank_by_model: false },
+        )
+        .unwrap();
+    let direct = results.iter().find(|r| r.algo == "direct").unwrap();
+    if tuned_bk != 16 {
+        assert!(direct.artifact_sig.ends_with(&format!("-bk{tuned_bk}")),
+                "find must benchmark the tuned variant: {}",
+                direct.artifact_sig);
+    }
+}
+
+#[test]
+fn untunable_problem_errors() {
+    let Some(handle) = common::cpu_handle("tune-none") else { return };
+    // a problem with no tuned artifact variants in the manifest
+    let problem = ConvProblem::forward(
+        TensorDesc::nchw(1, 3, 9, 9, DType::F32),
+        FilterDesc::kcrs(5, 3, 3, 3, DType::F32),
+        ConvDesc::simple(1, 0),
+    );
+    assert!(TuningSession::new(&handle)
+        .tune_convolution(&problem)
+        .is_err());
+}
+
+#[test]
+fn tuned_variants_agree_numerically() {
+    let Some(handle) = common::cpu_handle("tune-numeric") else { return };
+    // all block_k variants compute the same convolution
+    let sig = tunable_problem().sig().unwrap();
+    let base = sig.artifact_sig("direct", None);
+    let inputs = common::seeded_inputs(&handle, &base, 55).unwrap();
+    let want = handle.execute_sig(&base, &inputs).unwrap()[0]
+        .as_f32()
+        .unwrap();
+    for bk in [4usize, 8, 32] {
+        let s = sig.artifact_sig("direct", Some(bk));
+        let got = handle.execute_sig(&s, &inputs).unwrap()[0]
+            .as_f32()
+            .unwrap();
+        common::assert_allclose(&want, &got, 1e-4, &format!("bk{bk}"));
+    }
+}

@@ -1,0 +1,292 @@
+//! Property-based invariants over the coordinator (DESIGN.md §6 item 4),
+//! via the in-repo `testutil::prop` harness.
+
+mod common;
+
+use miopen_rs::cache::ExecCache;
+use miopen_rs::db::{FindDb, FindRecord, PerfDb};
+use miopen_rs::descriptors::{ActivationMode, ConvDesc, ConvMode, FilterDesc,
+                             TensorDesc};
+use miopen_rs::fusion::mdgraph::{MdGraph, OpKind, PlanAttrs};
+use miopen_rs::perfmodel::GcnModel;
+use miopen_rs::testutil::prop::{choice, forall, usize_in, Gen};
+use miopen_rs::types::{DType, ProblemSig};
+use miopen_rs::util::json;
+use miopen_rs::util::rng::SplitMix64;
+
+const CASES: usize = 300;
+
+fn sig_gen() -> Gen<ProblemSig> {
+    Gen::new(|rng: &mut SplitMix64| {
+        let r = [1usize, 3, 5, 7][rng.below(4) as usize];
+        ProblemSig {
+            direction: ["fwd", "bwd", "wrw"][rng.below(3) as usize].into(),
+            n: 1 + rng.below(8) as usize,
+            c: 1 + rng.below(64) as usize,
+            h: 4 + rng.below(60) as usize,
+            w: 4 + rng.below(60) as usize,
+            k: 1 + rng.below(128) as usize,
+            r,
+            s: r,
+            u: 1 + rng.below(2) as usize,
+            v: 1 + rng.below(2) as usize,
+            p: rng.below(3) as usize,
+            q: rng.below(3) as usize,
+            l: 1 + rng.below(2) as usize,
+            j: 1 + rng.below(2) as usize,
+            g: 1,
+            dtype: [DType::F32, DType::Bf16, DType::F16]
+                [rng.below(3) as usize],
+        }
+    })
+}
+
+#[test]
+fn prop_signature_roundtrip() {
+    // parse(print(sig)) == sig for every algo and tuning suffix
+    forall("signature-roundtrip", &sig_gen(), CASES, |sig| {
+        for algo in ["gemm", "direct", "implicit", "winograd", "fft"] {
+            for bk in [None, Some(8), Some(64)] {
+                let text = sig.artifact_sig(algo, bk);
+                let (parsed, algo2, bk2) = ProblemSig::parse_artifact(&text)
+                    .map_err(|e| e.to_string())?;
+                if parsed != *sig || algo2 != algo || bk2 != bk {
+                    return Err(format!("mismatch for {text}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_out_shape_matches_descriptor_layer() {
+    // ProblemSig::out_hw and ConvDesc::output_desc agree (valid shapes)
+    forall("out-shape-agrees", &sig_gen(), CASES, |sig| {
+        let er = (sig.r - 1) * sig.l + 1;
+        let es = (sig.s - 1) * sig.j + 1;
+        if sig.h + 2 * sig.p < er || sig.w + 2 * sig.q < es {
+            return Ok(()); // descriptor layer rejects; out_hw undefined
+        }
+        let x = TensorDesc::nchw(sig.n, sig.c, sig.h, sig.w, sig.dtype);
+        let w = FilterDesc::kcrs(sig.k, sig.c, sig.r, sig.s, sig.dtype);
+        let d = ConvDesc::new((sig.u, sig.v), (sig.p, sig.q),
+                              (sig.l, sig.j), ConvMode::CrossCorrelation, 1);
+        let out = d.output_desc(&x, &w).map_err(|e| e.to_string())?;
+        let (ho, wo) = sig.out_hw();
+        if out.dims != vec![sig.n, sig.k, ho, wo] {
+            return Err(format!("{:?} vs ({ho},{wo})", out.dims));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exec_cache_bounds_and_accounting() {
+    struct Null;
+    impl miopen_rs::runtime::Executable for Null {
+        fn run(&self, _: &[miopen_rs::runtime::HostTensor])
+            -> miopen_rs::types::Result<Vec<miopen_rs::runtime::HostTensor>> {
+            Ok(vec![])
+        }
+        fn output_arity(&self) -> usize {
+            0
+        }
+    }
+    let ops = miopen_rs::testutil::prop::vec_of(usize_in(0, 19),
+                                                usize_in(1, 200));
+    forall("cache-invariants", &ops, 60, |accesses| {
+        let cap = 1 + accesses.len() % 7;
+        let cache = ExecCache::new(cap);
+        for key in accesses {
+            cache
+                .get_or_compile(&format!("sig{key}"), || {
+                    Ok(std::rc::Rc::new(Null))
+                })
+                .map_err(|e| e.to_string())?;
+            if cache.len() > cap {
+                return Err(format!("len {} > cap {cap}", cache.len()));
+            }
+        }
+        let s = cache.stats();
+        if s.hits + s.misses != s.lookups {
+            return Err("hits+misses != lookups".into());
+        }
+        if s.lookups != accesses.len() as u64 {
+            return Err("lookup count wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_find_db_sorted_and_merge_idempotent() {
+    let rec_gen = Gen::new(|rng: &mut SplitMix64| {
+        let n = 1 + rng.below(5) as usize;
+        (0..n)
+            .map(|i| FindRecord {
+                algo: format!("algo{i}"),
+                time_us: rng.range_f64(1.0, 1e5),
+                modeled_time_us: rng.range_f64(1.0, 1e4),
+                workspace_bytes: rng.below(1 << 20),
+            })
+            .collect::<Vec<_>>()
+    });
+    forall("find-db-sorted", &rec_gen, CASES, |records| {
+        let mut db = FindDb::default();
+        db.insert("p".into(), records.clone());
+        let stored = db.get("p").unwrap();
+        if !stored.windows(2).all(|w| w[0].time_us <= w[1].time_us) {
+            return Err("not sorted".into());
+        }
+        // json roundtrip preserves ranking
+        let j = db.to_json().to_string();
+        let back = FindDb::from_json(&json::parse(&j).unwrap())
+            .map_err(|e| e.to_string())?;
+        if back.get("p").unwrap()[0].algo != stored[0].algo {
+            return Err("roundtrip changed winner".into());
+        }
+        // merge idempotence
+        let merged = db.merged_with(&back);
+        let again = merged.merged_with(&back);
+        if merged.get("p").unwrap().len() != again.get("p").unwrap().len() {
+            return Err("merge not idempotent".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perf_db_user_shadows_system() {
+    let gen = Gen::new(|rng: &mut SplitMix64| {
+        (rng.below(100) as i64, rng.below(100) as i64)
+    });
+    forall("perf-db-shadow", &gen, CASES, |(sys_v, user_v)| {
+        let mut sys = PerfDb::default();
+        sys.set("p", "direct",
+                std::collections::BTreeMap::from([("block_k".into(), *sys_v)]));
+        let mut user = PerfDb::default();
+        user.set("p", "direct",
+                 std::collections::BTreeMap::from([("block_k".into(), *user_v)]));
+        let merged = sys.merged_with(&user);
+        if merged.get("p", "direct").unwrap()["block_k"] != *user_v {
+            return Err("user must shadow system".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mdgraph_acceptance_implies_table_constraints() {
+    // Whatever the graph accepts must satisfy the published constraints —
+    // fuzzing the attribute space for constraint leaks.
+    let attr_gen = Gen::new(|rng: &mut SplitMix64| {
+        let f = 1 + rng.below(14) as usize;
+        PlanAttrs {
+            dtype: [DType::F32, DType::F16][rng.below(2) as usize],
+            filter: Some((f, f)),
+            stride: Some((1 + rng.below(3) as usize, 1 + rng.below(3) as usize)),
+            pad: Some((rng.below(4) as usize, rng.below(4) as usize)),
+            channels: Some(1 + rng.below(64) as usize),
+            activation: Some([ActivationMode::Relu, ActivationMode::LeakyRelu,
+                              ActivationMode::Tanh, ActivationMode::Sigmoid]
+                             [rng.below(4) as usize]),
+        }
+    });
+    let graph = MdGraph::standard();
+    let cba = [OpKind::Conv, OpKind::Bias, OpKind::Activation];
+    let cbna = [OpKind::Conv, OpKind::Bias, OpKind::BatchNorm,
+                OpKind::Activation];
+    forall("mdgraph-sound", &attr_gen, 500, |attrs| {
+        if let Some(m) = graph.accept(&cba, attrs) {
+            let f = attrs.filter.unwrap().0;
+            match m.conv_algo {
+                "direct" => {
+                    if f != 1 || attrs.stride != Some((1, 1))
+                        || attrs.pad != Some((0, 0)) {
+                        return Err(format!("direct CBA leak: {attrs:?}"));
+                    }
+                }
+                "winograd" => {
+                    if attrs.dtype != DType::F32 {
+                        return Err("winograd CBA in half precision".into());
+                    }
+                    let c = attrs.channels.unwrap();
+                    let s = attrs.stride.unwrap().0;
+                    if !matches!(s, 1 | 2) {
+                        return Err("winograd stride leak".into());
+                    }
+                    if f == 3 && s == 1 && (c < 18 || c % 2 == 1) {
+                        return Err(format!("3x3 channel leak: c={c}"));
+                    }
+                }
+                other => return Err(format!("unexpected algo {other}")),
+            }
+        }
+        if let Some(m) = graph.accept(&cbna, attrs) {
+            let f = attrs.filter.unwrap().0;
+            if m.conv_algo != "direct" || !matches!(f, 3 | 5 | 7 | 9 | 11) {
+                return Err(format!("CBNA leak: {attrs:?}"));
+            }
+            let (u, v) = attrs.stride.unwrap();
+            if u != v || !matches!(u, 1 | 2) {
+                return Err("CBNA stride leak".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perf_model_monotone_in_batch() {
+    let graph_gen = choice(vec!["gemm", "direct", "implicit", "winograd"]);
+    forall("model-monotone", &graph_gen, 20, |algo| {
+        let m = GcnModel::vega64();
+        let mut prev = 0.0;
+        for n in [1usize, 2, 4, 8, 16] {
+            let sig = ProblemSig {
+                direction: "fwd".into(),
+                n, c: 32, h: 28, w: 28, k: 32, r: 3, s: 3,
+                u: 1, v: 1, p: 1, q: 1, l: 1, j: 1, g: 1,
+                dtype: DType::F32,
+            };
+            let t = m.conv_time_us(&sig, algo);
+            if t < prev {
+                return Err(format!("{algo}: time decreased at n={n}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    // random JSON-ish documents built programmatically roundtrip exactly
+    fn gen_value(rng: &mut SplitMix64, depth: usize) -> json::Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.below(2) == 0),
+            2 => json::Json::Num((rng.below(100000) as f64) / 4.0),
+            3 => json::Json::Str(format!("s{}\n\"x", rng.below(1000))),
+            4 => json::Json::Arr(
+                (0..rng.below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                json::Json::Obj(m)
+            }
+        }
+    }
+    let gen = Gen::new(|rng: &mut SplitMix64| gen_value(rng, 3));
+    forall("json-roundtrip", &gen, 400, |doc| {
+        let text = doc.to_string();
+        let back = json::parse(&text).map_err(|e| e.to_string())?;
+        if back != *doc {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,20 @@
+# Convenience targets. The default Rust build is hermetic; `artifacts`
+# requires Python + JAX and upgrades pjrt-feature builds to compiled
+# kernels (see README.md, Backend matrix).
+
+.PHONY: build test artifacts golden python-test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+golden:
+	cd python && python -m tools.gen_golden
+
+python-test:
+	cd python && python -m pytest tests -q

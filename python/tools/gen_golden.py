@@ -1,0 +1,202 @@
+"""Generate golden parity fixtures from the JAX reference kernels.
+
+Writes rust/tests/fixtures/golden.json: small deterministic input tensors
+plus the outputs of python/compile/kernels/ref.py on them. The Rust interp
+backend's reference kernels (rust/src/runtime/interp/kernels.rs) must
+reproduce every case within 1e-4 relative error — asserted by
+rust/tests/golden_parity.rs, which runs hermetically against the checked-in
+JSON (this script only needs to re-run when the reference semantics
+change).
+
+Run:  cd python && python -m tools.gen_golden
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from compile.kernels import ref
+
+RNG = np.random.default_rng(20260801)
+
+
+def t(a):
+    a = np.asarray(a, np.float32)
+    return {"shape": list(a.shape), "data": [float(v) for v in a.reshape(-1)]}
+
+
+def rand(*shape):
+    return np.asarray(RNG.standard_normal(shape), np.float32)
+
+
+CASES = []
+
+
+def case(name, kind, params, inputs, outputs):
+    outs = outputs if isinstance(outputs, (tuple, list)) else (outputs,)
+    CASES.append({
+        "name": name,
+        "kind": kind,
+        "params": params,
+        "inputs": [t(a) for a in inputs],
+        "outputs": [t(np.asarray(o)) for o in outs],
+    })
+    print(f"  {name}: {sum(int(np.asarray(o).size) for o in outs)} output elems")
+
+
+def conv_params(n, c, h, w, k, r, s, u=1, v=1, p=0, q=0, l=1, j=1, g=1):
+    return dict(n=n, c=c, h=h, w=w, k=k, r=r, s=s, u=u, v=v, p=p, q=q,
+                l=l, j=j, g=g)
+
+
+def gen_conv():
+    # dense 3x3 stride 1 pad 1
+    x, w = rand(2, 3, 6, 6), rand(4, 3, 3, 3)
+    case("conv_fwd_3x3_s1_p1", "conv_fwd",
+         conv_params(2, 3, 6, 6, 4, 3, 3, p=1, q=1), [x, w],
+         ref.conv2d_fwd(x, w, stride=(1, 1), pad=(1, 1)))
+    # strided
+    case("conv_fwd_3x3_s2_p1", "conv_fwd",
+         conv_params(2, 3, 6, 6, 4, 3, 3, u=2, v=2, p=1, q=1), [x, w],
+         ref.conv2d_fwd(x, w, stride=(2, 2), pad=(1, 1)))
+    # dilated
+    case("conv_fwd_3x3_dil2_p2", "conv_fwd",
+         conv_params(2, 3, 6, 6, 4, 3, 3, p=2, q=2, l=2, j=2), [x, w],
+         ref.conv2d_fwd(x, w, stride=(1, 1), pad=(2, 2), dilation=(2, 2)))
+    # grouped
+    xg, wg = rand(2, 4, 6, 6), rand(4, 2, 3, 3)
+    case("conv_fwd_3x3_g2", "conv_fwd",
+         conv_params(2, 4, 6, 6, 4, 3, 3, p=1, q=1, g=2), [xg, wg],
+         ref.conv2d_fwd(xg, wg, stride=(1, 1), pad=(1, 1), groups=2))
+    # im2col+GEMM path, 5x5
+    x5, w5 = rand(1, 2, 8, 8), rand(3, 2, 5, 5)
+    case("conv_gemm_5x5_p2", "conv_gemm",
+         conv_params(1, 2, 8, 8, 3, 5, 5, p=2, q=2), [x5, w5],
+         ref.conv2d_im2col_gemm(x5, w5, stride=(1, 1), pad=(2, 2)))
+    # backward data / weights (stride 1 and 2)
+    dy = rand(2, 4, 6, 6)
+    case("conv_bwd_data_3x3_s1_p1", "conv_bwd_data",
+         conv_params(2, 3, 6, 6, 4, 3, 3, p=1, q=1), [dy, w],
+         ref.conv2d_bwd_data(dy, w, (2, 3, 6, 6), stride=(1, 1), pad=(1, 1)))
+    case("conv_bwd_weights_3x3_s1_p1", "conv_bwd_weights",
+         conv_params(2, 3, 6, 6, 4, 3, 3, p=1, q=1), [dy, x],
+         ref.conv2d_bwd_weights(dy, x, (4, 3, 3, 3), stride=(1, 1),
+                                pad=(1, 1)))
+    dy2 = rand(2, 4, 3, 3)
+    case("conv_bwd_data_3x3_s2_p1", "conv_bwd_data",
+         conv_params(2, 3, 6, 6, 4, 3, 3, u=2, v=2, p=1, q=1), [dy2, w],
+         ref.conv2d_bwd_data(dy2, w, (2, 3, 6, 6), stride=(2, 2), pad=(1, 1)))
+    case("conv_bwd_weights_3x3_s2_p1", "conv_bwd_weights",
+         conv_params(2, 3, 6, 6, 4, 3, 3, u=2, v=2, p=1, q=1), [dy2, x],
+         ref.conv2d_bwd_weights(dy2, x, (4, 3, 3, 3), stride=(2, 2),
+                                pad=(1, 1)))
+
+
+def pool_params(n, c, h, w, wh, ww, u, v, p, q):
+    return dict(n=n, c=c, h=h, w=w, wh=wh, ww=ww, u=u, v=v, p=p, q=q)
+
+
+def gen_pool():
+    x = rand(1, 2, 6, 6)
+    for mode in ("max", "avg"):
+        y = ref.pool2d_fwd(x, window=(2, 2), stride=(2, 2), pad=(0, 0),
+                           mode=mode)
+        case(f"pool_fwd_{mode}_2x2_s2", f"pool_fwd_{mode}",
+             pool_params(1, 2, 6, 6, 2, 2, 2, 2, 0, 0), [x], y)
+        dy = rand(*np.asarray(y).shape)
+        case(f"pool_bwd_{mode}_2x2_s2", f"pool_bwd_{mode}",
+             pool_params(1, 2, 6, 6, 2, 2, 2, 2, 0, 0), [x, dy],
+             ref.pool2d_bwd(x, dy, window=(2, 2), stride=(2, 2), pad=(0, 0),
+                            mode=mode))
+    # padded 3x3 window, stride 2
+    y = ref.pool2d_fwd(x, window=(3, 3), stride=(2, 2), pad=(1, 1),
+                       mode="max")
+    case("pool_fwd_max_3x3_s2_p1", "pool_fwd_max",
+         pool_params(1, 2, 6, 6, 3, 3, 2, 2, 1, 1), [x], y)
+
+
+def gen_bn():
+    n, c, h, w = 2, 3, 4, 4
+    params = dict(n=n, c=c, h=h, w=w)
+    x = rand(n, c, h, w)
+    gamma, beta = rand(c), rand(c)
+    y, mu, var = ref.batchnorm_spatial_fwd_train(x, gamma, beta)
+    case("bn_spatial_train", "bn_spatial_train", params, [x, gamma, beta],
+         (y, mu, var))
+    mean_i = rand(c)
+    var_i = np.abs(rand(c)) + 0.1
+    case("bn_spatial_infer", "bn_spatial_infer", params,
+         [x, gamma, beta, mean_i, var_i],
+         ref.batchnorm_spatial_fwd_infer(x, gamma, beta, mean_i, var_i))
+    dy = rand(n, c, h, w)
+    dx, dg, db = ref.batchnorm_spatial_bwd(x, dy, gamma, np.asarray(mu),
+                                           np.asarray(var))
+    case("bn_spatial_bwd", "bn_spatial_bwd", params,
+         [x, dy, gamma, np.asarray(mu), np.asarray(var)], (dx, dg, db))
+    gp, bp = rand(c, h, w), rand(c, h, w)
+    yp, mup, varp = ref.batchnorm_peract_fwd_train(x, gp, bp)
+    case("bn_peract_train", "bn_peract_train", params, [x, gp, bp],
+         (yp, mup, varp))
+
+
+def gen_softmax():
+    n, c, h, w = 2, 5, 2, 2
+    params = dict(n=n, c=c, h=h, w=w)
+    x = rand(n, c, h, w)
+    for log in (False, True):
+        nm = "log_softmax" if log else "softmax"
+        y = ref.softmax_fwd(x, log=log)
+        case(f"{nm}_fwd", f"{nm}_fwd", params, [x], y)
+        dy = rand(n, c, h, w)
+        case(f"{nm}_bwd", f"{nm}_bwd", params, [np.asarray(y), dy],
+             ref.softmax_bwd(np.asarray(y), dy, log=log))
+
+
+def gen_act():
+    shape = (2, 3, 4)
+    params = {}
+    x = rand(*shape)
+    alphas = {"leaky_relu": 0.01, "elu": 1.0, "clipped_relu": 6.0}
+    for mode in ("relu", "leaky_relu", "tanh", "sigmoid", "elu",
+                 "clipped_relu", "abs", "identity"):
+        a = alphas.get(mode, 0.0)
+        case(f"act_fwd_{mode}", f"act_fwd_{mode}", params, [x],
+             ref.activation_fwd(x, mode, a))
+    dy = rand(*shape)
+    for mode in ("relu", "tanh", "sigmoid", "elu"):
+        a = alphas.get(mode, 0.0)
+        case(f"act_bwd_{mode}", f"act_bwd_{mode}", params, [x, dy],
+             ref.activation_bwd(x, dy, mode, a))
+
+
+def gen_fused():
+    x, w, b = rand(1, 3, 5, 5), rand(4, 3, 3, 3), rand(4)
+    case("fused_cba_relu", "cba_relu",
+         conv_params(1, 3, 5, 5, 4, 3, 3, p=1, q=1), [x, w, b],
+         ref.fused_conv_bias_act_ref(x, w, b, stride=(1, 1), pad=(1, 1),
+                                     mode="relu"))
+
+
+def main():
+    print("generating golden fixtures ...")
+    gen_conv()
+    gen_pool()
+    gen_bn()
+    gen_softmax()
+    gen_act()
+    gen_fused()
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "rust",
+                           "tests", "fixtures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump({"version": 1, "tolerance": 1e-4, "cases": CASES}, f)
+    print(f"wrote {len(CASES)} cases to {os.path.normpath(path)} "
+          f"({os.path.getsize(path)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,765 @@
+//! Problem-configuration sets — the Rust mirror of
+//! `python/compile/configs.py` plus the artifact enumeration of
+//! `python/compile/aot.py`.
+//!
+//! The Python side is the source of truth when artifacts are AOT'd
+//! (`make artifacts` writes `manifest.json`). This module regenerates the
+//! *same* artifact set in-process so the interp backend can serve every
+//! signature hermetically — no Python, no PJRT, no files on disk. The two
+//! enumerations must stay in sync; `python/tests/test_aot.py` and the
+//! integration suites cross-check signatures from both sides.
+
+use crate::manifest::{Artifact, TensorSpec};
+use crate::types::DType;
+
+/// Mirror of `configs.ConvConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvConfig {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub r: usize,
+    pub s: usize,
+    pub u: usize,
+    pub v: usize,
+    pub p: usize,
+    pub q: usize,
+    pub l: usize,
+    pub j: usize,
+    pub g: usize,
+}
+
+/// Dense stride-1 unpadded config (the dataclass defaults).
+pub const fn cc(n: usize, c: usize, h: usize, w: usize, k: usize, r: usize,
+                s: usize) -> ConvConfig {
+    ConvConfig { n, c, h, w, k, r, s, u: 1, v: 1, p: 0, q: 0, l: 1, j: 1, g: 1 }
+}
+
+impl ConvConfig {
+    pub fn sig_params(&self) -> String {
+        format!(
+            "n{}c{}h{}w{}k{}r{}s{}u{}v{}p{}q{}l{}j{}g{}",
+            self.n, self.c, self.h, self.w, self.k, self.r, self.s, self.u,
+            self.v, self.p, self.q, self.l, self.j, self.g
+        )
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        let er = (self.r - 1) * self.l + 1;
+        let es = (self.s - 1) * self.j + 1;
+        let ho = (self.h + 2 * self.p - er) / self.u + 1;
+        let wo = (self.w + 2 * self.q - es) / self.v + 1;
+        (ho, wo)
+    }
+
+    /// Figure 6 x-axis label.
+    pub fn label(&self) -> String {
+        format!("{}-{}-{}-{}-{}-{}-{}-{}",
+                self.r, self.s, self.c, self.h, self.w, self.k, self.p, self.q)
+    }
+
+    fn param_pairs(&self) -> Vec<(&'static str, i64)> {
+        vec![
+            ("n", self.n as i64), ("c", self.c as i64), ("h", self.h as i64),
+            ("w", self.w as i64), ("k", self.k as i64), ("r", self.r as i64),
+            ("s", self.s as i64), ("u", self.u as i64), ("v", self.v as i64),
+            ("p", self.p as i64), ("q", self.q as i64), ("l", self.l as i64),
+            ("j", self.j as i64), ("g", self.g as i64),
+        ]
+    }
+}
+
+/// Mirror of `configs.RnnConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct RnnConfig {
+    pub cell: &'static str,
+    pub t: usize,
+    pub b: usize,
+    pub x: usize,
+    pub hid: usize,
+    pub act: &'static str,
+}
+
+impl RnnConfig {
+    pub fn sig_params(&self) -> String {
+        format!("t{}b{}x{}h{}", self.t, self.b, self.x, self.hid)
+    }
+}
+
+// -- Figure 6 convolution configs (configs.py FIG6_1X1 / FIG6_NON1X1) --------
+
+pub fn fig6_1x1() -> Vec<ConvConfig> {
+    vec![
+        cc(4, 16, 28, 28, 16, 1, 1),
+        cc(4, 48, 28, 28, 16, 1, 1),
+        cc(4, 120, 14, 14, 32, 1, 1),
+        cc(4, 128, 14, 14, 32, 1, 1),
+        cc(4, 208, 7, 7, 64, 1, 1),
+        ConvConfig { u: 2, v: 2, ..cc(4, 32, 28, 28, 64, 1, 1) },
+        cc(4, 64, 14, 14, 96, 1, 1),
+        cc(4, 96, 7, 7, 128, 1, 1),
+    ]
+}
+
+pub fn fig6_non1x1() -> Vec<ConvConfig> {
+    vec![
+        ConvConfig { p: 1, q: 1, ..cc(4, 16, 28, 28, 32, 3, 3) },
+        ConvConfig { p: 1, q: 1, ..cc(4, 32, 28, 28, 48, 3, 3) },
+        ConvConfig { p: 1, q: 1, ..cc(4, 28, 14, 14, 52, 3, 3) },
+        ConvConfig { p: 1, q: 1, ..cc(4, 40, 14, 14, 80, 3, 3) },
+        ConvConfig { p: 2, q: 2, ..cc(4, 4, 28, 28, 8, 5, 5) },
+        ConvConfig { p: 2, q: 2, ..cc(4, 8, 14, 14, 16, 5, 5) },
+        ConvConfig { u: 2, v: 2, p: 3, q: 3, ..cc(4, 3, 32, 32, 16, 7, 7) },
+        ConvConfig { u: 2, v: 2, p: 1, q: 1, ..cc(4, 16, 14, 14, 48, 3, 3) },
+    ]
+}
+
+pub fn fig7a() -> Vec<ConvConfig> {
+    let mut out: Vec<ConvConfig> = [4usize, 8, 16, 32, 64, 96]
+        .iter()
+        .map(|&k| ConvConfig { p: 1, q: 1, ..cc(4, 16, 14, 14, k, 3, 3) })
+        .collect();
+    out.push(cc(4, 16, 28, 28, 8, 1, 1));
+    out.push(cc(4, 16, 28, 28, 32, 1, 1));
+    out
+}
+
+/// (C, H, W) with N fixed at 4.
+pub const FIG7B: [(usize, usize, usize); 8] = [
+    (4, 7, 7), (8, 7, 7), (16, 14, 14), (8, 28, 28),
+    (16, 28, 28), (32, 28, 28), (16, 56, 56), (32, 56, 56),
+];
+
+pub fn grouped_configs() -> Vec<ConvConfig> {
+    vec![
+        ConvConfig { p: 1, q: 1, g: 32, ..cc(4, 32, 14, 14, 32, 3, 3) },
+        ConvConfig { p: 1, q: 1, g: 2, ..cc(4, 16, 14, 14, 32, 3, 3) },
+        ConvConfig { u: 2, v: 2, p: 1, q: 1, g: 8, ..cc(2, 8, 28, 28, 8, 3, 3) },
+    ]
+}
+
+pub fn int8_configs() -> Vec<ConvConfig> {
+    vec![
+        ConvConfig { p: 1, q: 1, ..cc(4, 16, 14, 14, 32, 3, 3) },
+        cc(4, 16, 28, 28, 16, 1, 1),
+    ]
+}
+
+pub fn tune_configs() -> Vec<ConvConfig> {
+    vec![
+        ConvConfig { p: 1, q: 1, ..cc(4, 16, 28, 28, 32, 3, 3) },
+        cc(4, 64, 14, 14, 64, 1, 1),
+    ]
+}
+
+pub const DIRECT_BLOCK_K: [usize; 4] = [4, 8, 16, 32];
+
+pub fn rnn_configs() -> Vec<RnnConfig> {
+    vec![
+        RnnConfig { cell: "lstm", t: 16, b: 8, x: 32, hid: 32, act: "tanh" },
+        RnnConfig { cell: "lstm", t: 32, b: 8, x: 64, hid: 64, act: "tanh" },
+        RnnConfig { cell: "gru", t: 16, b: 8, x: 32, hid: 32, act: "tanh" },
+        RnnConfig { cell: "vanilla", t: 16, b: 8, x: 32, hid: 32, act: "relu" },
+    ]
+}
+
+pub const RNN_ABLATION_T: [usize; 4] = [4, 8, 16, 32];
+
+pub const BN_SHAPES: [(usize, usize, usize, usize); 2] =
+    [(4, 16, 14, 14), (4, 32, 28, 28)];
+
+/// (shape, window, stride, pad, mode)
+type PoolCfg = ((usize, usize, usize, usize), (usize, usize), (usize, usize),
+                (usize, usize), &'static str);
+pub const POOL_SHAPES: [PoolCfg; 3] = [
+    ((4, 16, 28, 28), (2, 2), (2, 2), (0, 0), "max"),
+    ((4, 16, 28, 28), (2, 2), (2, 2), (0, 0), "avg"),
+    ((4, 8, 14, 14), (3, 3), (2, 2), (1, 1), "max"),
+];
+
+pub const SOFTMAX_SHAPES: [(usize, usize, usize, usize); 2] =
+    [(4, 10, 1, 1), (4, 16, 14, 14)];
+pub const ACT_SHAPES: [(usize, usize, usize, usize); 1] = [(4, 16, 28, 28)];
+pub const ACT_MODES: [&str; 4] = ["relu", "leaky_relu", "tanh", "sigmoid"];
+pub const LRN_SHAPES: [(usize, usize, usize, usize); 1] = [(4, 16, 14, 14)];
+
+/// Mirror of `configs.CNN` (the E2E tiny-CNN used by train/serve).
+pub mod cnn {
+    pub const IMAGE: usize = 16;
+    pub const CHANNELS: usize = 3;
+    pub const CLASSES: usize = 3;
+    pub const C1: usize = 8;
+    pub const C2: usize = 16;
+    pub const HIDDEN_HW: usize = 4;
+    pub const BATCH: usize = 16;
+    pub const LR: f32 = 0.05;
+    /// Flattened feature size after the two conv/pool stages.
+    pub const FEAT: usize = C2 * HIDDEN_HW * HIDDEN_HW;
+}
+
+// ---------------------------------------------------------------------------
+// Artifact enumeration (mirror of aot.py's emit_* functions)
+// ---------------------------------------------------------------------------
+
+fn sp(shape: &[usize], dtype: DType) -> TensorSpec {
+    TensorSpec { shape: shape.to_vec(), dtype }
+}
+
+fn f32s(shape: &[usize]) -> TensorSpec {
+    sp(shape, DType::F32)
+}
+
+/// Applicable forward algorithms (mirrors aot.fwd_algos AND the solver
+/// registry's applicability — the three must agree).
+pub fn fwd_algos(c: &ConvConfig) -> Vec<&'static str> {
+    let mut algos = vec!["gemm", "direct", "implicit"];
+    if (c.r, c.s) == (3, 3) && (c.u, c.v) == (1, 1) && (c.l, c.j) == (1, 1)
+        && c.g == 1 {
+        algos.push("winograd");
+    }
+    if c.r.max(c.s) >= 5 && (c.l, c.j) == (1, 1) && c.g == 1 {
+        algos.push("fft");
+    }
+    algos
+}
+
+pub fn bwd_algos(c: &ConvConfig) -> Vec<&'static str> {
+    let mut algos = vec!["gemm", "direct"];
+    if (c.r, c.s) == (3, 3) && (c.u, c.v) == (1, 1) && (c.l, c.j) == (1, 1)
+        && c.g == 1 {
+        algos.push("winograd");
+    }
+    algos
+}
+
+fn conv_sig(direction: &str, algo: &str, c: &ConvConfig, dtype: &str,
+            bk: Option<usize>) -> String {
+    let t = bk.map(|b| format!("-bk{b}")).unwrap_or_default();
+    format!("conv_{direction}-{algo}-{}-{dtype}{t}", c.sig_params())
+}
+
+fn conv_specs(direction: &str, c: &ConvConfig, dtype: DType)
+    -> (Vec<TensorSpec>, Vec<TensorSpec>) {
+    let xs = [c.n, c.c, c.h, c.w];
+    let ws = [c.k, c.c / c.g, c.r, c.s];
+    let (ho, wo) = c.out_hw();
+    let ys = [c.n, c.k, ho, wo];
+    match direction {
+        "fwd" => (vec![sp(&xs, dtype), sp(&ws, dtype)], vec![sp(&ys, dtype)]),
+        "bwd" => (vec![sp(&ys, dtype), sp(&ws, dtype)], vec![sp(&xs, dtype)]),
+        _ => (vec![sp(&ys, dtype), sp(&xs, dtype)], vec![sp(&ws, dtype)]),
+    }
+}
+
+fn gemm_workspace(c: &ConvConfig, dtype: DType) -> u64 {
+    let (ho, wo) = c.out_hw();
+    (c.c * c.r * c.s * c.n * ho * wo) as u64 * dtype.size_bytes() as u64
+}
+
+fn conv_artifact(direction: &str, algo: &str, c: &ConvConfig, dtype: DType,
+                 bk: Option<usize>) -> Artifact {
+    let (inputs, outputs) = conv_specs(direction, c, dtype);
+    let ws = if algo == "gemm" { gemm_workspace(c, dtype) } else { 0 };
+    let mut art = Artifact::synthetic(
+        &conv_sig(direction, algo, c, dtype.name(), bk), "conv", algo,
+        direction, inputs, outputs)
+        .with_params(&c.param_pairs())
+        .with_label(&c.label())
+        .with_workspace(ws);
+    if let Some(b) = bk {
+        art = art.with_tuning(&[("block_k", b as i64)]);
+    }
+    art
+}
+
+fn emit_conv_family(out: &mut Vec<Artifact>) {
+    // Figure 6 panels: fwd -> a/b, bwd -> c/d, wrw -> e/f.
+    for (set, one_by_one) in [(fig6_1x1(), true), (fig6_non1x1(), false)] {
+        for c in &set {
+            for (direction, panels) in
+                [("fwd", ("a", "b")), ("bwd", ("c", "d")), ("wrw", ("e", "f"))] {
+                let panel = if one_by_one { panels.0 } else { panels.1 };
+                let algos = match direction {
+                    "fwd" => fwd_algos(c),
+                    "bwd" => bwd_algos(c),
+                    _ => vec!["gemm", "direct"],
+                };
+                for algo in algos {
+                    out.push(conv_artifact(direction, algo, c, DType::F32, None)
+                        .with_tag(&format!("fig6{panel}")));
+                }
+            }
+        }
+    }
+    // bf16 extras: a subset proving low-precision support.
+    for c in fig6_1x1().iter().take(2).chain(fig6_non1x1().iter().take(2)) {
+        for algo in ["gemm", "direct"] {
+            out.push(conv_artifact("fwd", algo, c, DType::Bf16, None)
+                .with_tag("bf16"));
+        }
+    }
+    // grouped / depthwise (direct solver only).
+    for c in &grouped_configs() {
+        out.push(conv_artifact("fwd", "direct", c, DType::F32, None)
+            .with_tag("grouped"));
+    }
+    // int8 inference: i8 inputs, exact f32 accumulation and output.
+    for c in &int8_configs() {
+        let xs = [c.n, c.c, c.h, c.w];
+        let ws = [c.k, c.c, c.r, c.s];
+        let (ho, wo) = c.out_hw();
+        out.push(
+            Artifact::synthetic(
+                &format!("conv_fwd-direct-{}-i8", c.sig_params()), "conv",
+                "direct", "fwd",
+                vec![sp(&xs, DType::I8), sp(&ws, DType::I8)],
+                vec![f32s(&[c.n, c.k, ho, wo])])
+            .with_dtype(DType::I8)
+            .with_params(&c.param_pairs())
+            .with_label(&c.label())
+            .with_tag("int8"),
+        );
+    }
+    // tuning variants of the direct solver.
+    for c in &tune_configs() {
+        for bk in DIRECT_BLOCK_K {
+            out.push(conv_artifact("fwd", "direct", c, DType::F32, Some(bk))
+                .with_tag("tune"));
+        }
+    }
+}
+
+fn emit_fusion_family(out: &mut Vec<Artifact>) {
+    // Figure 7a: CBA fused vs {conv, bias, act} separate.
+    for c in &fig7a() {
+        let xs = [c.n, c.c, c.h, c.w];
+        let ws = [c.k, c.c, c.r, c.s];
+        let (ho, wo) = c.out_hw();
+        let ys = [c.n, c.k, ho, wo];
+        out.push(
+            Artifact::synthetic(
+                &format!("cba-relu-{}-f32", c.sig_params()), "fusion", "cba",
+                "fwd",
+                vec![f32s(&xs), f32s(&ws), f32s(&[c.k])], vec![f32s(&ys)])
+            .with_params(&c.param_pairs())
+            .with_label(&c.label())
+            .with_tag("fig7a"),
+        );
+        out.push(conv_artifact("fwd", "direct", c, DType::F32, None)
+            .with_tag("fig7a-sep"));
+        out.push(
+            Artifact::synthetic(
+                &format!("bias-{}x{}x{ho}x{wo}-f32", c.n, c.k), "tensor_op",
+                "bias", "fwd", vec![f32s(&ys), f32s(&[c.k])], vec![f32s(&ys)])
+            .with_params(&c.param_pairs())
+            .with_tag("fig7a-sep"),
+        );
+        out.push(
+            Artifact::synthetic(
+                &format!("act-relu-{}x{}x{ho}x{wo}-f32", c.n, c.k),
+                "activation", "relu", "fwd", vec![f32s(&ys)], vec![f32s(&ys)])
+            .with_params(&c.param_pairs())
+            .with_tag("fig7a-sep"),
+        );
+    }
+
+    // Figure 7b: BN+A fused vs {bn_infer, act} separate (N fixed at 4).
+    let n = 4usize;
+    for (c, h, w) in FIG7B {
+        let shape = [n, c, h, w];
+        let pv: Vec<(&str, i64)> = vec![
+            ("n", n as i64), ("c", c as i64), ("h", h as i64), ("w", w as i64),
+        ];
+        let label = format!("{c}x{h}x{w}");
+        out.push(
+            Artifact::synthetic(
+                &format!("bna-relu-n{n}c{c}h{h}w{w}-f32"), "fusion", "bna",
+                "fwd",
+                vec![f32s(&shape), f32s(&[c]), f32s(&[c]), f32s(&[c]),
+                     f32s(&[c])],
+                vec![f32s(&shape)])
+            .with_params(&pv)
+            .with_label(&label)
+            .with_tag("fig7b"),
+        );
+        out.push(
+            Artifact::synthetic(
+                &format!("bn_infer-spatial-n{n}c{c}h{h}w{w}-f32"), "batchnorm",
+                "spatial_infer", "fwd",
+                vec![f32s(&shape), f32s(&[c]), f32s(&[c]), f32s(&[c]),
+                     f32s(&[c])],
+                vec![f32s(&shape)])
+            .with_params(&pv)
+            .with_tag("fig7b-sep"),
+        );
+        out.push(
+            Artifact::synthetic(
+                &format!("act-relu-{n}x{c}x{h}x{w}-f32"), "activation", "relu",
+                "fwd", vec![f32s(&shape)], vec![f32s(&shape)])
+            .with_params(&pv)
+            .with_tag("fig7b-sep"),
+        );
+    }
+
+    // CBNA exemplars (Tables I/II row 1), one per stride.
+    for c in [
+        ConvConfig { p: 1, q: 1, ..cc(2, 8, 14, 14, 8, 3, 3) },
+        ConvConfig { u: 2, v: 2, p: 1, q: 1, ..cc(2, 8, 14, 14, 8, 3, 3) },
+    ] {
+        let xs = [c.n, c.c, c.h, c.w];
+        let ws = [c.k, c.c, c.r, c.s];
+        let (ho, wo) = c.out_hw();
+        out.push(
+            Artifact::synthetic(
+                &format!("cbna-relu-{}-f32", c.sig_params()), "fusion", "cbna",
+                "fwd",
+                vec![f32s(&xs), f32s(&ws), f32s(&[c.k]), f32s(&[c.k]),
+                     f32s(&[c.k]), f32s(&[c.k]), f32s(&[c.k])],
+                vec![f32s(&[c.n, c.k, ho, wo])])
+            .with_params(&c.param_pairs())
+            .with_tag("fusion-exec"),
+        );
+    }
+}
+
+fn emit_primitives(out: &mut Vec<Artifact>) {
+    for (n, c, h, w) in BN_SHAPES {
+        let shape = [n, c, h, w];
+        let base = format!("n{n}c{c}h{h}w{w}");
+        let pv: Vec<(&str, i64)> = vec![
+            ("n", n as i64), ("c", c as i64), ("h", h as i64), ("w", w as i64),
+        ];
+        let chw = [c, h, w];
+        out.push(
+            Artifact::synthetic(
+                &format!("bn_train-spatial-{base}-f32"), "batchnorm",
+                "spatial_train", "fwd",
+                vec![f32s(&shape), f32s(&[c]), f32s(&[c])],
+                vec![f32s(&shape), f32s(&[c]), f32s(&[c])])
+            .with_params(&pv).with_tag("prim"));
+        out.push(
+            Artifact::synthetic(
+                &format!("bn_bwd-spatial-{base}-f32"), "batchnorm",
+                "spatial_bwd", "bwd",
+                vec![f32s(&shape), f32s(&shape), f32s(&[c]), f32s(&[c]),
+                     f32s(&[c])],
+                vec![f32s(&shape), f32s(&[c]), f32s(&[c])])
+            .with_params(&pv).with_tag("prim"));
+        out.push(
+            Artifact::synthetic(
+                &format!("bn_train-peract-{base}-f32"), "batchnorm",
+                "peract_train", "fwd",
+                vec![f32s(&shape), f32s(&chw), f32s(&chw)],
+                vec![f32s(&shape), f32s(&chw), f32s(&chw)])
+            .with_params(&pv).with_tag("prim"));
+        out.push(
+            Artifact::synthetic(
+                &format!("bn_bwd-peract-{base}-f32"), "batchnorm",
+                "peract_bwd", "bwd",
+                vec![f32s(&shape), f32s(&shape), f32s(&chw), f32s(&chw),
+                     f32s(&chw)],
+                vec![f32s(&shape), f32s(&chw), f32s(&chw)])
+            .with_params(&pv).with_tag("prim"));
+        out.push(
+            Artifact::synthetic(
+                &format!("bn_infer-peract-{base}-f32"), "batchnorm",
+                "peract_infer", "fwd",
+                vec![f32s(&shape), f32s(&chw), f32s(&chw), f32s(&chw),
+                     f32s(&chw)],
+                vec![f32s(&shape)])
+            .with_params(&pv).with_tag("prim"));
+    }
+
+    for ((n, c, h, w), win, stride, pad, mode) in POOL_SHAPES {
+        let shape = [n, c, h, w];
+        let ho = (h + 2 * pad.0 - win.0) / stride.0 + 1;
+        let wo = (w + 2 * pad.1 - win.1) / stride.1 + 1;
+        let oshape = [n, c, ho, wo];
+        let base = format!("{mode}-n{n}c{c}h{h}w{w}k{}x{}u{}p{}",
+                           win.0, win.1, stride.0, pad.0);
+        let pv: Vec<(&str, i64)> = vec![
+            ("n", n as i64), ("c", c as i64), ("h", h as i64), ("w", w as i64),
+        ];
+        out.push(
+            Artifact::synthetic(&format!("pool_fwd-{base}-f32"), "pooling",
+                                mode, "fwd", vec![f32s(&shape)],
+                                vec![f32s(&oshape)])
+            .with_params(&pv).with_str_param("mode", mode).with_tag("prim"));
+        out.push(
+            Artifact::synthetic(&format!("pool_bwd-{base}-f32"), "pooling",
+                                mode, "bwd",
+                                vec![f32s(&shape), f32s(&oshape),
+                                     f32s(&oshape)],
+                                vec![f32s(&shape)])
+            .with_params(&pv).with_str_param("mode", mode).with_tag("prim"));
+    }
+
+    for (n, c, h, w) in SOFTMAX_SHAPES {
+        let shape = [n, c, h, w];
+        let base = format!("n{n}c{c}h{h}w{w}");
+        let pv: Vec<(&str, i64)> = vec![
+            ("n", n as i64), ("c", c as i64), ("h", h as i64), ("w", w as i64),
+        ];
+        for nm in ["softmax", "log_softmax"] {
+            out.push(
+                Artifact::synthetic(&format!("{nm}_fwd-{base}-f32"), "softmax",
+                                    nm, "fwd", vec![f32s(&shape)],
+                                    vec![f32s(&shape)])
+                .with_params(&pv).with_tag("prim"));
+            out.push(
+                Artifact::synthetic(&format!("{nm}_bwd-{base}-f32"), "softmax",
+                                    nm, "bwd",
+                                    vec![f32s(&shape), f32s(&shape)],
+                                    vec![f32s(&shape)])
+                .with_params(&pv).with_tag("prim"));
+        }
+    }
+
+    for (n, c, h, w) in ACT_SHAPES {
+        let shape = [n, c, h, w];
+        let pv: Vec<(&str, i64)> = vec![
+            ("n", n as i64), ("c", c as i64), ("h", h as i64), ("w", w as i64),
+        ];
+        for mode in ACT_MODES {
+            out.push(
+                Artifact::synthetic(
+                    &format!("act_fwd-{mode}-n{n}c{c}h{h}w{w}-f32"),
+                    "activation", mode, "fwd", vec![f32s(&shape)],
+                    vec![f32s(&shape)])
+                .with_params(&pv).with_tag("prim"));
+            out.push(
+                Artifact::synthetic(
+                    &format!("act_bwd-{mode}-n{n}c{c}h{h}w{w}-f32"),
+                    "activation", mode, "bwd",
+                    vec![f32s(&shape), f32s(&shape)], vec![f32s(&shape)])
+                .with_params(&pv).with_tag("prim"));
+        }
+    }
+
+    for (n, c, h, w) in LRN_SHAPES {
+        let shape = [n, c, h, w];
+        out.push(
+            Artifact::synthetic(&format!("lrn_fwd-n{n}c{c}h{h}w{w}-f32"),
+                                "lrn", "cross_channel", "fwd",
+                                vec![f32s(&shape)], vec![f32s(&shape)])
+            .with_params(&[("n", n as i64), ("c", c as i64), ("h", h as i64),
+                           ("w", w as i64)])
+            .with_tag("prim"));
+    }
+
+    let (n, c, h, w) = (4usize, 16usize, 14usize, 14usize);
+    let shape = [n, c, h, w];
+    for op in ["add", "mul"] {
+        out.push(
+            Artifact::synthetic(
+                &format!("op_tensor-{op}-n{n}c{c}h{h}w{w}-f32"), "tensor_op",
+                op, "fwd", vec![f32s(&shape), f32s(&shape)],
+                vec![f32s(&shape)])
+            .with_params(&[("n", n as i64), ("c", c as i64), ("h", h as i64),
+                           ("w", w as i64)])
+            .with_tag("prim"));
+    }
+
+    // CTC loss.
+    let (b, t, v, l) = (4usize, 8usize, 6usize, 3usize);
+    out.push(
+        Artifact::synthetic(
+            &format!("ctc_loss-b{b}t{t}v{v}l{l}-f32"), "ctc", "forward",
+            "fwd",
+            vec![f32s(&[b, t, v]), sp(&[b, l], DType::I32),
+                 sp(&[b], DType::I32), sp(&[b], DType::I32)],
+            vec![f32s(&[b])])
+        .with_params(&[("b", b as i64), ("t", t as i64), ("v", v as i64),
+                       ("l", l as i64)])
+        .with_tag("prim"));
+}
+
+fn rnn_artifact(rc: &RnnConfig, variant: &str, tag: &str) -> Artifact {
+    let (t, b, x, h) = (rc.t, rc.b, rc.x, rc.hid);
+    let inputs = match rc.cell {
+        "lstm" => vec![f32s(&[t, b, x]), f32s(&[b, h]), f32s(&[b, h]),
+                       f32s(&[4 * h, x]), f32s(&[4 * h, h])],
+        "gru" => vec![f32s(&[t, b, x]), f32s(&[b, h]), f32s(&[3 * h, x]),
+                      f32s(&[3 * h, h])],
+        _ => vec![f32s(&[t, b, x]), f32s(&[b, h]), f32s(&[h, x]),
+                  f32s(&[h, h])],
+    };
+    let hidden = if variant == "bidir" { 2 * h } else { h };
+    Artifact::synthetic(
+        &format!("rnn-{}-{variant}-{}-f32", rc.cell, rc.sig_params()), "rnn",
+        &format!("{}_{variant}", rc.cell), "fwd", inputs,
+        vec![f32s(&[t, b, hidden])])
+    .with_params(&[("t", t as i64), ("b", b as i64), ("x", x as i64),
+                   ("hid", h as i64)])
+    .with_str_param("cell", rc.cell)
+    .with_str_param("act", rc.act)
+    .with_tag(tag)
+}
+
+fn emit_rnn_family(out: &mut Vec<Artifact>) {
+    for rc in &rnn_configs() {
+        out.push(rnn_artifact(rc, "fused", "rnn"));
+    }
+    // ablation sweep: fused vs naive LSTM over T.
+    for t in RNN_ABLATION_T {
+        let rc = RnnConfig { cell: "lstm", t, b: 8, x: 32, hid: 32,
+                             act: "tanh" };
+        out.push(rnn_artifact(&rc, "fused", "abl-rnn"));
+        out.push(rnn_artifact(&rc, "naive", "abl-rnn"));
+    }
+    // bidirectional exemplar.
+    out.push(rnn_artifact(&rnn_configs()[0], "bidir", "rnn"));
+}
+
+fn emit_cnn(out: &mut Vec<Artifact>) {
+    use cnn::*;
+    let param_specs = || -> Vec<TensorSpec> {
+        vec![
+            f32s(&[C1, CHANNELS, 3, 3]), // w1
+            f32s(&[C1]),                 // g1
+            f32s(&[C1]),                 // b1
+            f32s(&[C2, C1, 3, 3]),       // w2
+            f32s(&[C2]),                 // g2
+            f32s(&[C2]),                 // b2
+            f32s(&[FEAT, CLASSES]),      // wd
+        ]
+    };
+    let xspec = f32s(&[BATCH, CHANNELS, IMAGE, IMAGE]);
+    let lspec = sp(&[BATCH], DType::I32);
+    let pv: Vec<(&str, i64)> = vec![
+        ("image", IMAGE as i64), ("channels", CHANNELS as i64),
+        ("classes", CLASSES as i64), ("c1", C1 as i64), ("c2", C2 as i64),
+        ("hidden_hw", HIDDEN_HW as i64), ("batch", BATCH as i64),
+    ];
+
+    let mut train_in = param_specs();
+    train_in.push(xspec.clone());
+    train_in.push(lspec.clone());
+    let mut train_out = param_specs();
+    train_out.push(f32s(&[])); // scalar loss
+    out.push(Artifact::synthetic("cnn_train-f32", "model", "cnn_train",
+                                 "fwd", train_in, train_out)
+        .with_params(&pv).with_tag("e2e"));
+
+    let mut infer_in = param_specs();
+    infer_in.push(xspec.clone());
+    out.push(Artifact::synthetic(
+        "cnn_infer-f32", "model", "cnn_infer", "fwd", infer_in,
+        vec![f32s(&[BATCH, CLASSES]), sp(&[BATCH], DType::I32)])
+        .with_params(&pv).with_tag("e2e"));
+
+    out.push(Artifact::synthetic(
+        "cnn_datagen-f32", "model", "cnn_datagen", "fwd",
+        vec![sp(&[2], DType::U32)], vec![xspec, lspec])
+        .with_params(&pv).with_tag("e2e"));
+
+    out.push(Artifact::synthetic("cnn_init-f32", "model", "cnn_init", "fwd",
+                                 Vec::new(), param_specs())
+        .with_params(&pv).with_tag("e2e"));
+}
+
+/// The full builtin artifact set (same signatures as `make artifacts`).
+pub fn builtin_artifacts() -> Vec<Artifact> {
+    let mut out = Vec::with_capacity(320);
+    emit_conv_family(&mut out);
+    emit_fusion_family(&mut out);
+    emit_primitives(&mut out);
+    emit_rnn_family(&mut out);
+    emit_cnn(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::types::ProblemSig;
+
+    #[test]
+    fn builtin_manifest_parses_and_indexes() {
+        let m = Manifest::builtin();
+        assert!(m.synthetic);
+        assert!(m.len() > 200, "builtin set has {} artifacts", m.len());
+        // every conv signature round-trips through the parser and matches
+        // its recorded algo/dtype (same check loads_real_manifest_if_present
+        // runs against the AOT'd set)
+        for a in m.by_primitive("conv") {
+            let (p, algo, _) = ProblemSig::parse_artifact(&a.sig).unwrap();
+            assert_eq!(algo, a.algo, "{}", a.sig);
+            assert_eq!(p.dtype, a.dtype, "{}", a.sig);
+        }
+    }
+
+    #[test]
+    fn builtin_covers_test_surface() {
+        let m = Manifest::builtin();
+        for sig in [
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
+            "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
+            "conv_bwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
+            "conv_wrw-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-bk32",
+            "conv_fwd-direct-n4c16h14w14k32r3s3u1v1p1q1l1j1g1-i8",
+            "cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32",
+            "conv_fwd-direct-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32",
+            "bias-4x32x28x28-f32",
+            "act-relu-4x32x28x28-f32",
+            "bna-relu-n4c16h28w28-f32",
+            "bn_infer-spatial-n4c16h28w28-f32",
+            "act-relu-4x16x28x28-f32",
+            "cbna-relu-n2c8h14w14k8r3s3u1v1p1q1l1j1g1-f32",
+            "cbna-relu-n2c8h14w14k8r3s3u2v2p1q1l1j1g1-f32",
+            "rnn-lstm-fused-t16b8x32h32-f32",
+            "rnn-lstm-naive-t16b8x32h32-f32",
+            "rnn-lstm-bidir-t16b8x32h32-f32",
+            "rnn-gru-fused-t16b8x32h32-f32",
+            "rnn-vanilla-fused-t16b8x32h32-f32",
+            "ctc_loss-b4t8v6l3-f32",
+            "cnn_train-f32",
+            "cnn_infer-f32",
+            "cnn_datagen-f32",
+            "cnn_init-f32",
+            "pool_fwd-max-n4c16h28w28k2x2u2p0-f32",
+            "bn_train-spatial-n4c16h14w14-f32",
+            "softmax_fwd-n4c10h1w1-f32",
+            "act_fwd-relu-n4c16h28w28-f32",
+        ] {
+            assert!(m.get(sig).is_some(), "builtin manifest missing {sig}");
+        }
+        // the "accepted but never AOT'd" fusion plan must stay missing
+        assert!(m.get("cba-relu-n4c16h28w28k13r1s1u1v1p0q0l1j1g1-f32")
+            .is_none());
+    }
+
+    #[test]
+    fn builtin_fig6_panels_complete() {
+        let m = Manifest::builtin();
+        for panel in ["fig6a", "fig6b", "fig6c", "fig6d", "fig6e", "fig6f"] {
+            let count = m.by_tag(panel).count();
+            assert!(count >= 8, "{panel}: {count} artifacts");
+        }
+        // 1x1 panels carry no winograd artifacts
+        assert!(m.by_tag("fig6a").all(|a| a.algo != "winograd"));
+    }
+
+    #[test]
+    fn builtin_matches_solver_applicability() {
+        // every fwd f32 conv artifact's algo must be applicable per the
+        // solver registry (aot.fwd_algos <-> solvers::applicable contract)
+        let m = Manifest::builtin();
+        for a in m.by_primitive("conv") {
+            if a.direction != "fwd" || a.dtype != DType::F32 {
+                continue;
+            }
+            let (sig, algo, _) = ProblemSig::parse_artifact(&a.sig).unwrap();
+            let names: Vec<String> = crate::solvers::applicable(&sig)
+                .iter()
+                .map(|s| s.name().to_string())
+                .collect();
+            assert!(names.contains(&algo),
+                    "{}: algo {algo} not applicable ({names:?})", a.sig);
+        }
+    }
+}

@@ -153,6 +153,21 @@ pub enum ActivationMode {
 }
 
 impl ActivationMode {
+    /// Inverse of [`ActivationMode::name`] (artifact signature names).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "relu" => ActivationMode::Relu,
+            "leaky_relu" => ActivationMode::LeakyRelu,
+            "tanh" => ActivationMode::Tanh,
+            "sigmoid" => ActivationMode::Sigmoid,
+            "elu" => ActivationMode::Elu,
+            "clipped_relu" => ActivationMode::ClippedRelu,
+            "abs" => ActivationMode::Abs,
+            "identity" => ActivationMode::Identity,
+            _ => return None,
+        })
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             ActivationMode::Relu => "relu",

@@ -14,16 +14,50 @@ use crate::cache::{compile_cached, CacheStats, DiskCache, ExecCache};
 use crate::db::{DbStore, FindDb, PerfDb};
 use crate::manifest::Manifest;
 use crate::perfmodel::GcnModel;
-use crate::runtime::{Backend, CpuBackend, Executable, HostTensor, MockBackend,
-                     MockConfig};
+#[cfg(feature = "pjrt")]
+use crate::runtime::CpuBackend;
+use crate::runtime::{Backend, Executable, HostTensor, InterpBackend,
+                     MockBackend, MockConfig};
 use crate::types::{MiopenError, Result};
 use crate::util::rng::SplitMix64;
 
 /// Backend selection for handle creation — the analog of creating the
 /// `miopenHandle` with a HIP stream vs an OpenCL context (§III-D).
 pub enum BackendChoice {
+    /// PJRT CPU over the AOT'd HLO artifacts (requires `make artifacts`
+    /// and a real `xla` dependency behind the `pjrt` feature).
+    #[cfg(feature = "pjrt")]
     Cpu,
+    /// Pure-Rust reference executor — hermetic, the default.
+    Interp,
     Mock(MockConfig),
+}
+
+impl BackendChoice {
+    /// Best available backend: PJRT CPU when compiled with `pjrt` AND the
+    /// artifact set exists (i.e. `make artifacts` has run); the interp
+    /// backend otherwise. This is how building the artifacts "upgrades"
+    /// the library from reference numerics to compiled kernels without
+    /// any call-site change.
+    pub fn auto() -> Self {
+        #[cfg(feature = "pjrt")]
+        {
+            // Probe client creation too: pjrt builds against the checked-in
+            // xla stub (or a broken install) must fall back to interp
+            // instead of failing every Handle::new.
+            if crate::testutil::artifacts_available()
+                && CpuBackend::new().is_ok() {
+                return BackendChoice::Cpu;
+            }
+        }
+        BackendChoice::Interp
+    }
+}
+
+impl Default for BackendChoice {
+    fn default() -> Self {
+        Self::auto()
+    }
 }
 
 pub struct HandleOptions {
@@ -44,7 +78,7 @@ pub struct HandleOptions {
 impl Default for HandleOptions {
     fn default() -> Self {
         Self {
-            backend: BackendChoice::Cpu,
+            backend: BackendChoice::auto(),
             artifacts_dir: None,
             db_dir: None,
             exec_cache_capacity: 256,
@@ -73,14 +107,25 @@ pub struct Handle {
 
 impl Handle {
     pub fn new(opts: HandleOptions) -> Result<Self> {
+        let is_interp = matches!(&opts.backend, BackendChoice::Interp);
         let backend: Box<dyn Backend> = match opts.backend {
+            #[cfg(feature = "pjrt")]
             BackendChoice::Cpu => Box::new(CpuBackend::new()?),
+            BackendChoice::Interp => Box::new(InterpBackend::new()),
             BackendChoice::Mock(cfg) => Box::new(MockBackend::new(cfg)),
         };
         let dir = opts
             .artifacts_dir
             .unwrap_or_else(crate::testutil::artifacts_dir);
-        let manifest = Manifest::load(&dir)?;
+        // The interp backend needs no artifact files: when the AOT set is
+        // absent it serves the builtin synthetic manifest (the same
+        // signatures aot.py emits). A present manifest.json still wins so
+        // interp handles can exercise real AOT'd shape metadata.
+        let manifest = if is_interp && !dir.join("manifest.json").exists() {
+            Manifest::builtin()
+        } else {
+            Manifest::load(&dir)?
+        };
 
         // System dbs ship next to the artifacts (produced by tuning runs /
         // CI); user dbs live in the config dir and shadow them.
@@ -160,7 +205,7 @@ impl Handle {
     pub fn compile_sig_cold(&self, sig: &str) -> Result<Rc<dyn Executable>> {
         let path = self.disk_cache.lookup(&self.manifest, sig)?;
         let art = self.manifest.require(sig)?;
-        self.backend.compile(&path, &art.outputs)
+        self.backend.compile(&path, art)
     }
 
     /// Execute an artifact by signature with the given inputs.

@@ -3,7 +3,7 @@
 //! Reproduction of **"MIOpen: An Open Source Library For Deep Learning
 //! Primitives"** (AMD, 2019) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see README.md):
 //! - **L1/L2** (build time, Python): Pallas kernels + JAX graphs, AOT-lowered
 //!   to HLO text artifacts by `make artifacts`.
 //! - **L3** (this crate): the MIOpen library proper — descriptors, the
@@ -11,6 +11,13 @@
 //!   two-level kernel caching, the fusion API with its constraint metadata
 //!   graph, and a batched inference driver. Python never runs at request
 //!   time; the binary is self-contained once `artifacts/` exists.
+//!
+//! Backend matrix: the default build is hermetic — every pipeline runs on
+//! [`runtime::InterpBackend`], a pure-Rust reference executor serving the
+//! builtin synthetic manifest ([`configs::builtin_artifacts`]). Building
+//! with `--features pjrt` plus `make artifacts` upgrades the same code
+//! paths to compiled PJRT kernels (`BackendChoice::auto` picks the best
+//! available); the mock backend covers failure injection in tests.
 //!
 //! Quick start (see `examples/quickstart.rs`):
 //! ```no_run
@@ -29,6 +36,7 @@
 pub mod bench;
 pub mod cache;
 pub mod cli;
+pub mod configs;
 pub mod db;
 pub mod descriptors;
 pub mod find;

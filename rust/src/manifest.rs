@@ -37,6 +37,8 @@ pub struct Artifact {
     /// Free-form problem parameters (n/c/h/w/k/... for conv, t/b/x/hid for
     /// rnn, ...). Values are integers where applicable.
     pub params: HashMap<String, i64>,
+    /// String-valued problem parameters (rnn `act`, pool `mode`, ...).
+    pub str_params: HashMap<String, String>,
     pub label: Option<String>,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
@@ -51,6 +53,76 @@ impl Artifact {
     pub fn param(&self, key: &str) -> Option<i64> {
         self.params.get(key).copied()
     }
+    pub fn str_param(&self, key: &str) -> Option<&str> {
+        self.str_params.get(key).map(String::as_str)
+    }
+
+    /// Constructor for synthetic manifests (the builtin interp set and
+    /// mock tests). `dtype` is taken from the first output (or input).
+    pub fn synthetic(sig: &str, primitive: &str, algo: &str,
+                     direction: &str, inputs: Vec<TensorSpec>,
+                     outputs: Vec<TensorSpec>) -> Self {
+        let dtype = outputs
+            .first()
+            .or_else(|| inputs.first())
+            .map(|s| s.dtype)
+            .unwrap_or(DType::F32);
+        Self {
+            sig: sig.to_string(),
+            file: format!("{sig}.hlo.txt"),
+            primitive: primitive.to_string(),
+            algo: algo.to_string(),
+            direction: direction.to_string(),
+            dtype,
+            tags: Vec::new(),
+            params: HashMap::new(),
+            str_params: HashMap::new(),
+            label: None,
+            inputs,
+            outputs,
+            workspace_bytes: 0,
+            tuning: HashMap::new(),
+        }
+    }
+
+    pub fn with_tag(mut self, tag: &str) -> Self {
+        self.tags.push(tag.to_string());
+        self
+    }
+
+    pub fn with_params(mut self, params: &[(&str, i64)]) -> Self {
+        for (k, v) in params {
+            self.params.insert(k.to_string(), *v);
+        }
+        self
+    }
+
+    pub fn with_str_param(mut self, key: &str, value: &str) -> Self {
+        self.str_params.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    pub fn with_workspace(mut self, bytes: u64) -> Self {
+        self.workspace_bytes = bytes;
+        self
+    }
+
+    pub fn with_tuning(mut self, params: &[(&str, i64)]) -> Self {
+        for (k, v) in params {
+            self.tuning.insert(k.to_string(), *v);
+        }
+        self
+    }
+
+    pub fn with_dtype(mut self, dtype: DType) -> Self {
+        self.dtype = dtype;
+        self
+    }
 }
 
 /// Parsed manifest with index by signature.
@@ -58,10 +130,42 @@ impl Artifact {
 pub struct Manifest {
     pub dir: PathBuf,
     pub artifacts: Vec<Artifact>,
+    /// True for manifests generated in-process (the builtin interp set):
+    /// artifact files do not exist on disk and the disk cache skips its
+    /// existence check.
+    pub synthetic: bool,
     index: HashMap<String, usize>,
 }
 
 impl Manifest {
+    /// The builtin synthetic manifest: the same artifact set
+    /// `python/compile/aot.py` emits, constructed in-process so the interp
+    /// backend runs on a machine with nothing but a Rust toolchain.
+    pub fn builtin() -> Self {
+        Self::from_artifacts(crate::configs::builtin_artifacts(),
+                            PathBuf::from("<builtin>"), true)
+    }
+
+    /// Assemble a manifest from artifacts, deduping by signature (tags
+    /// merge, mirroring aot.py's Emitter.emit).
+    pub fn from_artifacts(artifacts: Vec<Artifact>, dir: PathBuf,
+                          synthetic: bool) -> Self {
+        let mut out: Vec<Artifact> = Vec::with_capacity(artifacts.len());
+        let mut index: HashMap<String, usize> = HashMap::new();
+        for art in artifacts {
+            if let Some(&i) = index.get(&art.sig) {
+                for tag in art.tags {
+                    if !out[i].tags.contains(&tag) {
+                        out[i].tags.push(tag);
+                    }
+                }
+            } else {
+                index.insert(art.sig.clone(), out.len());
+                out.push(art);
+            }
+        }
+        Self { dir, artifacts: out, synthetic, index }
+    }
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
@@ -89,7 +193,7 @@ impl Manifest {
             .enumerate()
             .map(|(i, a)| (a.sig.clone(), i))
             .collect();
-        Ok(Self { dir, artifacts, index })
+        Ok(Self { dir, artifacts, synthetic: false, index })
     }
 
     pub fn get(&self, sig: &str) -> Option<&Artifact> {
@@ -149,6 +253,7 @@ fn parse_artifact(a: &Json) -> Result<Artifact> {
         .unwrap_or_default();
 
     let mut params = HashMap::new();
+    let mut str_params = HashMap::new();
     let mut label = None;
     if let Some(obj) = a.get("params").and_then(Json::as_obj) {
         for (k, v) in obj {
@@ -157,6 +262,9 @@ fn parse_artifact(a: &Json) -> Result<Artifact> {
                     params.insert(k.clone(), *n as i64);
                 }
                 Json::Str(s) if k == "label" => label = Some(s.clone()),
+                Json::Str(s) => {
+                    str_params.insert(k.clone(), s.clone());
+                }
                 Json::Bool(b) => {
                     params.insert(k.clone(), *b as i64);
                 }
@@ -207,6 +315,7 @@ fn parse_artifact(a: &Json) -> Result<Artifact> {
         dtype,
         tags,
         params,
+        str_params,
         label,
         inputs: specs("inputs")?,
         outputs: specs("outputs")?,

@@ -1,0 +1,247 @@
+//! The E2E tiny CNN (mirror of `python/compile/model.py`): seeded init,
+//! synthetic data generation, a full SGD train step (forward AND backward
+//! through the reference kernels), and inference.
+//!
+//! Architecture: conv3x3 -> BN(train) -> ReLU -> maxpool2 x2 -> dense ->
+//! log-softmax NLL. Inference uses batch statistics (the `_bn_infer_free`
+//! path in model.py), so train and infer share one forward.
+
+#![allow(clippy::needless_range_loop)]
+
+use super::kernels as k;
+use crate::configs::cnn::{BATCH, C1, C2, CHANNELS, CLASSES, FEAT, IMAGE, LR};
+use crate::descriptors::ActivationMode;
+use crate::util::rng::SplitMix64;
+
+/// The 7 parameter tensors in manifest order (model.PARAM_ORDER).
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub w1: Vec<f32>, // (C1, CH, 3, 3)
+    pub g1: Vec<f32>, // (C1,)
+    pub b1: Vec<f32>, // (C1,)
+    pub w2: Vec<f32>, // (C2, C1, 3, 3)
+    pub g2: Vec<f32>, // (C2,)
+    pub b2: Vec<f32>, // (C2,)
+    pub wd: Vec<f32>, // (FEAT, CLASSES)
+}
+
+impl Params {
+    pub fn from_slices(t: &[Vec<f32>]) -> Self {
+        Self {
+            w1: t[0].clone(), g1: t[1].clone(), b1: t[2].clone(),
+            w2: t[3].clone(), g2: t[4].clone(), b2: t[5].clone(),
+            wd: t[6].clone(),
+        }
+    }
+
+    pub fn into_vecs(self) -> Vec<Vec<f32>> {
+        vec![self.w1, self.g1, self.b1, self.w2, self.g2, self.b2, self.wd]
+    }
+}
+
+/// He-initialized parameters from a fixed seed (the `cnn_init` artifact).
+pub fn init() -> Params {
+    let mut rng = SplitMix64::new(0xC0DE_CA51);
+    let he = |rng: &mut SplitMix64, len: usize, fan_in: usize| -> Vec<f32> {
+        let scale = (2.0 / fan_in as f32).sqrt();
+        (0..len).map(|_| rng.normal_f32() * scale).collect()
+    };
+    Params {
+        w1: he(&mut rng, C1 * CHANNELS * 9, CHANNELS * 9),
+        g1: vec![1.0; C1],
+        b1: vec![0.0; C1],
+        w2: he(&mut rng, C2 * C1 * 9, C1 * 9),
+        g2: vec![1.0; C2],
+        b2: vec![0.0; C2],
+        wd: he(&mut rng, FEAT * CLASSES, FEAT),
+    }
+}
+
+/// Deterministic 3-class toy batch (the `cnn_datagen` artifact):
+/// class-dependent oriented gratings plus noise, regenerated from a
+/// 2-word seed so the training loop stays 100% host-side.
+pub fn datagen(seed: [u32; 2]) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = SplitMix64::new(((seed[1] as u64) << 32) | seed[0] as u64);
+    let s = IMAGE;
+    let mut x = vec![0f32; BATCH * CHANNELS * s * s];
+    let mut labels = vec![0i32; BATCH];
+    for bi in 0..BATCH {
+        let lab = rng.below(CLASSES as u64) as i32;
+        labels[bi] = lab;
+        let phase = rng.range_f64(0.0, std::f64::consts::PI) as f32;
+        for ci in 0..CHANNELS {
+            for yy in 0..s {
+                for xx in 0..s {
+                    let fx = xx as f32 / s as f32;
+                    let fy = yy as f32 / s as f32;
+                    let arg = match lab {
+                        0 => fx,
+                        1 => fy,
+                        _ => fx + fy,
+                    };
+                    let base =
+                        (2.0 * std::f32::consts::PI * 2.0 * arg + phase).sin();
+                    let noise = 0.3 * rng.normal_f32();
+                    x[((bi * CHANNELS + ci) * s + yy) * s + xx] = base + noise;
+                }
+            }
+        }
+    }
+    (x, labels)
+}
+
+struct Forward {
+    y1: Vec<f32>,
+    z1: Vec<f32>,
+    mu1: Vec<f32>,
+    var1: Vec<f32>,
+    a1: Vec<f32>,
+    p1: Vec<f32>,
+    y2: Vec<f32>,
+    z2: Vec<f32>,
+    mu2: Vec<f32>,
+    var2: Vec<f32>,
+    a2: Vec<f32>,
+    p2: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn conv1_geom() -> k::ConvGeom {
+    k::ConvGeom::dense(BATCH, CHANNELS, IMAGE, IMAGE, C1, 3, 3, 1, 1)
+}
+
+fn conv2_geom() -> k::ConvGeom {
+    k::ConvGeom::dense(BATCH, C1, IMAGE / 2, IMAGE / 2, C2, 3, 3, 1, 1)
+}
+
+fn pool_geom(c: usize, hw: usize) -> k::PoolGeom {
+    k::PoolGeom { n: BATCH, c, h: hw, w: hw, win: (2, 2), stride: (2, 2),
+                  pad: (0, 0), max: true }
+}
+
+fn forward(p: &Params, x: &[f32]) -> Forward {
+    let relu = ActivationMode::Relu;
+    let y1 = k::conv2d_fwd(x, &p.w1, &conv1_geom());
+    let (z1, mu1, var1) =
+        k::bn_spatial_train(&y1, &p.g1, &p.b1, BATCH, C1, IMAGE, IMAGE);
+    let a1 = k::act_fwd(&z1, relu, 0.0);
+    let p1 = k::pool2d_fwd(&a1, &pool_geom(C1, IMAGE));
+    let h2 = IMAGE / 2;
+    let y2 = k::conv2d_fwd(&p1, &p.w2, &conv2_geom());
+    let (z2, mu2, var2) =
+        k::bn_spatial_train(&y2, &p.g2, &p.b2, BATCH, C2, h2, h2);
+    let a2 = k::act_fwd(&z2, relu, 0.0);
+    let p2 = k::pool2d_fwd(&a2, &pool_geom(C2, h2));
+    // p2 is (B, C2, 4, 4) row-major == the (B, FEAT) flatten
+    let logits = k::matmul(&p2, &p.wd, BATCH, FEAT, CLASSES);
+    Forward { y1, z1, mu1, var1, a1, p1, y2, z2, mu2, var2, a2, p2, logits }
+}
+
+/// One SGD step (the `cnn_train` artifact): returns (new params, loss).
+pub fn train_step(p: &Params, x: &[f32], labels: &[i32]) -> (Params, f32) {
+    let f = forward(p, x);
+    let lp = k::softmax_fwd(&f.logits, BATCH, CLASSES, 1, true);
+
+    let mut loss = 0f64;
+    for bi in 0..BATCH {
+        loss -= lp[bi * CLASSES + labels[bi] as usize] as f64;
+    }
+    let loss = (loss / BATCH as f64) as f32;
+
+    // d(logits): (softmax - onehot) / B
+    let mut dlogits = vec![0f32; BATCH * CLASSES];
+    for bi in 0..BATCH {
+        for ci in 0..CLASSES {
+            let sm = lp[bi * CLASSES + ci].exp();
+            let one = if labels[bi] as usize == ci { 1.0 } else { 0.0 };
+            dlogits[bi * CLASSES + ci] = (sm - one) / BATCH as f32;
+        }
+    }
+
+    let relu = ActivationMode::Relu;
+    let h2 = IMAGE / 2;
+    let dwd = k::matmul_tn(&f.p2, &dlogits, BATCH, FEAT, CLASSES);
+    let dp2 = k::matmul_nt(&dlogits, &p.wd, BATCH, CLASSES, FEAT);
+    let da2 = k::pool2d_bwd(&f.a2, &dp2, &pool_geom(C2, h2));
+    let dz2 = k::act_bwd(&f.z2, &da2, relu, 0.0);
+    let (dy2, dg2, db2) = k::bn_spatial_bwd(&f.y2, &dz2, &p.g2, &f.mu2,
+                                            &f.var2, BATCH, C2, h2, h2);
+    let dw2 = k::conv2d_bwd_weights(&dy2, &f.p1, &conv2_geom());
+    let dp1 = k::conv2d_bwd_data(&dy2, &p.w2, &conv2_geom());
+    let da1 = k::pool2d_bwd(&f.a1, &dp1, &pool_geom(C1, IMAGE));
+    let dz1 = k::act_bwd(&f.z1, &da1, relu, 0.0);
+    let (dy1, dg1, db1) = k::bn_spatial_bwd(&f.y1, &dz1, &p.g1, &f.mu1,
+                                            &f.var1, BATCH, C1, IMAGE, IMAGE);
+    let dw1 = k::conv2d_bwd_weights(&dy1, x, &conv1_geom());
+
+    let sgd = |param: &[f32], grad: &[f32]| -> Vec<f32> {
+        param.iter().zip(grad).map(|(p, g)| p - LR * g).collect()
+    };
+    let new = Params {
+        w1: sgd(&p.w1, &dw1),
+        g1: sgd(&p.g1, &dg1),
+        b1: sgd(&p.b1, &db1),
+        w2: sgd(&p.w2, &dw2),
+        g2: sgd(&p.g2, &dg2),
+        b2: sgd(&p.b2, &db2),
+        wd: sgd(&p.wd, &dwd),
+    };
+    (new, loss)
+}
+
+/// Inference (the `cnn_infer` artifact): logits + argmax class.
+pub fn infer(p: &Params, x: &[f32]) -> (Vec<f32>, Vec<i32>) {
+    let f = forward(p, x);
+    let mut preds = vec![0i32; BATCH];
+    for bi in 0..BATCH {
+        let mut best = f32::NEG_INFINITY;
+        for ci in 0..CLASSES {
+            let v = f.logits[bi * CLASSES + ci];
+            if v > best {
+                best = v;
+                preds[bi] = ci as i32;
+            }
+        }
+    }
+    (f.logits, preds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datagen_is_deterministic_and_labeled() {
+        let (x1, l1) = datagen([7, 0xDA7A]);
+        let (x2, l2) = datagen([7, 0xDA7A]);
+        assert_eq!(x1, x2);
+        assert_eq!(l1, l2);
+        let (x3, _) = datagen([8, 0xDA7A]);
+        assert_ne!(x1, x3);
+        assert!(l1.iter().all(|&l| (0..CLASSES as i32).contains(&l)));
+    }
+
+    #[test]
+    fn one_train_step_reduces_loss_on_same_batch() {
+        let p0 = init();
+        let (x, labels) = datagen([1, 2]);
+        let (p1, loss0) = train_step(&p0, &x, &labels);
+        let (_, loss1) = train_step(&p1, &x, &labels);
+        assert!(loss0.is_finite() && loss1.is_finite());
+        assert!(loss1 < loss0, "one SGD step must descend: {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn infer_shapes_and_argmax() {
+        let p = init();
+        let (x, _) = datagen([3, 4]);
+        let (logits, preds) = infer(&p, &x);
+        assert_eq!(logits.len(), BATCH * CLASSES);
+        assert_eq!(preds.len(), BATCH);
+        for bi in 0..BATCH {
+            let row = &logits[bi * CLASSES..(bi + 1) * CLASSES];
+            let best = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(row[preds[bi] as usize], best);
+        }
+    }
+}

@@ -1,0 +1,1162 @@
+//! Pure-Rust reference numerics for every primitive — the port of
+//! `python/compile/kernels/ref.py` the interp backend executes.
+//!
+//! Everything is written for clarity and auditability, not speed:
+//! straightforward loops over packed row-major NCHW/KCRS buffers, f32
+//! arithmetic with f64 accumulation where statistics demand it. Golden
+//! parity fixtures (tests/golden_parity.rs) pin these functions to the
+//! JAX reference within 1e-4.
+
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+
+use crate::descriptors::ActivationMode;
+use crate::types::ProblemSig;
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Convolution geometry (the `ProblemSig` parameter block).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub r: usize,
+    pub s: usize,
+    pub u: usize,
+    pub v: usize,
+    pub p: usize,
+    pub q: usize,
+    pub l: usize,
+    pub j: usize,
+    pub g: usize,
+}
+
+impl ConvGeom {
+    pub fn from_sig(sig: &ProblemSig) -> Self {
+        Self {
+            n: sig.n, c: sig.c, h: sig.h, w: sig.w, k: sig.k, r: sig.r,
+            s: sig.s, u: sig.u, v: sig.v, p: sig.p, q: sig.q, l: sig.l,
+            j: sig.j, g: sig.g,
+        }
+    }
+
+    pub fn dense(n: usize, c: usize, h: usize, w: usize, k: usize, r: usize,
+                 s: usize, stride: usize, pad: usize) -> Self {
+        Self { n, c, h, w, k, r, s, u: stride, v: stride, p: pad, q: pad,
+               l: 1, j: 1, g: 1 }
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        let er = (self.r - 1) * self.l + 1;
+        let es = (self.s - 1) * self.j + 1;
+        ((self.h + 2 * self.p - er) / self.u + 1,
+         (self.w + 2 * self.q - es) / self.v + 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Convolution (§IV-A): direct loops + the im2col+GEMM path
+// ---------------------------------------------------------------------------
+
+/// Direct forward convolution (cross-correlation, grouped, dilated).
+/// x: (N,C,H,W), w: (K,C/g,R,S) -> (N,K,Ho,Wo).
+pub fn conv2d_fwd(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    let (ho, wo) = g.out_hw();
+    let cg = g.c / g.g;
+    let kg = g.k / g.g;
+    let mut y = vec![0f32; g.n * g.k * ho * wo];
+    for n in 0..g.n {
+        for k in 0..g.k {
+            let grp = k / kg;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let mut acc = 0f32;
+                    for ci in 0..cg {
+                        let c = grp * cg + ci;
+                        for fr in 0..g.r {
+                            let ih = (oh * g.u + fr * g.l) as isize
+                                - g.p as isize;
+                            if ih < 0 || ih >= g.h as isize {
+                                continue;
+                            }
+                            let xrow = ((n * g.c + c) * g.h + ih as usize)
+                                * g.w;
+                            let wrow = ((k * cg + ci) * g.r + fr) * g.s;
+                            for fs in 0..g.s {
+                                let iw = (ow * g.v + fs * g.j) as isize
+                                    - g.q as isize;
+                                if iw < 0 || iw >= g.w as isize {
+                                    continue;
+                                }
+                                acc += x[xrow + iw as usize] * w[wrow + fs];
+                            }
+                        }
+                    }
+                    y[((n * g.k + k) * ho + oh) * wo + ow] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// im2col + GEMM forward convolution (the paper's universal fallback;
+/// dense only, matching the gemm solver's applicability).
+pub fn conv2d_fwd_im2col(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    assert_eq!(g.g, 1, "im2col path is dense-only");
+    let (ho, wo) = g.out_hw();
+    let howo = ho * wo;
+    let crs = g.c * g.r * g.s;
+    let mut y = vec![0f32; g.n * g.k * howo];
+    let mut col = vec![0f32; crs * howo];
+    for n in 0..g.n {
+        // unfold into the (C*R*S, Ho*Wo) column matrix
+        col.iter_mut().for_each(|v| *v = 0.0);
+        for c in 0..g.c {
+            for fr in 0..g.r {
+                for fs in 0..g.s {
+                    let row = ((c * g.r + fr) * g.s + fs) * howo;
+                    for oh in 0..ho {
+                        let ih = (oh * g.u + fr * g.l) as isize - g.p as isize;
+                        if ih < 0 || ih >= g.h as isize {
+                            continue;
+                        }
+                        let xrow = ((n * g.c + c) * g.h + ih as usize) * g.w;
+                        for ow in 0..wo {
+                            let iw = (ow * g.v + fs * g.j) as isize
+                                - g.q as isize;
+                            if iw < 0 || iw >= g.w as isize {
+                                continue;
+                            }
+                            col[row + oh * wo + ow] = x[xrow + iw as usize];
+                        }
+                    }
+                }
+            }
+        }
+        // y[n] = W (K, CRS) @ col (CRS, HoWo)
+        let out = matmul(w, &col, g.k, crs, howo);
+        y[n * g.k * howo..(n + 1) * g.k * howo].copy_from_slice(&out);
+    }
+    y
+}
+
+/// Gradient w.r.t. the input: dy (N,K,Ho,Wo) + w -> dx (N,C,H,W).
+pub fn conv2d_bwd_data(dy: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    let (ho, wo) = g.out_hw();
+    let cg = g.c / g.g;
+    let kg = g.k / g.g;
+    let mut dx = vec![0f32; g.n * g.c * g.h * g.w];
+    for n in 0..g.n {
+        for k in 0..g.k {
+            let grp = k / kg;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let d = dy[((n * g.k + k) * ho + oh) * wo + ow];
+                    if d == 0.0 {
+                        continue;
+                    }
+                    for ci in 0..cg {
+                        let c = grp * cg + ci;
+                        for fr in 0..g.r {
+                            let ih = (oh * g.u + fr * g.l) as isize
+                                - g.p as isize;
+                            if ih < 0 || ih >= g.h as isize {
+                                continue;
+                            }
+                            let xrow = ((n * g.c + c) * g.h + ih as usize)
+                                * g.w;
+                            let wrow = ((k * cg + ci) * g.r + fr) * g.s;
+                            for fs in 0..g.s {
+                                let iw = (ow * g.v + fs * g.j) as isize
+                                    - g.q as isize;
+                                if iw < 0 || iw >= g.w as isize {
+                                    continue;
+                                }
+                                dx[xrow + iw as usize] += d * w[wrow + fs];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Gradient w.r.t. the filter: dy (N,K,Ho,Wo) + x -> dw (K,C/g,R,S).
+pub fn conv2d_bwd_weights(dy: &[f32], x: &[f32], g: &ConvGeom) -> Vec<f32> {
+    let (ho, wo) = g.out_hw();
+    let cg = g.c / g.g;
+    let kg = g.k / g.g;
+    let mut dw = vec![0f32; g.k * cg * g.r * g.s];
+    for n in 0..g.n {
+        for k in 0..g.k {
+            let grp = k / kg;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let d = dy[((n * g.k + k) * ho + oh) * wo + ow];
+                    if d == 0.0 {
+                        continue;
+                    }
+                    for ci in 0..cg {
+                        let c = grp * cg + ci;
+                        for fr in 0..g.r {
+                            let ih = (oh * g.u + fr * g.l) as isize
+                                - g.p as isize;
+                            if ih < 0 || ih >= g.h as isize {
+                                continue;
+                            }
+                            let xrow = ((n * g.c + c) * g.h + ih as usize)
+                                * g.w;
+                            let wrow = ((k * cg + ci) * g.r + fr) * g.s;
+                            for fs in 0..g.s {
+                                let iw = (ow * g.v + fs * g.j) as isize
+                                    - g.q as isize;
+                                if iw < 0 || iw >= g.w as isize {
+                                    continue;
+                                }
+                                dw[wrow + fs] += d * x[xrow + iw as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dw
+}
+
+// ---------------------------------------------------------------------------
+// GEMM helpers (row-major)
+// ---------------------------------------------------------------------------
+
+/// a (m,k) @ b (k,n) -> (m,n).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = i * k;
+        let orow = i * n;
+        for kk in 0..k {
+            let av = a[arow + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = kk * n;
+            for jj in 0..n {
+                out[orow + jj] += av * b[brow + jj];
+            }
+        }
+    }
+    out
+}
+
+/// a (m,k) @ b^T where b is (n,k) -> (m,n).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for jj in 0..n {
+            let mut acc = 0f32;
+            let arow = i * k;
+            let brow = jj * k;
+            for kk in 0..k {
+                acc += a[arow + kk] * b[brow + kk];
+            }
+            out[i * n + jj] = acc;
+        }
+    }
+    out
+}
+
+/// a^T @ b where a is (k,m), b is (k,n) -> (m,n).
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize)
+    -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for kk in 0..k {
+        let arow = kk * m;
+        let brow = kk * n;
+        for i in 0..m {
+            let av = a[arow + i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = i * n;
+            for jj in 0..n {
+                out[orow + jj] += av * b[brow + jj];
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Pooling (§IV-D)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub struct PoolGeom {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub win: (usize, usize),
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+    pub max: bool,
+}
+
+impl PoolGeom {
+    pub fn out_hw(&self) -> (usize, usize) {
+        ((self.h + 2 * self.pad.0 - self.win.0) / self.stride.0 + 1,
+         (self.w + 2 * self.pad.1 - self.win.1) / self.stride.1 + 1)
+    }
+}
+
+/// Pooling forward. Average mode divides by the full window size
+/// (padding included), matching `ref.pool2d_fwd`.
+pub fn pool2d_fwd(x: &[f32], g: &PoolGeom) -> Vec<f32> {
+    let (ho, wo) = g.out_hw();
+    let mut y = vec![0f32; g.n * g.c * ho * wo];
+    let denom = (g.win.0 * g.win.1) as f32;
+    for n in 0..g.n {
+        for c in 0..g.c {
+            let base = (n * g.c + c) * g.h * g.w;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let mut acc = if g.max { f32::NEG_INFINITY } else { 0.0 };
+                    for wh in 0..g.win.0 {
+                        let ih = (oh * g.stride.0 + wh) as isize
+                            - g.pad.0 as isize;
+                        if ih < 0 || ih >= g.h as isize {
+                            continue;
+                        }
+                        for ww in 0..g.win.1 {
+                            let iw = (ow * g.stride.1 + ww) as isize
+                                - g.pad.1 as isize;
+                            if iw < 0 || iw >= g.w as isize {
+                                continue;
+                            }
+                            let v = x[base + ih as usize * g.w + iw as usize];
+                            if g.max {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                        }
+                    }
+                    y[((n * g.c + c) * ho + oh) * wo + ow] =
+                        if g.max { acc } else { acc / denom };
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Pooling backward. Max routes the gradient to the first maximum in
+/// window scan order (XLA SelectAndScatter semantics); average spreads
+/// dy over the full window size.
+pub fn pool2d_bwd(x: &[f32], dy: &[f32], g: &PoolGeom) -> Vec<f32> {
+    let (ho, wo) = g.out_hw();
+    let mut dx = vec![0f32; g.n * g.c * g.h * g.w];
+    let denom = (g.win.0 * g.win.1) as f32;
+    for n in 0..g.n {
+        for c in 0..g.c {
+            let base = (n * g.c + c) * g.h * g.w;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let d = dy[((n * g.c + c) * ho + oh) * wo + ow];
+                    if g.max {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_at: Option<usize> = None;
+                        for wh in 0..g.win.0 {
+                            let ih = (oh * g.stride.0 + wh) as isize
+                                - g.pad.0 as isize;
+                            if ih < 0 || ih >= g.h as isize {
+                                continue;
+                            }
+                            for ww in 0..g.win.1 {
+                                let iw = (ow * g.stride.1 + ww) as isize
+                                    - g.pad.1 as isize;
+                                if iw < 0 || iw >= g.w as isize {
+                                    continue;
+                                }
+                                let at = base + ih as usize * g.w
+                                    + iw as usize;
+                                if x[at] > best {
+                                    best = x[at];
+                                    best_at = Some(at);
+                                }
+                            }
+                        }
+                        if let Some(at) = best_at {
+                            dx[at] += d;
+                        }
+                    } else {
+                        let dd = d / denom;
+                        for wh in 0..g.win.0 {
+                            let ih = (oh * g.stride.0 + wh) as isize
+                                - g.pad.0 as isize;
+                            if ih < 0 || ih >= g.h as isize {
+                                continue;
+                            }
+                            for ww in 0..g.win.1 {
+                                let iw = (ow * g.stride.1 + ww) as isize
+                                    - g.pad.1 as isize;
+                                if iw < 0 || iw >= g.w as isize {
+                                    continue;
+                                }
+                                dx[base + ih as usize * g.w + iw as usize]
+                                    += dd;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Batch normalization (§IV-B)
+// ---------------------------------------------------------------------------
+
+/// Spatial BN training forward: stats over (N,H,W) per channel.
+/// Returns (y, mean, var) — var is the biased (population) variance.
+pub fn bn_spatial_train(x: &[f32], gamma: &[f32], beta: &[f32], n: usize,
+                        c: usize, h: usize, w: usize)
+    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let hw = h * w;
+    let m = (n * hw) as f64;
+    let mut mean = vec![0f32; c];
+    let mut var = vec![0f32; c];
+    for ci in 0..c {
+        let mut sum = 0f64;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                sum += x[base + i] as f64;
+            }
+        }
+        let mu = sum / m;
+        let mut sq = 0f64;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let d = x[base + i] as f64 - mu;
+                sq += d * d;
+            }
+        }
+        mean[ci] = mu as f32;
+        var[ci] = (sq / m) as f32;
+    }
+    let mut y = vec![0f32; x.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            let inv = 1.0 / (var[ci] + BN_EPS).sqrt();
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                y[base + i] =
+                    gamma[ci] * (x[base + i] - mean[ci]) * inv + beta[ci];
+            }
+        }
+    }
+    (y, mean, var)
+}
+
+pub fn bn_spatial_infer(x: &[f32], gamma: &[f32], beta: &[f32], mean: &[f32],
+                        var: &[f32], n: usize, c: usize, h: usize, w: usize)
+    -> Vec<f32> {
+    let hw = h * w;
+    let mut y = vec![0f32; x.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            let inv = 1.0 / (var[ci] + BN_EPS).sqrt();
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                y[base + i] =
+                    gamma[ci] * (x[base + i] - mean[ci]) * inv + beta[ci];
+            }
+        }
+    }
+    y
+}
+
+/// Spatial BN backward -> (dx, dgamma, dbeta), `ref.batchnorm_spatial_bwd`.
+pub fn bn_spatial_bwd(x: &[f32], dy: &[f32], gamma: &[f32], mean: &[f32],
+                      var: &[f32], n: usize, c: usize, h: usize, w: usize)
+    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let hw = h * w;
+    let m = (n * hw) as f32;
+    let mut dgamma = vec![0f32; c];
+    let mut dbeta = vec![0f32; c];
+    for ci in 0..c {
+        let inv = 1.0 / (var[ci] + BN_EPS).sqrt();
+        let mut dg = 0f64;
+        let mut db = 0f64;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let xhat = (x[base + i] - mean[ci]) * inv;
+                dg += (dy[base + i] * xhat) as f64;
+                db += dy[base + i] as f64;
+            }
+        }
+        dgamma[ci] = dg as f32;
+        dbeta[ci] = db as f32;
+    }
+    let mut dx = vec![0f32; x.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            let inv = 1.0 / (var[ci] + BN_EPS).sqrt();
+            let scale = gamma[ci] * inv / m;
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let xhat = (x[base + i] - mean[ci]) * inv;
+                dx[base + i] = scale
+                    * (m * dy[base + i] - dbeta[ci] - xhat * dgamma[ci]);
+            }
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+/// Per-activation BN training forward: stats over N; params sized (C*H*W).
+pub fn bn_peract_train(x: &[f32], gamma: &[f32], beta: &[f32], n: usize,
+                       chw: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut mean = vec![0f32; chw];
+    let mut var = vec![0f32; chw];
+    for i in 0..chw {
+        let mut sum = 0f64;
+        for ni in 0..n {
+            sum += x[ni * chw + i] as f64;
+        }
+        let mu = sum / n as f64;
+        let mut sq = 0f64;
+        for ni in 0..n {
+            let d = x[ni * chw + i] as f64 - mu;
+            sq += d * d;
+        }
+        mean[i] = mu as f32;
+        var[i] = (sq / n as f64) as f32;
+    }
+    let mut y = vec![0f32; x.len()];
+    for ni in 0..n {
+        for i in 0..chw {
+            let inv = 1.0 / (var[i] + BN_EPS).sqrt();
+            y[ni * chw + i] =
+                gamma[i] * (x[ni * chw + i] - mean[i]) * inv + beta[i];
+        }
+    }
+    (y, mean, var)
+}
+
+pub fn bn_peract_infer(x: &[f32], gamma: &[f32], beta: &[f32], mean: &[f32],
+                       var: &[f32], n: usize, chw: usize) -> Vec<f32> {
+    let mut y = vec![0f32; x.len()];
+    for ni in 0..n {
+        for i in 0..chw {
+            let inv = 1.0 / (var[i] + BN_EPS).sqrt();
+            y[ni * chw + i] =
+                gamma[i] * (x[ni * chw + i] - mean[i]) * inv + beta[i];
+        }
+    }
+    y
+}
+
+pub fn bn_peract_bwd(x: &[f32], dy: &[f32], gamma: &[f32], mean: &[f32],
+                     var: &[f32], n: usize, chw: usize)
+    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dgamma = vec![0f32; chw];
+    let mut dbeta = vec![0f32; chw];
+    for i in 0..chw {
+        let inv = 1.0 / (var[i] + BN_EPS).sqrt();
+        let mut dg = 0f64;
+        let mut db = 0f64;
+        for ni in 0..n {
+            let xhat = (x[ni * chw + i] - mean[i]) * inv;
+            dg += (dy[ni * chw + i] * xhat) as f64;
+            db += dy[ni * chw + i] as f64;
+        }
+        dgamma[i] = dg as f32;
+        dbeta[i] = db as f32;
+    }
+    let nf = n as f32;
+    let mut dx = vec![0f32; x.len()];
+    for ni in 0..n {
+        for i in 0..chw {
+            let inv = 1.0 / (var[i] + BN_EPS).sqrt();
+            let xhat = (x[ni * chw + i] - mean[i]) * inv;
+            dx[ni * chw + i] = (gamma[i] * inv / nf)
+                * (nf * dy[ni * chw + i] - dbeta[i] - xhat * dgamma[i]);
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+// ---------------------------------------------------------------------------
+// Activations (§IV-D)
+// ---------------------------------------------------------------------------
+
+pub fn act_one(v: f32, mode: ActivationMode, alpha: f32) -> f32 {
+    match mode {
+        ActivationMode::Relu => v.max(0.0),
+        ActivationMode::LeakyRelu => if v >= 0.0 { v } else { alpha * v },
+        ActivationMode::Tanh => v.tanh(),
+        ActivationMode::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+        ActivationMode::Elu => {
+            if v >= 0.0 { v } else { alpha * (v.exp() - 1.0) }
+        }
+        ActivationMode::ClippedRelu => v.clamp(0.0, alpha),
+        ActivationMode::Abs => v.abs(),
+        ActivationMode::Identity => v,
+    }
+}
+
+fn act_deriv(v: f32, mode: ActivationMode, alpha: f32) -> f32 {
+    match mode {
+        ActivationMode::Relu => if v > 0.0 { 1.0 } else { 0.0 },
+        ActivationMode::LeakyRelu => if v >= 0.0 { 1.0 } else { alpha },
+        ActivationMode::Tanh => {
+            let t = v.tanh();
+            1.0 - t * t
+        }
+        ActivationMode::Sigmoid => {
+            let s = 1.0 / (1.0 + (-v).exp());
+            s * (1.0 - s)
+        }
+        ActivationMode::Elu => if v >= 0.0 { 1.0 } else { alpha * v.exp() },
+        ActivationMode::ClippedRelu => {
+            if v > 0.0 && v < alpha { 1.0 } else { 0.0 }
+        }
+        ActivationMode::Abs => {
+            if v > 0.0 { 1.0 } else if v < 0.0 { -1.0 } else { 0.0 }
+        }
+        ActivationMode::Identity => 1.0,
+    }
+}
+
+pub fn act_fwd(x: &[f32], mode: ActivationMode, alpha: f32) -> Vec<f32> {
+    x.iter().map(|&v| act_one(v, mode, alpha)).collect()
+}
+
+pub fn act_bwd(x: &[f32], dy: &[f32], mode: ActivationMode, alpha: f32)
+    -> Vec<f32> {
+    x.iter()
+        .zip(dy)
+        .map(|(&v, &d)| d * act_deriv(v, mode, alpha))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Softmax / LogSoftmax (§IV-D) — over the channel axis of (N, C, M)
+// ---------------------------------------------------------------------------
+
+pub fn softmax_fwd(x: &[f32], n: usize, c: usize, m: usize, log: bool)
+    -> Vec<f32> {
+    let mut y = vec![0f32; x.len()];
+    for ni in 0..n {
+        for mi in 0..m {
+            let at = |ci: usize| (ni * c + ci) * m + mi;
+            let mut mx = f32::NEG_INFINITY;
+            for ci in 0..c {
+                mx = mx.max(x[at(ci)]);
+            }
+            let mut z = 0f64;
+            for ci in 0..c {
+                z += ((x[at(ci)] - mx) as f64).exp();
+            }
+            let lz = z.ln() as f32;
+            for ci in 0..c {
+                let lp = x[at(ci)] - mx - lz;
+                y[at(ci)] = if log { lp } else { lp.exp() };
+            }
+        }
+    }
+    y
+}
+
+/// Backward given the *forward output* y (MIOpen convention).
+pub fn softmax_bwd(y: &[f32], dy: &[f32], n: usize, c: usize, m: usize,
+                   log: bool) -> Vec<f32> {
+    let mut dx = vec![0f32; y.len()];
+    for ni in 0..n {
+        for mi in 0..m {
+            let at = |ci: usize| (ni * c + ci) * m + mi;
+            if log {
+                let mut sum = 0f64;
+                for ci in 0..c {
+                    sum += dy[at(ci)] as f64;
+                }
+                for ci in 0..c {
+                    dx[at(ci)] =
+                        dy[at(ci)] - (y[at(ci)].exp() as f64 * sum) as f32;
+                }
+            } else {
+                let mut sum = 0f64;
+                for ci in 0..c {
+                    sum += (dy[at(ci)] * y[at(ci)]) as f64;
+                }
+                for ci in 0..c {
+                    dx[at(ci)] = y[at(ci)] * (dy[at(ci)] - sum as f32);
+                }
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// LRN (§IV-D), cross-channel mode with the ref defaults
+// ---------------------------------------------------------------------------
+
+pub fn lrn_fwd(x: &[f32], n: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+    let (win, alpha, beta, k) = (5usize, 1e-4f32, 0.75f32, 2.0f32);
+    let half = win / 2;
+    let hw = h * w;
+    let mut y = vec![0f32; x.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            for i in 0..hw {
+                let mut sum = 0f32;
+                for d in 0..win {
+                    let cc = ci as isize + d as isize - half as isize;
+                    if cc < 0 || cc >= c as isize {
+                        continue;
+                    }
+                    let v = x[(ni * c + cc as usize) * hw + i];
+                    sum += v * v;
+                }
+                let denom = (k + (alpha / win as f32) * sum).powf(beta);
+                y[(ni * c + ci) * hw + i] = x[(ni * c + ci) * hw + i] / denom;
+            }
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------------
+// Tensor ops (§IV-D)
+// ---------------------------------------------------------------------------
+
+/// y (N,K,M) + bias (K) broadcast over channels.
+pub fn bias_add(y: &[f32], bias: &[f32], n: usize, k: usize, m: usize)
+    -> Vec<f32> {
+    let mut out = vec![0f32; y.len()];
+    for ni in 0..n {
+        for ki in 0..k {
+            let base = (ni * k + ki) * m;
+            for i in 0..m {
+                out[base + i] = y[base + i] + bias[ki];
+            }
+        }
+    }
+    out
+}
+
+pub fn op_tensor(a: &[f32], b: &[f32], op: &str) -> Vec<f32> {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| match op {
+            "add" => x + y,
+            "mul" => x * y,
+            "min" => x.min(y),
+            "max" => x.max(y),
+            other => unreachable!("op_tensor: unknown op '{other}'"),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// RNN cells (§IV-C), eqs. (1)-(10)
+// ---------------------------------------------------------------------------
+
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// LSTM over a sequence. xs (T,B,X), h0/c0 (B,H), W (4H,X) rows ordered
+/// [i,f,o,c~], R (4H,H) -> hs (T,B,H).
+pub fn lstm_seq(xs: &[f32], h0: &[f32], c0: &[f32], wm: &[f32], rm: &[f32],
+                t: usize, b: usize, x: usize, h: usize) -> Vec<f32> {
+    let mut hs = vec![0f32; t * b * h];
+    let mut hcur = h0.to_vec();
+    let mut ccur = c0.to_vec();
+    for ti in 0..t {
+        let xt = &xs[ti * b * x..(ti + 1) * b * x];
+        let sx = matmul_nt(xt, wm, b, x, 4 * h);
+        let sh = matmul_nt(&hcur, rm, b, h, 4 * h);
+        for bi in 0..b {
+            for hi in 0..h {
+                let g = |gate: usize| {
+                    sx[bi * 4 * h + gate * h + hi]
+                        + sh[bi * 4 * h + gate * h + hi]
+                };
+                let i = sigmoid(g(0));
+                let f = sigmoid(g(1));
+                let o = sigmoid(g(2));
+                let cbar = g(3).tanh();
+                let c = f * ccur[bi * h + hi] + i * cbar;
+                let hn = o * c.tanh();
+                ccur[bi * h + hi] = c;
+                hcur[bi * h + hi] = hn;
+                hs[(ti * b + bi) * h + hi] = hn;
+            }
+        }
+    }
+    hs
+}
+
+/// GRU (cuDNN/MIOpen variant): W (3H,X) rows [r,z,n], R (3H,H).
+pub fn gru_seq(xs: &[f32], h0: &[f32], wm: &[f32], rm: &[f32], t: usize,
+               b: usize, x: usize, h: usize) -> Vec<f32> {
+    let mut hs = vec![0f32; t * b * h];
+    let mut hcur = h0.to_vec();
+    for ti in 0..t {
+        let xt = &xs[ti * b * x..(ti + 1) * b * x];
+        let sx = matmul_nt(xt, wm, b, x, 3 * h);
+        let sh = matmul_nt(&hcur, rm, b, h, 3 * h);
+        for bi in 0..b {
+            for hi in 0..h {
+                let xg = |gate: usize| sx[bi * 3 * h + gate * h + hi];
+                let hg = |gate: usize| sh[bi * 3 * h + gate * h + hi];
+                let r = sigmoid(xg(0) + hg(0));
+                let z = sigmoid(xg(1) + hg(1));
+                let nn = (xg(2) + r * hg(2)).tanh();
+                let hn = (1.0 - z) * nn + z * hcur[bi * h + hi];
+                hcur[bi * h + hi] = hn;
+                hs[(ti * b + bi) * h + hi] = hn;
+            }
+        }
+    }
+    hs
+}
+
+/// Vanilla RNN: W (H,X), R (H,H); tanh or relu activation.
+pub fn vanilla_seq(xs: &[f32], h0: &[f32], wm: &[f32], rm: &[f32], t: usize,
+                   b: usize, x: usize, h: usize, relu: bool) -> Vec<f32> {
+    let mut hs = vec![0f32; t * b * h];
+    let mut hcur = h0.to_vec();
+    for ti in 0..t {
+        let xt = &xs[ti * b * x..(ti + 1) * b * x];
+        let sx = matmul_nt(xt, wm, b, x, h);
+        let sh = matmul_nt(&hcur, rm, b, h, h);
+        for bi in 0..b {
+            for hi in 0..h {
+                let s = sx[bi * h + hi] + sh[bi * h + hi];
+                let hn = if relu { s.max(0.0) } else { s.tanh() };
+                hcur[bi * h + hi] = hn;
+                hs[(ti * b + bi) * h + hi] = hn;
+            }
+        }
+    }
+    hs
+}
+
+/// Bidirectional LSTM: forward pass + reversed pass with the same
+/// weights, concatenated on the hidden axis -> (T,B,2H).
+pub fn lstm_bidir(xs: &[f32], h0: &[f32], c0: &[f32], wm: &[f32], rm: &[f32],
+                  t: usize, b: usize, x: usize, h: usize) -> Vec<f32> {
+    let fwd = lstm_seq(xs, h0, c0, wm, rm, t, b, x, h);
+    let mut rev = vec![0f32; t * b * x];
+    for ti in 0..t {
+        rev[ti * b * x..(ti + 1) * b * x]
+            .copy_from_slice(&xs[(t - 1 - ti) * b * x..(t - ti) * b * x]);
+    }
+    let bwd = lstm_seq(&rev, h0, c0, wm, rm, t, b, x, h);
+    let mut out = vec![0f32; t * b * 2 * h];
+    for ti in 0..t {
+        for bi in 0..b {
+            for hi in 0..h {
+                out[(ti * b + bi) * 2 * h + hi] = fwd[(ti * b + bi) * h + hi];
+                out[(ti * b + bi) * 2 * h + h + hi] =
+                    bwd[((t - 1 - ti) * b + bi) * h + hi];
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// CTC loss (§IV-D) — log-space forward algorithm
+// ---------------------------------------------------------------------------
+
+fn logaddexp(a: f32, b: f32) -> f32 {
+    if a == f32::NEG_INFINITY {
+        return b;
+    }
+    if b == f32::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// CTC negative log-likelihoods for a batch. log_probs (B,T,V) log-softmax
+/// outputs; labels (B,L); per-item input/label lengths. Blank = 0.
+pub fn ctc_loss_batch(log_probs: &[f32], labels: &[i32], input_lens: &[i32],
+                      label_lens: &[i32], b: usize, t: usize, v: usize,
+                      l: usize) -> Vec<f32> {
+    let mut out = vec![0f32; b];
+    for bi in 0..b {
+        let lp = |ti: usize, vi: usize| log_probs[(bi * t + ti) * v + vi];
+        let ll = (label_lens[bi].max(0) as usize).min(l);
+        let tl = (input_lens[bi].max(0) as usize).min(t).max(1);
+        // extended label sequence: blank-interleaved
+        let mut ext = Vec::with_capacity(2 * ll + 1);
+        for i in 0..ll {
+            ext.push(0usize);
+            ext.push(labels[bi * l + i].max(0) as usize % v);
+        }
+        ext.push(0usize);
+        let s = ext.len();
+
+        let mut alpha = vec![f32::NEG_INFINITY; s];
+        alpha[0] = lp(0, ext[0]);
+        if s > 1 {
+            alpha[1] = lp(0, ext[1]);
+        }
+        for ti in 1..tl {
+            let prev = alpha.clone();
+            for si in 0..s {
+                let mut cand = prev[si];
+                if si >= 1 {
+                    cand = logaddexp(cand, prev[si - 1]);
+                }
+                if si >= 2 && ext[si] != 0 && ext[si] != ext[si - 2] {
+                    cand = logaddexp(cand, prev[si - 2]);
+                }
+                alpha[si] = cand + lp(ti, ext[si]);
+            }
+        }
+        let mut ll_total = alpha[s - 1];
+        if s > 1 {
+            ll_total = logaddexp(ll_total, alpha[s - 2]);
+        }
+        out[bi] = -ll_total;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom_3x3_s1p1(n: usize, c: usize, hw: usize, k: usize) -> ConvGeom {
+        ConvGeom::dense(n, c, hw, hw, k, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn conv_identity_filter_passes_input_through() {
+        // 1x1 filter with weight 1.0 on a single channel = identity
+        let g = ConvGeom::dense(1, 1, 4, 4, 1, 1, 1, 1, 0);
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let y = conv2d_fwd(&x, &[1.0], &g);
+        assert_eq!(y, x);
+        assert_eq!(conv2d_fwd_im2col(&x, &[1.0], &g), x);
+    }
+
+    #[test]
+    fn conv_direct_matches_im2col() {
+        let g = geom_3x3_s1p1(2, 3, 6, 4);
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let mut x = vec![0f32; 2 * 3 * 36];
+        let mut w = vec![0f32; 4 * 3 * 9];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut w);
+        let a = conv2d_fwd(&x, &w, &g);
+        let b = conv2d_fwd_im2col(&x, &w, &g);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-4, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn conv_bwd_data_is_transpose_of_fwd() {
+        // <conv(x), dy> == <x, conv_bwd_data(dy)> (adjoint identity)
+        let g = geom_3x3_s1p1(1, 2, 5, 3);
+        let mut rng = crate::util::rng::SplitMix64::new(7);
+        let mut x = vec![0f32; 50];
+        let mut w = vec![0f32; 3 * 2 * 9];
+        let mut dy = vec![0f32; 3 * 25];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut w);
+        rng.fill_normal_f32(&mut dy);
+        let y = conv2d_fwd(&x, &w, &g);
+        let dx = conv2d_bwd_data(&dy, &w, &g);
+        let lhs: f32 = y.iter().zip(&dy).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.iter().zip(&dx).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() / lhs.abs().max(1.0) < 1e-3,
+                "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn conv_bwd_weights_is_gradient() {
+        // <conv(x; w), dy> == <w, conv_bwd_weights(dy, x)>
+        let g = geom_3x3_s1p1(2, 2, 5, 2);
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        let mut x = vec![0f32; 2 * 2 * 25];
+        let mut w = vec![0f32; 2 * 2 * 9];
+        let mut dy = vec![0f32; 2 * 2 * 25];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut w);
+        rng.fill_normal_f32(&mut dy);
+        let y = conv2d_fwd(&x, &w, &g);
+        let dw = conv2d_bwd_weights(&dy, &x, &g);
+        let lhs: f32 = y.iter().zip(&dy).map(|(a, b)| a * b).sum();
+        let rhs: f32 = w.iter().zip(&dw).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() / lhs.abs().max(1.0) < 1e-3);
+    }
+
+    #[test]
+    fn grouped_conv_blocks_cross_group_flow() {
+        // depthwise: output channel k only sees input channel k
+        let g = ConvGeom { g: 2, ..ConvGeom::dense(1, 2, 3, 3, 2, 1, 1, 1, 0) };
+        let x = vec![1.0; 9].into_iter().chain(vec![10.0; 9]).collect::<Vec<_>>();
+        let w = vec![2.0, 3.0]; // k0 <- c0 * 2, k1 <- c1 * 3
+        let y = conv2d_fwd(&x, &w, &g);
+        assert!(y[..9].iter().all(|&v| v == 2.0));
+        assert!(y[9..].iter().all(|&v| v == 30.0));
+    }
+
+    #[test]
+    fn maxpool_fwd_and_bwd() {
+        let g = PoolGeom { n: 1, c: 1, h: 4, w: 4, win: (2, 2),
+                           stride: (2, 2), pad: (0, 0), max: true };
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let y = pool2d_fwd(&x, &g);
+        assert_eq!(y, vec![5.0, 7.0, 13.0, 15.0]);
+        let dx = pool2d_bwd(&x, &[1.0, 2.0, 3.0, 4.0], &g);
+        assert_eq!(dx[5], 1.0);
+        assert_eq!(dx[7], 2.0);
+        assert_eq!(dx[13], 3.0);
+        assert_eq!(dx[15], 4.0);
+        assert_eq!(dx.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn avgpool_divides_by_full_window() {
+        let g = PoolGeom { n: 1, c: 1, h: 2, w: 2, win: (2, 2),
+                           stride: (2, 2), pad: (0, 0), max: false };
+        let y = pool2d_fwd(&[1.0, 2.0, 3.0, 4.0], &g);
+        assert_eq!(y, vec![2.5]);
+        let dx = pool2d_bwd(&[1.0, 2.0, 3.0, 4.0], &[4.0], &g);
+        assert_eq!(dx, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn bn_spatial_normalizes() {
+        let (n, c, h, w) = (2, 2, 2, 2);
+        let mut rng = crate::util::rng::SplitMix64::new(11);
+        let mut x = vec![0f32; n * c * h * w];
+        rng.fill_normal_f32(&mut x);
+        let gamma = vec![1.0; c];
+        let beta = vec![0.0; c];
+        let (y, mean, var) = bn_spatial_train(&x, &gamma, &beta, n, c, h, w);
+        // normalized output has ~zero mean per channel
+        for ci in 0..c {
+            let mut s = 0f32;
+            for ni in 0..n {
+                for i in 0..h * w {
+                    s += y[(ni * c + ci) * h * w + i];
+                }
+            }
+            assert!(s.abs() < 1e-4, "channel {ci} mean {s}");
+            assert!(var[ci] > 0.0);
+        }
+        // infer with the batch stats reproduces the training output
+        let y2 = bn_spatial_infer(&x, &gamma, &beta, &mean, &var, n, c, h, w);
+        for (a, b) in y.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = vec![0.1, 2.0, -1.0, 0.5, 0.2, 0.3];
+        let y = softmax_fwd(&x, 2, 3, 1, false);
+        for ni in 0..2 {
+            let s: f32 = (0..3).map(|ci| y[ni * 3 + ci]).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        let ly = softmax_fwd(&x, 2, 3, 1, true);
+        for (a, b) in y.iter().zip(&ly) {
+            assert!((a.ln() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lstm_outputs_bounded() {
+        let (t, b, x, h) = (4, 2, 3, 5);
+        let mut rng = crate::util::rng::SplitMix64::new(5);
+        let mut xs = vec![0f32; t * b * x];
+        let mut wm = vec![0f32; 4 * h * x];
+        let mut rm = vec![0f32; 4 * h * h];
+        rng.fill_normal_f32(&mut xs);
+        rng.fill_normal_f32(&mut wm);
+        rng.fill_normal_f32(&mut rm);
+        let zeros = vec![0.0; b * h];
+        let hs = lstm_seq(&xs, &zeros, &zeros, &wm, &rm, t, b, x, h);
+        assert!(hs.iter().all(|v| v.abs() <= 1.0 && v.is_finite()));
+        let bid = lstm_bidir(&xs, &zeros, &zeros, &wm, &rm, t, b, x, h);
+        assert_eq!(bid.len(), t * b * 2 * h);
+        // forward half of the bidir output equals the unidirectional run
+        for ti in 0..t {
+            for bi in 0..b {
+                for hi in 0..h {
+                    assert_eq!(bid[(ti * b + bi) * 2 * h + hi],
+                               hs[(ti * b + bi) * h + hi]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ctc_single_label_single_step() {
+        // T=1, one label: only path is the label itself -> loss = -lp
+        let v = 3;
+        let lp = softmax_fwd(&[0.2, 1.0, -0.3], 1, v, 1, true);
+        let loss = ctc_loss_batch(&lp, &[1], &[1], &[1], 1, 1, v, 1);
+        assert!((loss[0] + lp[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ctc_matches_brute_force_two_steps() {
+        // T=2, label [1]: paths {1,1}, {0,1}, {1,0} -> sum their probs
+        let v = 2;
+        let x = vec![0.3, -0.2, 0.8, 0.1];
+        // build (T,V) log-probs directly
+        let mut tv = vec![0f32; 4];
+        for t in 0..2 {
+            let row = [x[t * 2], x[t * 2 + 1]];
+            let m = row[0].max(row[1]);
+            let z = ((row[0] - m).exp() + (row[1] - m).exp()).ln();
+            tv[t * 2] = row[0] - m - z;
+            tv[t * 2 + 1] = row[1] - m - z;
+        }
+        let p = |t: usize, c: usize| tv[t * 2 + c].exp();
+        let want = p(0, 1) * p(1, 1) + p(0, 0) * p(1, 1) + p(0, 1) * p(1, 0);
+        let loss = ctc_loss_batch(&tv, &[1], &[2], &[1], 1, 2, v, 1);
+        assert!((loss[0] + want.ln()).abs() < 1e-5,
+                "{} vs {}", loss[0], -want.ln());
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // (2,3)
+        let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // (3,2)
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![4.0, 5.0, 10.0, 11.0]);
+        // b^T laid out as (2,3)
+        let bt = [1.0, 0.0, 1.0, 0.0, 1.0, 1.0];
+        assert_eq!(matmul_nt(&a, &bt, 2, 3, 2), c);
+        // a^T laid out as (3,2) -> transpose back
+        let at = [1.0, 4.0, 2.0, 5.0, 3.0, 6.0];
+        assert_eq!(matmul_tn(&at, &b, 3, 2, 2), c);
+    }
+}

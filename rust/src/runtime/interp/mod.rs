@@ -1,0 +1,643 @@
+//! `InterpBackend` — the pure-Rust reference executor.
+//!
+//! Third backend behind [`crate::runtime::Backend`], next to the PJRT CPU
+//! backend and the mock: instead of compiling AOT'd HLO text it executes
+//! the primitive numerics directly (ported from
+//! `python/compile/kernels/ref.py` into [`kernels`]). Dispatch is driven
+//! by the artifact's manifest entry — primitive, algorithm, direction and
+//! signature — so the interp backend serves the *same* artifact contract
+//! the PJRT backend does, with real numbers on a machine that has nothing
+//! but a Rust toolchain.
+//!
+//! Per-algorithm conv variants (winograd, fft, implicit, tuned block_k)
+//! all reduce to the same reference arithmetic here; the gemm path runs
+//! the distinct im2col+GEMM formulation as a built-in cross-check.
+
+pub mod cnn;
+pub mod kernels;
+
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::descriptors::ActivationMode;
+use crate::manifest::{Artifact, TensorSpec};
+use crate::runtime::{tensor, Backend, Executable, HostTensor};
+use crate::types::{DType, MiopenError, ProblemSig, Result};
+
+use kernels as k;
+
+pub struct InterpBackend;
+
+impl InterpBackend {
+    pub fn new() -> Self {
+        InterpBackend
+    }
+}
+
+impl Default for InterpBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for InterpBackend {
+    fn compile(&self, _path: &Path, art: &Artifact)
+        -> Result<Rc<dyn Executable>> {
+        check_supported(art)?;
+        Ok(Rc::new(InterpExecutable { art: art.clone() }))
+    }
+
+    fn platform(&self) -> String {
+        "interp".to_string()
+    }
+}
+
+struct InterpExecutable {
+    art: Artifact,
+}
+
+impl Executable for InterpExecutable {
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        execute(&self.art, inputs)
+    }
+
+    fn output_arity(&self) -> usize {
+        self.art.outputs.len()
+    }
+}
+
+/// "Compile-time" validation: unknown primitives fail here, mirroring a
+/// real backend rejecting unparseable HLO.
+fn check_supported(art: &Artifact) -> Result<()> {
+    match art.primitive.as_str() {
+        "conv" => {
+            ProblemSig::parse_artifact(&art.sig)?;
+            Ok(())
+        }
+        "fusion" | "tensor_op" | "activation" | "batchnorm" | "pooling"
+        | "softmax" | "lrn" | "ctc" | "rnn" | "model" => Ok(()),
+        other => Err(MiopenError::NotApplicable(format!(
+            "interp backend cannot execute primitive '{other}' ({})",
+            art.sig
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conversions at the execution boundary
+// ---------------------------------------------------------------------------
+
+fn input_f32(t: &HostTensor) -> Result<Vec<f32>> {
+    match t.spec.dtype {
+        DType::F32 | DType::Bf16 => t.as_f32(),
+        DType::F16 => Ok(t
+            .data
+            .chunks_exact(2)
+            .map(|b| tensor::f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])))
+            .collect()),
+        DType::I8 => Ok(t.data.iter().map(|&b| (b as i8) as f32).collect()),
+        other => Err(MiopenError::Runtime(format!(
+            "interp: cannot read {other} tensor as f32"
+        ))),
+    }
+}
+
+fn out_tensor(spec: &TensorSpec, vals: &[f32]) -> Result<HostTensor> {
+    match spec.dtype {
+        DType::F32 => Ok(HostTensor::from_f32(&spec.shape, vals)),
+        DType::Bf16 => {
+            let mut data = Vec::with_capacity(vals.len() * 2);
+            for v in vals {
+                data.extend_from_slice(&tensor::f32_to_bf16(*v));
+            }
+            Ok(HostTensor { spec: spec.clone(), data })
+        }
+        DType::F16 => {
+            let mut data = Vec::with_capacity(vals.len() * 2);
+            for v in vals {
+                data.extend_from_slice(
+                    &tensor::f32_to_f16_bits(*v).to_le_bytes());
+            }
+            Ok(HostTensor { spec: spec.clone(), data })
+        }
+        other => Err(MiopenError::Runtime(format!(
+            "interp: cannot emit f32 results as {other}"
+        ))),
+    }
+}
+
+fn nchw(spec: &TensorSpec) -> Result<(usize, usize, usize, usize)> {
+    if spec.shape.len() != 4 {
+        return Err(MiopenError::ShapeMismatch(format!(
+            "expected rank-4 tensor, got {:?}", spec.shape
+        )));
+    }
+    Ok((spec.shape[0], spec.shape[1], spec.shape[2], spec.shape[3]))
+}
+
+fn act_alpha(mode: ActivationMode) -> f32 {
+    crate::descriptors::ActivationDesc::new(mode).alpha as f32
+}
+
+fn parse_act(name: &str, sig: &str) -> Result<ActivationMode> {
+    ActivationMode::parse(name).ok_or_else(|| {
+        MiopenError::Runtime(format!("unknown activation '{name}' in {sig}"))
+    })
+}
+
+/// Conv geometry for fusion artifacts, read from the manifest params
+/// (ConvConfig.as_dict keys).
+fn geom_from_params(art: &Artifact) -> Result<k::ConvGeom> {
+    let get = |key: &str| -> Result<usize> {
+        art.param(key).map(|v| v as usize).ok_or_else(|| {
+            MiopenError::Manifest(format!(
+                "{}: missing conv param '{key}'", art.sig
+            ))
+        })
+    };
+    Ok(k::ConvGeom {
+        n: get("n")?, c: get("c")?, h: get("h")?, w: get("w")?, k: get("k")?,
+        r: get("r")?, s: get("s")?, u: get("u")?, v: get("v")?, p: get("p")?,
+        q: get("q")?, l: get("l")?, j: get("j")?, g: get("g")?,
+    })
+}
+
+/// Parse the pool geometry block `n{N}c{C}h{H}w{W}k{WH}x{WW}u{U}p{P}`.
+fn parse_pool_sig(sig: &str) -> Result<(usize, usize, usize, usize)> {
+    let seg = sig.split('-').nth(2).ok_or_else(|| {
+        MiopenError::Runtime(format!("bad pool signature {sig}"))
+    })?;
+    let bytes = seg.as_bytes();
+    let mut i = 0usize;
+    let mut fields: Vec<(u8, usize)> = Vec::new();
+    while i < bytes.len() {
+        let letter = bytes[i];
+        i += 1;
+        let start = i;
+        while i < bytes.len() && bytes[i].is_ascii_digit() {
+            i += 1;
+        }
+        let val: usize = seg[start..i].parse().map_err(|_| {
+            MiopenError::Runtime(format!("bad pool signature {sig}"))
+        })?;
+        fields.push((letter, val));
+    }
+    let get = |ch: u8| -> Result<usize> {
+        fields
+            .iter()
+            .find(|(c, _)| *c == ch)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| {
+                MiopenError::Runtime(format!(
+                    "pool signature {sig} missing field '{}'", ch as char
+                ))
+            })
+    };
+    // k{WH}x{WW}: the window height keys on 'k', width on 'x'
+    Ok((get(b'k')?, get(b'x')?, get(b'u')?, get(b'p')?))
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+fn execute(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    if inputs.len() != art.inputs.len() {
+        return Err(MiopenError::ShapeMismatch(format!(
+            "{}: expected {} inputs, got {}",
+            art.sig,
+            art.inputs.len(),
+            inputs.len()
+        )));
+    }
+    match art.primitive.as_str() {
+        "conv" => run_conv(art, inputs),
+        "fusion" => run_fusion(art, inputs),
+        "tensor_op" => run_tensor_op(art, inputs),
+        "activation" => run_activation(art, inputs),
+        "batchnorm" => run_batchnorm(art, inputs),
+        "pooling" => run_pooling(art, inputs),
+        "softmax" => run_softmax(art, inputs),
+        "lrn" => run_lrn(art, inputs),
+        "ctc" => run_ctc(art, inputs),
+        "rnn" => run_rnn(art, inputs),
+        "model" => run_model(art, inputs),
+        other => Err(MiopenError::NotApplicable(format!(
+            "interp backend cannot execute primitive '{other}'"
+        ))),
+    }
+}
+
+fn run_conv(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let (psig, algo, _bk) = ProblemSig::parse_artifact(&art.sig)?;
+    let geom = k::ConvGeom::from_sig(&psig);
+    let a = input_f32(&inputs[0])?;
+    let b = input_f32(&inputs[1])?;
+    let out = match psig.direction.as_str() {
+        "fwd" => {
+            if algo == "gemm" && geom.g == 1 {
+                k::conv2d_fwd_im2col(&a, &b, &geom)
+            } else {
+                k::conv2d_fwd(&a, &b, &geom)
+            }
+        }
+        "bwd" => k::conv2d_bwd_data(&a, &b, &geom),
+        _ => k::conv2d_bwd_weights(&a, &b, &geom),
+    };
+    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+}
+
+fn run_fusion(art: &Artifact, inputs: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    let act = parse_act(
+        art.sig.split('-').nth(1).unwrap_or("relu"), &art.sig)?;
+    let alpha = act_alpha(act);
+    match art.algo.as_str() {
+        "cba" => {
+            let geom = geom_from_params(art)?;
+            let (ho, wo) = geom.out_hw();
+            let x = input_f32(&inputs[0])?;
+            let w = input_f32(&inputs[1])?;
+            let bias = input_f32(&inputs[2])?;
+            let y = k::conv2d_fwd(&x, &w, &geom);
+            let y = k::bias_add(&y, &bias, geom.n, geom.k, ho * wo);
+            let y = k::act_fwd(&y, act, alpha);
+            Ok(vec![out_tensor(&art.outputs[0], &y)?])
+        }
+        "cbna" => {
+            let geom = geom_from_params(art)?;
+            let (ho, wo) = geom.out_hw();
+            let x = input_f32(&inputs[0])?;
+            let w = input_f32(&inputs[1])?;
+            let bias = input_f32(&inputs[2])?;
+            let gamma = input_f32(&inputs[3])?;
+            let beta = input_f32(&inputs[4])?;
+            let mean = input_f32(&inputs[5])?;
+            let var = input_f32(&inputs[6])?;
+            let y = k::conv2d_fwd(&x, &w, &geom);
+            let y = k::bias_add(&y, &bias, geom.n, geom.k, ho * wo);
+            let y = k::bn_spatial_infer(&y, &gamma, &beta, &mean, &var,
+                                        geom.n, geom.k, ho, wo);
+            let y = k::act_fwd(&y, act, alpha);
+            Ok(vec![out_tensor(&art.outputs[0], &y)?])
+        }
+        "bna" => {
+            let (n, c, h, w) = nchw(&inputs[0].spec)?;
+            let x = input_f32(&inputs[0])?;
+            let gamma = input_f32(&inputs[1])?;
+            let beta = input_f32(&inputs[2])?;
+            let mean = input_f32(&inputs[3])?;
+            let var = input_f32(&inputs[4])?;
+            let y = k::bn_spatial_infer(&x, &gamma, &beta, &mean, &var, n, c,
+                                        h, w);
+            let y = k::act_fwd(&y, act, alpha);
+            Ok(vec![out_tensor(&art.outputs[0], &y)?])
+        }
+        other => Err(MiopenError::NotApplicable(format!(
+            "interp: unknown fusion combination '{other}'"
+        ))),
+    }
+}
+
+fn run_tensor_op(art: &Artifact, inputs: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    let a = input_f32(&inputs[0])?;
+    let b = input_f32(&inputs[1])?;
+    let out = match art.algo.as_str() {
+        "bias" => {
+            let (n, c, h, w) = nchw(&inputs[0].spec)?;
+            k::bias_add(&a, &b, n, c, h * w)
+        }
+        "add" | "mul" | "min" | "max" => k::op_tensor(&a, &b, &art.algo),
+        other => {
+            return Err(MiopenError::NotApplicable(format!(
+                "interp: unknown tensor op '{other}' ({})", art.sig
+            )))
+        }
+    };
+    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+}
+
+fn run_activation(art: &Artifact, inputs: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    let mode = parse_act(&art.algo, &art.sig)?;
+    let alpha = act_alpha(mode);
+    let x = input_f32(&inputs[0])?;
+    let out = if art.direction == "bwd" {
+        let dy = input_f32(&inputs[1])?;
+        k::act_bwd(&x, &dy, mode, alpha)
+    } else {
+        k::act_fwd(&x, mode, alpha)
+    };
+    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+}
+
+fn run_batchnorm(art: &Artifact, inputs: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    let (n, c, h, w) = nchw(&inputs[0].spec)?;
+    let chw = c * h * w;
+    let x = input_f32(&inputs[0])?;
+    let rest: Vec<Vec<f32>> = inputs[1..]
+        .iter()
+        .map(input_f32)
+        .collect::<Result<_>>()?;
+    let outs: Vec<Vec<f32>> = match art.algo.as_str() {
+        "spatial_train" => {
+            let (y, mu, var) =
+                k::bn_spatial_train(&x, &rest[0], &rest[1], n, c, h, w);
+            vec![y, mu, var]
+        }
+        "spatial_infer" => {
+            vec![k::bn_spatial_infer(&x, &rest[0], &rest[1], &rest[2],
+                                     &rest[3], n, c, h, w)]
+        }
+        "spatial_bwd" => {
+            let (dx, dg, db) = k::bn_spatial_bwd(&x, &rest[0], &rest[1],
+                                                 &rest[2], &rest[3], n, c, h,
+                                                 w);
+            vec![dx, dg, db]
+        }
+        "peract_train" => {
+            let (y, mu, var) = k::bn_peract_train(&x, &rest[0], &rest[1], n,
+                                                  chw);
+            vec![y, mu, var]
+        }
+        "peract_infer" => {
+            vec![k::bn_peract_infer(&x, &rest[0], &rest[1], &rest[2],
+                                    &rest[3], n, chw)]
+        }
+        "peract_bwd" => {
+            let (dx, dg, db) = k::bn_peract_bwd(&x, &rest[0], &rest[1],
+                                                &rest[2], &rest[3], n, chw);
+            vec![dx, dg, db]
+        }
+        other => {
+            return Err(MiopenError::NotApplicable(format!(
+                "interp: unknown batchnorm variant '{other}'"
+            )))
+        }
+    };
+    outs.iter()
+        .zip(&art.outputs)
+        .map(|(vals, spec)| out_tensor(spec, vals))
+        .collect()
+}
+
+fn run_pooling(art: &Artifact, inputs: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    let (n, c, h, w) = nchw(&inputs[0].spec)?;
+    let (wh, ww, u, p) = parse_pool_sig(&art.sig)?;
+    let geom = k::PoolGeom {
+        n, c, h, w,
+        win: (wh, ww),
+        stride: (u, u),
+        pad: (p, p),
+        max: art.algo == "max",
+    };
+    let x = input_f32(&inputs[0])?;
+    let out = if art.direction == "bwd" {
+        // inputs: (x, y, dy) — y is recomputed from x where needed
+        let dy = input_f32(&inputs[2])?;
+        k::pool2d_bwd(&x, &dy, &geom)
+    } else {
+        k::pool2d_fwd(&x, &geom)
+    };
+    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+}
+
+fn run_softmax(art: &Artifact, inputs: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    let (n, c, h, w) = nchw(&inputs[0].spec)?;
+    let log = art.algo == "log_softmax";
+    let x = input_f32(&inputs[0])?;
+    let out = if art.direction == "bwd" {
+        let dy = input_f32(&inputs[1])?;
+        k::softmax_bwd(&x, &dy, n, c, h * w, log)
+    } else {
+        k::softmax_fwd(&x, n, c, h * w, log)
+    };
+    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+}
+
+fn run_lrn(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let (n, c, h, w) = nchw(&inputs[0].spec)?;
+    let x = input_f32(&inputs[0])?;
+    let out = k::lrn_fwd(&x, n, c, h, w);
+    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+}
+
+fn run_ctc(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let shape = &inputs[0].spec.shape;
+    if shape.len() != 3 {
+        return Err(MiopenError::ShapeMismatch(format!(
+            "{}: log_probs must be (B,T,V)", art.sig
+        )));
+    }
+    let (b, t, v) = (shape[0], shape[1], shape[2]);
+    let l = inputs[1].spec.shape.get(1).copied().unwrap_or(0);
+    let lp = input_f32(&inputs[0])?;
+    let labels = inputs[1].as_i32()?;
+    let in_lens = inputs[2].as_i32()?;
+    let lab_lens = inputs[3].as_i32()?;
+    let loss = k::ctc_loss_batch(&lp, &labels, &in_lens, &lab_lens, b, t, v,
+                                 l);
+    Ok(vec![out_tensor(&art.outputs[0], &loss)?])
+}
+
+fn run_rnn(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let xs_shape = &inputs[0].spec.shape;
+    let h0_shape = &inputs[1].spec.shape;
+    if xs_shape.len() != 3 || h0_shape.len() != 2 {
+        return Err(MiopenError::ShapeMismatch(format!(
+            "{}: rnn expects xs (T,B,X) and h0 (B,H)", art.sig
+        )));
+    }
+    let (t, b, x) = (xs_shape[0], xs_shape[1], xs_shape[2]);
+    let h = h0_shape[1];
+    let (cell, variant) = art
+        .algo
+        .split_once('_')
+        .ok_or_else(|| MiopenError::Runtime(format!(
+            "{}: bad rnn algo '{}'", art.sig, art.algo
+        )))?;
+    let xs = input_f32(&inputs[0])?;
+    let h0 = input_f32(&inputs[1])?;
+    let out = match cell {
+        "lstm" => {
+            let c0 = input_f32(&inputs[2])?;
+            let wm = input_f32(&inputs[3])?;
+            let rm = input_f32(&inputs[4])?;
+            if variant == "bidir" {
+                k::lstm_bidir(&xs, &h0, &c0, &wm, &rm, t, b, x, h)
+            } else {
+                // fused and naive share the reference numerics
+                k::lstm_seq(&xs, &h0, &c0, &wm, &rm, t, b, x, h)
+            }
+        }
+        "gru" => {
+            let wm = input_f32(&inputs[2])?;
+            let rm = input_f32(&inputs[3])?;
+            k::gru_seq(&xs, &h0, &wm, &rm, t, b, x, h)
+        }
+        "vanilla" => {
+            let wm = input_f32(&inputs[2])?;
+            let rm = input_f32(&inputs[3])?;
+            let relu = art.str_param("act").unwrap_or("tanh") == "relu";
+            k::vanilla_seq(&xs, &h0, &wm, &rm, t, b, x, h, relu)
+        }
+        other => {
+            return Err(MiopenError::NotApplicable(format!(
+                "interp: unknown rnn cell '{other}'"
+            )))
+        }
+    };
+    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+}
+
+fn run_model(art: &Artifact, inputs: &[HostTensor])
+    -> Result<Vec<HostTensor>> {
+    match art.algo.as_str() {
+        "cnn_init" => {
+            let vecs = cnn::init().into_vecs();
+            vecs.iter()
+                .zip(&art.outputs)
+                .map(|(vals, spec)| out_tensor(spec, vals))
+                .collect()
+        }
+        "cnn_datagen" => {
+            let seed = inputs[0].as_u32()?;
+            if seed.len() < 2 {
+                return Err(MiopenError::ShapeMismatch(
+                    "cnn_datagen: seed must be (2,) u32".into()));
+            }
+            let (x, labels) = cnn::datagen([seed[0], seed[1]]);
+            Ok(vec![
+                out_tensor(&art.outputs[0], &x)?,
+                HostTensor::from_i32(&art.outputs[1].shape, &labels),
+            ])
+        }
+        "cnn_train" => {
+            let params: Vec<Vec<f32>> = inputs[..7]
+                .iter()
+                .map(input_f32)
+                .collect::<Result<_>>()?;
+            let p = cnn::Params::from_slices(&params);
+            let x = input_f32(&inputs[7])?;
+            let labels = inputs[8].as_i32()?;
+            let (new, loss) = cnn::train_step(&p, &x, &labels);
+            let mut out: Vec<HostTensor> = new
+                .into_vecs()
+                .iter()
+                .zip(&art.outputs[..7])
+                .map(|(vals, spec)| out_tensor(spec, vals))
+                .collect::<Result<_>>()?;
+            out.push(out_tensor(&art.outputs[7], &[loss])?);
+            Ok(out)
+        }
+        "cnn_infer" => {
+            let params: Vec<Vec<f32>> = inputs[..7]
+                .iter()
+                .map(input_f32)
+                .collect::<Result<_>>()?;
+            let p = cnn::Params::from_slices(&params);
+            let x = input_f32(&inputs[7])?;
+            let (logits, preds) = cnn::infer(&p, &x);
+            Ok(vec![
+                out_tensor(&art.outputs[0], &logits)?,
+                HostTensor::from_i32(&art.outputs[1].shape, &preds),
+            ])
+        }
+        other => Err(MiopenError::NotApplicable(format!(
+            "interp: unknown model artifact '{other}'"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::util::rng::SplitMix64;
+
+    fn run_sig(m: &Manifest, sig: &str, seed: u64) -> Vec<HostTensor> {
+        let art = m.require(sig).unwrap();
+        let mut rng = SplitMix64::new(seed);
+        let inputs: Vec<HostTensor> = art
+            .inputs
+            .iter()
+            .map(|spec| HostTensor::random_normal(spec, &mut rng))
+            .collect();
+        execute(art, &inputs).unwrap()
+    }
+
+    #[test]
+    fn every_builtin_conv_artifact_executes() {
+        let m = Manifest::builtin();
+        // one artifact per (direction, algo) family is enough for the unit
+        // sweep; the integration suites cover the full set
+        let mut seen = std::collections::BTreeSet::new();
+        for art in m.by_primitive("conv") {
+            let key = (art.direction.clone(), art.algo.clone(),
+                       art.dtype);
+            if !seen.insert(key) {
+                continue;
+            }
+            let out = run_sig(&m, &art.sig, 42);
+            assert_eq!(out.len(), 1, "{}", art.sig);
+            assert_eq!(out[0].spec, art.outputs[0], "{}", art.sig);
+        }
+    }
+
+    #[test]
+    fn fused_cba_equals_separate_pipeline() {
+        let m = Manifest::builtin();
+        let sig = "cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32";
+        let art = m.require(sig).unwrap().clone();
+        let mut rng = SplitMix64::new(5);
+        let inputs: Vec<HostTensor> = art
+            .inputs
+            .iter()
+            .map(|spec| HostTensor::random_normal(spec, &mut rng))
+            .collect();
+        let fused = execute(&art, &inputs).unwrap()[0].as_f32().unwrap();
+
+        let geom = geom_from_params(&art).unwrap();
+        let x = inputs[0].as_f32().unwrap();
+        let w = inputs[1].as_f32().unwrap();
+        let b = inputs[2].as_f32().unwrap();
+        let y = k::conv2d_fwd(&x, &w, &geom);
+        let y = k::bias_add(&y, &b, 4, 32, 28 * 28);
+        let y = k::act_fwd(&y, ActivationMode::Relu, 0.0);
+        assert_eq!(fused, y);
+    }
+
+    #[test]
+    fn unknown_primitive_rejected_at_compile() {
+        let art = Artifact::synthetic("bogus-sig", "quantum", "", "fwd",
+                                      vec![], vec![]);
+        let be = InterpBackend::new();
+        assert!(be.compile(Path::new("/nope"), &art).is_err());
+    }
+
+    #[test]
+    fn pool_sig_parser() {
+        assert_eq!(
+            parse_pool_sig("pool_fwd-max-n4c16h28w28k2x2u2p0-f32").unwrap(),
+            (2, 2, 2, 0));
+        assert_eq!(
+            parse_pool_sig("pool_bwd-max-n4c8h14w14k3x3u2p1-f32").unwrap(),
+            (3, 3, 2, 1));
+        assert!(parse_pool_sig("pool_fwd").is_err());
+    }
+
+    #[test]
+    fn int8_conv_outputs_integers() {
+        let m = Manifest::builtin();
+        let out = run_sig(&m, "conv_fwd-direct-n4c16h14w14k32r3s3u1v1p1q1l1j1g1-i8", 9);
+        let vals = out[0].as_f32().unwrap();
+        assert!(vals.iter().any(|v| *v != 0.0));
+        for v in &vals {
+            assert_eq!(*v, v.round());
+        }
+    }
+}

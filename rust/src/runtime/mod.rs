@@ -1,26 +1,32 @@
-//! Runtime layer: loads AOT'd HLO-text artifacts and executes them on a
-//! PJRT client — the analog of MIOpen's device-code compile + dispatch
-//! path (§III-C/D).
+//! Runtime layer: executes AOT'd computations — the analog of MIOpen's
+//! device-code compile + dispatch path (§III-C/D).
 //!
-//! Two backends sit behind the [`Backend`] trait:
-//! - [`CpuBackend`] — the real thing: `PjRtClient::cpu()` →
-//!   `HloModuleProto::from_text_file` → `compile` → `execute`.
+//! Three backends sit behind the [`Backend`] trait:
+//! - [`InterpBackend`] — the pure-Rust reference executor: dispatches on
+//!   the artifact's manifest entry and runs the primitive numerics ported
+//!   from `python/compile/kernels/ref.py`. Hermetic: needs no Python, no
+//!   PJRT, no artifact files. The default everywhere.
+//! - `CpuBackend` (feature `pjrt`) — the real thing: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute` over the
+//!   HLO-text artifacts `make artifacts` produces.
 //! - [`MockBackend`] — deterministic fake for unit tests and failure
 //!   injection (configurable compile/exec latency and error rates), the
 //!   analog of MIOpen's ability to enumerate kernels without a device.
 //!
 //! Host data travels as [`HostTensor`]s; conversion to/from `xla::Literal`
-//! happens only at the execution boundary.
+//! happens only at the PJRT execution boundary.
 
+pub mod interp;
 pub mod tensor;
 
+pub use interp::InterpBackend;
 pub use tensor::HostTensor;
 
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
-use crate::manifest::TensorSpec;
+use crate::manifest::Artifact;
 use crate::types::{MiopenError, Result};
 
 /// A compiled computation ready to run.
@@ -31,78 +37,88 @@ pub trait Executable {
     fn output_arity(&self) -> usize;
 }
 
-/// A compilation backend.
+/// A compilation backend. `path` is the on-disk HLO text location (unused
+/// by the interp backend, matched against by the mock's failure
+/// injection); `art` is the manifest entry — the authoritative contract
+/// for shapes, dtypes, and problem parameters.
 pub trait Backend {
-    /// Compile the HLO text at `path`. `outputs` is the manifest's output
-    /// spec (used to unpack the result tuple / fake results in the mock).
-    fn compile(&self, path: &std::path::Path, outputs: &[TensorSpec])
+    fn compile(&self, path: &std::path::Path, art: &Artifact)
         -> Result<Rc<dyn Executable>>;
     fn platform(&self) -> String;
 }
 
 // ---------------------------------------------------------------------------
-// CPU backend (PJRT)
+// CPU backend (PJRT, feature-gated)
 // ---------------------------------------------------------------------------
 
-pub struct CpuBackend {
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::CpuBackend;
 
-impl CpuBackend {
-    pub fn new() -> Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu()? })
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use super::*;
+    use crate::manifest::TensorSpec;
 
-impl Backend for CpuBackend {
-    fn compile(&self, path: &std::path::Path, outputs: &[TensorSpec])
-        -> Result<Rc<dyn Executable>> {
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Rc::new(PjrtExecutable { exe, outputs: outputs.to_vec() }))
+    pub struct CpuBackend {
+        client: xla::PjRtClient,
     }
 
-    fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
-
-struct PjrtExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    outputs: Vec<TensorSpec>,
-}
-
-impl Executable for PjrtExecutable {
-    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(HostTensor::to_literal)
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let lit = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| MiopenError::Runtime("no output buffer".into()))?
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: output is always a tuple.
-        let parts = lit.to_tuple()?;
-        if parts.len() != self.outputs.len() {
-            return Err(MiopenError::Runtime(format!(
-                "output arity mismatch: manifest {} vs tuple {}",
-                self.outputs.len(),
-                parts.len()
-            )));
+    impl CpuBackend {
+        pub fn new() -> Result<Self> {
+            Ok(Self { client: xla::PjRtClient::cpu()? })
         }
-        parts
-            .iter()
-            .zip(&self.outputs)
-            .map(|(l, spec)| HostTensor::from_literal(l, spec))
-            .collect()
     }
 
-    fn output_arity(&self) -> usize {
-        self.outputs.len()
+    impl Backend for CpuBackend {
+        fn compile(&self, path: &std::path::Path, art: &Artifact)
+            -> Result<Rc<dyn Executable>> {
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(Rc::new(PjrtExecutable { exe, outputs: art.outputs.clone() }))
+        }
+
+        fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+    }
+
+    struct PjrtExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        outputs: Vec<TensorSpec>,
+    }
+
+    impl Executable for PjrtExecutable {
+        fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(HostTensor::to_literal)
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let lit = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| MiopenError::Runtime("no output buffer".into()))?
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: output is always a tuple.
+            let parts = lit.to_tuple()?;
+            if parts.len() != self.outputs.len() {
+                return Err(MiopenError::Runtime(format!(
+                    "output arity mismatch: manifest {} vs tuple {}",
+                    self.outputs.len(),
+                    parts.len()
+                )));
+            }
+            parts
+                .iter()
+                .zip(&self.outputs)
+                .map(|(l, spec)| HostTensor::from_literal(l, spec))
+                .collect()
+        }
+
+        fn output_arity(&self) -> usize {
+            self.outputs.len()
+        }
     }
 }
 
@@ -143,7 +159,7 @@ impl MockBackend {
 }
 
 impl Backend for MockBackend {
-    fn compile(&self, path: &std::path::Path, outputs: &[TensorSpec])
+    fn compile(&self, path: &std::path::Path, art: &Artifact)
         -> Result<Rc<dyn Executable>> {
         let name = path.to_string_lossy().to_string();
         if self.cfg.fail_compile_containing.iter().any(|s| name.contains(s)) {
@@ -160,7 +176,7 @@ impl Backend for MockBackend {
             .unwrap_or(10);
         let fail = self.cfg.fail_exec_containing.iter().any(|s| name.contains(s));
         Ok(Rc::new(MockExecutable {
-            outputs: outputs.to_vec(),
+            outputs: art.outputs.clone(),
             exec_us,
             fail,
             name,
@@ -174,7 +190,7 @@ impl Backend for MockBackend {
 }
 
 struct MockExecutable {
-    outputs: Vec<TensorSpec>,
+    outputs: Vec<crate::manifest::TensorSpec>,
     exec_us: u64,
     fail: bool,
     name: String,
@@ -202,6 +218,7 @@ impl Executable for MockExecutable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::manifest::TensorSpec;
     use crate::types::DType;
     use std::path::Path;
 
@@ -209,11 +226,18 @@ mod tests {
         TensorSpec { shape: shape.to_vec(), dtype: DType::F32 }
     }
 
+    fn art(outputs: &[TensorSpec]) -> Artifact {
+        Artifact::synthetic("mock-test", "test", "", "fwd", vec![],
+                            outputs.to_vec())
+    }
+
     #[test]
     fn mock_backend_counts_and_fakes() {
         let be = MockBackend::new(MockConfig::default());
         let stats = be.stats_handle();
-        let exe = be.compile(Path::new("/x/a.hlo.txt"), &[spec(&[2, 3])]).unwrap();
+        let exe = be
+            .compile(Path::new("/x/a.hlo.txt"), &art(&[spec(&[2, 3])]))
+            .unwrap();
         let out = exe.run(&[]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].spec.shape, vec![2, 3]);
@@ -228,8 +252,10 @@ mod tests {
             fail_exec_containing: vec!["flaky".into()],
             ..Default::default()
         });
-        assert!(be.compile(Path::new("/x/bad.hlo.txt"), &[]).is_err());
-        let exe = be.compile(Path::new("/x/flaky.hlo.txt"), &[spec(&[1])]).unwrap();
+        assert!(be.compile(Path::new("/x/bad.hlo.txt"), &art(&[])).is_err());
+        let exe = be
+            .compile(Path::new("/x/flaky.hlo.txt"), &art(&[spec(&[1])]))
+            .unwrap();
         assert!(exe.run(&[]).is_err());
     }
 
@@ -239,9 +265,24 @@ mod tests {
             exec_us_by_file: vec![("slow".into(), 2000)],
             ..Default::default()
         });
-        let exe = be.compile(Path::new("/x/slow.hlo.txt"), &[spec(&[1])]).unwrap();
+        let exe = be
+            .compile(Path::new("/x/slow.hlo.txt"), &art(&[spec(&[1])]))
+            .unwrap();
         let t = Instant::now();
         exe.run(&[]).unwrap();
         assert!(t.elapsed().as_micros() >= 2000);
+    }
+
+    #[test]
+    fn interp_backend_platform_and_compile() {
+        let be = InterpBackend::new();
+        assert_eq!(be.platform(), "interp");
+        let m = crate::manifest::Manifest::builtin();
+        let a = m.require("act_fwd-relu-n4c16h28w28-f32").unwrap();
+        let exe = be.compile(Path::new("/virtual"), a).unwrap();
+        let neg = vec![-1.0; a.inputs[0].elem_count()];
+        let x = HostTensor::from_f32(&a.inputs[0].shape, &neg);
+        let out = exe.run(&[x]).unwrap();
+        assert!(out[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
     }
 }

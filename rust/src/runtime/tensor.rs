@@ -124,6 +124,17 @@ impl HostTensor {
             .collect())
     }
 
+    pub fn as_u32(&self) -> Result<Vec<u32>> {
+        if self.spec.dtype != DType::U32 {
+            return Err(MiopenError::Internal("as_u32 on non-u32".into()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
     pub fn scalar_f32(&self) -> Result<f32> {
         let v = self.as_f32()?;
         v.first().copied().ok_or_else(|| {
@@ -131,8 +142,9 @@ impl HostTensor {
         })
     }
 
-    // -- literal boundary ----------------------------------------------------
+    // -- literal boundary (PJRT only) ----------------------------------------
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         // Single-copy path for every dtype: hand the raw little-endian
         // bytes straight to XLA instead of materializing a typed Vec and
@@ -150,6 +162,7 @@ impl HostTensor {
             ty, &self.spec.shape, &self.data)?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
         let mut data = vec![0u8; spec.size_bytes()];
         match spec.dtype {

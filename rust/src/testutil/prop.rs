@@ -74,29 +74,77 @@ pub fn forall<T: std::fmt::Debug + 'static>(
     }
 }
 
-/// Greedy shrink for a vec-shaped counterexample: try dropping elements
-/// while the failure persists; returns the smallest failing input found.
-pub fn shrink_vec<T: Clone>(
-    mut input: Vec<T>,
-    still_fails: impl Fn(&[T]) -> bool,
-) -> Vec<T> {
-    loop {
-        let mut shrunk = false;
-        let mut i = 0;
-        while i < input.len() {
-            let mut cand = input.clone();
-            cand.remove(i);
-            if still_fails(&cand) {
-                input = cand;
-                shrunk = true;
-            } else {
-                i += 1;
-            }
-        }
-        if !shrunk {
-            return input;
+/// Like [`forall`], but on failure the counterexample is greedily
+/// minimized with `shrink` (a candidate producer: smaller variants of the
+/// input) before panicking. The panic message carries the seed, case
+/// index, original input AND the shrunk input, so the minimal failing
+/// case can be replayed directly.
+pub fn forall_shrink<T: std::fmt::Debug + Clone + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    shrink: impl Fn(&T) -> Vec<T>,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("MIOPEN_RS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = check(&input) {
+            let shrunk =
+                shrink_to_fixpoint(input.clone(), &shrink,
+                                   |t| check(t).is_err());
+            let shrunk_msg = check(&shrunk).err().unwrap_or_else(|| msg.clone());
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  \
+                 input: {input:?}\n  shrunk: {shrunk:?}\n  error: {shrunk_msg}"
+            );
         }
     }
+}
+
+/// Repeatedly replace `input` with the first still-failing shrink
+/// candidate until no candidate fails (or an iteration bound trips).
+pub fn shrink_to_fixpoint<T: Clone>(
+    mut input: T,
+    candidates: &impl Fn(&T) -> Vec<T>,
+    still_fails: impl Fn(&T) -> bool,
+) -> T {
+    for _ in 0..10_000 {
+        let Some(next) = candidates(&input)
+            .into_iter()
+            .find(|c| still_fails(c))
+        else {
+            return input;
+        };
+        input = next;
+    }
+    input
+}
+
+/// Shrink candidates for a vec: every copy with one element removed.
+pub fn vec_removals<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    (0..v.len())
+        .map(|i| {
+            let mut c = v.to_vec();
+            c.remove(i);
+            c
+        })
+        .collect()
+}
+
+/// Greedy shrink for a vec-shaped counterexample: try dropping elements
+/// while the failure persists; returns the smallest failing input found.
+/// (Convenience wrapper over [`shrink_to_fixpoint`] + [`vec_removals`].)
+pub fn shrink_vec<T: Clone>(
+    input: Vec<T>,
+    still_fails: impl Fn(&[T]) -> bool,
+) -> Vec<T> {
+    shrink_to_fixpoint(input, &|v: &Vec<T>| vec_removals(v),
+                       |v| still_fails(v))
 }
 
 #[cfg(test)]
@@ -117,6 +165,35 @@ mod tests {
     #[should_panic(expected = "property 'always-fails' failed")]
     fn forall_reports_failure() {
         forall("always-fails", &usize_in(0, 10), 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk: [7]")]
+    fn forall_shrink_minimizes_counterexample() {
+        // failure: vec contains a 7 — the shrunk case must be exactly [7]
+        forall_shrink(
+            "contains-seven",
+            &vec_of(usize_in(0, 9), usize_in(8, 12)),
+            500,
+            |v| vec_removals(v),
+            |v| {
+                if v.contains(&7) {
+                    Err("found a 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_to_fixpoint_stops_at_minimum() {
+        let out = shrink_to_fixpoint(
+            vec![1, 7, 3, 9, 7],
+            &|v: &Vec<i32>| vec_removals(v),
+            |v| v.contains(&7),
+        );
+        assert_eq!(out, vec![7]);
     }
 
     #[test]

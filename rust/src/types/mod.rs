@@ -116,33 +116,61 @@ pub fn packed_strides(dims: &[usize]) -> Vec<usize> {
     strides
 }
 
-/// Library error type (`miopenStatus_t` analog).
-#[derive(Debug, thiserror::Error)]
+/// Library error type (`miopenStatus_t` analog). Display/Error are
+/// hand-implemented: no external crates in the hermetic build.
+#[derive(Debug)]
 pub enum MiopenError {
-    #[error("bad descriptor: {0}")]
     BadDescriptor(String),
-    #[error("not applicable: {0}")]
     NotApplicable(String),
-    #[error("artifact missing: {0}")]
     ArtifactMissing(String),
-    #[error("manifest error: {0}")]
     Manifest(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("fusion plan rejected: {0}")]
     FusionRejected(String),
-    #[error("db error: {0}")]
     Db(String),
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
-    #[error("internal error: {0}")]
     Internal(String),
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
 }
 
+impl std::fmt::Display for MiopenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MiopenError::BadDescriptor(m) => write!(f, "bad descriptor: {m}"),
+            MiopenError::NotApplicable(m) => write!(f, "not applicable: {m}"),
+            MiopenError::ArtifactMissing(m) => {
+                write!(f, "artifact missing: {m}")
+            }
+            MiopenError::Manifest(m) => write!(f, "manifest error: {m}"),
+            MiopenError::Runtime(m) => write!(f, "runtime error: {m}"),
+            MiopenError::FusionRejected(m) => {
+                write!(f, "fusion plan rejected: {m}")
+            }
+            MiopenError::Db(m) => write!(f, "db error: {m}"),
+            MiopenError::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            MiopenError::Internal(m) => write!(f, "internal error: {m}"),
+            MiopenError::Io(e) => write!(f, "{e}"),
+            MiopenError::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MiopenError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MiopenError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MiopenError {
+    fn from(e: std::io::Error) -> Self {
+        MiopenError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for MiopenError {
     fn from(e: xla::Error) -> Self {
         MiopenError::Xla(e.to_string())

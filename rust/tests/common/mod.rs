@@ -1,4 +1,11 @@
 //! Shared helpers for the integration tests.
+//!
+//! `cpu_handle` always returns a working handle: PJRT CPU when the crate
+//! is built with the `pjrt` feature and `make artifacts` has run, the
+//! pure-Rust interp backend otherwise. There is no skip path — every
+//! integration suite executes real assertions on a clean machine.
+
+#![allow(dead_code)] // each test crate uses a subset of these helpers
 
 use std::path::PathBuf;
 
@@ -17,23 +24,18 @@ pub fn temp_db_dir(tag: &str) -> PathBuf {
     dir
 }
 
-/// Real-backend handle over the repo artifacts, or None if `make
-/// artifacts` hasn't run (tests skip gracefully).
-pub fn cpu_handle(tag: &str) -> Option<Handle> {
-    if !miopen_rs::testutil::artifacts_available() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(
-        Handle::new(HandleOptions {
-            backend: BackendChoice::Cpu,
-            db_dir: Some(temp_db_dir(tag)),
-            find_iters: 2,
-            warmup_iters: 1,
-            ..Default::default()
-        })
-        .expect("handle"),
-    )
+/// Handle over the best available real-numerics backend: PJRT over the
+/// repo artifacts when present (pjrt builds), the interp backend over the
+/// builtin manifest otherwise.
+pub fn cpu_handle(tag: &str) -> Handle {
+    Handle::new(HandleOptions {
+        backend: BackendChoice::auto(),
+        db_dir: Some(temp_db_dir(tag)),
+        find_iters: 2,
+        warmup_iters: 1,
+        ..Default::default()
+    })
+    .expect("handle")
 }
 
 /// Mock handle over a synthetic manifest. Dummy artifact files are

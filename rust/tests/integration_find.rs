@@ -19,7 +19,7 @@ fn fig6_problem() -> ConvProblem {
 
 #[test]
 fn find_ranks_all_applicable_algorithms() {
-    let Some(handle) = common::cpu_handle("find-rank") else { return };
+    let handle = common::cpu_handle("find-rank");
     let results = handle.find_convolution(&fig6_problem()).unwrap();
     let algos: Vec<&str> = results.iter().map(|r| r.algo.as_str()).collect();
     for expected in ["gemm", "direct", "implicit", "winograd"] {
@@ -41,7 +41,7 @@ fn algorithms_agree_numerically() {
     // The heart of the reproduction: every solver computes the same
     // convolution. Run all fwd artifacts for one config on identical
     // inputs and cross-check against the gemm baseline.
-    let Some(handle) = common::cpu_handle("find-numeric") else { return };
+    let handle = common::cpu_handle("find-numeric");
     let sig = fig6_problem().sig().unwrap();
     let base_sig = sig.artifact_sig("gemm", None);
     let inputs = common::seeded_inputs(&handle, &base_sig, 99).unwrap();
@@ -59,7 +59,7 @@ fn algorithms_agree_numerically() {
 
 #[test]
 fn backward_algorithms_agree() {
-    let Some(handle) = common::cpu_handle("find-bwd") else { return };
+    let handle = common::cpu_handle("find-bwd");
     let p = fig6_problem();
     for (dir, algos) in [
         (Direction::BackwardData, vec!["direct", "winograd"]),
@@ -87,7 +87,7 @@ fn backward_algorithms_agree() {
 
 #[test]
 fn find_db_memoizes_second_call() {
-    let Some(handle) = common::cpu_handle("find-memo") else { return };
+    let handle = common::cpu_handle("find-memo");
     let p = fig6_problem();
     let first = handle.find_convolution(&p).unwrap();
     let (exec_before, _) = handle.cache_stats();
@@ -102,9 +102,6 @@ fn find_db_memoizes_second_call() {
 
 #[test]
 fn find_db_persists_across_handles() {
-    if !miopen_rs::testutil::artifacts_available() {
-        return;
-    }
     let db_dir = common::temp_db_dir("find-persist");
     let p = fig6_problem();
     let best = {
@@ -133,7 +130,7 @@ fn find_db_persists_across_handles() {
 
 #[test]
 fn exhaustive_flag_rebenchmarks() {
-    let Some(handle) = common::cpu_handle("find-exh") else { return };
+    let handle = common::cpu_handle("find-exh");
     let p = fig6_problem();
     handle.find_convolution(&p).unwrap();
     let (exec_before, _) = handle.cache_stats();
@@ -148,7 +145,7 @@ fn exhaustive_flag_rebenchmarks() {
 
 #[test]
 fn rank_by_model_prefers_winograd_for_3x3() {
-    let Some(handle) = common::cpu_handle("find-model") else { return };
+    let handle = common::cpu_handle("find-model");
     let results = handle
         .find_convolution_opt(
             &fig6_problem(),
@@ -163,7 +160,7 @@ fn rank_by_model_prefers_winograd_for_3x3() {
 fn grouped_and_depthwise_conv_execute() {
     // paper §IV-A "Types of convolution": grouped (g=2) and depthwise
     // (g=C) configs route to the direct solver and execute.
-    let Some(handle) = common::cpu_handle("find-grouped") else { return };
+    let handle = common::cpu_handle("find-grouped");
     for (c, k, g, h) in [(32usize, 32usize, 32usize, 14usize),
                          (16, 32, 2, 14)] {
         let p = ConvProblem::forward(
@@ -188,7 +185,7 @@ fn grouped_and_depthwise_conv_execute() {
 fn int8_conv_is_exact() {
     // §I: int8 data-type support. i8 inputs, exact f32 accumulation —
     // every output must be an integer.
-    let Some(handle) = common::cpu_handle("find-int8") else { return };
+    let handle = common::cpu_handle("find-int8");
     let sig = "conv_fwd-direct-n4c16h14w14k32r3s3u1v1p1q1l1j1g1-i8";
     let inputs = common::seeded_inputs(&handle, sig, 77).unwrap();
     assert_eq!(inputs[0].spec.dtype, DType::I8);

@@ -27,7 +27,7 @@ fn cba_1x1_plan(k: usize) -> FusionPlan {
 
 #[test]
 fn cba_plan_compiles_and_matches_separate_ops() {
-    let Some(handle) = common::cpu_handle("fusion-cba") else { return };
+    let handle = common::cpu_handle("fusion-cba");
     let plan = cba_1x1_plan(32);
     let compiled = plan.compile(&handle).unwrap();
     assert_eq!(compiled.combination, "CBA");
@@ -55,7 +55,7 @@ fn cba_plan_compiles_and_matches_separate_ops() {
 
 #[test]
 fn bna_plan_compiles_and_matches_separate_ops() {
-    let Some(handle) = common::cpu_handle("fusion-bna") else { return };
+    let handle = common::cpu_handle("fusion-bna");
     // FIG7B entry (16, 28, 28), n=4
     let plan = FusionPlan::new(TensorDesc::nchw(4, 16, 28, 28, DType::F32))
         .add(FusionOp::BatchNorm { mode: BnMode::Spatial })
@@ -88,7 +88,7 @@ fn bna_plan_compiles_and_matches_separate_ops() {
 
 #[test]
 fn cbna_plan_executes() {
-    let Some(handle) = common::cpu_handle("fusion-cbna") else { return };
+    let handle = common::cpu_handle("fusion-cbna");
     for stride in [1usize, 2] {
         let plan = FusionPlan::new(TensorDesc::nchw(2, 8, 14, 14, DType::F32))
             .add(FusionOp::Conv {
@@ -117,7 +117,7 @@ fn cbna_plan_executes() {
 
 #[test]
 fn rejected_plan_does_not_compile() {
-    let Some(handle) = common::cpu_handle("fusion-reject") else { return };
+    let handle = common::cpu_handle("fusion-reject");
     // 4x4 filter CBNA is outside Table I
     let plan = FusionPlan::new(TensorDesc::nchw(2, 8, 14, 14, DType::F32))
         .add(FusionOp::Conv {
@@ -134,7 +134,7 @@ fn rejected_plan_does_not_compile() {
 
 #[test]
 fn accepted_plan_without_artifact_reports_missing() {
-    let Some(handle) = common::cpu_handle("fusion-missing") else { return };
+    let handle = common::cpu_handle("fusion-missing");
     // accepted by the mdgraph (CBA direct 1x1) but no artifact AOT'd for
     // this shape
     let plan = cba_1x1_plan(13);
@@ -148,7 +148,7 @@ fn accepted_plan_without_artifact_reports_missing() {
 
 #[test]
 fn compiled_plan_is_cached_for_reexecution() {
-    let Some(handle) = common::cpu_handle("fusion-cache") else { return };
+    let handle = common::cpu_handle("fusion-cache");
     let plan = cba_1x1_plan(32);
     let c1 = plan.compile(&handle).unwrap();
     let (stats1, _) = handle.cache_stats();

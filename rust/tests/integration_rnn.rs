@@ -8,7 +8,7 @@ use miopen_rs::primitives;
 
 #[test]
 fn lstm_fused_and_naive_agree() {
-    let Some(handle) = common::cpu_handle("rnn-agree") else { return };
+    let handle = common::cpu_handle("rnn-agree");
     // abl-rnn t16 b8 x32 h32 artifacts exist in both variants
     let fused_sig = "rnn-lstm-fused-t16b8x32h32-f32";
     let naive_sig = "rnn-lstm-naive-t16b8x32h32-f32";
@@ -26,7 +26,7 @@ fn lstm_fused_and_naive_agree() {
 
 #[test]
 fn rnn_forward_wrapper_routes_to_artifact() {
-    let Some(handle) = common::cpu_handle("rnn-wrapper") else { return };
+    let handle = common::cpu_handle("rnn-wrapper");
     let desc = RnnDesc::lstm(32);
     let sig = "rnn-lstm-fused-t16b8x32h32-f32";
     let inputs = common::seeded_inputs(&handle, sig, 3).unwrap();
@@ -40,7 +40,7 @@ fn rnn_forward_wrapper_routes_to_artifact() {
 
 #[test]
 fn bidirectional_doubles_hidden_axis() {
-    let Some(handle) = common::cpu_handle("rnn-bidir") else { return };
+    let handle = common::cpu_handle("rnn-bidir");
     let sig = "rnn-lstm-bidir-t16b8x32h32-f32";
     let inputs = common::seeded_inputs(&handle, sig, 5).unwrap();
     let out = handle.execute_sig(sig, &inputs).unwrap();
@@ -64,7 +64,7 @@ fn bidirectional_doubles_hidden_axis() {
 
 #[test]
 fn gru_and_vanilla_artifacts_run() {
-    let Some(handle) = common::cpu_handle("rnn-cells") else { return };
+    let handle = common::cpu_handle("rnn-cells");
     for sig in ["rnn-gru-fused-t16b8x32h32-f32",
                 "rnn-vanilla-fused-t16b8x32h32-f32"] {
         let inputs = common::seeded_inputs(&handle, sig, 9).unwrap();
@@ -78,7 +78,7 @@ fn gru_and_vanilla_artifacts_run() {
 
 #[test]
 fn ctc_loss_artifact_is_positive_and_finite() {
-    let Some(handle) = common::cpu_handle("rnn-ctc") else { return };
+    let handle = common::cpu_handle("rnn-ctc");
     let sig = "ctc_loss-b4t8v6l3-f32";
     let art = handle.manifest().require(sig).unwrap().clone();
 

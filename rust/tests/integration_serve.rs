@@ -11,7 +11,7 @@ use miopen_rs::serve::{generate_load, run_server, Request, ServeConfig};
 
 #[test]
 fn server_answers_all_requests_with_batching() {
-    let Some(handle) = common::cpu_handle("serve-basic") else { return };
+    let handle = common::cpu_handle("serve-basic");
     let infer = handle.manifest().require("cnn_infer-f32").unwrap();
     let image_elems: usize =
         infer.inputs.last().unwrap().shape[1..].iter().product();
@@ -46,7 +46,7 @@ fn server_answers_all_requests_with_batching() {
 
 #[test]
 fn server_rejects_malformed_request() {
-    let Some(handle) = common::cpu_handle("serve-badreq") else { return };
+    let handle = common::cpu_handle("serve-badreq");
     let (tx, rx) = mpsc::channel();
     let (resp_tx, _resp_rx) = mpsc::channel();
     tx.send(Request {
@@ -66,7 +66,7 @@ fn e2e_training_loss_decreases() {
     // The headline E2E validation (EXPERIMENTS.md e2e-train): a tiny CNN
     // trained for a few dozen steps, entirely in Rust over the AOT
     // train-step artifact built from the library's own Pallas kernels.
-    let Some(handle) = common::cpu_handle("serve-train") else { return };
+    let handle = common::cpu_handle("serve-train");
     let mut params = handle.execute_sig("cnn_init-f32", &[]).unwrap();
     let mut first_losses = Vec::new();
     let mut last_losses = Vec::new();
@@ -95,7 +95,7 @@ fn e2e_training_loss_decreases() {
 
 #[test]
 fn trained_model_predicts_its_corpus() {
-    let Some(handle) = common::cpu_handle("serve-acc") else { return };
+    let handle = common::cpu_handle("serve-acc");
     // train briefly, then measure accuracy on a fresh batch
     let mut params = handle.execute_sig("cnn_init-f32", &[]).unwrap();
     for step in 0..40 {

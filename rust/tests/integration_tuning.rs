@@ -20,7 +20,7 @@ fn tunable_problem() -> ConvProblem {
 
 #[test]
 fn tuning_evaluates_grid_and_persists_winner() {
-    let Some(handle) = common::cpu_handle("tune-grid") else { return };
+    let handle = common::cpu_handle("tune-grid");
     let problem = tunable_problem();
     let results = TuningSession::new(&handle)
         .tune_convolution(&problem)
@@ -46,7 +46,7 @@ fn tuning_evaluates_grid_and_persists_winner() {
 
 #[test]
 fn tuned_best_not_worse_than_default_within_noise() {
-    let Some(handle) = common::cpu_handle("tune-best") else { return };
+    let handle = common::cpu_handle("tune-best");
     let results = TuningSession::new(&handle)
         .tune_convolution(&tunable_problem())
         .unwrap();
@@ -61,7 +61,7 @@ fn tuned_best_not_worse_than_default_within_noise() {
 
 #[test]
 fn pruning_reduces_evaluations() {
-    let Some(handle) = common::cpu_handle("tune-prune") else { return };
+    let handle = common::cpu_handle("tune-prune");
     let full = TuningSession::new(&handle)
         .tune_convolution(&tunable_problem())
         .unwrap();
@@ -78,7 +78,7 @@ fn pruning_reduces_evaluations() {
 
 #[test]
 fn find_uses_tuned_variant_after_tuning() {
-    let Some(handle) = common::cpu_handle("tune-find") else { return };
+    let handle = common::cpu_handle("tune-find");
     let problem = tunable_problem();
     TuningSession::new(&handle).tune_convolution(&problem).unwrap();
     let tuned_bk = {
@@ -102,7 +102,7 @@ fn find_uses_tuned_variant_after_tuning() {
 
 #[test]
 fn untunable_problem_errors() {
-    let Some(handle) = common::cpu_handle("tune-none") else { return };
+    let handle = common::cpu_handle("tune-none");
     // a problem with no tuned artifact variants in the manifest
     let problem = ConvProblem::forward(
         TensorDesc::nchw(1, 3, 9, 9, DType::F32),
@@ -116,7 +116,7 @@ fn untunable_problem_errors() {
 
 #[test]
 fn tuned_variants_agree_numerically() {
-    let Some(handle) = common::cpu_handle("tune-numeric") else { return };
+    let handle = common::cpu_handle("tune-numeric");
     // all block_k variants compute the same convolution
     let sig = tunable_problem().sig().unwrap();
     let base = sig.artifact_sig("direct", None);

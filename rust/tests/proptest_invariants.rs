@@ -4,7 +4,7 @@
 mod common;
 
 use miopen_rs::cache::ExecCache;
-use miopen_rs::db::{FindDb, FindRecord, PerfDb};
+use miopen_rs::db::{DbStore, FindDb, FindRecord, PerfDb};
 use miopen_rs::descriptors::{ActivationMode, ConvDesc, ConvMode, FilterDesc,
                              TensorDesc};
 use miopen_rs::fusion::mdgraph::{MdGraph, OpKind, PlanAttrs};
@@ -154,6 +154,92 @@ fn prop_find_db_sorted_and_merge_idempotent() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_perf_db_read_after_write() {
+    // any set of tuned entries survives a save/load cycle through the
+    // DbStore byte-for-byte (ISSUE: perf-db read-after-write)
+    let entry_gen = miopen_rs::testutil::prop::vec_of(
+        Gen::new(|rng: &mut SplitMix64| {
+            (
+                format!("conv_fwd-n{}c{}-f32", 1 + rng.below(8),
+                        1 + rng.below(64)),
+                ["direct", "gemm", "implicit"][rng.below(3) as usize]
+                    .to_string(),
+                1 + rng.below(64) as i64,
+            )
+        }),
+        miopen_rs::testutil::prop::usize_in(1, 8),
+    );
+    let dir = common::temp_db_dir("prop-perfdb");
+    forall("perf-db-read-after-write", &entry_gen, 60, |entries| {
+        let mut db = PerfDb::default();
+        // PerfDb::set is last-write-wins; verify against the deduped view
+        let mut expect = std::collections::BTreeMap::new();
+        for (key, solver, bk) in entries {
+            db.set(key, solver,
+                   std::collections::BTreeMap::from([
+                       ("block_k".to_string(), *bk)]));
+            expect.insert((key.clone(), solver.clone()), *bk);
+        }
+        let store = DbStore::at(&dir);
+        store.save_perf_db(&db).map_err(|e| e.to_string())?;
+        let back = store.load_perf_db().map_err(|e| e.to_string())?;
+        if back != db {
+            return Err(format!("roundtrip changed db: {back:?} vs {db:?}"));
+        }
+        for ((key, solver), bk) in &expect {
+            match back.get(key, solver) {
+                Some(p) if p.get("block_k") == Some(bk) => {}
+                other => return Err(format!(
+                    "{key}/{solver}: wrote block_k={bk}, read {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_artifact_sig_rejects_truncations() {
+    // dropping any '-'-separated segment from a valid artifact signature
+    // must make the parser reject it (no silent mis-parse). Exercises the
+    // shrinking harness: a failure would minimize to the smallest
+    // truncation set that slips through.
+    let gen = sig_gen();
+    miopen_rs::testutil::prop::forall_shrink(
+        "sig-truncations-rejected",
+        &Gen::new(move |rng: &mut SplitMix64| {
+            let sig = gen.sample(rng);
+            let algo = ["gemm", "direct", "winograd"][rng.below(3) as usize];
+            let text = sig.artifact_sig(algo, Some(8));
+            text.split('-').map(str::to_string).collect::<Vec<String>>()
+        }),
+        CASES,
+        |segments| miopen_rs::testutil::prop::vec_removals(segments),
+        |segments| {
+            if segments.len() >= 5 {
+                return Ok(()); // the full signature — parseable by design
+            }
+            let text = segments.join("-");
+            match ProblemSig::parse_artifact(&text) {
+                Err(_) => Ok(()),
+                Ok(_) if segments.len() == 4 && text.ends_with("-bk8") => {
+                    // removing only the dtype cannot produce a valid sig
+                    Err(format!("parsed truncated '{text}'"))
+                }
+                Ok(_) => {
+                    // 4 segments without tuning suffix IS a valid full
+                    // signature (sig-algo-params-dtype)
+                    if segments.len() == 4 {
+                        Ok(())
+                    } else {
+                        Err(format!("parsed truncated '{text}'"))
+                    }
+                }
+            }
+        },
+    );
 }
 
 #[test]

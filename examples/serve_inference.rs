@@ -38,10 +38,17 @@ fn main() -> Result<()> {
     for (label, cfg) in [
         ("batched (dynamic batcher)",
          ServeConfig { batch_max: 16,
-                       batch_timeout: Duration::from_millis(5) }),
+                       batch_timeout: Duration::from_millis(5),
+                       ..Default::default() }),
         ("unbatched (batch_max=1)",
          ServeConfig { batch_max: 1,
-                       batch_timeout: Duration::from_millis(0) }),
+                       batch_timeout: Duration::from_millis(0),
+                       ..Default::default() }),
+        ("batched, 4 workers",
+         ServeConfig { batch_max: 16,
+                       batch_timeout: Duration::from_millis(5),
+                       workers: 4,
+                       ..Default::default() }),
     ] {
         let (tx, rx) = mpsc::channel();
         let loader = std::thread::spawn(move || {
@@ -56,10 +63,13 @@ fn main() -> Result<()> {
         println!("latency:         {}", stats.latency.summary());
         println!("mean batch size: {:.2}", stats.throughput.mean_batch_size());
         println!("throughput:      {:.1} req/s", stats.throughput.req_per_s());
+        println!("shard cache:     {:.0}% hits",
+                 stats.shard_cache.hit_rate() * 100.0);
     }
 
     println!("\nNOTE: batching amortizes the fixed per-execution cost over \
               up to 16 requests — the same launch-overhead argument as the \
-              paper's Fusion API, applied at the serving layer.");
+              paper's Fusion API, applied at the serving layer. Worker \
+              threads then scale that across cores (see `serve-bench`).");
     Ok(())
 }

@@ -1,6 +1,9 @@
 //! Bench harness (criterion stand-in, DESIGN.md §Substitutions #5):
 //! warmup + timed iterations with robust statistics, plus the table
-//! printer the figure-reproduction benches share.
+//! printer the figure-reproduction benches share. The serve-bench sweep
+//! (worker count × batch size × arrival rate) lives in [`serve`].
+
+pub mod serve;
 
 use std::time::Instant;
 

@@ -1,0 +1,232 @@
+//! serve-bench: sweep worker count × batch size × arrival rate over the
+//! synthetic CNN serving workload and record p50/p99 latency, throughput
+//! and cache hit rates — the scaling evidence for the multi-worker
+//! engine. Results serialize to `BENCH_serve.json` (see the `serve-bench`
+//! CLI subcommand and the CI smoke job).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::handle::Handle;
+use crate::serve::{generate_load, run_server, Request, ServeConfig};
+use crate::types::Result;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Requests per sweep point.
+    pub requests: usize,
+    pub workers: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    /// Poisson arrival rates (req/s); 0.0 = flood (no pacing).
+    pub rates: Vec<f64>,
+    pub batch_timeout: Duration,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            requests: 512,
+            workers: vec![1, 2, 4],
+            batch_sizes: vec![16],
+            rates: vec![0.0],
+            batch_timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One (workers, batch_max, rate) measurement.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub workers: usize,
+    pub batch_max: usize,
+    pub rate: f64,
+    pub served: usize,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub req_per_s: f64,
+    pub mean_batch: f64,
+    pub shard_hits: u64,
+    pub shard_lookups: u64,
+    pub shard_hit_rate: f64,
+}
+
+/// Run the full sweep. Each point drives `cfg.requests` synthetic CNN
+/// inference requests through [`run_server`] with a fresh load generator.
+pub fn run_sweep(handle: &Handle, cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
+    let infer = handle.manifest().require("cnn_infer-f32")?;
+    let image_elems: usize = infer
+        .inputs
+        .last()
+        .map(|s| s.shape[1..].iter().product())
+        .unwrap_or(0);
+
+    let mut points = Vec::new();
+    for &workers in &cfg.workers {
+        for &batch_max in &cfg.batch_sizes {
+            for &rate in &cfg.rates {
+                let serve_cfg = ServeConfig {
+                    batch_max,
+                    batch_timeout: cfg.batch_timeout,
+                    workers,
+                    ..Default::default()
+                };
+                let n = cfg.requests;
+                let (stats, served) = std::thread::scope(|scope| {
+                    let (tx, rx) = mpsc::channel::<Request>();
+                    let server =
+                        scope.spawn(|| run_server(handle, &serve_cfg, rx));
+                    let resp_rx = generate_load(&tx, n, rate, image_elems,
+                                                0x5E47E + workers as u64);
+                    drop(tx);
+                    let stats = server.join().expect("serve-bench server");
+                    let served = resp_rx.iter().count();
+                    (stats, served)
+                });
+                let stats = stats?;
+                points.push(SweepPoint {
+                    workers,
+                    batch_max,
+                    rate,
+                    served,
+                    p50_us: stats.latency.median(),
+                    p99_us: stats.latency.p99(),
+                    req_per_s: stats.throughput.req_per_s(),
+                    mean_batch: stats.throughput.mean_batch_size(),
+                    shard_hits: stats.shard_cache.hits,
+                    shard_lookups: stats.shard_cache.lookups,
+                    shard_hit_rate: stats.shard_cache.hit_rate(),
+                });
+            }
+        }
+    }
+    Ok(points)
+}
+
+/// Throughput ratio of `workers_b` over `workers_a`, compared only
+/// between points with the *same* (batch_max, rate) configuration so
+/// the number measures worker scaling, not batching differences. The
+/// flood-rate pairing is preferred (it saturates the pool); otherwise
+/// the best matched ratio is reported.
+pub fn speedup(points: &[SweepPoint], workers_a: usize, workers_b: usize)
+    -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for pa in points.iter().filter(|p| p.workers == workers_a) {
+        let matched = points.iter().find(|p| {
+            p.workers == workers_b
+                && p.batch_max == pa.batch_max
+                && p.rate == pa.rate
+        });
+        if let Some(pb) = matched {
+            if pa.req_per_s > 0.0 {
+                let s = pb.req_per_s / pa.req_per_s;
+                if pa.rate <= 0.0 {
+                    return Some(s); // flood pairing wins outright
+                }
+                best = Some(best.map_or(s, |x: f64| x.max(s)));
+            }
+        }
+    }
+    best
+}
+
+pub fn to_json(points: &[SweepPoint]) -> Json {
+    let arr: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("workers", Json::num(p.workers as f64)),
+                ("batch_max", Json::num(p.batch_max as f64)),
+                ("rate_req_s", Json::num(p.rate)),
+                ("served", Json::num(p.served as f64)),
+                ("p50_latency_us", Json::num(p.p50_us)),
+                ("p99_latency_us", Json::num(p.p99_us)),
+                ("throughput_req_s", Json::num(p.req_per_s)),
+                ("mean_batch_size", Json::num(p.mean_batch)),
+                ("shard_cache_hits", Json::num(p.shard_hits as f64)),
+                ("shard_cache_lookups", Json::num(p.shard_lookups as f64)),
+                ("shard_cache_hit_rate", Json::num(p.shard_hit_rate)),
+            ])
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("workload".to_string(),
+                Json::str("synthetic CNN inference (cnn_infer-f32)"));
+    root.insert("points".to_string(), Json::Arr(arr));
+    if let Some(s) = speedup(points, 1, 4) {
+        root.insert("speedup_4w_over_1w".to_string(), Json::num(s));
+    }
+    if let Some(s) = speedup(points, 1, 2) {
+        root.insert("speedup_2w_over_1w".to_string(), Json::num(s));
+    }
+    Json::Obj(root)
+}
+
+pub fn write_json(points: &[SweepPoint], path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(points).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(workers: usize, batch_max: usize, rate: f64, req_per_s: f64)
+        -> SweepPoint {
+        SweepPoint {
+            workers,
+            batch_max,
+            rate,
+            served: 10,
+            p50_us: 100.0,
+            p99_us: 200.0,
+            req_per_s,
+            mean_batch: 8.0,
+            shard_hits: 9,
+            shard_lookups: 10,
+            shard_hit_rate: 0.9,
+        }
+    }
+
+    #[test]
+    fn speedup_compares_matching_configs_only() {
+        // 4-worker@batch32 is fastest overall but must NOT be compared
+        // against 1-worker@batch16 — only equal (batch, rate) pairs count
+        let pts = vec![
+            point(1, 16, 0.0, 100.0),
+            point(4, 16, 0.0, 250.0),
+            point(4, 32, 0.0, 900.0),
+        ];
+        let s = speedup(&pts, 1, 4).unwrap();
+        assert!((s - 2.5).abs() < 1e-9);
+        assert!(speedup(&pts, 1, 8).is_none());
+    }
+
+    #[test]
+    fn speedup_prefers_flood_pairing() {
+        let pts = vec![
+            point(1, 16, 100.0, 50.0),
+            point(4, 16, 100.0, 60.0),
+            point(1, 16, 0.0, 100.0),
+            point(4, 16, 0.0, 300.0),
+        ];
+        let s = speedup(&pts, 1, 4).unwrap();
+        assert!((s - 3.0).abs() < 1e-9, "flood pairing must win: {s}");
+    }
+
+    #[test]
+    fn json_has_points_and_speedup() {
+        let pts = vec![point(1, 16, 0.0, 100.0), point(4, 16, 0.0, 250.0)];
+        let j = to_json(&pts);
+        assert_eq!(j.get("points").and_then(Json::as_arr).unwrap().len(), 2);
+        let s = j.get("speedup_4w_over_1w").and_then(Json::as_f64).unwrap();
+        assert!((s - 2.5).abs() < 1e-9);
+        // round-trips through the codec
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("points").and_then(Json::as_arr).unwrap().len(),
+                   2);
+    }
+}

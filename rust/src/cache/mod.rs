@@ -16,10 +16,9 @@
 //!   eviction — the warm path after the warmup iteration the paper
 //!   recommends.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::manifest::Manifest;
 use crate::runtime::{Backend, Executable};
@@ -34,14 +33,38 @@ pub struct CacheStats {
     pub evictions: u64,
 }
 
+impl CacheStats {
+    /// Accumulate another counter set (merging per-worker shard stats
+    /// into the server's global view).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.lookups += other.lookups;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+    }
+
+    /// Hit fraction over all lookups (0.0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+}
+
 /// In-memory cache of compiled executables with LRU eviction.
+///
+/// Thread-safe: the map lives behind a `Mutex` and executables are
+/// `Arc`-shared, so one cache can serve concurrent workers — or each
+/// worker can own a private shard (the serve engine does the latter to
+/// keep its warm path contention-free).
 pub struct ExecCache {
     capacity: usize,
-    inner: RefCell<ExecCacheInner>,
+    inner: Mutex<ExecCacheInner>,
 }
 
 struct ExecCacheInner {
-    map: HashMap<String, (u64, Rc<dyn Executable>)>,
+    map: HashMap<String, (u64, Arc<dyn Executable>)>,
     tick: u64,
     stats: CacheStats,
 }
@@ -51,7 +74,7 @@ impl ExecCache {
         assert!(capacity > 0);
         Self {
             capacity,
-            inner: RefCell::new(ExecCacheInner {
+            inner: Mutex::new(ExecCacheInner {
                 map: HashMap::new(),
                 tick: 0,
                 stats: CacheStats::default(),
@@ -60,11 +83,11 @@ impl ExecCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.inner.borrow().stats.clone()
+        self.inner.lock().unwrap().stats.clone()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.borrow().map.len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -72,31 +95,34 @@ impl ExecCache {
     }
 
     pub fn contains(&self, sig: &str) -> bool {
-        self.inner.borrow().map.contains_key(sig)
+        self.inner.lock().unwrap().map.contains_key(sig)
     }
 
     /// Get or compile-and-insert.
     pub fn get_or_compile(
         &self,
         sig: &str,
-        compile: impl FnOnce() -> Result<Rc<dyn Executable>>,
-    ) -> Result<Rc<dyn Executable>> {
+        compile: impl FnOnce() -> Result<Arc<dyn Executable>>,
+    ) -> Result<Arc<dyn Executable>> {
         {
-            let inner = &mut *self.inner.borrow_mut();
+            let inner = &mut *self.inner.lock().unwrap();
             inner.stats.lookups += 1;
             inner.tick += 1;
             let tick = inner.tick;
             if let Some((stamp, exe)) = inner.map.get_mut(sig) {
                 *stamp = tick;
                 inner.stats.hits += 1;
-                return Ok(Rc::clone(exe));
+                return Ok(Arc::clone(exe));
             }
             inner.stats.misses += 1;
         }
-        // compile outside the borrow (compile may be slow / reentrant)
+        // compile outside the lock (compile may be slow / reentrant);
+        // concurrent misses on the same sig may compile twice — last
+        // insert wins, both callers get a working executable.
         let exe = compile()?;
-        let mut inner = self.inner.borrow_mut();
-        if inner.map.len() >= self.capacity {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.len() >= self.capacity
+            && !inner.map.contains_key(sig) {
             if let Some(oldest) = inner
                 .map
                 .iter()
@@ -108,31 +134,31 @@ impl ExecCache {
             }
         }
         let tick = inner.tick;
-        inner.map.insert(sig.to_string(), (tick, Rc::clone(&exe)));
+        inner.map.insert(sig.to_string(), (tick, Arc::clone(&exe)));
         Ok(exe)
     }
 
     pub fn invalidate(&self, sig: &str) {
-        self.inner.borrow_mut().map.remove(sig);
+        self.inner.lock().unwrap().map.remove(sig);
     }
 
     pub fn clear(&self) {
-        self.inner.borrow_mut().map.clear();
+        self.inner.lock().unwrap().map.clear();
     }
 }
 
 /// Disk-level artifact index over the manifest directory.
 pub struct DiskCache {
-    stats: RefCell<CacheStats>,
+    stats: Mutex<CacheStats>,
 }
 
 impl DiskCache {
     pub fn new() -> Self {
-        Self { stats: RefCell::new(CacheStats::default()) }
+        Self { stats: Mutex::new(CacheStats::default()) }
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     /// Resolve a signature to its on-disk HLO file, verifying existence.
@@ -141,7 +167,7 @@ impl DiskCache {
     /// interp set) have no files on disk, so the existence check is
     /// skipped — the interp backend never reads the path.
     pub fn lookup(&self, manifest: &Manifest, sig: &str) -> Result<PathBuf> {
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         stats.lookups += 1;
         let art = manifest.get(sig).ok_or_else(|| {
             stats.misses += 1;
@@ -173,7 +199,7 @@ pub fn compile_cached(
     manifest: &Manifest,
     backend: &dyn Backend,
     sig: &str,
-) -> Result<Rc<dyn Executable>> {
+) -> Result<Arc<dyn Executable>> {
     exec_cache.get_or_compile(sig, || {
         let path = disk.lookup(manifest, sig)?;
         let art = manifest.require(sig)?;
@@ -198,8 +224,8 @@ mod tests {
         }
     }
 
-    fn compile_ok() -> Result<Rc<dyn Executable>> {
-        Ok(Rc::new(NullExec))
+    fn compile_ok() -> Result<Arc<dyn Executable>> {
+        Ok(Arc::new(NullExec))
     }
 
     #[test]
@@ -269,6 +295,42 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.hits + s.misses, s.lookups);
         assert!(cache.len() <= 2);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let cache = Arc::new(ExecCache::new(8));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let c = Arc::clone(&cache);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    c.get_or_compile(&format!("sig{}", (i + t) % 6),
+                                     compile_ok)
+                        .unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.lookups, 200);
+        assert_eq!(s.hits + s.misses, s.lookups);
+        assert!(cache.len() <= 8);
+    }
+
+    #[test]
+    fn stats_merge_and_hit_rate() {
+        let mut a = CacheStats { lookups: 4, hits: 3, misses: 1,
+                                 evictions: 0 };
+        let b = CacheStats { lookups: 6, hits: 3, misses: 3, evictions: 2 };
+        a.merge(&b);
+        assert_eq!(a.lookups, 10);
+        assert_eq!(a.hits, 6);
+        assert_eq!(a.evictions, 2);
+        assert!((a.hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
     }
 
     #[allow(dead_code)]

@@ -80,6 +80,11 @@ COMMANDS:
                  --sig <signature> [--iters N]
   serve        Batched CNN inference server on synthetic load
                  [--requests N] [--rate R] [--batch B] [--timeout-ms T]
+                 [--workers W]
+  serve-bench  Sweep workers x batch x arrival rate; writes
+               BENCH_serve.json (p50/p99, throughput, cache hit rates)
+                 [--requests N] [--workers 1,2,4] [--batches 16]
+                 [--rates 0] [--timeout-ms T] [--out FILE]
   train        E2E tiny-CNN training loop (same as examples/train_cnn)
                  [--steps N]
   fusion-check Check a fusion plan against the metadata graph

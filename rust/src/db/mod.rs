@@ -38,6 +38,14 @@ impl FindDb {
         self.entries.insert(key, records);
     }
 
+    /// Drop the entry for `key` (db-coherence: a tuning session
+    /// invalidates the find-db entry it has made stale, so the next find
+    /// re-benchmarks with the tuned variants instead of serving
+    /// pre-tuning times forever).
+    pub fn remove(&mut self, key: &str) -> Option<Vec<FindRecord>> {
+        self.entries.remove(key)
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

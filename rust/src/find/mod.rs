@@ -110,7 +110,15 @@ impl Handle {
 
         if !opts.exhaustive {
             if let Some(records) = self.find_db().get(&key) {
-                return Ok(self.records_to_perf(&sig, records, opts));
+                let cached = self.records_to_perf(&sig, records, opts);
+                if !cached.is_empty() {
+                    return Ok(cached);
+                }
+                // Every record was stale (algo gone or artifact no longer
+                // in the manifest — e.g. a find-db carried over to a
+                // machine with a different artifact set). Fall through to
+                // a fresh benchmark instead of failing later at
+                // compile_sig.
             }
         }
 
@@ -162,7 +170,7 @@ impl Handle {
         };
         results.sort_by(|a, b| sort_key(a).total_cmp(&sort_key(b)));
 
-        self.user_find.borrow_mut().insert(
+        self.user_find.lock().unwrap().insert(
             key,
             results
                 .iter()
@@ -177,18 +185,51 @@ impl Handle {
         Ok(results)
     }
 
+    /// Rehydrate a find-db entry into `ConvAlgoPerf`s for the warm path.
+    ///
+    /// Two coherence rules (the db-coherence contract, see README):
+    /// - The artifact signature is resolved through the merged perf-db
+    ///   exactly like the cold benchmark path, so a warm hit after a
+    ///   tuning session returns the *tuned* variant, not the default.
+    /// - Records whose solver is gone or whose artifact signature is
+    ///   absent from the current manifest are dropped; the caller falls
+    ///   back to a fresh benchmark when nothing survives.
     fn records_to_perf(&self, sig: &ProblemSig, records: &[FindRecord],
                        opts: &FindOptions) -> Vec<ConvAlgoPerf> {
-        let mut out: Vec<ConvAlgoPerf> = records
-            .iter()
-            .map(|r| ConvAlgoPerf {
+        let key = sig.db_key();
+        // Per-entry lookups (user shadows system) instead of a full
+        // merged clone — this is the warm path, called per request.
+        let user_perf = self.user_perf.lock().unwrap();
+        let solvers = crate::solvers::applicable(sig);
+        let mut out: Vec<ConvAlgoPerf> = Vec::with_capacity(records.len());
+        for r in records {
+            let Some(solver) = solvers.iter().find(|s| s.name() == r.algo)
+            else {
+                continue; // stale record: solver no longer applicable
+            };
+            let tuned = user_perf
+                .get(&key, solver.name())
+                .or_else(|| self.system_perf.get(&key, solver.name()))
+                .map(|params| solver.artifact_sig(sig, Some(params)))
+                .filter(|s| self.manifest.get(s).is_some());
+            let art_sig = match tuned {
+                Some(s) => s,
+                None => {
+                    let s = solver.artifact_sig(sig, None);
+                    if self.manifest.get(&s).is_none() {
+                        continue; // stale record: artifact left the set
+                    }
+                    s
+                }
+            };
+            out.push(ConvAlgoPerf {
                 algo: r.algo.clone(),
                 time_us: r.time_us,
                 modeled_time_us: r.modeled_time_us,
                 workspace_bytes: r.workspace_bytes,
-                artifact_sig: sig.artifact_sig(&r.algo, None),
-            })
-            .collect();
+                artifact_sig: art_sig,
+            });
+        }
         if opts.rank_by_model {
             out.sort_by(|a, b| a.modeled_time_us.total_cmp(&b.modeled_time_us));
         }

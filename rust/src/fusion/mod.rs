@@ -9,7 +9,7 @@
 
 pub mod mdgraph;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::descriptors::{ActivationDesc, BnMode, ConvDesc, FilterDesc,
                          TensorDesc};
@@ -177,7 +177,7 @@ pub struct CompiledFusionPlan {
     pub combination: String,
     pub conv_algo: String,
     pub input_arity: usize,
-    exe: Rc<dyn Executable>,
+    exe: Arc<dyn Executable>,
 }
 
 impl CompiledFusionPlan {

@@ -4,10 +4,14 @@
 //! two-level kernel cache, the artifact manifest, the find/perf databases
 //! (system + user overlay) and the GCN perf model. All primitive and
 //! fusion entry points hang off it.
+//!
+//! `Handle` is `Send + Sync`: the mutable state (user dbs, RNG, caches)
+//! is mutex-guarded and backends/executables are `Send + Sync`, so one
+//! handle can be shared by the serve engine's worker threads (see
+//! README, "Serving concurrency model").
 
-use std::cell::RefCell;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::cache::{compile_cached, CacheStats, DiskCache, ExecCache};
@@ -95,14 +99,22 @@ pub struct Handle {
     pub(crate) exec_cache: ExecCache,
     pub(crate) disk_cache: DiskCache,
     pub(crate) system_find: FindDb,
-    pub(crate) user_find: RefCell<FindDb>,
+    pub(crate) user_find: Mutex<FindDb>,
     pub(crate) system_perf: PerfDb,
-    pub(crate) user_perf: RefCell<PerfDb>,
+    pub(crate) user_perf: Mutex<PerfDb>,
     pub(crate) db_store: DbStore,
     pub(crate) model: GcnModel,
-    pub(crate) rng: RefCell<SplitMix64>,
+    pub(crate) rng: Mutex<SplitMix64>,
     pub(crate) find_iters: usize,
     pub(crate) warmup_iters: usize,
+}
+
+// Compile-time proof that a `&Handle` can cross threads (the serve
+// engine's workers rely on this).
+#[allow(dead_code)]
+fn _assert_handle_send_sync() {
+    fn is_send_sync<T: Send + Sync>() {}
+    is_send_sync::<Handle>();
 }
 
 impl Handle {
@@ -146,12 +158,12 @@ impl Handle {
             exec_cache: ExecCache::new(opts.exec_cache_capacity),
             disk_cache: DiskCache::new(),
             system_find,
-            user_find: RefCell::new(user_find),
+            user_find: Mutex::new(user_find),
             system_perf,
-            user_perf: RefCell::new(user_perf),
+            user_perf: Mutex::new(user_perf),
             db_store,
             model: GcnModel::default(),
-            rng: RefCell::new(SplitMix64::new(opts.seed)),
+            rng: Mutex::new(SplitMix64::new(opts.seed)),
             find_iters: opts.find_iters.max(1),
             warmup_iters: opts.warmup_iters,
         })
@@ -167,12 +179,12 @@ impl Handle {
             exec_cache: ExecCache::new(64),
             disk_cache: DiskCache::new(),
             system_find: FindDb::default(),
-            user_find: RefCell::new(FindDb::default()),
+            user_find: Mutex::new(FindDb::default()),
             system_perf: PerfDb::default(),
-            user_perf: RefCell::new(PerfDb::default()),
+            user_perf: Mutex::new(PerfDb::default()),
             db_store: DbStore::at(db_dir),
             model: GcnModel::default(),
-            rng: RefCell::new(SplitMix64::new(7)),
+            rng: Mutex::new(SplitMix64::new(7)),
             find_iters: 2,
             warmup_iters: 1,
         }
@@ -190,19 +202,32 @@ impl Handle {
         &self.model
     }
 
+    /// The user db store (`save_dbs` persists here).
+    pub fn db_store(&self) -> &DbStore {
+        &self.db_store
+    }
+
     pub fn cache_stats(&self) -> (CacheStats, CacheStats) {
         (self.exec_cache.stats(), self.disk_cache.stats())
     }
 
     /// Compile (through both cache levels) the artifact with signature `sig`.
-    pub fn compile_sig(&self, sig: &str) -> Result<Rc<dyn Executable>> {
-        compile_cached(&self.exec_cache, &self.disk_cache, &self.manifest,
+    pub fn compile_sig(&self, sig: &str) -> Result<Arc<dyn Executable>> {
+        self.compile_sig_with(&self.exec_cache, sig)
+    }
+
+    /// Compile through a caller-owned exec-cache shard (the serve
+    /// engine's workers each keep a private warm shard so the hot path
+    /// never contends on the handle's shared cache lock).
+    pub fn compile_sig_with(&self, cache: &ExecCache, sig: &str)
+        -> Result<Arc<dyn Executable>> {
+        compile_cached(cache, &self.disk_cache, &self.manifest,
                        self.backend.as_ref(), sig)
     }
 
     /// Compile bypassing the in-memory cache (cold-path measurement for
     /// the cache ablation bench).
-    pub fn compile_sig_cold(&self, sig: &str) -> Result<Rc<dyn Executable>> {
+    pub fn compile_sig_cold(&self, sig: &str) -> Result<Arc<dyn Executable>> {
         let path = self.disk_cache.lookup(&self.manifest, sig)?;
         let art = self.manifest.require(sig)?;
         self.backend.compile(&path, art)
@@ -210,6 +235,14 @@ impl Handle {
 
     /// Execute an artifact by signature with the given inputs.
     pub fn execute_sig(&self, sig: &str, inputs: &[HostTensor])
+        -> Result<Vec<HostTensor>> {
+        self.execute_sig_with(&self.exec_cache, sig, inputs)
+    }
+
+    /// Execute via a caller-owned exec-cache shard (shape-checked like
+    /// [`Handle::execute_sig`]).
+    pub fn execute_sig_with(&self, cache: &ExecCache, sig: &str,
+                            inputs: &[HostTensor])
         -> Result<Vec<HostTensor>> {
         let art = self.manifest.require(sig)?;
         if inputs.len() != art.inputs.len() {
@@ -227,14 +260,14 @@ impl Handle {
                 )));
             }
         }
-        self.compile_sig(sig)?.run(inputs)
+        self.compile_sig_with(cache, sig)?.run(inputs)
     }
 
     /// Generate manifest-conformant random inputs for an artifact (the
     /// find step's benchmark data).
     pub fn random_inputs(&self, sig: &str) -> Result<Vec<HostTensor>> {
         let art = self.manifest.require(sig)?;
-        let mut rng = self.rng.borrow_mut();
+        let mut rng = self.rng.lock().unwrap();
         Ok(art
             .inputs
             .iter()
@@ -244,7 +277,7 @@ impl Handle {
 
     /// Time one executable: `warmup_iters` untimed + `find_iters` timed
     /// runs, reporting the median (µs).
-    pub fn time_exec(&self, exe: &Rc<dyn Executable>, inputs: &[HostTensor])
+    pub fn time_exec(&self, exe: &Arc<dyn Executable>, inputs: &[HostTensor])
         -> Result<f64> {
         for _ in 0..self.warmup_iters {
             exe.run(inputs)?;
@@ -261,18 +294,18 @@ impl Handle {
 
     /// Merged find-db view (user shadows system).
     pub fn find_db(&self) -> FindDb {
-        self.system_find.merged_with(&self.user_find.borrow())
+        self.system_find.merged_with(&self.user_find.lock().unwrap())
     }
 
     /// Merged perf-db view.
     pub fn perf_db(&self) -> PerfDb {
-        self.system_perf.merged_with(&self.user_perf.borrow())
+        self.system_perf.merged_with(&self.user_perf.lock().unwrap())
     }
 
     /// Persist the user dbs (find results + tuned params survive the
     /// process, §III-B "serialized to a designated directory").
     pub fn save_dbs(&self) -> Result<()> {
-        self.db_store.save_find_db(&self.user_find.borrow())?;
-        self.db_store.save_perf_db(&self.user_perf.borrow())
+        self.db_store.save_find_db(&self.user_find.lock().unwrap())?;
+        self.db_store.save_perf_db(&self.user_perf.lock().unwrap())
     }
 }

@@ -9,8 +9,8 @@
 //! - **L3** (this crate): the MIOpen library proper — descriptors, the
 //!   solver registry, the find step, auto-tuning with a persistent perf-db,
 //!   two-level kernel caching, the fusion API with its constraint metadata
-//!   graph, and a batched inference driver. Python never runs at request
-//!   time; the binary is self-contained once `artifacts/` exists.
+//!   graph, and a multi-worker batched inference engine. Python never runs
+//!   at request time; the binary is self-contained once `artifacts/` exists.
 //!
 //! Backend matrix: the default build is hermetic — every pipeline runs on
 //! [`runtime::InterpBackend`], a pure-Rust reference executor serving the

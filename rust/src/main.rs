@@ -74,6 +74,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tune") => cmd_tune(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("serve-bench") => cmd_serve_bench(args),
         Some("train") => cmd_train(args),
         Some("fusion-check") => cmd_fusion_check(args),
         Some("tables") => cmd_tables(),
@@ -162,6 +163,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_max: args.opt_usize("batch", 16),
         batch_timeout: Duration::from_millis(
             args.opt_usize("timeout-ms", 5) as u64),
+        workers: args.opt_usize("workers", 1),
+        ..Default::default()
     };
     let infer = handle.manifest().require("cnn_infer-f32")?;
     let image_elems: usize =
@@ -174,10 +177,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = run_server(&handle, &cfg, rx)?;
     let responses = loader.join().expect("load generator panicked");
     let served = responses.iter().count();
-    println!("served {served}/{n} requests");
+    println!("served {served}/{n} requests with {} worker(s)",
+             stats.per_worker.len());
     println!("latency: {}", stats.latency.summary());
     println!("mean batch size: {:.2}", stats.throughput.mean_batch_size());
     println!("throughput: {:.1} req/s", stats.throughput.req_per_s());
+    println!("shard cache: {:.0}% hits over {} lookups",
+             stats.shard_cache.hit_rate() * 100.0,
+             stats.shard_cache.lookups);
+    Ok(())
+}
+
+/// Parse a comma-separated list option ("1,2,4") with a default;
+/// unparseable tokens are dropped, an all-bad value falls back whole.
+fn parse_list<T: std::str::FromStr + Clone>(args: &Args, name: &str,
+                                            default: &[T]) -> Vec<T> {
+    match args.opt(name) {
+        Some(v) => {
+            let parsed: Vec<T> =
+                v.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+            if parsed.is_empty() { default.to_vec() } else { parsed }
+        }
+        None => default.to_vec(),
+    }
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use miopen_rs::bench::serve as sb;
+
+    let handle = make_handle(args)?;
+    let cfg = sb::SweepConfig {
+        requests: args.opt_usize("requests", 512),
+        workers: parse_list(args, "workers", &[1, 2, 4]),
+        batch_sizes: parse_list(args, "batches", &[16]),
+        rates: parse_list(args, "rates", &[0.0]),
+        batch_timeout: Duration::from_millis(
+            args.opt_usize("timeout-ms", 2) as u64),
+    };
+    println!("serve-bench: {} requests/point, workers {:?}, batches {:?}, \
+              rates {:?}",
+             cfg.requests, cfg.workers, cfg.batch_sizes, cfg.rates);
+
+    let points = sb::run_sweep(&handle, &cfg)?;
+
+    let mut table = miopen_rs::bench::Table::new(
+        &["workers", "batch", "rate", "served", "p50_us", "p99_us",
+          "req/s", "mean_batch", "shard_hit%"]);
+    for p in &points {
+        table.row(vec![
+            p.workers.to_string(),
+            p.batch_max.to_string(),
+            if p.rate <= 0.0 { "flood".into() }
+            else { format!("{:.0}", p.rate) },
+            p.served.to_string(),
+            format!("{:.0}", p.p50_us),
+            format!("{:.0}", p.p99_us),
+            format!("{:.1}", p.req_per_s),
+            format!("{:.2}", p.mean_batch),
+            format!("{:.0}", p.shard_hit_rate * 100.0),
+        ]);
+    }
+    table.print();
+
+    if let Some(s) = sb::speedup(&points, 1, 4) {
+        println!("throughput speedup, 4 workers vs 1: {s:.2}x");
+    }
+    if let Some(s) = sb::speedup(&points, 1, 2) {
+        println!("throughput speedup, 2 workers vs 1: {s:.2}x");
+    }
+
+    let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_serve.json"));
+    sb::write_json(&points, &out)?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 

@@ -15,6 +15,12 @@ impl TimingStats {
         self.samples.push(us);
     }
 
+    /// Fold another sample set into this one (merging per-worker serve
+    /// stats into the global view).
+    pub fn merge(&mut self, other: &TimingStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn count(&self) -> usize {
         self.samples.len()
     }
@@ -131,6 +137,18 @@ mod tests {
         assert_eq!(s.median(), 7.0);
         assert_eq!(s.p99(), 7.0);
         assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn merge_concatenates_samples() {
+        let mut a = TimingStats::new();
+        a.record(1.0);
+        a.record(3.0);
+        let mut b = TimingStats::new();
+        b.record(2.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.median(), 2.0);
     }
 
     #[test]

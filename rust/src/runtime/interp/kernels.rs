@@ -137,8 +137,9 @@ pub fn conv2d_fwd_im2col(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
                 }
             }
         }
-        // y[n] = W (K, CRS) @ col (CRS, HoWo)
-        let out = matmul(w, &col, g.k, crs, howo);
+        // y[n] = W (K, CRS) @ col (CRS, HoWo) — row-split across the
+        // scoped-thread pool when the GEMM is big enough to amortize it
+        let out = matmul_par(w, &col, g.k, crs, howo);
         y[n * g.k * howo..(n + 1) * g.k * howo].copy_from_slice(&out);
     }
     y
@@ -251,6 +252,64 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
             }
         }
     }
+    out
+}
+
+/// Worker-thread count for the parallel GEMM row-split: the
+/// MIOPEN_RS_GEMM_THREADS env var, else available parallelism, clamped
+/// to [1, 8] (a *small* pool — the serve engine already parallelizes
+/// across batches, so the inner split stays modest).
+pub fn gemm_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("MIOPEN_RS_GEMM_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+            .clamp(1, 8)
+    })
+}
+
+/// Spawning threads only pays off above this many multiply-adds.
+const PAR_GEMM_MIN_MACS: usize = 1 << 21;
+
+/// `matmul` with the output rows split across a scoped-thread pool.
+/// Each thread owns a disjoint row range of `out`, so the per-row
+/// accumulation order — and therefore the result — is bit-identical to
+/// the serial path. Falls back to [`matmul`] for small problems.
+pub fn matmul_par(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    let threads = gemm_threads().min(m.max(1));
+    if threads <= 1 || m * k * n < PAR_GEMM_MIN_MACS {
+        return matmul(a, b, m, k, n);
+    }
+    let mut out = vec![0f32; m * n];
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ti, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            scope.spawn(move || {
+                let row0 = ti * rows_per;
+                for i in 0..chunk.len() / n {
+                    let arow = (row0 + i) * k;
+                    let orow = i * n;
+                    for kk in 0..k {
+                        let av = a[arow + kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = kk * n;
+                        for jj in 0..n {
+                            chunk[orow + jj] += av * b[brow + jj];
+                        }
+                    }
+                }
+            });
+        }
+    });
     out
 }
 
@@ -1158,5 +1217,28 @@ mod tests {
         // a^T laid out as (3,2) -> transpose back
         let at = [1.0, 4.0, 2.0, 5.0, 3.0, 6.0];
         assert_eq!(matmul_tn(&at, &b, 3, 2, 2), c);
+    }
+
+    #[test]
+    fn matmul_par_bit_identical_above_threshold() {
+        // (64, 256) @ (256, 192) = 3.1M MACs, above PAR_GEMM_MIN_MACS
+        let (m, k, n) = (64usize, 256usize, 192usize);
+        assert!(m * k * n >= PAR_GEMM_MIN_MACS);
+        let a: Vec<f32> = (0..m * k)
+            .map(|i| ((i * 37 % 101) as f32 - 50.0) / 25.0)
+            .collect();
+        let b: Vec<f32> = (0..k * n)
+            .map(|i| ((i * 53 % 97) as f32 - 48.0) / 31.0)
+            .collect();
+        // the per-row accumulation order is identical, so the parallel
+        // path must be bit-identical, not just close
+        assert_eq!(matmul_par(&a, &b, m, k, n), matmul(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn matmul_par_small_falls_back_to_serial() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        assert_eq!(matmul_par(&a, &b, 2, 2, 2), matmul(&a, &b, 2, 2, 2));
     }
 }

@@ -17,7 +17,7 @@ pub mod cnn;
 pub mod kernels;
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::descriptors::ActivationMode;
 use crate::manifest::{Artifact, TensorSpec};
@@ -42,9 +42,9 @@ impl Default for InterpBackend {
 
 impl Backend for InterpBackend {
     fn compile(&self, _path: &Path, art: &Artifact)
-        -> Result<Rc<dyn Executable>> {
+        -> Result<Arc<dyn Executable>> {
         check_supported(art)?;
-        Ok(Rc::new(InterpExecutable { art: art.clone() }))
+        Ok(Arc::new(InterpExecutable { art: art.clone() }))
     }
 
     fn platform(&self) -> String {

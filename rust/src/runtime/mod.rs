@@ -22,15 +22,17 @@ pub mod tensor;
 pub use interp::InterpBackend;
 pub use tensor::HostTensor;
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::manifest::Artifact;
 use crate::types::{MiopenError, Result};
 
-/// A compiled computation ready to run.
-pub trait Executable {
+/// A compiled computation ready to run. `Send + Sync` so compiled
+/// executables can be shared across the serve engine's worker threads
+/// (every implementation is immutable after compile, or guards its
+/// mutable state with a lock).
+pub trait Executable: Send + Sync {
     /// Execute with host inputs; returns the flattened output tuple.
     fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
     /// Declared output arity (from the manifest).
@@ -40,10 +42,11 @@ pub trait Executable {
 /// A compilation backend. `path` is the on-disk HLO text location (unused
 /// by the interp backend, matched against by the mock's failure
 /// injection); `art` is the manifest entry — the authoritative contract
-/// for shapes, dtypes, and problem parameters.
-pub trait Backend {
+/// for shapes, dtypes, and problem parameters. `Send + Sync` so one
+/// `Handle` can be driven from many worker threads.
+pub trait Backend: Send + Sync {
     fn compile(&self, path: &std::path::Path, art: &Artifact)
-        -> Result<Rc<dyn Executable>>;
+        -> Result<Arc<dyn Executable>>;
     fn platform(&self) -> String;
 }
 
@@ -71,11 +74,11 @@ mod pjrt_backend {
 
     impl Backend for CpuBackend {
         fn compile(&self, path: &std::path::Path, art: &Artifact)
-            -> Result<Rc<dyn Executable>> {
+            -> Result<Arc<dyn Executable>> {
             let proto = xla::HloModuleProto::from_text_file(path)?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self.client.compile(&comp)?;
-            Ok(Rc::new(PjrtExecutable { exe, outputs: art.outputs.clone() }))
+            Ok(Arc::new(PjrtExecutable { exe, outputs: art.outputs.clone() }))
         }
 
         fn platform(&self) -> String {
@@ -145,28 +148,28 @@ pub struct MockStats {
 
 pub struct MockBackend {
     cfg: MockConfig,
-    stats: Rc<RefCell<MockStats>>,
+    stats: Arc<Mutex<MockStats>>,
 }
 
 impl MockBackend {
     pub fn new(cfg: MockConfig) -> Self {
-        Self { cfg, stats: Rc::new(RefCell::new(MockStats::default())) }
+        Self { cfg, stats: Arc::new(Mutex::new(MockStats::default())) }
     }
 
-    pub fn stats_handle(&self) -> Rc<RefCell<MockStats>> {
-        Rc::clone(&self.stats)
+    pub fn stats_handle(&self) -> Arc<Mutex<MockStats>> {
+        Arc::clone(&self.stats)
     }
 }
 
 impl Backend for MockBackend {
     fn compile(&self, path: &std::path::Path, art: &Artifact)
-        -> Result<Rc<dyn Executable>> {
+        -> Result<Arc<dyn Executable>> {
         let name = path.to_string_lossy().to_string();
         if self.cfg.fail_compile_containing.iter().any(|s| name.contains(s)) {
             return Err(MiopenError::Runtime(format!(
                 "mock compile failure for {name}")));
         }
-        self.stats.borrow_mut().compiles += 1;
+        self.stats.lock().unwrap().compiles += 1;
         let exec_us = self
             .cfg
             .exec_us_by_file
@@ -175,12 +178,12 @@ impl Backend for MockBackend {
             .map(|(_, us)| *us)
             .unwrap_or(10);
         let fail = self.cfg.fail_exec_containing.iter().any(|s| name.contains(s));
-        Ok(Rc::new(MockExecutable {
+        Ok(Arc::new(MockExecutable {
             outputs: art.outputs.clone(),
             exec_us,
             fail,
             name,
-            stats: Rc::clone(&self.stats),
+            stats: Arc::clone(&self.stats),
         }))
     }
 
@@ -194,7 +197,7 @@ struct MockExecutable {
     exec_us: u64,
     fail: bool,
     name: String,
-    stats: Rc<RefCell<MockStats>>,
+    stats: Arc<Mutex<MockStats>>,
 }
 
 impl Executable for MockExecutable {
@@ -203,7 +206,7 @@ impl Executable for MockExecutable {
             return Err(MiopenError::Runtime(format!(
                 "mock exec failure for {}", self.name)));
         }
-        self.stats.borrow_mut().execs += 1;
+        self.stats.lock().unwrap().execs += 1;
         // busy-wait so find-step timings are observable and stable
         let start = Instant::now();
         while start.elapsed().as_micros() < self.exec_us as u128 {}
@@ -241,8 +244,8 @@ mod tests {
         let out = exe.run(&[]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].spec.shape, vec![2, 3]);
-        assert_eq!(stats.borrow().compiles, 1);
-        assert_eq!(stats.borrow().execs, 1);
+        assert_eq!(stats.lock().unwrap().compiles, 1);
+        assert_eq!(stats.lock().unwrap().execs, 1);
     }
 
     #[test]

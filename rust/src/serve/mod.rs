@@ -1,15 +1,27 @@
-//! Batched inference driver — the library-as-deployed validation path
-//! (DESIGN.md S14).
+//! Multi-worker batched inference engine — the library-as-deployed
+//! validation path (DESIGN.md S14).
 //!
-//! MIOpen itself is a primitives library; this module is the thin serving
+//! MIOpen itself is a primitives library; this module is the serving
 //! coordinator a framework would put on top: a request queue, a dynamic
-//! batcher (batch up to the model's AOT batch size or a timeout, whichever
-//! first), and a single executor loop that owns the PJRT objects (they are
-//! not `Send`; channel-based ownership is the honest design on CPU).
+//! batcher (batch up to the model's AOT batch size or a timeout,
+//! whichever first), and **N worker threads** pulling batches from one
+//! shared queue. Each worker owns a private warm exec-cache shard, so the
+//! hot path never contends on a cache lock; per-worker [`WorkerStats`]
+//! merge into the global [`ServerStats`] view when the queue drains.
+//!
+//! Everything the workers touch is `Send + Sync` (`Backend`,
+//! `Executable`, the mutex-guarded `Handle` state), so the workers borrow
+//! one `&Handle` through `std::thread::scope` — no `Arc<Handle>` in the
+//! public API, and the single-worker configuration degenerates to the
+//! old one-executor design.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cache::{CacheStats, ExecCache};
 use crate::handle::Handle;
 use crate::metrics::{TimingStats, Throughput};
 use crate::runtime::HostTensor;
@@ -38,12 +50,33 @@ pub struct ServeConfig {
     pub batch_max: usize,
     /// Flush a partial batch after this long.
     pub batch_timeout: Duration,
+    /// Worker threads pulling from the shared batching queue.
+    pub workers: usize,
+    /// Capacity of each worker's private exec-cache shard.
+    pub shard_capacity: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { batch_max: 16, batch_timeout: Duration::from_millis(5) }
+        Self {
+            batch_max: 16,
+            batch_timeout: Duration::from_millis(5),
+            workers: 1,
+            shard_capacity: 32,
+        }
     }
+}
+
+/// Per-worker accounting, merged into [`ServerStats`].
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub latency: TimingStats,
+    pub batch_sizes: TimingStats,
+    pub requests: u64,
+    pub batches: u64,
+    /// This worker's private exec-cache shard counters.
+    pub cache: CacheStats,
 }
 
 #[derive(Debug, Default)]
@@ -51,10 +84,98 @@ pub struct ServerStats {
     pub latency: TimingStats,
     pub batch_sizes: TimingStats,
     pub throughput: Throughput,
+    /// Merged exec-cache counters across all worker shards.
+    pub shard_cache: CacheStats,
+    pub per_worker: Vec<WorkerStats>,
 }
 
-/// Run the serving loop until the request channel closes. Executes the
-/// `cnn_infer` artifact; model parameters come from `cnn_init`.
+// ---------------------------------------------------------------------------
+// Shared batching queue
+// ---------------------------------------------------------------------------
+
+/// MPMC request queue with close semantics: the feeder pushes, workers
+/// pop batches (first request blocks, the rest accumulate until
+/// `batch_max` or the batching window closes).
+struct BatchQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+struct QueueInner {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+impl BatchQueue {
+    fn new() -> Self {
+        Self {
+            inner: Mutex::new(QueueInner { q: VecDeque::new(),
+                                           closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, req: Request) {
+        self.inner.lock().unwrap().q.push_back(req);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Pop the next batch: block for the first request (None once the
+    /// queue is closed AND drained), then keep accumulating until
+    /// `batch_max` requests or `timeout` past the first one.
+    fn next_batch(&self, batch_max: usize, timeout: Duration)
+        -> Option<Vec<Request>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.q.is_empty() {
+                break;
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+        let mut batch = Vec::with_capacity(batch_max);
+        let deadline = Instant::now() + timeout;
+        loop {
+            while batch.len() < batch_max {
+                match inner.q.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+            if batch.len() >= batch_max || inner.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, wait) =
+                self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if wait.timed_out() && inner.q.is_empty() {
+                break;
+            }
+        }
+        Some(batch)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The serving engine
+// ---------------------------------------------------------------------------
+
+/// Run the serving engine until the request channel closes: the calling
+/// thread feeds the shared queue while `cfg.workers` scoped workers pull
+/// batches from it. Executes the `cnn_infer` artifact; model parameters
+/// come from `cnn_init`. Returns merged stats; the first worker error
+/// (if any) is propagated after the queue drains.
 pub fn run_server(handle: &Handle, cfg: &ServeConfig,
                   rx: mpsc::Receiver<Request>) -> Result<ServerStats> {
     let infer = handle.manifest().require("cnn_infer-f32")?.clone();
@@ -63,98 +184,149 @@ pub fn run_server(handle: &Handle, cfg: &ServeConfig,
         infer.inputs.last().map(|s| s.shape[1..].iter().product()).unwrap_or(0);
     let image_shape: Vec<usize> =
         infer.inputs.last().map(|s| s.shape.clone()).unwrap_or_default();
-    let batch_max = cfg.batch_max.min(aot_batch).max(1);
 
     // parameters: the seeded-init artifact (zero inputs, 7 outputs)
     let params = handle.execute_sig("cnn_init-f32", &[])?;
 
-    // warm the exec cache before timing anything (§III-C warmup)
-    let _ = handle.compile_sig("cnn_infer-f32")?;
+    // fail fast: prove the model compiles before spawning workers (each
+    // worker then warms its own private shard before pulling requests)
+    let _ = handle.compile_sig(&infer.sig)?;
 
-    let mut stats = ServerStats::default();
+    let workers = cfg.workers.max(1);
+    let queue = BatchQueue::new();
+    let alive = AtomicUsize::new(workers);
     let start = Instant::now();
-    let mut pending: Vec<Request> = Vec::with_capacity(batch_max);
 
-    loop {
-        // blocking wait for the first request of a batch
-        match rx.recv() {
-            Ok(req) => pending.push(req),
-            Err(_) => break, // channel closed: drain and exit
+    let results: Vec<Result<WorkerStats>> = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(workers);
+        for worker in 0..workers {
+            let queue = &queue;
+            let alive = &alive;
+            let infer_sig = infer.sig.as_str();
+            let params = params.as_slice();
+            let image_shape = image_shape.as_slice();
+            joins.push(scope.spawn(move || {
+                let res = worker_loop(handle, worker, queue, cfg, infer_sig,
+                                      params, aot_batch, image_elems,
+                                      image_shape);
+                alive.fetch_sub(1, Ordering::AcqRel);
+                res
+            }));
         }
-        let deadline = Instant::now() + cfg.batch_timeout;
-        while pending.len() < batch_max {
-            let now = Instant::now();
-            if now >= deadline {
+        // The calling thread is the feeder. Poll the worker count so a
+        // fully-dead pool aborts the server (dropping queued requests
+        // unblocks their clients) instead of parking forever on a
+        // request channel the clients still hold open.
+        loop {
+            if alive.load(Ordering::Acquire) == 0 {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(req) => pending.push(req),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(req) => queue.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
+        queue.close();
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("serve worker panicked"))
+            .collect()
+    });
 
-        execute_batch(handle, &infer.sig, &params, &mut pending,
-                      aot_batch, image_elems, &image_shape, &mut stats)?;
+    let mut stats = ServerStats::default();
+    let mut first_err = None;
+    for r in results {
+        match r {
+            Ok(w) => {
+                stats.latency.merge(&w.latency);
+                stats.batch_sizes.merge(&w.batch_sizes);
+                stats.throughput.requests += w.requests;
+                stats.throughput.batches += w.batches;
+                stats.shard_cache.merge(&w.cache);
+                stats.per_worker.push(w);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
     }
-    if !pending.is_empty() {
-        execute_batch(handle, &infer.sig, &params, &mut pending,
-                      aot_batch, image_elems, &image_shape, &mut stats)?;
+    if let Some(e) = first_err {
+        return Err(e);
     }
-
     stats.throughput.wall_s = start.elapsed().as_secs_f64();
     Ok(stats)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn execute_batch(handle: &Handle, sig: &str, params: &[HostTensor],
-                 pending: &mut Vec<Request>, aot_batch: usize,
-                 image_elems: usize, image_shape: &[usize],
-                 stats: &mut ServerStats) -> Result<()> {
-    if pending.is_empty() {
-        return Ok(());
+fn worker_loop(handle: &Handle, worker: usize, queue: &BatchQueue,
+               cfg: &ServeConfig, sig: &str, params: &[HostTensor],
+               aot_batch: usize, image_elems: usize, image_shape: &[usize])
+    -> Result<WorkerStats> {
+    let batch_max = cfg.batch_max.min(aot_batch).max(1);
+    let shard = ExecCache::new(cfg.shard_capacity.max(1));
+    // warm this worker's shard before it takes traffic
+    let _ = handle.compile_sig_with(&shard, sig)?;
+    let mut stats = WorkerStats { worker, ..Default::default() };
+    while let Some(mut batch) = queue.next_batch(batch_max, cfg.batch_timeout) {
+        execute_batch(handle, &shard, sig, params, &mut batch, aot_batch,
+                      image_elems, image_shape, &mut stats)?;
     }
-    let used = pending.len().min(aot_batch);
-    // assemble the fixed-size AOT batch, zero-padding unused rows
-    let mut batch = vec![0f32; aot_batch * image_elems];
-    for (i, req) in pending.iter().take(used).enumerate() {
-        if req.image.len() != image_elems {
-            return Err(MiopenError::ShapeMismatch(format!(
-                "request {} image has {} elems, expected {image_elems}",
-                req.id, req.image.len())));
+    stats.cache = shard.stats();
+    Ok(stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_batch(handle: &Handle, shard: &ExecCache, sig: &str,
+                 params: &[HostTensor], pending: &mut Vec<Request>,
+                 aot_batch: usize, image_elems: usize, image_shape: &[usize],
+                 stats: &mut WorkerStats) -> Result<()> {
+    while !pending.is_empty() {
+        let used = pending.len().min(aot_batch);
+        // assemble the fixed-size AOT batch, zero-padding unused rows
+        let mut batch = vec![0f32; aot_batch * image_elems];
+        for (i, req) in pending.iter().take(used).enumerate() {
+            if req.image.len() != image_elems {
+                return Err(MiopenError::ShapeMismatch(format!(
+                    "request {} image has {} elems, expected {image_elems}",
+                    req.id, req.image.len())));
+            }
+            batch[i * image_elems..(i + 1) * image_elems]
+                .copy_from_slice(&req.image);
         }
-        batch[i * image_elems..(i + 1) * image_elems]
-            .copy_from_slice(&req.image);
-    }
-    let x = HostTensor::from_f32(image_shape, &batch);
+        let x = HostTensor::from_f32(image_shape, &batch);
 
-    let mut inputs: Vec<HostTensor> = params.to_vec();
-    inputs.push(x);
-    let out = handle.execute_sig(sig, &inputs)?;
-    let logits = out[0].as_f32()?;
-    let preds = out[1].as_i32()?;
-    let classes = out[0].spec.shape[1];
+        let mut inputs: Vec<HostTensor> = params.to_vec();
+        inputs.push(x);
+        let out = handle.execute_sig_with(shard, sig, &inputs)?;
+        let logits = out[0].as_f32()?;
+        let preds = out[1].as_i32()?;
+        let classes = out[0].spec.shape[1];
 
-    let done = Instant::now();
-    for (i, req) in pending.drain(..used).enumerate() {
-        let latency_us =
-            done.duration_since(req.submitted).as_secs_f64() * 1e6;
-        stats.latency.record(latency_us);
-        let _ = req.resp.send(Response {
-            id: req.id,
-            predicted_class: *preds.get(i).unwrap_or(&-1),
-            logits: logits[i * classes..(i + 1) * classes].to_vec(),
-            latency_us,
-        });
+        let done = Instant::now();
+        for (i, req) in pending.drain(..used).enumerate() {
+            let latency_us =
+                done.duration_since(req.submitted).as_secs_f64() * 1e6;
+            stats.latency.record(latency_us);
+            let _ = req.resp.send(Response {
+                id: req.id,
+                predicted_class: *preds.get(i).unwrap_or(&-1),
+                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                latency_us,
+            });
+        }
+        stats.batch_sizes.record(used as f64);
+        stats.requests += used as u64;
+        stats.batches += 1;
     }
-    stats.batch_sizes.record(used as f64);
-    stats.throughput.requests += used as u64;
-    stats.throughput.batches += 1;
     Ok(())
 }
 
 /// Load generator: submits `n` requests with Poisson arrivals at `rate`
-/// req/s from the current thread; returns the response receiver.
+/// req/s from the current thread (`rate <= 0` floods with no pacing);
+/// returns the response receiver.
 pub fn generate_load(tx: &mpsc::Sender<Request>, n: usize, rate: f64,
                      image_elems: usize, seed: u64)
     -> mpsc::Receiver<Response> {
@@ -184,6 +356,53 @@ mod tests {
     fn config_defaults() {
         let c = ServeConfig::default();
         assert_eq!(c.batch_max, 16);
+        assert_eq!(c.workers, 1);
+        assert!(c.shard_capacity > 0);
         assert!(c.batch_timeout >= Duration::from_millis(1));
+    }
+
+    fn dummy_request(id: u64, resp: &mpsc::Sender<Response>) -> Request {
+        Request {
+            id,
+            image: vec![0.0; 4],
+            submitted: Instant::now(),
+            resp: resp.clone(),
+        }
+    }
+
+    #[test]
+    fn batch_queue_batches_up_to_max() {
+        let q = BatchQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        for id in 0..5 {
+            q.push(dummy_request(id, &tx));
+        }
+        let b = q.next_batch(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 3);
+        let b = q.next_batch(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn batch_queue_close_drains_then_ends() {
+        let q = BatchQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        q.push(dummy_request(0, &tx));
+        q.close();
+        let b = q.next_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(q.next_batch(4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn batch_queue_timeout_flushes_partial_batch() {
+        let q = BatchQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        q.push(dummy_request(0, &tx));
+        let t = Instant::now();
+        let b = q.next_batch(8, Duration::from_millis(20)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(20),
+                "partial batch must wait out the batching window");
     }
 }

@@ -130,7 +130,7 @@ impl<'h> TuningSession<'h> {
                 .map(|(p, t)| (p.clone(), *t))
                 .expect("non-empty");
 
-            self.handle.user_perf.borrow_mut().set(
+            self.handle.user_perf.lock().unwrap().set(
                 &key,
                 solver.name(),
                 best_params.clone(),
@@ -151,6 +151,13 @@ impl<'h> TuningSession<'h> {
                 "no tunable solver with artifacts for {key}"
             )));
         }
+
+        // db-coherence: the find-db entry for this problem (if any) was
+        // benchmarked against the pre-tuning artifact set — its times and
+        // implied signatures would shadow the new winners forever. Drop
+        // it so the next find re-benchmarks with the tuned variants.
+        self.handle.user_find.lock().unwrap().remove(&key);
+
         self.handle.save_dbs()?;
         Ok(results)
     }

@@ -129,6 +129,85 @@ fn find_db_persists_across_handles() {
 }
 
 #[test]
+fn stale_find_db_records_fall_back_to_fresh_benchmark() {
+    // Regression (db-coherence): a find-db carried over from a machine
+    // whose artifact set changed can name solvers/artifacts that no
+    // longer exist. The warm path must filter those against the manifest
+    // and fall back to a fresh benchmark — not fail later at compile_sig.
+    let db_dir = common::temp_db_dir("find-stale");
+    let p = fig6_problem();
+    let key = p.sig().unwrap().db_key();
+
+    // pre-seed the user find-db with a record for a solver that is gone
+    let mut stale = miopen_rs::db::FindDb::default();
+    stale.insert(key.clone(), vec![miopen_rs::db::FindRecord {
+        algo: "superdirect".into(), // removed from this build's registry
+        time_us: 1.0,
+        modeled_time_us: 1.0,
+        workspace_bytes: 0,
+    }]);
+    miopen_rs::db::DbStore::at(&db_dir).save_find_db(&stale).unwrap();
+
+    let handle = miopen_rs::handle::Handle::new(
+        miopen_rs::handle::HandleOptions {
+            db_dir: Some(db_dir),
+            find_iters: 2,
+            ..Default::default()
+        })
+    .unwrap();
+    assert!(handle.find_db().get(&key).is_some(), "stale entry loaded");
+
+    // non-exhaustive find hits the stale entry, finds zero survivors,
+    // and must benchmark fresh instead of erroring
+    let results = handle.find_convolution(&p).unwrap();
+    assert!(!results.is_empty());
+    assert!(results.iter().all(|r| r.algo != "superdirect"));
+    assert!(results.iter().all(
+        |r| handle.manifest().get(&r.artifact_sig).is_some()),
+        "every returned sig must exist in the manifest");
+}
+
+#[test]
+fn partially_stale_find_db_serves_surviving_records() {
+    // Records whose artifacts still exist keep serving from the warm
+    // path; only the dangling ones are dropped.
+    let db_dir = common::temp_db_dir("find-partial-stale");
+    let p = fig6_problem();
+    let key = p.sig().unwrap().db_key();
+
+    let mut mixed = miopen_rs::db::FindDb::default();
+    mixed.insert(key.clone(), vec![
+        miopen_rs::db::FindRecord {
+            algo: "superdirect".into(),
+            time_us: 1.0,
+            modeled_time_us: 1.0,
+            workspace_bytes: 0,
+        },
+        miopen_rs::db::FindRecord {
+            algo: "gemm".into(),
+            time_us: 5.0,
+            modeled_time_us: 5.0,
+            workspace_bytes: 64,
+        },
+    ]);
+    miopen_rs::db::DbStore::at(&db_dir).save_find_db(&mixed).unwrap();
+
+    let handle = miopen_rs::handle::Handle::new(
+        miopen_rs::handle::HandleOptions {
+            db_dir: Some(db_dir),
+            ..Default::default()
+        })
+    .unwrap();
+
+    let results = handle.find_convolution(&p).unwrap();
+    assert_eq!(results.len(), 1, "only the surviving record serves");
+    assert_eq!(results[0].algo, "gemm");
+    // served warm: no compile happened
+    let (exec, _) = handle.cache_stats();
+    assert_eq!(exec.lookups, 0, "surviving records must serve warm");
+}
+
+#[test]
 fn exhaustive_flag_rebenchmarks() {
     let handle = common::cpu_handle("find-exh");
     let p = fig6_problem();

@@ -101,6 +101,67 @@ fn find_uses_tuned_variant_after_tuning() {
 }
 
 #[test]
+fn warm_find_after_tune_returns_tuned_sig() {
+    // Regression (db-coherence): the find-db hit path used to rebuild
+    // artifact_sig(algo, None), silently dropping the tuned variant the
+    // cold path selects — after tuning, every warm find_convolution
+    // returned the *untuned* signature.
+    let handle = common::cpu_handle("tune-warm-coherent");
+    let problem = tunable_problem();
+
+    // cold find first: records a find-db entry with pre-tuning sigs
+    handle.find_convolution(&problem).unwrap();
+    TuningSession::new(&handle).tune_convolution(&problem).unwrap();
+
+    let key = problem.sig().unwrap().db_key();
+    let tuned_bk = handle.perf_db().get(&key, "direct").unwrap()["block_k"];
+
+    // non-exhaustive find after tuning: first call re-benchmarks (the
+    // stale entry was invalidated), and MUST surface the tuned variant
+    let fresh = handle.find_convolution(&problem).unwrap();
+    let direct = fresh.iter().find(|r| r.algo == "direct").unwrap();
+    assert!(direct.artifact_sig.ends_with(&format!("-bk{tuned_bk}")),
+            "post-tune find must return the tuned sig: {}",
+            direct.artifact_sig);
+
+    // second call is a warm find-db hit — it must preserve both the
+    // tuned signature and the tuned-order ranking
+    let (exec_before, _) = handle.cache_stats();
+    let warm = handle.find_convolution(&problem).unwrap();
+    let (exec_after, _) = handle.cache_stats();
+    assert_eq!(exec_before.lookups, exec_after.lookups,
+               "warm path must not recompile");
+    let wdirect = warm.iter().find(|r| r.algo == "direct").unwrap();
+    assert_eq!(wdirect.artifact_sig, direct.artifact_sig,
+               "warm hit dropped the tuned variant");
+    assert_eq!(warm.iter().map(|r| r.algo.as_str()).collect::<Vec<_>>(),
+               fresh.iter().map(|r| r.algo.as_str()).collect::<Vec<_>>(),
+               "warm ranking must match the recorded (tuned) ranking");
+}
+
+#[test]
+fn tune_invalidates_stale_find_db_entry() {
+    // Regression (db-coherence): tune_convolution used to record the
+    // perf-db winner but leave the pre-tuning find-db entry in place,
+    // shadowing the tuning result forever.
+    let handle = common::cpu_handle("tune-invalidate");
+    let problem = tunable_problem();
+    let key = problem.sig().unwrap().db_key();
+
+    handle.find_convolution(&problem).unwrap();
+    assert!(handle.find_db().get(&key).is_some(), "find must memoize");
+
+    TuningSession::new(&handle).tune_convolution(&problem).unwrap();
+    assert!(handle.find_db().get(&key).is_none(),
+            "tuning must invalidate the stale find-db entry");
+
+    // the invalidation is persisted, not just in-memory
+    let db2 = handle.db_store().load_find_db().unwrap();
+    assert!(db2.get(&key).is_none(),
+            "stale entry must not survive on disk");
+}
+
+#[test]
 fn untunable_problem_errors() {
     let handle = common::cpu_handle("tune-none");
     // a problem with no tuned artifact variants in the manifest

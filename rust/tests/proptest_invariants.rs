@@ -101,7 +101,7 @@ fn prop_exec_cache_bounds_and_accounting() {
         for key in accesses {
             cache
                 .get_or_compile(&format!("sig{key}"), || {
-                    Ok(std::rc::Rc::new(Null))
+                    Ok(std::sync::Arc::new(Null))
                 })
                 .map_err(|e| e.to_string())?;
             if cache.len() > cap {

@@ -122,8 +122,14 @@ class Emitter:
 # ---------------------------------------------------------------------------
 
 
-def conv_sig(direction, algo, cc, dtype, bk=None):
-    t = f"-bk{bk}" if bk is not None else ""
+def conv_sig(direction, algo, cc, dtype, bk=None, wt=None):
+    """Artifact signature; bk = direct block_k tile, wt = winograd
+    transform-domain threads (typed TuneTag suffixes on the Rust side)."""
+    t = ""
+    if bk is not None:
+        t = f"-bk{bk}"
+    elif wt is not None:
+        t = f"-wt{wt}"
     return f"conv_{direction}-{algo}-{cc.sig_params()}-{dtype}{t}"
 
 
@@ -140,8 +146,11 @@ def fwd_algos(cc):
 
 def bwd_algos(cc):
     algos = ["gemm", "direct"]
+    # winograd bwd-data rides the forward pipeline via the adjoint
+    # identity (mirrored padding 2 - p), which needs pad <= 2
     if (cc.r, cc.s) == (3, 3) and (cc.u, cc.v) == (1, 1) \
-            and (cc.l, cc.j) == (1, 1) and cc.g == 1:
+            and (cc.l, cc.j) == (1, 1) and cc.g == 1 \
+            and cc.p <= 2 and cc.q <= 2:
         algos.append("winograd")
     return algos
 
@@ -203,16 +212,30 @@ def conv_in_specs(direction, cc, dtype):
     raise ValueError(direction)
 
 
-def conv_workspace(direction, algo, cc):
+ITEMSIZE = {"f32": 4, "bf16": 2, "f16": 2, "i8": 1}
+
+
+def conv_workspace(direction, algo, cc, dtype="f32"):
+    """One workspace formula per algorithm, shared with the Rust solvers
+    (solvers::workspace_for — the reference executor's honest footprint).
+    `dtype` sizes the element-typed buffers (gemm col matrix, winograd
+    transforms); fft spectra are always complex-f32."""
     ho, wo = cc.out_hw()
+    esize = ITEMSIZE.get(dtype, 4)
     if algo == "gemm":
         return im2col_gemm.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
-            (cc.n, cc.k, ho, wo))
+            (cc.n, cc.k, ho, wo), itemsize=esize)
     if algo == "fft":
         return fft_conv.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
             pad=(cc.p, cc.q))
+    if algo == "winograd":
+        # bwd-data tiles the (H, W) dx extent (adjoint pipeline)
+        extent = (cc.h, cc.w) if direction == "bwd" else (ho, wo)
+        return winograd.workspace_bytes(
+            (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c // cc.g, cc.r, cc.s),
+            extent, itemsize=esize)
     return 0
 
 
@@ -244,7 +267,7 @@ def emit_conv_family(em):
                 conv_in_specs("fwd", cc, "bf16"),
                 primitive="conv", algo=algo, direction="fwd", dtype="bf16",
                 tags=("bf16",), params=cc.as_dict(),
-                workspace_bytes=conv_workspace("fwd", algo, cc),
+                workspace_bytes=conv_workspace("fwd", algo, cc, dtype="bf16"),
             )
     # grouped / depthwise convolutions (direct solver only, as in rust)
     for cc in configs.GROUPED_CONFIGS:
@@ -267,7 +290,8 @@ def emit_conv_family(em):
             primitive="conv", algo="direct", direction="fwd", dtype="i8",
             tags=("int8",), params=cc.as_dict(),
         )
-    # tuning variants of the direct solver
+    # tuning variants: direct block_k tiles + winograd transform-domain
+    # parallelism (where the winograd solver applies)
     for cc in configs.TUNE_CONFIGS:
         for bk in configs.DIRECT_BLOCK_K:
             em.emit(
@@ -278,11 +302,74 @@ def emit_conv_family(em):
                 dtype="f32", tags=("tune",), params=cc.as_dict(),
                 tuning={"block_k": bk},
             )
+        if "winograd" in fwd_algos(cc):
+            for wt in configs.WINOGRAD_TILE_THREADS:
+                # wt only changes host-side parallelism; the lowered
+                # computation is the same winograd pipeline
+                em.emit(
+                    conv_sig("fwd", "winograd", cc, "f32", wt=wt),
+                    make_conv_fn("fwd", "winograd", cc),
+                    conv_in_specs("fwd", cc, "f32"),
+                    primitive="conv", algo="winograd", direction="fwd",
+                    dtype="f32", tags=("tune-wino",), params=cc.as_dict(),
+                    workspace_bytes=conv_workspace("fwd", "winograd", cc),
+                    tuning={"wt": wt},
+                )
 
 
 # ---------------------------------------------------------------------------
 # Fusion artifacts (Figure 7 + fusion-plan execution)
 # ---------------------------------------------------------------------------
+
+
+def _cba_wino_row_ok(f, stride, c):
+    """Table I winograd-row channel constraints (fusion::mdgraph's
+    cba_wino_s1 / cba_wino_s2, transcribed row for row)."""
+    if stride == 1:
+        if f in (1, 2):
+            return c >= 18
+        if f == 3:
+            return c >= 18 and c % 2 == 0
+        if 4 <= f <= 6:
+            return 4 * c >= 18
+        if 7 <= f <= 9:
+            return 12 * c >= 18
+        if 10 <= f <= 12:
+            return 16 * c >= 18
+        return f > 12
+    if stride == 2:
+        if f == 1:
+            return 2 * c >= 18
+        if 2 <= f <= 6:
+            return 4 * c >= 18
+        if f == 7:
+            return 12 * c >= 18
+        if 8 <= f <= 12:
+            return 16 * c >= 18
+        return f > 12
+    return False
+
+
+def cba_conv_algo(cc):
+    """Conv algorithm a relu/f32 CBA plan over this config selects —
+    the same decision procedure as fusion::mdgraph (and the Rust
+    emitter's configs::cba_conv_algo, which calls the graph directly):
+    the direct-1x1 accept is checked first, then the Table I winograd
+    rows for strides 1 and 2; anything the graph rejects executes
+    direct. The executing backends guard separately for the one
+    winograd variant they implement (F(2,3): 3x3/stride-1)."""
+    # the graph keys on (filter, stride, pad, channels) only — exactly
+    # the attributes PlanAttrs carries; dilation/groups are invisible to
+    # it and the executing backend guards for its own kernel's limits
+    square = cc.r == cc.s
+    uniform = cc.u == cc.v
+    # accept order matters: CBA-direct-1x1 wins before the winograd rows
+    if square and cc.r == 1 and (cc.u, cc.v) == (1, 1) \
+            and (cc.p, cc.q) == (0, 0):
+        return "direct"
+    if square and uniform and _cba_wino_row_ok(cc.r, cc.u, cc.c):
+        return "winograd"
+    return "direct"
 
 
 def emit_fusion_family(em):
@@ -294,13 +381,25 @@ def emit_fusion_family(em):
         ho, wo = cc.out_hw()
         ys = (cc.n, cc.k, ho, wo)
         base = cc.sig_params()
-        em.emit(f"cba-relu-{base}-f32",
-                lambda x, w, b, _s=stride, _p=pad: (
-                    fused.conv_bias_act(x, w, b, stride=_s, pad=_p,
-                                        mode="relu"),),
+        # the lowered kernel must match the recorded conv_algo label —
+        # winograd rows get the F(2,3) lowering where it applies (the
+        # same guard the interp backend's wino_executable applies),
+        # everything else the direct fused kernel
+        algo_name = cba_conv_algo(cc)
+        if algo_name == "winograd" and (cc.r, cc.s) == (3, 3) \
+                and (cc.u, cc.v) == (1, 1):
+            fn = lambda x, w, b, _p=pad: (
+                fused.conv_bias_act_winograd(x, w, b, pad=_p, mode="relu"),)
+        else:
+            algo_name = "direct"
+            fn = lambda x, w, b, _s=stride, _p=pad: (
+                fused.conv_bias_act(x, w, b, stride=_s, pad=_p,
+                                    mode="relu"),)
+        em.emit(f"cba-relu-{base}-f32", fn,
                 [spec(xs), spec(ws), spec((cc.k,))],
                 primitive="fusion", algo="cba", direction="fwd",
-                tags=("fig7a",), params=cc.as_dict())
+                tags=("fig7a",),
+                params={**cc.as_dict(), "conv_algo": algo_name})
         em.emit(f"conv_fwd-direct-{base}-f32",
                 make_conv_fn("fwd", "direct", cc),
                 conv_in_specs("fwd", cc, "f32"),
@@ -356,7 +455,44 @@ def emit_fusion_family(em):
                 [spec(xs), spec(ws), spec((cc.k,)), spec((cc.k,)),
                  spec((cc.k,)), spec((cc.k,)), spec((cc.k,))],
                 primitive="fusion", algo="cbna", direction="fwd",
-                tags=("fusion-exec",), params=cc.as_dict())
+                tags=("fusion-exec",),
+                params={**cc.as_dict(), "conv_algo": "direct"})
+
+    # Winograd CBA exemplar (Table I winograd rows): 3x3/s1, c >= 18 and
+    # even, relu — the plan selects winograd and the backends execute the
+    # F(2,3) pipeline. Separate-op artifacts ride along for the
+    # fused-vs-separate parity suite.
+    cc = configs.ConvConfig(4, 32, 14, 14, 8, 3, 3, p=1, q=1)
+    assert cba_conv_algo(cc) == "winograd"
+    xs = (cc.n, cc.c, cc.h, cc.w)
+    ws = (cc.k, cc.c, cc.r, cc.s)
+    ho, wo = cc.out_hw()
+    ys = (cc.n, cc.k, ho, wo)
+    em.emit(f"cba-relu-{cc.sig_params()}-f32",
+            lambda x, w, b: (
+                fused.conv_bias_act_winograd(x, w, b, pad=(1, 1),
+                                             mode="relu"),),
+            [spec(xs), spec(ws), spec((cc.k,))],
+            primitive="fusion", algo="cba", direction="fwd",
+            tags=("fusion-wino",),
+            params={**cc.as_dict(), "conv_algo": "winograd"})
+    for a in ("direct", "winograd"):
+        em.emit(conv_sig("fwd", a, cc, "f32"),
+                make_conv_fn("fwd", a, cc),
+                conv_in_specs("fwd", cc, "f32"),
+                primitive="conv", algo=a, direction="fwd",
+                tags=("fusion-wino-sep",), params=cc.as_dict(),
+                workspace_bytes=conv_workspace("fwd", a, cc))
+    em.emit(f"bias-{cc.n}x{cc.k}x{ho}x{wo}-f32",
+            lambda y, b: (tensor_ops.op_tensor_bias(y, b),),
+            [spec(ys), spec((cc.k,))],
+            primitive="tensor_op", algo="bias", direction="fwd",
+            tags=("fusion-wino-sep",), params=cc.as_dict())
+    em.emit(f"act-relu-{cc.n}x{cc.k}x{ho}x{wo}-f32",
+            lambda y: (activations.activation_fwd(y, "relu"),),
+            [spec(ys)],
+            primitive="activation", algo="relu", direction="fwd",
+            tags=("fusion-wino-sep",), params=cc.as_dict())
 
 
 # ---------------------------------------------------------------------------

@@ -137,6 +137,9 @@ TUNE_CONFIGS = [
     ConvConfig(4, 64, 14, 14, 64, 1, 1),
 ]
 DIRECT_BLOCK_K = [4, 8, 16, 32]
+# Winograd transform-domain parallelism variants (mirrors
+# WinogradSolver::THREAD_GRID in rust/src/solvers/mod.rs).
+WINOGRAD_TILE_THREADS = [1, 2, 4]
 
 # -- RNN configs ----------------------------------------------------------------
 

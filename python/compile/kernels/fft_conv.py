@@ -47,10 +47,19 @@ def conv2d_fft(x, w, *, stride=(1, 1), pad=(0, 0)):
     return y.astype(x.dtype)
 
 
+def _next_pow2(x):
+    n = 1
+    while n < x:
+        n <<= 1
+    return n
+
+
 def workspace_bytes(x_shape, w_shape, pad=(0, 0), itemsize=8):
-    """Frequency-domain buffers the find step reports (complex64)."""
+    """Frequency-domain buffers the find step reports: complex spectra for
+    X (N·C), W (K·C) and Y (N·K) over the power-of-two-padded planes the
+    reference radix-2 executor uses (mirrors FftSolver::workspace_bytes)."""
     n, c, h, wd = x_shape
     k, _, r, s = w_shape
-    fh = h + 2 * pad[0] + r - 1
-    fw = (wd + 2 * pad[1] + s - 1) // 2 + 1
+    fh = _next_pow2(h + 2 * pad[0] + r - 1)
+    fw = _next_pow2(wd + 2 * pad[1] + s - 1)
     return itemsize * fh * fw * (n * c + k * c + n * k)

@@ -76,6 +76,18 @@ def conv_bias_act(x, w, bias, *, stride=(1, 1), pad=(0, 0), mode="relu",
     return out[:, :k]
 
 
+def conv_bias_act_winograd(x, w, bias, *, pad=(1, 1), mode="relu",
+                           alpha=0.0, interpret=True):
+    """Fused CBA whose conv stage is the Winograd F(2,3) pipeline (the
+    Table I winograd rows): bias + activation ride on the inverse
+    transform's output before the single write-back."""
+    from .winograd import conv2d_winograd
+
+    y = conv2d_winograd(x, w, pad=pad, interpret=interpret)
+    y = y.astype(jnp.float32) + bias.astype(jnp.float32)[None, :, None, None]
+    return _apply(y, mode, alpha).astype(x.dtype)
+
+
 def _bn_act_kernel(x_ref, g_ref, b_ref, m_ref, v_ref, y_ref, *, eps, mode,
                    alpha):
     x = x_ref[...].astype(jnp.float32)

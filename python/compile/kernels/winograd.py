@@ -99,3 +99,16 @@ def conv2d_winograd_bwd_data(dy, w, x_shape, *, pad=(1, 1), bm=32, bn=32,
 def flops_ratio():
     """Multiplication saving vs direct for F(2x2,3x3): 36 MACs -> 16."""
     return 2.25
+
+
+def workspace_bytes(x_shape, w_shape, out_hw, itemsize=4):
+    """Honest transform-buffer footprint the find step reports (mirrors
+    WinogradSolver::workspace_bytes): U (16·K·Cg) once, V (16·Cg·T) and
+    M (16·K·T) per image, T = ceil(Ho/2)·ceil(Wo/2) tiles. Cg is the
+    per-group channel count from the filter shape (= C/g), matching the
+    Rust formula's sig.c / sig.g."""
+    del x_shape  # geometry comes from the filter + output extents
+    k, cg = w_shape[0], w_shape[1]
+    ho, wo = out_hw
+    t = ((ho + 1) // 2) * ((wo + 1) // 2)
+    return itemsize * 16 * (k * cg + cg * t + k * t)

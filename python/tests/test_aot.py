@@ -51,6 +51,7 @@ def test_conv_sig_format():
     assert aot.conv_sig("fwd", "direct", cc, "f32") == \
         "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32"
     assert aot.conv_sig("wrw", "gemm", cc, "bf16", bk=8).endswith("-bf16-bk8")
+    assert aot.conv_sig("fwd", "winograd", cc, "f32", wt=4).endswith("-f32-wt4")
 
 
 def test_config_labels_match_paper_format():
@@ -95,13 +96,16 @@ def test_manifest_consistency():
 
 @pytest.mark.skipif(not os.path.exists(MANIFEST_PATH),
                     reason="run `make artifacts` first")
-def test_manifest_conv_workspace_only_for_gemm_fft():
+def test_manifest_conv_workspace_matches_solver_accounting():
+    # gemm (im2col column matrix), fft (complex spectra) and winograd
+    # (U/V/M transform buffers) report honest workspace; direct/implicit
+    # run in place. Mirrors solvers::workspace_for on the Rust side.
     with open(MANIFEST_PATH) as f:
         arts = json.load(f)["artifacts"]
     for a in arts:
         if a["primitive"] != "conv":
             continue
-        if a["algo"] in ("gemm", "fft"):
+        if a["algo"] in ("gemm", "fft", "winograd"):
             assert a["workspace_bytes"] > 0, a["sig"]
         else:
             assert a["workspace_bytes"] == 0, a["sig"]

@@ -10,7 +10,7 @@
 //! integration suites cross-check signatures from both sides.
 
 use crate::manifest::{Artifact, TensorSpec};
-use crate::types::DType;
+use crate::types::{algo, DType, ProblemSig, TuneTag};
 
 /// Mirror of `configs.ConvConfig`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +68,17 @@ impl ConvConfig {
             ("p", self.p as i64), ("q", self.q as i64), ("l", self.l as i64),
             ("j", self.j as i64), ("g", self.g as i64),
         ]
+    }
+
+    /// The equivalent [`ProblemSig`] (for solver workspace/applicability
+    /// queries during artifact emission).
+    pub fn problem_sig(&self, direction: &str, dtype: DType) -> ProblemSig {
+        ProblemSig {
+            direction: direction.to_string(),
+            n: self.n, c: self.c, h: self.h, w: self.w, k: self.k,
+            r: self.r, s: self.s, u: self.u, v: self.v, p: self.p,
+            q: self.q, l: self.l, j: self.j, g: self.g, dtype,
+        }
     }
 }
 
@@ -156,6 +167,12 @@ pub fn tune_configs() -> Vec<ConvConfig> {
 
 pub const DIRECT_BLOCK_K: [usize; 4] = [4, 8, 16, 32];
 
+/// AOT'd winograd transform-domain parallelism variants (`-wt{n}`) —
+/// the solver's grid itself, so a new grid point cannot be silently
+/// filtered by the tuning session for lack of an artifact.
+pub const WINOGRAD_TILE_THREADS: [usize; 3] =
+    crate::solvers::WinogradSolver::THREAD_GRID;
+
 pub fn rnn_configs() -> Vec<RnnConfig> {
     vec![
         RnnConfig { cell: "lstm", t: 16, b: 8, x: 32, hid: 32, act: "tanh" },
@@ -212,32 +229,33 @@ fn f32s(shape: &[usize]) -> TensorSpec {
 }
 
 /// Applicable forward algorithms (mirrors aot.fwd_algos AND the solver
-/// registry's applicability — the three must agree).
+/// registry's applicability — the three must agree; the
+/// `builtin_matches_solver_applicability` test locks the contract).
 pub fn fwd_algos(c: &ConvConfig) -> Vec<&'static str> {
-    let mut algos = vec!["gemm", "direct", "implicit"];
+    let mut algos = vec![algo::GEMM, algo::DIRECT, algo::IMPLICIT];
     if (c.r, c.s) == (3, 3) && (c.u, c.v) == (1, 1) && (c.l, c.j) == (1, 1)
         && c.g == 1 {
-        algos.push("winograd");
+        algos.push(algo::WINOGRAD);
     }
     if c.r.max(c.s) >= 5 && (c.l, c.j) == (1, 1) && c.g == 1 {
-        algos.push("fft");
+        algos.push(algo::FFT);
     }
     algos
 }
 
 pub fn bwd_algos(c: &ConvConfig) -> Vec<&'static str> {
-    let mut algos = vec!["gemm", "direct"];
+    let mut algos = vec![algo::GEMM, algo::DIRECT];
     if (c.r, c.s) == (3, 3) && (c.u, c.v) == (1, 1) && (c.l, c.j) == (1, 1)
-        && c.g == 1 {
-        algos.push("winograd");
+        && c.g == 1 && c.p <= 2 && c.q <= 2 {
+        algos.push(algo::WINOGRAD);
     }
     algos
 }
 
-fn conv_sig(direction: &str, algo: &str, c: &ConvConfig, dtype: &str,
-            bk: Option<usize>) -> String {
-    let t = bk.map(|b| format!("-bk{b}")).unwrap_or_default();
-    format!("conv_{direction}-{algo}-{}-{dtype}{t}", c.sig_params())
+fn conv_sig(direction: &str, algo_name: &str, c: &ConvConfig, dtype: &str,
+            tag: Option<TuneTag>) -> String {
+    let t = tag.map(TuneTag::suffix).unwrap_or_default();
+    format!("conv_{direction}-{algo_name}-{}-{dtype}{t}", c.sig_params())
 }
 
 fn conv_specs(direction: &str, c: &ConvConfig, dtype: DType)
@@ -253,23 +271,28 @@ fn conv_specs(direction: &str, c: &ConvConfig, dtype: DType)
     }
 }
 
-fn gemm_workspace(c: &ConvConfig, dtype: DType) -> u64 {
-    let (ho, wo) = c.out_hw();
-    (c.c * c.r * c.s * c.n * ho * wo) as u64 * dtype.size_bytes() as u64
-}
-
-fn conv_artifact(direction: &str, algo: &str, c: &ConvConfig, dtype: DType,
-                 bk: Option<usize>) -> Artifact {
+fn conv_artifact(direction: &str, algo_name: &str, c: &ConvConfig,
+                 dtype: DType, tag: Option<TuneTag>) -> Artifact {
     let (inputs, outputs) = conv_specs(direction, c, dtype);
-    let ws = if algo == "gemm" { gemm_workspace(c, dtype) } else { 0 };
+    // one workspace formula per algorithm, shared with the find step
+    let ws = crate::solvers::workspace_for(
+        algo_name, &c.problem_sig(direction, dtype));
     let mut art = Artifact::synthetic(
-        &conv_sig(direction, algo, c, dtype.name(), bk), "conv", algo,
-        direction, inputs, outputs)
+        &conv_sig(direction, algo_name, c, dtype.name(), tag), "conv",
+        algo_name, direction, inputs, outputs)
         .with_params(&c.param_pairs())
         .with_label(&c.label())
         .with_workspace(ws);
-    if let Some(b) = bk {
-        art = art.with_tuning(&[("block_k", b as i64)]);
+    match tag {
+        Some(TuneTag::BlockK(b)) => {
+            art = art.with_tuning(&[(crate::solvers::BLOCK_K_PARAM,
+                                     b as i64)]);
+        }
+        Some(TuneTag::WinoThreads(t)) => {
+            art = art.with_tuning(&[(crate::solvers::WINO_THREADS_PARAM,
+                                     t as i64)]);
+        }
+        None => {}
     }
     art
 }
@@ -284,10 +307,10 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
                 let algos = match direction {
                     "fwd" => fwd_algos(c),
                     "bwd" => bwd_algos(c),
-                    _ => vec!["gemm", "direct"],
+                    _ => vec![algo::GEMM, algo::DIRECT],
                 };
-                for algo in algos {
-                    out.push(conv_artifact(direction, algo, c, DType::F32, None)
+                for a in algos {
+                    out.push(conv_artifact(direction, a, c, DType::F32, None)
                         .with_tag(&format!("fig6{panel}")));
                 }
             }
@@ -295,14 +318,14 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
     }
     // bf16 extras: a subset proving low-precision support.
     for c in fig6_1x1().iter().take(2).chain(fig6_non1x1().iter().take(2)) {
-        for algo in ["gemm", "direct"] {
-            out.push(conv_artifact("fwd", algo, c, DType::Bf16, None)
+        for a in [algo::GEMM, algo::DIRECT] {
+            out.push(conv_artifact("fwd", a, c, DType::Bf16, None)
                 .with_tag("bf16"));
         }
     }
     // grouped / depthwise (direct solver only).
     for c in &grouped_configs() {
-        out.push(conv_artifact("fwd", "direct", c, DType::F32, None)
+        out.push(conv_artifact("fwd", algo::DIRECT, c, DType::F32, None)
             .with_tag("grouped"));
     }
     // int8 inference: i8 inputs, exact f32 accumulation and output.
@@ -313,7 +336,7 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
         out.push(
             Artifact::synthetic(
                 &format!("conv_fwd-direct-{}-i8", c.sig_params()), "conv",
-                "direct", "fwd",
+                algo::DIRECT, "fwd",
                 vec![sp(&xs, DType::I8), sp(&ws, DType::I8)],
                 vec![f32s(&[c.n, c.k, ho, wo])])
             .with_dtype(DType::I8)
@@ -322,13 +345,43 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
             .with_tag("int8"),
         );
     }
-    // tuning variants of the direct solver.
+    // tuning variants: direct block_k tiles, winograd transform-domain
+    // parallelism (only where the winograd solver applies).
     for c in &tune_configs() {
         for bk in DIRECT_BLOCK_K {
-            out.push(conv_artifact("fwd", "direct", c, DType::F32, Some(bk))
+            out.push(conv_artifact("fwd", algo::DIRECT, c, DType::F32,
+                                   Some(TuneTag::BlockK(bk)))
                 .with_tag("tune"));
         }
+        if fwd_algos(c).contains(&algo::WINOGRAD) {
+            for wt in WINOGRAD_TILE_THREADS {
+                out.push(conv_artifact("fwd", algo::WINOGRAD, c, DType::F32,
+                                       Some(TuneTag::WinoThreads(wt)))
+                    .with_tag("tune-wino"));
+            }
+        }
     }
+}
+
+/// The conv algorithm a CBA fusion plan over this config would select —
+/// decided by the *same* metadata graph the fusion API traverses, so the
+/// recorded `conv_algo` and the mdgraph can never disagree (relu/f32
+/// plans; the builtin set emits no other fused dtypes).
+fn cba_conv_algo(c: &ConvConfig) -> &'static str {
+    use crate::descriptors::ActivationMode;
+    use crate::fusion::mdgraph::{MdGraph, OpKind, PlanAttrs};
+    let attrs = PlanAttrs {
+        dtype: DType::F32,
+        filter: Some((c.r, c.s)),
+        stride: Some((c.u, c.v)),
+        pad: Some((c.p, c.q)),
+        channels: Some(c.c),
+        activation: Some(ActivationMode::Relu),
+    };
+    MdGraph::standard()
+        .accept(&[OpKind::Conv, OpKind::Bias, OpKind::Activation], &attrs)
+        .map(|m| m.conv_algo)
+        .unwrap_or(algo::DIRECT)
 }
 
 fn emit_fusion_family(out: &mut Vec<Artifact>) {
@@ -344,10 +397,11 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
                 "fwd",
                 vec![f32s(&xs), f32s(&ws), f32s(&[c.k])], vec![f32s(&ys)])
             .with_params(&c.param_pairs())
+            .with_str_param("conv_algo", cba_conv_algo(c))
             .with_label(&c.label())
             .with_tag("fig7a"),
         );
-        out.push(conv_artifact("fwd", "direct", c, DType::F32, None)
+        out.push(conv_artifact("fwd", algo::DIRECT, c, DType::F32, None)
             .with_tag("fig7a-sep"));
         out.push(
             Artifact::synthetic(
@@ -403,7 +457,8 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
         );
     }
 
-    // CBNA exemplars (Tables I/II row 1), one per stride.
+    // CBNA exemplars (Tables I/II row 1), one per stride. CBNA rows are
+    // direct-only in the metadata graph.
     for c in [
         ConvConfig { p: 1, q: 1, ..cc(2, 8, 14, 14, 8, 3, 3) },
         ConvConfig { u: 2, v: 2, p: 1, q: 1, ..cc(2, 8, 14, 14, 8, 3, 3) },
@@ -419,7 +474,50 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
                      f32s(&[c.k]), f32s(&[c.k]), f32s(&[c.k])],
                 vec![f32s(&[c.n, c.k, ho, wo])])
             .with_params(&c.param_pairs())
+            .with_str_param("conv_algo", algo::DIRECT)
             .with_tag("fusion-exec"),
+        );
+    }
+
+    // Winograd CBA exemplar (Table I winograd rows): 3x3/s1, c >= 18 and
+    // even, relu — the mdgraph selects winograd for this plan and the
+    // interp backend executes the F(2,3) pipeline inside the fused
+    // kernel. Separate-op artifacts ride along so the integration suite
+    // can check fused-vs-separate parity per algorithm.
+    {
+        let c = ConvConfig { p: 1, q: 1, ..cc(4, 32, 14, 14, 8, 3, 3) };
+        debug_assert_eq!(cba_conv_algo(&c), algo::WINOGRAD);
+        let xs = [c.n, c.c, c.h, c.w];
+        let ws = [c.k, c.c, c.r, c.s];
+        let (ho, wo) = c.out_hw();
+        let ys = [c.n, c.k, ho, wo];
+        out.push(
+            Artifact::synthetic(
+                &format!("cba-relu-{}-f32", c.sig_params()), "fusion", "cba",
+                "fwd",
+                vec![f32s(&xs), f32s(&ws), f32s(&[c.k])], vec![f32s(&ys)])
+            .with_params(&c.param_pairs())
+            .with_str_param("conv_algo", cba_conv_algo(&c))
+            .with_label(&c.label())
+            .with_tag("fusion-wino"),
+        );
+        for a in [algo::DIRECT, algo::WINOGRAD] {
+            out.push(conv_artifact("fwd", a, &c, DType::F32, None)
+                .with_tag("fusion-wino-sep"));
+        }
+        out.push(
+            Artifact::synthetic(
+                &format!("bias-{}x{}x{ho}x{wo}-f32", c.n, c.k), "tensor_op",
+                "bias", "fwd", vec![f32s(&ys), f32s(&[c.k])], vec![f32s(&ys)])
+            .with_params(&c.param_pairs())
+            .with_tag("fusion-wino-sep"),
+        );
+        out.push(
+            Artifact::synthetic(
+                &format!("act-relu-{}x{}x{ho}x{wo}-f32", c.n, c.k),
+                "activation", "relu", "fwd", vec![f32s(&ys)], vec![f32s(&ys)])
+            .with_params(&c.param_pairs())
+            .with_tag("fusion-wino-sep"),
         );
     }
 }
@@ -701,7 +799,13 @@ mod tests {
             "conv_bwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
             "conv_wrw-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
             "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-bk32",
+            "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-wt4",
+            "conv_fwd-fft-n4c4h28w28k8r5s5u1v1p2q2l1j1g1-f32",
             "conv_fwd-direct-n4c16h14w14k32r3s3u1v1p1q1l1j1g1-i8",
+            "cba-relu-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32",
+            "conv_fwd-winograd-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32",
+            "bias-4x8x14x14-f32",
+            "act-relu-4x8x14x14-f32",
             "cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32",
             "conv_fwd-direct-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32",
             "bias-4x32x28x28-f32",
@@ -742,6 +846,50 @@ mod tests {
         }
         // 1x1 panels carry no winograd artifacts
         assert!(m.by_tag("fig6a").all(|a| a.algo != "winograd"));
+    }
+
+    #[test]
+    fn fusion_artifacts_record_mdgraph_conv_algo() {
+        // every conv-bearing fusion artifact names its executing conv
+        // algorithm, and the winograd exemplar really selects winograd
+        let m = Manifest::builtin();
+        for a in m.by_primitive("fusion") {
+            if a.algo == "cba" || a.algo == "cbna" {
+                assert!(a.str_param("conv_algo").is_some(), "{}", a.sig);
+            }
+        }
+        let wino = m
+            .require("cba-relu-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32")
+            .unwrap();
+        assert_eq!(wino.str_param("conv_algo"), Some(algo::WINOGRAD));
+    }
+
+    #[test]
+    fn winograd_tune_variants_carry_thread_param() {
+        let m = Manifest::builtin();
+        for wt in WINOGRAD_TILE_THREADS {
+            let sig = format!(
+                "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-wt{wt}"
+            );
+            let a = m.require(&sig).unwrap();
+            assert_eq!(a.tuning.get(crate::solvers::WINO_THREADS_PARAM),
+                       Some(&(wt as i64)), "{sig}");
+            assert!(a.has_tag("tune-wino"));
+        }
+    }
+
+    #[test]
+    fn conv_artifacts_carry_solver_workspace() {
+        // artifact workspace comes from the same formula the find step
+        // reports (solvers::workspace_for) — no drift between the two
+        let m = Manifest::builtin();
+        for a in m.by_primitive("conv") {
+            let (sig, algo_name, _) =
+                ProblemSig::parse_artifact(&a.sig).unwrap();
+            assert_eq!(a.workspace_bytes,
+                       crate::solvers::workspace_for(&algo_name, &sig),
+                       "{}", a.sig);
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub enum Direction {
 }
 
 impl Direction {
+    /// Signature/db spelling (`fwd` | `bwd` | `wrw`).
     pub fn as_str(self) -> &'static str {
         match self {
             Direction::Forward => "fwd",
@@ -38,21 +39,28 @@ impl Direction {
 /// A fully-specified convolution problem.
 #[derive(Debug, Clone)]
 pub struct ConvProblem {
+    /// Input tensor descriptor (NCHW).
     pub x: TensorDesc,
+    /// Filter descriptor (KCRS).
     pub w: FilterDesc,
+    /// Convolution parameters (stride/pad/dilation/mode/groups).
     pub conv: ConvDesc,
+    /// Which gradient (or the forward pass) is being solved.
     pub direction: Direction,
 }
 
 impl ConvProblem {
+    /// Forward-convolution problem.
     pub fn forward(x: TensorDesc, w: FilterDesc, conv: ConvDesc) -> Self {
         Self { x, w, conv, direction: Direction::Forward }
     }
 
+    /// Backward-data (input-gradient) problem.
     pub fn backward_data(x: TensorDesc, w: FilterDesc, conv: ConvDesc) -> Self {
         Self { x, w, conv, direction: Direction::BackwardData }
     }
 
+    /// Backward-weights (filter-gradient) problem.
     pub fn backward_weights(x: TensorDesc, w: FilterDesc, conv: ConvDesc)
         -> Self {
         Self { x, w, conv, direction: Direction::BackwardWeights }
@@ -74,6 +82,7 @@ impl ConvProblem {
 /// `miopenConvAlgoPerf_t`: one algorithm's result from the find step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ConvAlgoPerf {
+    /// Algorithm name ([`crate::types::algo`]).
     pub algo: String,
     /// Measured wall-clock on this backend (µs, median of find_iters).
     pub time_us: f64,
@@ -102,6 +111,11 @@ impl Handle {
         self.find_convolution_opt(problem, &FindOptions::default())
     }
 
+    /// The find step with explicit [`FindOptions`]. Benchmarks every
+    /// applicable solver whose artifact exists — each runs its *own*
+    /// kernel on the interp backend (im2col+GEMM, winograd transforms,
+    /// FFT, direct loops), so the recorded times are genuinely
+    /// per-algorithm measurements, not one kernel relabeled.
     pub fn find_convolution_opt(&self, problem: &ConvProblem,
                                 opts: &FindOptions)
         -> Result<Vec<ConvAlgoPerf>> {

@@ -12,7 +12,7 @@
 //! graph.
 
 use crate::descriptors::ActivationMode;
-use crate::types::DType;
+use crate::types::{algo, DType};
 
 /// Op kinds in plan order (C = conv, B = bias, N = batchnorm, A = act).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -50,8 +50,13 @@ pub struct PlanAttrs {
 /// A matched fused kernel.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MatchResult {
-    pub combination: String, // "CBA", "CBNA", "NA"
-    pub conv_algo: &'static str, // "direct" | "winograd" | "-"
+    /// Op-combination string ("CBA", "CBNA", "NA").
+    pub combination: String,
+    /// Conv algorithm the matched kernel family executes —
+    /// [`algo::DIRECT`], [`algo::WINOGRAD`], or [`algo::NONE`] for
+    /// conv-less plans. Always one of the [`crate::types::algo`]
+    /// constants, so backends can dispatch on it without string drift.
+    pub conv_algo: &'static str,
 }
 
 type Pred = fn(&PlanAttrs) -> bool;
@@ -185,15 +190,15 @@ impl MdGraph {
             Edge { from: 6, op: OpKind::Activation, to: 10, pred: any },
         ];
         let accepts = vec![
-            Accept { node: 7, conv_algo: "direct", pred: |a| {
+            Accept { node: 7, conv_algo: algo::DIRECT, pred: |a| {
                 // Table I/II "CBA | Direct | 1x1 | stride/pad not supported"
                 cba_direct_1x1(a)
             }},
-            Accept { node: 8, conv_algo: "winograd", pred: |a| {
+            Accept { node: 8, conv_algo: algo::WINOGRAD, pred: |a| {
                 cba_wino_s1(a) || cba_wino_s2(a)
             }},
-            Accept { node: 9, conv_algo: "direct", pred: cbna_ok },
-            Accept { node: 10, conv_algo: "-", pred: na_ok },
+            Accept { node: 9, conv_algo: algo::DIRECT, pred: cbna_ok },
+            Accept { node: 10, conv_algo: algo::NONE, pred: na_ok },
         ];
         Self { edges, accepts }
     }
@@ -230,8 +235,8 @@ impl MdGraph {
             }
             if half {
                 // Table II: only CBNA-direct and CBA-direct-1x1
-                let allowed = (combination == "CBNA" && acc.conv_algo == "direct")
-                    || (combination == "CBA" && acc.conv_algo == "direct");
+                let allowed = acc.conv_algo == algo::DIRECT
+                    && (combination == "CBNA" || combination == "CBA");
                 if !allowed {
                     continue;
                 }

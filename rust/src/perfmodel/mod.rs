@@ -17,14 +17,18 @@
 //! (12.5 TFLOP/s fp32, 484 GB/s HBM2, ~8 µs launch). Time is
 //! `launch + max(compute, memory)` per kernel — the classic roofline.
 
-use crate::types::{DType, ProblemSig};
+use crate::types::{algo, DType, ProblemSig};
 
 /// Simulated device profile.
 #[derive(Debug, Clone)]
 pub struct GcnModel {
+    /// Device name (gfx target).
     pub name: &'static str,
+    /// Peak fp32 throughput (TFLOP/s).
     pub fp32_tflops: f64,
+    /// Peak memory bandwidth (GB/s).
     pub hbm_gbps: f64,
+    /// Per-kernel launch overhead (µs).
     pub launch_us: f64,
 }
 
@@ -49,6 +53,7 @@ pub struct AlgoCost {
 }
 
 impl GcnModel {
+    /// Vega64-class Radeon Instinct profile (the default).
     pub fn vega64() -> Self {
         Self { name: "gfx900-vega64", fp32_tflops: 12.5, hbm_gbps: 484.0,
                launch_us: 8.0 }
@@ -79,18 +84,19 @@ impl GcnModel {
         (x + w + y) * e
     }
 
-    /// Cost descriptor for one of the library's conv algorithms.
-    pub fn algo_cost(sig: &ProblemSig, algo: &str) -> AlgoCost {
+    /// Cost descriptor for one of the library's conv algorithms
+    /// (named by [`crate::types::algo`] constants).
+    pub fn algo_cost(sig: &ProblemSig, algo_name: &str) -> AlgoCost {
         let (ho, wo) = sig.out_hw();
         let e = sig.dtype.size_bytes() as u64;
         let col_bytes =
             (sig.c / sig.g * sig.r * sig.s * sig.n * ho * wo) as u64 * e;
         let one_by_one = sig.r == 1 && sig.s == 1;
-        match algo {
+        match algo_name {
             // im2col + GEMM: col matrix written by im2col then re-read by
             // the GEMM; two launches (im2col, gemm). GEMM itself runs near
             // peak, but the unfold pass is pure bandwidth.
-            "gemm" => AlgoCost {
+            algo::GEMM => AlgoCost {
                 mac_scale: 1.0,
                 mac_efficiency: 0.70,
                 extra_bytes: 2 * col_bytes,
@@ -100,7 +106,7 @@ impl GcnModel {
             // 1x1 (it IS a gemm with perfect access) and good on larger
             // filters; input rows are re-read across filter taps -> model
             // a modest traffic inflation growing with R.
-            "direct" => AlgoCost {
+            algo::DIRECT => AlgoCost {
                 mac_scale: 1.0,
                 mac_efficiency: if one_by_one { 0.85 } else { 0.60 },
                 extra_bytes: ((sig.r.max(sig.s) as u64).saturating_sub(1))
@@ -110,16 +116,19 @@ impl GcnModel {
             // implicit GEMM (composable kernels): single kernel, zero
             // workspace, MXU/MAC-friendly but the on-the-fly gather costs
             // some efficiency vs pure GEMM.
-            "implicit" => AlgoCost {
+            algo::IMPLICIT => AlgoCost {
                 mac_scale: 1.0,
                 mac_efficiency: 0.65,
                 extra_bytes: 0,
                 launches: 1.0,
             },
-            // Winograd F(2,3): 2.25x fewer MACs, no workspace (the paper
-            // highlights this), transform adds ~2x tile traffic; transform
-            // granularity loss on odd tiles is folded into efficiency.
-            "winograd" => AlgoCost {
+            // Winograd F(2,3): 2.25x fewer MACs; the modeled GPU kernel
+            // fuses the transforms (the paper highlights zero workspace —
+            // the interp executor's materialized U/V/M buffers are its own
+            // honest accounting, see WinogradSolver::workspace_bytes);
+            // transform adds ~2x tile traffic, granularity loss on odd
+            // tiles is folded into efficiency.
+            algo::WINOGRAD => AlgoCost {
                 mac_scale: 1.0 / 2.25,
                 mac_efficiency: 0.75,
                 extra_bytes: (sig.n * sig.c * sig.h * sig.w) as u64 * e,
@@ -128,7 +137,7 @@ impl GcnModel {
             // FFT: compute scales with HW log HW instead of HW*RS; big
             // frequency-domain buffers. mac_scale expresses the ratio of
             // FFT flops to direct MACs for this problem.
-            "fft" => {
+            algo::FFT => {
                 let fh = (sig.h + 2 * sig.p + sig.r - 1) as f64;
                 let fw = (sig.w + 2 * sig.q + sig.s - 1) as f64;
                 let log_term = (fh * fw).log2().max(1.0);
@@ -155,9 +164,9 @@ impl GcnModel {
         }
     }
 
-    /// Modeled execution time (µs) of `algo` on this problem.
-    pub fn conv_time_us(&self, sig: &ProblemSig, algo: &str) -> f64 {
-        let cost = Self::algo_cost(sig, algo);
+    /// Modeled execution time (µs) of `algo_name` on this problem.
+    pub fn conv_time_us(&self, sig: &ProblemSig, algo_name: &str) -> f64 {
+        let cost = Self::algo_cost(sig, algo_name);
         let flops = 2.0 * sig.macs() as f64 * cost.mac_scale;
         let peak = self.fp32_tflops * 1e12 * Self::dtype_scale(sig.dtype);
         let compute_us = flops / (peak * cost.mac_efficiency) * 1e6;
@@ -179,7 +188,7 @@ impl GcnModel {
         let e = sig.dtype.size_bytes() as u64;
         let y = (sig.n * sig.k * ho * wo) as u64 * e;
         let bias = (sig.k * 4) as u64;
-        let conv = self.conv_time_us(sig, "direct");
+        let conv = self.conv_time_us(sig, algo::DIRECT);
         // separate: conv writes y; bias re-reads y + bias, writes y;
         // act re-reads y, writes y — two extra launches + 4 extra y moves.
         let bias_us = self.elementwise_time_us(y + bias, y);

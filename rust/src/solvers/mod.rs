@@ -5,24 +5,36 @@
 //! design rule — "this ensures that kernel compilation launches do not
 //! have side effects"), exposing:
 //! - an applicability predicate over the problem signature,
-//! - the workspace requirement (`miopenConvAlgoPerf_t.memory`),
+//! - the workspace requirement (`miopenConvAlgoPerf_t.memory`) — honest
+//!   for the executing interp backend, not the paper's GPU idealization,
 //! - the artifact signature for (problem, tuning-variant),
 //! - the tuning-parameter grid (§III-B), and
 //! - its cost under the GCN perf model.
 //!
 //! Adding a kernel = add the Pallas file + emit artifacts in aot.py + add
 //! a `Solver` here; the find step then picks it up automatically, exactly
-//! as the paper describes for MIOpen developers.
+//! as the paper describes for MIOpen developers. Algorithm names come
+//! from [`crate::types::algo`] so the registry, the artifact emitters,
+//! the fusion metadata graph, and the workload panels cannot drift.
 
 use std::collections::BTreeMap;
 
 use crate::perfmodel::GcnModel;
-use crate::types::ProblemSig;
+use crate::types::{algo, ProblemSig, TuneTag};
 
+/// One point of a solver's tuning grid: parameter name → value (§III-B).
 pub type TuningParams = BTreeMap<String, i64>;
 
+/// Perf-db key for the direct solver's output-channel tile.
+pub const BLOCK_K_PARAM: &str = "block_k";
+/// Perf-db key for the winograd solver's transform-domain thread count.
+pub const WINO_THREADS_PARAM: &str = "wt";
+
+/// A convolution solver: applicability + cost + artifact naming for one
+/// algorithm family.
 pub trait Solver {
-    /// Algorithm name as used in artifact signatures ("direct", "gemm", ...).
+    /// Algorithm name as used in artifact signatures (see
+    /// [`crate::types::algo`]).
     fn name(&self) -> &'static str;
 
     /// Can this solver handle the problem? Mirrors `fwd_algos`/`bwd_algos`
@@ -31,6 +43,9 @@ pub trait Solver {
     fn is_applicable(&self, sig: &ProblemSig) -> bool;
 
     /// Additional device memory required (reported by the find step).
+    /// This is the *executing* backend's honest accounting: the interp
+    /// winograd kernel materializes its U/V/M transform buffers, the fft
+    /// kernel its frequency-domain spectra.
     fn workspace_bytes(&self, sig: &ProblemSig) -> u64;
 
     /// Tuning-parameter grid, pruned to the problem (paper §III-B).
@@ -42,8 +57,10 @@ pub trait Solver {
     /// Artifact signature for this (problem, optional tuning variant).
     fn artifact_sig(&self, sig: &ProblemSig, tuning: Option<&TuningParams>)
         -> String {
-        let bk = tuning.and_then(|t| t.get("block_k")).map(|v| *v as usize);
-        sig.artifact_sig(self.name(), bk)
+        let bk = tuning
+            .and_then(|t| t.get(BLOCK_K_PARAM))
+            .map(|v| TuneTag::BlockK(*v as usize));
+        sig.artifact_sig_tagged(self.name(), bk)
     }
 
     /// Predicted time under the GCN model (µs).
@@ -59,7 +76,7 @@ pub struct GemmSolver;
 
 impl Solver for GemmSolver {
     fn name(&self) -> &'static str {
-        "gemm"
+        algo::GEMM
     }
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
@@ -67,6 +84,7 @@ impl Solver for GemmSolver {
     }
 
     fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
+        // the im2col column matrix, written then re-read by the GEMM
         let (ho, wo) = sig.out_hw();
         (sig.c * sig.r * sig.s * sig.n * ho * wo) as u64
             * sig.dtype.size_bytes() as u64
@@ -78,7 +96,7 @@ pub struct DirectSolver;
 
 impl Solver for DirectSolver {
     fn name(&self) -> &'static str {
-        "direct"
+        algo::DIRECT
     }
 
     fn is_applicable(&self, _sig: &ProblemSig) -> bool {
@@ -95,7 +113,7 @@ impl Solver for DirectSolver {
         [4i64, 8, 16, 32, 64]
             .iter()
             .filter(|&&b| b as usize <= sig.k.max(4))
-            .map(|&b| TuningParams::from([("block_k".to_string(), b)]))
+            .map(|&b| TuningParams::from([(BLOCK_K_PARAM.to_string(), b)]))
             .collect()
     }
 }
@@ -105,7 +123,7 @@ pub struct ImplicitGemmSolver;
 
 impl Solver for ImplicitGemmSolver {
     fn name(&self) -> &'static str {
-        "implicit"
+        algo::IMPLICIT
     }
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
@@ -118,15 +136,33 @@ impl Solver for ImplicitGemmSolver {
 }
 
 /// Winograd F(2×2, 3×3) — 3×3/stride-1/dense, fwd + bwd-data.
+///
+/// The executing kernel (interp backend) runs the full transform
+/// pipeline: U = GgGᵀ per filter, V = BᵀdB per input tile, sixteen
+/// transform-domain GEMMs M[ξν] = U[ξν]·V[ξν], and the inverse transform
+/// Y = AᵀmA. bwd-data rides the same pipeline via the adjoint identity
+/// (rot-180° filters, mirrored padding), which needs pad ≤ 2.
 pub struct WinogradSolver;
+
+impl WinogradSolver {
+    /// Transform-domain parallelism candidates (threads over the 16
+    /// (ξ,ν) GEMMs).
+    pub const THREAD_GRID: [usize; 3] = [1, 2, 4];
+}
 
 impl Solver for WinogradSolver {
     fn name(&self) -> &'static str {
-        "winograd"
+        algo::WINOGRAD
     }
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
-        (sig.direction == "fwd" || sig.direction == "bwd")
+        let dir_ok = match sig.direction.as_str() {
+            "fwd" => true,
+            // bwd-data maps onto the forward pipeline with pad' = 2 - pad
+            "bwd" => sig.p <= 2 && sig.q <= 2,
+            _ => false,
+        };
+        dir_ok
             && sig.r == 3
             && sig.s == 3
             && sig.u == 1
@@ -136,17 +172,64 @@ impl Solver for WinogradSolver {
             && sig.g == 1
     }
 
-    fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
-        0 // paper: "not requiring additional workspace"
+    fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
+        // honest accounting for the interp pipeline: U (16·K·C) once,
+        // V (16·C·T) and M (16·K·T) per image, T = ⌈Ho/2⌉·⌈Wo/2⌉ tiles.
+        // bwd-data runs the adjoint pipeline, tiling the (H, W) dx
+        // extent instead. (The paper's GPU kernels fuse the transforms
+        // and report zero; our reference executor materializes them.)
+        let (ho, wo) = sig.out_hw();
+        let (eh, ew) =
+            if sig.direction == "bwd" { (sig.h, sig.w) } else { (ho, wo) };
+        let t = (eh.div_ceil(2) * ew.div_ceil(2)) as u64;
+        let (k, c) = (sig.k as u64, (sig.c / sig.g) as u64);
+        16 * (k * c + c * t + k * t) * sig.dtype.size_bytes() as u64
+    }
+
+    fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
+        // more threads than transform positions never helps; 16 is the
+        // hard ceiling, tiny problems stay serial
+        let (ho, wo) = sig.out_hw();
+        let tiles = ho.div_ceil(2) * wo.div_ceil(2);
+        Self::THREAD_GRID
+            .iter()
+            .filter(|&&t| t == 1 || tiles >= 16)
+            .map(|&t| {
+                TuningParams::from([(WINO_THREADS_PARAM.to_string(), t as i64)])
+            })
+            .collect()
+    }
+
+    fn artifact_sig(&self, sig: &ProblemSig, tuning: Option<&TuningParams>)
+        -> String {
+        let wt = tuning
+            .and_then(|t| t.get(WINO_THREADS_PARAM))
+            .map(|v| TuneTag::WinoThreads(*v as usize));
+        sig.artifact_sig_tagged(self.name(), wt)
     }
 }
 
 /// FFT convolution — large filters, forward.
+///
+/// The executing kernel pads each image/filter plane to a power-of-two
+/// extent, runs a radix-2 complex FFT, multiplies pointwise (correlation
+/// via the 180°-rotated filter), and inverse-transforms; strided
+/// problems subsample the full stride-1 correlation.
 pub struct FftSolver;
+
+impl FftSolver {
+    /// Power-of-two FFT extents (fh, fw) for a problem — the
+    /// linear-correlation-safe padded sizes the interp kernel uses.
+    pub fn fft_extents(sig: &ProblemSig) -> (u64, u64) {
+        let fh = (sig.h + 2 * sig.p + sig.r - 1).next_power_of_two();
+        let fw = (sig.w + 2 * sig.q + sig.s - 1).next_power_of_two();
+        (fh as u64, fw as u64)
+    }
+}
 
 impl Solver for FftSolver {
     fn name(&self) -> &'static str {
-        "fft"
+        algo::FFT
     }
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
@@ -158,8 +241,9 @@ impl Solver for FftSolver {
     }
 
     fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
-        let fh = (sig.h + 2 * sig.p + sig.r - 1) as u64;
-        let fw = ((sig.w + 2 * sig.q + sig.s - 1) / 2 + 1) as u64;
+        // complex-f32 spectra: X̂ (N·C planes), Ŵ (K·C), Ŷ (N·K), each
+        // fh×fw — the honest footprint of the interp radix-2 pipeline
+        let (fh, fw) = Self::fft_extents(sig);
         8 * fh * fw
             * (sig.n * sig.c + sig.k * sig.c + sig.n * sig.k) as u64
     }
@@ -183,6 +267,16 @@ pub fn applicable(sig: &ProblemSig) -> Vec<Box<dyn Solver>> {
         .into_iter()
         .filter(|s| s.is_applicable(sig))
         .collect()
+}
+
+/// Workspace for a named algorithm on a problem — the single formula the
+/// artifact emitters (configs.rs, aot.py) and the find step share.
+pub fn workspace_for(algo_name: &str, sig: &ProblemSig) -> u64 {
+    registry()
+        .into_iter()
+        .find(|s| s.name() == algo_name)
+        .map(|s| s.workspace_bytes(sig))
+        .unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -220,6 +314,11 @@ mod tests {
         // bwd-data 3x3 s1: winograd, direct, gemm (no implicit/fft)
         assert_eq!(names(&sig("bwd", 3, 1, 1, 1)),
                    vec!["winograd", "direct", "gemm"]);
+        // bwd-data with pad > 2: the adjoint trick needs pad' = 2 - pad
+        let mut deep_pad = sig("bwd", 3, 1, 1, 1);
+        deep_pad.p = 3;
+        deep_pad.q = 3;
+        assert_eq!(names(&deep_pad), vec!["direct", "gemm"]);
         // wrw: direct + gemm
         assert_eq!(names(&sig("wrw", 3, 1, 1, 1)), vec!["direct", "gemm"]);
         // grouped: only direct
@@ -233,13 +332,26 @@ mod tests {
     fn workspace_reporting() {
         let p = sig("fwd", 3, 1, 1, 1);
         assert_eq!(DirectSolver.workspace_bytes(&p), 0);
-        assert_eq!(WinogradSolver.workspace_bytes(&p), 0);
         assert_eq!(ImplicitGemmSolver.workspace_bytes(&p), 0);
         // gemm workspace = col matrix = CRS * N*Ho*Wo * 4
         let (ho, wo) = p.out_hw();
         assert_eq!(GemmSolver.workspace_bytes(&p),
                    (16 * 9 * 4 * ho * wo * 4) as u64);
-        assert!(FftSolver.workspace_bytes(&sig("fwd", 5, 1, 1, 1)) > 0);
+        // winograd: honest transform buffers — U + V + M, 16 positions
+        let t = (ho.div_ceil(2) * wo.div_ceil(2)) as u64;
+        assert_eq!(WinogradSolver.workspace_bytes(&p),
+                   16 * 4 * (32 * 16 + 16 * t + 32 * t));
+        // fft: three complex spectra sets over pow2-padded planes
+        let f = sig("fwd", 5, 1, 1, 1);
+        let (fh, fw) = FftSolver::fft_extents(&f);
+        assert_eq!(fh, 64); // h + 2p + r - 1 = 28 + 2 + 4 = 34 -> 64
+        assert_eq!(FftSolver.workspace_bytes(&f),
+                   8 * fh * fw * (4 * 16 + 32 * 16 + 4 * 32) as u64);
+        // workspace_for routes through the same formulas
+        assert_eq!(workspace_for("gemm", &p), GemmSolver.workspace_bytes(&p));
+        assert_eq!(workspace_for("winograd", &p),
+                   WinogradSolver.workspace_bytes(&p));
+        assert_eq!(workspace_for("nosuch", &p), 0);
     }
 
     #[test]
@@ -253,11 +365,25 @@ mod tests {
     }
 
     #[test]
+    fn winograd_tuning_grid_and_sig() {
+        let p = sig("fwd", 3, 1, 1, 1); // 28x28 out -> 196 tiles
+        let grid = WinogradSolver.tuning_grid(&p);
+        assert_eq!(grid.len(), 3);
+        let tp = TuningParams::from([(WINO_THREADS_PARAM.to_string(), 4i64)]);
+        assert!(WinogradSolver.artifact_sig(&p, Some(&tp)).ends_with("-wt4"));
+        // tiny problems keep only the serial variant
+        let mut tiny = p.clone();
+        tiny.h = 6;
+        tiny.w = 6;
+        assert_eq!(WinogradSolver.tuning_grid(&tiny).len(), 1);
+    }
+
+    #[test]
     fn artifact_sig_formats() {
         let p = sig("fwd", 3, 1, 1, 1);
         assert_eq!(DirectSolver.artifact_sig(&p, None),
                    "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32");
-        let t = TuningParams::from([("block_k".to_string(), 32i64)]);
+        let t = TuningParams::from([(BLOCK_K_PARAM.to_string(), 32i64)]);
         assert!(DirectSolver.artifact_sig(&p, Some(&t)).ends_with("-bk32"));
     }
 
@@ -265,5 +391,12 @@ mod tests {
     fn solver_order_prefers_winograd() {
         let sols = applicable(&sig("fwd", 3, 1, 1, 1));
         assert_eq!(sols[0].name(), "winograd");
+    }
+
+    #[test]
+    fn registry_order_matches_algo_all() {
+        // types::algo::ALL documents "registry order" — hold it to that
+        let names: Vec<&str> = registry().iter().map(|s| s.name()).collect();
+        assert_eq!(names, algo::ALL.to_vec());
     }
 }

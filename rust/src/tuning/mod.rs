@@ -7,8 +7,12 @@
 //! system for future retrieval."
 //!
 //! A [`TuningSession`] races every tuning variant of every tunable solver
-//! for a problem, optionally pruning the grid with the GCN model before
-//! measuring, and records the winner in the user perf-db.
+//! for a problem — the direct solver's `block_k` output tiles *and* the
+//! winograd solver's transform-domain parallelism (`wt`) — optionally
+//! pruning the grid before measuring, and records each solver's winner
+//! in the user perf-db. The find step then resolves tuned artifact
+//! variants through that db (the db-coherence contract,
+//! docs/ARCHITECTURE.md).
 
 use std::collections::BTreeMap;
 
@@ -20,12 +24,17 @@ use crate::types::{MiopenError, Result};
 /// Result of tuning one solver on one problem.
 #[derive(Debug, Clone)]
 pub struct TuneResult {
+    /// Solver name ([`crate::types::algo`]).
     pub solver: String,
+    /// The winning grid point (recorded in the user perf-db).
     pub best_params: TuningParams,
+    /// Measured time of the winner (µs).
     pub best_time_us: f64,
+    /// Measured time of the untuned default artifact, when it exists.
     pub default_time_us: Option<f64>,
     /// (params, measured µs) for every evaluated grid point.
     pub evaluated: Vec<(TuningParams, f64)>,
+    /// Grid points dropped by the pruned-search heuristic.
     pub pruned_out: usize,
 }
 
@@ -36,6 +45,7 @@ impl TuneResult {
     }
 }
 
+/// Knobs for a tuning session.
 #[derive(Debug, Clone, Default)]
 pub struct TuneOptions {
     /// Keep only the `prune_keep` most promising grid points before
@@ -44,16 +54,19 @@ pub struct TuneOptions {
     pub prune_keep: usize,
 }
 
+/// One auto-tuning run over a handle (borrows its backend + dbs).
 pub struct TuningSession<'h> {
     handle: &'h Handle,
     opts: TuneOptions,
 }
 
 impl<'h> TuningSession<'h> {
+    /// Session with default options (full-grid measurement).
     pub fn new(handle: &'h Handle) -> Self {
         Self { handle, opts: TuneOptions::default() }
     }
 
+    /// Session with explicit [`TuneOptions`].
     pub fn with_options(handle: &'h Handle, opts: TuneOptions) -> Self {
         Self { handle, opts }
     }
@@ -86,13 +99,15 @@ impl<'h> TuningSession<'h> {
                 continue;
             }
 
-            // Pruned search: larger K tiles amortize filter loads until
-            // they exceed K; prefer the biggest feasible tiles and drop
-            // the tail of the grid.
+            // Pruned search: bigger tiles / wider parallelism amortize
+            // fixed costs until they exceed the problem, so prefer the
+            // largest feasible parameter values and drop the tail of the
+            // grid (solver-agnostic: block_k and wt grids both rank by
+            // their single knob).
             let mut pruned_out = 0;
             if self.opts.prune_keep > 0 && available.len() > self.opts.prune_keep {
                 available.sort_by_key(|tp| {
-                    std::cmp::Reverse(tp.get("block_k").copied().unwrap_or(0))
+                    std::cmp::Reverse(tp.values().copied().max().unwrap_or(0))
                 });
                 pruned_out = available.len() - self.opts.prune_keep;
                 available.truncate(self.opts.prune_keep);

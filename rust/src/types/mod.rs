@@ -1,22 +1,55 @@
-//! Core types: data types, tensor descriptors, errors, problem signatures.
+//! Core types: data types, tensor descriptors, errors, problem signatures,
+//! and the canonical algorithm names shared by every layer.
 
 pub mod signature;
 
-pub use signature::ProblemSig;
+pub use signature::{ProblemSig, TuneTag};
+
+/// Canonical convolution-algorithm names (paper §IV-A).
+///
+/// Single source of truth for the strings that appear in artifact
+/// signatures, the find/perf dbs, the solver registry, the fusion
+/// metadata graph, and the workload panels. Everything that names an
+/// algorithm must go through these constants so the layers cannot drift
+/// — matching on a misspelled literal is a compile error, not a silent
+/// never-taken branch.
+pub mod algo {
+    /// im2col + GEMM, the universal fallback (Figure 6 baseline).
+    pub const GEMM: &str = "gemm";
+    /// Direct convolution (the hand-tuned GCN-asm/OpenCL family).
+    pub const DIRECT: &str = "direct";
+    /// Implicit GEMM (composable kernels).
+    pub const IMPLICIT: &str = "implicit";
+    /// Winograd F(2×2, 3×3) minimal-filtering convolution.
+    pub const WINOGRAD: &str = "winograd";
+    /// FFT convolution (frequency-domain pointwise product).
+    pub const FFT: &str = "fft";
+    /// Sentinel for fusion plans that carry no convolution ("NA" plans).
+    pub const NONE: &str = "-";
+    /// All executable conv algorithms, registry order.
+    pub const ALL: [&str; 5] = [WINOGRAD, DIRECT, IMPLICIT, FFT, GEMM];
+}
 
 /// Data types supported by the library (paper §I: "MIOpen supports four
 /// different data-types: float32, float16, bfloat16, and int8").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum DType {
+    /// 32-bit IEEE float (the default compute type).
     F32,
+    /// 16-bit IEEE half.
     F16,
+    /// bfloat16 (truncated f32).
     Bf16,
+    /// Signed 8-bit integer (inference).
     I8,
+    /// Signed 32-bit integer (labels, lengths).
     I32,
+    /// Unsigned 32-bit integer (RNG seeds).
     U32,
 }
 
 impl DType {
+    /// Element size in bytes.
     pub fn size_bytes(self) -> usize {
         match self {
             DType::F32 | DType::I32 | DType::U32 => 4,
@@ -37,6 +70,7 @@ impl DType {
         }
     }
 
+    /// Inverse of [`DType::name`]; `None` for unknown names.
     pub fn parse(s: &str) -> Option<DType> {
         Some(match s {
             "f32" => DType::F32,
@@ -61,33 +95,42 @@ impl std::fmt::Display for DType {
 /// explicit to support the `miopenSetTensorDescriptor` contract.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct TensorDesc {
+    /// Dimension sizes, outermost first (N, C, H, W for rank 4).
     pub dims: Vec<usize>,
+    /// Element strides per dimension (packed row-major by default).
     pub strides: Vec<usize>,
+    /// Element data type.
     pub dtype: DType,
 }
 
 impl TensorDesc {
+    /// Packed (row-major) descriptor over `dims`.
     pub fn new(dims: Vec<usize>, dtype: DType) -> Self {
         let strides = packed_strides(&dims);
         Self { dims, strides, dtype }
     }
 
+    /// Rank-4 NCHW descriptor (the library's canonical layout).
     pub fn nchw(n: usize, c: usize, h: usize, w: usize, dtype: DType) -> Self {
         Self::new(vec![n, c, h, w], dtype)
     }
 
+    /// Rank-1 descriptor (bias/scale vectors).
     pub fn vec(n: usize, dtype: DType) -> Self {
         Self::new(vec![n], dtype)
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.dims.len()
     }
 
+    /// Total element count.
     pub fn elem_count(&self) -> usize {
         self.dims.iter().product()
     }
 
+    /// Total storage size in bytes.
     pub fn size_bytes(&self) -> usize {
         self.elem_count() * self.dtype.size_bytes()
     }
@@ -103,11 +146,13 @@ impl TensorDesc {
         Ok((self.dims[0], self.dims[1], self.dims[2], self.dims[3]))
     }
 
+    /// True when the strides are the packed row-major layout.
     pub fn is_packed(&self) -> bool {
         self.strides == packed_strides(&self.dims)
     }
 }
 
+/// Packed row-major strides for a dimension list.
 pub fn packed_strides(dims: &[usize]) -> Vec<usize> {
     let mut strides = vec![1; dims.len()];
     for i in (0..dims.len().saturating_sub(1)).rev() {
@@ -120,16 +165,27 @@ pub fn packed_strides(dims: &[usize]) -> Vec<usize> {
 /// hand-implemented: no external crates in the hermetic build.
 #[derive(Debug)]
 pub enum MiopenError {
+    /// A descriptor failed validation (`miopenStatusBadParm`).
     BadDescriptor(String),
+    /// No solver/kernel applies to the problem.
     NotApplicable(String),
+    /// The manifest has no artifact for a requested signature.
     ArtifactMissing(String),
+    /// The manifest file is malformed or inconsistent.
     Manifest(String),
+    /// A backend failed while compiling or executing.
     Runtime(String),
+    /// The fusion metadata graph rejected a plan (§V-A).
     FusionRejected(String),
+    /// A find/perf database failed to load, parse, or save.
     Db(String),
+    /// Tensor arguments disagree with the artifact contract.
     ShapeMismatch(String),
+    /// Invariant violation inside the library.
     Internal(String),
+    /// Underlying I/O failure.
     Io(std::io::Error),
+    /// PJRT/XLA error (pjrt feature builds).
     Xla(String),
 }
 
@@ -177,6 +233,7 @@ impl From<xla::Error> for MiopenError {
     }
 }
 
+/// Library-wide result type over [`MiopenError`].
 pub type Result<T> = std::result::Result<T, MiopenError>;
 
 #[cfg(test)]

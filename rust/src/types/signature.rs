@@ -4,33 +4,94 @@
 //! Grammar (mirrors `ConvConfig.sig_params` in python/compile/configs.py):
 //!
 //! ```text
-//! conv_{dir}-{algo}-n{N}c{C}h{H}w{W}k{K}r{R}s{S}u{U}v{V}p{P}q{Q}l{L}j{J}g{G}-{dtype}[-bk{BK}]
+//! conv_{dir}-{algo}-n{N}c{C}h{H}w{W}k{K}r{R}s{S}u{U}v{V}p{P}q{Q}l{L}j{J}g{G}-{dtype}[-bk{BK}|-wt{WT}]
 //! ```
 //!
 //! `dir ∈ {fwd, bwd, wrw}` following MIOpen's naming (forward,
-//! backward-data, backward-weights). The perf-db keys on everything except
-//! the algo/tuning suffix; the exec-cache keys on the full signature.
+//! backward-data, backward-weights). The optional tuning suffix is typed
+//! ([`TuneTag`]): `-bk{BK}` names a direct-solver output-channel tile,
+//! `-wt{WT}` a winograd transform-domain parallelism variant — unknown
+//! suffixes are parse errors, not silently-dropped strings. The perf-db
+//! keys on everything except the algo/tuning suffix; the exec-cache keys
+//! on the full signature.
 
 use crate::types::{DType, MiopenError, Result};
+
+/// Typed tuning-variant suffix on an artifact signature.
+///
+/// The suffix grammar is closed: each tunable solver owns one tag, and
+/// the parser rejects anything else, so a tuned signature can never be
+/// mistaken for a different solver's variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TuneTag {
+    /// `-bk{v}` — the direct solver's output-channel tile (`block_k`).
+    BlockK(usize),
+    /// `-wt{v}` — the winograd solver's transform-domain thread count.
+    WinoThreads(usize),
+}
+
+impl TuneTag {
+    /// The `-xx{v}` suffix as it appears in artifact signatures.
+    pub fn suffix(self) -> String {
+        match self {
+            TuneTag::BlockK(v) => format!("-bk{v}"),
+            TuneTag::WinoThreads(v) => format!("-wt{v}"),
+        }
+    }
+
+    /// Parse one suffix segment (`bk32`, `wt4`) — without the dash.
+    pub fn parse(seg: &str) -> Option<TuneTag> {
+        if let Some(v) = seg.strip_prefix("bk") {
+            return v.parse().ok().map(TuneTag::BlockK);
+        }
+        if let Some(v) = seg.strip_prefix("wt") {
+            return v.parse().ok().map(TuneTag::WinoThreads);
+        }
+        None
+    }
+
+    /// The numeric tuning value.
+    pub fn value(self) -> usize {
+        match self {
+            TuneTag::BlockK(v) | TuneTag::WinoThreads(v) => v,
+        }
+    }
+}
 
 /// Convolution problem key (shapes + conv params + dtype, no algo).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ProblemSig {
-    pub direction: String, // fwd | bwd | wrw
+    /// Direction: `fwd` | `bwd` (data) | `wrw` (weights).
+    pub direction: String,
+    /// Batch size.
     pub n: usize,
+    /// Input channels.
     pub c: usize,
+    /// Input height.
     pub h: usize,
+    /// Input width.
     pub w: usize,
+    /// Output channels (filter count).
     pub k: usize,
+    /// Filter height.
     pub r: usize,
+    /// Filter width.
     pub s: usize,
+    /// Vertical stride.
     pub u: usize,
+    /// Horizontal stride.
     pub v: usize,
+    /// Vertical padding.
     pub p: usize,
+    /// Horizontal padding.
     pub q: usize,
+    /// Vertical dilation.
     pub l: usize,
+    /// Horizontal dilation.
     pub j: usize,
+    /// Group count (1 = dense, C = depthwise).
     pub g: usize,
+    /// Element data type.
     pub dtype: DType,
 }
 
@@ -44,9 +105,18 @@ impl ProblemSig {
         )
     }
 
-    /// Full artifact signature for a given algorithm (+ optional tuning).
+    /// Full artifact signature for a given algorithm, with an optional
+    /// `block_k` tuning variant (the direct solver's knob). Other tuning
+    /// families go through [`ProblemSig::artifact_sig_tagged`].
     pub fn artifact_sig(&self, algo: &str, block_k: Option<usize>) -> String {
-        let suffix = block_k.map(|b| format!("-bk{b}")).unwrap_or_default();
+        self.artifact_sig_tagged(algo, block_k.map(TuneTag::BlockK))
+    }
+
+    /// Full artifact signature for a given algorithm and typed tuning
+    /// suffix (the general form; see [`TuneTag`]).
+    pub fn artifact_sig_tagged(&self, algo: &str, tag: Option<TuneTag>)
+        -> String {
+        let suffix = tag.map(TuneTag::suffix).unwrap_or_default();
         format!(
             "conv_{}-{}-{}-{}{}",
             self.direction,
@@ -63,8 +133,9 @@ impl ProblemSig {
                 self.dtype.name())
     }
 
-    /// Parse a full artifact signature back into (problem, algo, block_k).
-    pub fn parse_artifact(sig: &str) -> Result<(ProblemSig, String, Option<usize>)> {
+    /// Parse a full artifact signature back into (problem, algo, tuning).
+    pub fn parse_artifact(sig: &str)
+        -> Result<(ProblemSig, String, Option<TuneTag>)> {
         let mut parts = sig.split('-');
         let head = parts.next().ok_or_else(|| bad(sig, "empty"))?;
         let direction = head
@@ -78,12 +149,10 @@ impl ProblemSig {
         let params = parts.next().ok_or_else(|| bad(sig, "missing params"))?;
         let dtype_str = parts.next().ok_or_else(|| bad(sig, "missing dtype"))?;
         let dtype = DType::parse(dtype_str).ok_or_else(|| bad(sig, "bad dtype"))?;
-        let block_k = match parts.next() {
+        let tuning = match parts.next() {
             None => None,
             Some(t) => Some(
-                t.strip_prefix("bk")
-                    .and_then(|v| v.parse().ok())
-                    .ok_or_else(|| bad(sig, "bad tuning suffix"))?,
+                TuneTag::parse(t).ok_or_else(|| bad(sig, "bad tuning suffix"))?,
             ),
         };
         if parts.next().is_some() {
@@ -118,7 +187,7 @@ impl ProblemSig {
                 dtype,
             },
             algo,
-            block_k,
+            tuning,
         ))
     }
 
@@ -195,10 +264,23 @@ mod tests {
     #[test]
     fn roundtrip_tuned() {
         let sig = sample().artifact_sig("direct", Some(32));
+        assert!(sig.ends_with("-bk32"));
         let (p, algo, bk) = ProblemSig::parse_artifact(&sig).unwrap();
         assert_eq!(p.params_str(), sample().params_str());
         assert_eq!(algo, "direct");
-        assert_eq!(bk, Some(32));
+        assert_eq!(bk, Some(TuneTag::BlockK(32)));
+    }
+
+    #[test]
+    fn roundtrip_wino_tag() {
+        let sig = sample()
+            .artifact_sig_tagged("winograd", Some(TuneTag::WinoThreads(4)));
+        assert!(sig.ends_with("-wt4"));
+        let (p, algo, tag) = ProblemSig::parse_artifact(&sig).unwrap();
+        assert_eq!(p, sample());
+        assert_eq!(algo, "winograd");
+        assert_eq!(tag, Some(TuneTag::WinoThreads(4)));
+        assert_eq!(tag.unwrap().value(), 4);
     }
 
     #[test]

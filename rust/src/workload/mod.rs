@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::manifest::{Artifact, Manifest};
-use crate::types::{ProblemSig, Result};
+use crate::types::{algo, ProblemSig, Result, TuneTag};
 
 /// One Figure-6 data point: a problem config with per-algorithm artifacts.
 #[derive(Debug, Clone)]
@@ -20,7 +20,7 @@ pub struct Fig6Point {
 
 impl Fig6Point {
     pub fn baseline_sig(&self) -> Option<&String> {
-        self.algos.get("gemm")
+        self.algos.get(algo::GEMM)
     }
 }
 
@@ -69,7 +69,7 @@ pub fn fig7a_points(manifest: &Manifest) -> Result<Vec<Fig7aPoint>> {
             .trim_start_matches("cba-relu-")
             .trim_end_matches("-f32")
             .to_string();
-        let conv_sig = format!("conv_fwd-direct-{params}-f32");
+        let conv_sig = format!("conv_fwd-{}-{params}-f32", algo::DIRECT);
         let (n, k) = (fused.param("n").unwrap_or(0), fused.param("k").unwrap_or(0));
         let conv_art = manifest.require(&conv_sig)?;
         let out = &conv_art.outputs[0].shape;
@@ -154,11 +154,14 @@ pub fn rnn_ablation_points(manifest: &Manifest) -> Vec<RnnAblationPoint> {
 }
 
 /// Tuning-ablation artifacts grouped by problem: db_key -> [(block_k, sig)].
+/// Direct-solver `-bk` variants only; the winograd `-wt` variants carry
+/// the `tune-wino` tag and are consumed by the tuning session directly.
 pub fn tuning_points(manifest: &Manifest)
     -> BTreeMap<String, Vec<(usize, String)>> {
     let mut out: BTreeMap<String, Vec<(usize, String)>> = BTreeMap::new();
     for art in manifest.by_tag("tune") {
-        if let Ok((sig, _, Some(bk))) = ProblemSig::parse_artifact(&art.sig) {
+        if let Ok((sig, _, Some(TuneTag::BlockK(bk)))) =
+            ProblemSig::parse_artifact(&art.sig) {
             out.entry(sig.db_key()).or_default().push((bk, art.sig.clone()));
         }
     }
@@ -204,7 +207,7 @@ mod tests {
         }
         let m = Manifest::load(testutil::artifacts_dir()).unwrap();
         for p in fig6_panel(&m, "fig6a").unwrap() {
-            assert!(!p.algos.contains_key("winograd"), "{}", p.label);
+            assert!(!p.algos.contains_key(algo::WINOGRAD), "{}", p.label);
         }
     }
 

@@ -116,6 +116,70 @@ fn cbna_plan_executes() {
 }
 
 #[test]
+fn winograd_cba_plan_executes_end_to_end() {
+    // Table I winograd row: 3x3/s1, relu, c=32 (>= 18, even) — the
+    // mdgraph selects winograd AND the interp backend executes the
+    // F(2,3) transform pipeline inside the fused kernel (this used to be
+    // select-only: no backend could run a winograd fusion plan).
+    let handle = common::cpu_handle("fusion-wino");
+    let plan = FusionPlan::new(TensorDesc::nchw(4, 32, 14, 14, DType::F32))
+        .add(FusionOp::Conv {
+            desc: ConvDesc::simple(1, 1),
+            filter: FilterDesc::kcrs(8, 32, 3, 3, DType::F32),
+        })
+        .add(FusionOp::Bias)
+        .add(FusionOp::Activation {
+            desc: ActivationDesc::new(ActivationMode::Relu),
+        });
+    let compiled = plan.compile(&handle).unwrap();
+    assert_eq!(compiled.combination, "CBA");
+    assert_eq!(compiled.conv_algo, "winograd");
+
+    let args = common::seeded_inputs(&handle, &compiled.sig, 41).unwrap();
+    let fused = compiled.execute(&args).unwrap()[0].as_f32().unwrap();
+
+    // separate pipeline on the same inputs: winograd conv -> bias -> act
+    let conv_sig = "conv_fwd-winograd-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32";
+    let y = handle
+        .execute_sig(conv_sig, &args[..2].to_vec())
+        .unwrap()
+        .remove(0);
+    let by = handle
+        .execute_sig("bias-4x8x14x14-f32", &[y, args[2].clone()])
+        .unwrap()
+        .remove(0);
+    let ay = handle
+        .execute_sig("act-relu-4x8x14x14-f32", &[by])
+        .unwrap()
+        .remove(0);
+    common::assert_allclose(&fused, &ay.as_f32().unwrap(), 1e-4,
+                            "winograd CBA fused vs separate");
+
+    // ... and against the *direct* conv pipeline within the winograd
+    // numerical budget (golden parity across executing algorithms)
+    let direct_sig = "conv_fwd-direct-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32";
+    let yd = handle
+        .execute_sig(direct_sig, &args[..2].to_vec())
+        .unwrap()
+        .remove(0);
+    let byd = handle
+        .execute_sig("bias-4x8x14x14-f32", &[yd, args[2].clone()])
+        .unwrap()
+        .remove(0);
+    let ayd = handle
+        .execute_sig("act-relu-4x8x14x14-f32", &[byd])
+        .unwrap()
+        .remove(0);
+    common::assert_allclose(&fused, &ayd.as_f32().unwrap(), 1e-3,
+                            "winograd CBA fused vs direct pipeline");
+
+    // the serve path executes the same compiled signature (this is what
+    // the batching workers run per request)
+    let served = handle.execute_sig(&compiled.sig, &args).unwrap();
+    assert_eq!(served[0].as_f32().unwrap(), fused);
+}
+
+#[test]
 fn rejected_plan_does_not_compile() {
     let handle = common::cpu_handle("fusion-reject");
     // 4x4 filter CBNA is outside Table I

@@ -45,6 +45,66 @@ fn tuning_evaluates_grid_and_persists_winner() {
 }
 
 #[test]
+fn tuning_covers_winograd_thread_grid() {
+    // TUNE_CONFIGS[0] is 3x3/s1 — the winograd solver's -wt{1,2,4}
+    // variants are AOT'd, so the session must tune winograd alongside
+    // direct and persist its winner under the "wt" param.
+    let handle = common::cpu_handle("tune-wino");
+    let problem = tunable_problem();
+    let results = TuningSession::new(&handle)
+        .tune_convolution(&problem)
+        .unwrap();
+    let solvers: Vec<&str> =
+        results.iter().map(|r| r.solver.as_str()).collect();
+    assert!(solvers.contains(&"direct"), "{solvers:?}");
+    assert!(solvers.contains(&"winograd"), "{solvers:?}");
+
+    let wino = results.iter().find(|r| r.solver == "winograd").unwrap();
+    assert_eq!(wino.evaluated.len(), 3, "wt grid = {{1, 2, 4}}");
+    assert!(wino.best_params.contains_key("wt"));
+
+    let key = problem.sig().unwrap().db_key();
+    let db = handle.perf_db();
+    assert_eq!(db.get(&key, "winograd").unwrap()["wt"],
+               wino.best_params["wt"]);
+
+    // the find step now benchmarks the tuned winograd variant
+    let results = handle
+        .find_convolution_opt(
+            &problem,
+            &miopen_rs::find::FindOptions { exhaustive: true,
+                                            rank_by_model: false },
+        )
+        .unwrap();
+    let found = results.iter().find(|r| r.algo == "winograd").unwrap();
+    assert!(found.artifact_sig
+                .ends_with(&format!("-wt{}", wino.best_params["wt"])),
+            "find must benchmark the tuned winograd variant: {}",
+            found.artifact_sig);
+}
+
+#[test]
+fn winograd_tuned_variants_agree_numerically() {
+    // every -wt variant runs the same transform pipeline with a
+    // different thread split — bit-identical by construction
+    let handle = common::cpu_handle("tune-wino-numeric");
+    let sig = tunable_problem().sig().unwrap();
+    let base = sig.artifact_sig("winograd", None);
+    let inputs = common::seeded_inputs(&handle, &base, 23).unwrap();
+    let want = handle.execute_sig(&base, &inputs).unwrap()[0]
+        .as_f32()
+        .unwrap();
+    for wt in [1usize, 2, 4] {
+        let s = sig.artifact_sig_tagged(
+            "winograd", Some(miopen_rs::types::TuneTag::WinoThreads(wt)));
+        let got = handle.execute_sig(&s, &inputs).unwrap()[0]
+            .as_f32()
+            .unwrap();
+        assert_eq!(want, got, "wt{wt} must be bit-identical");
+    }
+}
+
+#[test]
 fn tuned_best_not_worse_than_default_within_noise() {
     let handle = common::cpu_handle("tune-best");
     let results = TuningSession::new(&handle)

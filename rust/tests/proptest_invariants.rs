@@ -9,8 +9,9 @@ use miopen_rs::descriptors::{ActivationMode, ConvDesc, ConvMode, FilterDesc,
                              TensorDesc};
 use miopen_rs::fusion::mdgraph::{MdGraph, OpKind, PlanAttrs};
 use miopen_rs::perfmodel::GcnModel;
+use miopen_rs::runtime::interp::kernels as k;
 use miopen_rs::testutil::prop::{choice, forall, usize_in, Gen};
-use miopen_rs::types::{DType, ProblemSig};
+use miopen_rs::types::{DType, ProblemSig, TuneTag};
 use miopen_rs::util::json;
 use miopen_rs::util::rng::SplitMix64;
 
@@ -43,17 +44,82 @@ fn sig_gen() -> Gen<ProblemSig> {
 
 #[test]
 fn prop_signature_roundtrip() {
-    // parse(print(sig)) == sig for every algo and tuning suffix
+    // parse(print(sig)) == sig for every algo and tuning suffix family
     forall("signature-roundtrip", &sig_gen(), CASES, |sig| {
         for algo in ["gemm", "direct", "implicit", "winograd", "fft"] {
-            for bk in [None, Some(8), Some(64)] {
-                let text = sig.artifact_sig(algo, bk);
-                let (parsed, algo2, bk2) = ProblemSig::parse_artifact(&text)
+            for tag in [None, Some(TuneTag::BlockK(8)),
+                        Some(TuneTag::BlockK(64)),
+                        Some(TuneTag::WinoThreads(2)),
+                        Some(TuneTag::WinoThreads(4))] {
+                let text = sig.artifact_sig_tagged(algo, tag);
+                let (parsed, algo2, tag2) = ProblemSig::parse_artifact(&text)
                     .map_err(|e| e.to_string())?;
-                if parsed != *sig || algo2 != algo || bk2 != bk {
+                if parsed != *sig || algo2 != algo || tag2 != tag {
                     return Err(format!("mismatch for {text}"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_applicable_conv_kernels_agree() {
+    // the algorithm zoo computes ONE function: on random geometries,
+    // every applicable kernel (im2col+GEMM, winograd fwd/bwd, fft)
+    // matches the direct reference within 1e-3
+    let geom_gen = Gen::new(|rng: &mut SplitMix64| {
+        let r = [3usize, 5][rng.below(2) as usize];
+        (
+            1 + rng.below(2) as usize,      // n
+            1 + rng.below(3) as usize,      // c
+            4 + rng.below(9) as usize,      // h
+            4 + rng.below(9) as usize,      // w (independent: non-square)
+            1 + rng.below(3) as usize,      // k
+            r,
+            1 + rng.below(2) as usize,      // stride
+            rng.below(3) as usize,          // pad
+        )
+    });
+    forall("conv-kernels-agree", &geom_gen, 60,
+           |&(n, c, h, w, kk, r, u, p)| {
+        if h + 2 * p < r || w + 2 * p < r {
+            return Ok(()); // no valid output extent
+        }
+        let g = k::ConvGeom { p, q: p,
+                              ..k::ConvGeom::dense(n, c, h, w, kk, r, r,
+                                                   u, 0) };
+        let seed = (n * 73 + c * 131 + h * 17 + w * 19 + kk * 23 + r * 29
+                    + u * 31 + p * 37) as u64;
+        let mut rng = SplitMix64::new(seed);
+        let mut x = vec![0f32; n * c * h * w];
+        let mut wts = vec![0f32; kk * c * r * r];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut wts);
+
+        let close = |a: &[f32], b: &[f32], who: &str| -> Result<(), String> {
+            for (i, (p1, p2)) in a.iter().zip(b).enumerate() {
+                let denom = 1f32.max(p1.abs()).max(p2.abs());
+                if (p1 - p2).abs() / denom > 1e-3 {
+                    return Err(format!("{who}[{i}]: {p1} vs {p2}"));
+                }
+            }
+            Ok(())
+        };
+
+        let want = k::conv2d_fwd(&x, &wts, &g);
+        close(&want, &k::conv2d_fwd_im2col(&x, &wts, &g), "im2col")?;
+        close(&want, &k::conv2d_fwd_fft(&x, &wts, &g), "fft")?;
+        if r == 3 && u == 1 {
+            close(&want, &k::conv2d_fwd_winograd(&x, &wts, &g, 0),
+                  "winograd")?;
+            // backward-data parity on the same geometry
+            let (ho, wo) = g.out_hw();
+            let mut dy = vec![0f32; n * kk * ho * wo];
+            rng.fill_normal_f32(&mut dy);
+            let dwant = k::conv2d_bwd_data(&dy, &wts, &g);
+            close(&dwant, &k::conv2d_bwd_data_winograd(&dy, &wts, &g, 0),
+                  "winograd-bwd")?;
         }
         Ok(())
     });

@@ -122,14 +122,17 @@ class Emitter:
 # ---------------------------------------------------------------------------
 
 
-def conv_sig(direction, algo, cc, dtype, bk=None, wt=None):
+def conv_sig(direction, algo, cc, dtype, bk=None, wt=None, gt=None):
     """Artifact signature; bk = direct block_k tile, wt = winograd
-    transform-domain threads (typed TuneTag suffixes on the Rust side)."""
+    transform-domain threads, gt = blocked-GEMM tile-grid index (typed
+    TuneTag suffixes on the Rust side)."""
     t = ""
     if bk is not None:
         t = f"-bk{bk}"
     elif wt is not None:
         t = f"-wt{wt}"
+    elif gt is not None:
+        t = f"-gt{gt}"
     return f"conv_{direction}-{algo}-{cc.sig_params()}-{dtype}{t}"
 
 
@@ -315,6 +318,18 @@ def emit_conv_family(em):
                     workspace_bytes=conv_workspace("fwd", "winograd", cc),
                     tuning={"wt": wt},
                 )
+        for gt in configs.GEMM_TILE_GRID:
+            # gt only changes the host-side MC x NC cache blocking; the
+            # lowered computation is the same im2col+GEMM pipeline
+            em.emit(
+                conv_sig("fwd", "gemm", cc, "f32", gt=gt),
+                make_conv_fn("fwd", "gemm", cc),
+                conv_in_specs("fwd", cc, "f32"),
+                primitive="conv", algo="gemm", direction="fwd",
+                dtype="f32", tags=("tune-gemm",), params=cc.as_dict(),
+                workspace_bytes=conv_workspace("fwd", "gemm", cc),
+                tuning={"gt": gt},
+            )
 
 
 # ---------------------------------------------------------------------------

@@ -140,6 +140,10 @@ DIRECT_BLOCK_K = [4, 8, 16, 32]
 # Winograd transform-domain parallelism variants (mirrors
 # WinogradSolver::THREAD_GRID in rust/src/solvers/mod.rs).
 WINOGRAD_TILE_THREADS = [1, 2, 4]
+# Blocked-GEMM MC x NC tile-grid indices (mirrors gemm::TILE_CONFIGS in
+# rust/src/runtime/interp/gemm.rs): one `-gt{i}` artifact per entry so
+# tune_convolution can race every tile config.
+GEMM_TILE_GRID = [0, 1, 2]
 
 # -- RNN configs ----------------------------------------------------------------
 

@@ -68,9 +68,25 @@ def conv2d_im2col_bwd_weights(dy, x, w_shape, *, stride=(1, 1), pad=(0, 0),
     return dw.reshape(k, c, r, s)
 
 
+# Blocked-engine microkernel strips (mirror of gemm::MR / gemm::NR in
+# rust/src/runtime/interp/gemm.rs — the packed-panel padding below must
+# match the executing engine's).
+GEMM_MR = 4
+GEMM_NR = 16
+
+
 def workspace_bytes(x_shape, w_shape, out_shape, itemsize=4):
-    """Workspace the find step reports for this algorithm (the col buffer)."""
-    n, c, _, _ = x_shape
-    _, _, r, s = w_shape
+    """Arena-aware workspace the find step reports for this algorithm:
+    the per-image im2col column matrix plus the blocked engine's packed
+    A (weights, MR-strip padded) and packed B (col matrix, NR-strip
+    padded) panels. Per-image buffers are reused across the batch by the
+    workspace arena, so N does not multiply in (mirrors
+    GemmSolver::workspace_bytes on the Rust side)."""
+    _, c, _, _ = x_shape
+    k, _, r, s = w_shape
     _, _, ho, wo = out_shape
-    return itemsize * c * r * s * n * ho * wo
+    crs = c * r * s
+    howo = ho * wo
+    pa = -(-k // GEMM_MR) * GEMM_MR * crs
+    pb = -(-howo // GEMM_NR) * GEMM_NR * crs
+    return itemsize * (crs * howo + pa + pb)

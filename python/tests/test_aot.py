@@ -52,6 +52,25 @@ def test_conv_sig_format():
         "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32"
     assert aot.conv_sig("wrw", "gemm", cc, "bf16", bk=8).endswith("-bf16-bk8")
     assert aot.conv_sig("fwd", "winograd", cc, "f32", wt=4).endswith("-f32-wt4")
+    assert aot.conv_sig("fwd", "gemm", cc, "f32", gt=2).endswith("-f32-gt2")
+
+
+def test_gemm_workspace_is_arena_aware():
+    # per-image col matrix + MR/NR strip-padded packing panels; the batch
+    # dimension must NOT multiply in (buffers are arena-reused across n)
+    from compile.kernels import im2col_gemm
+
+    cc = configs.ConvConfig(4, 16, 28, 28, 32, 3, 3, p=1, q=1)
+    ho, wo = cc.out_hw()
+    ws = aot.conv_workspace("fwd", "gemm", cc)
+    crs = cc.c * cc.r * cc.s
+    howo = ho * wo
+    pa = -(-cc.k // im2col_gemm.GEMM_MR) * im2col_gemm.GEMM_MR * crs
+    pb = -(-howo // im2col_gemm.GEMM_NR) * im2col_gemm.GEMM_NR * crs
+    assert ws == 4 * (crs * howo + pa + pb)
+    # doubling the batch leaves the arena footprint unchanged
+    cc2 = configs.ConvConfig(8, 16, 28, 28, 32, 3, 3, p=1, q=1)
+    assert aot.conv_workspace("fwd", "gemm", cc2) == ws
 
 
 def test_config_labels_match_paper_format():

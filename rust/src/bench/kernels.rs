@@ -1,0 +1,323 @@
+//! kernel-bench: naive-vs-blocked GEMM GFLOP/s across square and
+//! conv-shaped problems, plus arena-on vs arena-off warm serve latency
+//! for the im2col conv hot path — the acceptance evidence for the
+//! blocked packed-GEMM engine and the zero-allocation workspace arena.
+//! Results serialize to `BENCH_kernels.json` (see the `kernel-bench` CLI
+//! subcommand, the CI smoke job, and the tier-1 regeneration test).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::bench::BenchConfig;
+use crate::runtime::interp::arena::WorkspaceArena;
+use crate::runtime::interp::gemm;
+use crate::runtime::interp::kernels as k;
+use crate::types::Result;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// One GEMM measurement: the naive triple loop vs the blocked engine
+/// (serial) vs the blocked engine with the thread pool.
+#[derive(Debug, Clone)]
+pub struct GemmPoint {
+    /// Shape label ("256x256x256", "conv 32x144x784", ...).
+    pub name: String,
+    /// Output rows.
+    pub m: usize,
+    /// Inner dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Naive triple-loop throughput.
+    pub naive_gflops: f64,
+    /// Blocked engine, one thread.
+    pub blocked_gflops: f64,
+    /// Blocked engine, shared thread pool.
+    pub blocked_par_gflops: f64,
+    /// blocked (serial) over naive.
+    pub speedup: f64,
+}
+
+/// Arena-on vs arena-off warm latency of the im2col conv hot path, with
+/// the allocation counters that prove the warm path never allocates.
+#[derive(Debug, Clone)]
+pub struct ArenaPoint {
+    /// Problem label (the conv geometry).
+    pub name: String,
+    /// Mean warm latency with a persistent arena (µs).
+    pub warm_arena_us: f64,
+    /// Mean warm latency allocating fresh scratch every call (µs).
+    pub warm_fresh_us: f64,
+    /// Arena allocations during the timed warm phase (must be 0).
+    pub warm_allocs: u64,
+    /// Arena reuses during the timed warm phase.
+    pub warm_reuses: u64,
+}
+
+impl ArenaPoint {
+    /// fresh-allocation latency over arena latency.
+    pub fn speedup(&self) -> f64 {
+        if self.warm_arena_us > 0.0 {
+            self.warm_fresh_us / self.warm_arena_us
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The full kernel-bench result set.
+#[derive(Debug, Clone)]
+pub struct KernelBench {
+    /// GEMM sweep points.
+    pub gemm: Vec<GemmPoint>,
+    /// The arena serve-latency measurement.
+    pub arena: ArenaPoint,
+}
+
+/// The swept GEMM shapes: square problems (the classic blocking
+/// benchmark, 256³ is the acceptance shape) and conv-shaped panels
+/// (K × C·R·S × Ho·Wo as the im2col GEMM sees them).
+pub fn gemm_shapes() -> Vec<(String, usize, usize, usize)> {
+    vec![
+        ("64x64x64".into(), 64, 64, 64),
+        ("128x128x128".into(), 128, 128, 128),
+        ("256x256x256".into(), 256, 256, 256),
+        ("conv 32x144x784".into(), 32, 144, 784),
+        ("conv 64x576x196".into(), 64, 576, 196),
+    ]
+}
+
+fn gflops(m: usize, k: usize, n: usize, us: f64) -> f64 {
+    if us <= 0.0 {
+        return 0.0;
+    }
+    2.0 * (m * k * n) as f64 / (us * 1e-6) / 1e9
+}
+
+/// Run the naive-vs-blocked GEMM sweep.
+pub fn run_gemm_sweep(cfg: &BenchConfig) -> Vec<GemmPoint> {
+    let mut rng = SplitMix64::new(0xB35C);
+    let mut points = Vec::new();
+    for (name, m, k, n) in gemm_shapes() {
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; k * n];
+        rng.fill_normal_f32(&mut a);
+        rng.fill_normal_f32(&mut b);
+        let arena = WorkspaceArena::new();
+        let mut out = vec![0f32; m * n];
+
+        let naive = crate::bench::time_fn(cfg, || {
+            out = gemm::naive_matmul(&a, &b, m, k, n);
+        })
+        .median();
+        let blocked = crate::bench::time_fn(cfg, || {
+            gemm::gemm_into(&mut out, &a, &b, m, k, n, false, false,
+                            gemm::DEFAULT_TILE, 1, &arena);
+        })
+        .median();
+        let blocked_par = crate::bench::time_fn(cfg, || {
+            gemm::gemm_into(&mut out, &a, &b, m, k, n, false, false,
+                            gemm::DEFAULT_TILE, 0, &arena);
+        })
+        .median();
+
+        let naive_gflops = gflops(m, k, n, naive);
+        let blocked_gflops = gflops(m, k, n, blocked);
+        points.push(GemmPoint {
+            name,
+            m,
+            k,
+            n,
+            naive_gflops,
+            blocked_gflops,
+            blocked_par_gflops: gflops(m, k, n, blocked_par),
+            speedup: if naive_gflops > 0.0 {
+                blocked_gflops / naive_gflops
+            } else {
+                0.0
+            },
+        });
+    }
+    points
+}
+
+/// Measure the warm im2col conv path: persistent arena (the serve
+/// configuration — scratch reused, zero allocations) vs a fresh arena
+/// per call (the pre-arena behavior).
+pub fn run_arena_bench(cfg: &BenchConfig) -> ArenaPoint {
+    let g = k::ConvGeom::dense(4, 16, 28, 28, 32, 3, 3, 1, 1);
+    let mut rng = SplitMix64::new(0xA43A);
+    let mut x = vec![0f32; g.n * g.c * g.h * g.w];
+    let mut w = vec![0f32; g.k * g.c * g.r * g.s];
+    rng.fill_normal_f32(&mut x);
+    rng.fill_normal_f32(&mut w);
+
+    let arena = WorkspaceArena::new();
+    // one warmup populates the pool, then snapshot the counters: the
+    // timed phase must not allocate
+    let _ = k::conv2d_fwd_im2col_with(&x, &w, &g, gemm::DEFAULT_TILE,
+                                      &arena);
+    let before = arena.stats();
+    let warm_arena_us = crate::bench::time_fn(cfg, || {
+        let _ = k::conv2d_fwd_im2col_with(&x, &w, &g, gemm::DEFAULT_TILE,
+                                          &arena);
+    })
+    .median();
+    let after = arena.stats();
+
+    let warm_fresh_us = crate::bench::time_fn(cfg, || {
+        let _ = k::conv2d_fwd_im2col_with(&x, &w, &g, gemm::DEFAULT_TILE,
+                                          &WorkspaceArena::new());
+    })
+    .median();
+
+    ArenaPoint {
+        name: format!("conv_fwd gemm n{}c{}h{}w{}k{}r{}s{}",
+                      g.n, g.c, g.h, g.w, g.k, g.r, g.s),
+        warm_arena_us,
+        warm_fresh_us,
+        warm_allocs: after.allocs - before.allocs,
+        warm_reuses: after.reuses - before.reuses,
+    }
+}
+
+/// Run the full kernel-bench suite.
+pub fn run_suite(cfg: &BenchConfig) -> KernelBench {
+    KernelBench {
+        gemm: run_gemm_sweep(cfg),
+        arena: run_arena_bench(cfg),
+    }
+}
+
+/// The engine-vs-naive speedup on the 256×256×256 acceptance shape: the
+/// blocked engine at full capability (packing + register tiling + the
+/// panel-granularity thread split — all tentpole features) against the
+/// serial naive kernel every non-im2col call site used to run.
+pub fn speedup_256(bench: &KernelBench) -> Option<f64> {
+    bench
+        .gemm
+        .iter()
+        .find(|p| p.m == 256 && p.k == 256 && p.n == 256)
+        .map(|p| {
+            p.blocked_gflops.max(p.blocked_par_gflops)
+                / p.naive_gflops.max(f64::MIN_POSITIVE)
+        })
+}
+
+/// The serial blocked-vs-naive speedup on the same shape — what
+/// blocking, packing and register tiling buy with no threads at all
+/// (the thread split cannot carry this number).
+pub fn speedup_256_serial(bench: &KernelBench) -> Option<f64> {
+    bench
+        .gemm
+        .iter()
+        .find(|p| p.m == 256 && p.k == 256 && p.n == 256)
+        .map(|p| p.speedup)
+}
+
+/// Serialize to the `BENCH_kernels.json` schema.
+pub fn to_json(bench: &KernelBench) -> Json {
+    let gemm_arr: Vec<Json> = bench
+        .gemm
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("name", Json::str(p.name.as_str())),
+                ("m", Json::num(p.m as f64)),
+                ("k", Json::num(p.k as f64)),
+                ("n", Json::num(p.n as f64)),
+                ("naive_gflops", Json::num(p.naive_gflops)),
+                ("blocked_gflops", Json::num(p.blocked_gflops)),
+                ("blocked_par_gflops", Json::num(p.blocked_par_gflops)),
+                ("speedup_blocked_vs_naive", Json::num(p.speedup)),
+            ])
+        })
+        .collect();
+    let a = &bench.arena;
+    let arena_obj = Json::obj(vec![
+        ("name", Json::str(a.name.as_str())),
+        ("warm_arena_us", Json::num(a.warm_arena_us)),
+        ("warm_fresh_alloc_us", Json::num(a.warm_fresh_us)),
+        ("warm_allocs", Json::num(a.warm_allocs as f64)),
+        ("warm_reuses", Json::num(a.warm_reuses as f64)),
+        ("arena_speedup", Json::num(a.speedup())),
+        ("zero_alloc_warm_path", Json::Bool(a.warm_allocs == 0)),
+    ]);
+    let mut root = BTreeMap::new();
+    root.insert("workload".to_string(),
+                Json::str("blocked packed-GEMM engine vs naive triple loop \
+                           + workspace-arena serve path"));
+    root.insert("profile".to_string(),
+                Json::str(if cfg!(debug_assertions) { "debug" }
+                          else { "release" }));
+    root.insert("gemm".to_string(), Json::Arr(gemm_arr));
+    root.insert("arena".to_string(), arena_obj);
+    if let Some(s) = speedup_256(bench) {
+        root.insert("speedup_256x256x256".to_string(), Json::num(s));
+    }
+    if let Some(s) = speedup_256_serial(bench) {
+        // blocking + register tiling alone, no threads — so the engine
+        // speedup above cannot be satisfied by the thread split alone
+        root.insert("speedup_256x256x256_serial".to_string(), Json::num(s));
+    }
+    Json::Obj(root)
+}
+
+/// Write `BENCH_kernels.json`.
+pub fn write_json(bench: &KernelBench, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(bench).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_shapes_include_acceptance_shape() {
+        assert!(gemm_shapes().iter().any(|(_, m, k, n)|
+            (*m, *k, *n) == (256, 256, 256)));
+    }
+
+    #[test]
+    fn json_schema_round_trips() {
+        let bench = KernelBench {
+            gemm: vec![GemmPoint {
+                name: "256x256x256".into(),
+                m: 256, k: 256, n: 256,
+                naive_gflops: 1.0,
+                blocked_gflops: 4.0,
+                blocked_par_gflops: 8.0,
+                speedup: 4.0,
+            }],
+            arena: ArenaPoint {
+                name: "conv".into(),
+                warm_arena_us: 100.0,
+                warm_fresh_us: 130.0,
+                warm_allocs: 0,
+                warm_reuses: 12,
+            },
+        };
+        let j = to_json(&bench);
+        // engine speedup = best blocked throughput over naive
+        assert_eq!(j.get("speedup_256x256x256").and_then(Json::as_f64),
+                   Some(8.0));
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("gemm").and_then(Json::as_arr).unwrap().len(), 1);
+        let arena = back.get("arena").unwrap();
+        assert_eq!(arena.get("warm_allocs").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn arena_speedup_guards_divide_by_zero() {
+        let a = ArenaPoint {
+            name: "x".into(),
+            warm_arena_us: 0.0,
+            warm_fresh_us: 1.0,
+            warm_allocs: 0,
+            warm_reuses: 0,
+        };
+        assert_eq!(a.speedup(), 0.0);
+    }
+}

@@ -1,8 +1,10 @@
 //! Bench harness (criterion stand-in, DESIGN.md §Substitutions #5):
 //! warmup + timed iterations with robust statistics, plus the table
 //! printer the figure-reproduction benches share. The serve-bench sweep
-//! (worker count × batch size × arrival rate) lives in [`serve`].
+//! (worker count × batch size × arrival rate) lives in [`serve`]; the
+//! naive-vs-blocked GEMM + workspace-arena sweep lives in [`kernels`].
 
+pub mod kernels;
 pub mod serve;
 
 use std::time::Instant;

@@ -85,6 +85,9 @@ COMMANDS:
                BENCH_serve.json (p50/p99, throughput, cache hit rates)
                  [--requests N] [--workers 1,2,4] [--batches 16]
                  [--rates 0] [--timeout-ms T] [--out FILE]
+  kernel-bench Naive-vs-blocked GEMM GFLOP/s sweep + arena-on/off warm
+               conv latency; writes BENCH_kernels.json
+                 [--iters N] [--out FILE]
   train        E2E tiny-CNN training loop (same as examples/train_cnn)
                  [--steps N]
   fusion-check Check a fusion plan against the metadata graph

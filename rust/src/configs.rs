@@ -167,6 +167,13 @@ pub fn tune_configs() -> Vec<ConvConfig> {
 
 pub const DIRECT_BLOCK_K: [usize; 4] = [4, 8, 16, 32];
 
+/// AOT'd blocked-GEMM tile-grid indices (`-gt{i}`) — one artifact per
+/// entry of the engine's `MC×NC` grid, so the tuning session can race
+/// every tile config (mirrors `configs.GEMM_TILE_GRID` in python).
+pub fn gemm_tile_grid() -> Vec<usize> {
+    (0..crate::runtime::interp::gemm::TILE_CONFIGS.len()).collect()
+}
+
 /// AOT'd winograd transform-domain parallelism variants (`-wt{n}`) —
 /// the solver's grid itself, so a new grid point cannot be silently
 /// filtered by the tuning session for lack of an artifact.
@@ -292,6 +299,10 @@ fn conv_artifact(direction: &str, algo_name: &str, c: &ConvConfig,
             art = art.with_tuning(&[(crate::solvers::WINO_THREADS_PARAM,
                                      t as i64)]);
         }
+        Some(TuneTag::GemmTile(i)) => {
+            art = art.with_tuning(&[(crate::solvers::GEMM_TILE_PARAM,
+                                     i as i64)]);
+        }
         None => {}
     }
     art
@@ -346,7 +357,8 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
         );
     }
     // tuning variants: direct block_k tiles, winograd transform-domain
-    // parallelism (only where the winograd solver applies).
+    // parallelism (only where the winograd solver applies), and the
+    // blocked-GEMM MC×NC tile grid.
     for c in &tune_configs() {
         for bk in DIRECT_BLOCK_K {
             out.push(conv_artifact("fwd", algo::DIRECT, c, DType::F32,
@@ -359,6 +371,11 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
                                        Some(TuneTag::WinoThreads(wt)))
                     .with_tag("tune-wino"));
             }
+        }
+        for gt in gemm_tile_grid() {
+            out.push(conv_artifact("fwd", algo::GEMM, c, DType::F32,
+                                   Some(TuneTag::GemmTile(gt)))
+                .with_tag("tune-gemm"));
         }
     }
 }
@@ -862,6 +879,20 @@ mod tests {
             .require("cba-relu-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32")
             .unwrap();
         assert_eq!(wino.str_param("conv_algo"), Some(algo::WINOGRAD));
+    }
+
+    #[test]
+    fn gemm_tile_variants_carry_tile_param() {
+        let m = Manifest::builtin();
+        for gt in gemm_tile_grid() {
+            let sig = format!(
+                "conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-gt{gt}"
+            );
+            let a = m.require(&sig).unwrap();
+            assert_eq!(a.tuning.get(crate::solvers::GEMM_TILE_PARAM),
+                       Some(&(gt as i64)), "{sig}");
+            assert!(a.has_tag("tune-gemm"));
+        }
     }
 
     #[test]

@@ -75,6 +75,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
         Some("serve-bench") => cmd_serve_bench(args),
+        Some("kernel-bench") => cmd_kernel_bench(args),
         Some("train") => cmd_train(args),
         Some("fusion-check") => cmd_fusion_check(args),
         Some("tables") => cmd_tables(),
@@ -248,6 +249,47 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_serve.json"));
     sb::write_json(&points, &out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_kernel_bench(args: &Args) -> Result<()> {
+    use miopen_rs::bench::kernels as kb;
+
+    let mut cfg = miopen_rs::bench::BenchConfig::from_env();
+    if let Some(iters) = args.opt("iters").and_then(|v| v.parse().ok()) {
+        cfg.timed_iters = iters;
+    }
+    println!("kernel-bench: {} warmup + {} timed iters per point",
+             cfg.warmup_iters, cfg.timed_iters);
+
+    let bench = kb::run_suite(&cfg);
+
+    let mut table = miopen_rs::bench::Table::new(
+        &["shape", "naive GF/s", "blocked GF/s", "blocked+mt GF/s",
+          "speedup"]);
+    for p in &bench.gemm {
+        table.row(vec![
+            p.name.clone(),
+            format!("{:.2}", p.naive_gflops),
+            format!("{:.2}", p.blocked_gflops),
+            format!("{:.2}", p.blocked_par_gflops),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    table.print();
+
+    let a = &bench.arena;
+    println!("arena ({}): warm {:.0}us vs fresh-alloc {:.0}us \
+              ({:.2}x), {} allocs / {} reuses in the warm phase",
+             a.name, a.warm_arena_us, a.warm_fresh_us, a.speedup(),
+             a.warm_allocs, a.warm_reuses);
+    if let Some(s) = kb::speedup_256(&bench) {
+        println!("blocked vs naive @ 256x256x256: {s:.2}x");
+    }
+
+    let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_kernels.json"));
+    kb::write_json(&bench, &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }

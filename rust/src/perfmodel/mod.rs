@@ -30,6 +30,9 @@ pub struct GcnModel {
     pub hbm_gbps: f64,
     /// Per-kernel launch overhead (µs).
     pub launch_us: f64,
+    /// Last-level cache capacity (KiB) — decides whether a blocked
+    /// GEMM's packed panels are re-read from cache or from HBM.
+    pub l2_kib: f64,
 }
 
 impl Default for GcnModel {
@@ -46,7 +49,7 @@ pub struct AlgoCost {
     /// Fraction of peak MAC throughput this kernel reaches.
     pub mac_efficiency: f64,
     /// Extra bytes moved beyond the ideal x+w+y (workspace write+read,
-    /// transform buffers), as returned by [`GcnModel::conv_traffic`].
+    /// packing traffic, transform buffers).
     pub extra_bytes: u64,
     /// Number of kernel launches the algorithm needs.
     pub launches: f64,
@@ -56,13 +59,13 @@ impl GcnModel {
     /// Vega64-class Radeon Instinct profile (the default).
     pub fn vega64() -> Self {
         Self { name: "gfx900-vega64", fp32_tflops: 12.5, hbm_gbps: 484.0,
-               launch_us: 8.0 }
+               launch_us: 8.0, l2_kib: 4096.0 }
     }
 
     /// MI25-like profile for sensitivity checks.
     pub fn mi25() -> Self {
         Self { name: "gfx900-mi25", fp32_tflops: 12.3, hbm_gbps: 484.0,
-               launch_us: 8.0 }
+               launch_us: 8.0, l2_kib: 4096.0 }
     }
 
     fn dtype_scale(dtype: DType) -> f64 {
@@ -85,23 +88,51 @@ impl GcnModel {
     }
 
     /// Cost descriptor for one of the library's conv algorithms
-    /// (named by [`crate::types::algo`] constants).
-    pub fn algo_cost(sig: &ProblemSig, algo_name: &str) -> AlgoCost {
+    /// (named by [`crate::types::algo`] constants). Cache-aware: the
+    /// gemm cost depends on whether the blocked engine's packed panels
+    /// fit this profile's last-level cache.
+    pub fn algo_cost(&self, sig: &ProblemSig, algo_name: &str) -> AlgoCost {
         let (ho, wo) = sig.out_hw();
         let e = sig.dtype.size_bytes() as u64;
         let col_bytes =
             (sig.c / sig.g * sig.r * sig.s * sig.n * ho * wo) as u64 * e;
         let one_by_one = sig.r == 1 && sig.s == 1;
         match algo_name {
-            // im2col + GEMM: col matrix written by im2col then re-read by
-            // the GEMM; two launches (im2col, gemm). GEMM itself runs near
-            // peak, but the unfold pass is pure bandwidth.
-            algo::GEMM => AlgoCost {
-                mac_scale: 1.0,
-                mac_efficiency: 0.70,
-                extra_bytes: 2 * col_bytes,
-                launches: 2.0,
-            },
+            // im2col + blocked GEMM: the col matrix is written by im2col
+            // then re-read by the pack stage; the engine packs A (the
+            // weights) and B (the col matrix) into MR/NR-strip panels
+            // once per image GEMM — packing is written then re-read by
+            // the microkernel, and the re-read hits cache when a KC×NC
+            // B-panel fits the LLC (the point of the MC×KC×NC blocking
+            // the `-gt` tuning grid searches) or spills to HBM when it
+            // does not. Register tiling lifts the GEMM's sustained MAC
+            // efficiency above the old streaming inner loop.
+            algo::GEMM => {
+                // packed A: the (K, CRS) weight panel per image GEMM;
+                // packed B: the whole col matrix, repacked into strips
+                let pack_a = (sig.n * sig.k * sig.c * sig.r * sig.s) as u64
+                    * e;
+                let pack_bytes = pack_a + col_bytes;
+                // cache-awareness: the microkernel re-reads the packed
+                // per-image B across the K row panels — served by the
+                // LLC when one image's packed col matrix fits, paid to
+                // HBM again when it spills (28×28 ResNet-style problems
+                // fit a 4 MiB LLC; 56×56 wide-channel ones do not)
+                let pb_image_bytes =
+                    (col_bytes / sig.n.max(1) as u64) as f64;
+                let reread = if pb_image_bytes <= self.l2_kib * 1024.0 {
+                    1.0
+                } else {
+                    2.0
+                };
+                AlgoCost {
+                    mac_scale: 1.0,
+                    mac_efficiency: 0.80,
+                    extra_bytes: 2 * col_bytes
+                        + ((1.0 + reread) * pack_bytes as f64) as u64,
+                    launches: 2.0,
+                }
+            }
             // direct: no workspace; hand-tuned asm hits high efficiency on
             // 1x1 (it IS a gemm with perfect access) and good on larger
             // filters; input rows are re-read across filter taps -> model
@@ -166,7 +197,7 @@ impl GcnModel {
 
     /// Modeled execution time (µs) of `algo_name` on this problem.
     pub fn conv_time_us(&self, sig: &ProblemSig, algo_name: &str) -> f64 {
-        let cost = Self::algo_cost(sig, algo_name);
+        let cost = self.algo_cost(sig, algo_name);
         let flops = 2.0 * sig.macs() as f64 * cost.mac_scale;
         let peak = self.fp32_tflops * 1e12 * Self::dtype_scale(sig.dtype);
         let compute_us = flops / (peak * cost.mac_efficiency) * 1e6;

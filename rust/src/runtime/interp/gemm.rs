@@ -1,0 +1,513 @@
+//! Cache-blocked, packed GEMM engine — the single f32 matrix-multiply
+//! every interp kernel routes through.
+//!
+//! Replaces the naive row-major triple-loop `matmul` quartet with the
+//! structure CLBlast (Nugteren 2017) and PolyScientist (Tavarageri et
+//! al. 2020) show is the highest-leverage optimization for a portable
+//! primitives library:
+//!
+//! - an `MC×KC×NC` three-level blocking loop nest over panels that fit
+//!   the cache hierarchy (`KC` is a fixed constant so the floating-point
+//!   accumulation grouping — and therefore the bit pattern of the result
+//!   — never depends on the tuned tile choice);
+//! - A and B packed once into contiguous `MR`/`NR`-strip scratch taken
+//!   from the [`WorkspaceArena`], so the microkernel streams unit-stride
+//!   panels regardless of the input layout;
+//! - a register-tiled `MR×NR` f32 microkernel at the core (accumulators
+//!   held in a fixed-size local tile the compiler keeps in vector
+//!   registers);
+//! - transpose variants (`aᵀ·b`, `a·bᵀ`) expressed as *packing modes* —
+//!   the pack routines read the source transposed, the loop nest and
+//!   microkernel never change;
+//! - threading at panel granularity: output rows are split into
+//!   `MR`-aligned panel ranges, each scoped worker owns a disjoint row
+//!   range of `out` and reads the shared packed panels, so the result is
+//!   bit-identical for every thread count.
+//!
+//! Small problems (below [`PACK_MIN_MACS`]) and narrow-B problems
+//! (fewer than [`NR`] columns — the per-bin FFT products, gemv shapes)
+//! skip packing and run a plain loop nest.
+//! Neither path carries the old `av == 0.0` fast-path skip: `0·NaN` must
+//! be `NaN` (IEEE), and the skip silently suppressed NaN/Inf propagation
+//! (pinned by `gemm_propagates_nan_through_zeros`).
+//!
+//! The `MC×NC` tile pair is a tunable dimension (`TuneTag::GemmTile`,
+//! `-gt{i}` artifact variants indexing [`TILE_CONFIGS`]) searched by
+//! `tune_convolution` exactly like the direct solver's `block_k`.
+
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+
+use super::arena::WorkspaceArena;
+
+/// Microkernel rows (output-row register tile).
+pub const MR: usize = 4;
+/// Microkernel columns (output-column register tile; two 8-lane vectors).
+pub const NR: usize = 16;
+/// Fixed k-dimension cache block. Constant (not tuned) so the partial-sum
+/// grouping — and the bit pattern of the result — is identical across
+/// every tile config and thread count.
+pub const KC: usize = 256;
+
+/// One cache-blocking configuration: row panel × column panel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTile {
+    /// Row-panel height (multiple of [`MR`]).
+    pub mc: usize,
+    /// Column-panel width (multiple of [`NR`]).
+    pub nc: usize,
+}
+
+/// The tunable tile grid (`-gt{index}` artifact variants). Ordered small
+/// to large so the pruned-search heuristic ("prefer the largest feasible
+/// parameter") keeps the biggest tiles.
+pub const TILE_CONFIGS: [GemmTile; 3] = [
+    GemmTile { mc: 32, nc: 128 },
+    GemmTile { mc: 64, nc: 256 },
+    GemmTile { mc: 128, nc: 512 },
+];
+
+/// Default tile when no tuned variant is selected.
+pub const DEFAULT_TILE: GemmTile = TILE_CONFIGS[1];
+
+/// Tile config for a tuned `-gt{i}` index (clamped to the grid).
+pub fn tile_for_index(i: usize) -> GemmTile {
+    TILE_CONFIGS[i.min(TILE_CONFIGS.len() - 1)]
+}
+
+/// Below this many multiply-adds the packed path's setup cost dominates:
+/// run the direct small-problem loop instead.
+pub const PACK_MIN_MACS: usize = 1 << 15;
+
+/// Spawning threads only pays off above this many multiply-adds.
+pub const PAR_GEMM_MIN_MACS: usize = 1 << 21;
+
+/// Worker-thread count for parallel GEMM panel-splits: the
+/// MIOPEN_RS_GEMM_THREADS env var, else available parallelism, clamped
+/// to [1, 8] (a *small* pool — the serve engine already parallelizes
+/// across batches, so the inner split stays modest).
+pub fn gemm_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("MIOPEN_RS_GEMM_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+            .clamp(1, 8)
+    })
+}
+
+/// The reference triple loop the blocked engine is benchmarked and
+/// property-tested against (and the shape of the kernel it replaced,
+/// minus the NaN-suppressing `av == 0.0` skip). Kept serial and
+/// unblocked on purpose.
+pub fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = i * k;
+        let orow = i * n;
+        for kk in 0..k {
+            let av = a[arow + kk];
+            let brow = kk * n;
+            for jj in 0..n {
+                out[orow + jj] += av * b[brow + jj];
+            }
+        }
+    }
+    out
+}
+
+/// `out = A·B` into a caller-owned buffer (overwritten, `m × n`
+/// row-major). `ta`/`tb` select the packing modes: `ta` reads A as its
+/// transpose (A stored `k × m`), `tb` reads B as its transpose (B stored
+/// `n × k`). `threads = 0` picks the shared pool size when the problem
+/// is large enough; scratch comes from `arena`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize, ta: bool, tb: bool, tile: GemmTile,
+                 threads: usize, arena: &WorkspaceArena) {
+    assert_eq!(out.len(), m * n, "gemm: bad output length");
+    assert_eq!(a.len(), m * k, "gemm: bad A length");
+    assert_eq!(b.len(), k * n, "gemm: bad B length");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let macs = m * k * n;
+    // Packing pays off only when the problem is big enough AND B is at
+    // least one microkernel strip wide: an NR-padded panel for a 1- or
+    // 2-column B (the FFT per-bin products, gemv-shaped problems) is
+    // pure overhead, so those always run the direct loop.
+    if macs < PACK_MIN_MACS || n < NR {
+        small_gemm_into(out, a, b, m, k, n, ta, tb);
+        return;
+    }
+
+    // pack once, up front: A into MR-row strips, B into NR-column strips
+    let m_strips = m.div_ceil(MR);
+    let n_strips = n.div_ceil(NR);
+    let mut pa = arena.take(m_strips * MR * k);
+    let mut pb = arena.take(n_strips * NR * k);
+    pack_a(&mut pa, a, m, k, ta);
+    pack_b(&mut pb, b, k, n, tb);
+
+    let threads = if threads == 0 { gemm_threads() } else { threads };
+    let threads = if macs < PAR_GEMM_MIN_MACS { 1 } else { threads };
+    let threads = threads.clamp(1, m_strips);
+
+    if threads <= 1 {
+        block_loop(out, &pa, &pb, 0, m, k, n, tile);
+        return;
+    }
+    // panel-granularity split: each worker owns an MR-aligned, disjoint
+    // row range of `out` (bit-identical to the serial path — the k
+    // accumulation order per element never changes)
+    let rows_per = m_strips.div_ceil(threads) * MR;
+    std::thread::scope(|scope| {
+        for (ti, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let (pa, pb) = (&pa, &pb);
+            scope.spawn(move || {
+                let rows = chunk.len() / n;
+                block_loop(chunk, pa, pb, ti * rows_per, rows, k, n, tile);
+            });
+        }
+    });
+}
+
+/// Allocating convenience wrapper over [`gemm_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, ta: bool,
+            tb: bool, tile: GemmTile, threads: usize,
+            arena: &WorkspaceArena) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    gemm_into(&mut out, a, b, m, k, n, ta, tb, tile, threads, arena);
+    out
+}
+
+/// Pack A into MR-row strips: strip `is` holds, for each `kk`, the MR
+/// values `A[is*MR .. is*MR+MR][kk]` contiguously (zero-padded past row
+/// `m`). The transpose variant reads `A` stored `k × m`.
+fn pack_a(pa: &mut [f32], a: &[f32], m: usize, k: usize, ta: bool) {
+    let m_strips = m.div_ceil(MR);
+    for is in 0..m_strips {
+        let base = is * MR;
+        let strip = &mut pa[is * MR * k..(is + 1) * MR * k];
+        for kk in 0..k {
+            let dst = &mut strip[kk * MR..kk * MR + MR];
+            for (i, d) in dst.iter_mut().enumerate() {
+                let row = base + i;
+                *d = if row < m {
+                    if ta { a[kk * m + row] } else { a[row * k + kk] }
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack B into NR-column strips: strip `js` holds, for each `kk`, the NR
+/// values `B[kk][js*NR .. js*NR+NR]` contiguously (zero-padded past
+/// column `n`). The transpose variant reads `B` stored `n × k`.
+fn pack_b(pb: &mut [f32], b: &[f32], k: usize, n: usize, tb: bool) {
+    let n_strips = n.div_ceil(NR);
+    for js in 0..n_strips {
+        let base = js * NR;
+        let strip = &mut pb[js * NR * k..(js + 1) * NR * k];
+        for kk in 0..k {
+            let dst = &mut strip[kk * NR..kk * NR + NR];
+            for (j, d) in dst.iter_mut().enumerate() {
+                let col = base + j;
+                *d = if col < n {
+                    if tb { b[col * k + kk] } else { b[kk * n + col] }
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// The MC×KC×NC blocking nest over pre-packed panels, writing rows
+/// `[row0, row0 + rows)` of the full problem into `out` (whose row 0 is
+/// problem row `row0`).
+fn block_loop(out: &mut [f32], pa: &[f32], pb: &[f32], row0: usize,
+              rows: usize, k: usize, n: usize, tile: GemmTile) {
+    debug_assert_eq!(row0 % MR, 0);
+    out.fill(0.0);
+    let mut jc = 0;
+    while jc < n {
+        let nc = tile.nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let mut ic = 0;
+            while ic < rows {
+                let mc = tile.mc.min(rows - ic);
+                // microtile sweep over the (mc × nc) block
+                let mut jr = jc;
+                while jr < jc + nc {
+                    let js = jr / NR;
+                    let nr_eff = NR.min(jc + nc - jr);
+                    let bpanel = &pb[(js * k + pc) * NR..];
+                    let mut ir = ic;
+                    while ir < ic + mc {
+                        let is = (row0 + ir) / MR;
+                        let mr_eff = MR.min(ic + mc - ir);
+                        let apanel = &pa[(is * k + pc) * MR..];
+                        microkernel(
+                            &mut out[ir * n + jr..],
+                            apanel, bpanel, kc, n, mr_eff, nr_eff,
+                        );
+                        ir += MR;
+                    }
+                    jr += NR;
+                }
+                ic += tile.mc;
+            }
+            pc += KC;
+        }
+        jc += tile.nc;
+    }
+}
+
+/// Register-tiled MR×NR core: accumulate `kc` outer products from the
+/// packed strips into a local tile, then add it to C. `cout[0]` is
+/// C[row][col] of the tile's top-left corner; `ldc` is the C row stride.
+#[inline]
+fn microkernel(cout: &mut [f32], apanel: &[f32], bpanel: &[f32], kc: usize,
+               ldc: usize, mr_eff: usize, nr_eff: usize) {
+    let mut acc = [[0f32; NR]; MR];
+    for kk in 0..kc {
+        let av = &apanel[kk * MR..kk * MR + MR];
+        let bv = &bpanel[kk * NR..kk * NR + NR];
+        for i in 0..MR {
+            let ai = av[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] += ai * bv[j];
+            }
+        }
+    }
+    for i in 0..mr_eff {
+        let crow = &mut cout[i * ldc..i * ldc + nr_eff];
+        for (c, v) in crow.iter_mut().zip(&acc[i]) {
+            *c += *v;
+        }
+    }
+}
+
+/// Direct loop nest for problems too small to amortize packing. Same
+/// ascending-k accumulation order per output element as the packed path
+/// within one KC chunk; no zero-skip (NaN/Inf propagate).
+fn small_gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
+                   k: usize, n: usize, ta: bool, tb: bool) {
+    out.fill(0.0);
+    match (ta, tb) {
+        (false, false) => {
+            for i in 0..m {
+                let arow = i * k;
+                let orow = i * n;
+                for kk in 0..k {
+                    let av = a[arow + kk];
+                    let brow = kk * n;
+                    for jj in 0..n {
+                        out[orow + jj] += av * b[brow + jj];
+                    }
+                }
+            }
+        }
+        (false, true) => {
+            // a (m,k) · bᵀ, b stored (n,k): dot products over contiguous rows
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                for jj in 0..n {
+                    let brow = &b[jj * k..(jj + 1) * k];
+                    let mut acc = 0f32;
+                    for (x, y) in arow.iter().zip(brow) {
+                        acc += x * y;
+                    }
+                    out[i * n + jj] = acc;
+                }
+            }
+        }
+        (true, false) => {
+            // aᵀ · b, a stored (k,m)
+            for kk in 0..k {
+                let arow = kk * m;
+                let brow = kk * n;
+                for i in 0..m {
+                    let av = a[arow + i];
+                    let orow = i * n;
+                    for jj in 0..n {
+                        out[orow + jj] += av * b[brow + jj];
+                    }
+                }
+            }
+        }
+        (true, true) => {
+            for i in 0..m {
+                for jj in 0..n {
+                    let mut acc = 0f32;
+                    for kk in 0..k {
+                        acc += a[kk * m + i] * b[jj * k + kk];
+                    }
+                    out[i * n + jj] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v);
+        v
+    }
+
+    fn rel_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let denom = 1f32.max(x.abs()).max(y.abs());
+            assert!((x - y).abs() / denom <= tol, "[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_across_shapes() {
+        let arena = WorkspaceArena::new();
+        for (m, k, n) in [(1, 1, 1), (1, 7, 1), (3, 5, 4), (4, 16, 16),
+                          (17, 33, 63), (64, 300, 70), (96, 96, 96),
+                          (33, 257, 49)] {
+            let a = rand_mat(m * k, 11 + m as u64);
+            let b = rand_mat(k * n, 23 + n as u64);
+            let want = naive_matmul(&a, &b, m, k, n);
+            let got = gemm(&a, &b, m, k, n, false, false, DEFAULT_TILE, 1,
+                           &arena);
+            rel_close(&want, &got, 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_packing_modes_agree() {
+        let arena = WorkspaceArena::new();
+        let (m, k, n) = (13, 37, 29);
+        let a = rand_mat(m * k, 5);
+        let b = rand_mat(k * n, 6);
+        let want = naive_matmul(&a, &b, m, k, n);
+        // aᵀ stored (k, m)
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        // bᵀ stored (n, k)
+        let mut bt = vec![0f32; n * k];
+        for kk in 0..k {
+            for jj in 0..n {
+                bt[jj * k + kk] = b[kk * n + jj];
+            }
+        }
+        for (aa, bb, ta, tb) in [(&a, &bt, false, true),
+                                 (&at, &b, true, false),
+                                 (&at, &bt, true, true)] {
+            let got = gemm(aa, bb, m, k, n, ta, tb, DEFAULT_TILE, 1, &arena);
+            rel_close(&want, &got, 1e-5);
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts_and_tiles() {
+        let arena = WorkspaceArena::new();
+        // big enough to force the packed + threaded path
+        let (m, k, n) = (96, 400, 160);
+        let a = rand_mat(m * k, 77);
+        let b = rand_mat(k * n, 88);
+        let base = gemm(&a, &b, m, k, n, false, false, TILE_CONFIGS[0], 1,
+                        &arena);
+        for tile in TILE_CONFIGS {
+            for threads in [1usize, 2, 3, 8] {
+                let got = gemm(&a, &b, m, k, n, false, false, tile, threads,
+                               &arena);
+                assert_eq!(base, got, "tile {tile:?} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_propagates_nan_through_zeros() {
+        // the old kernel's `av == 0.0` skip turned 0·NaN into 0 — IEEE
+        // says NaN. Pin both engine paths.
+        let arena = WorkspaceArena::new();
+        // small path
+        let a = [0.0f32, 0.0];
+        let b = [f32::NAN, 1.0];
+        let y = gemm(&a, &b, 1, 2, 1, false, false, DEFAULT_TILE, 1, &arena);
+        assert!(y[0].is_nan(), "0*NaN must propagate (small path)");
+        // packed path: zero A row against a NaN in B
+        let (m, k, n) = (8, 64, 64);
+        let a = vec![0f32; m * k];
+        let mut b = rand_mat(k * n, 3);
+        b[5] = f32::NAN;
+        assert!(m * k * n >= PACK_MIN_MACS);
+        let y = gemm(&a, &b, m, k, n, false, false, DEFAULT_TILE, 1, &arena);
+        assert!(y.iter().any(|v| v.is_nan()),
+                "0*NaN must propagate (packed path)");
+        // ... and Inf: 0 * Inf = NaN, not 0
+        let b = vec![f32::INFINITY; 2];
+        let y = gemm(&[0.0, 0.0], &b, 1, 2, 1, false, false, DEFAULT_TILE,
+                     1, &arena);
+        assert!(y[0].is_nan());
+    }
+
+    #[test]
+    fn warm_gemm_is_allocation_free() {
+        let arena = WorkspaceArena::new();
+        let (m, k, n) = (64, 128, 64);
+        let a = rand_mat(m * k, 1);
+        let b = rand_mat(k * n, 2);
+        let mut out = vec![0f32; m * n];
+        gemm_into(&mut out, &a, &b, m, k, n, false, false, DEFAULT_TILE, 1,
+                  &arena);
+        let allocs = arena.stats().allocs;
+        for _ in 0..4 {
+            gemm_into(&mut out, &a, &b, m, k, n, false, false, DEFAULT_TILE,
+                      1, &arena);
+        }
+        assert_eq!(arena.stats().allocs, allocs,
+                   "warm packed GEMMs must reuse arena scratch");
+    }
+
+    #[test]
+    fn tile_grid_is_microkernel_aligned() {
+        for t in TILE_CONFIGS {
+            assert_eq!(t.mc % MR, 0, "{t:?}");
+            assert_eq!(t.nc % NR, 0, "{t:?}");
+        }
+        assert_eq!(tile_for_index(0), TILE_CONFIGS[0]);
+        assert_eq!(tile_for_index(99), TILE_CONFIGS[TILE_CONFIGS.len() - 1]);
+    }
+
+    #[test]
+    fn degenerate_vector_shapes() {
+        let arena = WorkspaceArena::new();
+        // 1×k×1: a dot product
+        let k = 513;
+        let a = rand_mat(k, 9);
+        let b = rand_mat(k, 10);
+        let want = naive_matmul(&a, &b, 1, k, 1);
+        let got = gemm(&a, &b, 1, k, 1, false, false, DEFAULT_TILE, 0,
+                       &arena);
+        rel_close(&want, &got, 1e-5);
+    }
+}

@@ -9,9 +9,16 @@
 //! - FFT convolution (`conv2d_fwd_fft`) — radix-2 Cooley-Tukey over
 //!   power-of-two-padded planes, pointwise complex product, inverse.
 //!
-//! Everything is written for clarity and auditability, not speed:
+//! Everything is written for clarity and auditability first:
 //! straightforward loops over packed row-major NCHW/KCRS buffers, f32
-//! arithmetic with f64 accumulation where statistics demand it. Golden
+//! arithmetic with f64 accumulation where statistics demand it. The one
+//! deliberate exception is matrix multiplication: every GEMM in this
+//! module routes through the cache-blocked, packed engine in
+//! [`super::gemm`] (im2col, the winograd transform-domain stage, the
+//! per-bin FFT products, the RNN gate GEMMs). Conv kernels draw scratch
+//! from the executable's [`WorkspaceArena`] so warm executions allocate
+//! nothing; the RNN sequence kernels hoist a per-sequence arena so the
+//! gate-GEMM panels are reused across timesteps. Golden
 //! parity fixtures (tests/golden_parity.rs) pin these functions to the
 //! JAX reference within 1e-4, and the winograd/fft kernels to the direct
 //! kernel within 1e-3 across odd/even, padded, and non-square shapes.
@@ -19,8 +26,12 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::needless_range_loop)]
 
+use super::arena::WorkspaceArena;
+use super::gemm::{self, GemmTile, DEFAULT_TILE};
 use crate::descriptors::ActivationMode;
 use crate::types::ProblemSig;
+
+pub use super::gemm::{gemm_threads, naive_matmul, PAR_GEMM_MIN_MACS};
 
 pub const BN_EPS: f32 = 1e-5;
 
@@ -113,17 +124,28 @@ pub fn conv2d_fwd(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
 }
 
 /// im2col + GEMM forward convolution (the paper's universal fallback;
-/// dense only, matching the gemm solver's applicability).
+/// dense only, matching the gemm solver's applicability). Convenience
+/// wrapper over [`conv2d_fwd_im2col_with`] with a throwaway arena and
+/// the default tile.
 pub fn conv2d_fwd_im2col(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    conv2d_fwd_im2col_with(x, w, g, DEFAULT_TILE, &WorkspaceArena::new())
+}
+
+/// im2col + GEMM with an explicit blocking tile (the `-gt{i}` tuning
+/// knob) and scratch arena: the column matrix and the GEMM packing
+/// panels are checked out of `arena` and reused across calls.
+pub fn conv2d_fwd_im2col_with(x: &[f32], w: &[f32], g: &ConvGeom,
+                              tile: GemmTile, arena: &WorkspaceArena)
+    -> Vec<f32> {
     assert_eq!(g.g, 1, "im2col path is dense-only");
     let (ho, wo) = g.out_hw();
     let howo = ho * wo;
     let crs = g.c * g.r * g.s;
     let mut y = vec![0f32; g.n * g.k * howo];
-    let mut col = vec![0f32; crs * howo];
+    let mut col = arena.take(crs * howo);
     for n in 0..g.n {
         // unfold into the (C*R*S, Ho*Wo) column matrix
-        col.iter_mut().for_each(|v| *v = 0.0);
+        col.fill(0.0);
         for c in 0..g.c {
             for fr in 0..g.r {
                 for fs in 0..g.s {
@@ -146,10 +168,11 @@ pub fn conv2d_fwd_im2col(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
                 }
             }
         }
-        // y[n] = W (K, CRS) @ col (CRS, HoWo) — row-split across the
-        // scoped-thread pool when the GEMM is big enough to amortize it
-        let out = matmul_par(w, &col, g.k, crs, howo);
-        y[n * g.k * howo..(n + 1) * g.k * howo].copy_from_slice(&out);
+        // y[n] = W (K, CRS) @ col (CRS, HoWo), written straight into the
+        // output slab — panel-split across the scoped-thread pool when
+        // the GEMM is big enough to amortize it (threads = 0 → auto)
+        gemm::gemm_into(&mut y[n * g.k * howo..(n + 1) * g.k * howo], w,
+                        &col, g.k, crs, howo, false, false, tile, 0, arena);
     }
     y
 }
@@ -241,124 +264,40 @@ pub fn conv2d_bwd_weights(dy: &[f32], x: &[f32], g: &ConvGeom) -> Vec<f32> {
 }
 
 // ---------------------------------------------------------------------------
-// GEMM helpers (row-major)
+// GEMM helpers (row-major) — thin wrappers over the blocked engine in
+// [`super::gemm`]. The old naive quartet is gone; transpose variants are
+// packing modes, threading is panel-granularity, and no path carries the
+// NaN-suppressing `av == 0.0` skip.
 // ---------------------------------------------------------------------------
 
-/// a (m,k) @ b (k,n) -> (m,n).
+/// a (m,k) @ b (k,n) -> (m,n), serial.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        let arow = i * k;
-        let orow = i * n;
-        for kk in 0..k {
-            let av = a[arow + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = kk * n;
-            for jj in 0..n {
-                out[orow + jj] += av * b[brow + jj];
-            }
-        }
-    }
-    out
+    gemm::gemm(a, b, m, k, n, false, false, DEFAULT_TILE, 1,
+               &WorkspaceArena::new())
 }
 
-/// Worker-thread count for the parallel GEMM row-split: the
-/// MIOPEN_RS_GEMM_THREADS env var, else available parallelism, clamped
-/// to [1, 8] (a *small* pool — the serve engine already parallelizes
-/// across batches, so the inner split stays modest).
-pub fn gemm_threads() -> usize {
-    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *THREADS.get_or_init(|| {
-        std::env::var("MIOPEN_RS_GEMM_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1)
-            })
-            .clamp(1, 8)
-    })
-}
-
-/// Spawning threads only pays off above this many multiply-adds.
-const PAR_GEMM_MIN_MACS: usize = 1 << 21;
-
-/// `matmul` with the output rows split across a scoped-thread pool.
-/// Each thread owns a disjoint row range of `out`, so the per-row
-/// accumulation order — and therefore the result — is bit-identical to
-/// the serial path. Falls back to [`matmul`] for small problems.
+/// [`matmul`] with the output row panels split across the scoped-thread
+/// pool (bit-identical to the serial path; falls back to it for small
+/// problems).
 pub fn matmul_par(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     -> Vec<f32> {
-    let threads = gemm_threads().min(m.max(1));
-    if threads <= 1 || m * k * n < PAR_GEMM_MIN_MACS {
-        return matmul(a, b, m, k, n);
-    }
-    let mut out = vec![0f32; m * n];
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (ti, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-            scope.spawn(move || {
-                let row0 = ti * rows_per;
-                for i in 0..chunk.len() / n {
-                    let arow = (row0 + i) * k;
-                    let orow = i * n;
-                    for kk in 0..k {
-                        let av = a[arow + kk];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = kk * n;
-                        for jj in 0..n {
-                            chunk[orow + jj] += av * b[brow + jj];
-                        }
-                    }
-                }
-            });
-        }
-    });
-    out
+    gemm::gemm(a, b, m, k, n, false, false, DEFAULT_TILE, 0,
+               &WorkspaceArena::new())
 }
 
-/// a (m,k) @ b^T where b is (n,k) -> (m,n).
+/// a (m,k) @ b^T where b is (n,k) -> (m,n). B-transposed packing mode.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     -> Vec<f32> {
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        for jj in 0..n {
-            let mut acc = 0f32;
-            let arow = i * k;
-            let brow = jj * k;
-            for kk in 0..k {
-                acc += a[arow + kk] * b[brow + kk];
-            }
-            out[i * n + jj] = acc;
-        }
-    }
-    out
+    gemm::gemm(a, b, m, k, n, false, true, DEFAULT_TILE, 1,
+               &WorkspaceArena::new())
 }
 
-/// a^T @ b where a is (k,m), b is (k,n) -> (m,n).
+/// a^T @ b where a is (k,m), b is (k,n) -> (m,n). A-transposed packing
+/// mode.
 pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize)
     -> Vec<f32> {
-    let mut out = vec![0f32; m * n];
-    for kk in 0..k {
-        let arow = kk * m;
-        let brow = kk * n;
-        for i in 0..m {
-            let av = a[arow + i];
-            if av == 0.0 {
-                continue;
-            }
-            let orow = i * n;
-            for jj in 0..n {
-                out[orow + jj] += av * b[brow + jj];
-            }
-        }
-    }
-    out
+    gemm::gemm(a, b, m, k, n, true, false, DEFAULT_TILE, 1,
+               &WorkspaceArena::new())
 }
 
 // ---------------------------------------------------------------------------
@@ -476,20 +415,23 @@ fn wino_output_tf(m4: &[f32; 16]) -> [f32; 4] {
 
 /// The 16 transform-domain GEMMs M[pos] = U[pos] (K,C) @ V[pos] (C,T),
 /// split across `threads` scoped workers (each owns disjoint positions,
-/// so the result is bit-identical for every thread count).
-fn wino_batched_gemm(u: &[f32], v: &[f32], k: usize, c: usize, t: usize,
-                     threads: usize) -> Vec<f32> {
+/// so the result is bit-identical for every thread count). Each position
+/// runs through the shared blocked engine with scratch from `arena`,
+/// writing straight into the caller's M slab.
+fn wino_batched_gemm(m: &mut [f32], u: &[f32], v: &[f32], k: usize,
+                     c: usize, t: usize, threads: usize,
+                     arena: &WorkspaceArena) {
     let kc = k * c;
     let ct = c * t;
     let kt = k * t;
-    let mut m = vec![0f32; 16 * kt];
+    debug_assert_eq!(m.len(), 16 * kt);
     if threads <= 1 {
-        for pos in 0..16 {
-            let out = matmul(&u[pos * kc..(pos + 1) * kc],
-                             &v[pos * ct..(pos + 1) * ct], k, c, t);
-            m[pos * kt..(pos + 1) * kt].copy_from_slice(&out);
+        for (pos, slab) in m.chunks_mut(kt).enumerate() {
+            gemm::gemm_into(slab, &u[pos * kc..(pos + 1) * kc],
+                            &v[pos * ct..(pos + 1) * ct], k, c, t, false,
+                            false, DEFAULT_TILE, 1, arena);
         }
-        return m;
+        return;
     }
     let per = 16usize.div_ceil(threads);
     std::thread::scope(|scope| {
@@ -497,14 +439,13 @@ fn wino_batched_gemm(u: &[f32], v: &[f32], k: usize, c: usize, t: usize,
             scope.spawn(move || {
                 for (off, slab) in chunk.chunks_mut(kt).enumerate() {
                     let pos = bi * per + off;
-                    let out = matmul(&u[pos * kc..(pos + 1) * kc],
-                                     &v[pos * ct..(pos + 1) * ct], k, c, t);
-                    slab.copy_from_slice(&out);
+                    gemm::gemm_into(slab, &u[pos * kc..(pos + 1) * kc],
+                                    &v[pos * ct..(pos + 1) * ct], k, c, t,
+                                    false, false, DEFAULT_TILE, 1, arena);
                 }
             });
         }
     });
-    m
 }
 
 /// Effective thread count for the winograd transform-domain GEMMs:
@@ -519,8 +460,19 @@ fn wino_threads(tuned: usize) -> usize {
 /// stride 1, dilation 1, dense (g = 1); any padding; odd output extents
 /// are handled by clipping the last tile row/column. `threads` tunes the
 /// transform-domain parallelism (the `-wt` variants); 0 = auto.
+/// Convenience wrapper over [`conv2d_fwd_winograd_with`] with a
+/// throwaway arena.
 pub fn conv2d_fwd_winograd(x: &[f32], w: &[f32], g: &ConvGeom,
                            threads: usize) -> Vec<f32> {
+    conv2d_fwd_winograd_with(x, w, g, threads, &WorkspaceArena::new())
+}
+
+/// [`conv2d_fwd_winograd`] with the U/V/M transform tensors (and the
+/// blocked engine's packing panels) checked out of `arena` so warm
+/// executions allocate nothing.
+pub fn conv2d_fwd_winograd_with(x: &[f32], w: &[f32], g: &ConvGeom,
+                                threads: usize, arena: &WorkspaceArena)
+    -> Vec<f32> {
     assert!(g.r == 3 && g.s == 3 && g.u == 1 && g.v == 1 && g.l == 1
                 && g.j == 1 && g.g == 1,
             "winograd F(2,3) requires 3x3/stride-1/dense");
@@ -534,7 +486,7 @@ pub fn conv2d_fwd_winograd(x: &[f32], w: &[f32], g: &ConvGeom,
     let kt = g.k * t;
 
     // filter transform U[pos][k][c], shared across the batch
-    let mut u = vec![0f32; 16 * kc];
+    let mut u = arena.take(16 * kc);
     for k in 0..g.k {
         for c in 0..g.c {
             let wrow = (k * g.c + c) * 9;
@@ -546,7 +498,8 @@ pub fn conv2d_fwd_winograd(x: &[f32], w: &[f32], g: &ConvGeom,
     }
 
     let mut y = vec![0f32; g.n * g.k * ho * wo];
-    let mut v = vec![0f32; 16 * ct];
+    let mut v = arena.take(16 * ct);
+    let mut m = arena.take(16 * kt);
     for n in 0..g.n {
         // data transform V[pos][c][tile] (every slot is overwritten)
         for c in 0..g.c {
@@ -577,7 +530,7 @@ pub fn conv2d_fwd_winograd(x: &[f32], w: &[f32], g: &ConvGeom,
             }
         }
         // sixteen (K,C)x(C,T) GEMMs — the 2.25x-fewer-MACs hot stage
-        let m = wino_batched_gemm(&u, &v, g.k, g.c, t, threads);
+        wino_batched_gemm(&mut m, &u, &v, g.k, g.c, t, threads, arena);
         // inverse transform, clipping the partial last row/column
         for k in 0..g.k {
             for ty in 0..th {
@@ -611,14 +564,23 @@ pub fn conv2d_fwd_winograd(x: &[f32], w: &[f32], g: &ConvGeom,
 
 /// Winograd F(2×2, 3×3) backward-data via the adjoint identity:
 /// dx = winograd_fwd(dy, rot180(w)ᵀ) with mirrored padding p' = 2 - p.
-/// Requires the forward constraints plus p, q ≤ 2.
+/// Requires the forward constraints plus p, q ≤ 2. Convenience wrapper
+/// over [`conv2d_bwd_data_winograd_with`] with a throwaway arena.
 pub fn conv2d_bwd_data_winograd(dy: &[f32], w: &[f32], g: &ConvGeom,
                                 threads: usize) -> Vec<f32> {
+    conv2d_bwd_data_winograd_with(dy, w, g, threads, &WorkspaceArena::new())
+}
+
+/// [`conv2d_bwd_data_winograd`] drawing all transform scratch from
+/// `arena`.
+pub fn conv2d_bwd_data_winograd_with(dy: &[f32], w: &[f32], g: &ConvGeom,
+                                     threads: usize,
+                                     arena: &WorkspaceArena) -> Vec<f32> {
     assert!(g.p <= 2 && g.q <= 2,
             "winograd bwd-data needs pad <= 2 (mirrored padding)");
     let (ho, wo) = g.out_hw();
     // w̃[c][k] = 180°-rotated w[k][c]
-    let mut wt = vec![0f32; g.c * g.k * 9];
+    let mut wt = arena.take(g.c * g.k * 9);
     for k in 0..g.k {
         for c in 0..g.c {
             let src = (k * g.c + c) * 9;
@@ -635,7 +597,7 @@ pub fn conv2d_bwd_data_winograd(dy: &[f32], w: &[f32], g: &ConvGeom,
         n: g.n, c: g.k, h: ho, w: wo, k: g.c, r: 3, s: 3, u: 1, v: 1,
         p: 2 - g.p, q: 2 - g.q, l: 1, j: 1, g: 1,
     };
-    conv2d_fwd_winograd(dy, &wt, &gt, threads)
+    conv2d_fwd_winograd_with(dy, &wt, &gt, threads, arena)
 }
 
 // ---------------------------------------------------------------------------
@@ -703,14 +665,16 @@ fn fft1d(re: &mut [f32], im: &mut [f32], invert: bool) {
     }
 }
 
-/// In-place 2D FFT over a (h, w) row-major complex plane.
-fn fft2d(re: &mut [f32], im: &mut [f32], h: usize, w: usize, invert: bool) {
+/// In-place 2D FFT over a (h, w) row-major complex plane; the column
+/// transpose scratch comes from `arena`.
+fn fft2d(re: &mut [f32], im: &mut [f32], h: usize, w: usize, invert: bool,
+         arena: &WorkspaceArena) {
     for r in 0..h {
         fft1d(&mut re[r * w..(r + 1) * w], &mut im[r * w..(r + 1) * w],
               invert);
     }
-    let mut cr = vec![0f32; h];
-    let mut ci = vec![0f32; h];
+    let mut cr = arena.take(h);
+    let mut ci = arena.take(h);
     for c in 0..w {
         for r in 0..h {
             cr[r] = re[r * w + c];
@@ -724,42 +688,94 @@ fn fft2d(re: &mut [f32], im: &mut [f32], h: usize, w: usize, invert: bool) {
     }
 }
 
-/// FFT forward convolution. Dense (g = 1), dilation 1, any filter size,
-/// stride handled by subsampling the stride-1 correlation. Matches the
-/// direct kernel within FFT round-off (≤1e-3 budget at library scale).
-pub fn conv2d_fwd_fft(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
-    assert!(g.g == 1 && g.l == 1 && g.j == 1,
-            "fft conv requires dense undilated problems");
-    let (ho, wo) = g.out_hw();
+/// Bin-major FFT filter spectrum: for every frequency bin `i` of the
+/// pow2-padded plane, the (K, C) complex matrix `Ŵ[i]` stored as
+/// re/im planes (`fr[i·K·C + k·C + c]`). This is the weight-dependent,
+/// input-independent half of the FFT pipeline — the interp executable
+/// caches it so serving never re-transforms weights.
+pub struct FftFilterSpectrum {
+    /// Padded plane height (power of two).
+    pub fh: usize,
+    /// Padded plane width (power of two).
+    pub fw: usize,
+    /// Real parts, bin-major (K·C per bin).
+    pub fr: Vec<f32>,
+    /// Imaginary parts, bin-major.
+    pub fi: Vec<f32>,
+}
+
+/// Transform the filter bank into its bin-major spectrum: per (k, c),
+/// FFT the 180°-rotated zero-padded tap plane, then scatter each bin
+/// into the (K, C) matrix layout the pointwise GEMM stage consumes.
+pub fn fft_filter_spectrum(w: &[f32], g: &ConvGeom,
+                           arena: &WorkspaceArena) -> FftFilterSpectrum {
     let hp = g.h + 2 * g.p;
     let wp = g.w + 2 * g.q;
     let fh = (hp + g.r - 1).next_power_of_two();
     let fw = (wp + g.s - 1).next_power_of_two();
     let fsz = fh * fw;
-
-    // filter spectra Ŵ[k][c]: 180°-rotated filter, zero-padded
-    let mut wf_re = vec![0f32; g.k * g.c * fsz];
-    let mut wf_im = vec![0f32; g.k * g.c * fsz];
+    let kc = g.k * g.c;
+    let mut fr = vec![0f32; fsz * kc];
+    let mut fi = vec![0f32; fsz * kc];
+    let mut pre = arena.take(fsz);
+    let mut pim = arena.take(fsz);
     for k in 0..g.k {
         for c in 0..g.c {
-            let base = (k * g.c + c) * fsz;
+            pre.fill(0.0);
+            pim.fill(0.0);
             let wrow = (k * g.c + c) * g.r * g.s;
-            for fr in 0..g.r {
-                for fs in 0..g.s {
-                    wf_re[base + (g.r - 1 - fr) * fw + (g.s - 1 - fs)] =
-                        w[wrow + fr * g.s + fs];
+            for frr in 0..g.r {
+                for fss in 0..g.s {
+                    pre[(g.r - 1 - frr) * fw + (g.s - 1 - fss)] =
+                        w[wrow + frr * g.s + fss];
                 }
             }
-            fft2d(&mut wf_re[base..base + fsz],
-                  &mut wf_im[base..base + fsz], fh, fw, false);
+            fft2d(&mut pre, &mut pim, fh, fw, false, arena);
+            let at = k * g.c + c;
+            for i in 0..fsz {
+                fr[i * kc + at] = pre[i];
+                fi[i * kc + at] = pim[i];
+            }
         }
     }
+    FftFilterSpectrum { fh, fw, fr, fi }
+}
+
+/// FFT forward convolution. Dense (g = 1), dilation 1, any filter size,
+/// stride handled by subsampling the stride-1 correlation. Matches the
+/// direct kernel within FFT round-off (≤1e-3 budget at library scale).
+/// Convenience wrapper over [`conv2d_fwd_fft_with`]: transforms the
+/// filters on the spot with a throwaway arena.
+pub fn conv2d_fwd_fft(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    let arena = WorkspaceArena::new();
+    let spec = fft_filter_spectrum(w, g, &arena);
+    conv2d_fwd_fft_with(x, g, &spec, &arena)
+}
+
+/// FFT forward convolution over a pre-transformed filter spectrum. The
+/// pointwise stage runs per frequency bin as a complex (K,C)·(C,2)
+/// product through the shared blocked-GEMM engine (small-problem path):
+/// with `B = [x̂_re x̂_im]`, `Ŷ = (W_r·B, W_i·B)` combine as
+/// `Ŷ_re = W_r x̂_re − W_i x̂_im`, `Ŷ_im = W_r x̂_im + W_i x̂_re`.
+/// All spectra/scratch come from `arena`.
+pub fn conv2d_fwd_fft_with(x: &[f32], g: &ConvGeom,
+                           spec: &FftFilterSpectrum,
+                           arena: &WorkspaceArena) -> Vec<f32> {
+    assert!(g.g == 1 && g.l == 1 && g.j == 1,
+            "fft conv requires dense undilated problems");
+    let (ho, wo) = g.out_hw();
+    let (fh, fw) = (spec.fh, spec.fw);
+    let fsz = fh * fw;
+    let kc = g.k * g.c;
 
     let mut y = vec![0f32; g.n * g.k * ho * wo];
-    let mut xf_re = vec![0f32; g.c * fsz];
-    let mut xf_im = vec![0f32; g.c * fsz];
-    let mut acc_re = vec![0f32; fsz];
-    let mut acc_im = vec![0f32; fsz];
+    let mut xf_re = arena.take(g.c * fsz);
+    let mut xf_im = arena.take(g.c * fsz);
+    let mut acc_re = arena.take(g.k * fsz);
+    let mut acc_im = arena.take(g.k * fsz);
+    let mut xb = arena.take(g.c * 2);
+    let mut yr = arena.take(g.k * 2);
+    let mut yi = arena.take(g.k * 2);
     for n in 0..g.n {
         // image spectra X̂[c] for this batch element
         for c in 0..g.c {
@@ -773,26 +789,33 @@ pub fn conv2d_fwd_fft(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
                     .copy_from_slice(&x[xrow..xrow + g.w]);
             }
             fft2d(&mut xf_re[base..base + fsz],
-                  &mut xf_im[base..base + fsz], fh, fw, false);
+                  &mut xf_im[base..base + fsz], fh, fw, false, arena);
+        }
+        // pointwise stage: per bin, Ŷ[i] = Ŵ[i] (K,C) · X̂[i] (C) via two
+        // real (K,C)·(C,2) products through the shared engine
+        for i in 0..fsz {
+            for c in 0..g.c {
+                xb[c * 2] = xf_re[c * fsz + i];
+                xb[c * 2 + 1] = xf_im[c * fsz + i];
+            }
+            let wr = &spec.fr[i * kc..(i + 1) * kc];
+            let wi = &spec.fi[i * kc..(i + 1) * kc];
+            gemm::gemm_into(&mut yr, wr, &xb, g.k, g.c, 2, false, false,
+                            DEFAULT_TILE, 1, arena);
+            gemm::gemm_into(&mut yi, wi, &xb, g.k, g.c, 2, false, false,
+                            DEFAULT_TILE, 1, arena);
+            for k in 0..g.k {
+                acc_re[k * fsz + i] = yr[k * 2] - yi[k * 2 + 1];
+                acc_im[k * fsz + i] = yr[k * 2 + 1] + yi[k * 2];
+            }
         }
         for k in 0..g.k {
-            // Ŷ = Σ_c X̂[c] · Ŵ[k][c] (pointwise complex product)
-            acc_re.fill(0.0);
-            acc_im.fill(0.0);
-            for c in 0..g.c {
-                let xb = c * fsz;
-                let wb = (k * g.c + c) * fsz;
-                for i in 0..fsz {
-                    let (ar, ai) = (xf_re[xb + i], xf_im[xb + i]);
-                    let (br, bi) = (wf_re[wb + i], wf_im[wb + i]);
-                    acc_re[i] += ar * br - ai * bi;
-                    acc_im[i] += ar * bi + ai * br;
-                }
-            }
-            fft2d(&mut acc_re, &mut acc_im, fh, fw, true);
+            let plane = k * fsz;
+            fft2d(&mut acc_re[plane..plane + fsz],
+                  &mut acc_im[plane..plane + fsz], fh, fw, true, arena);
             // the valid correlation region starts at (r-1, s-1)
             for oh in 0..ho {
-                let row = (g.r - 1 + oh * g.u) * fw + (g.s - 1);
+                let row = plane + (g.r - 1 + oh * g.u) * fw + (g.s - 1);
                 let yrow = ((n * g.k + k) * ho + oh) * wo;
                 for ow in 0..wo {
                     y[yrow + ow] = acc_re[row + ow * g.v];
@@ -1297,10 +1320,17 @@ pub fn lstm_seq(xs: &[f32], h0: &[f32], c0: &[f32], wm: &[f32], rm: &[f32],
     let mut hs = vec![0f32; t * b * h];
     let mut hcur = h0.to_vec();
     let mut ccur = c0.to_vec();
+    // one arena per sequence: the gate-GEMM packing panels are reused
+    // across timesteps instead of re-allocated per step
+    let arena = WorkspaceArena::new();
+    let mut sx = vec![0f32; b * 4 * h];
+    let mut sh = vec![0f32; b * 4 * h];
     for ti in 0..t {
         let xt = &xs[ti * b * x..(ti + 1) * b * x];
-        let sx = matmul_nt(xt, wm, b, x, 4 * h);
-        let sh = matmul_nt(&hcur, rm, b, h, 4 * h);
+        gemm::gemm_into(&mut sx, xt, wm, b, x, 4 * h, false, true,
+                        DEFAULT_TILE, 1, &arena);
+        gemm::gemm_into(&mut sh, &hcur, rm, b, h, 4 * h, false, true,
+                        DEFAULT_TILE, 1, &arena);
         for bi in 0..b {
             for hi in 0..h {
                 let g = |gate: usize| {
@@ -1327,10 +1357,15 @@ pub fn gru_seq(xs: &[f32], h0: &[f32], wm: &[f32], rm: &[f32], t: usize,
                b: usize, x: usize, h: usize) -> Vec<f32> {
     let mut hs = vec![0f32; t * b * h];
     let mut hcur = h0.to_vec();
+    let arena = WorkspaceArena::new();
+    let mut sx = vec![0f32; b * 3 * h];
+    let mut sh = vec![0f32; b * 3 * h];
     for ti in 0..t {
         let xt = &xs[ti * b * x..(ti + 1) * b * x];
-        let sx = matmul_nt(xt, wm, b, x, 3 * h);
-        let sh = matmul_nt(&hcur, rm, b, h, 3 * h);
+        gemm::gemm_into(&mut sx, xt, wm, b, x, 3 * h, false, true,
+                        DEFAULT_TILE, 1, &arena);
+        gemm::gemm_into(&mut sh, &hcur, rm, b, h, 3 * h, false, true,
+                        DEFAULT_TILE, 1, &arena);
         for bi in 0..b {
             for hi in 0..h {
                 let xg = |gate: usize| sx[bi * 3 * h + gate * h + hi];
@@ -1352,10 +1387,15 @@ pub fn vanilla_seq(xs: &[f32], h0: &[f32], wm: &[f32], rm: &[f32], t: usize,
                    b: usize, x: usize, h: usize, relu: bool) -> Vec<f32> {
     let mut hs = vec![0f32; t * b * h];
     let mut hcur = h0.to_vec();
+    let arena = WorkspaceArena::new();
+    let mut sx = vec![0f32; b * h];
+    let mut sh = vec![0f32; b * h];
     for ti in 0..t {
         let xt = &xs[ti * b * x..(ti + 1) * b * x];
-        let sx = matmul_nt(xt, wm, b, x, h);
-        let sh = matmul_nt(&hcur, rm, b, h, h);
+        gemm::gemm_into(&mut sx, xt, wm, b, x, h, false, true,
+                        DEFAULT_TILE, 1, &arena);
+        gemm::gemm_into(&mut sh, &hcur, rm, b, h, h, false, true,
+                        DEFAULT_TILE, 1, &arena);
         for bi in 0..b {
             for hi in 0..h {
                 let s = sx[bi * h + hi] + sh[bi * h + hi];
@@ -1691,6 +1731,75 @@ mod tests {
         let a = [1.0f32, 2.0, 3.0, 4.0];
         let b = [5.0f32, 6.0, 7.0, 8.0];
         assert_eq!(matmul_par(&a, &b, 2, 2, 2), matmul(&a, &b, 2, 2, 2));
+    }
+
+    #[test]
+    fn matmul_propagates_nan_and_inf() {
+        // regression for the old `av == 0.0` fast path: a zero in A must
+        // not suppress a NaN/Inf in B (0·NaN = NaN, 0·Inf = NaN)
+        let y = matmul(&[0.0, 1.0], &[f32::NAN, 2.0], 1, 2, 1);
+        assert!(y[0].is_nan());
+        let y = matmul_tn(&[0.0, 0.0], &[f32::INFINITY, 1.0], 2, 1, 1);
+        assert!(y[0].is_nan());
+    }
+
+    #[test]
+    fn im2col_bit_identical_across_tile_configs() {
+        // KC is a fixed constant, so the tuned MC×NC choice never
+        // changes the accumulation grouping — results are bit-identical
+        let g = ConvGeom { p: 1, q: 1,
+                           ..ConvGeom::dense(2, 8, 14, 14, 16, 3, 3, 1, 0) };
+        let (x, w) = rand_conv(&g, 42);
+        let arena = WorkspaceArena::new();
+        let base = conv2d_fwd_im2col_with(&x, &w, &g,
+                                          super::gemm::TILE_CONFIGS[0],
+                                          &arena);
+        for tile in super::gemm::TILE_CONFIGS {
+            assert_eq!(base,
+                       conv2d_fwd_im2col_with(&x, &w, &g, tile, &arena),
+                       "tile {tile:?}");
+        }
+    }
+
+    #[test]
+    fn arena_reuse_does_not_alias_or_leak_across_executions() {
+        // two consecutive executions through one arena must produce the
+        // same result as through fresh arenas (no stale state), and the
+        // second pass must be allocation-free
+        let g = ConvGeom { p: 1, q: 1,
+                           ..ConvGeom::dense(2, 4, 10, 10, 8, 3, 3, 1, 0) };
+        let (x, w) = rand_conv(&g, 17);
+        let arena = WorkspaceArena::new();
+        let first = conv2d_fwd_im2col_with(&x, &w, &g,
+                                           super::gemm::DEFAULT_TILE, &arena);
+        let allocs = arena.stats().allocs;
+        let second = conv2d_fwd_im2col_with(&x, &w, &g,
+                                            super::gemm::DEFAULT_TILE,
+                                            &arena);
+        assert_eq!(first, second, "arena reuse changed the result");
+        assert_eq!(arena.stats().allocs, allocs,
+                   "warm im2col execution must not allocate");
+        let fresh = conv2d_fwd_im2col(&x, &w, &g);
+        assert_eq!(first, fresh, "arena path diverged from fresh scratch");
+
+        // same invariants for the winograd pipeline
+        let wino1 = conv2d_fwd_winograd_with(&x, &w, &g, 1, &arena);
+        let wallocs = arena.stats().allocs;
+        let wino2 = conv2d_fwd_winograd_with(&x, &w, &g, 1, &arena);
+        assert_eq!(wino1, wino2);
+        assert_eq!(arena.stats().allocs, wallocs,
+                   "warm winograd execution must not allocate");
+
+        // ... and the fft pipeline with a cached filter spectrum
+        let spec = fft_filter_spectrum(&w, &g, &arena);
+        let fft1 = conv2d_fwd_fft_with(&x, &g, &spec, &arena);
+        let fallocs = arena.stats().allocs;
+        let fft2 = conv2d_fwd_fft_with(&x, &g, &spec, &arena);
+        assert_eq!(fft1, fft2);
+        assert_eq!(arena.stats().allocs, fallocs,
+                   "warm fft execution must not allocate");
+        assert_eq!(fft1, conv2d_fwd_fft(&x, &w, &g),
+                   "cached filter spectrum diverged from fresh transform");
     }
 
     // -- winograd / fft golden parity vs the direct kernel -------------------

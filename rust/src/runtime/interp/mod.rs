@@ -10,24 +10,36 @@
 //! but a Rust toolchain.
 //!
 //! The algorithm zoo is real here, not an alias table: `gemm` runs
-//! im2col + GEMM, `winograd` runs the F(2×2, 3×3) transform pipeline,
-//! `fft` runs the radix-2 frequency-domain path, and `direct`/`implicit`
-//! run the reference loops — so the find step measures genuinely
-//! different executions per algorithm and the golden-parity suite
-//! cross-checks them against each other (§IV-A).
+//! im2col + blocked GEMM, `winograd` runs the F(2×2, 3×3) transform
+//! pipeline, `fft` runs the radix-2 frequency-domain path, and
+//! `direct`/`implicit` run the reference loops — so the find step
+//! measures genuinely different executions per algorithm and the
+//! golden-parity suite cross-checks them against each other (§IV-A).
+//!
+//! Every compiled executable owns a [`arena::WorkspaceArena`] pre-sized
+//! from the artifact's recorded workspace (`solvers::workspace_for`):
+//! im2col column matrices, GEMM packing panels, winograd U/V/M tensors
+//! and FFT spectra are checked out of it and reused across calls, so the
+//! warm serve path performs zero per-request heap allocations for conv
+//! scratch. FFT executables additionally cache the transformed filter
+//! spectrum (keyed on the weight bytes), so serving never re-transforms
+//! weights (docs/ARCHITECTURE.md, "Memory plan & workspace arena").
 
+pub mod arena;
 pub mod cnn;
+pub mod gemm;
 pub mod kernels;
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::descriptors::ActivationMode;
 use crate::manifest::{Artifact, TensorSpec};
 use crate::runtime::{tensor, Backend, Executable, HostTensor};
-use crate::solvers::WINO_THREADS_PARAM;
+use crate::solvers::{GEMM_TILE_PARAM, WINO_THREADS_PARAM};
 use crate::types::{algo, DType, MiopenError, ProblemSig, Result};
 
+use arena::WorkspaceArena;
 use kernels as k;
 
 pub struct InterpBackend;
@@ -48,7 +60,10 @@ impl Backend for InterpBackend {
     fn compile(&self, _path: &Path, art: &Artifact)
         -> Result<Arc<dyn Executable>> {
         check_supported(art)?;
-        Ok(Arc::new(InterpExecutable { art: art.clone() }))
+        Ok(Arc::new(InterpExecutable {
+            state: ExecState::for_artifact(art),
+            art: art.clone(),
+        }))
     }
 
     fn platform(&self) -> String {
@@ -56,13 +71,59 @@ impl Backend for InterpBackend {
     }
 }
 
+/// Cached FFT filter spectrum + the weight bytes it was computed from.
+struct FftCacheEntry {
+    weights: Vec<f32>,
+    spec: Arc<k::FftFilterSpectrum>,
+}
+
+/// Per-executable mutable state: the scratch arena and the FFT filter
+/// spectrum cache. One per compiled artifact — and therefore one per
+/// serve-worker cache shard, since each shard compiles privately.
+pub(crate) struct ExecState {
+    arena: WorkspaceArena,
+    fft: Mutex<Option<FftCacheEntry>>,
+}
+
+impl ExecState {
+    fn new(workspace_bytes: u64) -> Self {
+        Self {
+            arena: WorkspaceArena::with_reserved(workspace_bytes),
+            fft: Mutex::new(None),
+        }
+    }
+
+    /// State for one artifact, with the arena pre-sized from the
+    /// artifact's recorded workspace accounting.
+    fn for_artifact(art: &Artifact) -> Self {
+        Self::new(art.workspace_bytes)
+    }
+
+    /// The bin-major filter spectrum for `w`, computed once and cached;
+    /// recomputed only when the weight bytes change (training).
+    fn fft_spectrum(&self, w: &[f32], g: &k::ConvGeom)
+        -> Arc<k::FftFilterSpectrum> {
+        let mut guard = self.fft.lock().unwrap();
+        if let Some(e) = guard.as_ref() {
+            if e.weights == w {
+                return e.spec.clone();
+            }
+        }
+        let spec = Arc::new(k::fft_filter_spectrum(w, g, &self.arena));
+        *guard = Some(FftCacheEntry { weights: w.to_vec(),
+                                      spec: spec.clone() });
+        spec
+    }
+}
+
 struct InterpExecutable {
     art: Artifact,
+    state: ExecState,
 }
 
 impl Executable for InterpExecutable {
     fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        execute(&self.art, inputs)
+        execute(&self.art, inputs, &self.state)
     }
 
     fn output_arity(&self) -> usize {
@@ -205,7 +266,8 @@ fn parse_pool_sig(sig: &str) -> Result<(usize, usize, usize, usize)> {
 // Execution
 // ---------------------------------------------------------------------------
 
-fn execute(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn execute(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
+    -> Result<Vec<HostTensor>> {
     if inputs.len() != art.inputs.len() {
         return Err(MiopenError::ShapeMismatch(format!(
             "{}: expected {} inputs, got {}",
@@ -215,8 +277,8 @@ fn execute(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         )));
     }
     match art.primitive.as_str() {
-        "conv" => run_conv(art, inputs),
-        "fusion" => run_fusion(art, inputs),
+        "conv" => run_conv(art, inputs, st),
+        "fusion" => run_fusion(art, inputs, st),
         "tensor_op" => run_tensor_op(art, inputs),
         "activation" => run_activation(art, inputs),
         "batchnorm" => run_batchnorm(art, inputs),
@@ -242,23 +304,37 @@ fn wino_tuned_threads(art: &Artifact) -> usize {
         .unwrap_or(0)
 }
 
-fn run_conv(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+/// Tuned GEMM blocking tile for an artifact (`-gt{i}` variants index
+/// [`gemm::TILE_CONFIGS`]); default tile otherwise.
+fn gemm_tuned_tile(art: &Artifact) -> gemm::GemmTile {
+    art.tuning
+        .get(GEMM_TILE_PARAM)
+        .copied()
+        .map(|v| gemm::tile_for_index(v.max(0) as usize))
+        .unwrap_or(gemm::DEFAULT_TILE)
+}
+
+fn run_conv(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
+    -> Result<Vec<HostTensor>> {
     let (psig, algo_name, _tag) = ProblemSig::parse_artifact(&art.sig)?;
     let geom = k::ConvGeom::from_sig(&psig);
     let a = input_f32(&inputs[0])?;
     let b = input_f32(&inputs[1])?;
     let out = match psig.direction.as_str() {
         "fwd" => match algo_name.as_str() {
-            algo::GEMM if geom.g == 1 => k::conv2d_fwd_im2col(&a, &b, &geom),
-            algo::WINOGRAD => {
-                k::conv2d_fwd_winograd(&a, &b, &geom, wino_tuned_threads(art))
+            algo::GEMM if geom.g == 1 => k::conv2d_fwd_im2col_with(
+                &a, &b, &geom, gemm_tuned_tile(art), &st.arena),
+            algo::WINOGRAD => k::conv2d_fwd_winograd_with(
+                &a, &b, &geom, wino_tuned_threads(art), &st.arena),
+            algo::FFT => {
+                let spec = st.fft_spectrum(&b, &geom);
+                k::conv2d_fwd_fft_with(&a, &geom, &spec, &st.arena)
             }
-            algo::FFT => k::conv2d_fwd_fft(&a, &b, &geom),
             _ => k::conv2d_fwd(&a, &b, &geom),
         },
         "bwd" => match algo_name.as_str() {
-            algo::WINOGRAD => k::conv2d_bwd_data_winograd(
-                &a, &b, &geom, wino_tuned_threads(art)),
+            algo::WINOGRAD => k::conv2d_bwd_data_winograd_with(
+                &a, &b, &geom, wino_tuned_threads(art), &st.arena),
             _ => k::conv2d_bwd_data(&a, &b, &geom),
         },
         _ => k::conv2d_bwd_weights(&a, &b, &geom),
@@ -280,17 +356,18 @@ fn wino_executable(g: &k::ConvGeom) -> bool {
 /// not a relabeled direct loop). Geometries the F(2,3) kernel cannot
 /// take (the mdgraph's non-3×3/stride-2 winograd rows) fall back to the
 /// direct kernel instead of panicking in the transform pipeline.
-fn fused_conv(art: &Artifact, x: &[f32], w: &[f32], geom: &k::ConvGeom)
-    -> Vec<f32> {
+fn fused_conv(art: &Artifact, x: &[f32], w: &[f32], geom: &k::ConvGeom,
+              st: &ExecState) -> Vec<f32> {
     match art.str_param("conv_algo") {
         Some(algo::WINOGRAD) if wino_executable(geom) => {
-            k::conv2d_fwd_winograd(x, w, geom, wino_tuned_threads(art))
+            k::conv2d_fwd_winograd_with(x, w, geom,
+                                        wino_tuned_threads(art), &st.arena)
         }
         _ => k::conv2d_fwd(x, w, geom),
     }
 }
 
-fn run_fusion(art: &Artifact, inputs: &[HostTensor])
+fn run_fusion(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
     -> Result<Vec<HostTensor>> {
     let act = parse_act(
         art.sig.split('-').nth(1).unwrap_or("relu"), &art.sig)?;
@@ -302,7 +379,7 @@ fn run_fusion(art: &Artifact, inputs: &[HostTensor])
             let x = input_f32(&inputs[0])?;
             let w = input_f32(&inputs[1])?;
             let bias = input_f32(&inputs[2])?;
-            let y = fused_conv(art, &x, &w, &geom);
+            let y = fused_conv(art, &x, &w, &geom, st);
             let y = k::bias_add(&y, &bias, geom.n, geom.k, ho * wo);
             let y = k::act_fwd(&y, act, alpha);
             Ok(vec![out_tensor(&art.outputs[0], &y)?])
@@ -317,7 +394,7 @@ fn run_fusion(art: &Artifact, inputs: &[HostTensor])
             let beta = input_f32(&inputs[4])?;
             let mean = input_f32(&inputs[5])?;
             let var = input_f32(&inputs[6])?;
-            let y = fused_conv(art, &x, &w, &geom);
+            let y = fused_conv(art, &x, &w, &geom, st);
             let y = k::bias_add(&y, &bias, geom.n, geom.k, ho * wo);
             let y = k::bn_spatial_infer(&y, &gamma, &beta, &mean, &var,
                                         geom.n, geom.k, ho, wo);
@@ -610,7 +687,7 @@ mod tests {
             .iter()
             .map(|spec| HostTensor::random_normal(spec, &mut rng))
             .collect();
-        execute(art, &inputs).unwrap()
+        execute(art, &inputs, &ExecState::for_artifact(art)).unwrap()
     }
 
     #[test]
@@ -642,7 +719,8 @@ mod tests {
             .iter()
             .map(|spec| HostTensor::random_normal(spec, &mut rng))
             .collect();
-        let fused = execute(&art, &inputs).unwrap()[0].as_f32().unwrap();
+        let fused = execute(&art, &inputs, &ExecState::for_artifact(&art))
+            .unwrap()[0].as_f32().unwrap();
 
         let geom = geom_from_params(&art).unwrap();
         let x = inputs[0].as_f32().unwrap();

@@ -20,6 +20,7 @@
 use std::collections::BTreeMap;
 
 use crate::perfmodel::GcnModel;
+use crate::runtime::interp::gemm;
 use crate::types::{algo, ProblemSig, TuneTag};
 
 /// One point of a solver's tuning grid: parameter name → value (§III-B).
@@ -29,6 +30,9 @@ pub type TuningParams = BTreeMap<String, i64>;
 pub const BLOCK_K_PARAM: &str = "block_k";
 /// Perf-db key for the winograd solver's transform-domain thread count.
 pub const WINO_THREADS_PARAM: &str = "wt";
+/// Perf-db key for the gemm solver's blocked-GEMM tile config (an index
+/// into [`gemm::TILE_CONFIGS`], the CLBlast-style `MC×NC` grid).
+pub const GEMM_TILE_PARAM: &str = "gt";
 
 /// A convolution solver: applicability + cost + artifact naming for one
 /// algorithm family.
@@ -71,7 +75,9 @@ pub trait Solver {
 
 // ---------------------------------------------------------------------------
 
-/// im2col + GEMM — the universal fallback and Figure 6's baseline.
+/// im2col + GEMM — the universal fallback and Figure 6's baseline. The
+/// executing kernel is the cache-blocked packed engine
+/// ([`gemm`]); its `MC×NC` tile pair is this solver's tuning knob.
 pub struct GemmSolver;
 
 impl Solver for GemmSolver {
@@ -84,10 +90,39 @@ impl Solver for GemmSolver {
     }
 
     fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
-        // the im2col column matrix, written then re-read by the GEMM
+        // arena-aware accounting for the executing blocked engine: the
+        // per-image im2col column matrix plus the engine's packed A
+        // (weights, MR-strip padded) and packed B (the column matrix,
+        // NR-strip padded) panels. Per-image buffers are reused across
+        // the batch by the workspace arena, so N does not multiply in.
         let (ho, wo) = sig.out_hw();
-        (sig.c * sig.r * sig.s * sig.n * ho * wo) as u64
-            * sig.dtype.size_bytes() as u64
+        let howo = ho * wo;
+        let crs = sig.c * sig.r * sig.s;
+        let pa = sig.k.div_ceil(gemm::MR) * gemm::MR * crs;
+        let pb = howo.div_ceil(gemm::NR) * gemm::NR * crs;
+        (crs * howo + pa + pb) as u64 * sig.dtype.size_bytes() as u64
+    }
+
+    fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
+        // the interp engine's blocked path only runs the fwd im2col
+        // kernel; the tile grid indexes gemm::TILE_CONFIGS (small →
+        // large, so pruned search keeps the biggest tiles)
+        if sig.direction != "fwd" {
+            return Vec::new();
+        }
+        (0..gemm::TILE_CONFIGS.len())
+            .map(|i| {
+                TuningParams::from([(GEMM_TILE_PARAM.to_string(), i as i64)])
+            })
+            .collect()
+    }
+
+    fn artifact_sig(&self, sig: &ProblemSig, tuning: Option<&TuningParams>)
+        -> String {
+        let gt = tuning
+            .and_then(|t| t.get(GEMM_TILE_PARAM))
+            .map(|v| TuneTag::GemmTile(*v as usize));
+        sig.artifact_sig_tagged(self.name(), gt)
     }
 }
 
@@ -333,10 +368,15 @@ mod tests {
         let p = sig("fwd", 3, 1, 1, 1);
         assert_eq!(DirectSolver.workspace_bytes(&p), 0);
         assert_eq!(ImplicitGemmSolver.workspace_bytes(&p), 0);
-        // gemm workspace = col matrix = CRS * N*Ho*Wo * 4
+        // gemm workspace = per-image col matrix + packed A/B panels
+        // (MR/NR strip-padded) — arena-reused across the batch
         let (ho, wo) = p.out_hw();
+        let crs = 16 * 9;
+        let howo = ho * wo;
+        let pa = 32usize.div_ceil(gemm::MR) * gemm::MR * crs;
+        let pb = howo.div_ceil(gemm::NR) * gemm::NR * crs;
         assert_eq!(GemmSolver.workspace_bytes(&p),
-                   (16 * 9 * 4 * ho * wo * 4) as u64);
+                   ((crs * howo + pa + pb) * 4) as u64);
         // winograd: honest transform buffers — U + V + M, 16 positions
         let t = (ho.div_ceil(2) * wo.div_ceil(2)) as u64;
         assert_eq!(WinogradSolver.workspace_bytes(&p),
@@ -376,6 +416,17 @@ mod tests {
         tiny.h = 6;
         tiny.w = 6;
         assert_eq!(WinogradSolver.tuning_grid(&tiny).len(), 1);
+    }
+
+    #[test]
+    fn gemm_tuning_grid_and_sig() {
+        let p = sig("fwd", 3, 1, 1, 1);
+        let grid = GemmSolver.tuning_grid(&p);
+        assert_eq!(grid.len(), gemm::TILE_CONFIGS.len());
+        let tp = TuningParams::from([(GEMM_TILE_PARAM.to_string(), 2i64)]);
+        assert!(GemmSolver.artifact_sig(&p, Some(&tp)).ends_with("-gt2"));
+        // the blocked engine's tuned path is fwd-only
+        assert!(GemmSolver.tuning_grid(&sig("wrw", 3, 1, 1, 1)).is_empty());
     }
 
     #[test]

@@ -7,12 +7,13 @@
 //! system for future retrieval."
 //!
 //! A [`TuningSession`] races every tuning variant of every tunable solver
-//! for a problem — the direct solver's `block_k` output tiles *and* the
-//! winograd solver's transform-domain parallelism (`wt`) — optionally
-//! pruning the grid before measuring, and records each solver's winner
-//! in the user perf-db. The find step then resolves tuned artifact
-//! variants through that db (the db-coherence contract,
-//! docs/ARCHITECTURE.md).
+//! for a problem — the direct solver's `block_k` output tiles, the
+//! winograd solver's transform-domain parallelism (`wt`), *and* the gemm
+//! solver's blocked-engine `MC×NC` tile configs (`gt`, the CLBlast-style
+//! tile-size search) — optionally pruning the grid before measuring, and
+//! records each solver's winner in the user perf-db. The find step then
+//! resolves tuned artifact variants through that db (the db-coherence
+//! contract, docs/ARCHITECTURE.md).
 
 use std::collections::BTreeMap;
 

@@ -10,8 +10,9 @@
 //! `dir ∈ {fwd, bwd, wrw}` following MIOpen's naming (forward,
 //! backward-data, backward-weights). The optional tuning suffix is typed
 //! ([`TuneTag`]): `-bk{BK}` names a direct-solver output-channel tile,
-//! `-wt{WT}` a winograd transform-domain parallelism variant — unknown
-//! suffixes are parse errors, not silently-dropped strings. The perf-db
+//! `-wt{WT}` a winograd transform-domain parallelism variant, `-gt{GT}`
+//! a blocked-GEMM `MC×NC` tile-grid index — unknown suffixes are parse
+//! errors, not silently-dropped strings. The perf-db
 //! keys on everything except the algo/tuning suffix; the exec-cache keys
 //! on the full signature.
 
@@ -28,6 +29,9 @@ pub enum TuneTag {
     BlockK(usize),
     /// `-wt{v}` — the winograd solver's transform-domain thread count.
     WinoThreads(usize),
+    /// `-gt{v}` — the gemm solver's blocked-GEMM tile config (an index
+    /// into the engine's `MC×NC` tile grid).
+    GemmTile(usize),
 }
 
 impl TuneTag {
@@ -36,6 +40,7 @@ impl TuneTag {
         match self {
             TuneTag::BlockK(v) => format!("-bk{v}"),
             TuneTag::WinoThreads(v) => format!("-wt{v}"),
+            TuneTag::GemmTile(v) => format!("-gt{v}"),
         }
     }
 
@@ -47,13 +52,17 @@ impl TuneTag {
         if let Some(v) = seg.strip_prefix("wt") {
             return v.parse().ok().map(TuneTag::WinoThreads);
         }
+        if let Some(v) = seg.strip_prefix("gt") {
+            return v.parse().ok().map(TuneTag::GemmTile);
+        }
         None
     }
 
     /// The numeric tuning value.
     pub fn value(self) -> usize {
         match self {
-            TuneTag::BlockK(v) | TuneTag::WinoThreads(v) => v,
+            TuneTag::BlockK(v) | TuneTag::WinoThreads(v)
+            | TuneTag::GemmTile(v) => v,
         }
     }
 }
@@ -281,6 +290,17 @@ mod tests {
         assert_eq!(algo, "winograd");
         assert_eq!(tag, Some(TuneTag::WinoThreads(4)));
         assert_eq!(tag.unwrap().value(), 4);
+    }
+
+    #[test]
+    fn roundtrip_gemm_tile_tag() {
+        let sig = sample().artifact_sig_tagged("gemm", Some(TuneTag::GemmTile(2)));
+        assert!(sig.ends_with("-gt2"));
+        let (p, algo, tag) = ProblemSig::parse_artifact(&sig).unwrap();
+        assert_eq!(p, sample());
+        assert_eq!(algo, "gemm");
+        assert_eq!(tag, Some(TuneTag::GemmTile(2)));
+        assert_eq!(tag.unwrap().value(), 2);
     }
 
     #[test]

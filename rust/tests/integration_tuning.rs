@@ -45,6 +45,45 @@ fn tuning_evaluates_grid_and_persists_winner() {
 }
 
 #[test]
+fn tuning_covers_gemm_tile_grid() {
+    // TUNE_CONFIGS[0] has -gt{0,1,2} gemm variants AOT'd (the blocked
+    // engine's MC x NC tile grid), so the session must tune the gemm
+    // solver alongside direct/winograd and persist its winner under the
+    // "gt" param — the CLBlast-style tile-size search.
+    let handle = common::cpu_handle("tune-gemm-tiles");
+    let problem = tunable_problem();
+    let results = TuningSession::new(&handle)
+        .tune_convolution(&problem)
+        .unwrap();
+    let solvers: Vec<&str> =
+        results.iter().map(|r| r.solver.as_str()).collect();
+    assert!(solvers.contains(&"gemm"), "{solvers:?}");
+
+    let gemm = results.iter().find(|r| r.solver == "gemm").unwrap();
+    assert_eq!(gemm.evaluated.len(), 3, "gt grid = {{0, 1, 2}}");
+    assert!(gemm.best_params.contains_key("gt"));
+
+    let key = problem.sig().unwrap().db_key();
+    let db = handle.perf_db();
+    assert_eq!(db.get(&key, "gemm").unwrap()["gt"],
+               gemm.best_params["gt"]);
+
+    // the find step now benchmarks the tuned gemm variant
+    let found = handle
+        .find_convolution_opt(
+            &problem,
+            &miopen_rs::find::FindOptions { exhaustive: true,
+                                            rank_by_model: false },
+        )
+        .unwrap();
+    let g = found.iter().find(|r| r.algo == "gemm").unwrap();
+    assert!(g.artifact_sig
+                .ends_with(&format!("-gt{}", gemm.best_params["gt"])),
+            "find must benchmark the tuned gemm variant: {}",
+            g.artifact_sig);
+}
+
+#[test]
 fn tuning_covers_winograd_thread_grid() {
     // TUNE_CONFIGS[0] is 3x3/s1 — the winograd solver's -wt{1,2,4}
     // variants are AOT'd, so the session must tune winograd alongside

@@ -50,7 +50,9 @@ fn prop_signature_roundtrip() {
             for tag in [None, Some(TuneTag::BlockK(8)),
                         Some(TuneTag::BlockK(64)),
                         Some(TuneTag::WinoThreads(2)),
-                        Some(TuneTag::WinoThreads(4))] {
+                        Some(TuneTag::WinoThreads(4)),
+                        Some(TuneTag::GemmTile(0)),
+                        Some(TuneTag::GemmTile(2))] {
                 let text = sig.artifact_sig_tagged(algo, tag);
                 let (parsed, algo2, tag2) = ProblemSig::parse_artifact(&text)
                     .map_err(|e| e.to_string())?;
@@ -120,6 +122,68 @@ fn prop_all_applicable_conv_kernels_agree() {
             let dwant = k::conv2d_bwd_data(&dy, &wts, &g);
             close(&dwant, &k::conv2d_bwd_data_winograd(&dy, &wts, &g, 0),
                   "winograd-bwd")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_gemm_matches_naive() {
+    // blocked packed engine vs the reference triple loop, <= 1e-5
+    // relative across random shapes including degenerate 1xKx1 vectors,
+    // every tile config, both transpose packing modes, serial + threaded
+    use miopen_rs::runtime::interp::arena::WorkspaceArena;
+    use miopen_rs::runtime::interp::gemm;
+
+    let shape_gen = Gen::new(|rng: &mut SplitMix64| {
+        match rng.below(5) {
+            // degenerate vector shapes (1xKx1, 1xKxN, MxKx1)
+            0 => (1usize, 1 + rng.below(600) as usize, 1usize),
+            1 => (1, 1 + rng.below(300) as usize,
+                  1 + rng.below(40) as usize),
+            2 => (1 + rng.below(40) as usize,
+                  1 + rng.below(300) as usize, 1),
+            // general shapes straddling the packing threshold
+            _ => (1 + rng.below(90) as usize, 1 + rng.below(320) as usize,
+                  1 + rng.below(90) as usize),
+        }
+    });
+    let arena = WorkspaceArena::new();
+    forall("blocked-gemm-parity", &shape_gen, 120, |&(m, kk, n)| {
+        let mut rng = SplitMix64::new((m * 31 + kk * 7 + n) as u64);
+        let mut a = vec![0f32; m * kk];
+        let mut b = vec![0f32; kk * n];
+        rng.fill_normal_f32(&mut a);
+        rng.fill_normal_f32(&mut b);
+        let want = gemm::naive_matmul(&a, &b, m, kk, n);
+        for tile in gemm::TILE_CONFIGS {
+            for threads in [1usize, 0] {
+                let got = gemm::gemm(&a, &b, m, kk, n, false, false, tile,
+                                     threads, &arena);
+                for (i, (x, y)) in want.iter().zip(&got).enumerate() {
+                    let denom = 1f32.max(x.abs()).max(y.abs());
+                    if (x - y).abs() / denom > 1e-5 {
+                        return Err(format!(
+                            "({m},{kk},{n}) tile {tile:?} t{threads} \
+                             [{i}]: {x} vs {y}"));
+                    }
+                }
+            }
+        }
+        // transpose packing modes agree with the plain layout
+        let mut at = vec![0f32; kk * m];
+        for i in 0..m {
+            for z in 0..kk {
+                at[z * m + i] = a[i * kk + z];
+            }
+        }
+        let got = gemm::gemm(&at, &b, m, kk, n, true, false,
+                             gemm::DEFAULT_TILE, 1, &arena);
+        for (x, y) in want.iter().zip(&got) {
+            let denom = 1f32.max(x.abs()).max(y.abs());
+            if (x - y).abs() / denom > 1e-5 {
+                return Err(format!("({m},{kk},{n}) ta: {x} vs {y}"));
+            }
         }
         Ok(())
     });

@@ -215,20 +215,19 @@ def conv_in_specs(direction, cc, dtype):
     raise ValueError(direction)
 
 
-ITEMSIZE = {"f32": 4, "bf16": 2, "f16": 2, "i8": 1}
-
-
 def conv_workspace(direction, algo, cc, dtype="f32"):
     """One workspace formula per algorithm, shared with the Rust solvers
     (solvers::workspace_for — the reference executor's honest footprint).
-    `dtype` sizes the element-typed buffers (gemm col matrix, winograd
-    transforms); fft spectra are always complex-f32."""
+    All scratch is **f32 accumulate-domain** regardless of the storage
+    dtype: bf16/f16 operands decode into the gemm packing panels and the
+    winograd transform buffers at pack/load time, they are never stored
+    reduced (docs/NUMERICS.md); fft spectra are always complex-f32."""
+    del dtype  # storage dtype does not size the accumulate-domain scratch
     ho, wo = cc.out_hw()
-    esize = ITEMSIZE.get(dtype, 4)
     if algo == "gemm":
         return im2col_gemm.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
-            (cc.n, cc.k, ho, wo), itemsize=esize)
+            (cc.n, cc.k, ho, wo), itemsize=4)
     if algo == "fft":
         return fft_conv.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
@@ -238,7 +237,7 @@ def conv_workspace(direction, algo, cc, dtype="f32"):
         extent = (cc.h, cc.w) if direction == "bwd" else (ho, wo)
         return winograd.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c // cc.g, cc.r, cc.s),
-            extent, itemsize=esize)
+            extent, itemsize=4)
     return 0
 
 
@@ -261,9 +260,12 @@ def emit_conv_family(em):
                         params=cc.as_dict(),
                         workspace_bytes=conv_workspace(direction, algo, cc),
                     )
-    # bf16 extras: a subset proving low-precision support end to end
-    for cc in configs.FIG6_1X1[:2] + configs.FIG6_NON1X1[:2]:
-        for algo in ("gemm", "direct"):
+    # Mixed-precision set (mirrors configs::builtin_artifacts): bf16 is
+    # a first-class execution dtype — every applicable fwd algorithm on
+    # the exemplar configs, bwd/wrw for the gemm/direct universal pair,
+    # and an f16 slice of the same fwd surface.
+    for cc in configs.MP_FWD_CONFIGS:
+        for algo in fwd_algos(cc):
             em.emit(
                 conv_sig("fwd", algo, cc, "bf16"),
                 make_conv_fn("fwd", algo, cc),
@@ -271,6 +273,38 @@ def emit_conv_family(em):
                 primitive="conv", algo=algo, direction="fwd", dtype="bf16",
                 tags=("bf16",), params=cc.as_dict(),
                 workspace_bytes=conv_workspace("fwd", algo, cc, dtype="bf16"),
+            )
+    mp_bwd = configs.MP_BWD_CONFIG
+    for algo in bwd_algos(mp_bwd):
+        em.emit(
+            conv_sig("bwd", algo, mp_bwd, "bf16"),
+            make_conv_fn("bwd", algo, mp_bwd),
+            conv_in_specs("bwd", mp_bwd, "bf16"),
+            primitive="conv", algo=algo, direction="bwd", dtype="bf16",
+            tags=("bf16",), params=mp_bwd.as_dict(),
+            workspace_bytes=conv_workspace("bwd", algo, mp_bwd,
+                                           dtype="bf16"),
+        )
+    for algo in ("gemm", "direct"):
+        em.emit(
+            conv_sig("wrw", algo, mp_bwd, "bf16"),
+            make_conv_fn("wrw", algo, mp_bwd),
+            conv_in_specs("wrw", mp_bwd, "bf16"),
+            primitive="conv", algo=algo, direction="wrw", dtype="bf16",
+            tags=("bf16",), params=mp_bwd.as_dict(),
+            workspace_bytes=conv_workspace("wrw", algo, mp_bwd,
+                                           dtype="bf16"),
+        )
+    for cc in (configs.FIG6_1X1[0], configs.FIG6_NON1X1[0]):
+        for algo in fwd_algos(cc):
+            em.emit(
+                conv_sig("fwd", algo, cc, "f16"),
+                make_conv_fn("fwd", algo, cc),
+                conv_in_specs("fwd", cc, "f16"),
+                primitive="conv", algo=algo, direction="fwd", dtype="f16",
+                tags=("f16",), params=cc.as_dict(),
+                workspace_bytes=conv_workspace("fwd", algo, cc,
+                                               dtype="f16"),
             )
     # grouped / depthwise convolutions (direct solver only, as in rust)
     for cc in configs.GROUPED_CONFIGS:
@@ -294,42 +328,51 @@ def emit_conv_family(em):
             tags=("int8",), params=cc.as_dict(),
         )
     # tuning variants: direct block_k tiles + winograd transform-domain
-    # parallelism (where the winograd solver applies)
+    # parallelism (where the winograd solver applies) + the blocked-GEMM
+    # tile grid — emitted per dtype (configs.TUNE_DTYPES), because tuned
+    # variants resolve through per-dtype perf-db keys on the Rust side
     for cc in configs.TUNE_CONFIGS:
-        for bk in configs.DIRECT_BLOCK_K:
-            em.emit(
-                conv_sig("fwd", "direct", cc, "f32", bk=bk),
-                make_conv_fn("fwd", "direct", cc, bk=bk),
-                conv_in_specs("fwd", cc, "f32"),
-                primitive="conv", algo="direct", direction="fwd",
-                dtype="f32", tags=("tune",), params=cc.as_dict(),
-                tuning={"block_k": bk},
-            )
-        if "winograd" in fwd_algos(cc):
-            for wt in configs.WINOGRAD_TILE_THREADS:
-                # wt only changes host-side parallelism; the lowered
-                # computation is the same winograd pipeline
+        for dt in configs.TUNE_DTYPES:
+            dtag = "tune" if dt == "f32" else "tune-" + dt
+            for bk in configs.DIRECT_BLOCK_K:
                 em.emit(
-                    conv_sig("fwd", "winograd", cc, "f32", wt=wt),
-                    make_conv_fn("fwd", "winograd", cc),
-                    conv_in_specs("fwd", cc, "f32"),
-                    primitive="conv", algo="winograd", direction="fwd",
-                    dtype="f32", tags=("tune-wino",), params=cc.as_dict(),
-                    workspace_bytes=conv_workspace("fwd", "winograd", cc),
-                    tuning={"wt": wt},
+                    conv_sig("fwd", "direct", cc, dt, bk=bk),
+                    make_conv_fn("fwd", "direct", cc, bk=bk),
+                    conv_in_specs("fwd", cc, dt),
+                    primitive="conv", algo="direct", direction="fwd",
+                    dtype=dt, tags=(dtag,), params=cc.as_dict(),
+                    tuning={"block_k": bk},
                 )
-        for gt in configs.GEMM_TILE_GRID:
-            # gt only changes the host-side MC x NC cache blocking; the
-            # lowered computation is the same im2col+GEMM pipeline
-            em.emit(
-                conv_sig("fwd", "gemm", cc, "f32", gt=gt),
-                make_conv_fn("fwd", "gemm", cc),
-                conv_in_specs("fwd", cc, "f32"),
-                primitive="conv", algo="gemm", direction="fwd",
-                dtype="f32", tags=("tune-gemm",), params=cc.as_dict(),
-                workspace_bytes=conv_workspace("fwd", "gemm", cc),
-                tuning={"gt": gt},
-            )
+            if "winograd" in fwd_algos(cc):
+                for wt in configs.WINOGRAD_TILE_THREADS:
+                    # wt only changes host-side parallelism; the lowered
+                    # computation is the same winograd pipeline
+                    em.emit(
+                        conv_sig("fwd", "winograd", cc, dt, wt=wt),
+                        make_conv_fn("fwd", "winograd", cc),
+                        conv_in_specs("fwd", cc, dt),
+                        primitive="conv", algo="winograd", direction="fwd",
+                        dtype=dt,
+                        tags=("tune-wino" if dt == "f32" else dtag,),
+                        params=cc.as_dict(),
+                        workspace_bytes=conv_workspace("fwd", "winograd",
+                                                       cc),
+                        tuning={"wt": wt},
+                    )
+            for gt in configs.GEMM_TILE_GRID:
+                # gt only changes the host-side MC x NC cache blocking;
+                # the lowered computation is the same im2col+GEMM pipeline
+                em.emit(
+                    conv_sig("fwd", "gemm", cc, dt, gt=gt),
+                    make_conv_fn("fwd", "gemm", cc),
+                    conv_in_specs("fwd", cc, dt),
+                    primitive="conv", algo="gemm", direction="fwd",
+                    dtype=dt,
+                    tags=("tune-gemm" if dt == "f32" else dtag,),
+                    params=cc.as_dict(),
+                    workspace_bytes=conv_workspace("fwd", "gemm", cc),
+                    tuning={"gt": gt},
+                )
 
 
 # ---------------------------------------------------------------------------
@@ -472,6 +515,34 @@ def emit_fusion_family(em):
                 primitive="fusion", algo="cbna", direction="fwd",
                 tags=("fusion-exec",),
                 params={**cc.as_dict(), "conv_algo": "direct"})
+
+    # Table II executable half-precision exemplars (mirrors the Rust
+    # emitter): bf16 fuses only through the direct kernel — CBA via the
+    # 1x1 row, CBNA via row 1. No winograd bf16 plan exists, because the
+    # metadata graph rejects it outright.
+    cc = configs.ConvConfig(4, 16, 28, 28, 32, 1, 1)
+    xs = (cc.n, cc.c, cc.h, cc.w)
+    ws = (cc.k, cc.c, cc.r, cc.s)
+    em.emit(f"cba-relu-{cc.sig_params()}-bf16",
+            lambda x, w, b: (fused.conv_bias_act(
+                x, w, b, stride=(1, 1), pad=(0, 0), mode="relu"),),
+            [spec(xs, "bf16"), spec(ws, "bf16"), spec((cc.k,), "bf16")],
+            primitive="fusion", algo="cba", direction="fwd", dtype="bf16",
+            tags=("fusion-bf16",),
+            params={**cc.as_dict(), "conv_algo": "direct"})
+    cc = configs.ConvConfig(2, 8, 14, 14, 8, 3, 3, p=1, q=1)
+    xs = (cc.n, cc.c, cc.h, cc.w)
+    ws = (cc.k, cc.c, cc.r, cc.s)
+    em.emit(f"cbna-relu-{cc.sig_params()}-bf16",
+            lambda x, w, b, g, bb, m, v, _cc=cc: (
+                fused.conv_bias_bn_act(
+                    x, w, b, g, bb, m, v, stride=(_cc.u, _cc.v),
+                    pad=(_cc.p, _cc.q), mode="relu"),),
+            [spec(xs, "bf16"), spec(ws, "bf16")]
+            + [spec((cc.k,), "bf16")] * 5,
+            primitive="fusion", algo="cbna", direction="fwd", dtype="bf16",
+            tags=("fusion-bf16",),
+            params={**cc.as_dict(), "conv_algo": "direct"})
 
     # Winograd CBA exemplar (Table I winograd rows): 3x3/s1, c >= 18 and
     # even, relu — the plan selects winograd and the backends execute the

@@ -201,6 +201,20 @@ CNN = {
     "lr": 0.05,
 }
 
-# dtypes per artifact family (paper: fp32, fp16, bf16, int8)
+# dtypes per artifact family (paper: fp32, fp16, bf16, int8).
+# bf16 is a first-class execution dtype (2-byte storage end to end, f32
+# accumulate, one rounding at the store — docs/NUMERICS.md): exemplar
+# configs mirror the full fwd algorithm zoo plus bwd/wrw and per-dtype
+# tuned variants; f16 covers a fwd slice of the same surface.
 CONV_DTYPES = ["f32"]
-CONV_DTYPES_EXTRA = ["bf16"]   # a subset of configs also emitted in bf16
+CONV_DTYPES_EXTRA = ["bf16"]
+CONV_DTYPES_F16 = ["f16"]
+# mixed-precision fwd exemplar set (mirrors configs::builtin_artifacts'
+# mp_fwd): two 1x1s, two 3x3s (winograd rides), one 5x5 (fft rides),
+# and the tuned 1x1's default
+MP_FWD_CONFIGS = (FIG6_1X1[:2] + FIG6_NON1X1[:2] + FIG6_NON1X1[4:5]
+                  + TUNE_CONFIGS[1:])
+# bwd/wrw mixed-precision exemplar (3x3 p1: winograd bwd applies too)
+MP_BWD_CONFIG = FIG6_NON1X1[0]
+# dtypes whose tuning variants are AOT'd (per-dtype perf-db resolution)
+TUNE_DTYPES = ["f32", "bf16"]

@@ -1,15 +1,18 @@
 //! serve-bench: sweep worker count × batch size × arrival rate over the
 //! synthetic CNN serving workload and record p50/p99 latency, throughput
 //! and cache hit rates — the scaling evidence for the multi-worker
-//! engine. Results serialize to `BENCH_serve.json` (see the `serve-bench`
-//! CLI subcommand and the CI smoke job).
+//! engine — plus the per-dtype warm-serve sweep (bf16 conv twins vs
+//! their f32 baselines through the exec-cache hot path). Results
+//! serialize to `BENCH_serve.json` (see the `serve-bench` CLI subcommand
+//! and the CI smoke job).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::handle::Handle;
+use crate::metrics::TimingStats;
 use crate::serve::{generate_load, run_server, Request, ServeConfig};
 use crate::types::Result;
 use crate::util::json::Json;
@@ -105,6 +108,71 @@ pub fn run_sweep(handle: &Handle, cfg: &SweepConfig) -> Result<Vec<SweepPoint>> 
     Ok(points)
 }
 
+/// One per-dtype warm-serve measurement: p50/p99 of repeated warm
+/// executions of a conv artifact through the serve hot path (compiled
+/// once into the exec cache, then executed per "request").
+#[derive(Debug, Clone)]
+pub struct DtypeServePoint {
+    /// Artifact signature served.
+    pub sig: String,
+    /// Storage dtype name ("f32" | "bf16").
+    pub dtype: String,
+    /// Conv algorithm of the artifact.
+    pub algo: String,
+    /// Warm per-request latency median (µs).
+    pub p50_us: f64,
+    /// Warm per-request latency 99th percentile (µs).
+    pub p99_us: f64,
+}
+
+/// The bf16/f32 twin signatures the dtype serve sweep measures: the
+/// same problem geometry emitted in both storage dtypes (gemm and
+/// winograd on the 3×3 exemplar, gemm on the 1×1).
+pub fn dtype_serve_sigs() -> Vec<(&'static str, String)> {
+    let g33 = "n4c16h28w28k32r3s3u1v1p1q1l1j1g1";
+    let g11 = "n4c16h28w28k16r1s1u1v1p0q0l1j1g1";
+    let mut sigs = Vec::new();
+    for dt in ["f32", "bf16"] {
+        sigs.push((dt, format!("conv_fwd-gemm-{g33}-{dt}")));
+        sigs.push((dt, format!("conv_fwd-winograd-{g33}-{dt}")));
+        sigs.push((dt, format!("conv_fwd-gemm-{g11}-{dt}")));
+    }
+    sigs
+}
+
+/// Run the per-dtype warm-serve sweep: each artifact is compiled once
+/// (the serve engine's warm-shard configuration), then `requests`
+/// executions are timed individually for p50/p99. Signatures missing
+/// from the manifest are skipped, so the sweep degrades gracefully on
+/// reduced artifact sets.
+pub fn run_dtype_serve(handle: &Handle, requests: usize)
+    -> Result<Vec<DtypeServePoint>> {
+    let mut points = Vec::new();
+    for (dt, sig) in dtype_serve_sigs() {
+        let Some(art) = handle.manifest().get(&sig) else {
+            continue;
+        };
+        let algo = art.algo.clone();
+        let exe = handle.compile_sig(&sig)?;
+        let inputs = handle.random_inputs(&sig)?;
+        exe.run(&inputs)?; // warm the arena + any filter caches
+        let mut lat = TimingStats::new();
+        for _ in 0..requests.max(1) {
+            let t = Instant::now();
+            exe.run(&inputs)?;
+            lat.record(t.elapsed().as_secs_f64() * 1e6);
+        }
+        points.push(DtypeServePoint {
+            sig,
+            dtype: dt.to_string(),
+            algo,
+            p50_us: lat.median(),
+            p99_us: lat.p99(),
+        });
+    }
+    Ok(points)
+}
+
 /// Throughput ratio of `workers_b` over `workers_a`, compared only
 /// between points with the *same* (batch_max, rate) configuration so
 /// the number measures worker scaling, not batching differences. The
@@ -132,7 +200,7 @@ pub fn speedup(points: &[SweepPoint], workers_a: usize, workers_b: usize)
     best
 }
 
-pub fn to_json(points: &[SweepPoint]) -> Json {
+pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint]) -> Json {
     let arr: Vec<Json> = points
         .iter()
         .map(|p| {
@@ -151,10 +219,23 @@ pub fn to_json(points: &[SweepPoint]) -> Json {
             ])
         })
         .collect();
+    let dtype_arr: Vec<Json> = dtype
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("sig", Json::str(p.sig.as_str())),
+                ("dtype", Json::str(p.dtype.as_str())),
+                ("algo", Json::str(p.algo.as_str())),
+                ("p50_latency_us", Json::num(p.p50_us)),
+                ("p99_latency_us", Json::num(p.p99_us)),
+            ])
+        })
+        .collect();
     let mut root = BTreeMap::new();
     root.insert("workload".to_string(),
                 Json::str("synthetic CNN inference (cnn_infer-f32)"));
     root.insert("points".to_string(), Json::Arr(arr));
+    root.insert("dtype_serve".to_string(), Json::Arr(dtype_arr));
     if let Some(s) = speedup(points, 1, 4) {
         root.insert("speedup_4w_over_1w".to_string(), Json::num(s));
     }
@@ -164,8 +245,11 @@ pub fn to_json(points: &[SweepPoint]) -> Json {
     Json::Obj(root)
 }
 
-pub fn write_json(points: &[SweepPoint], path: &Path) -> Result<()> {
-    std::fs::write(path, to_json(points).to_string())?;
+/// Serialize and write `BENCH_serve.json` (worker sweep + per-dtype
+/// warm-serve points).
+pub fn write_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
+                  path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(points, dtype).to_string())?;
     Ok(())
 }
 
@@ -219,7 +303,14 @@ mod tests {
     #[test]
     fn json_has_points_and_speedup() {
         let pts = vec![point(1, 16, 0.0, 100.0), point(4, 16, 0.0, 250.0)];
-        let j = to_json(&pts);
+        let dtype = vec![DtypeServePoint {
+            sig: "conv_fwd-gemm-x-bf16".into(),
+            dtype: "bf16".into(),
+            algo: "gemm".into(),
+            p50_us: 90.0,
+            p99_us: 140.0,
+        }];
+        let j = to_json(&pts, &dtype);
         assert_eq!(j.get("points").and_then(Json::as_arr).unwrap().len(), 2);
         let s = j.get("speedup_4w_over_1w").and_then(Json::as_f64).unwrap();
         assert!((s - 2.5).abs() < 1e-9);
@@ -228,5 +319,23 @@ mod tests {
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back.get("points").and_then(Json::as_arr).unwrap().len(),
                    2);
+        let ds = back.get("dtype_serve").and_then(Json::as_arr).unwrap();
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].get("dtype").and_then(Json::as_str),
+                   Some("bf16"));
+    }
+
+    #[test]
+    fn dtype_serve_sigs_pair_f32_with_bf16() {
+        let sigs = dtype_serve_sigs();
+        let f32s: Vec<&String> = sigs.iter().filter(|(d, _)| *d == "f32")
+            .map(|(_, s)| s).collect();
+        let bf16s: Vec<String> = sigs.iter().filter(|(d, _)| *d == "bf16")
+            .map(|(_, s)| s.clone()).collect();
+        assert_eq!(f32s.len(), bf16s.len());
+        for f in f32s {
+            let twin = f.replace("-f32", "-bf16");
+            assert!(bf16s.contains(&twin), "missing bf16 twin for {f}");
+        }
     }
 }

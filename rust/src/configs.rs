@@ -327,11 +327,38 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
             }
         }
     }
-    // bf16 extras: a subset proving low-precision support.
-    for c in fig6_1x1().iter().take(2).chain(fig6_non1x1().iter().take(2)) {
-        for a in [algo::GEMM, algo::DIRECT] {
+    // Mixed-precision set: bf16 is a first-class execution dtype (2-byte
+    // storage end-to-end, f32 accumulate, one rounding at the store —
+    // docs/NUMERICS.md), so the artifact surface mirrors the f32 zoo on
+    // exemplar configs: every applicable fwd algorithm (winograd and fft
+    // included), bwd/wrw for the universal gemm/direct pair, and an f16
+    // slice of the same fwd surface.
+    let mp_fwd: Vec<ConvConfig> = fig6_1x1()
+        .into_iter()
+        .take(2)
+        .chain(fig6_non1x1().into_iter().take(2)) // 3×3: winograd rides
+        .chain(fig6_non1x1().into_iter().skip(4).take(1)) // 5×5: fft rides
+        .chain(tune_configs().into_iter().skip(1)) // tuned 1×1's default
+        .collect();
+    for c in &mp_fwd {
+        for a in fwd_algos(c) {
             out.push(conv_artifact("fwd", a, c, DType::Bf16, None)
                 .with_tag("bf16"));
+        }
+    }
+    let mp_bwd = fig6_non1x1()[0]; // 3×3 p1: winograd bwd applies too
+    for a in bwd_algos(&mp_bwd) {
+        out.push(conv_artifact("bwd", a, &mp_bwd, DType::Bf16, None)
+            .with_tag("bf16"));
+    }
+    for a in [algo::GEMM, algo::DIRECT] {
+        out.push(conv_artifact("wrw", a, &mp_bwd, DType::Bf16, None)
+            .with_tag("bf16"));
+    }
+    for c in [fig6_1x1()[0], fig6_non1x1()[0]] {
+        for a in fwd_algos(&c) {
+            out.push(conv_artifact("fwd", a, &c, DType::F16, None)
+                .with_tag("f16"));
         }
     }
     // grouped / depthwise (direct solver only).
@@ -358,37 +385,45 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
     }
     // tuning variants: direct block_k tiles, winograd transform-domain
     // parallelism (only where the winograd solver applies), and the
-    // blocked-GEMM MC×NC tile grid.
+    // blocked-GEMM MC×NC tile grid — emitted per dtype, because tuned
+    // `-bk`/`-wt`/`-gt` variants resolve through per-dtype perf-db keys
+    // (a bf16 tuning session must never be served an f32 artifact).
     for c in &tune_configs() {
-        for bk in DIRECT_BLOCK_K {
-            out.push(conv_artifact("fwd", algo::DIRECT, c, DType::F32,
-                                   Some(TuneTag::BlockK(bk)))
-                .with_tag("tune"));
-        }
-        if fwd_algos(c).contains(&algo::WINOGRAD) {
-            for wt in WINOGRAD_TILE_THREADS {
-                out.push(conv_artifact("fwd", algo::WINOGRAD, c, DType::F32,
-                                       Some(TuneTag::WinoThreads(wt)))
-                    .with_tag("tune-wino"));
+        for dtype in [DType::F32, DType::Bf16] {
+            let dtag = if dtype == DType::F32 { "tune" } else { "tune-bf16" };
+            for bk in DIRECT_BLOCK_K {
+                out.push(conv_artifact("fwd", algo::DIRECT, c, dtype,
+                                       Some(TuneTag::BlockK(bk)))
+                    .with_tag(dtag));
             }
-        }
-        for gt in gemm_tile_grid() {
-            out.push(conv_artifact("fwd", algo::GEMM, c, DType::F32,
-                                   Some(TuneTag::GemmTile(gt)))
-                .with_tag("tune-gemm"));
+            if fwd_algos(c).contains(&algo::WINOGRAD) {
+                for wt in WINOGRAD_TILE_THREADS {
+                    out.push(conv_artifact("fwd", algo::WINOGRAD, c, dtype,
+                                           Some(TuneTag::WinoThreads(wt)))
+                        .with_tag(if dtype == DType::F32 { "tune-wino" }
+                                  else { "tune-bf16" }));
+                }
+            }
+            for gt in gemm_tile_grid() {
+                out.push(conv_artifact("fwd", algo::GEMM, c, dtype,
+                                       Some(TuneTag::GemmTile(gt)))
+                    .with_tag(if dtype == DType::F32 { "tune-gemm" }
+                              else { "tune-bf16" }));
+            }
         }
     }
 }
 
-/// The conv algorithm a CBA fusion plan over this config would select —
-/// decided by the *same* metadata graph the fusion API traverses, so the
-/// recorded `conv_algo` and the mdgraph can never disagree (relu/f32
-/// plans; the builtin set emits no other fused dtypes).
-fn cba_conv_algo(c: &ConvConfig) -> &'static str {
+/// The conv algorithm a relu CBA fusion plan over this config and dtype
+/// would select — decided by the *same* metadata graph the fusion API
+/// traverses, so the recorded `conv_algo` and the mdgraph can never
+/// disagree. Half-precision plans go through Table II's restrictions
+/// (CBA only via the direct 1×1 kernel — the winograd rows are f32).
+fn cba_conv_algo(c: &ConvConfig, dtype: DType) -> &'static str {
     use crate::descriptors::ActivationMode;
     use crate::fusion::mdgraph::{MdGraph, OpKind, PlanAttrs};
     let attrs = PlanAttrs {
-        dtype: DType::F32,
+        dtype,
         filter: Some((c.r, c.s)),
         stride: Some((c.u, c.v)),
         pad: Some((c.p, c.q)),
@@ -414,7 +449,7 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
                 "fwd",
                 vec![f32s(&xs), f32s(&ws), f32s(&[c.k])], vec![f32s(&ys)])
             .with_params(&c.param_pairs())
-            .with_str_param("conv_algo", cba_conv_algo(c))
+            .with_str_param("conv_algo", cba_conv_algo(c, DType::F32))
             .with_label(&c.label())
             .with_tag("fig7a"),
         );
@@ -496,6 +531,47 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
         );
     }
 
+    // Table II executable half-precision exemplars: the bf16 fusion
+    // rules are enforced by plans that actually run (2-byte storage,
+    // f32 accumulate inside the fused kernel), not just by graph
+    // pruning. Table II admits exactly CBA-direct-1×1 and CBNA-direct;
+    // a bf16 winograd CBA has no artifact because the mdgraph rejects
+    // the plan outright (integration_fusion pins both sides).
+    {
+        let c = cc(4, 16, 28, 28, 32, 1, 1); // CBA direct 1×1 row
+        debug_assert_eq!(cba_conv_algo(&c, DType::Bf16), algo::DIRECT);
+        let xs = [c.n, c.c, c.h, c.w];
+        let ws = [c.k, c.c, c.r, c.s];
+        let (ho, wo) = c.out_hw();
+        let b16 = |shape: &[usize]| sp(shape, DType::Bf16);
+        out.push(
+            Artifact::synthetic(
+                &format!("cba-relu-{}-bf16", c.sig_params()), "fusion",
+                "cba", "fwd",
+                vec![b16(&xs), b16(&ws), b16(&[c.k])],
+                vec![b16(&[c.n, c.k, ho, wo])])
+            .with_params(&c.param_pairs())
+            .with_str_param("conv_algo", cba_conv_algo(&c, DType::Bf16))
+            .with_label(&c.label())
+            .with_tag("fusion-bf16"),
+        );
+        let cb = ConvConfig { p: 1, q: 1, ..cc(2, 8, 14, 14, 8, 3, 3) };
+        let xsb = [cb.n, cb.c, cb.h, cb.w];
+        let wsb = [cb.k, cb.c, cb.r, cb.s];
+        let (hob, wob) = cb.out_hw();
+        out.push(
+            Artifact::synthetic(
+                &format!("cbna-relu-{}-bf16", cb.sig_params()), "fusion",
+                "cbna", "fwd",
+                vec![b16(&xsb), b16(&wsb), b16(&[cb.k]), b16(&[cb.k]),
+                     b16(&[cb.k]), b16(&[cb.k]), b16(&[cb.k])],
+                vec![b16(&[cb.n, cb.k, hob, wob])])
+            .with_params(&cb.param_pairs())
+            .with_str_param("conv_algo", algo::DIRECT)
+            .with_tag("fusion-bf16"),
+        );
+    }
+
     // Winograd CBA exemplar (Table I winograd rows): 3x3/s1, c >= 18 and
     // even, relu — the mdgraph selects winograd for this plan and the
     // interp backend executes the F(2,3) pipeline inside the fused
@@ -503,7 +579,7 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
     // can check fused-vs-separate parity per algorithm.
     {
         let c = ConvConfig { p: 1, q: 1, ..cc(4, 32, 14, 14, 8, 3, 3) };
-        debug_assert_eq!(cba_conv_algo(&c), algo::WINOGRAD);
+        debug_assert_eq!(cba_conv_algo(&c, DType::F32), algo::WINOGRAD);
         let xs = [c.n, c.c, c.h, c.w];
         let ws = [c.k, c.c, c.r, c.s];
         let (ho, wo) = c.out_hw();
@@ -514,7 +590,7 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
                 "fwd",
                 vec![f32s(&xs), f32s(&ws), f32s(&[c.k])], vec![f32s(&ys)])
             .with_params(&c.param_pairs())
-            .with_str_param("conv_algo", cba_conv_algo(&c))
+            .with_str_param("conv_algo", cba_conv_algo(&c, DType::F32))
             .with_label(&c.label())
             .with_tag("fusion-wino"),
         );
@@ -819,6 +895,24 @@ mod tests {
             "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-wt4",
             "conv_fwd-fft-n4c4h28w28k8r5s5u1v1p2q2l1j1g1-f32",
             "conv_fwd-direct-n4c16h14w14k32r3s3u1v1p1q1l1j1g1-i8",
+            // mixed-precision surface: bf16 covers the full fwd zoo on
+            // exemplar configs, bwd/wrw on the universal pair, tuned
+            // variants per dtype, and the Table II executable plans
+            "conv_fwd-gemm-n4c16h28w28k16r1s1u1v1p0q0l1j1g1-bf16",
+            "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16",
+            "conv_fwd-fft-n4c4h28w28k8r5s5u1v1p2q2l1j1g1-bf16",
+            "conv_fwd-implicit-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16",
+            "conv_bwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16",
+            "conv_bwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16",
+            "conv_wrw-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16",
+            "conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f16",
+            "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f16",
+            "conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16-gt1",
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16-bk32",
+            "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16-wt4",
+            "conv_fwd-gemm-n4c64h14w14k64r1s1u1v1p0q0l1j1g1-bf16",
+            "cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-bf16",
+            "cbna-relu-n2c8h14w14k8r3s3u1v1p1q1l1j1g1-bf16",
             "cba-relu-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32",
             "conv_fwd-winograd-n4c32h14w14k8r3s3u1v1p1q1l1j1g1-f32",
             "bias-4x8x14x14-f32",
@@ -925,11 +1019,12 @@ mod tests {
 
     #[test]
     fn builtin_matches_solver_applicability() {
-        // every fwd f32 conv artifact's algo must be applicable per the
-        // solver registry (aot.fwd_algos <-> solvers::applicable contract)
+        // every fwd conv artifact's algo — across all emitted dtypes —
+        // must be applicable per the solver registry (aot.fwd_algos <->
+        // solvers::applicable contract, now a per-dtype axis)
         let m = Manifest::builtin();
         for a in m.by_primitive("conv") {
-            if a.direction != "fwd" || a.dtype != DType::F32 {
+            if a.direction != "fwd" {
                 continue;
             }
             let (sig, algo, _) = ProblemSig::parse_artifact(&a.sig).unwrap();
@@ -940,5 +1035,44 @@ mod tests {
             assert!(names.contains(&algo),
                     "{}: algo {algo} not applicable ({names:?})", a.sig);
         }
+    }
+
+    #[test]
+    fn bf16_tune_variants_carry_params_per_dtype() {
+        // tuned variants are a per-dtype axis: the bf16 -gt/-bk/-wt
+        // artifacts exist alongside the f32 ones and carry the same
+        // tuning params, so a bf16 tuning session resolves bf16
+        // artifacts (perf-db keys already include the dtype)
+        let m = Manifest::builtin();
+        for gt in gemm_tile_grid() {
+            let sig = format!(
+                "conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16-gt{gt}"
+            );
+            let a = m.require(&sig).unwrap();
+            assert_eq!(a.tuning.get(crate::solvers::GEMM_TILE_PARAM),
+                       Some(&(gt as i64)), "{sig}");
+            assert_eq!(a.dtype, DType::Bf16);
+        }
+        for bk in DIRECT_BLOCK_K {
+            let sig = format!(
+                "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16-bk{bk}"
+            );
+            assert!(m.get(&sig).is_some(), "{sig}");
+        }
+    }
+
+    #[test]
+    fn bf16_fused_plans_record_table2_conv_algo() {
+        // Table II: half precision fuses only through the direct kernel
+        let m = Manifest::builtin();
+        for a in m.by_primitive("fusion") {
+            if a.dtype != DType::Bf16 {
+                continue;
+            }
+            assert_eq!(a.str_param("conv_algo"), Some(algo::DIRECT),
+                       "{}", a.sig);
+        }
+        assert!(m.by_primitive("fusion").any(|a| a.dtype == DType::Bf16),
+                "builtin set must carry executable bf16 fusion plans");
     }
 }

@@ -247,8 +247,26 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         println!("throughput speedup, 2 workers vs 1: {s:.2}x");
     }
 
+    // per-dtype warm-serve sweep: bf16 conv twins vs their f32 baselines
+    let dtype_points =
+        sb::run_dtype_serve(&handle, args.opt_usize("dtype-requests", 64))?;
+    if !dtype_points.is_empty() {
+        let mut dt = miopen_rs::bench::Table::new(
+            &["sig", "dtype", "algo", "p50_us", "p99_us"]);
+        for p in &dtype_points {
+            dt.row(vec![
+                p.sig.clone(),
+                p.dtype.clone(),
+                p.algo.clone(),
+                format!("{:.0}", p.p50_us),
+                format!("{:.0}", p.p99_us),
+            ]);
+        }
+        dt.print();
+    }
+
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_serve.json"));
-    sb::write_json(&points, &out)?;
+    sb::write_json(&points, &dtype_points, &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }
@@ -287,6 +305,21 @@ fn cmd_kernel_bench(args: &Args) -> Result<()> {
     if let Some(s) = kb::speedup_256(&bench) {
         println!("blocked vs naive @ 256x256x256: {s:.2}x");
     }
+
+    let mut bt = miopen_rs::bench::Table::new(
+        &["shape", "f32 GF/s", "bf16 GF/s", "pack f32 B", "pack bf16 B",
+          "advantage"]);
+    for p in &bench.bf16 {
+        bt.row(vec![
+            p.name.clone(),
+            format!("{:.2}", p.f32_gflops),
+            format!("{:.2}", p.bf16_gflops),
+            p.f32_pack_bytes.to_string(),
+            p.bf16_pack_bytes.to_string(),
+            format!("{:.2}x", p.pack_traffic_advantage()),
+        ]);
+    }
+    bt.print();
 
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_kernels.json"));
     kb::write_json(&bench, &out)?;

@@ -77,6 +77,18 @@ impl GcnModel {
         }
     }
 
+    /// Modeled pack-stage source traffic of one `m×k×n` GEMM whose A and
+    /// B operands are stored in `dtype`: the engine reads each source
+    /// element exactly once while packing, at storage width. This is the
+    /// formula the interp engine's real packing-traffic counters
+    /// (`ArenaStats::pack_traffic_bytes`) are checked against — bf16
+    /// halves it relative to f32, the byte-traffic advantage the
+    /// kernel-bench acceptance asserts (≥ 1.5×).
+    pub fn gemm_pack_traffic_bytes(m: usize, k: usize, n: usize,
+                                   dtype: DType) -> u64 {
+        (m * k + k * n) as u64 * dtype.size_bytes() as u64
+    }
+
     /// Ideal tensor traffic for a conv problem: read x + w, write y.
     pub fn ideal_conv_bytes(sig: &ProblemSig) -> u64 {
         let (ho, wo) = sig.out_hw();
@@ -384,6 +396,18 @@ mod tests {
         p.dtype = DType::Bf16;
         let bf16_t = m.conv_time_us(&p, "direct");
         assert!(bf16_t < f32_t);
+    }
+
+    #[test]
+    fn bf16_pack_traffic_advantage_is_2x() {
+        // half-width storage halves the modeled pack-stage reads — the
+        // ≥ 1.5× byte-traffic advantage the CI kernel-bench smoke pins
+        let f = GcnModel::gemm_pack_traffic_bytes(128, 128, 128,
+                                                  DType::F32);
+        let b = GcnModel::gemm_pack_traffic_bytes(128, 128, 128,
+                                                  DType::Bf16);
+        assert_eq!(f, 2 * b);
+        assert_eq!(f, (128 * 128 + 128 * 128) as u64 * 4);
     }
 
     #[test]

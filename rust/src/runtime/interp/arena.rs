@@ -41,6 +41,11 @@ pub struct ArenaStats {
     pub pooled_bytes: u64,
     /// Largest total footprint (pooled + checked out) ever reached.
     pub high_water_bytes: u64,
+    /// Source bytes the GEMM pack stage read through this arena's
+    /// executions, counted at *storage* width (2 B/elem for bf16/f16,
+    /// 4 B for f32) — the packing-traffic counter the mixed-precision
+    /// bench sweeps and the CI byte-traffic acceptance read.
+    pub pack_traffic_bytes: u64,
 }
 
 /// Reusable scratch pool for kernel-internal f32 buffers.
@@ -51,6 +56,7 @@ pub struct WorkspaceArena {
     reuses: AtomicU64,
     high_water: AtomicU64,
     outstanding: AtomicU64,
+    pack_traffic: AtomicU64,
 }
 
 impl WorkspaceArena {
@@ -122,6 +128,13 @@ impl WorkspaceArena {
             .sum()
     }
 
+    /// Record `bytes` of GEMM pack-stage source traffic (called by the
+    /// engine with the storage-dtype byte count of the panels it packed;
+    /// see `ArenaStats::pack_traffic_bytes`).
+    pub fn note_pack_traffic(&self, bytes: u64) {
+        self.pack_traffic.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     /// Current counters (allocation-free warm paths show `allocs`
     /// unchanged between snapshots).
     pub fn stats(&self) -> ArenaStats {
@@ -130,6 +143,7 @@ impl WorkspaceArena {
             reuses: self.reuses.load(Ordering::Relaxed),
             pooled_bytes: self.pooled_bytes(),
             high_water_bytes: self.high_water.load(Ordering::Relaxed),
+            pack_traffic_bytes: self.pack_traffic.load(Ordering::Relaxed),
         }
     }
 }

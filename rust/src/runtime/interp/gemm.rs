@@ -24,6 +24,17 @@
 //!   range of `out` and reads the shared packed panels, so the result is
 //!   bit-identical for every thread count.
 //!
+//! Packing is **dtype-aware** (the CLBlast-style dtype-specialized
+//! routine selection, here realized as monomorphized pack sources):
+//! [`gemm_into_src`] is generic over two [`Load`] views, so bf16/f16
+//! operands stay in their 2-byte storage encodings until the pack stage
+//! decodes them into f32 panels — accumulation is always f32, mirroring
+//! the gfx906+ packed-math convention the perf model prices, and the
+//! storage-width bytes actually read at pack time are recorded in the
+//! arena's packing-traffic counter (`ArenaStats::pack_traffic_bytes`).
+//! Rounding back to the storage dtype happens once, at the caller's
+//! store boundary — never inside the engine (docs/NUMERICS.md).
+//!
 //! Small problems (below [`PACK_MIN_MACS`]) and narrow-B problems
 //! (fewer than [`NR`] columns — the per-bin FFT products, gemv shapes)
 //! skip packing and run a plain loop nest.
@@ -39,6 +50,7 @@
 #![allow(clippy::needless_range_loop)]
 
 use super::arena::WorkspaceArena;
+use super::view::{F32Src, Load};
 
 /// Microkernel rows (output-row register tile).
 pub const MR: usize = 4;
@@ -126,11 +138,25 @@ pub fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
 /// row-major). `ta`/`tb` select the packing modes: `ta` reads A as its
 /// transpose (A stored `k × m`), `tb` reads B as its transpose (B stored
 /// `n × k`). `threads = 0` picks the shared pool size when the problem
-/// is large enough; scratch comes from `arena`.
+/// is large enough; scratch comes from `arena`. f32-slice convenience
+/// over the dtype-generic [`gemm_into_src`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
                  n: usize, ta: bool, tb: bool, tile: GemmTile,
                  threads: usize, arena: &WorkspaceArena) {
+    gemm_into_src(out, F32Src(a), F32Src(b), m, k, n, ta, tb, tile,
+                  threads, arena);
+}
+
+/// The dtype-generic engine entry: `A` and `B` are [`Load`] views, so a
+/// bf16/f16 operand is decoded into the f32 packing panels (or read by
+/// the small-problem loop) element-by-element at storage width — no
+/// widened copy of either operand ever exists. Accumulation is f32
+/// throughout; the caller owns the store-boundary rounding.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_src<A: Load, B: Load>(
+    out: &mut [f32], a: A, b: B, m: usize, k: usize, n: usize, ta: bool,
+    tb: bool, tile: GemmTile, threads: usize, arena: &WorkspaceArena) {
     assert_eq!(out.len(), m * n, "gemm: bad output length");
     assert_eq!(a.len(), m * k, "gemm: bad A length");
     assert_eq!(b.len(), k * n, "gemm: bad B length");
@@ -148,12 +174,16 @@ pub fn gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
     }
 
     // pack once, up front: A into MR-row strips, B into NR-column strips
+    // (this is where bf16/f16 sources decode into f32 panels); the
+    // storage-width bytes read here feed the packing-traffic counter
     let m_strips = m.div_ceil(MR);
     let n_strips = n.div_ceil(NR);
     let mut pa = arena.take(m_strips * MR * k);
     let mut pb = arena.take(n_strips * NR * k);
     pack_a(&mut pa, a, m, k, ta);
     pack_b(&mut pb, b, k, n, tb);
+    arena.note_pack_traffic(
+        (m * k * A::SRC_BYTES + k * n * B::SRC_BYTES) as u64);
 
     let threads = if threads == 0 { gemm_threads() } else { threads };
     let threads = if macs < PAR_GEMM_MIN_MACS { 1 } else { threads };
@@ -190,8 +220,9 @@ pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, ta: bool,
 
 /// Pack A into MR-row strips: strip `is` holds, for each `kk`, the MR
 /// values `A[is*MR .. is*MR+MR][kk]` contiguously (zero-padded past row
-/// `m`). The transpose variant reads `A` stored `k × m`.
-fn pack_a(pa: &mut [f32], a: &[f32], m: usize, k: usize, ta: bool) {
+/// `m`). The transpose variant reads `A` stored `k × m`. Decode from
+/// the source dtype to the f32 panel happens here, per element.
+fn pack_a<A: Load>(pa: &mut [f32], a: A, m: usize, k: usize, ta: bool) {
     let m_strips = m.div_ceil(MR);
     for is in 0..m_strips {
         let base = is * MR;
@@ -201,7 +232,7 @@ fn pack_a(pa: &mut [f32], a: &[f32], m: usize, k: usize, ta: bool) {
             for (i, d) in dst.iter_mut().enumerate() {
                 let row = base + i;
                 *d = if row < m {
-                    if ta { a[kk * m + row] } else { a[row * k + kk] }
+                    if ta { a.load(kk * m + row) } else { a.load(row * k + kk) }
                 } else {
                     0.0
                 };
@@ -212,8 +243,9 @@ fn pack_a(pa: &mut [f32], a: &[f32], m: usize, k: usize, ta: bool) {
 
 /// Pack B into NR-column strips: strip `js` holds, for each `kk`, the NR
 /// values `B[kk][js*NR .. js*NR+NR]` contiguously (zero-padded past
-/// column `n`). The transpose variant reads `B` stored `n × k`.
-fn pack_b(pb: &mut [f32], b: &[f32], k: usize, n: usize, tb: bool) {
+/// column `n`). The transpose variant reads `B` stored `n × k`. Decode
+/// from the source dtype to the f32 panel happens here, per element.
+fn pack_b<B: Load>(pb: &mut [f32], b: B, k: usize, n: usize, tb: bool) {
     let n_strips = n.div_ceil(NR);
     for js in 0..n_strips {
         let base = js * NR;
@@ -223,7 +255,7 @@ fn pack_b(pb: &mut [f32], b: &[f32], k: usize, n: usize, tb: bool) {
             for (j, d) in dst.iter_mut().enumerate() {
                 let col = base + j;
                 *d = if col < n {
-                    if tb { b[col * k + kk] } else { b[kk * n + col] }
+                    if tb { b.load(col * k + kk) } else { b.load(kk * n + col) }
                 } else {
                     0.0
                 };
@@ -303,9 +335,11 @@ fn microkernel(cout: &mut [f32], apanel: &[f32], bpanel: &[f32], kc: usize,
 
 /// Direct loop nest for problems too small to amortize packing. Same
 /// ascending-k accumulation order per output element as the packed path
-/// within one KC chunk; no zero-skip (NaN/Inf propagate).
-fn small_gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
-                   k: usize, n: usize, ta: bool, tb: bool) {
+/// within one KC chunk; no zero-skip (NaN/Inf propagate). Sources
+/// decode per element — accumulation stays f32 regardless of storage.
+fn small_gemm_into<A: Load, B: Load>(out: &mut [f32], a: A, b: B, m: usize,
+                                     k: usize, n: usize, ta: bool,
+                                     tb: bool) {
     out.fill(0.0);
     match (ta, tb) {
         (false, false) => {
@@ -313,10 +347,10 @@ fn small_gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
                 let arow = i * k;
                 let orow = i * n;
                 for kk in 0..k {
-                    let av = a[arow + kk];
+                    let av = a.load(arow + kk);
                     let brow = kk * n;
                     for jj in 0..n {
-                        out[orow + jj] += av * b[brow + jj];
+                        out[orow + jj] += av * b.load(brow + jj);
                     }
                 }
             }
@@ -324,12 +358,12 @@ fn small_gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
         (false, true) => {
             // a (m,k) · bᵀ, b stored (n,k): dot products over contiguous rows
             for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
+                let arow = i * k;
                 for jj in 0..n {
-                    let brow = &b[jj * k..(jj + 1) * k];
+                    let brow = jj * k;
                     let mut acc = 0f32;
-                    for (x, y) in arow.iter().zip(brow) {
-                        acc += x * y;
+                    for kk in 0..k {
+                        acc += a.load(arow + kk) * b.load(brow + kk);
                     }
                     out[i * n + jj] = acc;
                 }
@@ -341,10 +375,10 @@ fn small_gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
                 let arow = kk * m;
                 let brow = kk * n;
                 for i in 0..m {
-                    let av = a[arow + i];
+                    let av = a.load(arow + i);
                     let orow = i * n;
                     for jj in 0..n {
-                        out[orow + jj] += av * b[brow + jj];
+                        out[orow + jj] += av * b.load(brow + jj);
                     }
                 }
             }
@@ -354,7 +388,7 @@ fn small_gemm_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize,
                 for jj in 0..n {
                     let mut acc = 0f32;
                     for kk in 0..k {
-                        acc += a[kk * m + i] * b[jj * k + kk];
+                        acc += a.load(kk * m + i) * b.load(jj * k + kk);
                     }
                     out[i * n + jj] = acc;
                 }
@@ -496,6 +530,61 @@ mod tests {
         }
         assert_eq!(tile_for_index(0), TILE_CONFIGS[0]);
         assert_eq!(tile_for_index(99), TILE_CONFIGS[TILE_CONFIGS.len() - 1]);
+    }
+
+    #[test]
+    fn bf16_gemm_is_bit_exact_against_decoded_f32_gemm() {
+        // the mixed-precision contract: decoding bf16 at pack time and
+        // accumulating in f32 is bit-identical to decoding the whole
+        // operand up front and running the f32 engine (widening is
+        // exact; only the storage location of the decode differs)
+        use crate::runtime::interp::view::Bf16Src;
+        use crate::runtime::tensor::{f32_to_bf16, f32s_to_bf16_bytes};
+        let arena = WorkspaceArena::new();
+        for (m, k, n) in [(3, 5, 4), (8, 64, 64), (33, 257, 49)] {
+            let af = rand_mat(m * k, 7);
+            let bf = rand_mat(k * n, 8);
+            let (ab, bb) = (f32s_to_bf16_bytes(&af), f32s_to_bf16_bytes(&bf));
+            let adec: Vec<f32> = af.iter()
+                .map(|v| crate::runtime::tensor::bf16_to_f32(f32_to_bf16(*v)))
+                .collect();
+            let bdec: Vec<f32> = bf.iter()
+                .map(|v| crate::runtime::tensor::bf16_to_f32(f32_to_bf16(*v)))
+                .collect();
+            let want = gemm(&adec, &bdec, m, k, n, false, false,
+                            DEFAULT_TILE, 1, &arena);
+            let mut got = vec![0f32; m * n];
+            gemm_into_src(&mut got, Bf16Src(&ab), Bf16Src(&bb), m, k, n,
+                          false, false, DEFAULT_TILE, 1, &arena);
+            assert_eq!(want, got, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn pack_traffic_counts_storage_width_bytes() {
+        use crate::runtime::interp::view::Bf16Src;
+        use crate::runtime::tensor::f32s_to_bf16_bytes;
+        let (m, k, n) = (16, 64, 64); // >= PACK_MIN_MACS, n >= NR
+        assert!(m * k * n >= PACK_MIN_MACS);
+        let af = rand_mat(m * k, 1);
+        let bf = rand_mat(k * n, 2);
+
+        let f32_arena = WorkspaceArena::new();
+        let mut out = vec![0f32; m * n];
+        gemm_into(&mut out, &af, &bf, m, k, n, false, false, DEFAULT_TILE,
+                  1, &f32_arena);
+        assert_eq!(f32_arena.stats().pack_traffic_bytes,
+                   ((m * k + k * n) * 4) as u64);
+
+        let (ab, bb) = (f32s_to_bf16_bytes(&af), f32s_to_bf16_bytes(&bf));
+        let bf16_arena = WorkspaceArena::new();
+        gemm_into_src(&mut out, Bf16Src(&ab), Bf16Src(&bb), m, k, n, false,
+                      false, DEFAULT_TILE, 1, &bf16_arena);
+        assert_eq!(bf16_arena.stats().pack_traffic_bytes,
+                   ((m * k + k * n) * 2) as u64);
+        // the byte-traffic advantage the bench/CI acceptance asserts
+        assert_eq!(f32_arena.stats().pack_traffic_bytes,
+                   2 * bf16_arena.stats().pack_traffic_bytes);
     }
 
     #[test]

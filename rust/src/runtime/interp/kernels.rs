@@ -28,12 +28,45 @@
 
 use super::arena::WorkspaceArena;
 use super::gemm::{self, GemmTile, DEFAULT_TILE};
+use super::view::{Bf16Src, F16Src, F32Bytes, F32Src, I8Src, Load,
+                  TensorView};
 use crate::descriptors::ActivationMode;
-use crate::types::ProblemSig;
+use crate::types::{MiopenError, ProblemSig, Result};
 
 pub use super::gemm::{gemm_threads, naive_matmul, PAR_GEMM_MIN_MACS};
 
 pub const BN_EPS: f32 = 1e-5;
+
+/// Monomorphize a same-dtype (x, w) view pair into concrete [`Load`]
+/// sources and run `$body` with them — the single dispatch point every
+/// `*_view` conv kernel shares. Mixed operand dtypes are an error (the
+/// manifest never emits them).
+macro_rules! dispatch_pair {
+    ($x:expr, $w:expr, |$xv:ident, $wv:ident| $body:expr) => {
+        match ($x, $w) {
+            (TensorView::F32(xb), TensorView::F32(wb)) => {
+                let ($xv, $wv) = (F32Bytes(xb), F32Bytes(wb));
+                Ok($body)
+            }
+            (TensorView::Bf16(xb), TensorView::Bf16(wb)) => {
+                let ($xv, $wv) = (Bf16Src(xb), Bf16Src(wb));
+                Ok($body)
+            }
+            (TensorView::F16(xb), TensorView::F16(wb)) => {
+                let ($xv, $wv) = (F16Src(xb), F16Src(wb));
+                Ok($body)
+            }
+            (TensorView::I8(xb), TensorView::I8(wb)) => {
+                let ($xv, $wv) = (I8Src(xb), I8Src(wb));
+                Ok($body)
+            }
+            (x, w) => Err(MiopenError::Runtime(format!(
+                "interp: mixed conv operand dtypes {} vs {}",
+                x.dtype(), w.dtype()
+            ))),
+        }
+    };
+}
 
 /// Convolution geometry (the `ProblemSig` parameter block).
 #[derive(Debug, Clone, Copy)]
@@ -82,8 +115,22 @@ impl ConvGeom {
 // ---------------------------------------------------------------------------
 
 /// Direct forward convolution (cross-correlation, grouped, dilated).
-/// x: (N,C,H,W), w: (K,C/g,R,S) -> (N,K,Ho,Wo).
+/// x: (N,C,H,W), w: (K,C/g,R,S) -> (N,K,Ho,Wo). f32-slice wrapper over
+/// the dtype-generic loop.
 pub fn conv2d_fwd(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    conv2d_fwd_t(F32Src(x), F32Src(w), g)
+}
+
+/// [`conv2d_fwd`] over dtype-tagged views: bf16/f16/i8 inputs stay in
+/// storage encoding, each tap decodes at the load and partial sums
+/// accumulate in f32 (the `Precision { store, accum }` contract).
+pub fn conv2d_fwd_view(x: &TensorView, w: &TensorView, g: &ConvGeom)
+    -> Result<Vec<f32>> {
+    dispatch_pair!(*x, *w, |xv, wv| conv2d_fwd_t(xv, wv, g))
+}
+
+fn conv2d_fwd_t<LX: Load, LW: Load>(x: LX, w: LW, g: &ConvGeom)
+    -> Vec<f32> {
     let (ho, wo) = g.out_hw();
     let cg = g.c / g.g;
     let kg = g.k / g.g;
@@ -111,7 +158,8 @@ pub fn conv2d_fwd(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
                                 if iw < 0 || iw >= g.w as isize {
                                     continue;
                                 }
-                                acc += x[xrow + iw as usize] * w[wrow + fs];
+                                acc += x.load(xrow + iw as usize)
+                                    * w.load(wrow + fs);
                             }
                         }
                     }
@@ -137,6 +185,26 @@ pub fn conv2d_fwd_im2col(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
 pub fn conv2d_fwd_im2col_with(x: &[f32], w: &[f32], g: &ConvGeom,
                               tile: GemmTile, arena: &WorkspaceArena)
     -> Vec<f32> {
+    conv2d_fwd_im2col_t(F32Src(x), F32Src(w), g, tile, arena)
+}
+
+/// [`conv2d_fwd_im2col_with`] over dtype-tagged views. The unfold stage
+/// decodes `x` from storage into the f32 column matrix (that decode IS
+/// the im2col write, not an extra pass) and the engine's A-side packing
+/// decodes `w` — the two places reduced-precision storage enters the
+/// f32 accumulate domain on this path.
+pub fn conv2d_fwd_im2col_view(x: &TensorView, w: &TensorView, g: &ConvGeom,
+                              tile: GemmTile, arena: &WorkspaceArena)
+    -> Result<Vec<f32>> {
+    dispatch_pair!(*x, *w, |xv, wv| {
+        conv2d_fwd_im2col_t(xv, wv, g, tile, arena)
+    })
+}
+
+fn conv2d_fwd_im2col_t<LX: Load, LW: Load>(x: LX, w: LW, g: &ConvGeom,
+                                           tile: GemmTile,
+                                           arena: &WorkspaceArena)
+    -> Vec<f32> {
     assert_eq!(g.g, 1, "im2col path is dense-only");
     let (ho, wo) = g.out_hw();
     let howo = ho * wo;
@@ -144,7 +212,8 @@ pub fn conv2d_fwd_im2col_with(x: &[f32], w: &[f32], g: &ConvGeom,
     let mut y = vec![0f32; g.n * g.k * howo];
     let mut col = arena.take(crs * howo);
     for n in 0..g.n {
-        // unfold into the (C*R*S, Ho*Wo) column matrix
+        // unfold into the (C*R*S, Ho*Wo) column matrix, decoding from
+        // the storage dtype as each element is placed
         col.fill(0.0);
         for c in 0..g.c {
             for fr in 0..g.r {
@@ -162,7 +231,8 @@ pub fn conv2d_fwd_im2col_with(x: &[f32], w: &[f32], g: &ConvGeom,
                             if iw < 0 || iw >= g.w as isize {
                                 continue;
                             }
-                            col[row + oh * wo + ow] = x[xrow + iw as usize];
+                            col[row + oh * wo + ow] =
+                                x.load(xrow + iw as usize);
                         }
                     }
                 }
@@ -170,15 +240,29 @@ pub fn conv2d_fwd_im2col_with(x: &[f32], w: &[f32], g: &ConvGeom,
         }
         // y[n] = W (K, CRS) @ col (CRS, HoWo), written straight into the
         // output slab — panel-split across the scoped-thread pool when
-        // the GEMM is big enough to amortize it (threads = 0 → auto)
-        gemm::gemm_into(&mut y[n * g.k * howo..(n + 1) * g.k * howo], w,
-                        &col, g.k, crs, howo, false, false, tile, 0, arena);
+        // the GEMM is big enough to amortize it (threads = 0 → auto);
+        // the engine packs W from storage width (per-dtype pack traffic)
+        gemm::gemm_into_src(&mut y[n * g.k * howo..(n + 1) * g.k * howo],
+                            w, F32Src(&col[..]), g.k, crs, howo, false,
+                            false, tile, 0, arena);
     }
     y
 }
 
 /// Gradient w.r.t. the input: dy (N,K,Ho,Wo) + w -> dx (N,C,H,W).
 pub fn conv2d_bwd_data(dy: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    conv2d_bwd_data_t(F32Src(dy), F32Src(w), g)
+}
+
+/// [`conv2d_bwd_data`] over dtype-tagged views (storage-width reads,
+/// f32 accumulate).
+pub fn conv2d_bwd_data_view(dy: &TensorView, w: &TensorView, g: &ConvGeom)
+    -> Result<Vec<f32>> {
+    dispatch_pair!(*dy, *w, |dv, wv| conv2d_bwd_data_t(dv, wv, g))
+}
+
+fn conv2d_bwd_data_t<LD: Load, LW: Load>(dy: LD, w: LW, g: &ConvGeom)
+    -> Vec<f32> {
     let (ho, wo) = g.out_hw();
     let cg = g.c / g.g;
     let kg = g.k / g.g;
@@ -188,7 +272,7 @@ pub fn conv2d_bwd_data(dy: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
             let grp = k / kg;
             for oh in 0..ho {
                 for ow in 0..wo {
-                    let d = dy[((n * g.k + k) * ho + oh) * wo + ow];
+                    let d = dy.load(((n * g.k + k) * ho + oh) * wo + ow);
                     if d == 0.0 {
                         continue;
                     }
@@ -209,7 +293,8 @@ pub fn conv2d_bwd_data(dy: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
                                 if iw < 0 || iw >= g.w as isize {
                                     continue;
                                 }
-                                dx[xrow + iw as usize] += d * w[wrow + fs];
+                                dx[xrow + iw as usize] +=
+                                    d * w.load(wrow + fs);
                             }
                         }
                     }
@@ -222,6 +307,18 @@ pub fn conv2d_bwd_data(dy: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
 
 /// Gradient w.r.t. the filter: dy (N,K,Ho,Wo) + x -> dw (K,C/g,R,S).
 pub fn conv2d_bwd_weights(dy: &[f32], x: &[f32], g: &ConvGeom) -> Vec<f32> {
+    conv2d_bwd_weights_t(F32Src(dy), F32Src(x), g)
+}
+
+/// [`conv2d_bwd_weights`] over dtype-tagged views (storage-width reads,
+/// f32 accumulate).
+pub fn conv2d_bwd_weights_view(dy: &TensorView, x: &TensorView,
+                               g: &ConvGeom) -> Result<Vec<f32>> {
+    dispatch_pair!(*dy, *x, |dv, xv| conv2d_bwd_weights_t(dv, xv, g))
+}
+
+fn conv2d_bwd_weights_t<LD: Load, LX: Load>(dy: LD, x: LX, g: &ConvGeom)
+    -> Vec<f32> {
     let (ho, wo) = g.out_hw();
     let cg = g.c / g.g;
     let kg = g.k / g.g;
@@ -231,7 +328,7 @@ pub fn conv2d_bwd_weights(dy: &[f32], x: &[f32], g: &ConvGeom) -> Vec<f32> {
             let grp = k / kg;
             for oh in 0..ho {
                 for ow in 0..wo {
-                    let d = dy[((n * g.k + k) * ho + oh) * wo + ow];
+                    let d = dy.load(((n * g.k + k) * ho + oh) * wo + ow);
                     if d == 0.0 {
                         continue;
                     }
@@ -252,7 +349,8 @@ pub fn conv2d_bwd_weights(dy: &[f32], x: &[f32], g: &ConvGeom) -> Vec<f32> {
                                 if iw < 0 || iw >= g.w as isize {
                                     continue;
                                 }
-                                dw[wrow + fs] += d * x[xrow + iw as usize];
+                                dw[wrow + fs] +=
+                                    d * x.load(xrow + iw as usize);
                             }
                         }
                     }
@@ -473,6 +571,29 @@ pub fn conv2d_fwd_winograd(x: &[f32], w: &[f32], g: &ConvGeom,
 pub fn conv2d_fwd_winograd_with(x: &[f32], w: &[f32], g: &ConvGeom,
                                 threads: usize, arena: &WorkspaceArena)
     -> Vec<f32> {
+    conv2d_fwd_winograd_t(F32Src(x), F32Src(w), g, threads, arena)
+}
+
+/// [`conv2d_fwd_winograd_with`] over dtype-tagged views: the filter and
+/// data transforms decode from storage tap-by-tap, the entire transform
+/// domain (U, V, M, the inverse transform) lives in f32, and rounding
+/// back to the storage dtype happens only at the caller's store
+/// boundary. This is why the bf16 winograd tolerance is looser than
+/// direct/GEMM — the transforms amplify the input-rounding error by the
+/// Bᵀ·B row sums (docs/NUMERICS.md, "Why winograd needs a looser bf16
+/// tolerance").
+pub fn conv2d_fwd_winograd_view(x: &TensorView, w: &TensorView,
+                                g: &ConvGeom, threads: usize,
+                                arena: &WorkspaceArena) -> Result<Vec<f32>> {
+    dispatch_pair!(*x, *w, |xv, wv| {
+        conv2d_fwd_winograd_t(xv, wv, g, threads, arena)
+    })
+}
+
+fn conv2d_fwd_winograd_t<LX: Load, LW: Load>(x: LX, w: LW, g: &ConvGeom,
+                                             threads: usize,
+                                             arena: &WorkspaceArena)
+    -> Vec<f32> {
     assert!(g.r == 3 && g.s == 3 && g.u == 1 && g.v == 1 && g.l == 1
                 && g.j == 1 && g.g == 1,
             "winograd F(2,3) requires 3x3/stride-1/dense");
@@ -485,12 +606,17 @@ pub fn conv2d_fwd_winograd_with(x: &[f32], w: &[f32], g: &ConvGeom,
     let ct = g.c * t;
     let kt = g.k * t;
 
-    // filter transform U[pos][k][c], shared across the batch
+    // filter transform U[pos][k][c], shared across the batch — the nine
+    // taps decode from storage here, straight into the f32 transform
     let mut u = arena.take(16 * kc);
     for k in 0..g.k {
         for c in 0..g.c {
             let wrow = (k * g.c + c) * 9;
-            let uf = wino_filter_tf(&w[wrow..wrow + 9]);
+            let mut g3 = [0f32; 9];
+            for (i, t) in g3.iter_mut().enumerate() {
+                *t = w.load(wrow + i);
+            }
+            let uf = wino_filter_tf(&g3);
             for (pos, val) in uf.iter().enumerate() {
                 u[pos * kc + k * g.c + c] = *val;
             }
@@ -518,7 +644,7 @@ pub fn conv2d_fwd_winograd_with(x: &[f32], w: &[f32], g: &ConvGeom,
                             if iw < 0 || iw >= g.w as isize {
                                 continue;
                             }
-                            d[i * 4 + jj] = x[xrow + iw as usize];
+                            d[i * 4 + jj] = x.load(xrow + iw as usize);
                         }
                     }
                     let vt = wino_input_tf(&d);
@@ -576,10 +702,28 @@ pub fn conv2d_bwd_data_winograd(dy: &[f32], w: &[f32], g: &ConvGeom,
 pub fn conv2d_bwd_data_winograd_with(dy: &[f32], w: &[f32], g: &ConvGeom,
                                      threads: usize,
                                      arena: &WorkspaceArena) -> Vec<f32> {
+    conv2d_bwd_data_winograd_t(F32Src(dy), F32Src(w), g, threads, arena)
+}
+
+/// [`conv2d_bwd_data_winograd_with`] over dtype-tagged views: the
+/// rotated-filter buffer is built in f32 (decoding `w` tap-by-tap) and
+/// the adjoint forward pipeline reads `dy` from storage width.
+pub fn conv2d_bwd_data_winograd_view(dy: &TensorView, w: &TensorView,
+                                     g: &ConvGeom, threads: usize,
+                                     arena: &WorkspaceArena)
+    -> Result<Vec<f32>> {
+    dispatch_pair!(*dy, *w, |dv, wv| {
+        conv2d_bwd_data_winograd_t(dv, wv, g, threads, arena)
+    })
+}
+
+fn conv2d_bwd_data_winograd_t<LD: Load, LW: Load>(
+    dy: LD, w: LW, g: &ConvGeom, threads: usize, arena: &WorkspaceArena)
+    -> Vec<f32> {
     assert!(g.p <= 2 && g.q <= 2,
             "winograd bwd-data needs pad <= 2 (mirrored padding)");
     let (ho, wo) = g.out_hw();
-    // w̃[c][k] = 180°-rotated w[k][c]
+    // w̃[c][k] = 180°-rotated w[k][c], decoded into f32 once
     let mut wt = arena.take(g.c * g.k * 9);
     for k in 0..g.k {
         for c in 0..g.c {
@@ -588,7 +732,7 @@ pub fn conv2d_bwd_data_winograd_with(dy: &[f32], w: &[f32], g: &ConvGeom,
             for fr in 0..3 {
                 for fs in 0..3 {
                     wt[dst + (2 - fr) * 3 + (2 - fs)] =
-                        w[src + fr * 3 + fs];
+                        w.load(src + fr * 3 + fs);
                 }
             }
         }
@@ -597,7 +741,7 @@ pub fn conv2d_bwd_data_winograd_with(dy: &[f32], w: &[f32], g: &ConvGeom,
         n: g.n, c: g.k, h: ho, w: wo, k: g.c, r: 3, s: 3, u: 1, v: 1,
         p: 2 - g.p, q: 2 - g.q, l: 1, j: 1, g: 1,
     };
-    conv2d_fwd_winograd_with(dy, &wt, &gt, threads, arena)
+    conv2d_fwd_winograd_t(dy, F32Src(&wt[..]), &gt, threads, arena)
 }
 
 // ---------------------------------------------------------------------------
@@ -709,6 +853,26 @@ pub struct FftFilterSpectrum {
 /// into the (K, C) matrix layout the pointwise GEMM stage consumes.
 pub fn fft_filter_spectrum(w: &[f32], g: &ConvGeom,
                            arena: &WorkspaceArena) -> FftFilterSpectrum {
+    fft_filter_spectrum_t(F32Src(w), g, arena)
+}
+
+/// [`fft_filter_spectrum`] over a dtype-tagged view: the taps decode
+/// from storage into the zero-padded f32 plane, everything downstream
+/// (butterflies, pointwise products) is in the f32 accumulate domain.
+pub fn fft_filter_spectrum_view(w: &TensorView, g: &ConvGeom,
+                                arena: &WorkspaceArena)
+    -> FftFilterSpectrum {
+    match *w {
+        TensorView::F32(b) => fft_filter_spectrum_t(F32Bytes(b), g, arena),
+        TensorView::Bf16(b) => fft_filter_spectrum_t(Bf16Src(b), g, arena),
+        TensorView::F16(b) => fft_filter_spectrum_t(F16Src(b), g, arena),
+        TensorView::I8(b) => fft_filter_spectrum_t(I8Src(b), g, arena),
+    }
+}
+
+fn fft_filter_spectrum_t<LW: Load>(w: LW, g: &ConvGeom,
+                                   arena: &WorkspaceArena)
+    -> FftFilterSpectrum {
     let hp = g.h + 2 * g.p;
     let wp = g.w + 2 * g.q;
     let fh = (hp + g.r - 1).next_power_of_two();
@@ -727,7 +891,7 @@ pub fn fft_filter_spectrum(w: &[f32], g: &ConvGeom,
             for frr in 0..g.r {
                 for fss in 0..g.s {
                     pre[(g.r - 1 - frr) * fw + (g.s - 1 - fss)] =
-                        w[wrow + frr * g.s + fss];
+                        w.load(wrow + frr * g.s + fss);
                 }
             }
             fft2d(&mut pre, &mut pim, fh, fw, false, arena);
@@ -761,6 +925,27 @@ pub fn conv2d_fwd_fft(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
 pub fn conv2d_fwd_fft_with(x: &[f32], g: &ConvGeom,
                            spec: &FftFilterSpectrum,
                            arena: &WorkspaceArena) -> Vec<f32> {
+    conv2d_fwd_fft_t(F32Src(x), g, spec, arena)
+}
+
+/// [`conv2d_fwd_fft_with`] over a dtype-tagged image view (the filter
+/// spectrum is dtype-independent once computed — see
+/// [`fft_filter_spectrum_view`]): the image plane fill decodes from
+/// storage, the whole frequency-domain pipeline stays f32.
+pub fn conv2d_fwd_fft_view(x: &TensorView, g: &ConvGeom,
+                           spec: &FftFilterSpectrum,
+                           arena: &WorkspaceArena) -> Vec<f32> {
+    match *x {
+        TensorView::F32(b) => conv2d_fwd_fft_t(F32Bytes(b), g, spec, arena),
+        TensorView::Bf16(b) => conv2d_fwd_fft_t(Bf16Src(b), g, spec, arena),
+        TensorView::F16(b) => conv2d_fwd_fft_t(F16Src(b), g, spec, arena),
+        TensorView::I8(b) => conv2d_fwd_fft_t(I8Src(b), g, spec, arena),
+    }
+}
+
+fn conv2d_fwd_fft_t<LX: Load>(x: LX, g: &ConvGeom,
+                              spec: &FftFilterSpectrum,
+                              arena: &WorkspaceArena) -> Vec<f32> {
     assert!(g.g == 1 && g.l == 1 && g.j == 1,
             "fft conv requires dense undilated problems");
     let (ho, wo) = g.out_hw();
@@ -785,8 +970,9 @@ pub fn conv2d_fwd_fft_with(x: &[f32], g: &ConvGeom,
             for ih in 0..g.h {
                 let xrow = ((n * g.c + c) * g.h + ih) * g.w;
                 let frow = base + (ih + g.p) * fw + g.q;
-                xf_re[frow..frow + g.w]
-                    .copy_from_slice(&x[xrow..xrow + g.w]);
+                for iw in 0..g.w {
+                    xf_re[frow + iw] = x.load(xrow + iw);
+                }
             }
             fft2d(&mut xf_re[base..base + fsz],
                   &mut xf_im[base..base + fsz], fh, fw, false, arena);

@@ -16,6 +16,15 @@
 //! measures genuinely different executions per algorithm and the
 //! golden-parity suite cross-checks them against each other (§IV-A).
 //!
+//! Reduced precision is a real execution mode here, not a decode shim:
+//! bf16/f16 conv operands are borrowed as [`view::TensorView`]s in
+//! their 2-byte storage encodings, decoded to f32 exactly where a
+//! kernel (or the GEMM pack stage) reads them, accumulated in f32, and
+//! rounded to the storage dtype once at the store boundary — the
+//! explicit [`crate::types::Precision`] pair the dispatch threads
+//! through. The full contract (per-algorithm rounding points, tolerance
+//! derivations, NaN/Inf guarantees) lives in docs/NUMERICS.md.
+//!
 //! Every compiled executable owns a [`arena::WorkspaceArena`] pre-sized
 //! from the artifact's recorded workspace (`solvers::workspace_for`):
 //! im2col column matrices, GEMM packing panels, winograd U/V/M tensors
@@ -29,6 +38,7 @@ pub mod arena;
 pub mod cnn;
 pub mod gemm;
 pub mod kernels;
+pub mod view;
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -37,10 +47,11 @@ use crate::descriptors::ActivationMode;
 use crate::manifest::{Artifact, TensorSpec};
 use crate::runtime::{tensor, Backend, Executable, HostTensor};
 use crate::solvers::{GEMM_TILE_PARAM, WINO_THREADS_PARAM};
-use crate::types::{algo, DType, MiopenError, ProblemSig, Result};
+use crate::types::{algo, DType, MiopenError, Precision, ProblemSig, Result};
 
 use arena::WorkspaceArena;
 use kernels as k;
+use view::TensorView;
 
 pub struct InterpBackend;
 
@@ -71,9 +82,10 @@ impl Backend for InterpBackend {
     }
 }
 
-/// Cached FFT filter spectrum + the weight bytes it was computed from.
+/// Cached FFT filter spectrum + the raw weight bytes it was computed
+/// from (storage encoding, so bf16 weights key at 2 bytes/element).
 struct FftCacheEntry {
-    weights: Vec<f32>,
+    weights: Vec<u8>,
     spec: Arc<k::FftFilterSpectrum>,
 }
 
@@ -99,20 +111,24 @@ impl ExecState {
         Self::new(art.workspace_bytes)
     }
 
-    /// The bin-major filter spectrum for `w`, computed once and cached;
-    /// recomputed only when the weight bytes change (training).
-    fn fft_spectrum(&self, w: &[f32], g: &k::ConvGeom)
-        -> Arc<k::FftFilterSpectrum> {
+    /// The bin-major filter spectrum for the weight tensor, computed
+    /// once and cached; recomputed only when the raw weight bytes change
+    /// (training). Keying on storage bytes means a bf16 filter bank is
+    /// compared at 2 bytes/element — never widened for the comparison.
+    fn fft_spectrum(&self, w: &HostTensor, g: &k::ConvGeom)
+        -> Result<Arc<k::FftFilterSpectrum>> {
         let mut guard = self.fft.lock().unwrap();
         if let Some(e) = guard.as_ref() {
-            if e.weights == w {
-                return e.spec.clone();
+            if e.weights == w.data {
+                return Ok(e.spec.clone());
             }
         }
-        let spec = Arc::new(k::fft_filter_spectrum(w, g, &self.arena));
-        *guard = Some(FftCacheEntry { weights: w.to_vec(),
+        let wv = TensorView::from_host(w)?;
+        let spec =
+            Arc::new(k::fft_filter_spectrum_view(&wv, g, &self.arena));
+        *guard = Some(FftCacheEntry { weights: w.data.clone(),
                                       spec: spec.clone() });
-        spec
+        Ok(spec)
     }
 }
 
@@ -152,19 +168,37 @@ fn check_supported(art: &Artifact) -> Result<()> {
 // Conversions at the execution boundary
 // ---------------------------------------------------------------------------
 
+/// Explicit whole-tensor decode into the f32 accumulate domain, with
+/// the buffer length validated against the spec ([`TensorView`] does
+/// the check). This is the *cold*-path helper for elementwise/
+/// normalization primitives and per-channel fusion parameters; conv
+/// kernels read through views instead and never materialize this copy.
+/// (Replaces the old `DType::F32 | DType::Bf16 => t.as_f32()` arm that
+/// silently round-tripped illegally encoded bf16 buffers.)
 fn input_f32(t: &HostTensor) -> Result<Vec<f32>> {
     match t.spec.dtype {
-        DType::F32 | DType::Bf16 => t.as_f32(),
-        DType::F16 => Ok(t
-            .data
-            .chunks_exact(2)
-            .map(|b| tensor::f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])))
-            .collect()),
-        DType::I8 => Ok(t.data.iter().map(|&b| (b as i8) as f32).collect()),
+        DType::F32 | DType::Bf16 | DType::F16 | DType::I8 => {
+            Ok(TensorView::from_host(t)?.to_f32())
+        }
         other => Err(MiopenError::Runtime(format!(
             "interp: cannot read {other} tensor as f32"
         ))),
     }
+}
+
+/// The **store boundary**: one round-to-nearest-even from the f32
+/// accumulate domain back to the output's storage dtype. `prec` is the
+/// kernel's explicit precision pair — emitting into a spec whose dtype
+/// disagrees with it is an internal error, not a silent widening.
+fn store_tensor(spec: &TensorSpec, prec: Precision, vals: &[f32])
+    -> Result<HostTensor> {
+    if spec.dtype != prec.store {
+        return Err(MiopenError::Internal(format!(
+            "store boundary: kernel ran at {:?} but output spec is {}",
+            prec, spec.dtype
+        )));
+    }
+    out_tensor(spec, vals)
 }
 
 fn out_tensor(spec: &TensorSpec, vals: &[f32]) -> Result<HostTensor> {
@@ -318,28 +352,41 @@ fn run_conv(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
     -> Result<Vec<HostTensor>> {
     let (psig, algo_name, _tag) = ProblemSig::parse_artifact(&art.sig)?;
     let geom = k::ConvGeom::from_sig(&psig);
-    let a = input_f32(&inputs[0])?;
-    let b = input_f32(&inputs[1])?;
+    // The mixed-precision execution path: both operands are borrowed in
+    // their storage encoding (bf16/f16 stay 2-byte — no decoded f32
+    // tensor is ever materialized), kernels decode at the load/pack
+    // boundary and accumulate in f32, and the one rounding back to the
+    // storage dtype happens at the store boundary below. The store
+    // dtype is the artifact's output spec (i8 conv stores exact f32).
+    let a = TensorView::from_host(&inputs[0])?;
+    let b = TensorView::from_host(&inputs[1])?;
+    // The precision pair comes from the problem signature, NOT from the
+    // output spec, so the store-boundary check below is a real
+    // cross-check: an emitter bug that records a mismatched output
+    // dtype fails loudly instead of silently storing at the wrong
+    // width. The one documented exception: i8 conv stores exact f32.
+    let store = if psig.dtype == DType::I8 { DType::F32 } else { psig.dtype };
+    let prec = Precision::of(store);
     let out = match psig.direction.as_str() {
         "fwd" => match algo_name.as_str() {
-            algo::GEMM if geom.g == 1 => k::conv2d_fwd_im2col_with(
-                &a, &b, &geom, gemm_tuned_tile(art), &st.arena),
-            algo::WINOGRAD => k::conv2d_fwd_winograd_with(
-                &a, &b, &geom, wino_tuned_threads(art), &st.arena),
+            algo::GEMM if geom.g == 1 => k::conv2d_fwd_im2col_view(
+                &a, &b, &geom, gemm_tuned_tile(art), &st.arena)?,
+            algo::WINOGRAD => k::conv2d_fwd_winograd_view(
+                &a, &b, &geom, wino_tuned_threads(art), &st.arena)?,
             algo::FFT => {
-                let spec = st.fft_spectrum(&b, &geom);
-                k::conv2d_fwd_fft_with(&a, &geom, &spec, &st.arena)
+                let spec = st.fft_spectrum(&inputs[1], &geom)?;
+                k::conv2d_fwd_fft_view(&a, &geom, &spec, &st.arena)
             }
-            _ => k::conv2d_fwd(&a, &b, &geom),
+            _ => k::conv2d_fwd_view(&a, &b, &geom)?,
         },
         "bwd" => match algo_name.as_str() {
-            algo::WINOGRAD => k::conv2d_bwd_data_winograd_with(
-                &a, &b, &geom, wino_tuned_threads(art), &st.arena),
-            _ => k::conv2d_bwd_data(&a, &b, &geom),
+            algo::WINOGRAD => k::conv2d_bwd_data_winograd_view(
+                &a, &b, &geom, wino_tuned_threads(art), &st.arena)?,
+            _ => k::conv2d_bwd_data_view(&a, &b, &geom)?,
         },
-        _ => k::conv2d_bwd_weights(&a, &b, &geom),
+        _ => k::conv2d_bwd_weights_view(&a, &b, &geom)?,
     };
-    Ok(vec![out_tensor(&art.outputs[0], &out)?])
+    Ok(vec![store_tensor(&art.outputs[0], prec, &out)?])
 }
 
 /// Can the F(2×2, 3×3) pipeline execute this geometry? The mdgraph's
@@ -356,14 +403,17 @@ fn wino_executable(g: &k::ConvGeom) -> bool {
 /// not a relabeled direct loop). Geometries the F(2,3) kernel cannot
 /// take (the mdgraph's non-3×3/stride-2 winograd rows) fall back to the
 /// direct kernel instead of panicking in the transform pipeline.
-fn fused_conv(art: &Artifact, x: &[f32], w: &[f32], geom: &k::ConvGeom,
-              st: &ExecState) -> Vec<f32> {
+/// Operands arrive as storage-encoded views, so Table II's executable
+/// bf16 CBA/CBNA plans run genuinely mixed (2-byte inputs, f32
+/// accumulate) rather than through an up-front widening.
+fn fused_conv(art: &Artifact, x: &TensorView, w: &TensorView,
+              geom: &k::ConvGeom, st: &ExecState) -> Result<Vec<f32>> {
     match art.str_param("conv_algo") {
         Some(algo::WINOGRAD) if wino_executable(geom) => {
-            k::conv2d_fwd_winograd_with(x, w, geom,
+            k::conv2d_fwd_winograd_view(x, w, geom,
                                         wino_tuned_threads(art), &st.arena)
         }
-        _ => k::conv2d_fwd(x, w, geom),
+        _ => k::conv2d_fwd_view(x, w, geom),
     }
 }
 
@@ -376,10 +426,12 @@ fn run_fusion(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
         "cba" => {
             let geom = geom_from_params(art)?;
             let (ho, wo) = geom.out_hw();
-            let x = input_f32(&inputs[0])?;
-            let w = input_f32(&inputs[1])?;
+            // conv operands stay in storage encoding; the per-channel
+            // bias (K elements) decodes to the f32 accumulate domain
+            let x = TensorView::from_host(&inputs[0])?;
+            let w = TensorView::from_host(&inputs[1])?;
             let bias = input_f32(&inputs[2])?;
-            let y = fused_conv(art, &x, &w, &geom, st);
+            let y = fused_conv(art, &x, &w, &geom, st)?;
             let y = k::bias_add(&y, &bias, geom.n, geom.k, ho * wo);
             let y = k::act_fwd(&y, act, alpha);
             Ok(vec![out_tensor(&art.outputs[0], &y)?])
@@ -387,14 +439,14 @@ fn run_fusion(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
         "cbna" => {
             let geom = geom_from_params(art)?;
             let (ho, wo) = geom.out_hw();
-            let x = input_f32(&inputs[0])?;
-            let w = input_f32(&inputs[1])?;
+            let x = TensorView::from_host(&inputs[0])?;
+            let w = TensorView::from_host(&inputs[1])?;
             let bias = input_f32(&inputs[2])?;
             let gamma = input_f32(&inputs[3])?;
             let beta = input_f32(&inputs[4])?;
             let mean = input_f32(&inputs[5])?;
             let var = input_f32(&inputs[6])?;
-            let y = fused_conv(art, &x, &w, &geom, st);
+            let y = fused_conv(art, &x, &w, &geom, st)?;
             let y = k::bias_add(&y, &bias, geom.n, geom.k, ho * wo);
             let y = k::bn_spatial_infer(&y, &gamma, &beta, &mean, &var,
                                         geom.n, geom.k, ho, wo);
@@ -749,6 +801,76 @@ mod tests {
             parse_pool_sig("pool_bwd-max-n4c8h14w14k3x3u2p1-f32").unwrap(),
             (3, 3, 2, 1));
         assert!(parse_pool_sig("pool_fwd").is_err());
+    }
+
+    #[test]
+    fn illegally_encoded_bf16_input_is_rejected() {
+        // regression for the silent-widening bug: the old dispatch
+        // matched `DType::F32 | DType::Bf16 => t.as_f32()` with no
+        // length validation, so a bf16 tensor whose buffer was never
+        // legally encoded round-tripped without error. The view decode
+        // validates against spec.size_bytes().
+        let m = Manifest::builtin();
+        let art = m
+            .by_primitive("conv")
+            .find(|a| a.dtype == DType::Bf16 && a.algo == algo::GEMM)
+            .expect("builtin set carries bf16 gemm artifacts")
+            .clone();
+        let mut rng = SplitMix64::new(3);
+        let mut inputs: Vec<HostTensor> = art
+            .inputs
+            .iter()
+            .map(|spec| HostTensor::random_normal(spec, &mut rng))
+            .collect();
+        // sanity: legal encoding executes
+        let st = ExecState::for_artifact(&art);
+        assert!(execute(&art, &inputs, &st).is_ok());
+        // truncate the bf16 buffer: must error, not decode garbage
+        inputs[0].data.pop();
+        let err = execute(&art, &inputs, &st).unwrap_err();
+        assert!(err.to_string().contains("bytes"), "{err}");
+        // an f32-sized buffer under a bf16 spec is just as illegal
+        inputs[0].data =
+            vec![0u8; inputs[0].spec.elem_count() * 4];
+        assert!(execute(&art, &inputs, &st).is_err());
+    }
+
+    #[test]
+    fn bf16_conv_stays_two_byte_and_rounds_at_store() {
+        // the mixed-precision acceptance shape: outputs of the real
+        // bf16 path must be bit-identical to "decode everything to f32,
+        // run the f32 kernel, round once at the store" — widening bf16
+        // is exact, accumulation is f32 in both, and the store boundary
+        // is the only rounding point.
+        let m = Manifest::builtin();
+        for a in m.by_primitive("conv") {
+            if a.dtype != DType::Bf16 || a.direction != "fwd" {
+                continue;
+            }
+            let mut rng = SplitMix64::new(11);
+            let inputs: Vec<HostTensor> = a
+                .inputs
+                .iter()
+                .map(|spec| HostTensor::random_normal(spec, &mut rng))
+                .collect();
+            let st = ExecState::for_artifact(a);
+            let got = execute(a, &inputs, &st).unwrap();
+            let (psig, algo_name, _) =
+                ProblemSig::parse_artifact(&a.sig).unwrap();
+            let geom = k::ConvGeom::from_sig(&psig);
+            let x = inputs[0].as_f32().unwrap();
+            let w = inputs[1].as_f32().unwrap();
+            let oracle = match algo_name.as_str() {
+                algo::GEMM => k::conv2d_fwd_im2col(&x, &w, &geom),
+                algo::WINOGRAD => k::conv2d_fwd_winograd(&x, &w, &geom, 1),
+                algo::FFT => k::conv2d_fwd_fft(&x, &w, &geom),
+                _ => k::conv2d_fwd(&x, &w, &geom),
+            };
+            let oracle_t = out_tensor(&a.outputs[0], &oracle).unwrap();
+            assert_eq!(got[0].data, oracle_t.data,
+                       "{}: bf16 path diverged from rounding oracle",
+                       a.sig);
+        }
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Dtype-aware tensor views — the mixed-precision **load boundary**.
+//!
+//! A [`TensorView`] borrows a [`HostTensor`]'s raw byte buffer without
+//! materializing a widened copy: bf16/f16 tensors stay in their 2-byte
+//! encodings end-to-end and are decoded to the f32 accumulate domain
+//! element-by-element, exactly where a kernel (or the GEMM pack stage)
+//! reads them. This is the storage half of the `Precision { store,
+//! accum }` contract in [`crate::types::Precision`]; the rounding half
+//! (one round-to-nearest-even back to the storage dtype) happens at the
+//! output store boundary in `runtime/interp/mod.rs`. The full numerics
+//! contract is documented in `docs/NUMERICS.md`.
+//!
+//! Kernels are generic over the [`Load`] trait so the f32 path
+//! monomorphizes to plain slice reads (no per-element dispatch) while
+//! the bf16/f16/i8 paths decode inline. [`TensorView::from_host`]
+//! validates the byte-buffer length against the spec's `size_bytes` —
+//! the explicit decode that replaced the silent
+//! `DType::F32 | DType::Bf16 => as_f32()` widening (a bf16 buffer of
+//! the wrong length is now an error, not a garbage round-trip).
+
+use crate::runtime::tensor::{bf16_to_f32, f16_bits_to_f32};
+use crate::runtime::HostTensor;
+use crate::types::{DType, MiopenError, Result};
+
+/// Element source a mixed-precision kernel reads through: decodes one
+/// storage element into the f32 accumulate domain per [`Load::load`]
+/// call. Implementations are `Copy` views over borrowed buffers.
+pub trait Load: Copy {
+    /// Bytes one element occupies in storage (the traffic a pack stage
+    /// actually reads — see the arena's packing-traffic counters).
+    const SRC_BYTES: usize;
+
+    /// Decode element `i` to f32. Panics on out-of-range `i`, like a
+    /// slice index.
+    fn load(&self, i: usize) -> f32;
+
+    /// Element count of the underlying buffer.
+    fn len(&self) -> usize;
+
+    /// True when the view holds no elements.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// f32 elements stored as a typed slice (kernel-internal buffers, the
+/// classic API surface).
+#[derive(Clone, Copy)]
+pub struct F32Src<'a>(pub &'a [f32]);
+
+impl Load for F32Src<'_> {
+    const SRC_BYTES: usize = 4;
+
+    #[inline(always)]
+    fn load(&self, i: usize) -> f32 {
+        self.0[i]
+    }
+
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+}
+
+/// f32 elements stored as raw little-endian bytes (a [`HostTensor`]'s
+/// buffer, read in place without an aligned copy).
+#[derive(Clone, Copy)]
+pub struct F32Bytes<'a>(pub &'a [u8]);
+
+impl Load for F32Bytes<'_> {
+    const SRC_BYTES: usize = 4;
+
+    #[inline(always)]
+    fn load(&self, i: usize) -> f32 {
+        let b = &self.0[4 * i..4 * i + 4];
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    fn len(&self) -> usize {
+        self.0.len() / 4
+    }
+}
+
+/// bf16 elements in their 2-byte storage encoding; decoding widens the
+/// exact value (every bf16 is exactly representable in f32).
+#[derive(Clone, Copy)]
+pub struct Bf16Src<'a>(pub &'a [u8]);
+
+impl Load for Bf16Src<'_> {
+    const SRC_BYTES: usize = 2;
+
+    #[inline(always)]
+    fn load(&self, i: usize) -> f32 {
+        bf16_to_f32([self.0[2 * i], self.0[2 * i + 1]])
+    }
+
+    fn len(&self) -> usize {
+        self.0.len() / 2
+    }
+}
+
+/// IEEE f16 elements in their 2-byte storage encoding (exact widening).
+#[derive(Clone, Copy)]
+pub struct F16Src<'a>(pub &'a [u8]);
+
+impl Load for F16Src<'_> {
+    const SRC_BYTES: usize = 2;
+
+    #[inline(always)]
+    fn load(&self, i: usize) -> f32 {
+        f16_bits_to_f32(u16::from_le_bytes([self.0[2 * i],
+                                            self.0[2 * i + 1]]))
+    }
+
+    fn len(&self) -> usize {
+        self.0.len() / 2
+    }
+}
+
+/// Signed 8-bit integer elements (int8 inference); f32 holds every i8
+/// exactly, so accumulation is exact.
+#[derive(Clone, Copy)]
+pub struct I8Src<'a>(pub &'a [u8]);
+
+impl Load for I8Src<'_> {
+    const SRC_BYTES: usize = 1;
+
+    #[inline(always)]
+    fn load(&self, i: usize) -> f32 {
+        (self.0[i] as i8) as f32
+    }
+
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+}
+
+/// A dtype-tagged borrowed tensor buffer: the runtime form kernels
+/// dispatch on. Constructed via [`TensorView::from_host`], which is the
+/// validated decode boundary of the interp backend.
+#[derive(Clone, Copy)]
+pub enum TensorView<'a> {
+    /// f32 storage (raw little-endian bytes).
+    F32(&'a [u8]),
+    /// bf16 storage — stays 2-byte; decoded at the load boundary.
+    Bf16(&'a [u8]),
+    /// f16 storage — stays 2-byte; decoded at the load boundary.
+    F16(&'a [u8]),
+    /// i8 storage (int8 inference inputs).
+    I8(&'a [u8]),
+}
+
+impl<'a> TensorView<'a> {
+    /// Borrow a host tensor's buffer as a typed view, validating the
+    /// byte length against the spec (`elem_count · size_bytes`). This is
+    /// the regression-pinned fix for the silent-widening bug: a bf16
+    /// tensor whose buffer was never legally encoded errors here instead
+    /// of round-tripping garbage through `as_f32`.
+    pub fn from_host(t: &'a HostTensor) -> Result<Self> {
+        let want = t.spec.size_bytes();
+        if t.data.len() != want {
+            return Err(MiopenError::ShapeMismatch(format!(
+                "{} tensor {:?} holds {} bytes, spec requires {want}",
+                t.spec.dtype, t.spec.shape, t.data.len()
+            )));
+        }
+        Ok(match t.spec.dtype {
+            DType::F32 => TensorView::F32(&t.data),
+            DType::Bf16 => TensorView::Bf16(&t.data),
+            DType::F16 => TensorView::F16(&t.data),
+            DType::I8 => TensorView::I8(&t.data),
+            other => {
+                return Err(MiopenError::Runtime(format!(
+                    "interp: no f32-domain view over a {other} tensor"
+                )))
+            }
+        })
+    }
+
+    /// Storage dtype of the viewed buffer.
+    pub fn dtype(&self) -> DType {
+        match *self {
+            TensorView::F32(_) => DType::F32,
+            TensorView::Bf16(_) => DType::Bf16,
+            TensorView::F16(_) => DType::F16,
+            TensorView::I8(_) => DType::I8,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match *self {
+            TensorView::F32(b) => b.len() / 4,
+            TensorView::Bf16(b) | TensorView::F16(b) => b.len() / 2,
+            TensorView::I8(b) => b.len(),
+        }
+    }
+
+    /// True when the view holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode element `i` to f32 (dispatching convenience; kernels use
+    /// the monomorphized [`Load`] sources instead).
+    pub fn get(&self, i: usize) -> f32 {
+        match *self {
+            TensorView::F32(b) => F32Bytes(b).load(i),
+            TensorView::Bf16(b) => Bf16Src(b).load(i),
+            TensorView::F16(b) => F16Src(b).load(i),
+            TensorView::I8(b) => I8Src(b).load(i),
+        }
+    }
+
+    /// Decode the whole buffer into an f32 vector. The *cold*-path
+    /// helper (per-channel fusion params, non-conv primitives) — conv
+    /// kernels never call this; they read through [`Load`] in place.
+    pub fn to_f32(&self) -> Vec<f32> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::TensorSpec;
+    use crate::runtime::tensor::f32_to_bf16;
+
+    #[test]
+    fn views_decode_to_the_same_values_as_as_f32() {
+        let vals = [1.5f32, -2.25, 0.0, 3.0e-3, -128.0];
+        let t = HostTensor::from_f32(&[5], &vals);
+        let v = TensorView::from_host(&t).unwrap();
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.to_f32(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn bf16_view_stays_two_byte_and_decodes_exactly() {
+        let mut data = Vec::new();
+        for v in [1.0f32, -0.5, 3.25] {
+            data.extend_from_slice(&f32_to_bf16(v));
+        }
+        let t = HostTensor {
+            spec: TensorSpec { shape: vec![3], dtype: DType::Bf16 },
+            data,
+        };
+        let v = TensorView::from_host(&t).unwrap();
+        // borrowed, not copied: the view aliases the tensor's bytes
+        match v {
+            TensorView::Bf16(b) => {
+                assert!(std::ptr::eq(b.as_ptr(), t.data.as_ptr()))
+            }
+            _ => panic!("expected bf16 view"),
+        }
+        assert_eq!(v.to_f32(), vec![1.0, -0.5, 3.25]);
+    }
+
+    #[test]
+    fn from_host_rejects_illegally_encoded_buffers() {
+        // the silent-widening regression: a bf16 tensor with a truncated
+        // (or f32-sized) buffer must be an error, not a garbage decode
+        let spec = TensorSpec { shape: vec![4], dtype: DType::Bf16 };
+        for len in [0usize, 7, 16] {
+            let t = HostTensor { spec: spec.clone(), data: vec![0u8; len] };
+            assert!(TensorView::from_host(&t).is_err(), "len {len}");
+        }
+        let ok = HostTensor { spec: spec.clone(), data: vec![0u8; 8] };
+        assert!(TensorView::from_host(&ok).is_ok());
+    }
+
+    #[test]
+    fn i8_view_is_exact() {
+        let t = HostTensor {
+            spec: TensorSpec { shape: vec![3], dtype: DType::I8 },
+            data: vec![0x7f, 0x80, 0x00], // 127, -128, 0
+        };
+        let v = TensorView::from_host(&t).unwrap();
+        assert_eq!(v.to_f32(), vec![127.0, -128.0, 0.0]);
+    }
+}

@@ -216,6 +216,14 @@ pub fn f32_to_bf16(v: f32) -> [u8; 2] {
     bf.to_le_bytes()
 }
 
+/// Encode an f32 slice into its bf16 storage bytes (RNE per element) —
+/// the single helper the bench sweeps and the rounding-oracle tests
+/// share, so the encoding under test can never drift from the one the
+/// store boundary uses.
+pub fn f32s_to_bf16_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| f32_to_bf16(*x)).collect()
+}
+
 pub fn bf16_to_f32(b: [u8; 2]) -> f32 {
     f32::from_bits((u16::from_le_bytes(b) as u32) << 16)
 }

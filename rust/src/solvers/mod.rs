@@ -21,7 +21,15 @@ use std::collections::BTreeMap;
 
 use crate::perfmodel::GcnModel;
 use crate::runtime::interp::gemm;
-use crate::types::{algo, ProblemSig, TuneTag};
+use crate::types::{algo, DType, ProblemSig, TuneTag};
+
+/// Storage dtypes the mixed-precision float kernels execute: f32 plus
+/// the 2-byte formats that decode at the load/pack boundary and
+/// accumulate in f32 (docs/NUMERICS.md). int8 goes through the direct
+/// solver only (exact f32 accumulation, f32 output).
+fn float_exec_dtype(d: DType) -> bool {
+    matches!(d, DType::F32 | DType::Bf16 | DType::F16)
+}
 
 /// One point of a solver's tuning grid: parameter name → value (§III-B).
 pub type TuningParams = BTreeMap<String, i64>;
@@ -86,7 +94,9 @@ impl Solver for GemmSolver {
     }
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
-        sig.g == 1 // grouped conv goes through direct
+        // grouped conv goes through direct; the engine's float pipeline
+        // takes f32 plus the 2-byte formats it decodes at pack time
+        sig.g == 1 && float_exec_dtype(sig.dtype)
     }
 
     fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
@@ -95,12 +105,15 @@ impl Solver for GemmSolver {
         // (weights, MR-strip padded) and packed B (the column matrix,
         // NR-strip padded) panels. Per-image buffers are reused across
         // the batch by the workspace arena, so N does not multiply in.
+        // All of them are **f32 accumulate-domain** buffers regardless
+        // of the storage dtype — bf16/f16 operands decode into these
+        // panels at pack time, they are never stored reduced.
         let (ho, wo) = sig.out_hw();
         let howo = ho * wo;
         let crs = sig.c * sig.r * sig.s;
         let pa = sig.k.div_ceil(gemm::MR) * gemm::MR * crs;
         let pb = howo.div_ceil(gemm::NR) * gemm::NR * crs;
-        (crs * howo + pa + pb) as u64 * sig.dtype.size_bytes() as u64
+        (crs * howo + pa + pb) as u64 * DType::F32.size_bytes() as u64
     }
 
     fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
@@ -134,8 +147,11 @@ impl Solver for DirectSolver {
         algo::DIRECT
     }
 
-    fn is_applicable(&self, _sig: &ProblemSig) -> bool {
-        true // the direct kernels cover every variant incl. grouped
+    fn is_applicable(&self, sig: &ProblemSig) -> bool {
+        // the direct kernels cover every variant incl. grouped, and all
+        // four executable storage dtypes (f32/bf16/f16 mixed-precision
+        // plus exact-i8-in/f32-out inference)
+        float_exec_dtype(sig.dtype) || sig.dtype == DType::I8
     }
 
     fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
@@ -162,7 +178,7 @@ impl Solver for ImplicitGemmSolver {
     }
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
-        sig.direction == "fwd" && sig.g == 1
+        sig.direction == "fwd" && sig.g == 1 && float_exec_dtype(sig.dtype)
     }
 
     fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
@@ -198,6 +214,7 @@ impl Solver for WinogradSolver {
             _ => false,
         };
         dir_ok
+            && float_exec_dtype(sig.dtype)
             && sig.r == 3
             && sig.s == 3
             && sig.u == 1
@@ -213,12 +230,15 @@ impl Solver for WinogradSolver {
         // bwd-data runs the adjoint pipeline, tiling the (H, W) dx
         // extent instead. (The paper's GPU kernels fuse the transforms
         // and report zero; our reference executor materializes them.)
+        // The transform domain is always f32 — bf16/f16 storage decodes
+        // into it tap-by-tap, so the buffers are 4 B/element for every
+        // storage dtype.
         let (ho, wo) = sig.out_hw();
         let (eh, ew) =
             if sig.direction == "bwd" { (sig.h, sig.w) } else { (ho, wo) };
         let t = (eh.div_ceil(2) * ew.div_ceil(2)) as u64;
         let (k, c) = (sig.k as u64, (sig.c / sig.g) as u64);
-        16 * (k * c + c * t + k * t) * sig.dtype.size_bytes() as u64
+        16 * (k * c + c * t + k * t) * DType::F32.size_bytes() as u64
     }
 
     fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
@@ -269,6 +289,7 @@ impl Solver for FftSolver {
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
         sig.direction == "fwd"
+            && float_exec_dtype(sig.dtype)
             && sig.r.max(sig.s) >= 5
             && sig.l == 1
             && sig.j == 1
@@ -392,6 +413,52 @@ mod tests {
         assert_eq!(workspace_for("winograd", &p),
                    WinogradSolver.workspace_bytes(&p));
         assert_eq!(workspace_for("nosuch", &p), 0);
+    }
+
+    #[test]
+    fn dtype_applicability_matrix() {
+        let names = |s: &ProblemSig| {
+            applicable(s).iter().map(|x| x.name().to_string())
+                .collect::<Vec<_>>()
+        };
+        // bf16/f16 keep the full mixed-precision fwd zoo (storage
+        // decodes at the load/pack boundary, accumulate is f32)
+        for d in [DType::Bf16, DType::F16] {
+            let mut p = sig("fwd", 3, 1, 1, 1);
+            p.dtype = d;
+            assert_eq!(names(&p),
+                       vec!["winograd", "direct", "implicit", "gemm"],
+                       "{d}");
+            let mut big = sig("fwd", 5, 1, 1, 1);
+            big.dtype = d;
+            assert_eq!(names(&big),
+                       vec!["direct", "implicit", "fft", "gemm"], "{d}");
+        }
+        // int8 inference is direct-only (exact i8-in/f32-out loops)
+        let mut p = sig("fwd", 3, 1, 1, 1);
+        p.dtype = DType::I8;
+        assert_eq!(names(&p), vec!["direct"]);
+        // index dtypes have no conv kernels at all
+        p.dtype = DType::I32;
+        assert!(names(&p).is_empty());
+    }
+
+    #[test]
+    fn workspace_is_accumulate_domain_sized() {
+        // bf16 storage decodes into f32 panels/transform buffers, so
+        // the honest workspace is identical to f32's — storage dtype
+        // changes the tensors, not the accumulate-domain scratch
+        let f32_p = sig("fwd", 3, 1, 1, 1);
+        let mut bf16_p = f32_p.clone();
+        bf16_p.dtype = DType::Bf16;
+        assert_eq!(GemmSolver.workspace_bytes(&bf16_p),
+                   GemmSolver.workspace_bytes(&f32_p));
+        assert_eq!(WinogradSolver.workspace_bytes(&bf16_p),
+                   WinogradSolver.workspace_bytes(&f32_p));
+        let mut fft_p = sig("fwd", 5, 1, 1, 1);
+        fft_p.dtype = DType::Bf16;
+        assert_eq!(FftSolver.workspace_bytes(&fft_p),
+                   FftSolver.workspace_bytes(&sig("fwd", 5, 1, 1, 1)));
     }
 
     #[test]

@@ -70,6 +70,34 @@ impl DType {
         }
     }
 
+    /// The accumulation dtype mixed-precision kernels carry partial sums
+    /// in: f32 for every float and integer storage type this library
+    /// executes (the cuDNN/MIOpen "fp16/bf16 storage, f32 accumulate"
+    /// convention; i8 conv also accumulates exactly in f32). Index types
+    /// accumulate as themselves.
+    pub fn accum(self) -> DType {
+        match self {
+            DType::F32 | DType::F16 | DType::Bf16 | DType::I8 => DType::F32,
+            other => other,
+        }
+    }
+
+    /// Unit roundoff `u` of the float format: the relative-error bound
+    /// of one round-to-nearest-even rounding, `u = 2⁻ᵖ` for a p-bit
+    /// significand (implicit bit included). bf16 has p = 8 (u = 2⁻⁸),
+    /// f16 has p = 11 (u = 2⁻¹¹), f32 has p = 24 (u = 2⁻²⁴). Integer
+    /// types round exactly within range and report 0. The
+    /// docs/NUMERICS.md tolerance derivations and the mixed-precision
+    /// parity tests build their bounds from this.
+    pub fn unit_roundoff(self) -> f64 {
+        match self {
+            DType::F32 => (2f64).powi(-24),
+            DType::F16 => (2f64).powi(-11),
+            DType::Bf16 => (2f64).powi(-8),
+            _ => 0.0,
+        }
+    }
+
     /// Inverse of [`DType::name`]; `None` for unknown names.
     pub fn parse(s: &str) -> Option<DType> {
         Some(match s {
@@ -87,6 +115,35 @@ impl DType {
 impl std::fmt::Display for DType {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
+    }
+}
+
+/// The explicit (storage, accumulation) dtype pair a mixed-precision
+/// kernel executes under — the contract docs/NUMERICS.md documents.
+///
+/// Every conv kernel in the interp backend threads one of these instead
+/// of silently widening: inputs are decoded from `store` at the load/
+/// pack boundary, all partial sums live in `accum`, and exactly one
+/// round-to-nearest-even back to `store` happens at the output store
+/// boundary. Constructed via [`Precision::of`] so the pair can never
+/// disagree with [`DType::accum`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Precision {
+    /// Tensor storage dtype (what the 2-byte bf16/f16 buffers hold).
+    pub store: DType,
+    /// Accumulation dtype (f32 for every storage type executed here).
+    pub accum: DType,
+}
+
+impl Precision {
+    /// The canonical pair for a storage dtype.
+    pub fn of(store: DType) -> Self {
+        Self { store, accum: store.accum() }
+    }
+
+    /// True when the kernel runs genuinely mixed (storage ≠ accumulate).
+    pub fn is_mixed(self) -> bool {
+        self.store != self.accum
     }
 }
 
@@ -276,5 +333,22 @@ mod tests {
         assert_eq!(DType::F32.size_bytes(), 4);
         assert_eq!(DType::Bf16.size_bytes(), 2);
         assert_eq!(DType::I8.size_bytes(), 1);
+    }
+
+    #[test]
+    fn precision_pairs() {
+        for d in [DType::F32, DType::F16, DType::Bf16, DType::I8] {
+            let p = Precision::of(d);
+            assert_eq!(p.store, d);
+            assert_eq!(p.accum, DType::F32);
+        }
+        assert!(!Precision::of(DType::F32).is_mixed());
+        assert!(Precision::of(DType::Bf16).is_mixed());
+        assert_eq!(Precision::of(DType::I32).accum, DType::I32);
+        // bf16 keeps 8 of f32's 24 significand bits: u is 2^16 coarser
+        assert_eq!(DType::Bf16.unit_roundoff(),
+                   DType::F32.unit_roundoff() * 65536.0);
+        assert!(DType::F16.unit_roundoff() < DType::Bf16.unit_roundoff());
+        assert_eq!(DType::I8.unit_roundoff(), 0.0);
     }
 }

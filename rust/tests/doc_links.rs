@@ -1,0 +1,171 @@
+//! Doc-link checker (tier-1 + CI): every relative markdown link and
+//! every `file.ext:line` reference in `docs/*.md` and `README.md` must
+//! resolve against the working tree, so NUMERICS.md/ARCHITECTURE.md
+//! can't rot silently as the code moves underneath them. Zero-dep by
+//! design: hand-rolled scanning, no regex crate.
+
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// All markdown files the checker covers.
+fn doc_files() -> Vec<PathBuf> {
+    let root = repo_root();
+    let mut files = vec![root.join("README.md")];
+    let docs = root.join("docs");
+    if let Ok(entries) = std::fs::read_dir(&docs) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.extension().map(|x| x == "md").unwrap_or(false) {
+                files.push(p);
+            }
+        }
+    }
+    files
+}
+
+/// Extract `](target)` link targets from markdown text.
+fn link_targets(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b']' && bytes[i + 1] == b'(' {
+            let start = i + 2;
+            if let Some(rel_end) = text[start..].find(')') {
+                out.push(text[start..start + rel_end].to_string());
+                i = start + rel_end;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Extract `path.ext:NNN` references from backtick spans.
+fn file_line_refs(text: &str) -> Vec<(String, usize)> {
+    const EXTS: [&str; 5] = [".rs", ".py", ".md", ".toml", ".json"];
+    let mut out = Vec::new();
+    for span in text.split('`').skip(1).step_by(2) {
+        // inside a backtick span: look for "<path><ext>:<digits>"
+        for ext in EXTS {
+            let Some(pos) = span.find(&format!("{ext}:")) else {
+                continue;
+            };
+            let after = &span[pos + ext.len() + 1..];
+            let digits: String =
+                after.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if digits.is_empty() {
+                continue;
+            }
+            // path = longest path-ish run ending at the ext
+            let head = &span[..pos + ext.len()];
+            let path_start = head
+                .rfind(|c: char| {
+                    !(c.is_ascii_alphanumeric()
+                      || matches!(c, '/' | '.' | '_' | '-'))
+                })
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            out.push((head[path_start..].to_string(),
+                      digits.parse().unwrap()));
+        }
+    }
+    out
+}
+
+/// Resolve a repo-relative or doc-relative path.
+fn resolve(doc_dir: &Path, target: &str) -> Option<PathBuf> {
+    let root = repo_root();
+    for base in [doc_dir.to_path_buf(), root.clone(), root.join("rust")] {
+        let p = base.join(target);
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[test]
+fn markdown_links_resolve() {
+    let mut failures = Vec::new();
+    for file in doc_files() {
+        let text = std::fs::read_to_string(&file).unwrap();
+        let dir = file.parent().unwrap().to_path_buf();
+        for target in link_targets(&text) {
+            if target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+                || target.starts_with('#')
+                || target.is_empty()
+            {
+                continue;
+            }
+            let path_part =
+                target.split('#').next().unwrap_or(&target).to_string();
+            if path_part.is_empty() {
+                continue;
+            }
+            if resolve(&dir, &path_part).is_none() {
+                failures.push(format!("{}: broken link '{target}'",
+                                      file.display()));
+            }
+        }
+    }
+    assert!(failures.is_empty(), "{}", failures.join("\n"));
+}
+
+#[test]
+fn file_line_references_resolve() {
+    let mut failures = Vec::new();
+    for file in doc_files() {
+        let text = std::fs::read_to_string(&file).unwrap();
+        let dir = file.parent().unwrap().to_path_buf();
+        for (path, line) in file_line_refs(&text) {
+            let Some(resolved) = resolve(&dir, &path) else {
+                failures.push(format!(
+                    "{}: file:line ref '{path}:{line}' — file not found",
+                    file.display()));
+                continue;
+            };
+            let count = std::fs::read_to_string(&resolved)
+                .map(|t| t.lines().count())
+                .unwrap_or(0);
+            if line == 0 || line > count {
+                failures.push(format!(
+                    "{}: '{path}:{line}' is past EOF ({count} lines)",
+                    file.display()));
+            }
+        }
+    }
+    assert!(failures.is_empty(), "{}", failures.join("\n"));
+}
+
+#[test]
+fn numerics_doc_exists_and_is_linked() {
+    let root = repo_root();
+    let numerics = root.join("docs").join("NUMERICS.md");
+    assert!(numerics.exists(), "docs/NUMERICS.md missing");
+    let arch =
+        std::fs::read_to_string(root.join("docs").join("ARCHITECTURE.md"))
+            .unwrap();
+    assert!(arch.contains("NUMERICS.md"),
+            "ARCHITECTURE.md must cross-link the numerics contract");
+    let readme = std::fs::read_to_string(root.join("README.md")).unwrap();
+    assert!(readme.contains("NUMERICS.md"),
+            "README must link the numerics contract");
+}
+
+#[test]
+fn checker_extracts_links_and_refs() {
+    let text = "see [x](docs/NUMERICS.md#rounding) and \
+                `rust/src/lib.rs:10` plus [web](https://example.com)";
+    let links = link_targets(text);
+    assert_eq!(links,
+               vec!["docs/NUMERICS.md#rounding".to_string(),
+                    "https://example.com".to_string()]);
+    let refs = file_line_refs(text);
+    assert_eq!(refs, vec![("rust/src/lib.rs".to_string(), 10)]);
+}

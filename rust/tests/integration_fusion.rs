@@ -227,3 +227,73 @@ fn compiled_plan_is_cached_for_reexecution() {
     let o2 = c1.execute(&args2).unwrap()[0].as_f32().unwrap();
     assert_ne!(o1, o2, "different inputs must give different outputs");
 }
+
+#[test]
+fn bf16_cba_plan_executes_mixed_precision_end_to_end() {
+    // Table II enforced by an executable plan, not just graph pruning:
+    // a bf16 CBA over the direct-1x1 row compiles against the bf16
+    // artifact and executes genuinely mixed (2-byte storage through the
+    // fused kernel, f32 accumulate, one rounding at the store). The
+    // result must be bit-identical to the rounding oracle: run the f32
+    // pipeline on the pre-rounded inputs, round once at the end.
+    let handle = common::cpu_handle("fusion-bf16-cba");
+    let plan = FusionPlan::new(TensorDesc::nchw(4, 16, 28, 28, DType::Bf16))
+        .add(FusionOp::Conv {
+            desc: ConvDesc::simple(1, 0),
+            filter: FilterDesc::kcrs(32, 16, 1, 1, DType::Bf16),
+        })
+        .add(FusionOp::Bias)
+        .add(FusionOp::Activation {
+            desc: ActivationDesc::new(ActivationMode::Relu),
+        });
+    let matched = plan.check().unwrap();
+    assert_eq!(matched.conv_algo, "direct",
+               "Table II: bf16 CBA fuses through the direct kernel");
+    let compiled = plan.compile(&handle).unwrap();
+    assert!(compiled.sig.ends_with("-bf16"), "{}", compiled.sig);
+
+    let args = common::seeded_inputs(&handle, &compiled.sig, 7).unwrap();
+    for a in &args {
+        assert_eq!(a.spec.dtype, DType::Bf16, "{}", compiled.sig);
+    }
+    let fused = compiled.execute(&args).unwrap().remove(0);
+    assert_eq!(fused.spec.dtype, DType::Bf16);
+    // storage is 2-byte end to end
+    assert_eq!(fused.data.len(), fused.spec.elem_count() * 2);
+
+    // rounding oracle in plain f32 over the decoded (pre-rounded) inputs
+    use miopen_rs::runtime::interp::kernels as k;
+    let x = args[0].as_f32().unwrap();
+    let w = args[1].as_f32().unwrap();
+    let bias = args[2].as_f32().unwrap();
+    let g = k::ConvGeom::dense(4, 16, 28, 28, 32, 1, 1, 1, 0);
+    let y = k::conv2d_fwd(&x, &w, &g);
+    let y = k::bias_add(&y, &bias, 4, 32, 28 * 28);
+    let y = k::act_fwd(&y, ActivationMode::Relu, 0.0);
+    let oracle = miopen_rs::runtime::tensor::f32s_to_bf16_bytes(&y);
+    assert_eq!(fused.data, oracle,
+               "bf16 CBA diverged from the documented rounding oracle");
+}
+
+#[test]
+fn bf16_winograd_cba_plan_is_rejected_by_table2() {
+    // the winograd CBA rows are Table I (f32) only: the same plan that
+    // is accepted in f32 must be rejected outright in bf16 — there is
+    // no bf16 winograd fusion artifact to fall back to.
+    let mk = |dtype| {
+        FusionPlan::new(TensorDesc::nchw(4, 32, 14, 14, dtype))
+            .add(FusionOp::Conv {
+                desc: ConvDesc::simple(1, 1),
+                filter: FilterDesc::kcrs(8, 32, 3, 3, dtype),
+            })
+            .add(FusionOp::Bias)
+            .add(FusionOp::Activation {
+                desc: ActivationDesc::new(ActivationMode::Relu),
+            })
+    };
+    assert_eq!(mk(DType::F32).check().unwrap().conv_algo, "winograd");
+    let err = mk(DType::Bf16).check().unwrap_err();
+    assert!(matches!(err,
+                     miopen_rs::types::MiopenError::FusionRejected(_)),
+            "{err}");
+}

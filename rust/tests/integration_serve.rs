@@ -229,10 +229,23 @@ fn serve_bench_sweep_scales_and_writes_bench_json() {
     assert!(s > 0.7,
             "4-worker throughput collapsed vs 1 worker: {s:.2}x");
 
+    // per-dtype warm-serve sweep: every bf16 twin in the builtin set
+    // must serve, paired with its f32 baseline
+    let dtype_points =
+        miopen_rs::bench::serve::run_dtype_serve(&handle, 24).unwrap();
+    assert_eq!(dtype_points.len(),
+               miopen_rs::bench::serve::dtype_serve_sigs().len(),
+               "a dtype-serve signature is missing from the manifest");
+    assert!(dtype_points.iter().any(|p| p.dtype == "bf16"));
+    for p in &dtype_points {
+        assert!(p.p50_us > 0.0 && p.p99_us >= p.p50_us, "{}", p.sig);
+    }
+
     let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_serve.json");
-    miopen_rs::bench::serve::write_json(&points, &out).unwrap();
+    miopen_rs::bench::serve::write_json(&points, &dtype_points, &out)
+        .unwrap();
     assert!(out.exists());
 }
 

@@ -292,3 +292,47 @@ fn tuned_variants_agree_numerically() {
         common::assert_allclose(&want, &got, 1e-4, &format!("bk{bk}"));
     }
 }
+
+#[test]
+fn tuning_resolves_tuned_variants_per_dtype() {
+    // dtype is a first-class tuning axis: a bf16 tuning session records
+    // its winner under the bf16 perf-db key (db keys embed the dtype)
+    // and the find step resolves a *bf16* tuned artifact — never the
+    // f32 variant, and never the other way around.
+    let handle = common::cpu_handle("tune-per-dtype");
+    let bf16_problem = ConvProblem::forward(
+        TensorDesc::nchw(4, 16, 28, 28, DType::Bf16),
+        FilterDesc::kcrs(32, 16, 3, 3, DType::Bf16),
+        ConvDesc::simple(1, 1),
+    );
+    let results = TuningSession::new(&handle)
+        .tune_convolution(&bf16_problem)
+        .unwrap();
+    let solvers: Vec<&str> =
+        results.iter().map(|r| r.solver.as_str()).collect();
+    assert!(solvers.contains(&"gemm"), "{solvers:?}");
+    assert!(solvers.contains(&"direct"), "{solvers:?}");
+
+    // the winner lives under the bf16 key; the f32 key is untouched
+    let bf16_key = bf16_problem.sig().unwrap().db_key();
+    assert!(bf16_key.ends_with("-bf16"), "{bf16_key}");
+    let f32_key = tunable_problem().sig().unwrap().db_key();
+    let db = handle.perf_db();
+    assert!(db.get(&bf16_key, "gemm").is_some());
+    assert!(db.get(&f32_key, "gemm").is_none(),
+            "bf16 tuning leaked into the f32 perf-db key");
+
+    // find now serves the tuned bf16 variant (sig keeps the -bf16 tag
+    // AND the tuned suffix)
+    let perf = handle.find_convolution(&bf16_problem).unwrap();
+    let gemm = perf.iter().find(|p| p.algo == "gemm").unwrap();
+    assert!(gemm.artifact_sig.contains("-bf16-gt"),
+            "expected tuned bf16 gemm artifact, got {}",
+            gemm.artifact_sig);
+    // ... and the f32 problem still resolves untuned f32 artifacts
+    let f32_perf = handle.find_convolution(&tunable_problem()).unwrap();
+    let f32_gemm = f32_perf.iter().find(|p| p.algo == "gemm").unwrap();
+    assert!(f32_gemm.artifact_sig.ends_with("-f32"),
+            "f32 problem picked up a foreign tuned variant: {}",
+            f32_gemm.artifact_sig);
+}

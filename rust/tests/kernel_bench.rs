@@ -23,6 +23,22 @@ fn kernel_bench_sweep_writes_bench_json() {
     assert!(bench.arena.warm_reuses > 0,
             "warm conv executions never touched the arena");
 
+    // the mixed-precision sweep: bf16 must execute (throughput > 0) and
+    // its real packing-traffic counters must show at least 1.5x the f32
+    // byte traffic advantage (the model says exactly 2x for 2-byte
+    // storage; both are profile-independent byte counts)
+    assert_eq!(bench.bf16.len(), kb::dtype_shapes().len());
+    for p in &bench.bf16 {
+        assert!(p.bf16_gflops > 0.0, "{}: bf16 path not measured", p.name);
+        assert!(p.pack_traffic_advantage() >= 1.5,
+                "{}: bf16 pack-traffic advantage {:.2}x < 1.5x the \
+                 modeled f32 byte traffic", p.name,
+                p.pack_traffic_advantage());
+        assert!(p.modeled_advantage >= 1.5,
+                "{}: modeled advantage {:.2}x", p.name,
+                p.modeled_advantage);
+    }
+
     let s = kb::speedup_256(&bench).expect("256x256x256 point missing");
     let serial = kb::speedup_256_serial(&bench).unwrap();
     if cfg!(debug_assertions) {

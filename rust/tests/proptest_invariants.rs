@@ -506,3 +506,159 @@ fn prop_json_roundtrip_fuzz() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_bf16_conv_matches_rounding_oracle_bit_exactly() {
+    // the mixed-precision contract is pinned by a BIT-EXACT oracle, not
+    // a tolerance: running a conv on bf16 storage (2-byte operands,
+    // decode at the load/pack boundary, f32 accumulate, one RNE at the
+    // store) must produce exactly the bits of "round the inputs to
+    // bf16, decode everything to f32, run the f32 kernel, round the
+    // f32 outputs to bf16" — for both the direct and GEMM paths
+    // (docs/NUMERICS.md, "Rounding boundaries").
+    use miopen_rs::runtime::interp::view::TensorView;
+    use miopen_rs::runtime::tensor::{bf16_to_f32, f32_to_bf16,
+                                     f32s_to_bf16_bytes};
+
+    let geom_gen = Gen::new(|rng: &mut SplitMix64| {
+        let r = [1usize, 3][rng.below(2) as usize];
+        (
+            1 + rng.below(2) as usize,  // n
+            1 + rng.below(4) as usize,  // c
+            3 + rng.below(8) as usize,  // h
+            3 + rng.below(8) as usize,  // w
+            1 + rng.below(4) as usize,  // k
+            r,
+            rng.below(2) as usize,      // pad
+        )
+    });
+    forall("bf16-rounding-oracle", &geom_gen, 40,
+           |&(n, c, h, w, kk, r, p)| {
+        if h + 2 * p < r || w + 2 * p < r {
+            return Ok(());
+        }
+        let g = k::ConvGeom { p, q: p,
+                              ..k::ConvGeom::dense(n, c, h, w, kk, r, r,
+                                                   1, 0) };
+        let seed = (n * 41 + c * 43 + h * 47 + w * 53 + kk * 59 + r * 61
+                    + p * 67) as u64;
+        let mut rng = SplitMix64::new(seed);
+        let mut x = vec![0f32; n * c * h * w];
+        let mut wts = vec![0f32; kk * c * r * r];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut wts);
+
+        // storage encodings (what the real pipeline holds end to end)
+        let (xb, wb) = (f32s_to_bf16_bytes(&x), f32s_to_bf16_bytes(&wts));
+        // the oracle's pre-rounded f32 inputs (decode of the encodings)
+        let dec = |b: &[u8]| -> Vec<f32> {
+            b.chunks_exact(2).map(|c2| bf16_to_f32([c2[0], c2[1]]))
+                .collect()
+        };
+        let (xd, wd) = (dec(&xb), dec(&wb));
+
+        let round_bits = |v: &[f32]| -> Vec<[u8; 2]> {
+            v.iter().map(|z| f32_to_bf16(*z)).collect()
+        };
+
+        let xv = TensorView::Bf16(&xb);
+        let wv = TensorView::Bf16(&wb);
+        // direct path
+        let got = k::conv2d_fwd_view(&xv, &wv, &g)
+            .map_err(|e| e.to_string())?;
+        let want = k::conv2d_fwd(&xd, &wd, &g);
+        if round_bits(&got) != round_bits(&want) {
+            return Err("direct: bf16 path != rounding oracle".into());
+        }
+        // im2col + blocked-GEMM path (dtype-aware packing)
+        let arena =
+            miopen_rs::runtime::interp::arena::WorkspaceArena::new();
+        let got = k::conv2d_fwd_im2col_view(
+            &xv, &wv, &g,
+            miopen_rs::runtime::interp::gemm::DEFAULT_TILE, &arena)
+            .map_err(|e| e.to_string())?;
+        let want = k::conv2d_fwd_im2col(&xd, &wd, &g);
+        if round_bits(&got) != round_bits(&want) {
+            return Err("gemm: bf16 path != rounding oracle".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bf16_parity_within_documented_eps_bound() {
+    // f32-vs-bf16 parity across every applicable algorithm, against the
+    // derived bound from docs/NUMERICS.md: rounding each input once
+    // contributes <= (2u + u^2)·A per output and the store rounding
+    // <= u·A more, A = sum_i |x_i||w_i| (conv is bilinear, and winograd/
+    // fft compute the same bilinear map, so input-rounding error passes
+    // through linearly). 3.1·u·A covers the derivation; the small
+    // absolute + A-relative slack covers f32-level accumulation-order
+    // noise between the two runs (largest for the fft pipeline).
+    use miopen_rs::runtime::tensor::{bf16_to_f32, f32_to_bf16};
+
+    let u = DType::Bf16.unit_roundoff() as f32;
+    let geom_gen = Gen::new(|rng: &mut SplitMix64| {
+        let r = [3usize, 5][rng.below(2) as usize];
+        (
+            1 + rng.below(2) as usize,  // n
+            1 + rng.below(3) as usize,  // c
+            4 + rng.below(8) as usize,  // h
+            4 + rng.below(8) as usize,  // w
+            1 + rng.below(3) as usize,  // k
+            r,
+            rng.below(2) as usize,      // pad
+        )
+    });
+    forall("bf16-parity-eps", &geom_gen, 30, |&(n, c, h, w, kk, r, p)| {
+        if h + 2 * p < r || w + 2 * p < r {
+            return Ok(());
+        }
+        let g = k::ConvGeom { p, q: p,
+                              ..k::ConvGeom::dense(n, c, h, w, kk, r, r,
+                                                   1, 0) };
+        let seed = (n * 71 + c * 79 + h * 83 + w * 89 + kk * 97 + r * 101
+                    + p * 103) as u64;
+        let mut rng = SplitMix64::new(seed);
+        let mut x = vec![0f32; n * c * h * w];
+        let mut wts = vec![0f32; kk * c * r * r];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut wts);
+        // the bf16 run sees pre-rounded inputs
+        let rnd = |v: &[f32]| -> Vec<f32> {
+            v.iter().map(|z| bf16_to_f32(f32_to_bf16(*z))).collect()
+        };
+        let (xr, wr) = (rnd(&x), rnd(&wts));
+        // per-output amplification A = conv(|x|, |w|)
+        let xa: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        let wa: Vec<f32> = wts.iter().map(|v| v.abs()).collect();
+        let amp = k::conv2d_fwd(&xa, &wa, &g);
+
+        let check = |yb: &[f32], yf: &[f32], who: &str|
+            -> Result<(), String> {
+            for (i, ((b, f), a)) in
+                yb.iter().zip(yf).zip(&amp).enumerate() {
+                let bound = 3.1 * u * a + 1e-3 * (1.0 + a);
+                if (b - f).abs() > bound {
+                    return Err(format!(
+                        "{who}[{i}]: |{b} - {f}| > {bound}"));
+                }
+            }
+            Ok(())
+        };
+
+        check(&k::conv2d_fwd(&xr, &wr, &g), &k::conv2d_fwd(&x, &wts, &g),
+              "direct")?;
+        check(&k::conv2d_fwd_im2col(&xr, &wr, &g),
+              &k::conv2d_fwd_im2col(&x, &wts, &g), "gemm")?;
+        if r == 3 {
+            check(&k::conv2d_fwd_winograd(&xr, &wr, &g, 1),
+                  &k::conv2d_fwd_winograd(&x, &wts, &g, 1), "winograd")?;
+        }
+        if r == 5 {
+            check(&k::conv2d_fwd_fft(&xr, &wr, &g),
+                  &k::conv2d_fwd_fft(&x, &wts, &g), "fft")?;
+        }
+        Ok(())
+    });
+}

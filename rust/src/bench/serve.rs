@@ -60,11 +60,7 @@ pub struct SweepPoint {
 /// inference requests through [`run_server`] with a fresh load generator.
 pub fn run_sweep(handle: &Handle, cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
     let infer = handle.manifest().require("cnn_infer-f32")?;
-    let image_elems: usize = infer
-        .inputs
-        .last()
-        .map(|s| s.shape[1..].iter().product())
-        .unwrap_or(0);
+    let (_, image_elems, _) = crate::serve::infer_image_layout(infer)?;
 
     let mut points = Vec::new();
     for &workers in &cfg.workers {
@@ -173,6 +169,154 @@ pub fn run_dtype_serve(handle: &Handle, requests: usize)
     Ok(points)
 }
 
+/// Result of the cold-shape scenario: 100% previously-unseen shapes
+/// served in immediate mode (zero find), then the same shapes again
+/// after the background refiner upgraded the find-db.
+#[derive(Debug, Clone)]
+pub struct ColdShapeBench {
+    /// Number of cold (previously-unseen) shapes served.
+    pub cold_total: usize,
+    /// How many of them were verified absent from the find-db before
+    /// the cold pass (expected == cold_total on a fresh db).
+    pub cold_unseen: usize,
+    /// Immediate-selection latency, cold db (µs).
+    pub cold_p50_us: f64,
+    /// 99th percentile of the cold-selection latency (µs).
+    pub cold_p99_us: f64,
+    /// Immediate-selection latency after refinement (µs).
+    pub warm_p50_us: f64,
+    /// 99th percentile of the warm-selection latency (µs).
+    pub warm_p99_us: f64,
+    /// cold_p99 / warm_p99 — the acceptance gate is ≤ 5.
+    pub cold_over_warm_p99: f64,
+    /// Shapes the background refiner ran the real find on.
+    pub refined: usize,
+    /// Enqueue calls dropped by the refiner's exactly-once dedup.
+    pub deduped: usize,
+    /// Fraction of manifest shapes where the immediate pick (with the
+    /// shape's own db entry masked) equals find's winner.
+    pub agreement_top1: f64,
+    /// Fraction where the pick is within find's top two.
+    pub agreement_top2: f64,
+    /// Shapes scored for agreement.
+    pub agreement_total: usize,
+}
+
+/// Run the cold-shape scenario. The figure-6 configs are split in two:
+/// even indices are warm-seeded with a real find, odd indices stay
+/// unseen and are served via [`crate::immediate::serve_immediate`]:
+///
+/// 1. **Cold pass** — `rounds` timed selection passes against the
+///    half-seeded db (tier 2/3 answers only, zero benchmarking).
+/// 2. **Refinement** — one pass with the background refiner enabled;
+///    every cold shape gets a real find and the user db is upgraded.
+/// 3. **Warm pass** — `rounds` timed passes over the now-complete db
+///    (tier-1 hits), giving the cold-vs-warm latency ratio.
+/// 4. **Agreement** — for all 16 configs, the immediate pick with the
+///    shape's own entry masked (`ignore_self`) is scored against the
+///    find winner recorded in the db.
+pub fn run_cold_shapes(handle: &Handle, rounds: usize)
+    -> Result<ColdShapeBench> {
+    use crate::descriptors::{ConvDesc, ConvMode, FilterDesc, TensorDesc};
+    use crate::find::ConvProblem;
+    use crate::immediate::{serve_immediate, ImmediateOptions};
+    use crate::types::DType;
+
+    let configs: Vec<crate::configs::ConvConfig> = crate::configs::fig6_1x1()
+        .into_iter()
+        .chain(crate::configs::fig6_non1x1())
+        .collect();
+    let problems: Vec<ConvProblem> = configs
+        .iter()
+        .map(|c| {
+            ConvProblem::forward(
+                TensorDesc::nchw(c.n, c.c, c.h, c.w, DType::F32),
+                FilterDesc::kcrs(c.k, c.c / c.g, c.r, c.s, DType::F32),
+                ConvDesc::new((c.u, c.v), (c.p, c.q), (c.l, c.j),
+                              ConvMode::CrossCorrelation, c.g),
+            )
+        })
+        .collect();
+
+    // Warm-seed the even-index shapes so every cold shape has a
+    // same-family measured neighbor, as a serving fleet would.
+    for p in problems.iter().step_by(2) {
+        handle.find_convolution(p)?;
+    }
+    let cold: Vec<ConvProblem> =
+        problems.iter().skip(1).step_by(2).cloned().collect();
+    let db = handle.find_db();
+    let cold_unseen = cold
+        .iter()
+        .filter(|p| {
+            p.sig().map(|s| db.get(&s.db_key()).is_none()).unwrap_or(false)
+        })
+        .count();
+
+    let opts = ImmediateOptions::default();
+    let rounds = rounds.max(1);
+
+    // 1. Cold pass: timed, no refinement, db state unchanged between
+    // rounds so every sample is a genuine cold selection.
+    let mut cold_lat = TimingStats::new();
+    for _ in 0..rounds {
+        let rep = serve_immediate(handle, &cold, &opts, false)?;
+        cold_lat.merge(&rep.latency);
+    }
+
+    // 2. Refinement pass: the background worker runs the real find on
+    // every cold shape and persists the upgraded user db.
+    let refine_rep = serve_immediate(handle, &cold, &opts, true)?;
+
+    // 3. Warm pass: same shapes, now tier-1 find-db hits.
+    let mut warm_lat = TimingStats::new();
+    for _ in 0..rounds {
+        let rep = serve_immediate(handle, &cold, &opts, false)?;
+        warm_lat.merge(&rep.latency);
+    }
+
+    // 4. Immediate-vs-find agreement over the full config set. The
+    // pick may not read the shape's own entry (ignore_self), so this
+    // scores the estimator, not the cache.
+    let masked = ImmediateOptions { ignore_self: true, ..opts };
+    let db = handle.find_db();
+    let (mut top1, mut top2, mut total) = (0usize, 0usize, 0usize);
+    for p in &problems {
+        let key = p.sig()?.db_key();
+        let Some(records) = db.get(&key) else { continue };
+        let Some(winner) = records.first() else { continue };
+        let pick = handle.get_solution_opt(p, &masked)?;
+        total += 1;
+        if pick.algo == winner.algo {
+            top1 += 1;
+        }
+        if records.iter().take(2).any(|r| r.algo == pick.algo) {
+            top2 += 1;
+        }
+    }
+
+    let frac = |n: usize| if total > 0 { n as f64 / total as f64 } else { 0.0 };
+    let warm_p99 = warm_lat.p99();
+    Ok(ColdShapeBench {
+        cold_total: cold.len(),
+        cold_unseen,
+        cold_p50_us: cold_lat.median(),
+        cold_p99_us: cold_lat.p99(),
+        warm_p50_us: warm_lat.median(),
+        warm_p99_us: warm_p99,
+        cold_over_warm_p99: if warm_p99 > 0.0 {
+            cold_lat.p99() / warm_p99
+        } else {
+            f64::NAN
+        },
+        refined: refine_rep.refiner.refined,
+        deduped: refine_rep.refiner.deduped,
+        agreement_top1: frac(top1),
+        agreement_top2: frac(top2),
+        agreement_total: total,
+    })
+}
+
 /// Throughput ratio of `workers_b` over `workers_a`, compared only
 /// between points with the *same* (batch_max, rate) configuration so
 /// the number measures worker scaling, not batching differences. The
@@ -200,7 +344,8 @@ pub fn speedup(points: &[SweepPoint], workers_a: usize, workers_b: usize)
     best
 }
 
-pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint]) -> Json {
+pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
+               cold: Option<&ColdShapeBench>) -> Json {
     let arr: Vec<Json> = points
         .iter()
         .map(|p| {
@@ -242,14 +387,30 @@ pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint]) -> Json {
     if let Some(s) = speedup(points, 1, 2) {
         root.insert("speedup_2w_over_1w".to_string(), Json::num(s));
     }
+    if let Some(c) = cold {
+        root.insert("cold_shapes".to_string(), Json::obj(vec![
+            ("cold_total", Json::num(c.cold_total as f64)),
+            ("cold_unseen", Json::num(c.cold_unseen as f64)),
+            ("cold_p50_us", Json::num(c.cold_p50_us)),
+            ("cold_p99_us", Json::num(c.cold_p99_us)),
+            ("warm_p50_us", Json::num(c.warm_p50_us)),
+            ("warm_p99_us", Json::num(c.warm_p99_us)),
+            ("cold_over_warm_p99", Json::num(c.cold_over_warm_p99)),
+            ("refined", Json::num(c.refined as f64)),
+            ("deduped", Json::num(c.deduped as f64)),
+            ("agreement_top1", Json::num(c.agreement_top1)),
+            ("agreement_top2", Json::num(c.agreement_top2)),
+            ("agreement_total", Json::num(c.agreement_total as f64)),
+        ]));
+    }
     Json::Obj(root)
 }
 
 /// Serialize and write `BENCH_serve.json` (worker sweep + per-dtype
-/// warm-serve points).
+/// warm-serve points + the cold-shape immediate-mode scenario).
 pub fn write_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
-                  path: &Path) -> Result<()> {
-    std::fs::write(path, to_json(points, dtype).to_string())?;
+                  cold: Option<&ColdShapeBench>, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(points, dtype, cold).to_string())?;
     Ok(())
 }
 
@@ -310,7 +471,21 @@ mod tests {
             p50_us: 90.0,
             p99_us: 140.0,
         }];
-        let j = to_json(&pts, &dtype);
+        let cold = ColdShapeBench {
+            cold_total: 8,
+            cold_unseen: 8,
+            cold_p50_us: 50.0,
+            cold_p99_us: 120.0,
+            warm_p50_us: 40.0,
+            warm_p99_us: 60.0,
+            cold_over_warm_p99: 2.0,
+            refined: 8,
+            deduped: 0,
+            agreement_top1: 0.875,
+            agreement_top2: 1.0,
+            agreement_total: 16,
+        };
+        let j = to_json(&pts, &dtype, Some(&cold));
         assert_eq!(j.get("points").and_then(Json::as_arr).unwrap().len(), 2);
         let s = j.get("speedup_4w_over_1w").and_then(Json::as_f64).unwrap();
         assert!((s - 2.5).abs() < 1e-9);
@@ -323,6 +498,17 @@ mod tests {
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].get("dtype").and_then(Json::as_str),
                    Some("bf16"));
+        let cs = back.get("cold_shapes").unwrap();
+        assert_eq!(cs.get("agreement_top1").and_then(Json::as_f64),
+                   Some(0.875));
+        assert_eq!(cs.get("cold_over_warm_p99").and_then(Json::as_f64),
+                   Some(2.0));
+    }
+
+    #[test]
+    fn json_omits_cold_shapes_when_absent() {
+        let j = to_json(&[], &[], None);
+        assert!(j.get("cold_shapes").is_none());
     }
 
     #[test]

@@ -74,17 +74,24 @@ COMMANDS:
   find         Run the find step for a convolution problem
                  --n --c --h --w --k --r --s [--stride --pad --dilation
                  --groups --direction fwd|bwd|wrw] [--exhaustive] [--model]
+                 [--immediate]
+  immediate    Zero-measurement solver selection for a problem (find-db
+               hit, nearest-neighbor transfer, or calibrated perf model)
+                 (same shape options) [--radius R] [--ignore-self]
   tune         Tuning session for a problem (same shape options)
                  [--prune N]
   run          Execute one artifact by signature with random inputs
                  --sig <signature> [--iters N]
   serve        Batched CNN inference server on synthetic load
                  [--requests N] [--rate R] [--batch B] [--timeout-ms T]
-                 [--workers W]
-  serve-bench  Sweep workers x batch x arrival rate; writes
-               BENCH_serve.json (p50/p99, throughput, cache hit rates)
+                 [--workers W] [--immediate: figure-6 shapes through
+                 immediate selection + background refiner instead]
+  serve-bench  Sweep workers x batch x arrival rate + the cold-shape
+               immediate-mode scenario; writes BENCH_serve.json
+               (p50/p99, throughput, cache hit rates, cold-vs-warm)
                  [--requests N] [--workers 1,2,4] [--batches 16]
-                 [--rates 0] [--timeout-ms T] [--out FILE]
+                 [--rates 0] [--timeout-ms T] [--cold-rounds N]
+                 [--out FILE]
   kernel-bench Naive-vs-blocked GEMM GFLOP/s sweep + arena-on/off warm
                conv latency; writes BENCH_kernels.json
                  [--iters N] [--out FILE]

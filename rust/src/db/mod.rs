@@ -6,8 +6,10 @@
 //! *system* db and are overlaid by a writable *user* db in the user's
 //! config directory — user entries shadow system entries.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use crate::types::{MiopenError, Result};
 use crate::util::json::{self, Json};
@@ -23,9 +25,15 @@ pub struct FindRecord {
 }
 
 /// find-db: problem key -> ranked records.
+///
+/// Removals are remembered as tombstones so an overlay (user over
+/// system, or in-memory over on-disk during merge-on-save) can *hide*
+/// an entry the session invalidated — without tombstones a tuning
+/// session's find-db invalidation would resurrect from the layer below.
 #[derive(Debug, Default, Clone)]
 pub struct FindDb {
     entries: BTreeMap<String, Vec<FindRecord>>,
+    removed: BTreeSet<String>,
 }
 
 impl FindDb {
@@ -35,14 +43,17 @@ impl FindDb {
 
     pub fn insert(&mut self, key: String, mut records: Vec<FindRecord>) {
         records.sort_by(|a, b| a.time_us.total_cmp(&b.time_us));
+        self.removed.remove(&key);
         self.entries.insert(key, records);
     }
 
     /// Drop the entry for `key` (db-coherence: a tuning session
     /// invalidates the find-db entry it has made stale, so the next find
     /// re-benchmarks with the tuned variants instead of serving
-    /// pre-tuning times forever).
+    /// pre-tuning times forever). The removal is tombstoned so overlays
+    /// hide the key in lower layers too.
     pub fn remove(&mut self, key: &str) -> Option<Vec<FindRecord>> {
+        self.removed.insert(key.to_string());
         self.entries.remove(key)
     }
 
@@ -53,12 +64,29 @@ impl FindDb {
         self.entries.is_empty()
     }
 
-    /// Overlay: entries in `user` shadow entries in `self`. Idempotent.
+    /// Iterate (key, ranked records) — the immediate-mode neighbor
+    /// index is built from this view.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &[FindRecord])> {
+        self.entries.iter().map(|(k, v)| (k, v.as_slice()))
+    }
+
+    /// Apply `other` on top of self: `other`'s tombstones delete, its
+    /// entries overwrite. Shared by [`FindDb::merged_with`] and the
+    /// store's merge-on-save.
+    pub fn apply_overlay(&mut self, other: &FindDb) {
+        for k in &other.removed {
+            self.entries.remove(k);
+        }
+        for (k, v) in &other.entries {
+            self.entries.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Overlay: entries in `user` shadow entries in `self`, and keys the
+    /// user layer removed are hidden. Idempotent.
     pub fn merged_with(&self, user: &FindDb) -> FindDb {
         let mut out = self.clone();
-        for (k, v) in &user.entries {
-            out.entries.insert(k.clone(), v.clone());
-        }
+        out.apply_overlay(user);
         out
     }
 
@@ -85,34 +113,57 @@ impl FindDb {
         Json::Obj(obj)
     }
 
+    /// Parse a persisted find-db. Strict: every record must carry a
+    /// finite non-negative `time_us`/`modeled_time_us` and a
+    /// non-negative numeric `workspace_bytes` — a corrupted entry is a
+    /// [`MiopenError::Db`] naming the offending key and field, never a
+    /// silently "valid" infinitely-slow record (which immediate-mode
+    /// nearest-neighbor lookup would happily consume).
     pub fn from_json(j: &Json) -> Result<FindDb> {
         let obj = j.as_obj().ok_or_else(|| bad("find-db root not object"))?;
+        let time_field = |k: &str, r: &Json, field: &str| -> Result<f64> {
+            let v = r.get(field).and_then(Json::as_f64).ok_or_else(|| {
+                bad(&format!(
+                    "find-db entry '{k}': missing or non-numeric {field}"))
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(bad(&format!(
+                    "find-db entry '{k}': {field} = {v} is not a finite \
+                     non-negative time")));
+            }
+            Ok(v)
+        };
         let mut entries = BTreeMap::new();
         for (k, v) in obj {
-            let arr = v.as_arr().ok_or_else(|| bad("find-db entry not array"))?;
+            let arr = v.as_arr().ok_or_else(|| {
+                bad(&format!("find-db entry '{k}': not an array"))
+            })?;
             let mut recs = Vec::with_capacity(arr.len());
             for r in arr {
+                let ws = r.get("workspace_bytes").and_then(Json::as_f64)
+                    .ok_or_else(|| bad(&format!(
+                        "find-db entry '{k}': missing or non-numeric \
+                         workspace_bytes")))?;
+                if !ws.is_finite() || ws < 0.0 {
+                    return Err(bad(&format!(
+                        "find-db entry '{k}': workspace_bytes = {ws} is \
+                         not a non-negative byte count")));
+                }
                 recs.push(FindRecord {
                     algo: r
                         .get("algo")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| bad("missing algo"))?
+                        .ok_or_else(|| bad(&format!(
+                            "find-db entry '{k}': missing algo")))?
                         .to_string(),
-                    time_us: r.get("time_us").and_then(Json::as_f64)
-                        .unwrap_or(f64::INFINITY),
-                    modeled_time_us: r
-                        .get("modeled_time_us")
-                        .and_then(Json::as_f64)
-                        .unwrap_or(f64::INFINITY),
-                    workspace_bytes: r
-                        .get("workspace_bytes")
-                        .and_then(Json::as_i64)
-                        .unwrap_or(0) as u64,
+                    time_us: time_field(k, r, "time_us")?,
+                    modeled_time_us: time_field(k, r, "modeled_time_us")?,
+                    workspace_bytes: ws as u64,
                 });
             }
             entries.insert(k.clone(), recs);
         }
-        Ok(FindDb { entries })
+        Ok(FindDb { entries, removed: BTreeSet::new() })
     }
 }
 
@@ -186,8 +237,16 @@ fn bad(msg: &str) -> MiopenError {
 
 /// Storage of the two dbs on disk (the "designated directory on the
 /// user's system" of §III-B).
+///
+/// Saves are **merge-on-save**: under the store's lock the on-disk db
+/// is reloaded and the in-memory db overlaid onto it before the atomic
+/// write-then-rename (both fsynced), so two writers sharing a directory
+/// — a foreground tune session and the background immediate-mode
+/// refiner, or two handles — can't clobber each other's entries.
 pub struct DbStore {
     pub dir: PathBuf,
+    /// Serializes load-modify-save cycles within this process.
+    lock: Mutex<()>,
 }
 
 impl DbStore {
@@ -199,11 +258,11 @@ impl DbStore {
                 let home = std::env::var("HOME").unwrap_or_else(|_| ".".into());
                 PathBuf::from(home).join(".config").join("miopen-rs")
             });
-        Self { dir }
+        Self { dir, lock: Mutex::new(()) }
     }
 
     pub fn at(dir: impl AsRef<Path>) -> Self {
-        Self { dir: dir.as_ref().to_path_buf() }
+        Self { dir: dir.as_ref().to_path_buf(), lock: Mutex::new(()) }
     }
 
     fn load_json(&self, name: &str) -> Result<Option<Json>> {
@@ -215,13 +274,24 @@ impl DbStore {
         Ok(Some(json::parse(&text).map_err(|e| MiopenError::Db(e.to_string()))?))
     }
 
+    /// Write-then-rename with fsync of both the temp file (contents
+    /// durable before the rename publishes them) and the directory (the
+    /// rename itself durable) — without these a crash could publish an
+    /// empty or truncated db despite the "atomic" rename.
     fn save_json(&self, name: &str, j: &Json) -> Result<()> {
         std::fs::create_dir_all(&self.dir)?;
-        // write-then-rename for crash consistency
         let tmp = self.dir.join(format!("{name}.tmp"));
         let path = self.dir.join(name);
-        std::fs::write(&tmp, j.to_string())?;
-        std::fs::rename(tmp, path)?;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(j.to_string().as_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, &path)?;
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            // Directory fsync is advisory on platforms that refuse
+            // opening directories; on Linux it makes the rename durable.
+            let _ = d.sync_all();
+        }
         Ok(())
     }
 
@@ -232,8 +302,14 @@ impl DbStore {
         })
     }
 
+    /// Persist `db`, merged over whatever is on disk (tombstoned keys
+    /// are dropped, `db`'s entries win). An unreadable/corrupt on-disk
+    /// db is treated as empty so a save can always recover the file.
     pub fn save_find_db(&self, db: &FindDb) -> Result<()> {
-        self.save_json("find.json", &db.to_json())
+        let _g = self.lock.lock().unwrap();
+        let mut on_disk = self.load_find_db().unwrap_or_default();
+        on_disk.apply_overlay(db);
+        self.save_json("find.json", &on_disk.to_json())
     }
 
     pub fn load_perf_db(&self) -> Result<PerfDb> {
@@ -243,8 +319,13 @@ impl DbStore {
         })
     }
 
+    /// Persist `db`, merged over the on-disk perf-db (see
+    /// [`DbStore::save_find_db`]; the perf-db has no removal API, so a
+    /// plain entry overlay is complete).
     pub fn save_perf_db(&self, db: &PerfDb) -> Result<()> {
-        self.save_json("perf.json", &db.to_json())
+        let _g = self.lock.lock().unwrap();
+        let on_disk = self.load_perf_db().unwrap_or_default();
+        self.save_json("perf.json", &on_disk.merged_with(db).to_json())
     }
 }
 
@@ -311,6 +392,132 @@ mod tests {
         let j = merged.to_json();
         let back = PerfDb::from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, merged);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_or_nonfinite_fields() {
+        // regression: a record with a missing time_us used to parse as
+        // an infinitely-slow "valid" entry; now every malformed field is
+        // a Db error naming the offending key.
+        let cases = [
+            (r#"{"p1": [{"algo": "gemm"}]}"#, "time_us"),
+            (r#"{"p1": [{"algo": "gemm", "time_us": "fast",
+                         "modeled_time_us": 1.0,
+                         "workspace_bytes": 0}]}"#, "time_us"),
+            (r#"{"p1": [{"algo": "gemm", "time_us": 2.0,
+                         "workspace_bytes": 0}]}"#, "modeled_time_us"),
+            (r#"{"p1": [{"algo": "gemm", "time_us": 2.0,
+                         "modeled_time_us": 1.0}]}"#, "workspace_bytes"),
+            (r#"{"p1": [{"algo": "gemm", "time_us": 2.0,
+                         "modeled_time_us": 1.0,
+                         "workspace_bytes": -4}]}"#, "workspace_bytes"),
+            (r#"{"p1": [{"algo": "gemm", "time_us": -1.0,
+                         "modeled_time_us": 1.0,
+                         "workspace_bytes": 0}]}"#, "time_us"),
+            (r#"{"p1": [{"time_us": 2.0, "modeled_time_us": 1.0,
+                         "workspace_bytes": 0}]}"#, "algo"),
+        ];
+        for (doc, field) in cases {
+            let j = json::parse(doc).unwrap();
+            let err = FindDb::from_json(&j).unwrap_err().to_string();
+            assert!(err.contains("p1"),
+                    "error must name the key: {err}");
+            assert!(err.contains(field),
+                    "error must name '{field}': {err}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_nonfinite_constructed_values() {
+        // ±inf can't come from the JSON parser (no token), but a
+        // programmatically-built doc must still be rejected.
+        let doc = Json::obj(vec![(
+            "p1",
+            Json::Arr(vec![Json::obj(vec![
+                ("algo", Json::str("gemm")),
+                ("time_us", Json::num(f64::INFINITY)),
+                ("modeled_time_us", Json::num(1.0)),
+                ("workspace_bytes", Json::num(0.0)),
+            ])]),
+        )]);
+        let err = FindDb::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("time_us") && err.contains("p1"), "{err}");
+    }
+
+    #[test]
+    fn remove_tombstones_shadow_lower_layers() {
+        let mut sys = FindDb::default();
+        sys.insert("p".into(), vec![rec("stale", 10.0)]);
+        let mut user = FindDb::default();
+        user.insert("p".into(), vec![rec("user", 3.0)]);
+        user.remove("p");
+        // the tombstone hides the system entry too (tuning invalidation
+        // must not resurrect a stale record from the layer below)
+        assert!(sys.merged_with(&user).get("p").is_none());
+        // re-inserting clears the tombstone
+        user.insert("p".into(), vec![rec("fresh", 1.0)]);
+        assert_eq!(sys.merged_with(&user).get("p").unwrap()[0].algo,
+                   "fresh");
+    }
+
+    #[test]
+    fn merge_on_save_keeps_concurrent_writers_entries() {
+        // regression: save used to blindly overwrite find.json, so a
+        // tune session and the background refiner sharing a db dir lost
+        // each other's updates.
+        let dir = std::env::temp_dir().join(format!(
+            "miopen-rs-dbmerge-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DbStore::at(&dir);
+
+        let mut tune_view = FindDb::default();
+        tune_view.insert("tuned_key".into(), vec![rec("direct", 2.0)]);
+        store.save_find_db(&tune_view).unwrap();
+
+        // a second writer that never saw tune_view's entry
+        let mut refiner_view = FindDb::default();
+        refiner_view.insert("cold_key".into(), vec![rec("gemm", 5.0)]);
+        store.save_find_db(&refiner_view).unwrap();
+
+        let loaded = store.load_find_db().unwrap();
+        assert!(loaded.get("tuned_key").is_some(),
+                "merge-on-save must preserve the first writer's entry");
+        assert!(loaded.get("cold_key").is_some());
+
+        // tombstones delete through the merge
+        let mut invalidator = FindDb::default();
+        invalidator.remove("tuned_key");
+        store.save_find_db(&invalidator).unwrap();
+        let loaded = store.load_find_db().unwrap();
+        assert!(loaded.get("tuned_key").is_none(),
+                "a tombstoned key must not resurrect from disk");
+        assert!(loaded.get("cold_key").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_on_save_parallel_writers_lose_nothing() {
+        let dir = std::env::temp_dir().join(format!(
+            "miopen-rs-dbpar-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DbStore::at(&dir);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let store = &store;
+                s.spawn(move || {
+                    for i in 0..4 {
+                        let mut db = FindDb::default();
+                        db.insert(format!("w{t}_k{i}"),
+                                  vec![rec("gemm", 1.0 + i as f64)]);
+                        store.save_find_db(&db).unwrap();
+                    }
+                });
+            }
+        });
+        let loaded = store.load_find_db().unwrap();
+        assert_eq!(loaded.len(), 16,
+                   "all 16 entries from 4 concurrent writers must survive");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

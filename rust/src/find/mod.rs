@@ -250,24 +250,12 @@ impl Handle {
         out
     }
 
-    /// Immediate mode: best algorithm without benchmarking — find-db hit
-    /// if present, otherwise the GCN model's pick (MIOpen's
-    /// `miopenConvolutionForwardImmediate` analog).
+    /// Immediate mode: best algorithm without benchmarking (MIOpen's
+    /// `miopenConvolutionForwardImmediate` analog). Delegates to the
+    /// [`crate::immediate`] cascade: exact find-db hit, else
+    /// nearest-neighbor transfer, else the calibrated GCN model.
     pub fn immediate_algo(&self, problem: &ConvProblem) -> Result<String> {
-        let sig = problem.sig()?;
-        if let Some(records) = self.find_db().get(&sig.db_key()) {
-            if let Some(first) = records.first() {
-                return Ok(first.algo.clone());
-            }
-        }
-        crate::solvers::applicable(&sig)
-            .iter()
-            .map(|s| (s.name(), s.modeled_time_us(&sig, &self.model)))
-            .min_by(|a, b| a.1.total_cmp(&b.1))
-            .map(|(n, _)| n.to_string())
-            .ok_or_else(|| {
-                MiopenError::NotApplicable("no applicable solver".into())
-            })
+        self.get_solution(problem).map(|s| s.algo)
     }
 }
 

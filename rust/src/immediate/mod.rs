@@ -1,0 +1,655 @@
+//! Immediate mode (paper §IV-A): answer "which kernel should run this
+//! convolution?" with *zero* benchmarking. MIOpen's
+//! `miopenConvolutionForwardImmediate` serves exactly this need for
+//! frameworks that cannot afford a find step on first use.
+//!
+//! Selection is a three-tier cascade:
+//!
+//! 1. **Exact find-db hit** — the merged (system + user) find-db already
+//!    ranks this problem; return its winner.
+//! 2. **Nearest neighbor** — locate the closest *measured* problem of
+//!    the same direction and dtype in feature space and transfer its
+//!    per-algorithm timings to the query via local calibration:
+//!    `est(query, a) = model(query, a) × measured(nbr, a) / model(nbr, a)`.
+//!    The GCN perf model supplies the shape extrapolation; the neighbor
+//!    supplies the machine truth the model lacks.
+//! 3. **Calibrated perf model** — when no neighbor lies within the
+//!    bucket radius, rank by the GCN model scaled by a per-algorithm
+//!    global calibration factor (geometric mean of measured/modeled over
+//!    every find-db record for that algorithm). With an empty db this
+//!    degrades to the raw model — still a valid zero-measurement answer.
+//!
+//! A [`Refiner`] upgrades the answer quality over time: cache-miss
+//! shapes are queued, a background worker runs the real find on them,
+//! and the user find-db is atomically upgraded (merge-on-save, see
+//! [`crate::db`]) so subsequent queries take tier 1.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use crate::db::FindDb;
+use crate::find::ConvProblem;
+use crate::handle::Handle;
+use crate::metrics::TimingStats;
+use crate::types::{MiopenError, ProblemSig, Result};
+
+/// How a [`Solution`] was chosen — reported so callers (and the serve
+/// bench) can see which tier answered.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolutionSource {
+    /// Tier 1: exact hit in the merged find-db.
+    FindDb,
+    /// Tier 2: transferred from the nearest measured neighbor.
+    Neighbor {
+        /// The find-db key of the neighbor the estimate came from.
+        key: String,
+        /// Feature-space distance to that neighbor.
+        distance: f64,
+    },
+    /// Tier 3: perf-model ranking (globally calibrated when the db has
+    /// any record for the algorithm; raw model otherwise).
+    PerfModel {
+        /// True when at least one algorithm's score used a measured
+        /// calibration factor.
+        calibrated: bool,
+    },
+}
+
+impl SolutionSource {
+    /// Short label for logs and JSON (`find-db` | `neighbor` | `model`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SolutionSource::FindDb => "find-db",
+            SolutionSource::Neighbor { .. } => "neighbor",
+            SolutionSource::PerfModel { .. } => "model",
+        }
+    }
+}
+
+/// One ranked answer from immediate mode — the analog of
+/// `miopenConvSolution_t`.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Algorithm name ([`crate::types::algo`]).
+    pub algo: String,
+    /// Artifact signature that would run (tuned variant when the
+    /// perf-db has one in the manifest, like the find path).
+    pub artifact_sig: String,
+    /// Estimated execution time in µs (measured when tier 1, estimated
+    /// otherwise).
+    pub time_us: f64,
+    /// Extra device memory the algorithm needs (bytes).
+    pub workspace_bytes: u64,
+    /// Which tier produced the estimate.
+    pub source: SolutionSource,
+}
+
+/// Options for the immediate-mode query.
+#[derive(Debug, Clone)]
+pub struct ImmediateOptions {
+    /// Maximum feature-space distance for a neighbor to be trusted.
+    /// Beyond this the cascade falls to the calibrated model.
+    pub radius: f64,
+    /// Skip the exact find-db entry for the query itself (tiers 2–3
+    /// only). Used by the agreement gate to score the estimator against
+    /// the find winner without letting it read the answer.
+    pub ignore_self: bool,
+}
+
+impl Default for ImmediateOptions {
+    fn default() -> Self {
+        // ln-space distance: ~2.5 admits same-family shapes (2× spatial
+        // or channel steps) and rejects cross-family transfers.
+        ImmediateOptions { radius: 2.5, ignore_self: false }
+    }
+}
+
+/// ln-space feature vector for neighbor distance. Weights emphasize
+/// what moves the algorithm ranking: filter size and stride decide
+/// winograd/fft applicability and tiling, so they weigh double; batch
+/// size mostly rescales all algorithms together, so it weighs half.
+fn features(sig: &ProblemSig) -> [f64; 8] {
+    let lnp1 = |x: usize| ((x as f64) + 1.0).ln();
+    [
+        lnp1(sig.h * sig.w),
+        lnp1(sig.c),
+        lnp1(sig.k),
+        2.0 * lnp1(sig.r * sig.s),
+        2.0 * lnp1(sig.u * sig.v),
+        0.5 * lnp1(sig.n),
+        2.0 * lnp1(sig.l * sig.j),
+        2.0 * lnp1(sig.g),
+    ]
+}
+
+/// Euclidean distance between two feature vectors.
+fn feature_distance(a: &[f64; 8], b: &[f64; 8]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// One measured problem in the [`NeighborIndex`].
+#[derive(Debug)]
+struct IndexEntry {
+    key: String,
+    sig: ProblemSig,
+    feat: [f64; 8],
+    /// algo -> measured µs for this problem.
+    times: BTreeMap<String, f64>,
+}
+
+/// Borrowed nearest-neighbor view: (db key, signature, distance,
+/// per-algo measured µs).
+type Neighbor<'a> = (&'a str, &'a ProblemSig, f64, &'a BTreeMap<String, f64>);
+
+/// Nearest-neighbor index over the measured problems in a find-db,
+/// plus the global per-algorithm calibration factors for tier 3.
+#[derive(Debug)]
+pub struct NeighborIndex {
+    entries: Vec<IndexEntry>,
+    /// algo -> geometric mean of measured/modeled across the db.
+    calibration: BTreeMap<String, f64>,
+}
+
+impl NeighborIndex {
+    /// Build the index from a merged find-db. Keys that fail to parse
+    /// (foreign or hand-edited dbs) are skipped, not fatal.
+    pub fn build(db: &FindDb) -> NeighborIndex {
+        let mut entries = Vec::new();
+        // algo -> (sum of ln(measured/modeled), count) for the
+        // geometric-mean calibration.
+        let mut ratio: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+        for (key, records) in db.iter() {
+            let Ok(sig) = ProblemSig::parse_db_key(key) else {
+                continue;
+            };
+            let mut times = BTreeMap::new();
+            for r in records {
+                if !(r.time_us.is_finite() && r.time_us > 0.0) {
+                    continue;
+                }
+                times.insert(r.algo.clone(), r.time_us);
+                if r.modeled_time_us.is_finite() && r.modeled_time_us > 0.0 {
+                    let e = ratio.entry(r.algo.clone()).or_insert((0.0, 0));
+                    e.0 += (r.time_us / r.modeled_time_us).ln();
+                    e.1 += 1;
+                }
+            }
+            if !times.is_empty() {
+                let feat = features(&sig);
+                entries.push(IndexEntry { key: key.clone(), sig, feat,
+                                          times });
+            }
+        }
+        let calibration = ratio
+            .into_iter()
+            .map(|(algo, (sum, n))| (algo, (sum / n as f64).exp()))
+            .collect();
+        NeighborIndex { entries, calibration }
+    }
+
+    /// Number of indexed (parseable, measured) problems.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the index holds no measured problems.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Nearest neighbor with the same direction and dtype (hard gates —
+    /// timings do not transfer across either), excluding `skip_key`.
+    /// Returns (key, sig, distance, per-algo measured µs).
+    fn nearest(&self, sig: &ProblemSig, skip_key: &str)
+        -> Option<Neighbor<'_>> {
+        let qf = features(sig);
+        let mut best: Option<Neighbor> = None;
+        for e in &self.entries {
+            if e.key == skip_key
+                || e.sig.direction != sig.direction
+                || e.sig.dtype != sig.dtype {
+                continue;
+            }
+            let d = feature_distance(&qf, &e.feat);
+            let better = match &best {
+                None => true,
+                Some(b) => d < b.2,
+            };
+            if better {
+                best = Some((e.key.as_str(), &e.sig, d, &e.times));
+            }
+        }
+        best
+    }
+
+    /// Global calibration factor for an algorithm (1.0 when the db has
+    /// no measurement for it — the raw model is the best we have).
+    pub fn calibration(&self, algo: &str) -> f64 {
+        self.calibration.get(algo).copied().unwrap_or(1.0)
+    }
+}
+
+impl Handle {
+    /// Immediate mode: ranked solutions for a problem with *zero*
+    /// benchmarking, best first (`miopenConvolutionGetSolution` analog).
+    pub fn get_solutions(&self, problem: &ConvProblem,
+                         opts: &ImmediateOptions) -> Result<Vec<Solution>> {
+        let sig = problem.sig()?;
+        let key = sig.db_key();
+        let db = self.find_db();
+
+        // Candidate set mirrors the find path: applicable solvers whose
+        // (tuned-if-available) artifact exists in the manifest.
+        let perf_db = self.perf_db();
+        let mut cands = Vec::new();
+        for solver in crate::solvers::applicable(&sig) {
+            let tuned = perf_db
+                .get(&key, solver.name())
+                .map(|params| solver.artifact_sig(&sig, Some(params)))
+                .filter(|s| self.manifest.get(s).is_some());
+            let art_sig = tuned
+                .unwrap_or_else(|| solver.artifact_sig(&sig, None));
+            if self.manifest.get(&art_sig).is_none() {
+                continue;
+            }
+            let modeled = solver.modeled_time_us(&sig, &self.model);
+            let ws = solver.workspace_bytes(&sig);
+            cands.push((solver.name().to_string(), art_sig, modeled, ws));
+        }
+        if cands.is_empty() {
+            return Err(MiopenError::NotApplicable(format!(
+                "immediate mode: no solver with an artifact for {key}"
+            )));
+        }
+
+        // Tier 1: exact find-db hit.
+        if !opts.ignore_self {
+            if let Some(records) = db.get(&key) {
+                let mut out = Vec::new();
+                for rec in records {
+                    let Some((_, art, _, ws)) =
+                        cands.iter().find(|c| c.0 == rec.algo)
+                    else {
+                        continue; // stale record
+                    };
+                    out.push(Solution {
+                        algo: rec.algo.clone(),
+                        artifact_sig: art.clone(),
+                        time_us: rec.time_us,
+                        workspace_bytes: *ws,
+                        source: SolutionSource::FindDb,
+                    });
+                }
+                if !out.is_empty() {
+                    return Ok(out);
+                }
+            }
+        }
+
+        let index = NeighborIndex::build(&db);
+
+        // Tier 2: nearest neighbor within the radius, locally
+        // calibrated per algorithm.
+        if let Some((nkey, nsig, dist, ntimes)) = index.nearest(&sig, &key) {
+            if dist <= opts.radius {
+                let mut out = Vec::new();
+                for (algo, art, modeled, ws) in &cands {
+                    let est = match ntimes.get(algo) {
+                        Some(&nt) => {
+                            let nmodel =
+                                self.model.conv_time_us(nsig, algo);
+                            if nmodel.is_finite() && nmodel > 0.0 {
+                                modeled * (nt / nmodel)
+                            } else {
+                                modeled * index.calibration(algo)
+                            }
+                        }
+                        // Neighbor never measured this algo (e.g. not
+                        // applicable there): global calibration.
+                        None => modeled * index.calibration(algo),
+                    };
+                    out.push(Solution {
+                        algo: algo.clone(),
+                        artifact_sig: art.clone(),
+                        time_us: est,
+                        workspace_bytes: *ws,
+                        source: SolutionSource::Neighbor {
+                            key: nkey.to_string(),
+                            distance: dist,
+                        },
+                    });
+                }
+                out.sort_by(|a, b| a.time_us.total_cmp(&b.time_us));
+                return Ok(out);
+            }
+        }
+
+        // Tier 3: globally calibrated perf model.
+        let calibrated = cands
+            .iter()
+            .any(|(algo, ..)| index.calibration.contains_key(algo));
+        let mut out: Vec<Solution> = cands
+            .into_iter()
+            .map(|(algo, art, modeled, ws)| {
+                let est = modeled * index.calibration(&algo);
+                Solution {
+                    algo,
+                    artifact_sig: art,
+                    time_us: est,
+                    workspace_bytes: ws,
+                    source: SolutionSource::PerfModel { calibrated },
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.time_us.total_cmp(&b.time_us));
+        Ok(out)
+    }
+
+    /// The best immediate solution (first of [`Handle::get_solutions`]).
+    pub fn get_solution(&self, problem: &ConvProblem) -> Result<Solution> {
+        self.get_solution_opt(problem, &ImmediateOptions::default())
+    }
+
+    /// Best immediate solution with explicit options.
+    pub fn get_solution_opt(&self, problem: &ConvProblem,
+                            opts: &ImmediateOptions) -> Result<Solution> {
+        let mut sols = self.get_solutions(problem, opts)?;
+        Ok(sols.remove(0))
+    }
+}
+
+/// Counters published by [`Refiner::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RefinerStats {
+    /// Problems whose find completed and whose results were persisted.
+    pub refined: usize,
+    /// Problems whose find failed (logged, not fatal to the refiner).
+    pub failed: usize,
+    /// Enqueue calls dropped because the shape was already queued or
+    /// refined (exactly-once guarantee).
+    pub deduped: usize,
+}
+
+/// Internal queue state guarded by the refiner mutex.
+#[derive(Debug, Default)]
+struct RefinerState {
+    queue: VecDeque<ConvProblem>,
+    seen: BTreeSet<String>,
+    in_flight: usize,
+    closed: bool,
+    stats: RefinerStats,
+}
+
+/// Background refiner: collects cache-miss shapes from the immediate
+/// path and runs the *real* find on them, upgrading the user find-db
+/// (atomically, via the store's merge-on-save) so the next query is a
+/// tier-1 hit. Run [`Refiner::worker`] on a scoped thread:
+///
+/// ```ignore
+/// let refiner = Refiner::new();
+/// std::thread::scope(|s| {
+///     s.spawn(|| refiner.worker(&handle));
+///     // ... enqueue cache misses ...
+///     refiner.drain();
+///     refiner.close();
+/// });
+/// ```
+#[derive(Debug, Default)]
+pub struct Refiner {
+    state: Mutex<RefinerState>,
+    cond: Condvar,
+}
+
+impl Refiner {
+    /// A refiner with an empty queue.
+    pub fn new() -> Refiner {
+        Refiner::default()
+    }
+
+    /// Queue a problem for background refinement. Returns `Ok(true)`
+    /// when the problem was enqueued, `Ok(false)` when it was already
+    /// queued or refined this session (deduplicated — each shape is
+    /// refined exactly once).
+    pub fn enqueue(&self, problem: &ConvProblem) -> Result<bool> {
+        let key = problem.sig()?.db_key();
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Ok(false);
+        }
+        if !st.seen.insert(key) {
+            st.stats.deduped += 1;
+            return Ok(false);
+        }
+        st.queue.push_back(problem.clone());
+        self.cond.notify_all();
+        Ok(true)
+    }
+
+    /// Worker loop: pop shapes, run find, persist the upgraded user
+    /// dbs. Returns when [`Refiner::close`] is called and the queue is
+    /// empty. Run on a scoped thread so `handle` can be borrowed.
+    pub fn worker(&self, handle: &Handle) {
+        loop {
+            let problem = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if let Some(p) = st.queue.pop_front() {
+                        st.in_flight += 1;
+                        break p;
+                    }
+                    if st.closed {
+                        return;
+                    }
+                    st = self.cond.wait(st).unwrap();
+                }
+            };
+            let ok = handle
+                .find_convolution(&problem)
+                .and_then(|_| handle.save_dbs())
+                .is_ok();
+            let mut st = self.state.lock().unwrap();
+            st.in_flight -= 1;
+            if ok {
+                st.stats.refined += 1;
+            } else {
+                st.stats.failed += 1;
+            }
+            self.cond.notify_all();
+        }
+    }
+
+    /// Block until the queue is empty and no find is in flight.
+    pub fn drain(&self) {
+        let mut st = self.state.lock().unwrap();
+        while !st.queue.is_empty() || st.in_flight > 0 {
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Stop the worker once the queue drains; later enqueues are
+    /// ignored.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Snapshot of the refined/failed/deduped counters.
+    pub fn stats(&self) -> RefinerStats {
+        self.state.lock().unwrap().stats
+    }
+}
+
+/// Result of an immediate-mode serving pass ([`serve_immediate`]).
+#[derive(Debug)]
+pub struct ImmediateServeReport {
+    /// Per-request immediate-selection latency (µs) — the time to pick
+    /// a solution, not to execute it.
+    pub latency: TimingStats,
+    /// The chosen solution for each problem, in input order.
+    pub solutions: Vec<Solution>,
+    /// How many picks came from each tier, keyed by
+    /// [`SolutionSource::label`].
+    pub source_counts: BTreeMap<&'static str, usize>,
+    /// Refiner counters (zeros when refinement was disabled).
+    pub refiner: RefinerStats,
+}
+
+/// Serve a batch of problems in immediate mode. Every problem gets a
+/// zero-measurement [`Solution`]; when `refine` is true, shapes that
+/// missed the find-db are handed to a background [`Refiner`] thread
+/// which runs the real find and upgrades the user db before returning
+/// (the pass drains the refiner so the upgrade is visible to callers).
+pub fn serve_immediate(handle: &Handle, problems: &[ConvProblem],
+                       opts: &ImmediateOptions, refine: bool)
+    -> Result<ImmediateServeReport> {
+    let refiner = Refiner::new();
+    let mut latency = TimingStats::new();
+    let mut solutions = Vec::with_capacity(problems.len());
+    let mut source_counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+
+    std::thread::scope(|scope| {
+        if refine {
+            scope.spawn(|| refiner.worker(handle));
+        }
+        let run = (|| -> Result<()> {
+            for problem in problems {
+                let t0 = std::time::Instant::now();
+                let sol = handle.get_solution_opt(problem, opts)?;
+                latency.record(t0.elapsed().as_secs_f64() * 1e6);
+                if refine && sol.source != SolutionSource::FindDb {
+                    refiner.enqueue(problem)?;
+                }
+                *source_counts.entry(sol.source.label()).or_insert(0) += 1;
+                solutions.push(sol);
+            }
+            if refine {
+                refiner.drain();
+            }
+            Ok(())
+        })();
+        // Close before leaving the scope even on error — the worker
+        // blocks on the condvar until told to stop, and scope joins.
+        refiner.close();
+        run
+    })?;
+
+    Ok(ImmediateServeReport {
+        latency,
+        solutions,
+        source_counts,
+        refiner: refiner.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DType;
+
+    fn sig(n: usize, c: usize, hw: usize, k: usize, rs: usize,
+           stride: usize) -> ProblemSig {
+        ProblemSig {
+            direction: "fwd".into(),
+            n,
+            c,
+            h: hw,
+            w: hw,
+            k,
+            r: rs,
+            s: rs,
+            u: stride,
+            v: stride,
+            p: rs / 2,
+            q: rs / 2,
+            l: 1,
+            j: 1,
+            g: 1,
+            dtype: DType::F32,
+        }
+    }
+
+    #[test]
+    fn distance_is_zero_for_identical_shapes() {
+        let a = sig(4, 64, 28, 64, 3, 1);
+        let d = feature_distance(&features(&a), &features(&a));
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn same_family_closer_than_cross_family() {
+        let q = sig(4, 64, 28, 64, 3, 1);
+        // Same family: 2x the channels.
+        let near = sig(4, 128, 28, 128, 3, 1);
+        // Different family: 7x7 stride-2 stem conv.
+        let far = sig(4, 3, 224, 64, 7, 2);
+        let qf = features(&q);
+        let dn = feature_distance(&qf, &features(&near));
+        let df = feature_distance(&qf, &features(&far));
+        assert!(dn < df, "near {dn} should beat far {df}");
+        assert!(dn <= ImmediateOptions::default().radius,
+                "same-family distance {dn} exceeds default radius");
+    }
+
+    #[test]
+    fn index_skips_unparseable_keys() {
+        let mut db = FindDb::default();
+        db.insert(
+            "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32".into(),
+            vec![crate::db::FindRecord {
+                algo: "gemm".into(),
+                time_us: 10.0,
+                modeled_time_us: 5.0,
+                workspace_bytes: 0,
+            }],
+        );
+        db.insert("not-a-conv-key".into(), vec![crate::db::FindRecord {
+            algo: "gemm".into(),
+            time_us: 1.0,
+            modeled_time_us: 1.0,
+            workspace_bytes: 0,
+        }]);
+        let index = NeighborIndex::build(&db);
+        assert_eq!(index.len(), 1);
+        // Calibration only sees the parseable record: 10/5 = 2.0.
+        assert!((index.calibration("gemm") - 2.0).abs() < 1e-9);
+        assert_eq!(index.calibration("unknown"), 1.0);
+    }
+
+    #[test]
+    fn nearest_gates_on_direction_and_dtype() {
+        let mut db = FindDb::default();
+        db.insert(
+            "conv_bwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32".into(),
+            vec![crate::db::FindRecord {
+                algo: "gemm".into(),
+                time_us: 10.0,
+                modeled_time_us: 5.0,
+                workspace_bytes: 0,
+            }],
+        );
+        let index = NeighborIndex::build(&db);
+        let q = sig(4, 16, 28, 32, 3, 1); // fwd f32
+        assert!(index.nearest(&q, "").is_none(),
+                "bwd entry must not serve a fwd query");
+    }
+
+    #[test]
+    fn refiner_dedups_and_counts() {
+        let refiner = Refiner::new();
+        let p = ConvProblem::forward(
+            crate::descriptors::TensorDesc::nchw(4, 16, 28, 28, DType::F32),
+            crate::descriptors::FilterDesc::kcrs(32, 16, 3, 3, DType::F32),
+            crate::descriptors::ConvDesc::simple(1, 1),
+        );
+        assert!(refiner.enqueue(&p).unwrap());
+        assert!(!refiner.enqueue(&p).unwrap());
+        assert_eq!(refiner.stats().deduped, 1);
+        refiner.close();
+        assert!(!refiner.enqueue(&p).unwrap());
+    }
+}

@@ -60,6 +60,7 @@ pub mod find;
 pub mod fusion;
 #[allow(missing_docs)]
 pub mod handle;
+pub mod immediate;
 #[allow(missing_docs)]
 pub mod manifest;
 #[allow(missing_docs)]
@@ -91,5 +92,8 @@ pub mod prelude {
     pub use crate::find::{ConvAlgoPerf, ConvProblem, Direction};
     pub use crate::fusion::{FusionOp, FusionPlan};
     pub use crate::handle::{Handle, HandleOptions};
+    pub use crate::immediate::{
+        ImmediateOptions, Refiner, Solution, SolutionSource,
+    };
     pub use crate::types::{DType, MiopenError, Result};
 }

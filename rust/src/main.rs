@@ -71,6 +71,7 @@ fn conv_problem(args: &Args) -> ConvProblem {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("find") => cmd_find(args),
+        Some("immediate") => cmd_immediate(args),
         Some("tune") => cmd_tune(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
@@ -89,6 +90,10 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn cmd_find(args: &Args) -> Result<()> {
+    if args.flag("immediate") {
+        // Zero-measurement selection instead of the benchmark loop.
+        return cmd_immediate(args);
+    }
     let handle = make_handle(args)?;
     let problem = conv_problem(args);
     let opts = FindOptions {
@@ -110,6 +115,39 @@ fn cmd_find(args: &Args) -> Result<()> {
     }
     table.print();
     handle.save_dbs()?;
+    Ok(())
+}
+
+fn cmd_immediate(args: &Args) -> Result<()> {
+    use miopen_rs::immediate::ImmediateOptions;
+
+    let handle = make_handle(args)?;
+    let problem = conv_problem(args);
+    let opts = ImmediateOptions {
+        radius: args.opt_f64("radius",
+                             ImmediateOptions::default().radius),
+        ignore_self: args.flag("ignore-self"),
+    };
+    let sig = problem.sig()?;
+    println!("immediate: {}", sig.db_key());
+    let solutions = handle.get_solutions(&problem, &opts)?;
+    let mut table = miopen_rs::bench::Table::new(
+        &["algo", "est_us", "workspace_bytes", "source"]);
+    for s in &solutions {
+        let source = match &s.source {
+            miopen_rs::immediate::SolutionSource::Neighbor {
+                key, distance,
+            } => format!("neighbor {key} (d={distance:.2})"),
+            other => other.label().to_string(),
+        };
+        table.row(vec![
+            s.algo.clone(),
+            format!("{:.1}", s.time_us),
+            s.workspace_bytes.to_string(),
+            source,
+        ]);
+    }
+    table.print();
     Ok(())
 }
 
@@ -158,6 +196,9 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let handle = make_handle(args)?;
+    if args.flag("immediate") {
+        return serve_immediate_demo(&handle);
+    }
     let n = args.opt_usize("requests", 64);
     let rate = args.opt_f64("rate", 200.0);
     let cfg = ServeConfig {
@@ -168,8 +209,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let infer = handle.manifest().require("cnn_infer-f32")?;
-    let image_elems: usize =
-        infer.inputs.last().unwrap().shape[1..].iter().product();
+    let (_, image_elems, _) =
+        miopen_rs::serve::infer_image_layout(infer)?;
 
     let (tx, rx) = mpsc::channel();
     let loader = std::thread::spawn(move || {
@@ -186,6 +227,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("shard cache: {:.0}% hits over {} lookups",
              stats.shard_cache.hit_rate() * 100.0,
              stats.shard_cache.lookups);
+    Ok(())
+}
+
+/// `serve --immediate`: pick a solver for every figure-6 shape with
+/// zero benchmarking, handing find-db misses to the background refiner.
+fn serve_immediate_demo(handle: &Handle) -> Result<()> {
+    use miopen_rs::immediate::{serve_immediate, ImmediateOptions};
+
+    let problems: Vec<ConvProblem> = miopen_rs::configs::fig6_1x1()
+        .into_iter()
+        .chain(miopen_rs::configs::fig6_non1x1())
+        .map(|c| ConvProblem::forward(
+            TensorDesc::nchw(c.n, c.c, c.h, c.w, DType::F32),
+            FilterDesc::kcrs(c.k, c.c / c.g, c.r, c.s, DType::F32),
+            ConvDesc::new((c.u, c.v), (c.p, c.q), (c.l, c.j),
+                          ConvMode::CrossCorrelation, c.g),
+        ))
+        .collect();
+    let report = serve_immediate(handle, &problems,
+                                 &ImmediateOptions::default(), true)?;
+    let mut table = miopen_rs::bench::Table::new(
+        &["problem", "algo", "est_us", "source"]);
+    for (p, s) in problems.iter().zip(&report.solutions) {
+        table.row(vec![
+            p.sig()?.db_key(),
+            s.algo.clone(),
+            format!("{:.1}", s.time_us),
+            s.source.label().to_string(),
+        ]);
+    }
+    table.print();
+    println!("selection latency: {}", report.latency.summary());
+    for (src, n) in &report.source_counts {
+        println!("  picks from {src}: {n}");
+    }
+    let r = report.refiner;
+    println!("refiner: {} refined, {} failed, {} deduped",
+             r.refined, r.failed, r.deduped);
+    handle.save_dbs()?;
     Ok(())
 }
 
@@ -265,8 +345,21 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         dt.print();
     }
 
+    // cold-shape scenario: 100% previously-unseen shapes served in
+    // immediate mode, then again after the background refiner ran.
+    let cold = sb::run_cold_shapes(&handle,
+                                   args.opt_usize("cold-rounds", 8))?;
+    println!("cold shapes: {} served ({} unseen), p99 {:.0}us cold vs \
+              {:.0}us warm ({:.2}x)",
+             cold.cold_total, cold.cold_unseen, cold.cold_p99_us,
+             cold.warm_p99_us, cold.cold_over_warm_p99);
+    println!("immediate-vs-find agreement: top1 {:.0}%, top2 {:.0}% \
+              over {} shapes ({} refined, {} deduped)",
+             cold.agreement_top1 * 100.0, cold.agreement_top2 * 100.0,
+             cold.agreement_total, cold.refined, cold.deduped);
+
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_serve.json"));
-    sb::write_json(&points, &dtype_points, &out)?;
+    sb::write_json(&points, &dtype_points, Some(&cold), &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }

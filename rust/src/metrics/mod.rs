@@ -32,11 +32,21 @@ impl TimingStats {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Smallest sample; NaN when empty (consistent with [`Self::mean`]
+    /// and [`Self::percentile`] — an empty fold used to return `+inf`,
+    /// which leaked into BENCH_*.json as an invalid token).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; NaN when empty (see [`Self::min`]).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -156,6 +166,26 @@ mod tests {
         let s = TimingStats::new();
         assert!(s.mean().is_nan());
         assert!(s.median().is_nan());
+        // regression: min/max used to fold from ±inf on an empty sample
+        // set while mean/percentile returned NaN — all four now agree.
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+    }
+
+    #[test]
+    fn empty_stats_serialize_to_valid_json() {
+        // regression: the ±inf min/max of an empty TimingStats must not
+        // produce an unparseable BENCH_*.json document.
+        let s = TimingStats::new();
+        let j = crate::util::json::Json::obj(vec![
+            ("min_us", crate::util::json::Json::num(s.min())),
+            ("max_us", crate::util::json::Json::num(s.max())),
+            ("p99_us", crate::util::json::Json::num(s.p99())),
+        ]);
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).expect("valid JSON");
+        assert_eq!(back.get("min_us"),
+                   Some(&crate::util::json::Json::Null));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 
 use crate::cache::{CacheStats, ExecCache};
 use crate::handle::Handle;
+use crate::manifest::Artifact;
 use crate::metrics::{TimingStats, Throughput};
 use crate::runtime::HostTensor;
 use crate::types::{MiopenError, Result};
@@ -171,6 +172,35 @@ impl BatchQueue {
 // The serving engine
 // ---------------------------------------------------------------------------
 
+/// Validate the inference artifact's input layout — model parameters
+/// followed by one batched image tensor — and return `(aot_batch,
+/// image_elems, image_shape)`.
+///
+/// Regression guard: the server used to *guess* this layout with
+/// `inputs.last()` + `unwrap_or(16)` / `unwrap_or(0)` fallbacks, so a
+/// malformed manifest silently served zero-element images; now it fails
+/// up front with a descriptive [`MiopenError::ShapeMismatch`].
+pub fn infer_image_layout(art: &Artifact) -> Result<(usize, usize, Vec<usize>)> {
+    let spec = art.inputs.last().ok_or_else(|| {
+        MiopenError::ShapeMismatch(format!(
+            "{}: artifact declares no inputs; expected model parameters \
+             followed by a batched image tensor", art.sig))
+    })?;
+    if spec.shape.len() < 2 {
+        return Err(MiopenError::ShapeMismatch(format!(
+            "{}: image input has rank-{} shape {:?}; expected \
+             [batch, ...image dims]", art.sig, spec.shape.len(), spec.shape)));
+    }
+    if spec.shape.iter().any(|&d| d == 0) {
+        return Err(MiopenError::ShapeMismatch(format!(
+            "{}: image input shape {:?} has a zero-sized dimension",
+            art.sig, spec.shape)));
+    }
+    let aot_batch = spec.shape[0];
+    let image_elems = spec.shape[1..].iter().product();
+    Ok((aot_batch, image_elems, spec.shape.clone()))
+}
+
 /// Run the serving engine until the request channel closes: the calling
 /// thread feeds the shared queue while `cfg.workers` scoped workers pull
 /// batches from it. Executes the `cnn_infer` artifact; model parameters
@@ -179,11 +209,7 @@ impl BatchQueue {
 pub fn run_server(handle: &Handle, cfg: &ServeConfig,
                   rx: mpsc::Receiver<Request>) -> Result<ServerStats> {
     let infer = handle.manifest().require("cnn_infer-f32")?.clone();
-    let aot_batch = infer.inputs.last().map(|s| s.shape[0]).unwrap_or(16);
-    let image_elems: usize =
-        infer.inputs.last().map(|s| s.shape[1..].iter().product()).unwrap_or(0);
-    let image_shape: Vec<usize> =
-        infer.inputs.last().map(|s| s.shape.clone()).unwrap_or_default();
+    let (aot_batch, image_elems, image_shape) = infer_image_layout(&infer)?;
 
     // parameters: the seeded-init artifact (zero inputs, 7 outputs)
     let params = handle.execute_sig("cnn_init-f32", &[])?;

@@ -200,6 +200,35 @@ impl ProblemSig {
         ))
     }
 
+    /// Parse a find/perf-db key (`conv_{dir}-{params}-{dtype}`, the
+    /// algo-less form produced by [`ProblemSig::db_key`]) back into a
+    /// problem signature — immediate mode rebuilds its neighbor index
+    /// from the merged find-db through this.
+    pub fn parse_db_key(key: &str) -> Result<ProblemSig> {
+        let mut parts = key.split('-');
+        let head = parts.next().ok_or_else(|| bad(key, "empty"))?;
+        let direction = head
+            .strip_prefix("conv_")
+            .ok_or_else(|| bad(key, "missing conv_ prefix"))?
+            .to_string();
+        if !matches!(direction.as_str(), "fwd" | "bwd" | "wrw") {
+            return Err(bad(key, "bad direction"));
+        }
+        let params = parts.next().ok_or_else(|| bad(key, "missing params"))?;
+        let dtype_str = parts.next().ok_or_else(|| bad(key, "missing dtype"))?;
+        let dtype =
+            DType::parse(dtype_str).ok_or_else(|| bad(key, "bad dtype"))?;
+        if parts.next().is_some() {
+            return Err(bad(key, "trailing segments"));
+        }
+        // Round-trip through the artifact grammar with a placeholder
+        // algo so the field extraction stays in one place.
+        let full = format!("conv_{direction}-x-{params}-{}", dtype.name());
+        let (mut sig, _, _) = Self::parse_artifact(&full)?;
+        sig.dtype = dtype;
+        Ok(sig)
+    }
+
     /// Output spatial dims (shared formula with ref.conv_out_shape).
     pub fn out_hw(&self) -> (usize, usize) {
         let er = (self.r - 1) * self.l + 1;
@@ -345,6 +374,19 @@ mod tests {
         let p = sample();
         assert!(!p.db_key().contains("direct"));
         assert!(p.db_key().starts_with("conv_fwd-"));
+    }
+
+    #[test]
+    fn db_key_roundtrips_through_parse() {
+        let p = sample();
+        assert_eq!(ProblemSig::parse_db_key(&p.db_key()).unwrap(), p);
+        for bad_key in [
+            "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1",      // no dtype
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32", // algo
+            "conv_zzz-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",  // bad dir
+        ] {
+            assert!(ProblemSig::parse_db_key(bad_key).is_err(), "{bad_key}");
+        }
     }
 
     #[test]

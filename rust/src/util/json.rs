@@ -82,7 +82,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN tokens; emitting `{}` via the
+                    // f64 Display impl would produce an unparseable
+                    // document (empty TimingStats used to leak ±inf
+                    // here). Null-encode so the file stays valid JSON.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -370,6 +376,20 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(1.5).to_string(), "1.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_null_encode() {
+        // regression: ±inf/NaN must not serialize as `inf`/`NaN` tokens
+        // (invalid JSON) — they null-encode and the doc stays parseable.
+        for v in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let doc = Json::obj(vec![("x", Json::num(v))]);
+            let text = doc.to_string();
+            assert_eq!(text, "{\"x\":null}");
+            assert_eq!(parse(&text).unwrap().get("x"), Some(&Json::Null));
+        }
+        let arr = Json::Arr(vec![Json::num(1.5), Json::num(f64::NAN)]);
+        assert_eq!(arr.to_string(), "[1.5,null]");
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Integration: immediate mode (zero-find solver selection) and the
+//! background refiner (ISSUE 6 tentpole) — cold picks cost no
+//! measurement, neighbor transfer kicks in once a family member is
+//! measured, and the refiner upgrades the find-db exactly once.
+
+mod common;
+
+use miopen_rs::configs;
+use miopen_rs::descriptors::{ConvDesc, ConvMode, FilterDesc, TensorDesc};
+use miopen_rs::find::ConvProblem;
+use miopen_rs::immediate::{
+    serve_immediate, ImmediateOptions, Refiner, SolutionSource,
+};
+use miopen_rs::prelude::DType;
+
+fn problem_of(c: &configs::ConvConfig) -> ConvProblem {
+    ConvProblem::forward(
+        TensorDesc::nchw(c.n, c.c, c.h, c.w, DType::F32),
+        FilterDesc::kcrs(c.k, c.c / c.g, c.r, c.s, DType::F32),
+        ConvDesc::new((c.u, c.v), (c.p, c.q), (c.l, c.j),
+                      ConvMode::CrossCorrelation, c.g),
+    )
+}
+
+fn fig6_problems() -> Vec<ConvProblem> {
+    configs::fig6_1x1()
+        .into_iter()
+        .chain(configs::fig6_non1x1())
+        .map(|c| problem_of(&c))
+        .collect()
+}
+
+#[test]
+fn cold_pick_needs_no_measurement() {
+    // A never-seen shape on an empty db: the pick must come from the
+    // perf model and must NOT leave a find-db entry behind (nothing was
+    // benchmarked).
+    let handle = common::cpu_handle("imm-cold");
+    let p = fig6_problems().remove(0);
+    let key = p.sig().unwrap().db_key();
+    assert!(handle.find_db().get(&key).is_none(), "db must start empty");
+
+    let sol = handle.get_solution(&p).unwrap();
+    assert!(matches!(sol.source, SolutionSource::PerfModel { .. }),
+            "empty db must answer from the model: {:?}", sol.source);
+    assert!(sol.time_us.is_finite() && sol.time_us > 0.0);
+    assert!(handle.manifest().get(&sol.artifact_sig).is_some(),
+            "solution must point at a servable artifact");
+    assert!(handle.find_db().get(&key).is_none(),
+            "immediate mode must not write the find-db");
+}
+
+#[test]
+fn neighbor_transfer_after_warming_family_member() {
+    // Measure one 3x3 shape, then ask about a *different* 3x3 shape of
+    // the same family: the answer must come from the measured neighbor,
+    // not the raw model.
+    let handle = common::cpu_handle("imm-neighbor");
+    let family = configs::fig6_non1x1();
+    let warm = problem_of(&family[0]); // 3x3 p1, c16 -> k32
+    let query = problem_of(&family[1]); // 3x3 p1, c32 -> k48
+    handle.find_convolution(&warm).unwrap();
+
+    let sol = handle.get_solution(&query).unwrap();
+    match &sol.source {
+        SolutionSource::Neighbor { key, distance } => {
+            assert_eq!(key, &warm.sig().unwrap().db_key());
+            assert!(*distance <= ImmediateOptions::default().radius,
+                    "family member at distance {distance} out of radius");
+        }
+        other => panic!("expected a neighbor pick, got {other:?}"),
+    }
+}
+
+#[test]
+fn out_of_radius_neighbor_falls_back_to_calibrated_model() {
+    let handle = common::cpu_handle("imm-radius");
+    let family = configs::fig6_non1x1();
+    handle.find_convolution(&problem_of(&family[0])).unwrap();
+
+    // Radius 0 masks every (non-identical) neighbor.
+    let opts = ImmediateOptions { radius: 0.0, ignore_self: false };
+    let sol = handle
+        .get_solution_opt(&problem_of(&family[1]), &opts)
+        .unwrap();
+    match sol.source {
+        SolutionSource::PerfModel { calibrated } => {
+            assert!(calibrated,
+                    "a populated db must calibrate the model fallback");
+        }
+        other => panic!("expected a model pick, got {other:?}"),
+    }
+}
+
+#[test]
+fn refiner_upgrades_db_exactly_once() {
+    // Cold serve with refinement: every shape is found exactly once and
+    // the upgraded db turns the second pass into pure find-db hits.
+    let handle = common::cpu_handle("imm-refiner");
+    let problems: Vec<ConvProblem> =
+        fig6_problems().into_iter().take(4).collect();
+    let opts = ImmediateOptions::default();
+
+    let first = serve_immediate(&handle, &problems, &opts, true).unwrap();
+    assert_eq!(first.refiner.refined, problems.len(),
+               "every cold shape must be refined: {:?}", first.refiner);
+    assert_eq!(first.refiner.failed, 0);
+    let db = handle.find_db();
+    for p in &problems {
+        let key = p.sig().unwrap().db_key();
+        assert!(db.get(&key).is_some(), "refiner must upgrade {key}");
+    }
+    // The upgrade is persisted (merge-on-save), not just in memory.
+    let on_disk = handle.db_store().load_find_db().unwrap();
+    assert!(on_disk.get(&problems[0].sig().unwrap().db_key()).is_some(),
+            "refined results must reach the user db on disk");
+
+    let second = serve_immediate(&handle, &problems, &opts, true).unwrap();
+    assert_eq!(second.refiner.refined, 0,
+               "nothing left to refine on the second pass");
+    assert_eq!(second.source_counts.get("find-db"), Some(&problems.len()),
+               "second pass must be all find-db hits: {:?}",
+               second.source_counts);
+    for s in &second.solutions {
+        assert_eq!(s.source, SolutionSource::FindDb);
+    }
+}
+
+#[test]
+fn refiner_dedups_concurrent_enqueues_of_same_shape() {
+    let handle = common::cpu_handle("imm-dedup");
+    let p = fig6_problems().remove(2);
+    let refiner = Refiner::new();
+    std::thread::scope(|s| {
+        s.spawn(|| refiner.worker(&handle));
+        // Same shape enqueued repeatedly (as concurrent serve threads
+        // would): only the first may win.
+        let mut accepted = 0;
+        for _ in 0..5 {
+            if refiner.enqueue(&p).unwrap() {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 1);
+        refiner.drain();
+        refiner.close();
+    });
+    let stats = refiner.stats();
+    assert_eq!(stats.refined, 1, "exactly one find per shape: {stats:?}");
+    assert_eq!(stats.deduped, 4);
+}
+
+#[test]
+fn cold_shape_scenario_meets_structure_and_latency_gates() {
+    let handle = common::cpu_handle("imm-cold-bench");
+    let cold = miopen_rs::bench::serve::run_cold_shapes(&handle, 4).unwrap();
+
+    // 100% previously-unseen cold shapes on the fresh db.
+    assert_eq!(cold.cold_unseen, cold.cold_total);
+    assert_eq!(cold.refined, cold.cold_total);
+    assert_eq!(cold.agreement_total, 16,
+               "all figure-6 shapes must be scored");
+    assert!(cold.cold_p50_us > 0.0 && cold.warm_p50_us > 0.0);
+    assert!(cold.cold_p99_us >= cold.cold_p50_us);
+    assert!(cold.agreement_top2 >= cold.agreement_top1);
+    // Regression floor (the ≥0.8 top-1 acceptance gate is asserted on
+    // the CI smoke, which runs with the release profile's timings): the
+    // estimator must at least keep most picks inside find's top two.
+    assert!(cold.agreement_top2 >= 0.5,
+            "immediate picks degenerated: top2 {}", cold.agreement_top2);
+}

@@ -241,12 +241,61 @@ fn serve_bench_sweep_scales_and_writes_bench_json() {
         assert!(p.p50_us > 0.0 && p.p99_us >= p.p50_us, "{}", p.sig);
     }
 
+    // cold-shape scenario: the immediate-mode acceptance numbers ride
+    // along in the same artifact (fresh temp db, so all odd-index
+    // figure-6 shapes really are unseen)
+    let cold =
+        miopen_rs::bench::serve::run_cold_shapes(&handle, 4).unwrap();
+    assert_eq!(cold.cold_unseen, cold.cold_total,
+               "cold shapes must start absent from the find-db");
+    assert_eq!(cold.refined, cold.cold_total,
+               "the background refiner must find every cold shape");
+
     let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_serve.json");
-    miopen_rs::bench::serve::write_json(&points, &dtype_points, &out)
+    miopen_rs::bench::serve::write_json(&points, &dtype_points,
+                                        Some(&cold), &out)
         .unwrap();
     assert!(out.exists());
+}
+
+#[test]
+fn server_rejects_malformed_infer_manifest_up_front() {
+    // Regression: run_server used to guess the image layout with
+    // `inputs.last()` + `unwrap_or` fallbacks, silently serving
+    // zero-element images from a malformed manifest. It must now fail
+    // before serving, with an error that names the artifact.
+    let manifest = r#"{
+      "version": 1,
+      "artifacts": [
+        {"sig": "cnn_infer-f32", "file": "cnn_infer-f32.hlo.txt",
+         "primitive": "cnn", "dtype": "f32",
+         "inputs": [], "outputs": [{"shape": [4,3], "dtype": "f32"}]}
+      ]
+    }"#;
+    let handle = common::mock_handle(
+        manifest,
+        miopen_rs::runtime::MockConfig::default(),
+        "serve-bad-manifest",
+    );
+    let (_tx, rx) = mpsc::channel();
+    let err = run_server(&handle, &ServeConfig::default(), rx).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("cnn_infer-f32"),
+            "error must name the artifact: {msg}");
+    assert!(msg.contains("no inputs"), "got: {msg}");
+
+    // rank-1 image input is rejected with the shape in the message
+    let art = miopen_rs::manifest::Artifact {
+        inputs: vec![miopen_rs::manifest::TensorSpec {
+            shape: vec![16],
+            dtype: miopen_rs::prelude::DType::F32,
+        }],
+        ..handle.manifest().require("cnn_infer-f32").unwrap().clone()
+    };
+    let err = miopen_rs::serve::infer_image_layout(&art).unwrap_err();
+    assert!(err.to_string().contains("rank-1"), "got: {err}");
 }
 
 #[test]

@@ -662,3 +662,63 @@ fn prop_bf16_parity_within_documented_eps_bound() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_immediate_pick_agrees_with_find_top2() {
+    // Warm the full figure-6 set with a real find, then: for any of
+    // those shapes, the immediate pick with the shape's own db entry
+    // masked (ignore_self — the estimator may only see the *other*
+    // shapes) must land in find's top two, or within 1.5x of the
+    // measured winner (ties between near-equal algorithms are allowed
+    // to swap under timing noise; picking a genuinely slow algorithm
+    // is not).
+    use miopen_rs::find::ConvProblem;
+    use miopen_rs::immediate::ImmediateOptions;
+
+    let handle = common::cpu_handle("prop-immediate");
+    let configs: Vec<miopen_rs::configs::ConvConfig> =
+        miopen_rs::configs::fig6_1x1()
+            .into_iter()
+            .chain(miopen_rs::configs::fig6_non1x1())
+            .collect();
+    let problems: Vec<ConvProblem> = configs
+        .iter()
+        .map(|c| ConvProblem::forward(
+            TensorDesc::nchw(c.n, c.c, c.h, c.w, DType::F32),
+            FilterDesc::kcrs(c.k, c.c / c.g, c.r, c.s, DType::F32),
+            ConvDesc::new((c.u, c.v), (c.p, c.q), (c.l, c.j),
+                          ConvMode::CrossCorrelation, c.g),
+        ))
+        .collect();
+    for p in &problems {
+        handle.find_convolution(p).unwrap();
+    }
+    let db = handle.find_db();
+    let opts = ImmediateOptions { ignore_self: true, ..Default::default() };
+
+    let idx_gen = usize_in(0, problems.len() - 1);
+    forall("immediate-top2-agreement", &idx_gen, 48, |&i| {
+        let p = &problems[i];
+        let key = p.sig().map_err(|e| e.to_string())?.db_key();
+        let records = db.get(&key).ok_or("missing find-db entry")?;
+        let pick = handle
+            .get_solution_opt(p, &opts)
+            .map_err(|e| e.to_string())?;
+        let in_top2 = records.iter().take(2).any(|r| r.algo == pick.algo);
+        let best = records[0].time_us;
+        let picked = records
+            .iter()
+            .find(|r| r.algo == pick.algo)
+            .map(|r| r.time_us);
+        let close_enough =
+            picked.map(|t| t <= best * 1.5).unwrap_or(false);
+        if !(in_top2 || close_enough) {
+            return Err(format!(
+                "{key}: immediate picked {} ({:?}us) vs find ranking {:?}",
+                pick.algo, picked,
+                records.iter().map(|r| r.algo.as_str()).collect::<Vec<_>>()
+            ));
+        }
+        Ok(())
+    });
+}

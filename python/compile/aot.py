@@ -122,10 +122,13 @@ class Emitter:
 # ---------------------------------------------------------------------------
 
 
-def conv_sig(direction, algo, cc, dtype, bk=None, wt=None, gt=None):
+def conv_sig(direction, algo, cc, dtype, bk=None, wt=None, gt=None,
+             layout="nchw"):
     """Artifact signature; bk = direct block_k tile, wt = winograd
     transform-domain threads, gt = blocked-GEMM tile-grid index (typed
-    TuneTag suffixes on the Rust side)."""
+    TuneTag suffixes on the Rust side). NCHW emits no layout segment —
+    legacy signatures stay byte-identical — while NHWC appends `-nhwc`
+    after the dtype, before any tuning suffix."""
     t = ""
     if bk is not None:
         t = f"-bk{bk}"
@@ -133,12 +136,17 @@ def conv_sig(direction, algo, cc, dtype, bk=None, wt=None, gt=None):
         t = f"-wt{wt}"
     elif gt is not None:
         t = f"-gt{gt}"
-    return f"conv_{direction}-{algo}-{cc.sig_params()}-{dtype}{t}"
+    lt = "-nhwc" if layout == "nhwc" else ""
+    return f"conv_{direction}-{algo}-{cc.sig_params()}-{dtype}{lt}{t}"
 
 
 def fwd_algos(cc):
     """Applicable forward algorithms for a config (mirrors rust solvers)."""
     algos = ["gemm", "direct", "implicit"]
+    if cc.g == cc.c and cc.g > 1:
+        # depthwise proper: the dedicated solver outranks the grouped
+        # direct fallback it replaced
+        algos.insert(0, "depthwise")
     if (cc.r, cc.s) == (3, 3) and (cc.u, cc.v) == (1, 1) \
             and (cc.l, cc.j) == (1, 1) and cc.g == 1:
         algos.append("winograd")
@@ -158,12 +166,35 @@ def bwd_algos(cc):
     return algos
 
 
+def nhwc_wrap(fn):
+    """Lift a binary NCHW conv lambda to channels-last buffers: transpose
+    the operands at the boundary, run the NCHW lowering, transpose the
+    results back. Input tensors are NHWC / KRSC ((0,3,1,2) to NCHW /
+    KCRS); outputs invert with (0,2,3,1) — the same permutation pair for
+    fwd (y), bwd (dx) and wrw (dw, KCRS back to KRSC). The Rust interp
+    backend runs native channels-last kernels instead; here the lowered
+    HLO carries the boundary transposes, which is what the per-layout
+    workspace accounting charges for."""
+    return lambda a, b: tuple(
+        jnp.transpose(o, (0, 2, 3, 1))
+        for o in fn(jnp.transpose(a, (0, 3, 1, 2)),
+                    jnp.transpose(b, (0, 3, 1, 2))))
+
+
 def make_conv_fn(direction, algo, cc, bk=16):
     stride, pad, dil = (cc.u, cc.v), (cc.p, cc.q), (cc.l, cc.j)
     xs = (cc.n, cc.c, cc.h, cc.w)
     ws = (cc.k, cc.c // cc.g, cc.r, cc.s)
 
     if direction == "fwd":
+        if algo == "depthwise":
+            # depthwise (g == c): the lowered computation is the grouped
+            # direct kernel with one group per channel — the dedicated
+            # solver differs only in host-side loop structure, and its
+            # channel-block tile rides the shared block_k key
+            return lambda x, w: (direct.conv2d_direct(
+                x, w, stride=stride, pad=pad, dilation=dil, groups=cc.g,
+                block_k=bk),)
         if algo == "gemm":
             return lambda x, w: (im2col_gemm.conv2d_im2col(
                 x, w, stride=stride, pad=pad, dilation=dil),)
@@ -201,11 +232,17 @@ def make_conv_fn(direction, algo, cc, bk=16):
     raise ValueError(f"{direction}/{algo}")
 
 
-def conv_in_specs(direction, cc, dtype):
-    xs = (cc.n, cc.c, cc.h, cc.w)
-    ws = (cc.k, cc.c // cc.g, cc.r, cc.s)
+def conv_in_specs(direction, cc, dtype, layout="nchw"):
     ho, wo = cc.out_hw()
-    ys = (cc.n, cc.k, ho, wo)
+    if layout == "nhwc":
+        # channels-last physical shapes; sig params stay logical NCHW
+        xs = (cc.n, cc.h, cc.w, cc.c)
+        ws = (cc.k, cc.r, cc.s, cc.c // cc.g)
+        ys = (cc.n, ho, wo, cc.k)
+    else:
+        xs = (cc.n, cc.c, cc.h, cc.w)
+        ws = (cc.k, cc.c // cc.g, cc.r, cc.s)
+        ys = (cc.n, cc.k, ho, wo)
     if direction == "fwd":
         return [spec(xs, dtype), spec(ws, dtype)]
     if direction == "bwd":
@@ -215,7 +252,17 @@ def conv_in_specs(direction, cc, dtype):
     raise ValueError(direction)
 
 
-def conv_workspace(direction, algo, cc, dtype="f32"):
+def nhwc_transpose_scratch(cc):
+    """f32 NCHW staging copies (x + w + y) charged by the
+    transpose-at-boundary fallback paths — mirrors
+    solvers::nhwc_transpose_scratch on the Rust side."""
+    ho, wo = cc.out_hw()
+    return 4 * (cc.n * cc.c * cc.h * cc.w
+                + cc.k * (cc.c // cc.g) * cc.r * cc.s
+                + cc.n * cc.k * ho * wo)
+
+
+def conv_workspace(direction, algo, cc, dtype="f32", layout="nchw"):
     """One workspace formula per algorithm, shared with the Rust solvers
     (solvers::workspace_for — the reference executor's honest footprint).
     All scratch is **f32 accumulate-domain** regardless of the storage
@@ -224,20 +271,36 @@ def conv_workspace(direction, algo, cc, dtype="f32"):
     reduced (docs/NUMERICS.md); fft spectra are always complex-f32."""
     del dtype  # storage dtype does not size the accumulate-domain scratch
     ho, wo = cc.out_hw()
+    nhwc = layout == "nhwc"
     if algo == "gemm":
+        if nhwc:
+            # NHWC computes y(HoWo, K) = col(HoWo, CRS) · w(K, CRS)ᵀ —
+            # the channels-last column matrix packs as A and the weights
+            # as B, so the MR/NR strip padding swaps roles vs NCHW
+            crs = cc.c * cc.r * cc.s
+            howo = ho * wo
+            pa = -(-howo // im2col_gemm.GEMM_MR) * im2col_gemm.GEMM_MR * crs
+            pb = -(-cc.k // im2col_gemm.GEMM_NR) * im2col_gemm.GEMM_NR * crs
+            return 4 * (crs * howo + pa + pb)
         return im2col_gemm.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
             (cc.n, cc.k, ho, wo), itemsize=4)
     if algo == "fft":
+        # the FFT planes are inherently channel-planar, so NHWC always
+        # pays the boundary transposes on top of the spectra
         return fft_conv.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c, cc.r, cc.s),
-            pad=(cc.p, cc.q))
+            pad=(cc.p, cc.q)) + (nhwc_transpose_scratch(cc) if nhwc else 0)
     if algo == "winograd":
         # bwd-data tiles the (H, W) dx extent (adjoint pipeline)
         extent = (cc.h, cc.w) if direction == "bwd" else (ho, wo)
         return winograd.workspace_bytes(
             (cc.n, cc.c, cc.h, cc.w), (cc.k, cc.c // cc.g, cc.r, cc.s),
-            extent, itemsize=4)
+            extent, itemsize=4) + (nhwc_transpose_scratch(cc) if nhwc else 0)
+    if algo == "direct" and nhwc and direction != "fwd":
+        # fwd runs natively over channels-last strides (workspace-free);
+        # bwd/wrw transpose at the boundary and account for it honestly
+        return nhwc_transpose_scratch(cc)
     return 0
 
 
@@ -306,7 +369,9 @@ def emit_conv_family(em):
                 workspace_bytes=conv_workspace("fwd", algo, cc,
                                                dtype="f16"),
             )
-    # grouped / depthwise convolutions (direct solver only, as in rust)
+    # grouped convolutions keep the direct fallback; depthwise-shaped
+    # entries (g == c) also get the dedicated depthwise solver's
+    # artifact in both layouts (mirrors configs.rs)
     for cc in configs.GROUPED_CONFIGS:
         em.emit(
             conv_sig("fwd", "direct", cc, "f32"),
@@ -314,6 +379,94 @@ def emit_conv_family(em):
             conv_in_specs("fwd", cc, "f32"),
             primitive="conv", algo="direct", direction="fwd", dtype="f32",
             tags=("grouped",), params=cc.as_dict(),
+        )
+        if cc.g == cc.c and cc.g > 1:
+            for layout, tag in (("nchw", "depthwise"),
+                                ("nhwc", "depthwise-nhwc")):
+                fn = make_conv_fn("fwd", "depthwise", cc)
+                em.emit(
+                    conv_sig("fwd", "depthwise", cc, "f32", layout=layout),
+                    nhwc_wrap(fn) if layout == "nhwc" else fn,
+                    conv_in_specs("fwd", cc, "f32", layout=layout),
+                    primitive="conv", algo="depthwise", direction="fwd",
+                    dtype="f32", tags=(tag,), params=cc.as_dict(),
+                )
+    # depthwise tuned variants: the solver's channel-block grid on the
+    # first depthwise exemplar, per layout (`-bk` reuses the direct
+    # solver's block_k key — the tuning grammar stays closed)
+    dw = configs.GROUPED_CONFIGS[0]
+    assert dw.g == dw.c and dw.g > 1
+    for bk in configs.DEPTHWISE_BLOCK_GRID:
+        if bk > max(dw.c, 4):
+            continue
+        for layout in ("nchw", "nhwc"):
+            fn = make_conv_fn("fwd", "depthwise", dw, bk=bk)
+            em.emit(
+                conv_sig("fwd", "depthwise", dw, "f32", bk=bk,
+                         layout=layout),
+                nhwc_wrap(fn) if layout == "nhwc" else fn,
+                conv_in_specs("fwd", dw, "f32", layout=layout),
+                primitive="conv", algo="depthwise", direction="fwd",
+                dtype="f32", tags=("tune-depthwise",), params=dw.as_dict(),
+                tuning={"block_k": bk},
+            )
+    # NHWC exemplar set (mirrors configs.rs): the full applicable fwd
+    # zoo on one config per filter family, bwd/wrw via the
+    # transpose-at-boundary direct path, a bf16 slice, and tuned
+    # `-bk`/`-gt` variants so per-layout tuning sessions resolve NHWC
+    # artifacts. Sig params stay logical NCHW; specs are channels-last.
+    for cc in configs.NHWC_CONFIGS:
+        for algo in fwd_algos(cc):
+            em.emit(
+                conv_sig("fwd", algo, cc, "f32", layout="nhwc"),
+                nhwc_wrap(make_conv_fn("fwd", algo, cc)),
+                conv_in_specs("fwd", cc, "f32", layout="nhwc"),
+                primitive="conv", algo=algo, direction="fwd", dtype="f32",
+                tags=("nhwc",), params=cc.as_dict(),
+                workspace_bytes=conv_workspace("fwd", algo, cc,
+                                               layout="nhwc"),
+            )
+    nh = configs.FIG6_NON1X1[0]
+    for direction in ("bwd", "wrw"):
+        em.emit(
+            conv_sig(direction, "direct", nh, "f32", layout="nhwc"),
+            nhwc_wrap(make_conv_fn(direction, "direct", nh)),
+            conv_in_specs(direction, nh, "f32", layout="nhwc"),
+            primitive="conv", algo="direct", direction=direction,
+            dtype="f32", tags=("nhwc",), params=nh.as_dict(),
+            workspace_bytes=conv_workspace(direction, "direct", nh,
+                                           layout="nhwc"),
+        )
+    for algo in ("direct", "gemm"):
+        em.emit(
+            conv_sig("fwd", algo, nh, "bf16", layout="nhwc"),
+            nhwc_wrap(make_conv_fn("fwd", algo, nh)),
+            conv_in_specs("fwd", nh, "bf16", layout="nhwc"),
+            primitive="conv", algo=algo, direction="fwd", dtype="bf16",
+            tags=("nhwc-bf16",), params=nh.as_dict(),
+            workspace_bytes=conv_workspace("fwd", algo, nh, dtype="bf16",
+                                           layout="nhwc"),
+        )
+    tc = configs.TUNE_CONFIGS[0]
+    for bk in configs.DIRECT_BLOCK_K:
+        em.emit(
+            conv_sig("fwd", "direct", tc, "f32", bk=bk, layout="nhwc"),
+            nhwc_wrap(make_conv_fn("fwd", "direct", tc, bk=bk)),
+            conv_in_specs("fwd", tc, "f32", layout="nhwc"),
+            primitive="conv", algo="direct", direction="fwd", dtype="f32",
+            tags=("tune-nhwc",), params=tc.as_dict(),
+            tuning={"block_k": bk},
+        )
+    for gt in configs.GEMM_TILE_GRID:
+        em.emit(
+            conv_sig("fwd", "gemm", tc, "f32", gt=gt, layout="nhwc"),
+            nhwc_wrap(make_conv_fn("fwd", "gemm", tc)),
+            conv_in_specs("fwd", tc, "f32", layout="nhwc"),
+            primitive="conv", algo="gemm", direction="fwd", dtype="f32",
+            tags=("tune-nhwc",), params=tc.as_dict(),
+            workspace_bytes=conv_workspace("fwd", "gemm", tc,
+                                           layout="nhwc"),
+            tuning={"gt": gt},
         )
     # int8 inference: i8 inputs, exact f32 accumulation/output
     for cc in configs.INT8_CONFIGS:
@@ -542,6 +695,24 @@ def emit_fusion_family(em):
             + [spec((cc.k,), "bf16")] * 5,
             primitive="fusion", algo="cbna", direction="fwd", dtype="bf16",
             tags=("fusion-bf16",),
+            params={**cc.as_dict(), "conv_algo": "direct"})
+
+    # NHWC CBA exemplar (mirrors configs.rs): the direct 1x1 row is the
+    # one CBA family the layout axis admits — winograd rows are
+    # NCHW-only in the mdgraph. Channels-last specs, `-nhwc` sig tail.
+    cc = configs.ConvConfig(4, 16, 28, 28, 32, 1, 1)
+    assert cba_conv_algo(cc) == "direct"
+    em.emit(f"cba-relu-{cc.sig_params()}-f32-nhwc",
+            lambda x, w, b: tuple(
+                jnp.transpose(o, (0, 2, 3, 1)) for o in (
+                    fused.conv_bias_act(
+                        jnp.transpose(x, (0, 3, 1, 2)),
+                        jnp.transpose(w, (0, 3, 1, 2)), b,
+                        stride=(1, 1), pad=(0, 0), mode="relu"),)),
+            [spec((cc.n, cc.h, cc.w, cc.c)),
+             spec((cc.k, cc.r, cc.s, cc.c)), spec((cc.k,))],
+            primitive="fusion", algo="cba", direction="fwd",
+            tags=("fusion-nhwc",),
             params={**cc.as_dict(), "conv_algo": "direct"})
 
     # Winograd CBA exemplar (Table I winograd rows): 3x3/s1, c >= 18 and

@@ -144,6 +144,18 @@ WINOGRAD_TILE_THREADS = [1, 2, 4]
 # rust/src/runtime/interp/gemm.rs): one `-gt{i}` artifact per entry so
 # tune_convolution can race every tile config.
 GEMM_TILE_GRID = [0, 1, 2]
+# Depthwise channel-block candidates (mirrors
+# DepthwiseSolver::BLOCK_GRID in rust/src/solvers/mod.rs); the `-bk`
+# suffix reuses the direct solver's block_k perf-db key so the tuning
+# grammar stays closed.
+DEPTHWISE_BLOCK_GRID = [4, 8, 16, 32]
+
+# -- NHWC (channels-last) exemplar set -----------------------------------------
+# One config per filter family: 1x1 (gemm-friendly), 3x3 (winograd-able),
+# 5x5 (fft-able). Sig params stay logical NCHW order for every layout;
+# only the buffer axis order (and the `-nhwc` sig tail) changes.
+
+NHWC_CONFIGS = [FIG6_1X1[0], FIG6_NON1X1[0], FIG6_NON1X1[4]]
 
 # -- RNN configs ----------------------------------------------------------------
 

@@ -44,6 +44,12 @@ def test_fwd_algos_applicability():
     cc33s2 = configs.ConvConfig(4, 16, 14, 14, 48, 3, 3, u=2, v=2, p=1, q=1)
     assert "winograd" not in aot.fwd_algos(cc33s2)
     assert aot.bwd_algos(cc33) == ["gemm", "direct", "winograd"]
+    # depthwise proper (g == c) promotes the dedicated solver to the
+    # front; winograd/fft stay out (they require g == 1)
+    ccdw = configs.ConvConfig(4, 32, 14, 14, 32, 3, 3, p=1, q=1, g=32)
+    assert aot.fwd_algos(ccdw) == ["depthwise", "gemm", "direct", "implicit"]
+    ccg2 = configs.ConvConfig(4, 16, 14, 14, 32, 3, 3, p=1, q=1, g=2)
+    assert "depthwise" not in aot.fwd_algos(ccg2)
 
 
 def test_conv_sig_format():
@@ -53,6 +59,43 @@ def test_conv_sig_format():
     assert aot.conv_sig("wrw", "gemm", cc, "bf16", bk=8).endswith("-bf16-bk8")
     assert aot.conv_sig("fwd", "winograd", cc, "f32", wt=4).endswith("-f32-wt4")
     assert aot.conv_sig("fwd", "gemm", cc, "f32", gt=2).endswith("-f32-gt2")
+    # NHWC appends the layout segment after the dtype, before any tuning
+    # suffix; NCHW emits nothing (legacy sigs stay byte-identical)
+    assert aot.conv_sig("fwd", "direct", cc, "f32", layout="nhwc") == \
+        "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc"
+    assert aot.conv_sig("fwd", "direct", cc, "f32", bk=8,
+                        layout="nhwc").endswith("-f32-nhwc-bk8")
+    assert aot.conv_sig("fwd", "direct", cc, "f32", layout="nchw") == \
+        aot.conv_sig("fwd", "direct", cc, "f32")
+
+
+def test_nhwc_workspace_formulas():
+    from compile.kernels import im2col_gemm
+
+    cc = configs.ConvConfig(4, 16, 28, 28, 32, 3, 3, p=1, q=1)
+    ho, wo = cc.out_hw()
+    crs = cc.c * cc.r * cc.s
+    howo = ho * wo
+    # NHWC gemm: y(HoWo, K) = col(HoWo, CRS) · w(K, CRS)^T — the column
+    # matrix packs as A and the weights as B, so the MR/NR strip
+    # padding swaps roles vs NCHW
+    pa = -(-howo // im2col_gemm.GEMM_MR) * im2col_gemm.GEMM_MR * crs
+    pb = -(-cc.k // im2col_gemm.GEMM_NR) * im2col_gemm.GEMM_NR * crs
+    assert aot.conv_workspace("fwd", "gemm", cc, layout="nhwc") == \
+        4 * (crs * howo + pa + pb)
+    # direct: fwd runs natively over channels-last strides, bwd/wrw pay
+    # the transpose-at-boundary staging copies
+    assert aot.conv_workspace("fwd", "direct", cc, layout="nhwc") == 0
+    assert aot.conv_workspace("bwd", "direct", cc, layout="nhwc") == \
+        aot.nhwc_transpose_scratch(cc)
+    # winograd/fft add the boundary copies on top of their NCHW scratch
+    assert aot.conv_workspace("fwd", "winograd", cc, layout="nhwc") == \
+        aot.conv_workspace("fwd", "winograd", cc) \
+        + aot.nhwc_transpose_scratch(cc)
+    # depthwise is workspace-free in both layouts
+    dw = configs.GROUPED_CONFIGS[0]
+    assert aot.conv_workspace("fwd", "depthwise", dw) == 0
+    assert aot.conv_workspace("fwd", "depthwise", dw, layout="nhwc") == 0
 
 
 def test_gemm_workspace_is_arena_aware():
@@ -124,7 +167,12 @@ def test_manifest_conv_workspace_matches_solver_accounting():
     for a in arts:
         if a["primitive"] != "conv":
             continue
+        nhwc = "-nhwc" in a["sig"]
         if a["algo"] in ("gemm", "fft", "winograd"):
+            assert a["workspace_bytes"] > 0, a["sig"]
+        elif a["algo"] == "direct" and nhwc and a["direction"] != "fwd":
+            # NHWC bwd/wrw transpose at the boundary: the f32 NCHW
+            # staging copies are charged as workspace
             assert a["workspace_bytes"] > 0, a["sig"]
         else:
             assert a["workspace_bytes"] == 0, a["sig"]

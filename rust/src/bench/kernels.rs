@@ -16,7 +16,7 @@ use crate::perfmodel::GcnModel;
 use crate::runtime::interp::arena::WorkspaceArena;
 use crate::runtime::interp::gemm;
 use crate::runtime::interp::kernels as k;
-use crate::runtime::interp::view::Bf16Src;
+use crate::runtime::interp::view::{Bf16Src, TensorView};
 use crate::runtime::tensor::f32s_to_bf16_bytes;
 use crate::types::{DType, Result};
 use crate::util::json::Json;
@@ -109,6 +109,67 @@ impl DtypePoint {
     }
 }
 
+/// The 1×1-conv NHWC-vs-NCHW layout measurement: warm im2col-GEMM
+/// latency for the same problem in both layouts, plus the real
+/// pack-stage byte counters. A 1×1 NHWC activation is already the
+/// (Ho·Wo, C) GEMM operand — the unfold is a straight channel-run copy
+/// and the filter enters through the transposed-B packing mode, so the
+/// channels-last path must not pay more pack traffic than NCHW.
+#[derive(Debug, Clone)]
+pub struct LayoutPoint {
+    /// Problem label (the conv geometry).
+    pub name: String,
+    /// Mean warm NCHW im2col latency (µs).
+    pub nchw_us: f64,
+    /// Mean warm NHWC im2col latency (µs).
+    pub nhwc_us: f64,
+    /// Pack-stage source bytes per NCHW run (arena counter).
+    pub nchw_pack_bytes: u64,
+    /// Pack-stage source bytes per NHWC run (arena counter).
+    pub nhwc_pack_bytes: u64,
+}
+
+impl LayoutPoint {
+    /// NCHW-over-NHWC packing-traffic ratio (≥ 1.0 means channels-last
+    /// pays no extra pack bytes on the 1×1 hot path).
+    pub fn pack_traffic_ratio(&self) -> f64 {
+        if self.nhwc_pack_bytes > 0 {
+            self.nchw_pack_bytes as f64 / self.nhwc_pack_bytes as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Grouped-direct vs the dedicated depthwise kernel on a g == c
+/// problem — the evidence that promoting depthwise out of the grouped
+/// fallback pays.
+#[derive(Debug, Clone)]
+pub struct DepthwisePoint {
+    /// Problem label (the conv geometry).
+    pub name: String,
+    /// Grouped-direct fallback (the old serving path), NCHW (µs).
+    pub grouped_direct_us: f64,
+    /// Dedicated depthwise kernel, NCHW (µs).
+    pub depthwise_nchw_us: f64,
+    /// Dedicated depthwise kernel, channels-last (µs).
+    pub depthwise_nhwc_us: f64,
+}
+
+impl DepthwisePoint {
+    /// Grouped-direct latency over the best dedicated-kernel latency
+    /// (the CI acceptance requires ≥ 1.0: the solver must not lose to
+    /// the fallback it replaced).
+    pub fn speedup(&self) -> f64 {
+        let best = self.depthwise_nchw_us.min(self.depthwise_nhwc_us);
+        if best > 0.0 {
+            self.grouped_direct_us / best
+        } else {
+            0.0
+        }
+    }
+}
+
 /// The full kernel-bench result set.
 #[derive(Debug, Clone)]
 pub struct KernelBench {
@@ -118,6 +179,10 @@ pub struct KernelBench {
     pub arena: ArenaPoint,
     /// bf16-vs-f32 mixed-precision sweep points.
     pub bf16: Vec<DtypePoint>,
+    /// The 1×1-conv NHWC-vs-NCHW layout measurement.
+    pub layout: LayoutPoint,
+    /// The depthwise-vs-grouped-direct measurement.
+    pub depthwise: DepthwisePoint,
 }
 
 /// The swept GEMM shapes: square problems (the classic blocking
@@ -291,12 +356,110 @@ pub fn run_dtype_sweep(cfg: &BenchConfig) -> Vec<DtypePoint> {
     points
 }
 
+fn f32_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Measure the warm 1×1 im2col conv in both layouts, each on a private
+/// arena so the pack-traffic counters isolate one layout's byte reads.
+pub fn run_layout_bench(cfg: &BenchConfig) -> LayoutPoint {
+    let g = k::ConvGeom::dense(4, 16, 28, 28, 32, 1, 1, 1, 0);
+    let mut rng = SplitMix64::new(0x17A0);
+    let mut x = vec![0f32; g.n * g.c * g.h * g.w];
+    let mut w = vec![0f32; g.k * g.c * g.r * g.s];
+    rng.fill_normal_f32(&mut x);
+    rng.fill_normal_f32(&mut w);
+
+    let nchw_arena = WorkspaceArena::new();
+    let nchw_us = crate::bench::time_fn(cfg, || {
+        let _ = k::conv2d_fwd_im2col_with(&x, &w, &g, gemm::DEFAULT_TILE,
+                                          &nchw_arena);
+    })
+    .median();
+    let runs = (cfg.warmup_iters + cfg.timed_iters) as u64;
+    let nchw_pack_bytes =
+        nchw_arena.stats().pack_traffic_bytes / runs.max(1);
+
+    // the same values, channels-last: x (N,H,W,C), w (K,R,S,C)
+    let mut xh = vec![0f32; x.len()];
+    k::nchw_to_nhwc_image(&x, g.n, g.c, g.h, g.w, &mut xh);
+    let mut wh = vec![0f32; w.len()];
+    k::kcrs_to_krsc(&w, g.k, g.c, g.r, g.s, &mut wh);
+    let (xb, wb) = (f32_bytes(&xh), f32_bytes(&wh));
+    let (xv, wv) = (TensorView::F32(&xb), TensorView::F32(&wb));
+
+    let nhwc_arena = WorkspaceArena::new();
+    let nhwc_us = crate::bench::time_fn(cfg, || {
+        let _ = k::conv2d_fwd_im2col_nhwc_view(&xv, &wv, &g,
+                                               gemm::DEFAULT_TILE,
+                                               &nhwc_arena);
+    })
+    .median();
+    let nhwc_pack_bytes =
+        nhwc_arena.stats().pack_traffic_bytes / runs.max(1);
+
+    LayoutPoint {
+        name: format!("conv_fwd gemm 1x1 n{}c{}h{}w{}k{}",
+                      g.n, g.c, g.h, g.w, g.k),
+        nchw_us,
+        nhwc_us,
+        nchw_pack_bytes,
+        nhwc_pack_bytes,
+    }
+}
+
+/// Measure grouped-direct vs the dedicated depthwise kernel on the
+/// g == c exemplar geometry (both NCHW and channels-last variants of
+/// the dedicated kernel).
+pub fn run_depthwise_bench(cfg: &BenchConfig) -> DepthwisePoint {
+    let g = k::ConvGeom { g: 32, p: 1, q: 1,
+                          ..k::ConvGeom::dense(4, 32, 14, 14, 32, 3, 3,
+                                               1, 1) };
+    let mut rng = SplitMix64::new(0xDE97);
+    let mut x = vec![0f32; g.n * g.c * g.h * g.w];
+    let mut w = vec![0f32; g.k * (g.c / g.g) * g.r * g.s];
+    rng.fill_normal_f32(&mut x);
+    rng.fill_normal_f32(&mut w);
+
+    let grouped_direct_us = crate::bench::time_fn(cfg, || {
+        let _ = k::conv2d_fwd(&x, &w, &g);
+    })
+    .median();
+    let depthwise_nchw_us = crate::bench::time_fn(cfg, || {
+        let _ = k::conv2d_fwd_depthwise_nchw(&x, &w, &g);
+    })
+    .median();
+
+    let mut xh = vec![0f32; x.len()];
+    k::nchw_to_nhwc_image(&x, g.n, g.c, g.h, g.w, &mut xh);
+    let mut wh = vec![0f32; w.len()];
+    k::kcrs_to_krsc(&w, g.k, g.c / g.g, g.r, g.s, &mut wh);
+    let depthwise_nhwc_us = crate::bench::time_fn(cfg, || {
+        let _ = k::conv2d_fwd_depthwise_nhwc(&xh, &wh, &g, 8);
+    })
+    .median();
+
+    DepthwisePoint {
+        name: format!("conv_fwd depthwise n{}c{}h{}w{}k{}r{}s{}g{}",
+                      g.n, g.c, g.h, g.w, g.k, g.r, g.s, g.g),
+        grouped_direct_us,
+        depthwise_nchw_us,
+        depthwise_nhwc_us,
+    }
+}
+
 /// Run the full kernel-bench suite.
 pub fn run_suite(cfg: &BenchConfig) -> KernelBench {
     KernelBench {
         gemm: run_gemm_sweep(cfg),
         arena: run_arena_bench(cfg),
         bf16: run_dtype_sweep(cfg),
+        layout: run_layout_bench(cfg),
+        depthwise: run_depthwise_bench(cfg),
     }
 }
 
@@ -373,6 +536,26 @@ pub fn to_json(bench: &KernelBench) -> Json {
         ("arena_speedup", Json::num(a.speedup())),
         ("zero_alloc_warm_path", Json::Bool(a.warm_allocs == 0)),
     ]);
+    let l = &bench.layout;
+    let layout_obj = Json::obj(vec![
+        ("name", Json::str(l.name.as_str())),
+        ("nchw_us", Json::num(l.nchw_us)),
+        ("nhwc_us", Json::num(l.nhwc_us)),
+        ("nchw_pack_bytes", Json::num(l.nchw_pack_bytes as f64)),
+        ("nhwc_pack_bytes", Json::num(l.nhwc_pack_bytes as f64)),
+        ("pack_traffic_ratio_nchw_over_nhwc",
+         Json::num(l.pack_traffic_ratio())),
+    ]);
+    let d = &bench.depthwise;
+    let depthwise_obj = Json::obj(vec![
+        ("name", Json::str(d.name.as_str())),
+        ("grouped_direct_us", Json::num(d.grouped_direct_us)),
+        ("depthwise_nchw_us", Json::num(d.depthwise_nchw_us)),
+        ("depthwise_nhwc_us", Json::num(d.depthwise_nhwc_us)),
+        // the solver-promotion acceptance: the dedicated kernel must
+        // not lose to the grouped-direct fallback it replaced
+        ("speedup_vs_grouped_direct", Json::num(d.speedup())),
+    ]);
     let mut root = BTreeMap::new();
     root.insert("workload".to_string(),
                 Json::str("blocked packed-GEMM engine vs naive triple loop \
@@ -383,6 +566,8 @@ pub fn to_json(bench: &KernelBench) -> Json {
     root.insert("gemm".to_string(), Json::Arr(gemm_arr));
     root.insert("arena".to_string(), arena_obj);
     root.insert("bf16".to_string(), Json::Arr(bf16_arr));
+    root.insert("layout".to_string(), layout_obj);
+    root.insert("depthwise".to_string(), depthwise_obj);
     if let Some(adv) = bench
         .bf16
         .iter()
@@ -449,6 +634,19 @@ mod tests {
                 bf16_pack_bytes: 65536,
                 modeled_advantage: 2.0,
             }],
+            layout: LayoutPoint {
+                name: "conv_fwd gemm 1x1".into(),
+                nchw_us: 50.0,
+                nhwc_us: 48.0,
+                nchw_pack_bytes: 100352,
+                nhwc_pack_bytes: 100352,
+            },
+            depthwise: DepthwisePoint {
+                name: "conv_fwd depthwise".into(),
+                grouped_direct_us: 90.0,
+                depthwise_nchw_us: 60.0,
+                depthwise_nhwc_us: 45.0,
+            },
         };
         let j = to_json(&bench);
         // engine speedup = best blocked throughput over naive
@@ -466,6 +664,37 @@ mod tests {
         assert_eq!(bf.len(), 1);
         assert_eq!(bf[0].get("pack_traffic_advantage")
                        .and_then(Json::as_f64), Some(2.0));
+        let layout = back.get("layout").unwrap();
+        assert_eq!(layout.get("pack_traffic_ratio_nchw_over_nhwc")
+                         .and_then(Json::as_f64), Some(1.0));
+        let dw = back.get("depthwise").unwrap();
+        // 90 µs grouped over the best dedicated run (45 µs NHWC)
+        assert_eq!(dw.get("speedup_vs_grouped_direct")
+                     .and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn depthwise_speedup_guards_divide_by_zero() {
+        let d = DepthwisePoint {
+            name: "x".into(),
+            grouped_direct_us: 1.0,
+            depthwise_nchw_us: 0.0,
+            depthwise_nhwc_us: 0.0,
+        };
+        assert_eq!(d.speedup(), 0.0);
+    }
+
+    #[test]
+    fn dedicated_depthwise_beats_grouped_direct() {
+        // a small real measurement: same MAC count, but the dedicated
+        // kernel hoists the plane/slice offsets the grouped fallback
+        // recomputes per tap — it must not lose to the path it replaced
+        let cfg = BenchConfig::default();
+        let d = run_depthwise_bench(&cfg);
+        assert!(d.speedup() >= 1.0,
+                "depthwise {:.1}us/{:.1}us vs grouped {:.1}us",
+                d.depthwise_nchw_us, d.depthwise_nhwc_us,
+                d.grouped_direct_us);
     }
 
     #[test]

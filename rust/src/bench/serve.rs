@@ -169,6 +169,72 @@ pub fn run_dtype_serve(handle: &Handle, requests: usize)
     Ok(points)
 }
 
+/// One per-layout warm-serve measurement: p50/p99 of repeated warm
+/// executions of a conv artifact through the serve hot path, with the
+/// layout axis ("nchw" | "nhwc") alongside the algorithm.
+#[derive(Debug, Clone)]
+pub struct LayoutServePoint {
+    /// Artifact signature served.
+    pub sig: String,
+    /// Layout name ("nchw" | "nhwc").
+    pub layout: String,
+    /// Conv algorithm of the artifact.
+    pub algo: String,
+    /// Warm per-request latency median (µs).
+    pub p50_us: f64,
+    /// Warm per-request latency 99th percentile (µs).
+    pub p99_us: f64,
+}
+
+/// The NHWC/NCHW twin signatures the layout serve sweep measures: the
+/// same problem geometry in both layouts across the algorithm zoo —
+/// native channels-last kernels (direct, gemm, depthwise) and the
+/// transpose-at-boundary fallback (winograd).
+pub fn layout_serve_sigs() -> Vec<(&'static str, String)> {
+    let g33 = "n4c16h28w28k32r3s3u1v1p1q1l1j1g1";
+    let g11 = "n4c16h28w28k16r1s1u1v1p0q0l1j1g1";
+    let dw = "n4c32h14w14k32r3s3u1v1p1q1l1j1g32";
+    let mut sigs = Vec::new();
+    for (lt, tail) in [("nchw", ""), ("nhwc", "-nhwc")] {
+        sigs.push((lt, format!("conv_fwd-direct-{g11}-f32{tail}")));
+        sigs.push((lt, format!("conv_fwd-gemm-{g33}-f32{tail}")));
+        sigs.push((lt, format!("conv_fwd-winograd-{g33}-f32{tail}")));
+        sigs.push((lt, format!("conv_fwd-depthwise-{dw}-f32{tail}")));
+    }
+    sigs
+}
+
+/// Run the per-layout warm-serve sweep (same protocol as
+/// [`run_dtype_serve`]: compile once, time warm executions, skip
+/// signatures missing from the manifest).
+pub fn run_layout_serve(handle: &Handle, requests: usize)
+    -> Result<Vec<LayoutServePoint>> {
+    let mut points = Vec::new();
+    for (lt, sig) in layout_serve_sigs() {
+        let Some(art) = handle.manifest().get(&sig) else {
+            continue;
+        };
+        let algo = art.algo.clone();
+        let exe = handle.compile_sig(&sig)?;
+        let inputs = handle.random_inputs(&sig)?;
+        exe.run(&inputs)?; // warm the arena + any filter caches
+        let mut lat = TimingStats::new();
+        for _ in 0..requests.max(1) {
+            let t = Instant::now();
+            exe.run(&inputs)?;
+            lat.record(t.elapsed().as_secs_f64() * 1e6);
+        }
+        points.push(LayoutServePoint {
+            sig,
+            layout: lt.to_string(),
+            algo,
+            p50_us: lat.median(),
+            p99_us: lat.p99(),
+        });
+    }
+    Ok(points)
+}
+
 /// Result of the cold-shape scenario: 100% previously-unseen shapes
 /// served in immediate mode (zero find), then the same shapes again
 /// after the background refiner upgraded the find-db.
@@ -345,6 +411,7 @@ pub fn speedup(points: &[SweepPoint], workers_a: usize, workers_b: usize)
 }
 
 pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
+               layout: &[LayoutServePoint],
                cold: Option<&ColdShapeBench>) -> Json {
     let arr: Vec<Json> = points
         .iter()
@@ -376,11 +443,24 @@ pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
             ])
         })
         .collect();
+    let layout_arr: Vec<Json> = layout
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("sig", Json::str(p.sig.as_str())),
+                ("layout", Json::str(p.layout.as_str())),
+                ("algo", Json::str(p.algo.as_str())),
+                ("p50_latency_us", Json::num(p.p50_us)),
+                ("p99_latency_us", Json::num(p.p99_us)),
+            ])
+        })
+        .collect();
     let mut root = BTreeMap::new();
     root.insert("workload".to_string(),
                 Json::str("synthetic CNN inference (cnn_infer-f32)"));
     root.insert("points".to_string(), Json::Arr(arr));
     root.insert("dtype_serve".to_string(), Json::Arr(dtype_arr));
+    root.insert("layout_serve".to_string(), Json::Arr(layout_arr));
     if let Some(s) = speedup(points, 1, 4) {
         root.insert("speedup_4w_over_1w".to_string(), Json::num(s));
     }
@@ -406,11 +486,13 @@ pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
     Json::Obj(root)
 }
 
-/// Serialize and write `BENCH_serve.json` (worker sweep + per-dtype
-/// warm-serve points + the cold-shape immediate-mode scenario).
+/// Serialize and write `BENCH_serve.json` (worker sweep + per-dtype and
+/// per-layout warm-serve points + the cold-shape immediate-mode
+/// scenario).
 pub fn write_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
+                  layout: &[LayoutServePoint],
                   cold: Option<&ColdShapeBench>, path: &Path) -> Result<()> {
-    std::fs::write(path, to_json(points, dtype, cold).to_string())?;
+    std::fs::write(path, to_json(points, dtype, layout, cold).to_string())?;
     Ok(())
 }
 
@@ -485,7 +567,14 @@ mod tests {
             agreement_top2: 1.0,
             agreement_total: 16,
         };
-        let j = to_json(&pts, &dtype, Some(&cold));
+        let layout = vec![LayoutServePoint {
+            sig: "conv_fwd-gemm-x-f32-nhwc".into(),
+            layout: "nhwc".into(),
+            algo: "gemm".into(),
+            p50_us: 95.0,
+            p99_us: 150.0,
+        }];
+        let j = to_json(&pts, &dtype, &layout, Some(&cold));
         assert_eq!(j.get("points").and_then(Json::as_arr).unwrap().len(), 2);
         let s = j.get("speedup_4w_over_1w").and_then(Json::as_f64).unwrap();
         assert!((s - 2.5).abs() < 1e-9);
@@ -498,6 +587,10 @@ mod tests {
         assert_eq!(ds.len(), 1);
         assert_eq!(ds[0].get("dtype").and_then(Json::as_str),
                    Some("bf16"));
+        let ls = back.get("layout_serve").and_then(Json::as_arr).unwrap();
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].get("layout").and_then(Json::as_str),
+                   Some("nhwc"));
         let cs = back.get("cold_shapes").unwrap();
         assert_eq!(cs.get("agreement_top1").and_then(Json::as_f64),
                    Some(0.875));
@@ -507,8 +600,24 @@ mod tests {
 
     #[test]
     fn json_omits_cold_shapes_when_absent() {
-        let j = to_json(&[], &[], None);
+        let j = to_json(&[], &[], &[], None);
         assert!(j.get("cold_shapes").is_none());
+    }
+
+    #[test]
+    fn layout_serve_sigs_pair_nchw_with_nhwc() {
+        let sigs = layout_serve_sigs();
+        let nchw: Vec<&String> = sigs.iter().filter(|(l, _)| *l == "nchw")
+            .map(|(_, s)| s).collect();
+        let nhwc: Vec<String> = sigs.iter().filter(|(l, _)| *l == "nhwc")
+            .map(|(_, s)| s.clone()).collect();
+        assert_eq!(nchw.len(), nhwc.len());
+        for s in nchw {
+            let twin = format!("{s}-nhwc");
+            assert!(nhwc.contains(&twin), "missing nhwc twin for {s}");
+        }
+        // the dedicated depthwise solver rides the layout sweep too
+        assert!(sigs.iter().any(|(_, s)| s.contains("-depthwise-")));
     }
 
     #[test]

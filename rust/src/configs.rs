@@ -10,7 +10,7 @@
 //! integration suites cross-check signatures from both sides.
 
 use crate::manifest::{Artifact, TensorSpec};
-use crate::types::{algo, DType, ProblemSig, TuneTag};
+use crate::types::{algo, DType, Layout, ProblemSig, TuneTag};
 
 /// Mirror of `configs.ConvConfig`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,13 +71,19 @@ impl ConvConfig {
     }
 
     /// The equivalent [`ProblemSig`] (for solver workspace/applicability
-    /// queries during artifact emission).
+    /// queries during artifact emission). NCHW; see [`Self::problem_sig_l`]
+    /// for the layout-explicit form.
     pub fn problem_sig(&self, direction: &str, dtype: DType) -> ProblemSig {
+        self.problem_sig_l(direction, dtype, Layout::Nchw)
+    }
+
+    pub fn problem_sig_l(&self, direction: &str, dtype: DType,
+                         layout: Layout) -> ProblemSig {
         ProblemSig {
             direction: direction.to_string(),
             n: self.n, c: self.c, h: self.h, w: self.w, k: self.k,
             r: self.r, s: self.s, u: self.u, v: self.v, p: self.p,
-            q: self.q, l: self.l, j: self.j, g: self.g, dtype,
+            q: self.q, l: self.l, j: self.j, g: self.g, dtype, layout,
         }
     }
 }
@@ -240,6 +246,9 @@ fn f32s(shape: &[usize]) -> TensorSpec {
 /// `builtin_matches_solver_applicability` test locks the contract).
 pub fn fwd_algos(c: &ConvConfig) -> Vec<&'static str> {
     let mut algos = vec![algo::GEMM, algo::DIRECT, algo::IMPLICIT];
+    if c.g == c.c && c.g > 1 {
+        algos.insert(0, algo::DEPTHWISE);
+    }
     if (c.r, c.s) == (3, 3) && (c.u, c.v) == (1, 1) && (c.l, c.j) == (1, 1)
         && c.g == 1 {
         algos.push(algo::WINOGRAD);
@@ -261,16 +270,27 @@ pub fn bwd_algos(c: &ConvConfig) -> Vec<&'static str> {
 
 fn conv_sig(direction: &str, algo_name: &str, c: &ConvConfig, dtype: &str,
             tag: Option<TuneTag>) -> String {
-    let t = tag.map(TuneTag::suffix).unwrap_or_default();
-    format!("conv_{direction}-{algo_name}-{}-{dtype}{t}", c.sig_params())
+    conv_sig_l(direction, algo_name, c, dtype, Layout::Nchw, tag)
 }
 
-fn conv_specs(direction: &str, c: &ConvConfig, dtype: DType)
+fn conv_sig_l(direction: &str, algo_name: &str, c: &ConvConfig, dtype: &str,
+              layout: Layout, tag: Option<TuneTag>) -> String {
+    let l = if layout == Layout::Nhwc { "-nhwc" } else { "" };
+    let t = tag.map(TuneTag::suffix).unwrap_or_default();
+    format!("conv_{direction}-{algo_name}-{}-{dtype}{l}{t}", c.sig_params())
+}
+
+fn conv_specs(direction: &str, c: &ConvConfig, dtype: DType, layout: Layout)
     -> (Vec<TensorSpec>, Vec<TensorSpec>) {
-    let xs = [c.n, c.c, c.h, c.w];
-    let ws = [c.k, c.c / c.g, c.r, c.s];
     let (ho, wo) = c.out_hw();
-    let ys = [c.n, c.k, ho, wo];
+    // NHWC artifacts advertise channels-last buffers: the spec shapes
+    // are the physical axis order, while sig params stay logical NCHW.
+    let (xs, ws, ys) = match layout {
+        Layout::Nchw => ([c.n, c.c, c.h, c.w], [c.k, c.c / c.g, c.r, c.s],
+                         [c.n, c.k, ho, wo]),
+        Layout::Nhwc => ([c.n, c.h, c.w, c.c], [c.k, c.r, c.s, c.c / c.g],
+                         [c.n, ho, wo, c.k]),
+    };
     match direction {
         "fwd" => (vec![sp(&xs, dtype), sp(&ws, dtype)], vec![sp(&ys, dtype)]),
         "bwd" => (vec![sp(&ys, dtype), sp(&ws, dtype)], vec![sp(&xs, dtype)]),
@@ -280,13 +300,19 @@ fn conv_specs(direction: &str, c: &ConvConfig, dtype: DType)
 
 fn conv_artifact(direction: &str, algo_name: &str, c: &ConvConfig,
                  dtype: DType, tag: Option<TuneTag>) -> Artifact {
-    let (inputs, outputs) = conv_specs(direction, c, dtype);
+    conv_artifact_l(direction, algo_name, c, dtype, Layout::Nchw, tag)
+}
+
+fn conv_artifact_l(direction: &str, algo_name: &str, c: &ConvConfig,
+                   dtype: DType, layout: Layout, tag: Option<TuneTag>)
+    -> Artifact {
+    let (inputs, outputs) = conv_specs(direction, c, dtype, layout);
     // one workspace formula per algorithm, shared with the find step
     let ws = crate::solvers::workspace_for(
-        algo_name, &c.problem_sig(direction, dtype));
+        algo_name, &c.problem_sig_l(direction, dtype, layout));
     let mut art = Artifact::synthetic(
-        &conv_sig(direction, algo_name, c, dtype.name(), tag), "conv",
-        algo_name, direction, inputs, outputs)
+        &conv_sig_l(direction, algo_name, c, dtype.name(), layout, tag),
+        "conv", algo_name, direction, inputs, outputs)
         .with_params(&c.param_pairs())
         .with_label(&c.label())
         .with_workspace(ws);
@@ -361,10 +387,73 @@ fn emit_conv_family(out: &mut Vec<Artifact>) {
                 .with_tag("f16"));
         }
     }
-    // grouped / depthwise (direct solver only).
+    // grouped (direct fallback); depthwise-shaped entries (g == c) also
+    // get the dedicated depthwise solver's artifact in both layouts.
     for c in &grouped_configs() {
         out.push(conv_artifact("fwd", algo::DIRECT, c, DType::F32, None)
             .with_tag("grouped"));
+        if c.g == c.c && c.g > 1 {
+            out.push(conv_artifact("fwd", algo::DEPTHWISE, c, DType::F32,
+                                   None)
+                .with_tag("depthwise"));
+            out.push(conv_artifact_l("fwd", algo::DEPTHWISE, c, DType::F32,
+                                     Layout::Nhwc, None)
+                .with_tag("depthwise-nhwc"));
+        }
+    }
+    // depthwise tuned variants: the solver's channel-block grid on the
+    // first depthwise exemplar, per layout (`-bk` reuses the direct
+    // solver's block_k key — the tuning grammar stays closed).
+    {
+        let dw = grouped_configs()[0];
+        debug_assert!(dw.g == dw.c && dw.g > 1);
+        for bk in crate::solvers::DepthwiseSolver::BLOCK_GRID {
+            if bk > dw.c.max(4) {
+                continue;
+            }
+            for layout in [Layout::Nchw, Layout::Nhwc] {
+                out.push(conv_artifact_l("fwd", algo::DEPTHWISE, &dw,
+                                         DType::F32, layout,
+                                         Some(TuneTag::BlockK(bk)))
+                    .with_tag("tune-depthwise"));
+            }
+        }
+    }
+    // NHWC exemplar set: the full applicable fwd zoo on one config per
+    // filter family (1×1 gemm-friendly, 3×3 winograd-able, 5×5
+    // fft-able), bwd/wrw via the transpose-at-boundary direct path, a
+    // bf16 slice, and tuned `-bk`/`-gt` variants so per-layout tuning
+    // sessions resolve NHWC artifacts.
+    for c in [fig6_1x1()[0], fig6_non1x1()[0], fig6_non1x1()[4]] {
+        for a in fwd_algos(&c) {
+            out.push(conv_artifact_l("fwd", a, &c, DType::F32, Layout::Nhwc,
+                                     None)
+                .with_tag("nhwc"));
+        }
+    }
+    let nhwc_bwd = fig6_non1x1()[0];
+    for direction in ["bwd", "wrw"] {
+        out.push(conv_artifact_l(direction, algo::DIRECT, &nhwc_bwd,
+                                 DType::F32, Layout::Nhwc, None)
+            .with_tag("nhwc"));
+    }
+    for a in [algo::DIRECT, algo::GEMM] {
+        out.push(conv_artifact_l("fwd", a, &fig6_non1x1()[0], DType::Bf16,
+                                 Layout::Nhwc, None)
+            .with_tag("nhwc-bf16"));
+    }
+    {
+        let tc = tune_configs()[0];
+        for bk in DIRECT_BLOCK_K {
+            out.push(conv_artifact_l("fwd", algo::DIRECT, &tc, DType::F32,
+                                     Layout::Nhwc, Some(TuneTag::BlockK(bk)))
+                .with_tag("tune-nhwc"));
+        }
+        for gt in gemm_tile_grid() {
+            out.push(conv_artifact_l("fwd", algo::GEMM, &tc, DType::F32,
+                                     Layout::Nhwc, Some(TuneTag::GemmTile(gt)))
+                .with_tag("tune-nhwc"));
+        }
     }
     // int8 inference: i8 inputs, exact f32 accumulation and output.
     for c in &int8_configs() {
@@ -569,6 +658,28 @@ fn emit_fusion_family(out: &mut Vec<Artifact>) {
             .with_params(&cb.param_pairs())
             .with_str_param("conv_algo", algo::DIRECT)
             .with_tag("fusion-bf16"),
+        );
+    }
+
+    // NHWC CBA exemplar: the direct 1×1 row is the one CBA family the
+    // layout axis admits (winograd rows are NCHW-only in the mdgraph);
+    // channels-last specs, `-nhwc` sig tail, executed by the interp
+    // backend's NHWC fused path.
+    {
+        let c = cc(4, 16, 28, 28, 32, 1, 1);
+        debug_assert_eq!(cba_conv_algo(&c, DType::F32), algo::DIRECT);
+        let (ho, wo) = c.out_hw();
+        out.push(
+            Artifact::synthetic(
+                &format!("cba-relu-{}-f32-nhwc", c.sig_params()), "fusion",
+                "cba", "fwd",
+                vec![f32s(&[c.n, c.h, c.w, c.c]),
+                     f32s(&[c.k, c.r, c.s, c.c]), f32s(&[c.k])],
+                vec![f32s(&[c.n, ho, wo, c.k])])
+            .with_params(&c.param_pairs())
+            .with_str_param("conv_algo", algo::DIRECT)
+            .with_label(&c.label())
+            .with_tag("fusion-nhwc"),
         );
     }
 
@@ -880,6 +991,8 @@ mod tests {
             let (p, algo, _) = ProblemSig::parse_artifact(&a.sig).unwrap();
             assert_eq!(algo, a.algo, "{}", a.sig);
             assert_eq!(p.dtype, a.dtype, "{}", a.sig);
+            assert_eq!(p.layout == Layout::Nhwc, a.sig.contains("-nhwc"),
+                       "{}", a.sig);
         }
     }
 
@@ -895,6 +1008,29 @@ mod tests {
             "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-wt4",
             "conv_fwd-fft-n4c4h28w28k8r5s5u1v1p2q2l1j1g1-f32",
             "conv_fwd-direct-n4c16h14w14k32r3s3u1v1p1q1l1j1g1-i8",
+            // NHWC layout axis: native fwd zoo on exemplar configs,
+            // transpose-at-boundary winograd/fft and bwd/wrw, a bf16
+            // slice, tuned per-layout variants, and the dedicated
+            // depthwise solver (both layouts + tuned channel blocks)
+            "conv_fwd-direct-n4c16h28w28k16r1s1u1v1p0q0l1j1g1-f32-nhwc",
+            "conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc",
+            "conv_fwd-winograd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc",
+            "conv_fwd-fft-n4c4h28w28k8r5s5u1v1p2q2l1j1g1-f32-nhwc",
+            "conv_bwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc",
+            "conv_wrw-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc",
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16-nhwc",
+            "conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-bf16-nhwc",
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc-bk32",
+            "conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc-gt0",
+            "conv_fwd-depthwise-n4c32h14w14k32r3s3u1v1p1q1l1j1g32-f32",
+            "conv_fwd-depthwise-n4c32h14w14k32r3s3u1v1p1q1l1j1g32-f32-nhwc",
+            "conv_fwd-depthwise-n2c8h28w28k8r3s3u2v2p1q1l1j1g8-f32",
+            "conv_fwd-depthwise-n2c8h28w28k8r3s3u2v2p1q1l1j1g8-f32-nhwc",
+            "conv_fwd-depthwise-n4c32h14w14k32r3s3u1v1p1q1l1j1g32-f32-bk16",
+            (
+                "conv_fwd-depthwise-n4c32h14w14k32r3s3u1v1p1q1l1j1g32\
+                 -f32-nhwc-bk16"
+            ),
             // mixed-precision surface: bf16 covers the full fwd zoo on
             // exemplar configs, bwd/wrw on the universal pair, tuned
             // variants per dtype, and the Table II executable plans
@@ -918,6 +1054,7 @@ mod tests {
             "bias-4x8x14x14-f32",
             "act-relu-4x8x14x14-f32",
             "cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32",
+            "cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32-nhwc",
             "conv_fwd-direct-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32",
             "bias-4x32x28x28-f32",
             "act-relu-4x32x28x28-f32",
@@ -1000,6 +1137,42 @@ mod tests {
             assert_eq!(a.tuning.get(crate::solvers::WINO_THREADS_PARAM),
                        Some(&(wt as i64)), "{sig}");
             assert!(a.has_tag("tune-wino"));
+        }
+    }
+
+    #[test]
+    fn nhwc_artifacts_carry_channels_last_specs() {
+        // sig params stay logical NCHW; the spec shapes are physical
+        let m = Manifest::builtin();
+        let a = m
+            .require("conv_fwd-gemm-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc")
+            .unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 28, 28, 16]);
+        assert_eq!(a.inputs[1].shape, vec![32, 3, 3, 16]);
+        assert_eq!(a.outputs[0].shape, vec![4, 28, 28, 32]);
+        let b = m
+            .require("conv_bwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc")
+            .unwrap();
+        assert_eq!(b.inputs[0].shape, vec![4, 28, 28, 32]);
+        assert_eq!(b.outputs[0].shape, vec![4, 28, 28, 16]);
+    }
+
+    #[test]
+    fn depthwise_exemplars_mirror_solver_grid() {
+        // every grid point the depthwise solver can propose has an
+        // AOT'd artifact in both layouts (no silently unservable tile)
+        use crate::solvers::Solver;
+        let m = Manifest::builtin();
+        let dw = grouped_configs()[0];
+        let sig = dw.problem_sig("fwd", DType::F32);
+        for tp in crate::solvers::DepthwiseSolver.tuning_grid(&sig) {
+            let bk = tp.get(crate::solvers::BLOCK_K_PARAM).unwrap();
+            for suffix in ["", "-nhwc"] {
+                let s = format!(
+                    "conv_fwd-depthwise-{}-f32{suffix}-bk{bk}",
+                    dw.sig_params());
+                assert!(m.get(&s).is_some(), "missing {s}");
+            }
         }
     }
 

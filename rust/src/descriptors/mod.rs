@@ -56,7 +56,7 @@ impl ConvDesc {
     /// Forward output descriptor (`miopenGetConvolutionForwardOutputDim`).
     pub fn output_desc(&self, x: &TensorDesc, w: &FilterDesc) -> Result<TensorDesc> {
         self.validate()?;
-        let (n, c, h, wd) = x.nchw_dims()?;
+        let (n, c, h, wd) = x.dims()?;
         if w.k % self.group_count != 0 {
             return Err(MiopenError::ShapeMismatch(format!(
                 "K={} not divisible by groups {}", w.k, self.group_count)));
@@ -81,7 +81,7 @@ impl ConvDesc {
                 }
                 let ho = (h_in - er) / self.stride.0 + 1;
                 let wo = (w_in - es) / self.stride.1 + 1;
-                Ok(TensorDesc::nchw(n, w.k, ho, wo, x.dtype))
+                Ok(TensorDesc::image(x.layout, n, w.k, ho, wo, x.dtype))
             }
             ConvMode::Transpose => {
                 // transpose-conv input channels == the forward conv's K
@@ -97,7 +97,8 @@ impl ConvDesc {
                 let wo = wo.checked_sub(2 * self.pad.1).ok_or_else(|| {
                     MiopenError::ShapeMismatch("transpose pad too large".into())
                 })?;
-                Ok(TensorDesc::nchw(n, w.c * self.group_count, ho, wo, x.dtype))
+                Ok(TensorDesc::image(x.layout, n, w.c * self.group_count, ho,
+                                     wo, x.dtype))
             }
         }
     }
@@ -105,7 +106,7 @@ impl ConvDesc {
     /// Assemble the canonical problem signature for a direction.
     pub fn problem_sig(&self, direction: &str, x: &TensorDesc,
                        w: &FilterDesc) -> Result<ProblemSig> {
-        let (n, c, h, wd) = x.nchw_dims()?;
+        let (n, c, h, wd) = x.dims()?;
         Ok(ProblemSig {
             direction: direction.to_string(),
             n, c, h, w: wd,
@@ -115,6 +116,7 @@ impl ConvDesc {
             l: self.dilation.0, j: self.dilation.1,
             g: self.group_count,
             dtype: x.dtype,
+            layout: x.layout,
         })
     }
 }
@@ -232,7 +234,7 @@ impl PoolDesc {
     }
 
     pub fn output_desc(&self, x: &TensorDesc) -> Result<TensorDesc> {
-        let (n, c, h, w) = x.nchw_dims()?;
+        let (n, c, h, w) = x.dims()?;
         let h_in = h + 2 * self.pad.0;
         let w_in = w + 2 * self.pad.1;
         if h_in < self.window.0 || w_in < self.window.1 {

@@ -12,7 +12,7 @@
 //! graph.
 
 use crate::descriptors::ActivationMode;
-use crate::types::{algo, DType};
+use crate::types::{algo, DType, Layout};
 
 /// Op kinds in plan order (C = conv, B = bias, N = batchnorm, A = act).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -38,6 +38,9 @@ impl OpKind {
 #[derive(Debug, Clone)]
 pub struct PlanAttrs {
     pub dtype: DType,
+    /// Input tensor layout; NHWC plans fuse only through the direct
+    /// conv kernels (the winograd rows and standalone NA are NCHW).
+    pub layout: Layout,
     /// (r, s) if the plan contains a conv.
     pub filter: Option<(usize, usize)>,
     pub stride: Option<(usize, usize)>,
@@ -209,6 +212,9 @@ impl MdGraph {
         -> Option<MatchResult> {
         // fp16/bf16 support only what Table II lists
         let half = matches!(attrs.dtype, DType::F16 | DType::Bf16);
+        // NHWC plans execute only through the direct fused kernels: the
+        // winograd CBA rows and the standalone NA family are NCHW-only
+        let nhwc = attrs.layout == Layout::Nhwc;
 
         let mut states = vec![0usize];
         for op in ops {
@@ -233,8 +239,9 @@ impl MdGraph {
             if !states.contains(&acc.node) || !(acc.pred)(attrs) {
                 continue;
             }
-            if half {
-                // Table II: only CBNA-direct and CBA-direct-1x1
+            if half || nhwc {
+                // Table II (half) and the layout axis (NHWC) both
+                // restrict to CBNA-direct and CBA-direct-1x1
                 let allowed = acc.conv_algo == algo::DIRECT
                     && (combination == "CBNA" || combination == "CBA");
                 if !allowed {
@@ -258,6 +265,7 @@ mod tests {
              act: ActivationMode) -> PlanAttrs {
         PlanAttrs {
             dtype,
+            layout: Layout::Nchw,
             filter: Some((f, f)),
             stride: Some((stride, stride)),
             pad: Some((pad, pad)),
@@ -335,6 +343,7 @@ mod tests {
         let g = MdGraph::standard();
         let a = PlanAttrs {
             dtype: DType::F32,
+            layout: Layout::Nchw,
             filter: None,
             stride: None,
             pad: None,
@@ -359,6 +368,7 @@ mod tests {
         // NA not in table II
         let a = PlanAttrs {
             dtype: DType::F16,
+            layout: Layout::Nchw,
             filter: None,
             stride: None,
             pad: None,
@@ -366,6 +376,35 @@ mod tests {
             activation: Some(ActivationMode::Relu),
         };
         assert!(g.accept(NA, &a).is_none());
+    }
+
+    #[test]
+    fn nhwc_plans_fuse_direct_only() {
+        let g = MdGraph::standard();
+        let nhwc = |a: PlanAttrs| PlanAttrs { layout: Layout::Nhwc, ..a };
+        // CBA direct 1x1 and CBNA direct survive under NHWC
+        let m = g.accept(CBA, &nhwc(attrs(DType::F32, 1, 1, 0, 32,
+                                          ActivationMode::Relu)));
+        assert_eq!(m.unwrap().conv_algo, "direct");
+        assert!(g.accept(CBNA, &nhwc(attrs(DType::F32, 3, 1, 1, 32,
+                                           ActivationMode::Relu)))
+            .is_some());
+        // winograd CBA rows are NCHW-only: the same 3x3 plan that
+        // selects winograd in NCHW is rejected outright in NHWC
+        let wino = attrs(DType::F32, 3, 1, 1, 18, ActivationMode::Relu);
+        assert_eq!(g.accept(CBA, &wino).unwrap().conv_algo, "winograd");
+        assert!(g.accept(CBA, &nhwc(wino)).is_none());
+        // standalone NA is NCHW-only
+        let na = PlanAttrs {
+            dtype: DType::F32,
+            layout: Layout::Nhwc,
+            filter: None,
+            stride: None,
+            pad: None,
+            channels: Some(16),
+            activation: Some(ActivationMode::Relu),
+        };
+        assert!(g.accept(NA, &na).is_none());
     }
 
     #[test]

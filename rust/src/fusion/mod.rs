@@ -15,7 +15,7 @@ use crate::descriptors::{ActivationDesc, BnMode, ConvDesc, FilterDesc,
                          TensorDesc};
 use crate::handle::Handle;
 use crate::runtime::{Executable, HostTensor};
-use crate::types::{DType, MiopenError, Result};
+use crate::types::{DType, Layout, MiopenError, Result};
 use mdgraph::{MdGraph, OpKind, PlanAttrs};
 
 /// One operator in a fusion plan (`miopenCreateOp*` analogs).
@@ -64,6 +64,7 @@ impl FusionPlan {
     fn attrs(&self) -> Result<PlanAttrs> {
         let mut attrs = PlanAttrs {
             dtype: self.input.dtype,
+            layout: self.input.layout,
             filter: None,
             stride: None,
             pad: None,
@@ -137,19 +138,23 @@ impl FusionPlan {
             })
             .unwrap_or("identity");
         let dt = self.input.dtype.name();
+        // NHWC plans carry the layout in the sig tail, mirroring the
+        // conv artifact grammar (NCHW emits nothing — legacy sigs stay
+        // byte-identical)
+        let lt = if self.input.layout == Layout::Nhwc { "-nhwc" } else { "" };
         match self.combination().as_str() {
             "CBA" => {
                 let (desc, filter) = self.conv_parts()?;
                 let sig = desc.problem_sig("fwd", &self.input, filter)?;
-                Ok(format!("cba-{act}-{}-{dt}", sig.params_str()))
+                Ok(format!("cba-{act}-{}-{dt}{lt}", sig.params_str()))
             }
             "CBNA" => {
                 let (desc, filter) = self.conv_parts()?;
                 let sig = desc.problem_sig("fwd", &self.input, filter)?;
-                Ok(format!("cbna-{act}-{}-{dt}", sig.params_str()))
+                Ok(format!("cbna-{act}-{}-{dt}{lt}", sig.params_str()))
             }
             "NA" => {
-                let (n, c, h, w) = self.input.nchw_dims()?;
+                let (n, c, h, w) = self.input.dims()?;
                 Ok(format!("bna-{act}-n{n}c{c}h{h}w{w}-{dt}"))
             }
             other => Err(MiopenError::FusionRejected(format!(
@@ -221,6 +226,7 @@ pub fn enumerate_supported(dtype: DType) -> Vec<TableRow> {
         if *name == "NA" {
             let attrs = PlanAttrs {
                 dtype,
+                layout: Layout::Nchw,
                 filter: None,
                 stride: None,
                 pad: None,
@@ -247,6 +253,7 @@ pub fn enumerate_supported(dtype: DType) -> Vec<TableRow> {
                     for c in 1..=64usize {
                         let attrs = PlanAttrs {
                             dtype,
+                            layout: Layout::Nchw,
                             filter: Some((filter, filter)),
                             stride: Some((stride, stride)),
                             pad: Some(if *name == "CBNA" { (1, 1) }
@@ -334,6 +341,43 @@ mod tests {
         assert_eq!(plan.check().unwrap().combination, "NA");
         assert_eq!(plan.artifact_sig().unwrap(),
                    "bna-relu-n4c16h28w28-f32");
+    }
+
+    #[test]
+    fn nhwc_cba_direct_1x1_accepted_with_layout_sig() {
+        let plan = FusionPlan::new(TensorDesc::nhwc(4, 16, 28, 28, DType::F32))
+            .add(FusionOp::Conv {
+                desc: ConvDesc::simple(1, 0),
+                filter: FilterDesc::kcrs(32, 16, 1, 1, DType::F32),
+            })
+            .add(FusionOp::Bias)
+            .add(FusionOp::Activation {
+                desc: ActivationDesc::new(ActivationMode::Relu),
+            });
+        let m = plan.check().unwrap();
+        assert_eq!(m.conv_algo, "direct");
+        assert_eq!(plan.artifact_sig().unwrap(),
+                   "cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32-nhwc");
+    }
+
+    #[test]
+    fn nhwc_cba_winograd_shape_rejected() {
+        // 3x3 c=32 would ride the winograd CBA row under NCHW; NHWC only
+        // admits direct plans, so the same shape is rejected
+        let nchw = FusionPlan::new(TensorDesc::nchw(4, 32, 14, 14, DType::F32))
+            .add(FusionOp::Conv {
+                desc: ConvDesc::simple(1, 1),
+                filter: FilterDesc::kcrs(8, 32, 3, 3, DType::F32),
+            })
+            .add(FusionOp::Bias)
+            .add(FusionOp::Activation {
+                desc: ActivationDesc::new(ActivationMode::Relu),
+            });
+        assert_eq!(nchw.check().unwrap().conv_algo, "winograd");
+        let nhwc = FusionPlan { input: TensorDesc::nhwc(4, 32, 14, 14,
+                                                        DType::F32),
+                                ops: nchw.ops.clone() };
+        assert!(nhwc.check().is_err());
     }
 
     #[test]

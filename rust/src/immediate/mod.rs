@@ -201,9 +201,10 @@ impl NeighborIndex {
         self.entries.is_empty()
     }
 
-    /// Nearest neighbor with the same direction and dtype (hard gates —
-    /// timings do not transfer across either), excluding `skip_key`.
-    /// Returns (key, sig, distance, per-algo measured µs).
+    /// Nearest neighbor with the same direction, dtype and layout (hard
+    /// gates — timings do not transfer across any of them: an NHWC
+    /// timing reflects different kernels and pack traffic), excluding
+    /// `skip_key`. Returns (key, sig, distance, per-algo measured µs).
     fn nearest(&self, sig: &ProblemSig, skip_key: &str)
         -> Option<Neighbor<'_>> {
         let qf = features(sig);
@@ -211,7 +212,8 @@ impl NeighborIndex {
         for e in &self.entries {
             if e.key == skip_key
                 || e.sig.direction != sig.direction
-                || e.sig.dtype != sig.dtype {
+                || e.sig.dtype != sig.dtype
+                || e.sig.layout != sig.layout {
                 continue;
             }
             let d = feature_distance(&qf, &e.feat);
@@ -570,6 +572,7 @@ mod tests {
             j: 1,
             g: 1,
             dtype: DType::F32,
+            layout: crate::types::Layout::Nchw,
         }
     }
 
@@ -636,6 +639,29 @@ mod tests {
         let q = sig(4, 16, 28, 32, 3, 1); // fwd f32
         assert!(index.nearest(&q, "").is_none(),
                 "bwd entry must not serve a fwd query");
+    }
+
+    #[test]
+    fn nearest_gates_on_layout() {
+        // an NCHW timing must never transfer to an NHWC query (and vice
+        // versa) no matter how close the shape is
+        let mut db = FindDb::default();
+        db.insert(
+            "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32".into(),
+            vec![crate::db::FindRecord {
+                algo: "gemm".into(),
+                time_us: 10.0,
+                modeled_time_us: 5.0,
+                workspace_bytes: 0,
+            }],
+        );
+        let index = NeighborIndex::build(&db);
+        let q = ProblemSig { layout: crate::types::Layout::Nhwc,
+                             ..sig(4, 16, 28, 32, 3, 1) };
+        assert!(index.nearest(&q, "").is_none(),
+                "NCHW entry must not serve an NHWC query");
+        let nchw_q = sig(4, 16, 28, 32, 3, 1);
+        assert!(index.nearest(&nchw_q, "").is_some());
     }
 
     #[test]

@@ -345,6 +345,25 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         dt.print();
     }
 
+    // per-layout warm-serve sweep: NHWC twins vs their NCHW baselines
+    // across the algorithm zoo (incl. the dedicated depthwise solver)
+    let layout_points =
+        sb::run_layout_serve(&handle, args.opt_usize("layout-requests", 64))?;
+    if !layout_points.is_empty() {
+        let mut lt = miopen_rs::bench::Table::new(
+            &["sig", "layout", "algo", "p50_us", "p99_us"]);
+        for p in &layout_points {
+            lt.row(vec![
+                p.sig.clone(),
+                p.layout.clone(),
+                p.algo.clone(),
+                format!("{:.0}", p.p50_us),
+                format!("{:.0}", p.p99_us),
+            ]);
+        }
+        lt.print();
+    }
+
     // cold-shape scenario: 100% previously-unseen shapes served in
     // immediate mode, then again after the background refiner ran.
     let cold = sb::run_cold_shapes(&handle,
@@ -359,7 +378,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
              cold.agreement_total, cold.refined, cold.deduped);
 
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_serve.json"));
-    sb::write_json(&points, &dtype_points, Some(&cold), &out)?;
+    sb::write_json(&points, &dtype_points, &layout_points, Some(&cold),
+                   &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }
@@ -413,6 +433,17 @@ fn cmd_kernel_bench(args: &Args) -> Result<()> {
         ]);
     }
     bt.print();
+
+    let l = &bench.layout;
+    println!("{}: nchw {:.1}us / nhwc {:.1}us, pack bytes {} vs {} \
+              (nchw/nhwc {:.2}x)",
+             l.name, l.nchw_us, l.nhwc_us, l.nchw_pack_bytes,
+             l.nhwc_pack_bytes, l.pack_traffic_ratio());
+    let d = &bench.depthwise;
+    println!("{}: grouped-direct {:.1}us, dedicated nchw {:.1}us / \
+              nhwc {:.1}us ({:.2}x vs fallback)",
+             d.name, d.grouped_direct_us, d.depthwise_nchw_us,
+             d.depthwise_nhwc_us, d.speedup());
 
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_kernels.json"));
     kb::write_json(&bench, &out)?;

@@ -198,6 +198,18 @@ impl GcnModel {
                     launches: 4.0, // fwd transforms, pointwise, inverse
                 }
             }
+            // dedicated depthwise (g == c): no cross-channel reduction,
+            // so the MAC count collapses to N·K·Ho·Wo·R·S (the generic
+            // macs() formula already reflects c/g == 1) — memory-bound
+            // almost everywhere; channel-innermost NHWC walks unit
+            // strides and beats the grouped-direct plane loop, while
+            // grouped direct pays its per-tap row re-reads.
+            algo::DEPTHWISE => AlgoCost {
+                mac_scale: 1.0,
+                mac_efficiency: if one_by_one { 0.80 } else { 0.70 },
+                extra_bytes: 0,
+                launches: 1.0,
+            },
             _ => AlgoCost {
                 mac_scale: 1.0,
                 mac_efficiency: 0.3,
@@ -305,7 +317,18 @@ mod tests {
             n: 4, c, h: hw, w: hw, k, r: rs, s: rs,
             u: stride, v: stride, p: pad, q: pad, l: 1, j: 1, g: 1,
             dtype: DType::F32,
+            layout: crate::types::Layout::Nchw,
         }
+    }
+
+    #[test]
+    fn depthwise_beats_grouped_direct() {
+        let m = GcnModel::vega64();
+        let mut p = sig(64, 32, 64, 3, 1, 1);
+        p.g = 64; // depthwise: one filter slice per channel
+        assert!(m.conv_time_us(&p, "depthwise") < m.conv_time_us(&p, "direct"),
+                "depthwise {} vs direct {}",
+                m.conv_time_us(&p, "depthwise"), m.conv_time_us(&p, "direct"));
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::runtime::HostTensor;
 use crate::types::{MiopenError, Result};
 
 fn nchw_sig(t: &TensorDesc) -> Result<String> {
-    let (n, c, h, w) = t.nchw_dims()?;
+    let (n, c, h, w) = t.dims()?;
     Ok(format!("n{n}c{c}h{h}w{w}"))
 }
 
@@ -86,7 +86,7 @@ pub fn batchnorm_bwd(handle: &Handle, x: &HostTensor, dy: &HostTensor,
 pub fn pooling_fwd(handle: &Handle, desc: &PoolDesc, x: &HostTensor)
     -> Result<HostTensor> {
     let (n, c, h, w) = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype)
-        .nchw_dims()?;
+        .dims()?;
     let sig = format!(
         "pool_fwd-{}-n{n}c{c}h{h}w{w}k{}x{}u{}p{}-{}",
         desc.mode.name(), desc.window.0, desc.window.1, desc.stride.0,
@@ -98,7 +98,7 @@ pub fn pooling_fwd(handle: &Handle, desc: &PoolDesc, x: &HostTensor)
 pub fn pooling_bwd(handle: &Handle, desc: &PoolDesc, x: &HostTensor,
                    y: &HostTensor, dy: &HostTensor) -> Result<HostTensor> {
     let (n, c, h, w) = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype)
-        .nchw_dims()?;
+        .dims()?;
     let sig = format!(
         "pool_bwd-{}-n{n}c{c}h{h}w{w}k{}x{}u{}p{}-{}",
         desc.mode.name(), desc.window.0, desc.window.1, desc.stride.0,
@@ -122,7 +122,7 @@ pub fn softmax_fwd(handle: &Handle, mode: SoftmaxMode, x: &HostTensor)
 pub fn activation_fwd(handle: &Handle, desc: &ActivationDesc, x: &HostTensor)
     -> Result<HostTensor> {
     let (n, c, h, w) = TensorDesc::new(x.spec.shape.clone(), x.spec.dtype)
-        .nchw_dims()?;
+        .dims()?;
     let sig = format!("act_fwd-{}-n{n}c{c}h{h}w{w}-{}", desc.mode.name(),
                       x.spec.dtype.name());
     let mut out = handle.execute_sig(&sig, &[x.clone()])?;

@@ -362,6 +362,360 @@ fn conv2d_bwd_weights_t<LD: Load, LX: Load>(dy: LD, x: LX, g: &ConvGeom)
 }
 
 // ---------------------------------------------------------------------------
+// NHWC (channels-last) convolution — native kernels + layout boundaries
+//
+// Buffer conventions for the NHWC kernels: x is (N, H, W, C), filters
+// are (K, R, S, C/g), outputs are (N, Ho, Wo, K) — the channel axis is
+// unit-stride everywhere, which is the whole point: the inner loops
+// walk contiguous memory (the natural vector axis), and 1×1 im2col
+// degenerates to a near-memcpy. Kernels without a native NHWC form
+// (winograd/FFT, the bwd/wrw directions) are served through the
+// transpose helpers below — transpose at the boundary, run the NCHW
+// kernel in f32, transpose the result back.
+// ---------------------------------------------------------------------------
+
+/// Direct forward convolution over NHWC strides (grouped, dilated).
+/// x: (N,H,W,C), w: (K,R,S,C/g) -> y: (N,Ho,Wo,K). f32 wrapper over the
+/// dtype-generic loop.
+pub fn conv2d_fwd_nhwc(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    conv2d_fwd_nhwc_t(F32Src(x), F32Src(w), g)
+}
+
+/// [`conv2d_fwd_nhwc`] over dtype-tagged views (decode at load, f32
+/// accumulate, exactly like the NCHW direct kernel).
+pub fn conv2d_fwd_nhwc_view(x: &TensorView, w: &TensorView, g: &ConvGeom)
+    -> Result<Vec<f32>> {
+    dispatch_pair!(*x, *w, |xv, wv| conv2d_fwd_nhwc_t(xv, wv, g))
+}
+
+fn conv2d_fwd_nhwc_t<LX: Load, LW: Load>(x: LX, w: LW, g: &ConvGeom)
+    -> Vec<f32> {
+    let (ho, wo) = g.out_hw();
+    let cg = g.c / g.g;
+    let kg = g.k / g.g;
+    let mut y = vec![0f32; g.n * ho * wo * g.k];
+    for n in 0..g.n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let ybase = ((n * ho + oh) * wo + ow) * g.k;
+                for k in 0..g.k {
+                    let grp = k / kg;
+                    let mut acc = 0f32;
+                    for fr in 0..g.r {
+                        let ih = (oh * g.u + fr * g.l) as isize - g.p as isize;
+                        if ih < 0 || ih >= g.h as isize {
+                            continue;
+                        }
+                        for fs in 0..g.s {
+                            let iw = (ow * g.v + fs * g.j) as isize
+                                - g.q as isize;
+                            if iw < 0 || iw >= g.w as isize {
+                                continue;
+                            }
+                            // channel-innermost: both reads are
+                            // unit-stride runs of length C/g
+                            let xpix = ((n * g.h + ih as usize) * g.w
+                                + iw as usize) * g.c + grp * cg;
+                            let wtap = ((k * g.r + fr) * g.s + fs) * cg;
+                            for ci in 0..cg {
+                                acc += x.load(xpix + ci) * w.load(wtap + ci);
+                            }
+                        }
+                    }
+                    y[ybase + k] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// im2col + GEMM over NHWC (dense only) — layout expressed as a GEMM
+/// packing mode. The column matrix is (Ho·Wo, R·S·C) with channels
+/// innermost, so for 1×1/stride-1/no-pad problems the unfold is a
+/// straight contiguous copy of the image (the NHWC fast case the
+/// kernel-bench pack-traffic comparison pins). Each image then computes
+/// `y_n (Ho·Wo, K) = col · wᵀ` through [`gemm::gemm_into_src`]'s
+/// B-transposed packing mode — the (K, R·S·C) filter block packs
+/// directly, no materialized transpose — and the row-major result IS
+/// the NHWC output, no reshuffle.
+pub fn conv2d_fwd_im2col_nhwc(x: &[f32], w: &[f32], g: &ConvGeom)
+    -> Vec<f32> {
+    conv2d_fwd_im2col_nhwc_t(F32Src(x), F32Src(w), g, DEFAULT_TILE,
+                             &WorkspaceArena::new())
+}
+
+/// [`conv2d_fwd_im2col_nhwc`] over dtype-tagged views with an explicit
+/// blocking tile (the `-gt{i}` knob) and scratch arena.
+pub fn conv2d_fwd_im2col_nhwc_view(x: &TensorView, w: &TensorView,
+                                   g: &ConvGeom, tile: GemmTile,
+                                   arena: &WorkspaceArena)
+    -> Result<Vec<f32>> {
+    dispatch_pair!(*x, *w, |xv, wv| {
+        conv2d_fwd_im2col_nhwc_t(xv, wv, g, tile, arena)
+    })
+}
+
+fn conv2d_fwd_im2col_nhwc_t<LX: Load, LW: Load>(x: LX, w: LW, g: &ConvGeom,
+                                                tile: GemmTile,
+                                                arena: &WorkspaceArena)
+    -> Vec<f32> {
+    assert_eq!(g.g, 1, "im2col path is dense-only");
+    let (ho, wo) = g.out_hw();
+    let howo = ho * wo;
+    let rsc = g.r * g.s * g.c;
+    let mut y = vec![0f32; g.n * howo * g.k];
+    let mut col = arena.take(howo * rsc);
+    for n in 0..g.n {
+        // unfold into the (Ho·Wo, R·S·C) row-major column matrix —
+        // channel-innermost, so each valid tap writes a contiguous
+        // C-length run decoded straight from storage
+        col.fill(0.0);
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let crow = (oh * wo + ow) * rsc;
+                for fr in 0..g.r {
+                    let ih = (oh * g.u + fr * g.l) as isize - g.p as isize;
+                    if ih < 0 || ih >= g.h as isize {
+                        continue;
+                    }
+                    for fs in 0..g.s {
+                        let iw = (ow * g.v + fs * g.j) as isize - g.q as isize;
+                        if iw < 0 || iw >= g.w as isize {
+                            continue;
+                        }
+                        let xpix = ((n * g.h + ih as usize) * g.w
+                            + iw as usize) * g.c;
+                        let dst = crow + (fr * g.s + fs) * g.c;
+                        for ci in 0..g.c {
+                            col[dst + ci] = x.load(xpix + ci);
+                        }
+                    }
+                }
+            }
+        }
+        // y[n] (HoWo, K) = col (HoWo, RSC) @ w (K, RSC)ᵀ — the filter
+        // block enters through the tb packing mode at storage width
+        gemm::gemm_into_src(&mut y[n * howo * g.k..(n + 1) * howo * g.k],
+                            F32Src(&col[..]), w, howo, rsc, g.k, false,
+                            true, tile, 0, arena);
+    }
+    y
+}
+
+/// Dedicated depthwise forward convolution over NHWC (g == c, one
+/// filter slice per channel, optional channel multiplier k/g). The
+/// channel loop is innermost and blocked by `block` (the `-bk` tuning
+/// knob): for multiplier 1 both the input read and the output write are
+/// unit-stride runs — the access pattern that makes depthwise a
+/// channels-last workload everywhere.
+pub fn conv2d_fwd_depthwise_nhwc(x: &[f32], w: &[f32], g: &ConvGeom,
+                                 block: usize) -> Vec<f32> {
+    conv2d_fwd_depthwise_nhwc_t(F32Src(x), F32Src(w), g, block)
+}
+
+/// [`conv2d_fwd_depthwise_nhwc`] over dtype-tagged views.
+pub fn conv2d_fwd_depthwise_nhwc_view(x: &TensorView, w: &TensorView,
+                                      g: &ConvGeom, block: usize)
+    -> Result<Vec<f32>> {
+    dispatch_pair!(*x, *w, |xv, wv| {
+        conv2d_fwd_depthwise_nhwc_t(xv, wv, g, block)
+    })
+}
+
+fn conv2d_fwd_depthwise_nhwc_t<LX: Load, LW: Load>(x: LX, w: LW,
+                                                   g: &ConvGeom,
+                                                   block: usize)
+    -> Vec<f32> {
+    assert_eq!(g.g, g.c, "depthwise kernel requires g == c");
+    let (ho, wo) = g.out_hw();
+    let kg = g.k / g.g; // channel multiplier, 1 in the common case
+    let block = block.max(1);
+    let mut y = vec![0f32; g.n * ho * wo * g.k];
+    for n in 0..g.n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let ybase = ((n * ho + oh) * wo + ow) * g.k;
+                for kb in (0..g.k).step_by(block) {
+                    let ke = (kb + block).min(g.k);
+                    // accumulate tap-by-tap into the output run: the
+                    // inner channel loop reads x at unit stride (kk/kg
+                    // is kk for multiplier 1) and writes y contiguously
+                    for fr in 0..g.r {
+                        let ih = (oh * g.u + fr * g.l) as isize
+                            - g.p as isize;
+                        if ih < 0 || ih >= g.h as isize {
+                            continue;
+                        }
+                        for fs in 0..g.s {
+                            let iw = (ow * g.v + fs * g.j) as isize
+                                - g.q as isize;
+                            if iw < 0 || iw >= g.w as isize {
+                                continue;
+                            }
+                            let xpix = ((n * g.h + ih as usize) * g.w
+                                + iw as usize) * g.c;
+                            for kk in kb..ke {
+                                y[ybase + kk] += x.load(xpix + kk / kg)
+                                    * w.load((kk * g.r + fr) * g.s + fs);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Dedicated depthwise forward convolution over NCHW (g == c): a
+/// per-channel-plane loop with none of the grouped-direct bookkeeping —
+/// each output channel reads exactly one input plane and one R×S slice.
+pub fn conv2d_fwd_depthwise_nchw(x: &[f32], w: &[f32], g: &ConvGeom)
+    -> Vec<f32> {
+    conv2d_fwd_depthwise_nchw_t(F32Src(x), F32Src(w), g)
+}
+
+/// [`conv2d_fwd_depthwise_nchw`] over dtype-tagged views.
+pub fn conv2d_fwd_depthwise_nchw_view(x: &TensorView, w: &TensorView,
+                                      g: &ConvGeom) -> Result<Vec<f32>> {
+    dispatch_pair!(*x, *w, |xv, wv| conv2d_fwd_depthwise_nchw_t(xv, wv, g))
+}
+
+fn conv2d_fwd_depthwise_nchw_t<LX: Load, LW: Load>(x: LX, w: LW,
+                                                   g: &ConvGeom)
+    -> Vec<f32> {
+    assert_eq!(g.g, g.c, "depthwise kernel requires g == c");
+    let (ho, wo) = g.out_hw();
+    let kg = g.k / g.g;
+    let mut y = vec![0f32; g.n * g.k * ho * wo];
+    for n in 0..g.n {
+        for k in 0..g.k {
+            let c = k / kg; // the one input plane this filter sees
+            let xplane = (n * g.c + c) * g.h * g.w;
+            let wslice = k * g.r * g.s;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let mut acc = 0f32;
+                    for fr in 0..g.r {
+                        let ih = (oh * g.u + fr * g.l) as isize
+                            - g.p as isize;
+                        if ih < 0 || ih >= g.h as isize {
+                            continue;
+                        }
+                        let xrow = xplane + ih as usize * g.w;
+                        for fs in 0..g.s {
+                            let iw = (ow * g.v + fs * g.j) as isize
+                                - g.q as isize;
+                            if iw < 0 || iw >= g.w as isize {
+                                continue;
+                            }
+                            acc += x.load(xrow + iw as usize)
+                                * w.load(wslice + fr * g.s + fs);
+                        }
+                    }
+                    y[((n * g.k + k) * ho + oh) * wo + ow] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+// --- layout boundaries: transpose helpers for the fallback path -------
+
+/// Decode an NHWC image batch into a packed f32 NCHW buffer (the
+/// transpose-at-boundary entry for kernels that only speak NCHW).
+pub fn nhwc_to_nchw_image_view(x: &TensorView, n: usize, c: usize,
+                               h: usize, w: usize, out: &mut [f32]) {
+    match *x {
+        TensorView::F32(b) => nhwc_to_nchw_image_t(F32Bytes(b), n, c, h, w, out),
+        TensorView::Bf16(b) => nhwc_to_nchw_image_t(Bf16Src(b), n, c, h, w, out),
+        TensorView::F16(b) => nhwc_to_nchw_image_t(F16Src(b), n, c, h, w, out),
+        TensorView::I8(b) => nhwc_to_nchw_image_t(I8Src(b), n, c, h, w, out),
+    }
+}
+
+fn nhwc_to_nchw_image_t<L: Load>(x: L, n: usize, c: usize, h: usize,
+                                 w: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), n * c * h * w);
+    for ni in 0..n {
+        for hi in 0..h {
+            for wi in 0..w {
+                let src = ((ni * h + hi) * w + wi) * c;
+                for ci in 0..c {
+                    out[((ni * c + ci) * h + hi) * w + wi] = x.load(src + ci);
+                }
+            }
+        }
+    }
+}
+
+/// Decode a (K, R, S, C/g) NHWC filter block into packed f32 KCRS.
+pub fn krsc_to_kcrs_view(wt: &TensorView, k: usize, cg: usize, r: usize,
+                         s: usize, out: &mut [f32]) {
+    match *wt {
+        TensorView::F32(b) => krsc_to_kcrs_t(F32Bytes(b), k, cg, r, s, out),
+        TensorView::Bf16(b) => krsc_to_kcrs_t(Bf16Src(b), k, cg, r, s, out),
+        TensorView::F16(b) => krsc_to_kcrs_t(F16Src(b), k, cg, r, s, out),
+        TensorView::I8(b) => krsc_to_kcrs_t(I8Src(b), k, cg, r, s, out),
+    }
+}
+
+fn krsc_to_kcrs_t<L: Load>(wt: L, k: usize, cg: usize, r: usize, s: usize,
+                           out: &mut [f32]) {
+    assert_eq!(out.len(), k * cg * r * s);
+    for ki in 0..k {
+        for ri in 0..r {
+            for si in 0..s {
+                let src = ((ki * r + ri) * s + si) * cg;
+                for ci in 0..cg {
+                    out[((ki * cg + ci) * r + ri) * s + si] =
+                        wt.load(src + ci);
+                }
+            }
+        }
+    }
+}
+
+/// Shuffle a packed f32 NCHW buffer into NHWC order (the output leg of
+/// the transpose-at-boundary fallback; rounding to the storage dtype
+/// still happens once, at the caller's store boundary).
+pub fn nchw_to_nhwc_image(src: &[f32], n: usize, c: usize, h: usize,
+                          w: usize, out: &mut [f32]) {
+    assert_eq!(src.len(), n * c * h * w);
+    assert_eq!(out.len(), src.len());
+    for ni in 0..n {
+        for ci in 0..c {
+            for hi in 0..h {
+                for wi in 0..w {
+                    out[((ni * h + hi) * w + wi) * c + ci] =
+                        src[((ni * c + ci) * h + hi) * w + wi];
+                }
+            }
+        }
+    }
+}
+
+/// Shuffle a packed f32 KCRS filter block into (K, R, S, C/g) order —
+/// the output leg of the NHWC wrw fallback.
+pub fn kcrs_to_krsc(src: &[f32], k: usize, cg: usize, r: usize, s: usize,
+                    out: &mut [f32]) {
+    assert_eq!(src.len(), k * cg * r * s);
+    assert_eq!(out.len(), src.len());
+    for ki in 0..k {
+        for ci in 0..cg {
+            for ri in 0..r {
+                for si in 0..s {
+                    out[((ki * r + ri) * s + si) * cg + ci] =
+                        src[((ki * cg + ci) * r + ri) * s + si];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // GEMM helpers (row-major) — thin wrappers over the blocked engine in
 // [`super::gemm`]. The old naive quartet is gone; transpose variants are
 // packing modes, threading is panel-granularity, and no path carries the
@@ -1478,6 +1832,20 @@ pub fn bias_add(y: &[f32], bias: &[f32], n: usize, k: usize, m: usize)
     out
 }
 
+/// Per-channel bias over an NHWC buffer: channels are innermost, so the
+/// bias vector is re-read contiguously per pixel (the NHWC fused path).
+pub fn bias_add_nhwc(y: &[f32], bias: &[f32], pixels: usize, k: usize)
+    -> Vec<f32> {
+    let mut out = vec![0f32; y.len()];
+    for pi in 0..pixels {
+        let base = pi * k;
+        for ki in 0..k {
+            out[base + ki] = y[base + ki] + bias[ki];
+        }
+    }
+    out
+}
+
 pub fn op_tensor(a: &[f32], b: &[f32], op: &str) -> Vec<f32> {
     a.iter()
         .zip(b)
@@ -2006,6 +2374,129 @@ mod tests {
         rng.fill_normal_f32(&mut x);
         rng.fill_normal_f32(&mut w);
         (x, w)
+    }
+
+    /// Permute packed NCHW → NHWC (test-side layout shuffle).
+    fn to_nhwc(src: &[f32], n: usize, c: usize, h: usize, w: usize)
+        -> Vec<f32> {
+        let mut out = vec![0f32; src.len()];
+        nchw_to_nhwc_image(src, n, c, h, w, &mut out);
+        out
+    }
+
+    /// Permute a packed KCRS filter block → KRSC.
+    fn to_krsc(src: &[f32], k: usize, cg: usize, r: usize, s: usize)
+        -> Vec<f32> {
+        let mut out = vec![0f32; src.len()];
+        for ki in 0..k {
+            for ci in 0..cg {
+                for ri in 0..r {
+                    for si in 0..s {
+                        out[((ki * r + ri) * s + si) * cg + ci] =
+                            src[((ki * cg + ci) * r + ri) * s + si];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn nhwc_direct_matches_nchw_direct() {
+        // grouped, dilated, strided, padded — the full direct surface
+        for (i, g) in [
+            ConvGeom::dense(2, 3, 8, 8, 4, 3, 3, 1, 1),
+            ConvGeom::dense(1, 4, 7, 5, 2, 1, 1, 1, 0),
+            ConvGeom::dense(2, 2, 9, 9, 3, 3, 3, 2, 1),
+            ConvGeom { n: 1, c: 4, h: 8, w: 8, k: 8, r: 3, s: 3, u: 1,
+                       v: 1, p: 2, q: 2, l: 2, j: 2, g: 2 },
+        ]
+        .iter()
+        .enumerate()
+        {
+            let (ho, wo) = g.out_hw();
+            let (x, w) = rand_conv(g, 90 + i as u64);
+            let y_nchw = conv2d_fwd(&x, &w, g);
+            let xl = to_nhwc(&x, g.n, g.c, g.h, g.w);
+            let wl = to_krsc(&w, g.k, g.c / g.g, g.r, g.s);
+            let y_nhwc = conv2d_fwd_nhwc(&xl, &wl, g);
+            rel_close(&to_nhwc(&y_nchw, g.n, g.k, ho, wo), &y_nhwc, 1e-5,
+                      &format!("nhwc direct #{i}"));
+        }
+    }
+
+    #[test]
+    fn nhwc_im2col_matches_nhwc_direct() {
+        for (i, g) in [
+            ConvGeom::dense(2, 3, 8, 8, 4, 3, 3, 1, 1),
+            ConvGeom::dense(2, 8, 6, 6, 8, 1, 1, 1, 0), // the memcpy case
+            ConvGeom::dense(1, 5, 9, 7, 3, 3, 3, 2, 1),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let (x, w) = rand_conv(g, 70 + i as u64);
+            let xl = to_nhwc(&x, g.n, g.c, g.h, g.w);
+            let wl = to_krsc(&w, g.k, g.c, g.r, g.s);
+            rel_close(&conv2d_fwd_im2col_nhwc(&xl, &wl, g),
+                      &conv2d_fwd_nhwc(&xl, &wl, g), 1e-5,
+                      &format!("nhwc im2col #{i}"));
+        }
+    }
+
+    #[test]
+    fn depthwise_kernels_match_grouped_direct() {
+        // g == c: the dedicated kernels must agree with the grouped
+        // fallback in both layouts, across channel blocks
+        let g = ConvGeom { n: 2, c: 8, h: 9, w: 9, k: 8, r: 3, s: 3,
+                           u: 1, v: 1, p: 1, q: 1, l: 1, j: 1, g: 8 };
+        let (ho, wo) = g.out_hw();
+        let (x, w) = rand_conv(&g, 41);
+        let oracle = conv2d_fwd(&x, &w, &g);
+        rel_close(&conv2d_fwd_depthwise_nchw(&x, &w, &g), &oracle, 1e-6,
+                  "depthwise nchw");
+        let xl = to_nhwc(&x, g.n, g.c, g.h, g.w);
+        // cg == 1, so KCRS == KRSC for depthwise filters
+        let oracle_l = to_nhwc(&oracle, g.n, g.k, ho, wo);
+        for block in [1, 4, 8, 32] {
+            rel_close(&conv2d_fwd_depthwise_nhwc(&xl, &w, &g, block),
+                      &oracle_l, 1e-6, &format!("depthwise nhwc bk{block}"));
+        }
+        // channel multiplier (k = 2c) stays correct
+        let gm = ConvGeom { k: 16, ..g };
+        let (x2, w2) = rand_conv(&gm, 42);
+        let (ho2, wo2) = gm.out_hw();
+        rel_close(&conv2d_fwd_depthwise_nchw(&x2, &w2, &gm),
+                  &conv2d_fwd(&x2, &w2, &gm), 1e-6, "multiplier nchw");
+        rel_close(&conv2d_fwd_depthwise_nhwc(
+                      &to_nhwc(&x2, gm.n, gm.c, gm.h, gm.w), &w2, &gm, 8),
+                  &to_nhwc(&conv2d_fwd(&x2, &w2, &gm), gm.n, gm.k, ho2, wo2),
+                  1e-6, "multiplier nhwc");
+    }
+
+    #[test]
+    fn layout_transpose_helpers_roundtrip() {
+        let (n, c, h, w) = (2, 3, 4, 5);
+        let mut rng = crate::util::rng::SplitMix64::new(7);
+        let mut nchw = vec![0f32; n * c * h * w];
+        rng.fill_normal_f32(&mut nchw);
+        let mut nhwc = vec![0f32; nchw.len()];
+        nchw_to_nhwc_image(&nchw, n, c, h, w, &mut nhwc);
+        let bytes: Vec<u8> =
+            nhwc.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut back = vec![0f32; nchw.len()];
+        nhwc_to_nchw_image_view(&TensorView::F32(&bytes), n, c, h, w,
+                                &mut back);
+        assert_eq!(nchw, back);
+        // filter leg: KRSC bytes decode back into the KCRS original
+        let (k, cg, r, s) = (4, 3, 3, 3);
+        let mut kcrs = vec![0f32; k * cg * r * s];
+        rng.fill_normal_f32(&mut kcrs);
+        let krsc = to_krsc(&kcrs, k, cg, r, s);
+        let wb: Vec<u8> = krsc.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut wback = vec![0f32; kcrs.len()];
+        krsc_to_kcrs_view(&TensorView::F32(&wb), k, cg, r, s, &mut wback);
+        assert_eq!(kcrs, wback);
     }
 
     #[test]

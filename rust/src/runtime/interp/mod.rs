@@ -46,8 +46,9 @@ use std::sync::{Arc, Mutex};
 use crate::descriptors::ActivationMode;
 use crate::manifest::{Artifact, TensorSpec};
 use crate::runtime::{tensor, Backend, Executable, HostTensor};
-use crate::solvers::{GEMM_TILE_PARAM, WINO_THREADS_PARAM};
-use crate::types::{algo, DType, MiopenError, Precision, ProblemSig, Result};
+use crate::solvers::{BLOCK_K_PARAM, GEMM_TILE_PARAM, WINO_THREADS_PARAM};
+use crate::types::{algo, DType, Layout, MiopenError, Precision, ProblemSig,
+                   Result};
 
 use arena::WorkspaceArena;
 use kernels as k;
@@ -348,6 +349,16 @@ fn gemm_tuned_tile(art: &Artifact) -> gemm::GemmTile {
         .unwrap_or(gemm::DEFAULT_TILE)
 }
 
+/// Tuned channel block for the depthwise NHWC kernel (`-bk{b}` variants
+/// reuse the direct solver's block_k key); defaults to 8 capped at k.
+fn depthwise_tuned_block(art: &Artifact, geom: &k::ConvGeom) -> usize {
+    art.tuning
+        .get(BLOCK_K_PARAM)
+        .copied()
+        .map(|v| v.max(1) as usize)
+        .unwrap_or_else(|| geom.k.min(8).max(1))
+}
+
 fn run_conv(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
     -> Result<Vec<HostTensor>> {
     let (psig, algo_name, _tag) = ProblemSig::parse_artifact(&art.sig)?;
@@ -367,26 +378,101 @@ fn run_conv(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
     // width. The one documented exception: i8 conv stores exact f32.
     let store = if psig.dtype == DType::I8 { DType::F32 } else { psig.dtype };
     let prec = Precision::of(store);
-    let out = match psig.direction.as_str() {
-        "fwd" => match algo_name.as_str() {
-            algo::GEMM if geom.g == 1 => k::conv2d_fwd_im2col_view(
-                &a, &b, &geom, gemm_tuned_tile(art), &st.arena)?,
-            algo::WINOGRAD => k::conv2d_fwd_winograd_view(
-                &a, &b, &geom, wino_tuned_threads(art), &st.arena)?,
-            algo::FFT => {
-                let spec = st.fft_spectrum(&inputs[1], &geom)?;
-                k::conv2d_fwd_fft_view(&a, &geom, &spec, &st.arena)
-            }
-            _ => k::conv2d_fwd_view(&a, &b, &geom)?,
+    let out = match psig.layout {
+        Layout::Nhwc => {
+            run_conv_nhwc(art, &psig, &algo_name, &a, &b, &geom, st)?
+        }
+        Layout::Nchw => match psig.direction.as_str() {
+            "fwd" => match algo_name.as_str() {
+                algo::DEPTHWISE => {
+                    k::conv2d_fwd_depthwise_nchw_view(&a, &b, &geom)?
+                }
+                algo::GEMM if geom.g == 1 => k::conv2d_fwd_im2col_view(
+                    &a, &b, &geom, gemm_tuned_tile(art), &st.arena)?,
+                algo::WINOGRAD => k::conv2d_fwd_winograd_view(
+                    &a, &b, &geom, wino_tuned_threads(art), &st.arena)?,
+                algo::FFT => {
+                    let spec = st.fft_spectrum(&inputs[1], &geom)?;
+                    k::conv2d_fwd_fft_view(&a, &geom, &spec, &st.arena)
+                }
+                _ => k::conv2d_fwd_view(&a, &b, &geom)?,
+            },
+            "bwd" => match algo_name.as_str() {
+                algo::WINOGRAD => k::conv2d_bwd_data_winograd_view(
+                    &a, &b, &geom, wino_tuned_threads(art), &st.arena)?,
+                _ => k::conv2d_bwd_data_view(&a, &b, &geom)?,
+            },
+            _ => k::conv2d_bwd_weights_view(&a, &b, &geom)?,
         },
-        "bwd" => match algo_name.as_str() {
-            algo::WINOGRAD => k::conv2d_bwd_data_winograd_view(
-                &a, &b, &geom, wino_tuned_threads(art), &st.arena)?,
-            _ => k::conv2d_bwd_data_view(&a, &b, &geom)?,
-        },
-        _ => k::conv2d_bwd_weights_view(&a, &b, &geom)?,
     };
     Ok(vec![store_tensor(&art.outputs[0], prec, &out)?])
+}
+
+/// NHWC execution. Direct, depthwise and im2col-GEMM run natively over
+/// channels-last strides (im2col packs an (HoWo, RSC) column matrix, so
+/// the GEMM output is already NHWC); winograd, FFT, and the bwd/wrw
+/// directions transpose at the boundary into the f32 NCHW kernels and
+/// shuffle the result back — the whole algorithm zoo stays servable
+/// under the new layout axis (docs/ARCHITECTURE.md, "Layout flow").
+/// Rounding to the storage dtype still happens once, at the caller's
+/// store boundary.
+#[allow(clippy::too_many_arguments)]
+fn run_conv_nhwc(art: &Artifact, psig: &ProblemSig, algo_name: &str,
+                 a: &TensorView, b: &TensorView, geom: &k::ConvGeom,
+                 st: &ExecState) -> Result<Vec<f32>> {
+    let g = geom;
+    let (ho, wo) = g.out_hw();
+    let cg = g.c / g.g;
+    if psig.direction == "fwd" {
+        match algo_name {
+            algo::DEPTHWISE => {
+                return k::conv2d_fwd_depthwise_nhwc_view(
+                    a, b, g, depthwise_tuned_block(art, g));
+            }
+            algo::GEMM if g.g == 1 => {
+                return k::conv2d_fwd_im2col_nhwc_view(
+                    a, b, g, gemm_tuned_tile(art), &st.arena);
+            }
+            algo::WINOGRAD | algo::FFT => {
+                let mut xn = vec![0.0f32; g.n * g.c * g.h * g.w];
+                let mut wn = vec![0.0f32; g.k * cg * g.r * g.s];
+                k::nhwc_to_nchw_image_view(a, g.n, g.c, g.h, g.w, &mut xn);
+                k::krsc_to_kcrs_view(b, g.k, cg, g.r, g.s, &mut wn);
+                let y = if algo_name == algo::WINOGRAD {
+                    k::conv2d_fwd_winograd_with(
+                        &xn, &wn, g, wino_tuned_threads(art), &st.arena)
+                } else {
+                    // NHWC weights cannot key the NCHW spectrum cache;
+                    // transform per call out of the arena instead
+                    let spec = k::fft_filter_spectrum(&wn, g, &st.arena);
+                    k::conv2d_fwd_fft_with(&xn, g, &spec, &st.arena)
+                };
+                let mut out = vec![0.0f32; y.len()];
+                k::nchw_to_nhwc_image(&y, g.n, g.k, ho, wo, &mut out);
+                return Ok(out);
+            }
+            _ => return k::conv2d_fwd_nhwc_view(a, b, g),
+        }
+    }
+    // bwd / wrw: transpose-at-boundary around the NCHW f32 kernels.
+    // `a` is dy (N,Ho,Wo,K); `b` is w (KRSC) for bwd, x (N,H,W,C) for wrw.
+    let mut dyn_ = vec![0.0f32; g.n * g.k * ho * wo];
+    k::nhwc_to_nchw_image_view(a, g.n, g.k, ho, wo, &mut dyn_);
+    if psig.direction == "bwd" {
+        let mut wn = vec![0.0f32; g.k * cg * g.r * g.s];
+        k::krsc_to_kcrs_view(b, g.k, cg, g.r, g.s, &mut wn);
+        let dx = k::conv2d_bwd_data(&dyn_, &wn, g);
+        let mut out = vec![0.0f32; dx.len()];
+        k::nchw_to_nhwc_image(&dx, g.n, g.c, g.h, g.w, &mut out);
+        Ok(out)
+    } else {
+        let mut xn = vec![0.0f32; g.n * g.c * g.h * g.w];
+        k::nhwc_to_nchw_image_view(b, g.n, g.c, g.h, g.w, &mut xn);
+        let dw = k::conv2d_bwd_weights(&dyn_, &xn, g);
+        let mut out = vec![0.0f32; dw.len()];
+        k::kcrs_to_krsc(&dw, g.k, cg, g.r, g.s, &mut out);
+        Ok(out)
+    }
 }
 
 /// Can the F(2×2, 3×3) pipeline execute this geometry? The mdgraph's
@@ -417,10 +503,24 @@ fn fused_conv(art: &Artifact, x: &TensorView, w: &TensorView,
     }
 }
 
+/// Is this fusion artifact an NHWC plan? The fusion sig grammar mirrors
+/// the conv one: a `-nhwc` tail after the dtype (NCHW emits nothing).
+fn fusion_is_nhwc(art: &Artifact) -> bool {
+    art.sig.ends_with("-nhwc")
+}
+
 fn run_fusion(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
     -> Result<Vec<HostTensor>> {
-    let act = parse_act(
-        art.sig.split('-').nth(1).unwrap_or("relu"), &art.sig)?;
+    // fusion sigs are `{plan}-{activation}-{params}-{dtype}`; a sig with
+    // no activation segment is a malformed artifact, not relu
+    let act_name = art.sig.split('-').nth(1).ok_or_else(|| {
+        MiopenError::Manifest(format!(
+            "malformed fusion artifact sig '{}': expected \
+             '{{plan}}-{{activation}}-...' with an activation segment",
+            art.sig
+        ))
+    })?;
+    let act = parse_act(act_name, &art.sig)?;
     let alpha = act_alpha(act);
     match art.algo.as_str() {
         "cba" => {
@@ -431,12 +531,27 @@ fn run_fusion(art: &Artifact, inputs: &[HostTensor], st: &ExecState)
             let x = TensorView::from_host(&inputs[0])?;
             let w = TensorView::from_host(&inputs[1])?;
             let bias = input_f32(&inputs[2])?;
-            let y = fused_conv(art, &x, &w, &geom, st)?;
-            let y = k::bias_add(&y, &bias, geom.n, geom.k, ho * wo);
+            let y = if fusion_is_nhwc(art) {
+                // the mdgraph only admits direct conv under NHWC, so the
+                // channels-last direct kernel covers every accepted plan
+                let y = k::conv2d_fwd_nhwc_view(&x, &w, &geom)?;
+                k::bias_add_nhwc(&y, &bias, geom.n * ho * wo, geom.k)
+            } else {
+                let y = fused_conv(art, &x, &w, &geom, st)?;
+                k::bias_add(&y, &bias, geom.n, geom.k, ho * wo)
+            };
             let y = k::act_fwd(&y, act, alpha);
             Ok(vec![out_tensor(&art.outputs[0], &y)?])
         }
         "cbna" => {
+            if fusion_is_nhwc(art) {
+                // the AOT set carries no NHWC CBNA exemplars; spatial BN
+                // over channels-last output is not wired in the interp yet
+                return Err(MiopenError::NotApplicable(format!(
+                    "interp: NHWC CBNA plan '{}' has no execution path",
+                    art.sig
+                )));
+            }
             let geom = geom_from_params(art)?;
             let (ho, wo) = geom.out_hw();
             let x = TensorView::from_host(&inputs[0])?;
@@ -606,7 +721,15 @@ fn run_ctc(art: &Artifact, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         )));
     }
     let (b, t, v) = (shape[0], shape[1], shape[2]);
-    let l = inputs[1].spec.shape.get(1).copied().unwrap_or(0);
+    // labels must be (B, L); guessing L as 0 from a mis-ranked spec
+    // would silently compute a zero-label loss
+    if inputs[1].spec.shape.len() != 2 {
+        return Err(MiopenError::ShapeMismatch(format!(
+            "{}: labels must be rank-2 (B,L), got {:?}",
+            art.sig, inputs[1].spec.shape
+        )));
+    }
+    let l = inputs[1].spec.shape[1];
     let lp = input_f32(&inputs[0])?;
     let labels = inputs[1].as_i32()?;
     let in_lens = inputs[2].as_i32()?;
@@ -749,8 +872,9 @@ mod tests {
         // sweep; the integration suites cover the full set
         let mut seen = std::collections::BTreeSet::new();
         for art in m.by_primitive("conv") {
+            let layout = ProblemSig::parse_artifact(&art.sig).unwrap().0.layout;
             let key = (art.direction.clone(), art.algo.clone(),
-                       art.dtype);
+                       art.dtype, layout);
             if !seen.insert(key) {
                 continue;
             }
@@ -782,6 +906,61 @@ mod tests {
         let y = k::bias_add(&y, &b, 4, 32, 28 * 28);
         let y = k::act_fwd(&y, ActivationMode::Relu, 0.0);
         assert_eq!(fused, y);
+    }
+
+    #[test]
+    fn nhwc_fused_cba_matches_nchw_twin() {
+        let m = Manifest::builtin();
+        let nchw_art = m
+            .require("cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32")
+            .unwrap()
+            .clone();
+        let nhwc_art = m
+            .require("cba-relu-n4c16h28w28k32r1s1u1v1p0q0l1j1g1-f32-nhwc")
+            .unwrap()
+            .clone();
+        let mut rng = SplitMix64::new(11);
+        let inputs: Vec<HostTensor> = nchw_art
+            .inputs
+            .iter()
+            .map(|spec| HostTensor::random_normal(spec, &mut rng))
+            .collect();
+        let nchw_out = execute(&nchw_art, &inputs,
+                               &ExecState::for_artifact(&nchw_art))
+            .unwrap()[0].as_f32().unwrap();
+
+        // shuffle x to channels-last and w to KRSC; bias is layout-free
+        let x = inputs[0].as_f32().unwrap();
+        let w = inputs[1].as_f32().unwrap();
+        let mut xh = vec![0.0f32; x.len()];
+        k::nchw_to_nhwc_image(&x, 4, 16, 28, 28, &mut xh);
+        let mut wh = vec![0.0f32; w.len()];
+        k::kcrs_to_krsc(&w, 32, 16, 1, 1, &mut wh);
+        let nhwc_inputs = vec![
+            HostTensor::from_f32(&nhwc_art.inputs[0].shape, &xh),
+            HostTensor::from_f32(&nhwc_art.inputs[1].shape, &wh),
+            inputs[2].clone(),
+        ];
+        let nhwc_out = execute(&nhwc_art, &nhwc_inputs,
+                               &ExecState::for_artifact(&nhwc_art))
+            .unwrap()[0].as_f32().unwrap();
+
+        let mut want = vec![0.0f32; nchw_out.len()];
+        k::nchw_to_nhwc_image(&nchw_out, 4, 32, 28, 28, &mut want);
+        for (got, exp) in nhwc_out.iter().zip(want.iter()) {
+            let tol = 1e-4 * exp.abs().max(1.0);
+            assert!((got - exp).abs() <= tol, "{got} vs {exp}");
+        }
+    }
+
+    #[test]
+    fn nhwc_cbna_plan_is_rejected() {
+        let art = Artifact::synthetic(
+            "cbna-relu-n1c4h4w4k4r1s1u1v1p0q0l1j1g1-f32-nhwc", "fusion",
+            "cbna", "fwd", vec![], vec![]);
+        let err = run_fusion(&art, &[], &ExecState::for_artifact(&art))
+            .unwrap_err();
+        assert!(err.to_string().contains("no execution path"), "{err}");
     }
 
     #[test]
@@ -860,16 +1039,135 @@ mod tests {
             let geom = k::ConvGeom::from_sig(&psig);
             let x = inputs[0].as_f32().unwrap();
             let w = inputs[1].as_f32().unwrap();
-            let oracle = match algo_name.as_str() {
-                algo::GEMM => k::conv2d_fwd_im2col(&x, &w, &geom),
-                algo::WINOGRAD => k::conv2d_fwd_winograd(&x, &w, &geom, 1),
-                algo::FFT => k::conv2d_fwd_fft(&x, &w, &geom),
-                _ => k::conv2d_fwd(&x, &w, &geom),
+            let oracle = match psig.layout {
+                // NHWC bf16: same contract, channels-last oracle
+                Layout::Nhwc => match algo_name.as_str() {
+                    algo::GEMM => k::conv2d_fwd_im2col_nhwc(&x, &w, &geom),
+                    _ => k::conv2d_fwd_nhwc(&x, &w, &geom),
+                },
+                Layout::Nchw => match algo_name.as_str() {
+                    algo::GEMM => k::conv2d_fwd_im2col(&x, &w, &geom),
+                    algo::WINOGRAD => k::conv2d_fwd_winograd(&x, &w, &geom, 1),
+                    algo::FFT => k::conv2d_fwd_fft(&x, &w, &geom),
+                    _ => k::conv2d_fwd(&x, &w, &geom),
+                },
             };
             let oracle_t = out_tensor(&a.outputs[0], &oracle).unwrap();
             assert_eq!(got[0].data, oracle_t.data,
                        "{}: bf16 path diverged from rounding oracle",
                        a.sig);
+        }
+    }
+
+    #[test]
+    fn malformed_fusion_sig_is_an_error_not_relu() {
+        // regression: the act segment used to default to "relu" when
+        // missing, silently executing the wrong fusion plan
+        let art = Artifact::synthetic(
+            "cba", "fusion", "cba", "fwd",
+            vec![TensorSpec { shape: vec![1], dtype: DType::F32 }],
+            vec![TensorSpec { shape: vec![1], dtype: DType::F32 }]);
+        let x = HostTensor::from_f32(&[1], &[0.0]);
+        let err = execute(&art, &[x], &ExecState::for_artifact(&art))
+            .unwrap_err();
+        assert!(err.to_string().contains("malformed fusion artifact sig"),
+                "{err}");
+        assert!(err.to_string().contains("cba"), "{err}");
+    }
+
+    #[test]
+    fn ctc_misranked_labels_rejected() {
+        // regression: a rank-1 labels tensor used to read L as 0 and
+        // return a silently zero-label loss
+        let m = Manifest::builtin();
+        let art = m.require("ctc_loss-b4t8v6l3-f32").unwrap().clone();
+        let mut rng = SplitMix64::new(7);
+        let mut inputs: Vec<HostTensor> = art
+            .inputs
+            .iter()
+            .map(|spec| HostTensor::random_normal(spec, &mut rng))
+            .collect();
+        inputs[1] = HostTensor {
+            spec: TensorSpec { shape: vec![12], dtype: DType::I32 },
+            data: inputs[1].data.clone(),
+        };
+        let err = execute(&art, &inputs, &ExecState::for_artifact(&art))
+            .unwrap_err();
+        assert!(err.to_string().contains("labels must be rank-2"), "{err}");
+        assert!(err.to_string().contains("[12]"), "{err}");
+    }
+
+    #[test]
+    fn nhwc_artifacts_match_nchw_twins() {
+        // layout parity at the executor level: every NHWC conv artifact
+        // must produce the same numbers (modulo axis shuffle) as its
+        // NCHW twin — native-NHWC and transpose-at-boundary paths alike
+        let m = Manifest::builtin();
+        for a in m.by_primitive("conv") {
+            let (psig, _, tag) = ProblemSig::parse_artifact(&a.sig).unwrap();
+            if psig.layout != Layout::Nhwc || a.dtype != DType::F32
+                || tag.is_some() {
+                continue;
+            }
+            let twin_sig = a.sig.replace("-nhwc", "");
+            // depthwise NCHW twins exist; other NHWC exemplars all have
+            // an identically-shaped NCHW artifact in the builtin set
+            let twin = m.require(&twin_sig).unwrap();
+            let geom =
+                k::ConvGeom::from_sig(&psig);
+            let mut rng = SplitMix64::new(23);
+            let nchw_inputs: Vec<HostTensor> = twin
+                .inputs
+                .iter()
+                .map(|spec| HostTensor::random_normal(spec, &mut rng))
+                .collect();
+            // build the NHWC inputs as transposes of the same values
+            let (ho, wo) = geom.out_hw();
+            let cg = geom.c / geom.g;
+            let shuffle = |t: &HostTensor, spec: &TensorSpec| -> HostTensor {
+                let v = t.as_f32().unwrap();
+                let mut out = vec![0.0f32; v.len()];
+                match t.spec.shape.len() {
+                    4 if t.spec.shape[1] == geom.c
+                        && t.spec.shape[0] == geom.n
+                        && t.spec.shape[2] == geom.h =>
+                        k::nchw_to_nhwc_image(&v, geom.n, geom.c, geom.h,
+                                              geom.w, &mut out),
+                    4 if t.spec.shape[0] == geom.k
+                        && t.spec.shape[1] == cg =>
+                        k::kcrs_to_krsc(&v, geom.k, cg, geom.r, geom.s,
+                                        &mut out),
+                    _ => k::nchw_to_nhwc_image(&v, geom.n, geom.k, ho, wo,
+                                               &mut out),
+                }
+                HostTensor::from_f32(&spec.shape, &out)
+            };
+            let nhwc_inputs: Vec<HostTensor> = nchw_inputs
+                .iter()
+                .zip(&a.inputs)
+                .map(|(t, spec)| shuffle(t, spec))
+                .collect();
+            let got = execute(a, &nhwc_inputs, &ExecState::for_artifact(a))
+                .unwrap()[0].as_f32().unwrap();
+            let want_nchw =
+                execute(twin, &nchw_inputs,
+                        &ExecState::for_artifact(twin))
+                    .unwrap()[0].as_f32().unwrap();
+            // shuffle the NCHW result into NHWC order for comparison
+            let mut want = vec![0.0f32; want_nchw.len()];
+            match a.direction.as_str() {
+                "fwd" => k::nchw_to_nhwc_image(&want_nchw, geom.n, geom.k,
+                                               ho, wo, &mut want),
+                "bwd" => k::nchw_to_nhwc_image(&want_nchw, geom.n, geom.c,
+                                               geom.h, geom.w, &mut want),
+                _ => k::kcrs_to_krsc(&want_nchw, geom.k, cg, geom.r,
+                                     geom.s, &mut want),
+            }
+            for (i, (gv, wv)) in got.iter().zip(&want).enumerate() {
+                let tol = 1e-4 * wv.abs().max(1.0);
+                assert!((gv - wv).abs() <= tol,
+                        "{}[{i}]: {gv} vs {wv}", a.sig);
+            }
         }
     }
 

@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 
 use crate::perfmodel::GcnModel;
 use crate::runtime::interp::gemm;
-use crate::types::{algo, DType, ProblemSig, TuneTag};
+use crate::types::{algo, DType, Layout, ProblemSig, TuneTag};
 
 /// Storage dtypes the mixed-precision float kernels execute: f32 plus
 /// the 2-byte formats that decode at the load/pack boundary and
@@ -29,6 +29,18 @@ use crate::types::{algo, DType, ProblemSig, TuneTag};
 /// solver only (exact f32 accumulation, f32 output).
 fn float_exec_dtype(d: DType) -> bool {
     matches!(d, DType::F32 | DType::Bf16 | DType::F16)
+}
+
+/// Scratch bytes for the transpose-at-boundary NHWC path: the executing
+/// backend materializes f32 NCHW copies of x, w, and y around a kernel
+/// that only speaks NCHW (winograd/FFT, and the NHWC bwd/wrw
+/// directions). All three live in the accumulate domain (4 B/elem).
+fn nhwc_transpose_scratch(sig: &ProblemSig) -> u64 {
+    let (ho, wo) = sig.out_hw();
+    let x = sig.n * sig.c * sig.h * sig.w;
+    let w = sig.k * (sig.c / sig.g) * sig.r * sig.s;
+    let y = sig.n * sig.k * ho * wo;
+    (x + w + y) as u64 * DType::F32.size_bytes() as u64
 }
 
 /// One point of a solver's tuning grid: parameter name → value (§III-B).
@@ -95,24 +107,39 @@ impl Solver for GemmSolver {
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
         // grouped conv goes through direct; the engine's float pipeline
-        // takes f32 plus the 2-byte formats it decodes at pack time
-        sig.g == 1 && float_exec_dtype(sig.dtype)
+        // takes f32 plus the 2-byte formats it decodes at pack time.
+        // NHWC runs natively as a GEMM packing mode — but only the fwd
+        // im2col kernel exists, so the bwd/wrw zoo stays NCHW-only.
+        let layout_ok = match sig.layout {
+            Layout::Nchw => true,
+            Layout::Nhwc => sig.direction == "fwd",
+        };
+        layout_ok && sig.g == 1 && float_exec_dtype(sig.dtype)
     }
 
     fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
         // arena-aware accounting for the executing blocked engine: the
-        // per-image im2col column matrix plus the engine's packed A
-        // (weights, MR-strip padded) and packed B (the column matrix,
-        // NR-strip padded) panels. Per-image buffers are reused across
-        // the batch by the workspace arena, so N does not multiply in.
-        // All of them are **f32 accumulate-domain** buffers regardless
-        // of the storage dtype — bf16/f16 operands decode into these
-        // panels at pack time, they are never stored reduced.
+        // per-image im2col column matrix plus the engine's packed A and
+        // packed B panels (MR/NR strip padded). Per-image buffers are
+        // reused across the batch by the workspace arena, so N does not
+        // multiply in. All of them are **f32 accumulate-domain** buffers
+        // regardless of the storage dtype — bf16/f16 operands decode
+        // into these panels at pack time, they are never stored reduced.
+        //
+        // NCHW computes y(K, HoWo) = w(K, CRS) · col(CRS, HoWo): A is
+        // the K-row weight matrix, B the column matrix. NHWC computes
+        // y(HoWo, K) = col(HoWo, CRS) · w(K, CRS)ᵀ — the channels-last
+        // column matrix is A (HoWo rows) and the weights pack as B via
+        // the transpose packing mode, so the strip padding swaps roles.
         let (ho, wo) = sig.out_hw();
         let howo = ho * wo;
         let crs = sig.c * sig.r * sig.s;
-        let pa = sig.k.div_ceil(gemm::MR) * gemm::MR * crs;
-        let pb = howo.div_ceil(gemm::NR) * gemm::NR * crs;
+        let (m, n) = match sig.layout {
+            Layout::Nchw => (sig.k, howo),
+            Layout::Nhwc => (howo, sig.k),
+        };
+        let pa = m.div_ceil(gemm::MR) * gemm::MR * crs;
+        let pb = n.div_ceil(gemm::NR) * gemm::NR * crs;
         (crs * howo + pa + pb) as u64 * DType::F32.size_bytes() as u64
     }
 
@@ -148,14 +175,23 @@ impl Solver for DirectSolver {
     }
 
     fn is_applicable(&self, sig: &ProblemSig) -> bool {
-        // the direct kernels cover every variant incl. grouped, and all
-        // four executable storage dtypes (f32/bf16/f16 mixed-precision
-        // plus exact-i8-in/f32-out inference)
+        // the direct kernels cover every variant incl. grouped, both
+        // layouts, and all four executable storage dtypes (f32/bf16/f16
+        // mixed-precision plus exact-i8-in/f32-out inference). NHWC fwd
+        // runs natively over channels-last strides; NHWC bwd/wrw go
+        // through the transpose-at-boundary fallback.
         float_exec_dtype(sig.dtype) || sig.dtype == DType::I8
     }
 
-    fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
-        0
+    fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
+        // fwd is workspace-free in both layouts (the NHWC kernel walks
+        // channels-last strides directly); NHWC bwd/wrw transpose at the
+        // boundary and account for the f32 NCHW copies honestly.
+        if sig.layout == Layout::Nhwc && sig.direction != "fwd" {
+            nhwc_transpose_scratch(sig)
+        } else {
+            0
+        }
     }
 
     fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
@@ -213,7 +249,14 @@ impl Solver for WinogradSolver {
             "bwd" => sig.p <= 2 && sig.q <= 2,
             _ => false,
         };
+        // NHWC is served through the transpose-at-boundary fallback,
+        // fwd only (the adjoint bwd pipeline stays NCHW-native).
+        let layout_ok = match sig.layout {
+            Layout::Nchw => true,
+            Layout::Nhwc => sig.direction == "fwd",
+        };
         dir_ok
+            && layout_ok
             && float_exec_dtype(sig.dtype)
             && sig.r == 3
             && sig.s == 3
@@ -232,13 +275,18 @@ impl Solver for WinogradSolver {
         // and report zero; our reference executor materializes them.)
         // The transform domain is always f32 — bf16/f16 storage decodes
         // into it tap-by-tap, so the buffers are 4 B/element for every
-        // storage dtype.
+        // storage dtype. NHWC adds the transpose-at-boundary copies.
         let (ho, wo) = sig.out_hw();
         let (eh, ew) =
             if sig.direction == "bwd" { (sig.h, sig.w) } else { (ho, wo) };
         let t = (eh.div_ceil(2) * ew.div_ceil(2)) as u64;
         let (k, c) = (sig.k as u64, (sig.c / sig.g) as u64);
-        16 * (k * c + c * t + k * t) * DType::F32.size_bytes() as u64
+        let base = 16 * (k * c + c * t + k * t)
+            * DType::F32.size_bytes() as u64;
+        match sig.layout {
+            Layout::Nchw => base,
+            Layout::Nhwc => base + nhwc_transpose_scratch(sig),
+        }
     }
 
     fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
@@ -298,10 +346,65 @@ impl Solver for FftSolver {
 
     fn workspace_bytes(&self, sig: &ProblemSig) -> u64 {
         // complex-f32 spectra: X̂ (N·C planes), Ŵ (K·C), Ŷ (N·K), each
-        // fh×fw — the honest footprint of the interp radix-2 pipeline
+        // fh×fw — the honest footprint of the interp radix-2 pipeline.
+        // NHWC adds the transpose-at-boundary copies (the FFT planes
+        // are inherently channel-planar, so NHWC always transposes).
         let (fh, fw) = Self::fft_extents(sig);
-        8 * fh * fw
-            * (sig.n * sig.c + sig.k * sig.c + sig.n * sig.k) as u64
+        let base = 8 * fh * fw
+            * (sig.n * sig.c + sig.k * sig.c + sig.n * sig.k) as u64;
+        match sig.layout {
+            Layout::Nchw => base,
+            Layout::Nhwc => base + nhwc_transpose_scratch(sig),
+        }
+    }
+}
+
+/// Dedicated depthwise convolution (g == c): one filter slice per
+/// channel, no cross-channel reduction. The grouped-direct path remains
+/// the fallback; this solver's kernel makes the channel axis the
+/// innermost loop, which over NHWC strides is the natural unit-stride
+/// vector axis (the reason depthwise favors channels-last everywhere).
+pub struct DepthwiseSolver;
+
+impl DepthwiseSolver {
+    /// Channel-block candidates for the tuning grid (mirrored by the
+    /// artifact emitters in configs.rs / aot.py).
+    pub const BLOCK_GRID: [usize; 4] = [4, 8, 16, 32];
+}
+
+impl Solver for DepthwiseSolver {
+    fn name(&self) -> &'static str {
+        algo::DEPTHWISE
+    }
+
+    fn is_applicable(&self, sig: &ProblemSig) -> bool {
+        // depthwise proper: every input channel is its own group
+        // (channel multipliers keep k % g == 0 by construction). Forward
+        // only — bwd/wrw stay on the grouped-direct fallback — float
+        // dtypes, both layouts (NHWC is the fast path, NCHW runs a
+        // per-channel-plane loop).
+        sig.direction == "fwd"
+            && sig.g == sig.c
+            && sig.g > 1
+            && float_exec_dtype(sig.dtype)
+    }
+
+    fn workspace_bytes(&self, _sig: &ProblemSig) -> u64 {
+        0 // both layout kernels walk the tensors in place
+    }
+
+    fn tuning_grid(&self, sig: &ProblemSig) -> Vec<TuningParams> {
+        // channel-block candidates (the NHWC kernel's inner-loop tile),
+        // pruned to the problem's channel count; reuses the direct
+        // solver's `block_k` perf-db key / `-bk` suffix so the tuning
+        // grammar stays closed.
+        Self::BLOCK_GRID
+            .iter()
+            .filter(|&&b| b <= sig.c.max(4))
+            .map(|&b| {
+                TuningParams::from([(BLOCK_K_PARAM.to_string(), b as i64)])
+            })
+            .collect()
     }
 }
 
@@ -309,6 +412,7 @@ impl Solver for FftSolver {
 /// as in MIOpen's solver list).
 pub fn registry() -> Vec<Box<dyn Solver>> {
     vec![
+        Box::new(DepthwiseSolver),
         Box::new(WinogradSolver),
         Box::new(DirectSolver),
         Box::new(ImplicitGemmSolver),
@@ -347,7 +451,12 @@ mod tests {
             n: 4, c: 16, h: 28, w: 28, k: 32, r, s: r,
             u: stride, v: stride, p: 1, q: 1, l: dil, j: dil, g,
             dtype: DType::F32,
+            layout: Layout::Nchw,
         }
+    }
+
+    fn nhwc(s: &ProblemSig) -> ProblemSig {
+        ProblemSig { layout: Layout::Nhwc, ..s.clone() }
     }
 
     #[test]
@@ -377,11 +486,41 @@ mod tests {
         assert_eq!(names(&deep_pad), vec!["direct", "gemm"]);
         // wrw: direct + gemm
         assert_eq!(names(&sig("wrw", 3, 1, 1, 1)), vec!["direct", "gemm"]);
-        // grouped: only direct
+        // grouped (g != c): only direct
         assert_eq!(names(&sig("fwd", 3, 1, 1, 4)), vec!["direct"]);
+        // depthwise (g == c): the dedicated solver leads, direct falls back
+        let mut dw = sig("fwd", 3, 1, 1, 16);
+        dw.k = 16;
+        assert_eq!(names(&dw), vec!["depthwise", "direct"]);
+        // depthwise bwd stays on the grouped-direct fallback
+        let mut dw_bwd = dw.clone();
+        dw_bwd.direction = "bwd".into();
+        assert_eq!(names(&dw_bwd), vec!["direct"]);
         // dilated 3x3: no winograd/fft
         assert_eq!(names(&sig("fwd", 3, 1, 2, 1)),
                    vec!["direct", "implicit", "gemm"]);
+    }
+
+    #[test]
+    fn layout_applicability_matrix() {
+        let names = |s: &ProblemSig| {
+            applicable(s).iter().map(|x| x.name().to_string())
+                .collect::<Vec<_>>()
+        };
+        // NHWC fwd keeps the whole zoo (winograd/fft via the
+        // transpose-at-boundary fallback)
+        assert_eq!(names(&nhwc(&sig("fwd", 3, 1, 1, 1))),
+                   vec!["winograd", "direct", "implicit", "gemm"]);
+        assert_eq!(names(&nhwc(&sig("fwd", 5, 1, 1, 1))),
+                   vec!["direct", "implicit", "fft", "gemm"]);
+        // NHWC bwd/wrw: only direct serves (transposing at the boundary);
+        // the gemm/winograd bwd kernels are NCHW-native
+        assert_eq!(names(&nhwc(&sig("bwd", 3, 1, 1, 1))), vec!["direct"]);
+        assert_eq!(names(&nhwc(&sig("wrw", 3, 1, 1, 1))), vec!["direct"]);
+        // NHWC depthwise: the channel-innermost fast path leads
+        let mut dw = sig("fwd", 3, 1, 1, 16);
+        dw.k = 16;
+        assert_eq!(names(&nhwc(&dw)), vec!["depthwise", "direct"]);
     }
 
     #[test]
@@ -413,6 +552,53 @@ mod tests {
         assert_eq!(workspace_for("winograd", &p),
                    WinogradSolver.workspace_bytes(&p));
         assert_eq!(workspace_for("nosuch", &p), 0);
+    }
+
+    #[test]
+    fn layout_workspace_reporting() {
+        let p = sig("fwd", 3, 1, 1, 1);
+        let pn = nhwc(&p);
+        // NHWC gemm swaps the packed-panel roles: A packs HoWo rows, B
+        // packs the K weight columns via the transpose packing mode
+        let (ho, wo) = p.out_hw();
+        let (howo, crs) = (ho * wo, 16 * 9);
+        let pa = howo.div_ceil(gemm::MR) * gemm::MR * crs;
+        let pb = 32usize.div_ceil(gemm::NR) * gemm::NR * crs;
+        assert_eq!(GemmSolver.workspace_bytes(&pn),
+                   ((crs * howo + pa + pb) * 4) as u64);
+        // native NHWC fwd direct/depthwise are workspace-free
+        assert_eq!(DirectSolver.workspace_bytes(&pn), 0);
+        let mut dw = nhwc(&sig("fwd", 3, 1, 1, 16));
+        dw.k = 16;
+        assert_eq!(DepthwiseSolver.workspace_bytes(&dw), 0);
+        // transpose-at-boundary paths report x+w+y f32 copies on top
+        let scratch = nhwc_transpose_scratch(&pn);
+        assert_eq!(scratch, ((4 * 16 * 28 * 28) + (32 * 16 * 9)
+                             + (4 * 32 * ho * wo)) as u64 * 4);
+        assert_eq!(WinogradSolver.workspace_bytes(&pn),
+                   WinogradSolver.workspace_bytes(&p) + scratch);
+        let f = nhwc(&sig("fwd", 5, 1, 1, 1));
+        assert_eq!(FftSolver.workspace_bytes(&f),
+                   FftSolver.workspace_bytes(&sig("fwd", 5, 1, 1, 1))
+                       + nhwc_transpose_scratch(&f));
+        let wrw = nhwc(&sig("wrw", 3, 1, 1, 1));
+        assert_eq!(DirectSolver.workspace_bytes(&wrw),
+                   nhwc_transpose_scratch(&wrw));
+    }
+
+    #[test]
+    fn depthwise_tuning_grid_and_sig() {
+        let mut dw = sig("fwd", 3, 1, 1, 16);
+        dw.k = 16;
+        let grid = DepthwiseSolver.tuning_grid(&dw);
+        assert_eq!(grid.len(), 3); // block 4, 8, 16 of c=16
+        let tp = TuningParams::from([(BLOCK_K_PARAM.to_string(), 8i64)]);
+        assert!(DepthwiseSolver.artifact_sig(&dw, Some(&tp))
+            .ends_with("-bk8"));
+        assert_eq!(
+            DepthwiseSolver.artifact_sig(&dw, None),
+            "conv_fwd-depthwise-n4c16h28w28k16r3s3u1v1p1q1l1j1g16-f32"
+        );
     }
 
     #[test]

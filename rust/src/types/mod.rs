@@ -24,10 +24,58 @@ pub mod algo {
     pub const WINOGRAD: &str = "winograd";
     /// FFT convolution (frequency-domain pointwise product).
     pub const FFT: &str = "fft";
+    /// Dedicated depthwise convolution (g == c, one filter per channel).
+    pub const DEPTHWISE: &str = "depthwise";
     /// Sentinel for fusion plans that carry no convolution ("NA" plans).
     pub const NONE: &str = "-";
-    /// All executable conv algorithms, registry order.
-    pub const ALL: [&str; 5] = [WINOGRAD, DIRECT, IMPLICIT, FFT, GEMM];
+    /// All executable conv algorithms, registry order. Depthwise leads
+    /// so it wins the tie-break over the grouped-direct fallback on the
+    /// problems it exists for (g == c).
+    pub const ALL: [&str; 6] =
+        [DEPTHWISE, WINOGRAD, DIRECT, IMPLICIT, FFT, GEMM];
+}
+
+/// Image-tensor memory layout (`miopenTensorLayout_t` analog).
+///
+/// Dims are *always* stored in logical NCHW order (n, c, h, w) — layout
+/// changes the strides, never the dim order, so every shape-level
+/// consumer (`dims()`, geometry, workspace formulas) is layout-agnostic
+/// and only the load/store address math differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Layout {
+    /// Channels-first, the historical default (batch, channel, row, col).
+    #[default]
+    Nchw,
+    /// Channels-last (batch, row, col, channel) — channel is the
+    /// innermost (unit-stride) axis.
+    Nhwc,
+}
+
+impl Layout {
+    /// Canonical name used in artifact signatures and db keys. NCHW is
+    /// the legacy default and is *omitted* from signatures; only "nhwc"
+    /// ever appears on the wire.
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::Nchw => "nchw",
+            Layout::Nhwc => "nhwc",
+        }
+    }
+
+    /// Inverse of [`Layout::name`]; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s {
+            "nchw" => Some(Layout::Nchw),
+            "nhwc" => Some(Layout::Nhwc),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// Data types supported by the library (paper §I: "MIOpen supports four
@@ -147,29 +195,54 @@ impl Precision {
     }
 }
 
-/// N-d tensor descriptor (`miopenTensorDescriptor_t` analog). MIOpen's
-/// default and our only layout is NCHW; strides are derivable but kept
-/// explicit to support the `miopenSetTensorDescriptor` contract.
+/// N-d tensor descriptor (`miopenTensorDescriptor_t` analog). Layout is
+/// a first-class axis: dims are always kept in logical NCHW order and
+/// the layout picks the strides, so NHWC descriptors differ only in
+/// address math. Strides stay explicit to support the
+/// `miopenSetTensorDescriptor` contract.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct TensorDesc {
-    /// Dimension sizes, outermost first (N, C, H, W for rank 4).
+    /// Dimension sizes in logical order (N, C, H, W for rank 4) —
+    /// independent of layout.
     pub dims: Vec<usize>,
-    /// Element strides per dimension (packed row-major by default).
+    /// Element strides per dimension (layout-derived by default).
     pub strides: Vec<usize>,
     /// Element data type.
     pub dtype: DType,
+    /// Memory layout the strides encode.
+    pub layout: Layout,
 }
 
 impl TensorDesc {
-    /// Packed (row-major) descriptor over `dims`.
+    /// Packed (row-major / NCHW) descriptor over `dims`.
     pub fn new(dims: Vec<usize>, dtype: DType) -> Self {
         let strides = packed_strides(&dims);
-        Self { dims, strides, dtype }
+        Self { dims, strides, dtype, layout: Layout::Nchw }
     }
 
-    /// Rank-4 NCHW descriptor (the library's canonical layout).
+    /// Rank-4 NCHW descriptor (the legacy-default layout).
     pub fn nchw(n: usize, c: usize, h: usize, w: usize, dtype: DType) -> Self {
         Self::new(vec![n, c, h, w], dtype)
+    }
+
+    /// Rank-4 NHWC (channels-last) descriptor. Dims stay in logical
+    /// NCHW order; only the strides put the channel axis innermost.
+    pub fn nhwc(n: usize, c: usize, h: usize, w: usize, dtype: DType) -> Self {
+        Self {
+            strides: nhwc_strides(&[n, c, h, w]),
+            dims: vec![n, c, h, w],
+            dtype,
+            layout: Layout::Nhwc,
+        }
+    }
+
+    /// Rank-4 descriptor in the given layout.
+    pub fn image(layout: Layout, n: usize, c: usize, h: usize, w: usize,
+                 dtype: DType) -> Self {
+        match layout {
+            Layout::Nchw => Self::nchw(n, c, h, w, dtype),
+            Layout::Nhwc => Self::nhwc(n, c, h, w, dtype),
+        }
     }
 
     /// Rank-1 descriptor (bias/scale vectors).
@@ -192,20 +265,25 @@ impl TensorDesc {
         self.elem_count() * self.dtype.size_bytes()
     }
 
-    /// (N, C, H, W) accessor; errors if not rank 4.
-    pub fn nchw_dims(&self) -> Result<(usize, usize, usize, usize)> {
+    /// Logical (N, C, H, W) accessor, layout-agnostic (dims are always
+    /// stored in logical order); errors if not rank 4.
+    pub fn dims(&self) -> Result<(usize, usize, usize, usize)> {
         if self.dims.len() != 4 {
             return Err(MiopenError::BadDescriptor(format!(
-                "expected rank-4 NCHW tensor, got rank {}",
+                "expected rank-4 image tensor, got rank {}",
                 self.dims.len()
             )));
         }
         Ok((self.dims[0], self.dims[1], self.dims[2], self.dims[3]))
     }
 
-    /// True when the strides are the packed row-major layout.
+    /// True when the strides are the dense strides of the descriptor's
+    /// own layout (no padding/aliasing between elements).
     pub fn is_packed(&self) -> bool {
-        self.strides == packed_strides(&self.dims)
+        match self.layout {
+            Layout::Nchw => self.strides == packed_strides(&self.dims),
+            Layout::Nhwc => self.strides == nhwc_strides(&self.dims),
+        }
     }
 }
 
@@ -216,6 +294,15 @@ pub fn packed_strides(dims: &[usize]) -> Vec<usize> {
         strides[i] = strides[i + 1] * dims[i + 1];
     }
     strides
+}
+
+/// Dense NHWC (channels-last) strides for logical-NCHW-ordered rank-4
+/// dims `[n, c, h, w]`: element (n, c, h, w) lives at
+/// `n·hwc + h·wc + w·c + c`.
+pub fn nhwc_strides(dims: &[usize]) -> Vec<usize> {
+    assert_eq!(dims.len(), 4, "nhwc strides need rank-4 dims");
+    let (c, h, w) = (dims[1], dims[2], dims[3]);
+    vec![h * w * c, 1, w * c, c]
 }
 
 /// Library error type (`miopenStatus_t` analog). Display/Error are
@@ -310,13 +397,41 @@ mod tests {
         assert_eq!(t.elem_count(), 120);
         assert_eq!(t.size_bytes(), 480);
         assert!(t.is_packed());
-        assert_eq!(t.nchw_dims().unwrap(), (2, 3, 4, 5));
+        assert_eq!(t.layout, Layout::Nchw);
+        assert_eq!(t.dims().unwrap(), (2, 3, 4, 5));
     }
 
     #[test]
-    fn nchw_dims_rejects_wrong_rank() {
+    fn nhwc_desc_shares_dims_differs_in_strides() {
+        let t = TensorDesc::nhwc(2, 3, 4, 5, DType::F32);
+        // logical dims identical to NCHW — only the address math moves
+        assert_eq!(t.dims().unwrap(), (2, 3, 4, 5));
+        assert_eq!(t.elem_count(), 120);
+        assert_eq!(t.layout, Layout::Nhwc);
+        assert_eq!(t.strides, vec![4 * 5 * 3, 1, 5 * 3, 3]);
+        assert!(t.is_packed());
+        // a channels-last stride set is not packed under NCHW rules
+        let mut as_nchw = t.clone();
+        as_nchw.layout = Layout::Nchw;
+        assert!(!as_nchw.is_packed());
+        assert_eq!(TensorDesc::image(Layout::Nhwc, 2, 3, 4, 5, DType::F32), t);
+        assert_eq!(TensorDesc::image(Layout::Nchw, 2, 3, 4, 5, DType::F32),
+                   TensorDesc::nchw(2, 3, 4, 5, DType::F32));
+    }
+
+    #[test]
+    fn dims_rejects_wrong_rank() {
         let t = TensorDesc::vec(8, DType::F32);
-        assert!(t.nchw_dims().is_err());
+        assert!(t.dims().is_err());
+    }
+
+    #[test]
+    fn layout_roundtrip() {
+        for l in [Layout::Nchw, Layout::Nhwc] {
+            assert_eq!(Layout::parse(l.name()), Some(l));
+        }
+        assert_eq!(Layout::parse("chwn"), None);
+        assert_eq!(Layout::default(), Layout::Nchw);
     }
 
     #[test]

@@ -4,19 +4,23 @@
 //! Grammar (mirrors `ConvConfig.sig_params` in python/compile/configs.py):
 //!
 //! ```text
-//! conv_{dir}-{algo}-n{N}c{C}h{H}w{W}k{K}r{R}s{S}u{U}v{V}p{P}q{Q}l{L}j{J}g{G}-{dtype}[-bk{BK}|-wt{WT}]
+//! conv_{dir}-{algo}-n{N}c{C}h{H}w{W}k{K}r{R}s{S}u{U}v{V}p{P}q{Q}l{L}j{J}g{G}-{dtype}[-nhwc][-bk{BK}|-wt{WT}|-gt{GT}]
 //! ```
 //!
 //! `dir ∈ {fwd, bwd, wrw}` following MIOpen's naming (forward,
-//! backward-data, backward-weights). The optional tuning suffix is typed
-//! ([`TuneTag`]): `-bk{BK}` names a direct-solver output-channel tile,
-//! `-wt{WT}` a winograd transform-domain parallelism variant, `-gt{GT}`
-//! a blocked-GEMM `MC×NC` tile-grid index — unknown suffixes are parse
-//! errors, not silently-dropped strings. The perf-db
-//! keys on everything except the algo/tuning suffix; the exec-cache keys
-//! on the full signature.
+//! backward-data, backward-weights). The optional layout segment is the
+//! literal `nhwc` — NCHW is the legacy default and is *omitted*, so
+//! every pre-layout signature and db key parses unchanged (as NCHW) and
+//! existing find/perf dbs need no migration. The optional tuning suffix
+//! is typed ([`TuneTag`]): `-bk{BK}` names a direct-solver
+//! output-channel tile (reused by the depthwise solver as its channel
+//! block), `-wt{WT}` a winograd transform-domain parallelism variant,
+//! `-gt{GT}` a blocked-GEMM `MC×NC` tile-grid index — unknown suffixes
+//! are parse errors, not silently-dropped strings. The perf-db keys on
+//! everything except the algo/tuning suffix; the exec-cache keys on the
+//! full signature.
 
-use crate::types::{DType, MiopenError, Result};
+use crate::types::{DType, Layout, MiopenError, Result};
 
 /// Typed tuning-variant suffix on an artifact signature.
 ///
@@ -102,6 +106,9 @@ pub struct ProblemSig {
     pub g: usize,
     /// Element data type.
     pub dtype: DType,
+    /// Image-tensor memory layout. NCHW is the wire default (emitted as
+    /// nothing); NHWC appends a `-nhwc` segment after the dtype.
+    pub layout: Layout,
 }
 
 impl ProblemSig {
@@ -127,19 +134,29 @@ impl ProblemSig {
         -> String {
         let suffix = tag.map(TuneTag::suffix).unwrap_or_default();
         format!(
-            "conv_{}-{}-{}-{}{}",
+            "conv_{}-{}-{}-{}{}{}",
             self.direction,
             algo,
             self.params_str(),
             self.dtype.name(),
+            self.layout_suffix(),
             suffix
         )
     }
 
     /// Perf-db / find-db key: problem identity without algorithm.
     pub fn db_key(&self) -> String {
-        format!("conv_{}-{}-{}", self.direction, self.params_str(),
-                self.dtype.name())
+        format!("conv_{}-{}-{}{}", self.direction, self.params_str(),
+                self.dtype.name(), self.layout_suffix())
+    }
+
+    /// The wire spelling of the layout: empty for the legacy NCHW
+    /// default, `-nhwc` for channels-last.
+    fn layout_suffix(&self) -> &'static str {
+        match self.layout {
+            Layout::Nchw => "",
+            Layout::Nhwc => "-nhwc",
+        }
     }
 
     /// Parse a full artifact signature back into (problem, algo, tuning).
@@ -158,7 +175,15 @@ impl ProblemSig {
         let params = parts.next().ok_or_else(|| bad(sig, "missing params"))?;
         let dtype_str = parts.next().ok_or_else(|| bad(sig, "missing dtype"))?;
         let dtype = DType::parse(dtype_str).ok_or_else(|| bad(sig, "bad dtype"))?;
-        let tuning = match parts.next() {
+        // Optional layout segment: only the literal "nhwc" is legal on
+        // the wire — layout-less signatures are the legacy NCHW form.
+        let mut layout = Layout::Nchw;
+        let mut next = parts.next();
+        if next == Some(Layout::Nhwc.name()) {
+            layout = Layout::Nhwc;
+            next = parts.next();
+        }
+        let tuning = match next {
             None => None,
             Some(t) => Some(
                 TuneTag::parse(t).ok_or_else(|| bad(sig, "bad tuning suffix"))?,
@@ -194,6 +219,7 @@ impl ProblemSig {
                 j: get('j')?,
                 g: get('g')?,
                 dtype,
+                layout,
             },
             algo,
             tuning,
@@ -218,12 +244,20 @@ impl ProblemSig {
         let dtype_str = parts.next().ok_or_else(|| bad(key, "missing dtype"))?;
         let dtype =
             DType::parse(dtype_str).ok_or_else(|| bad(key, "bad dtype"))?;
+        // Optional trailing layout segment; a layout-less key is the
+        // legacy NCHW form, so pre-layout find/perf dbs load unchanged.
+        let layout = match parts.next() {
+            None => Layout::Nchw,
+            Some(s) if s == Layout::Nhwc.name() => Layout::Nhwc,
+            Some(_) => return Err(bad(key, "trailing segments")),
+        };
         if parts.next().is_some() {
             return Err(bad(key, "trailing segments"));
         }
         // Round-trip through the artifact grammar with a placeholder
         // algo so the field extraction stays in one place.
-        let full = format!("conv_{direction}-x-{params}-{}", dtype.name());
+        let full = format!("conv_{direction}-x-{params}-{}{}", dtype.name(),
+                           if layout == Layout::Nhwc { "-nhwc" } else { "" });
         let (mut sig, _, _) = Self::parse_artifact(&full)?;
         sig.dtype = dtype;
         Ok(sig)
@@ -286,7 +320,12 @@ mod tests {
             n: 4, c: 16, h: 28, w: 28, k: 32, r: 3, s: 3,
             u: 1, v: 1, p: 1, q: 1, l: 1, j: 1, g: 1,
             dtype: DType::F32,
+            layout: Layout::Nchw,
         }
+    }
+
+    fn sample_nhwc() -> ProblemSig {
+        ProblemSig { layout: Layout::Nhwc, ..sample() }
     }
 
     #[test]
@@ -330,6 +369,62 @@ mod tests {
         assert_eq!(algo, "gemm");
         assert_eq!(tag, Some(TuneTag::GemmTile(2)));
         assert_eq!(tag.unwrap().value(), 2);
+    }
+
+    #[test]
+    fn roundtrip_nhwc() {
+        let sig = sample_nhwc().artifact_sig("direct", None);
+        assert_eq!(
+            sig,
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc"
+        );
+        let (p, algo, tag) = ProblemSig::parse_artifact(&sig).unwrap();
+        assert_eq!(p, sample_nhwc());
+        assert_eq!(algo, "direct");
+        assert_eq!(tag, None);
+        // layout + tuning suffix compose, layout first
+        let tuned = sample_nhwc()
+            .artifact_sig_tagged("gemm", Some(TuneTag::GemmTile(2)));
+        assert!(tuned.ends_with("-f32-nhwc-gt2"), "{tuned}");
+        let (p, algo, tag) = ProblemSig::parse_artifact(&tuned).unwrap();
+        assert_eq!(p, sample_nhwc());
+        assert_eq!(algo, "gemm");
+        assert_eq!(tag, Some(TuneTag::GemmTile(2)));
+    }
+
+    #[test]
+    fn legacy_layoutless_sigs_parse_as_nchw() {
+        // db forward-compat: every pre-layout signature/key is NCHW
+        let (p, _, _) = ProblemSig::parse_artifact(
+            "conv_fwd-direct-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
+        )
+        .unwrap();
+        assert_eq!(p.layout, Layout::Nchw);
+        let k = ProblemSig::parse_db_key(
+            "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32",
+        )
+        .unwrap();
+        assert_eq!(k.layout, Layout::Nchw);
+        // and NCHW emits byte-identical legacy strings (no migration)
+        assert_eq!(sample().db_key(),
+                   "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32");
+    }
+
+    #[test]
+    fn nhwc_db_key_roundtrips() {
+        let p = sample_nhwc();
+        assert_eq!(p.db_key(),
+                   "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc");
+        assert_eq!(ProblemSig::parse_db_key(&p.db_key()).unwrap(), p);
+        // only the literal "nhwc" is a legal layout segment
+        assert!(ProblemSig::parse_db_key(
+            "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-chwn"
+        )
+        .is_err());
+        assert!(ProblemSig::parse_db_key(
+            "conv_fwd-n4c16h28w28k32r3s3u1v1p1q1l1j1g1-f32-nhwc-x"
+        )
+        .is_err());
     }
 
     #[test]

@@ -311,11 +311,15 @@ fn rank_by_model_prefers_winograd_for_3x3() {
 
 #[test]
 fn grouped_and_depthwise_conv_execute() {
-    // paper §IV-A "Types of convolution": grouped (g=2) and depthwise
-    // (g=C) configs route to the direct solver and execute.
+    // paper §IV-A "Types of convolution": grouped (g=2) configs route
+    // to the direct solver; depthwise (g=C) configs additionally get
+    // the dedicated depthwise solver. Both execute.
     let handle = common::cpu_handle("find-grouped");
-    for (c, k, g, h) in [(32usize, 32usize, 32usize, 14usize),
-                         (16, 32, 2, 14)] {
+    for (c, k, g, h, want) in
+        [(32usize, 32usize, 32usize, 14usize,
+          vec!["depthwise", "direct"]),
+         (16, 32, 2, 14, vec!["direct"])]
+    {
         let p = ConvProblem::forward(
             TensorDesc::nchw(4, c, h, h, DType::F32),
             FilterDesc::kcrs(k, c / g, 3, 3, DType::F32),
@@ -324,13 +328,18 @@ fn grouped_and_depthwise_conv_execute() {
                 miopen_rs::descriptors::ConvMode::CrossCorrelation, g),
         );
         let results = handle.find_convolution(&p).unwrap();
-        assert_eq!(results.len(), 1, "grouped: only the direct solver");
-        assert_eq!(results[0].algo, "direct");
+        let mut got: Vec<&str> =
+            results.iter().map(|r| r.algo.as_str()).collect();
+        got.sort_unstable();
+        assert_eq!(got, want, "g={g}");
+        // the winner and the direct fallback both execute
         let sig = p.sig().unwrap();
-        let art = sig.artifact_sig("direct", None);
-        let inputs = common::seeded_inputs(&handle, &art, 31).unwrap();
-        let out = handle.execute_sig(&art, &inputs).unwrap();
-        assert_eq!(out[0].spec.shape, vec![4, k, h, h]);
+        for algo in &want {
+            let art = sig.artifact_sig(algo, None);
+            let inputs = common::seeded_inputs(&handle, &art, 31).unwrap();
+            let out = handle.execute_sig(&art, &inputs).unwrap();
+            assert_eq!(out[0].spec.shape, vec![4, k, h, h], "{art}");
+        }
     }
 }
 

@@ -241,6 +241,21 @@ fn serve_bench_sweep_scales_and_writes_bench_json() {
         assert!(p.p50_us > 0.0 && p.p99_us >= p.p50_us, "{}", p.sig);
     }
 
+    // per-layout warm-serve sweep: every NHWC twin in the builtin set
+    // must serve, paired with its NCHW baseline (incl. the dedicated
+    // depthwise solver in both layouts)
+    let layout_points =
+        miopen_rs::bench::serve::run_layout_serve(&handle, 24).unwrap();
+    assert_eq!(layout_points.len(),
+               miopen_rs::bench::serve::layout_serve_sigs().len(),
+               "a layout-serve signature is missing from the manifest");
+    assert!(layout_points.iter().any(|p| p.layout == "nhwc"));
+    assert!(layout_points.iter()
+                .any(|p| p.layout == "nhwc" && p.algo == "depthwise"));
+    for p in &layout_points {
+        assert!(p.p50_us > 0.0 && p.p99_us >= p.p50_us, "{}", p.sig);
+    }
+
     // cold-shape scenario: the immediate-mode acceptance numbers ride
     // along in the same artifact (fresh temp db, so all odd-index
     // figure-6 shapes really are unseen)
@@ -255,7 +270,7 @@ fn serve_bench_sweep_scales_and_writes_bench_json() {
         .join("..")
         .join("BENCH_serve.json");
     miopen_rs::bench::serve::write_json(&points, &dtype_points,
-                                        Some(&cold), &out)
+                                        &layout_points, Some(&cold), &out)
         .unwrap();
     assert!(out.exists());
 }

@@ -39,6 +39,25 @@ fn kernel_bench_sweep_writes_bench_json() {
                 p.modeled_advantage);
     }
 
+    // the layout sweep: both layouts measured, and the channels-last
+    // 1×1 im2col path must not pay more pack traffic than NCHW (the
+    // counters are deterministic byte counts, profile-independent)
+    assert!(bench.layout.nchw_us > 0.0 && bench.layout.nhwc_us > 0.0,
+            "layout point not measured");
+    assert!(bench.layout.nhwc_pack_bytes > 0,
+            "NHWC 1x1 conv never reached the packed-GEMM path");
+    assert!(bench.layout.pack_traffic_ratio() >= 1.0,
+            "NHWC 1x1 conv pays extra pack traffic: {} vs {} bytes",
+            bench.layout.nhwc_pack_bytes, bench.layout.nchw_pack_bytes);
+
+    // the dedicated depthwise solver must not lose to the grouped-direct
+    // fallback it replaced (the solver-promotion acceptance)
+    assert!(bench.depthwise.speedup() >= 1.0,
+            "depthwise {:.1}/{:.1}us vs grouped {:.1}us",
+            bench.depthwise.depthwise_nchw_us,
+            bench.depthwise.depthwise_nhwc_us,
+            bench.depthwise.grouped_direct_us);
+
     let s = kb::speedup_256(&bench).expect("256x256x256 point missing");
     let serial = kb::speedup_256_serial(&bench).unwrap();
     if cfg!(debug_assertions) {

@@ -11,7 +11,7 @@ use miopen_rs::fusion::mdgraph::{MdGraph, OpKind, PlanAttrs};
 use miopen_rs::perfmodel::GcnModel;
 use miopen_rs::runtime::interp::kernels as k;
 use miopen_rs::testutil::prop::{choice, forall, usize_in, Gen};
-use miopen_rs::types::{DType, ProblemSig, TuneTag};
+use miopen_rs::types::{DType, Layout, ProblemSig, TuneTag};
 use miopen_rs::util::json;
 use miopen_rs::util::rng::SplitMix64;
 
@@ -38,6 +38,7 @@ fn sig_gen() -> Gen<ProblemSig> {
             g: 1,
             dtype: [DType::F32, DType::Bf16, DType::F16]
                 [rng.below(3) as usize],
+            layout: [Layout::Nchw, Layout::Nhwc][rng.below(2) as usize],
         }
     })
 }
@@ -59,6 +60,149 @@ fn prop_signature_roundtrip() {
                 if parsed != *sig || algo2 != algo || tag2 != tag {
                     return Err(format!("mismatch for {text}"));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_db_key_roundtrip_and_legacy_keys_resolve_nchw() {
+    // sig -> db key -> parse_db_key is lossless for both layouts, and
+    // stripping the layout tail (the legacy, pre-layout key spelling)
+    // must resolve to the same problem in NCHW — old find-db files keep
+    // working with no migration
+    forall("db-key-roundtrip", &sig_gen(), CASES, |sig| {
+        let key = sig.db_key();
+        if (sig.layout == Layout::Nhwc) != key.ends_with("-nhwc") {
+            return Err(format!("layout tail wrong in {key}"));
+        }
+        let parsed =
+            ProblemSig::parse_db_key(&key).map_err(|e| e.to_string())?;
+        if parsed != *sig {
+            return Err(format!("db-key mismatch for {key}"));
+        }
+        let legacy = key.strip_suffix("-nhwc").unwrap_or(&key);
+        let lp =
+            ProblemSig::parse_db_key(legacy).map_err(|e| e.to_string())?;
+        if lp.layout != Layout::Nchw {
+            return Err(format!("legacy key {legacy} not NCHW"));
+        }
+        let nchw_twin = ProblemSig { layout: Layout::Nchw, ..sig.clone() };
+        if lp != nchw_twin {
+            return Err(format!("legacy key {legacy} changed the problem"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nhwc_kernels_match_nchw_reference() {
+    // the channels-last kernels compute the same function as the NCHW
+    // zoo: shuffle the inputs, run the native NHWC direct and
+    // im2col-GEMM paths, shuffle the NCHW reference's output, compare
+    let geom_gen = Gen::new(|rng: &mut SplitMix64| {
+        let r = [1usize, 3][rng.below(2) as usize];
+        (
+            1 + rng.below(2) as usize,      // n
+            1 + rng.below(4) as usize,      // c
+            3 + rng.below(8) as usize,      // h
+            3 + rng.below(8) as usize,      // w
+            1 + rng.below(4) as usize,      // k
+            r,
+            1 + rng.below(2) as usize,      // stride
+            rng.below(2) as usize,          // pad
+        )
+    });
+    forall("nhwc-kernel-parity", &geom_gen, 60,
+           |&(n, c, h, w, kk, r, u, p)| {
+        if h + 2 * p < r || w + 2 * p < r {
+            return Ok(());
+        }
+        let g = k::ConvGeom { p, q: p,
+                              ..k::ConvGeom::dense(n, c, h, w, kk, r, r,
+                                                   u, 0) };
+        let (ho, wo) = g.out_hw();
+        let seed = (n * 107 + c * 109 + h * 113 + w * 127 + kk * 131
+                    + r * 137 + u * 139 + p * 149) as u64;
+        let mut rng = SplitMix64::new(seed);
+        let mut x = vec![0f32; n * c * h * w];
+        let mut wts = vec![0f32; kk * c * r * r];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut wts);
+
+        let mut xh = vec![0f32; x.len()];
+        k::nchw_to_nhwc_image(&x, n, c, h, w, &mut xh);
+        let mut wh = vec![0f32; wts.len()];
+        k::kcrs_to_krsc(&wts, kk, c, r, r, &mut wh);
+        let mut want = vec![0f32; n * kk * ho * wo];
+        k::nchw_to_nhwc_image(&k::conv2d_fwd(&x, &wts, &g), n, kk, ho, wo,
+                              &mut want);
+
+        let close = |got: &[f32], who: &str| -> Result<(), String> {
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                let denom = 1f32.max(a.abs()).max(b.abs());
+                if (a - b).abs() / denom > 1e-3 {
+                    return Err(format!("{who}[{i}]: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        };
+        close(&k::conv2d_fwd_nhwc(&xh, &wh, &g), "nhwc-direct")?;
+        close(&k::conv2d_fwd_im2col_nhwc(&xh, &wh, &g), "nhwc-gemm")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_depthwise_kernels_match_grouped_direct() {
+    // the dedicated depthwise kernels (NCHW and channels-last) agree
+    // with the grouped-direct fallback they replaced, on random g == c
+    // geometries across strides, pads and channel-block sizes
+    let geom_gen = Gen::new(|rng: &mut SplitMix64| {
+        (
+            1 + rng.below(2) as usize,      // n
+            1 + rng.below(33) as usize,     // c (= g = k)
+            3 + rng.below(10) as usize,     // h
+            3 + rng.below(10) as usize,     // w
+            [3usize, 5][rng.below(2) as usize],
+            1 + rng.below(2) as usize,      // stride
+            rng.below(3) as usize,          // pad
+        )
+    });
+    forall("depthwise-parity", &geom_gen, 60, |&(n, c, h, w, r, u, p)| {
+        if h + 2 * p < r || w + 2 * p < r {
+            return Ok(());
+        }
+        let g = k::ConvGeom { g: c, p, q: p,
+                              ..k::ConvGeom::dense(n, c, h, w, c, r, r,
+                                                   u, 0) };
+        let (ho, wo) = g.out_hw();
+        let seed = (n * 151 + c * 157 + h * 163 + w * 167 + r * 173
+                    + u * 179 + p * 181) as u64;
+        let mut rng = SplitMix64::new(seed);
+        let mut x = vec![0f32; n * c * h * w];
+        let mut wts = vec![0f32; c * r * r];
+        rng.fill_normal_f32(&mut x);
+        rng.fill_normal_f32(&mut wts);
+
+        let want = k::conv2d_fwd(&x, &wts, &g);
+        let got = k::conv2d_fwd_depthwise_nchw(&x, &wts, &g);
+        if got != want {
+            return Err("nchw depthwise != grouped direct".into());
+        }
+
+        let mut xh = vec![0f32; x.len()];
+        k::nchw_to_nhwc_image(&x, n, c, h, w, &mut xh);
+        // depthwise filters are (K, R, S, 1) channels-last — the same
+        // bytes as (K, 1, R, S), no shuffle needed
+        let mut want_h = vec![0f32; want.len()];
+        k::nchw_to_nhwc_image(&want, n, c, ho, wo, &mut want_h);
+        for block in [1usize, 4, 8, 64] {
+            let got = k::conv2d_fwd_depthwise_nhwc(&xh, &wts, &g, block);
+            if got != want_h {
+                return Err(format!(
+                    "nhwc depthwise (block {block}) != grouped direct"));
             }
         }
         Ok(())
@@ -400,6 +544,7 @@ fn prop_mdgraph_acceptance_implies_table_constraints() {
         let f = 1 + rng.below(14) as usize;
         PlanAttrs {
             dtype: [DType::F32, DType::F16][rng.below(2) as usize],
+            layout: [Layout::Nchw, Layout::Nhwc][rng.below(2) as usize],
             filter: Some((f, f)),
             stride: Some((1 + rng.below(3) as usize, 1 + rng.below(3) as usize)),
             pad: Some((rng.below(4) as usize, rng.below(4) as usize)),
@@ -426,6 +571,9 @@ fn prop_mdgraph_acceptance_implies_table_constraints() {
                 "winograd" => {
                     if attrs.dtype != DType::F32 {
                         return Err("winograd CBA in half precision".into());
+                    }
+                    if attrs.layout == Layout::Nhwc {
+                        return Err("winograd CBA under NHWC".into());
                     }
                     let c = attrs.channels.unwrap();
                     let s = attrs.stride.unwrap().0;
@@ -465,6 +613,7 @@ fn prop_perf_model_monotone_in_batch() {
                 n, c: 32, h: 28, w: 28, k: 32, r: 3, s: 3,
                 u: 1, v: 1, p: 1, q: 1, l: 1, j: 1, g: 1,
                 dtype: DType::F32,
+                layout: Layout::Nchw,
             };
             let t = m.conv_time_us(&sig, algo);
             if t < prev {

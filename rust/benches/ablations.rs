@@ -42,7 +42,8 @@ fn main() {
 }
 
 fn inputs_for(handle: &Handle, sig: &str, seed: u64) -> Vec<HostTensor> {
-    let art = handle.manifest().require(sig).unwrap();
+    let manifest = handle.manifest();
+    let art = manifest.require(sig).unwrap();
     let mut rng = SplitMix64::new(seed);
     art.inputs
         .iter()
@@ -54,7 +55,7 @@ fn rnn_fusion(handle: &Handle, cfg: &BenchConfig) {
     println!("\n=== abl-rnn: fused-GEMM LSTM vs naive per-gate (eqs 11-12) ===");
     let mut table = Table::new(&["T", "fused_us", "naive_us", "meas_speedup",
                                  "model_speedup"]);
-    for p in rnn_ablation_points(handle.manifest()) {
+    for p in rnn_ablation_points(&handle.manifest()) {
         let inputs = inputs_for(handle, &p.fused_sig, 3);
         let fused_exe = handle.compile_sig(&p.fused_sig).unwrap();
         let naive_exe = handle.compile_sig(&p.naive_sig).unwrap();
@@ -166,7 +167,7 @@ fn find_amortize(handle: &Handle, cfg: &BenchConfig) {
 
 fn tuning_ablation(handle: &Handle) {
     println!("\n=== abl-tune: tuned vs default parameters (§III-B) ===");
-    for (key, variants) in tuning_points(handle.manifest()) {
+    for (key, variants) in tuning_points(&handle.manifest()) {
         println!("\nproblem {key}");
         let mut table = Table::new(&["block_k", "median_us", "vs default"]);
         let mut default_us = f64::NAN;

@@ -40,7 +40,7 @@ fn main() {
         }
         println!("\n=== {title} ===");
         println!("(label = fh-fw-C-H-W-K-padH-padW, as on the paper's x-axis)");
-        let points = fig6_panel(handle.manifest(), tag).expect("panel");
+        let points = fig6_panel(&handle.manifest(), tag).expect("panel");
         let mut table = Table::new(&[
             "label", "best_algo", "meas_speedup", "log10",
             "model_best", "model_speedup", "gemm_us",
@@ -54,7 +54,8 @@ fn main() {
                 Some(s) => s.clone(),
                 None => continue,
             };
-            let base_art = handle.manifest().require(&base_sig).unwrap();
+            let manifest = handle.manifest();
+            let base_art = manifest.require(&base_sig).unwrap();
             let inputs: Vec<HostTensor> = base_art
                 .inputs
                 .iter()

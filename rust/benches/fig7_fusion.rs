@@ -34,7 +34,8 @@ fn main() {
 }
 
 fn inputs_for(handle: &Handle, sig: &str, seed: u64) -> Vec<HostTensor> {
-    let art = handle.manifest().require(sig).unwrap();
+    let manifest = handle.manifest();
+    let art = manifest.require(sig).unwrap();
     let mut rng = SplitMix64::new(seed);
     art.inputs
         .iter()
@@ -53,7 +54,7 @@ fn median_us(handle: &Handle, cfg: &BenchConfig, sig: &str,
 
 fn run_fig7a(handle: &Handle, cfg: &BenchConfig) {
     println!("\n=== Figure 7a: fused Conv+Bias+Activation vs separate ===");
-    let points = fig7a_points(handle.manifest()).expect("fig7a");
+    let points = fig7a_points(&handle.manifest()).expect("fig7a");
     let mut table = Table::new(&[
         "label", "K", "fused_us", "separate_us", "meas_speedup",
         "model_speedup",
@@ -100,7 +101,7 @@ fn run_fig7a(handle: &Handle, cfg: &BenchConfig) {
 
 fn run_fig7b(handle: &Handle, cfg: &BenchConfig) {
     println!("\n=== Figure 7b: fused BatchNorm+Activation vs separate ===");
-    let points = fig7b_points(handle.manifest()).expect("fig7b");
+    let points = fig7b_points(&handle.manifest()).expect("fig7b");
     let mut table = Table::new(&[
         "CxHxW", "fused_us", "separate_us", "meas_speedup", "model_speedup",
     ]);

@@ -2,19 +2,25 @@
 //! synthetic CNN serving workload and record p50/p99 latency, throughput
 //! and cache hit rates — the scaling evidence for the multi-worker
 //! engine — plus the per-dtype warm-serve sweep (bf16 conv twins vs
-//! their f32 baselines through the exec-cache hot path). Results
-//! serialize to `BENCH_serve.json` (see the `serve-bench` CLI subcommand
-//! and the CI smoke job).
+//! their f32 baselines through the exec-cache hot path) and the
+//! adversarial overload traces (burst/diurnal/hot-key/slow-poison)
+//! exercising the admission gate, typed shedding, and mid-trace
+//! drain/reload. Results serialize to `BENCH_serve.json` (see the
+//! `serve-bench` CLI subcommand and the CI smoke job).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::handle::Handle;
 use crate::metrics::TimingStats;
-use crate::serve::{generate_load, run_server, Request, ServeConfig};
-use crate::types::Result;
+use crate::serve::{generate_load, generate_load_opts, run_server,
+                   run_server_ctl, Clock, Control, LoadOptions, RealClock,
+                   Request, Response, ServeConfig, ServerStats, ShedReason,
+                   SERVE_INFER_SIG};
+use crate::types::{MiopenError, Result};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -59,7 +65,8 @@ pub struct SweepPoint {
 /// Run the full sweep. Each point drives `cfg.requests` synthetic CNN
 /// inference requests through [`run_server`] with a fresh load generator.
 pub fn run_sweep(handle: &Handle, cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
-    let infer = handle.manifest().require("cnn_infer-f32")?;
+    let manifest = handle.manifest();
+    let infer = manifest.require(SERVE_INFER_SIG)?;
     let (_, image_elems, _) = crate::serve::infer_image_layout(infer)?;
 
     let mut points = Vec::new();
@@ -144,8 +151,9 @@ pub fn dtype_serve_sigs() -> Vec<(&'static str, String)> {
 pub fn run_dtype_serve(handle: &Handle, requests: usize)
     -> Result<Vec<DtypeServePoint>> {
     let mut points = Vec::new();
+    let manifest = handle.manifest();
     for (dt, sig) in dtype_serve_sigs() {
-        let Some(art) = handle.manifest().get(&sig) else {
+        let Some(art) = manifest.get(&sig) else {
             continue;
         };
         let algo = art.algo.clone();
@@ -210,8 +218,9 @@ pub fn layout_serve_sigs() -> Vec<(&'static str, String)> {
 pub fn run_layout_serve(handle: &Handle, requests: usize)
     -> Result<Vec<LayoutServePoint>> {
     let mut points = Vec::new();
+    let manifest = handle.manifest();
     for (lt, sig) in layout_serve_sigs() {
-        let Some(art) = handle.manifest().get(&sig) else {
+        let Some(art) = manifest.get(&sig) else {
             continue;
         };
         let algo = art.algo.clone();
@@ -383,6 +392,333 @@ pub fn run_cold_shapes(handle: &Handle, rounds: usize)
     })
 }
 
+// ---------------------------------------------------------------------------
+// Adversarial overload traces
+// ---------------------------------------------------------------------------
+
+/// The adversarial traffic shapes driven against the continuous-batching
+/// engine (ISSUE: "overload" section of BENCH_serve.json).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// One sustained burst at 2× measured capacity with deadlines on
+    /// every request, plus a drain/reload fired mid-trace.
+    Burst,
+    /// Three phases — ramp up, peak above capacity, cool down — the
+    /// day/night traffic curve.
+    Diurnal,
+    /// 80% of requests share one affinity key at ~1.2× capacity; the
+    /// per-worker shard hit rates must stay warm anyway.
+    HotKey,
+    /// Every 5th request is malformed; the gate must shed them without
+    /// a worker ever dying (the old engine let bad requests kill the
+    /// pool).
+    SlowPoison,
+}
+
+impl TraceKind {
+    /// CLI spelling (`burst` | `diurnal` | `hotkey` | `poison`).
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        match s {
+            "burst" => Some(TraceKind::Burst),
+            "diurnal" => Some(TraceKind::Diurnal),
+            "hotkey" | "hot-key" => Some(TraceKind::HotKey),
+            "poison" | "slow-poison" => Some(TraceKind::SlowPoison),
+            _ => None,
+        }
+    }
+
+    /// Stable name used in JSON output.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceKind::Burst => "burst",
+            TraceKind::Diurnal => "diurnal",
+            TraceKind::HotKey => "hotkey",
+            TraceKind::SlowPoison => "slow-poison",
+        }
+    }
+
+    /// Every trace, in JSON output order.
+    pub fn all() -> Vec<TraceKind> {
+        vec![TraceKind::Burst, TraceKind::Diurnal, TraceKind::HotKey,
+             TraceKind::SlowPoison]
+    }
+}
+
+/// Engine shape for the overload traces (deliberately small so the
+/// capacity flood saturates quickly).
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    /// Requests per trace.
+    pub requests: usize,
+    pub workers: usize,
+    pub batch_max: usize,
+    pub batch_timeout: Duration,
+    /// Admission queue bound handed to [`ServeConfig::queue_cap`].
+    pub queue_cap: usize,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        Self {
+            requests: 192,
+            workers: 2,
+            batch_max: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Outcome of one adversarial trace — everything the CI overload gates
+/// read out of `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct TraceResult {
+    /// [`TraceKind::as_str`] of the trace.
+    pub trace: String,
+    /// Requests submitted.
+    pub requests: usize,
+    /// Flood capacity (req/s) measured immediately before the trace.
+    pub capacity_req_s: f64,
+    /// Relative deadline stamped on the trace's requests (µs).
+    pub deadline_us: u64,
+    /// Requests answered with [`Response::Done`].
+    pub done: usize,
+    /// Requests answered with [`Response::Shed`] (any reason).
+    pub shed: usize,
+    /// Sheds at dispatch ([`ShedReason::Expired`]).
+    pub shed_expired: usize,
+    /// Sheds of malformed requests (slow-poison accounting).
+    pub shed_malformed: usize,
+    /// Every id answered exactly once, Done + Shed == requests.
+    pub exactly_once: bool,
+    /// In-deadline completions per second.
+    pub goodput_req_s: f64,
+    /// goodput / capacity — the burst gate is ≥ 0.9.
+    pub goodput_over_capacity: f64,
+    /// p50 latency of requests that were actually served (µs).
+    pub admitted_p50_us: f64,
+    /// p99 latency of served requests (µs) — bounded by the deadline.
+    pub admitted_p99_us: f64,
+    /// shed / requests.
+    pub shed_rate: f64,
+    /// Responses undeliverable because the client hung up.
+    pub client_gone: u64,
+    /// Successful drain/reloads applied mid-trace (burst fires one).
+    pub reloads: u64,
+    /// Least-loaded worker's fraction of served requests (hot-key load
+    /// balance; 0 when nothing was served or a single worker ran).
+    pub min_worker_share: f64,
+    /// Merged per-worker exec-cache shard hit rate.
+    pub shard_hit_rate: f64,
+}
+
+/// Measure sustained flood capacity (req/s): no pacing, no deadlines,
+/// same engine shape as the traces.
+pub fn measure_capacity(handle: &Handle, cfg: &OverloadConfig)
+    -> Result<f64> {
+    let manifest = handle.manifest();
+    let infer = manifest.require(SERVE_INFER_SIG)?;
+    let (_, image_elems, _) = crate::serve::infer_image_layout(infer)?;
+    drop(manifest);
+    let serve_cfg = ServeConfig {
+        batch_max: cfg.batch_max,
+        batch_timeout: cfg.batch_timeout,
+        workers: cfg.workers,
+        queue_cap: cfg.queue_cap.max(cfg.requests),
+        ..Default::default()
+    };
+    let n = cfg.requests.max(16);
+    let stats = std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let server = scope.spawn(|| run_server(handle, &serve_cfg, rx));
+        let resp_rx = generate_load(&tx, n, 0.0, image_elems, 0xCA9);
+        drop(tx);
+        let stats = server.join().expect("capacity server");
+        let _ = resp_rx.iter().count();
+        stats
+    })?;
+    Ok(stats.throughput.req_per_s())
+}
+
+/// (requests, offered rate req/s) phases for a trace at capacity `cap`.
+fn trace_phases(kind: TraceKind, n: usize, cap: f64) -> Vec<(usize, f64)> {
+    match kind {
+        // two half-phases so the mid-trace reload fires between them,
+        // while the second half of the burst is still being submitted
+        TraceKind::Burst => vec![(n / 2, 2.0 * cap), (n - n / 2, 2.0 * cap)],
+        TraceKind::Diurnal => {
+            let third = n / 3;
+            vec![
+                (third, 0.6 * cap),
+                (third, 1.8 * cap),
+                (n - 2 * third, 0.3 * cap),
+            ]
+        }
+        TraceKind::HotKey => vec![(n, 1.2 * cap)],
+        TraceKind::SlowPoison => vec![(n, 2.0 * cap)],
+    }
+}
+
+fn trace_load_options(kind: TraceKind, deadline_us: u64) -> LoadOptions {
+    let mut opts = LoadOptions {
+        deadline_us: Some(deadline_us),
+        ..LoadOptions::default()
+    };
+    match kind {
+        TraceKind::Burst => {
+            // mixed priorities so the p50/p99-per-class stats populate
+            opts.priority_weights = [0.2, 0.6, 0.2];
+        }
+        TraceKind::Diurnal => {}
+        TraceKind::HotKey => opts.hot_fraction = 0.8,
+        TraceKind::SlowPoison => opts.malformed_every = 5,
+    }
+    opts
+}
+
+/// Run one adversarial trace against a live engine. The calling thread
+/// paces the submissions (Poisson at each phase's offered rate) while
+/// the engine runs on a scoped thread; the burst trace additionally
+/// fires a [`Control::Reload`] once half the requests are in flight.
+pub fn run_trace(handle: &Handle, kind: TraceKind, cfg: &OverloadConfig,
+                 capacity: f64) -> Result<TraceResult> {
+    let manifest = handle.manifest();
+    let infer = manifest.require(SERVE_INFER_SIG)?;
+    let (_, image_elems, _) = crate::serve::infer_image_layout(infer)?;
+    drop(manifest);
+    let serve_cfg = ServeConfig {
+        batch_max: cfg.batch_max,
+        batch_timeout: cfg.batch_timeout,
+        workers: cfg.workers,
+        queue_cap: cfg.queue_cap,
+        ..Default::default()
+    };
+    let n = cfg.requests.max(8);
+    let cap = capacity.max(1.0);
+    // deadline = ten batch-service periods of headroom at measured
+    // capacity, clamped to [50ms, 2s] so noisy hosts neither shed
+    // everything nor never shed
+    let per_batch_us = cfg.batch_max as f64 * 1e6 / cap;
+    let deadline_us = ((per_batch_us * 10.0) as u64).clamp(50_000, 2_000_000);
+    let opts = trace_load_options(kind, deadline_us);
+    let phases = trace_phases(kind, n, cap);
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (ctl_tx, ctl_rx) = mpsc::channel();
+    let (stats, responses, reload_done) = std::thread::scope(
+        |scope| -> Result<(ServerStats, Vec<Response>, Option<Result<()>>)> {
+            let server =
+                scope.spawn(|| run_server_ctl(handle, &serve_cfg, rx, ctl_rx));
+            let mut resp_rxs = Vec::new();
+            let mut sent = 0usize;
+            let mut reload_rx = None;
+            let reload_at =
+                if kind == TraceKind::Burst { n / 2 } else { usize::MAX };
+            for (i, &(pn, rate)) in phases.iter().enumerate() {
+                // ids restart per generate_load_opts call, so give each
+                // phase its own response channel and offset ids later
+                resp_rxs.push(generate_load_opts(
+                    &tx, pn, rate, image_elems,
+                    0xBEA7 + i as u64, &clock, &opts));
+                sent += pn;
+                if reload_rx.is_none() && sent >= reload_at {
+                    // fire the drain/reload while the queue is loaded;
+                    // completion is checked after the trace drains
+                    let (dtx, drx) = mpsc::channel();
+                    let _ = ctl_tx.send(Control::Reload {
+                        apply: Box::new(|h: &Handle| h.reload_artifacts()),
+                        done: dtx,
+                    });
+                    reload_rx = Some(drx);
+                }
+            }
+            drop(tx);
+            let stats = server.join().expect("trace server")?;
+            let mut responses = Vec::with_capacity(n);
+            for rx in resp_rxs {
+                responses.extend(rx.iter());
+            }
+            let reload_done = reload_rx.map(|drx| {
+                drx.recv().unwrap_or_else(|_| {
+                    Err(MiopenError::Internal(
+                        "reload acknowledgement channel closed".into()))
+                })
+            });
+            Ok((stats, responses, reload_done))
+        })?;
+
+    if let Some(r) = reload_done {
+        r?; // a failed mid-trace reload fails the trace
+    }
+
+    // exactly-once: every phase numbered its ids 0..pn, so count
+    // responses per (phase-local id, phase) — the per-phase receivers
+    // already partition them; here the concatenated list must answer
+    // every submitted request exactly once overall.
+    let mut done_lat = TimingStats::new();
+    let (mut done, mut shed) = (0usize, 0usize);
+    let (mut shed_expired, mut shed_malformed) = (0usize, 0usize);
+    let mut per_worker_done = vec![0u64; cfg.workers.max(1)];
+    for r in &responses {
+        match r {
+            Response::Done(c) => {
+                done += 1;
+                done_lat.record(c.latency_us);
+                if let Some(slot) = per_worker_done.get_mut(c.worker) {
+                    *slot += 1;
+                }
+            }
+            Response::Shed(s) => {
+                shed += 1;
+                match s.reason {
+                    ShedReason::Expired => shed_expired += 1,
+                    ShedReason::Malformed => shed_malformed += 1,
+                    _ => {}
+                }
+            }
+        }
+    }
+    let exactly_once = done + shed == n && responses.len() == n;
+    let min_worker_share = if done > 0 && cfg.workers > 1 {
+        per_worker_done.iter().copied().min().unwrap_or(0) as f64
+            / done as f64
+    } else {
+        0.0
+    };
+    let snap = &stats.snapshot;
+    Ok(TraceResult {
+        trace: kind.as_str().to_string(),
+        requests: n,
+        capacity_req_s: cap,
+        deadline_us,
+        done,
+        shed,
+        shed_expired,
+        shed_malformed,
+        exactly_once,
+        goodput_req_s: snap.goodput_req_s,
+        goodput_over_capacity: snap.goodput_req_s / cap,
+        admitted_p50_us: done_lat.median(),
+        admitted_p99_us: done_lat.p99(),
+        shed_rate: shed as f64 / n as f64,
+        client_gone: snap.client_gone,
+        reloads: snap.reloads,
+        min_worker_share,
+        shard_hit_rate: stats.shard_cache.hit_rate(),
+    })
+}
+
+/// Measure capacity once, then run every requested trace against it.
+pub fn run_overload(handle: &Handle, kinds: &[TraceKind],
+                    cfg: &OverloadConfig) -> Result<Vec<TraceResult>> {
+    let capacity = measure_capacity(handle, cfg)?;
+    kinds
+        .iter()
+        .map(|&k| run_trace(handle, k, cfg, capacity))
+        .collect()
+}
+
 /// Throughput ratio of `workers_b` over `workers_a`, compared only
 /// between points with the *same* (batch_max, rate) configuration so
 /// the number measures worker scaling, not batching differences. The
@@ -412,7 +748,8 @@ pub fn speedup(points: &[SweepPoint], workers_a: usize, workers_b: usize)
 
 pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
                layout: &[LayoutServePoint],
-               cold: Option<&ColdShapeBench>) -> Json {
+               cold: Option<&ColdShapeBench>,
+               overload: &[TraceResult]) -> Json {
     let arr: Vec<Json> = points
         .iter()
         .map(|p| {
@@ -483,16 +820,49 @@ pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
             ("agreement_total", Json::num(c.agreement_total as f64)),
         ]));
     }
+    if !overload.is_empty() {
+        let arr: Vec<Json> = overload
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("trace", Json::str(t.trace.as_str())),
+                    ("requests", Json::num(t.requests as f64)),
+                    ("capacity_req_s", Json::num(t.capacity_req_s)),
+                    ("deadline_us", Json::num(t.deadline_us as f64)),
+                    ("done", Json::num(t.done as f64)),
+                    ("shed", Json::num(t.shed as f64)),
+                    ("shed_expired", Json::num(t.shed_expired as f64)),
+                    ("shed_malformed",
+                     Json::num(t.shed_malformed as f64)),
+                    ("exactly_once", Json::Bool(t.exactly_once)),
+                    ("goodput_req_s", Json::num(t.goodput_req_s)),
+                    ("goodput_over_capacity",
+                     Json::num(t.goodput_over_capacity)),
+                    ("admitted_p50_us", Json::num(t.admitted_p50_us)),
+                    ("admitted_p99_us", Json::num(t.admitted_p99_us)),
+                    ("shed_rate", Json::num(t.shed_rate)),
+                    ("client_gone", Json::num(t.client_gone as f64)),
+                    ("reloads", Json::num(t.reloads as f64)),
+                    ("min_worker_share", Json::num(t.min_worker_share)),
+                    ("shard_hit_rate", Json::num(t.shard_hit_rate)),
+                ])
+            })
+            .collect();
+        root.insert("overload".to_string(), Json::Arr(arr));
+    }
     Json::Obj(root)
 }
 
 /// Serialize and write `BENCH_serve.json` (worker sweep + per-dtype and
 /// per-layout warm-serve points + the cold-shape immediate-mode
-/// scenario).
+/// scenario + the adversarial overload traces).
 pub fn write_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
                   layout: &[LayoutServePoint],
-                  cold: Option<&ColdShapeBench>, path: &Path) -> Result<()> {
-    std::fs::write(path, to_json(points, dtype, layout, cold).to_string())?;
+                  cold: Option<&ColdShapeBench>, overload: &[TraceResult],
+                  path: &Path) -> Result<()> {
+    std::fs::write(path,
+                   to_json(points, dtype, layout, cold, overload)
+                       .to_string())?;
     Ok(())
 }
 
@@ -574,7 +944,7 @@ mod tests {
             p50_us: 95.0,
             p99_us: 150.0,
         }];
-        let j = to_json(&pts, &dtype, &layout, Some(&cold));
+        let j = to_json(&pts, &dtype, &layout, Some(&cold), &[]);
         assert_eq!(j.get("points").and_then(Json::as_arr).unwrap().len(), 2);
         let s = j.get("speedup_4w_over_1w").and_then(Json::as_f64).unwrap();
         assert!((s - 2.5).abs() < 1e-9);
@@ -600,8 +970,73 @@ mod tests {
 
     #[test]
     fn json_omits_cold_shapes_when_absent() {
-        let j = to_json(&[], &[], &[], None);
+        let j = to_json(&[], &[], &[], None, &[]);
         assert!(j.get("cold_shapes").is_none());
+        assert!(j.get("overload").is_none(),
+                "empty overload must not emit a section");
+    }
+
+    #[test]
+    fn trace_kind_parses_cli_spellings() {
+        assert_eq!(TraceKind::parse("burst"), Some(TraceKind::Burst));
+        assert_eq!(TraceKind::parse("hot-key"), Some(TraceKind::HotKey));
+        assert_eq!(TraceKind::parse("poison"),
+                   Some(TraceKind::SlowPoison));
+        assert_eq!(TraceKind::parse("nope"), None);
+        for k in TraceKind::all() {
+            assert_eq!(TraceKind::parse(k.as_str()), Some(k));
+        }
+    }
+
+    #[test]
+    fn trace_phases_cover_all_requests() {
+        for k in TraceKind::all() {
+            let total: usize = trace_phases(k, 100, 50.0)
+                .iter()
+                .map(|&(n, _)| n)
+                .sum();
+            assert_eq!(total, 100, "{} drops requests", k.as_str());
+        }
+        // the burst offers 2x capacity
+        let burst = trace_phases(TraceKind::Burst, 100, 50.0);
+        assert!(burst.iter().all(|&(_, r)| (r - 100.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn overload_json_round_trips() {
+        let t = TraceResult {
+            trace: "burst".into(),
+            requests: 192,
+            capacity_req_s: 800.0,
+            deadline_us: 120_000,
+            done: 150,
+            shed: 42,
+            shed_expired: 5,
+            shed_malformed: 0,
+            exactly_once: true,
+            goodput_req_s: 780.0,
+            goodput_over_capacity: 0.975,
+            admitted_p50_us: 9_000.0,
+            admitted_p99_us: 80_000.0,
+            shed_rate: 42.0 / 192.0,
+            client_gone: 0,
+            reloads: 1,
+            min_worker_share: 0.4,
+            shard_hit_rate: 0.99,
+        };
+        let j = to_json(&[], &[], &[], None, &[t]);
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        let arr = back.get("overload").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 1);
+        let b = &arr[0];
+        assert_eq!(b.get("trace").and_then(Json::as_str), Some("burst"));
+        assert_eq!(b.get("exactly_once").and_then(Json::as_bool),
+                   Some(true));
+        assert_eq!(b.get("reloads").and_then(Json::as_i64), Some(1));
+        let g = b.get("goodput_over_capacity")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((g - 0.975).abs() < 1e-9);
     }
 
     #[test]

@@ -82,16 +82,25 @@ COMMANDS:
                  [--prune N]
   run          Execute one artifact by signature with random inputs
                  --sig <signature> [--iters N]
-  serve        Batched CNN inference server on synthetic load
+  serve        Continuous-batching CNN inference server with admission
+               control on synthetic load
                  [--requests N] [--rate R] [--batch B] [--timeout-ms T]
-                 [--workers W] [--immediate: figure-6 shapes through
-                 immediate selection + background refiner instead]
+                 [--workers W] [--queue-cap N] [--deadline-ms D: shed
+                 requests that can't finish in D ms] [--stats-interval-ms
+                 I: print live engine stats every I ms] [--stats-json:
+                 print the final stats snapshot as JSON]
+                 [--immediate: figure-6 shapes through immediate
+                 selection + background refiner instead]
   serve-bench  Sweep workers x batch x arrival rate + the cold-shape
                immediate-mode scenario; writes BENCH_serve.json
                (p50/p99, throughput, cache hit rates, cold-vs-warm)
                  [--requests N] [--workers 1,2,4] [--batches 16]
                  [--rates 0] [--timeout-ms T] [--cold-rounds N]
                  [--out FILE]
+                 [--trace burst,diurnal,hotkey,poison|all: adversarial
+                 overload traces with a mid-burst drain/reload, written
+                 to the overload section] [--trace-requests N]
+                 [--trace-workers W] [--trace-batch B] [--queue-cap N]
   kernel-bench Naive-vs-blocked GEMM GFLOP/s sweep + arena-on/off warm
                conv latency; writes BENCH_kernels.json
                  [--iters N] [--out FILE]

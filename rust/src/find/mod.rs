@@ -137,6 +137,7 @@ impl Handle {
         }
 
         let perf_db = self.perf_db();
+        let manifest = self.manifest();
         let mut results = Vec::new();
         let mut failures = Vec::new();
         for solver in crate::solvers::applicable(&sig) {
@@ -145,11 +146,11 @@ impl Handle {
             let tuned = perf_db
                 .get(&key, solver.name())
                 .map(|params| solver.artifact_sig(&sig, Some(params)))
-                .filter(|s| self.manifest.get(s).is_some());
+                .filter(|s| manifest.get(s).is_some());
             let art_sig = tuned
                 .unwrap_or_else(|| solver.artifact_sig(&sig, None));
 
-            if self.manifest.get(&art_sig).is_none() {
+            if manifest.get(&art_sig).is_none() {
                 // No artifact for this (problem, solver) — not an error:
                 // the solver simply isn't available for this config set.
                 continue;
@@ -214,6 +215,8 @@ impl Handle {
         // Per-entry lookups (user shadows system) instead of a full
         // merged clone — this is the warm path, called per request.
         let user_perf = self.user_perf.lock().unwrap();
+        let system_perf = self.system_perf();
+        let manifest = self.manifest();
         let solvers = crate::solvers::applicable(sig);
         let mut out: Vec<ConvAlgoPerf> = Vec::with_capacity(records.len());
         for r in records {
@@ -223,14 +226,14 @@ impl Handle {
             };
             let tuned = user_perf
                 .get(&key, solver.name())
-                .or_else(|| self.system_perf.get(&key, solver.name()))
+                .or_else(|| system_perf.get(&key, solver.name()))
                 .map(|params| solver.artifact_sig(sig, Some(params)))
-                .filter(|s| self.manifest.get(s).is_some());
+                .filter(|s| manifest.get(s).is_some());
             let art_sig = match tuned {
                 Some(s) => s,
                 None => {
                     let s = solver.artifact_sig(sig, None);
-                    if self.manifest.get(&s).is_none() {
+                    if manifest.get(&s).is_none() {
                         continue; // stale record: artifact left the set
                     }
                     s

@@ -9,9 +9,16 @@
 //! is mutex-guarded and backends/executables are `Send + Sync`, so one
 //! handle can be shared by the serve engine's worker threads (see
 //! README, "Serving concurrency model").
+//!
+//! The manifest and system dbs sit behind `RwLock<Arc<..>>` so the serve
+//! engine's drain/reload path ([`Handle::reload_artifacts`]) can swap a
+//! freshly tuned artifact set in-place while workers keep their borrowed
+//! `&Handle` — readers clone the `Arc` (one atomic inc, no contention on
+//! the hot path) and keep a consistent view for the whole operation.
 
-use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::cache::{compile_cached, CacheStats, DiskCache, ExecCache};
@@ -95,18 +102,26 @@ impl Default for HandleOptions {
 
 pub struct Handle {
     pub(crate) backend: Box<dyn Backend>,
-    pub(crate) manifest: Manifest,
+    manifest: RwLock<Arc<Manifest>>,
     pub(crate) exec_cache: ExecCache,
     pub(crate) disk_cache: DiskCache,
-    pub(crate) system_find: FindDb,
+    system_find: RwLock<Arc<FindDb>>,
     pub(crate) user_find: Mutex<FindDb>,
-    pub(crate) system_perf: PerfDb,
+    system_perf: RwLock<Arc<PerfDb>>,
     pub(crate) user_perf: Mutex<PerfDb>,
     pub(crate) db_store: DbStore,
     pub(crate) model: GcnModel,
     pub(crate) rng: Mutex<SplitMix64>,
     pub(crate) find_iters: usize,
     pub(crate) warmup_iters: usize,
+    /// Where the manifest + system dbs came from (reload re-reads here).
+    artifacts_dir: PathBuf,
+    /// Whether a missing manifest.json may fall back to the builtin
+    /// synthetic manifest (interp handles only — see [`Handle::new`]).
+    builtin_fallback: bool,
+    /// Bumped by every successful reload; serve workers compare epochs
+    /// to decide when to re-warm their private cache shards.
+    reload_epoch: AtomicU64,
 }
 
 // Compile-time proof that a `&Handle` can cross threads (the serve
@@ -129,21 +144,8 @@ impl Handle {
         let dir = opts
             .artifacts_dir
             .unwrap_or_else(crate::testutil::artifacts_dir);
-        // The interp backend needs no artifact files: when the AOT set is
-        // absent it serves the builtin synthetic manifest (the same
-        // signatures aot.py emits). A present manifest.json still wins so
-        // interp handles can exercise real AOT'd shape metadata.
-        let manifest = if is_interp && !dir.join("manifest.json").exists() {
-            Manifest::builtin()
-        } else {
-            Manifest::load(&dir)?
-        };
-
-        // System dbs ship next to the artifacts (produced by tuning runs /
-        // CI); user dbs live in the config dir and shadow them.
-        let system_store = DbStore::at(dir.join("system_db"));
-        let system_find = system_store.load_find_db().unwrap_or_default();
-        let system_perf = system_store.load_perf_db().unwrap_or_default();
+        let (manifest, system_find, system_perf) =
+            Self::load_artifact_set(&dir, is_interp)?;
 
         let db_store = match opts.db_dir {
             Some(d) => DbStore::at(d),
@@ -154,19 +156,42 @@ impl Handle {
 
         Ok(Self {
             backend,
-            manifest,
+            manifest: RwLock::new(Arc::new(manifest)),
             exec_cache: ExecCache::new(opts.exec_cache_capacity),
             disk_cache: DiskCache::new(),
-            system_find,
+            system_find: RwLock::new(Arc::new(system_find)),
             user_find: Mutex::new(user_find),
-            system_perf,
+            system_perf: RwLock::new(Arc::new(system_perf)),
             user_perf: Mutex::new(user_perf),
             db_store,
             model: GcnModel::default(),
             rng: Mutex::new(SplitMix64::new(opts.seed)),
             find_iters: opts.find_iters.max(1),
             warmup_iters: opts.warmup_iters,
+            artifacts_dir: dir,
+            builtin_fallback: is_interp,
+            reload_epoch: AtomicU64::new(0),
         })
+    }
+
+    /// Read the manifest + system dbs for `dir`. The interp backend
+    /// needs no artifact files: when the AOT set is absent it serves the
+    /// builtin synthetic manifest (the same signatures aot.py emits). A
+    /// present manifest.json still wins so interp handles can exercise
+    /// real AOT'd shape metadata. System dbs ship next to the artifacts
+    /// (produced by tuning runs / CI); user dbs shadow them.
+    fn load_artifact_set(dir: &Path, builtin_fallback: bool)
+        -> Result<(Manifest, FindDb, PerfDb)> {
+        let manifest = if builtin_fallback
+            && !dir.join("manifest.json").exists() {
+            Manifest::builtin()
+        } else {
+            Manifest::load(dir)?
+        };
+        let system_store = DbStore::at(dir.join("system_db"));
+        let system_find = system_store.load_find_db().unwrap_or_default();
+        let system_perf = system_store.load_perf_db().unwrap_or_default();
+        Ok((manifest, system_find, system_perf))
     }
 
     /// Convenience: mock-backed handle for tests (no PJRT, no artifacts
@@ -175,18 +200,21 @@ impl Handle {
                               db_dir: PathBuf) -> Self {
         Self {
             backend: Box::new(MockBackend::new(cfg)),
-            manifest,
+            manifest: RwLock::new(Arc::new(manifest)),
             exec_cache: ExecCache::new(64),
             disk_cache: DiskCache::new(),
-            system_find: FindDb::default(),
+            system_find: RwLock::new(Arc::new(FindDb::default())),
             user_find: Mutex::new(FindDb::default()),
-            system_perf: PerfDb::default(),
+            system_perf: RwLock::new(Arc::new(PerfDb::default())),
             user_perf: Mutex::new(PerfDb::default()),
-            db_store: DbStore::at(db_dir),
+            db_store: DbStore::at(db_dir.clone()),
             model: GcnModel::default(),
             rng: Mutex::new(SplitMix64::new(7)),
             find_iters: 2,
             warmup_iters: 1,
+            artifacts_dir: db_dir,
+            builtin_fallback: false,
+            reload_epoch: AtomicU64::new(0),
         }
     }
 
@@ -194,8 +222,70 @@ impl Handle {
         self.backend.platform()
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    /// Snapshot of the current manifest. Cloning the `Arc` (not the
+    /// manifest) keeps the view consistent across a whole operation even
+    /// if a concurrent [`Handle::reload_artifacts`] swaps the shared one
+    /// mid-flight. Bind it (`let m = handle.manifest();`) when artifact
+    /// references must outlive one statement.
+    pub fn manifest(&self) -> Arc<Manifest> {
+        self.manifest.read().unwrap().clone()
+    }
+
+    /// Snapshot of the system find-db (reload-swappable like the
+    /// manifest).
+    pub(crate) fn system_find(&self) -> Arc<FindDb> {
+        self.system_find.read().unwrap().clone()
+    }
+
+    /// Snapshot of the system perf-db.
+    pub(crate) fn system_perf(&self) -> Arc<PerfDb> {
+        self.system_perf.read().unwrap().clone()
+    }
+
+    /// How many successful [`Handle::reload_with`] /
+    /// [`Handle::reload_artifacts`] swaps this handle has seen. Serve
+    /// workers compare epochs to know when their warm shards went stale.
+    pub fn reload_epoch(&self) -> u64 {
+        self.reload_epoch.load(Ordering::Acquire)
+    }
+
+    /// Drop every compiled executable from the shared in-memory cache
+    /// (reload invalidation; per-worker shards clear themselves).
+    pub fn clear_exec_cache(&self) {
+        self.exec_cache.clear();
+    }
+
+    /// Swap in a new manifest + system dbs without interrupting readers:
+    /// in-flight operations keep the `Arc` snapshot they already hold,
+    /// later calls see the new set. Invalidates the shared exec cache
+    /// and bumps [`Handle::reload_epoch`]. This is the primitive under
+    /// the serve engine's drain/reload path — the engine quiesces its
+    /// workers first so no half-warmed batch mixes artifact sets.
+    pub fn reload_with(&self, manifest: Manifest, system_find: FindDb,
+                       system_perf: PerfDb) {
+        {
+            // fixed lock order (manifest → find → perf) so concurrent
+            // reloaders can't deadlock; readers take one lock at a time
+            let mut m = self.manifest.write().unwrap();
+            let mut f = self.system_find.write().unwrap();
+            let mut p = self.system_perf.write().unwrap();
+            *m = Arc::new(manifest);
+            *f = Arc::new(system_find);
+            *p = Arc::new(system_perf);
+        }
+        self.exec_cache.clear();
+        self.reload_epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Re-read the manifest and system dbs from the artifacts directory
+    /// this handle was created over and [`Handle::reload_with`] them —
+    /// the "a tuning run just refreshed the system dbs on disk" path.
+    /// On error nothing is swapped.
+    pub fn reload_artifacts(&self) -> Result<()> {
+        let (m, f, p) = Self::load_artifact_set(&self.artifacts_dir,
+                                                self.builtin_fallback)?;
+        self.reload_with(m, f, p);
+        Ok(())
     }
 
     pub fn perf_model(&self) -> &GcnModel {
@@ -221,15 +311,17 @@ impl Handle {
     /// never contends on the handle's shared cache lock).
     pub fn compile_sig_with(&self, cache: &ExecCache, sig: &str)
         -> Result<Arc<dyn Executable>> {
-        compile_cached(cache, &self.disk_cache, &self.manifest,
+        let manifest = self.manifest();
+        compile_cached(cache, &self.disk_cache, &manifest,
                        self.backend.as_ref(), sig)
     }
 
     /// Compile bypassing the in-memory cache (cold-path measurement for
     /// the cache ablation bench).
     pub fn compile_sig_cold(&self, sig: &str) -> Result<Arc<dyn Executable>> {
-        let path = self.disk_cache.lookup(&self.manifest, sig)?;
-        let art = self.manifest.require(sig)?;
+        let manifest = self.manifest();
+        let path = self.disk_cache.lookup(&manifest, sig)?;
+        let art = manifest.require(sig)?;
         self.backend.compile(&path, art)
     }
 
@@ -244,7 +336,8 @@ impl Handle {
     pub fn execute_sig_with(&self, cache: &ExecCache, sig: &str,
                             inputs: &[HostTensor])
         -> Result<Vec<HostTensor>> {
-        let art = self.manifest.require(sig)?;
+        let manifest = self.manifest();
+        let art = manifest.require(sig)?;
         if inputs.len() != art.inputs.len() {
             return Err(MiopenError::ShapeMismatch(format!(
                 "{sig}: expected {} inputs, got {}",
@@ -266,7 +359,8 @@ impl Handle {
     /// Generate manifest-conformant random inputs for an artifact (the
     /// find step's benchmark data).
     pub fn random_inputs(&self, sig: &str) -> Result<Vec<HostTensor>> {
-        let art = self.manifest.require(sig)?;
+        let manifest = self.manifest();
+        let art = manifest.require(sig)?;
         let mut rng = self.rng.lock().unwrap();
         Ok(art
             .inputs
@@ -294,12 +388,12 @@ impl Handle {
 
     /// Merged find-db view (user shadows system).
     pub fn find_db(&self) -> FindDb {
-        self.system_find.merged_with(&self.user_find.lock().unwrap())
+        self.system_find().merged_with(&self.user_find.lock().unwrap())
     }
 
     /// Merged perf-db view.
     pub fn perf_db(&self) -> PerfDb {
-        self.system_perf.merged_with(&self.user_perf.lock().unwrap())
+        self.system_perf().merged_with(&self.user_perf.lock().unwrap())
     }
 
     /// Persist the user dbs (find results + tuned params survive the

@@ -5,7 +5,8 @@
 //! E2E training loop, fusion-plan checks and the supported-fusion tables.
 
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use miopen_rs::cli::{Args, USAGE};
@@ -15,7 +16,8 @@ use miopen_rs::find::{ConvProblem, Direction, FindOptions};
 use miopen_rs::fusion::{enumerate_supported, FusionOp, FusionPlan};
 use miopen_rs::handle::{Handle, HandleOptions};
 use miopen_rs::prelude::DType;
-use miopen_rs::serve::{generate_load, run_server, ServeConfig};
+use miopen_rs::serve::{generate_load_opts, run_server_ctl, Clock, Control,
+                       LoadOptions, RealClock, ServeConfig};
 use miopen_rs::tuning::{format_params, TuneOptions, TuningSession};
 use miopen_rs::types::Result;
 
@@ -206,27 +208,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_timeout: Duration::from_millis(
             args.opt_usize("timeout-ms", 5) as u64),
         workers: args.opt_usize("workers", 1),
+        queue_cap: args.opt_usize("queue-cap", 1024),
         ..Default::default()
     };
-    let infer = handle.manifest().require("cnn_infer-f32")?;
+    let manifest = handle.manifest();
+    let infer = manifest.require(miopen_rs::serve::SERVE_INFER_SIG)?;
     let (_, image_elems, _) =
         miopen_rs::serve::infer_image_layout(infer)?;
+    drop(manifest);
 
+    let lopts = LoadOptions {
+        deadline_us: match args.opt_usize("deadline-ms", 0) {
+            0 => None,
+            ms => Some(ms as u64 * 1000),
+        },
+        ..Default::default()
+    };
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
     let (tx, rx) = mpsc::channel();
-    let loader = std::thread::spawn(move || {
-        generate_load(&tx, n, rate, image_elems, 42)
+    let (ctl_tx, ctl_rx) = mpsc::channel();
+
+    // live stats poller: probes the engine over the control channel
+    let stats_interval = args.opt_usize("stats-interval-ms", 0);
+    let done = Arc::new(AtomicBool::new(false));
+    let poller = (stats_interval > 0).then(|| {
+        let ctl = ctl_tx.clone();
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            while !done.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(
+                    stats_interval as u64));
+                let (rtx, rrx) = mpsc::channel();
+                if ctl.send(Control::Stats(rtx)).is_err() {
+                    break;
+                }
+                if let Ok(s) = rrx.recv_timeout(Duration::from_secs(1)) {
+                    eprintln!("[stats] depth={} in_flight={} done={} \
+                               shed={} goodput={:.1}/s",
+                              s.queue_depth, s.in_flight_batches,
+                              s.completed, s.shed_total(),
+                              s.goodput_req_s);
+                }
+            }
+        })
     });
-    let stats = run_server(&handle, &cfg, rx)?;
-    let responses = loader.join().expect("load generator panicked");
-    let served = responses.iter().count();
-    println!("served {served}/{n} requests with {} worker(s)",
-             stats.per_worker.len());
+
+    let loader = std::thread::spawn(move || {
+        generate_load_opts(&tx, n, rate, image_elems, 42, &clock, &lopts)
+    });
+    let stats = run_server_ctl(&handle, &cfg, rx, ctl_rx)?;
+    done.store(true, Ordering::Relaxed);
+    drop(ctl_tx);
+    if let Some(p) = poller {
+        let _ = p.join();
+    }
+    let responses: Vec<miopen_rs::serve::Response> =
+        loader.join().expect("load generator panicked").iter().collect();
+    let served = responses.iter().filter(|r| r.is_done()).count();
+    let snap = &stats.snapshot;
+    println!("served {served}/{n} requests with {} worker(s), {} shed",
+             stats.per_worker.len(), snap.shed_total());
     println!("latency: {}", stats.latency.summary());
     println!("mean batch size: {:.2}", stats.throughput.mean_batch_size());
-    println!("throughput: {:.1} req/s", stats.throughput.req_per_s());
+    println!("throughput: {:.1} req/s (goodput {:.1}/s)",
+             stats.throughput.req_per_s(), snap.goodput_req_s);
+    println!("shed: {} deadline, {} queue-full, {} expired, \
+              {} malformed; {} client-gone",
+             snap.shed_deadline, snap.shed_queue_full, snap.shed_expired,
+             snap.shed_malformed, snap.client_gone);
     println!("shard cache: {:.0}% hits over {} lookups",
              stats.shard_cache.hit_rate() * 100.0,
              stats.shard_cache.lookups);
+    if args.flag("stats-json") {
+        println!("{}", snap.to_json());
+    }
     Ok(())
 }
 
@@ -377,9 +432,52 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
              cold.agreement_top1 * 100.0, cold.agreement_top2 * 100.0,
              cold.agreement_total, cold.refined, cold.deduped);
 
+    // adversarial overload traces (opt-in via --trace so the default
+    // smoke run stays fast): burst/diurnal/hotkey/poison against a
+    // freshly measured flood capacity.
+    let mut overload = Vec::new();
+    if let Some(spec) = args.opt("trace") {
+        let kinds: Vec<sb::TraceKind> = if spec == "all" {
+            sb::TraceKind::all()
+        } else {
+            spec.split(',')
+                .filter_map(|t| sb::TraceKind::parse(t.trim()))
+                .collect()
+        };
+        if kinds.is_empty() {
+            return Err(miopen_rs::types::MiopenError::BadDescriptor(
+                format!("--trace {spec}: expected burst|diurnal|hotkey|\
+                         poison|all (comma-separated)")));
+        }
+        let ocfg = sb::OverloadConfig {
+            requests: args.opt_usize("trace-requests", 192),
+            workers: args.opt_usize("trace-workers", 2),
+            batch_max: args.opt_usize("trace-batch", 8),
+            queue_cap: args.opt_usize("queue-cap", 256),
+            ..Default::default()
+        };
+        overload = sb::run_overload(&handle, &kinds, &ocfg)?;
+        let mut ot = miopen_rs::bench::Table::new(
+            &["trace", "done", "shed", "goodput/cap", "p99_us",
+              "deadline_us", "1:1", "reloads"]);
+        for t in &overload {
+            ot.row(vec![
+                t.trace.clone(),
+                t.done.to_string(),
+                t.shed.to_string(),
+                format!("{:.2}", t.goodput_over_capacity),
+                format!("{:.0}", t.admitted_p99_us),
+                t.deadline_us.to_string(),
+                if t.exactly_once { "yes".into() } else { "NO".into() },
+                t.reloads.to_string(),
+            ]);
+        }
+        ot.print();
+    }
+
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_serve.json"));
     sb::write_json(&points, &dtype_points, &layout_points, Some(&cold),
-                   &out)?;
+                   &overload, &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }

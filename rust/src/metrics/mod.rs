@@ -1,4 +1,11 @@
-//! Timing statistics for the find step, benches, and the serving driver.
+//! Timing statistics for the find step, benches, and the serving driver,
+//! plus the serve engine's live counters ([`ServeMetrics`]) and their
+//! point-in-time view ([`StatsSnapshot`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
 
 /// Online summary of a set of duration samples (µs).
 #[derive(Debug, Clone, Default)]
@@ -123,6 +130,209 @@ impl Throughput {
     }
 }
 
+/// Number of request priority classes the serve engine recognizes.
+pub const PRIORITY_CLASSES: usize = 3;
+
+/// Display names for the priority classes, indexed by priority index
+/// (0 = high, 1 = normal, 2 = low).
+pub const PRIORITY_NAMES: [&str; PRIORITY_CLASSES] =
+    ["high", "normal", "low"];
+
+/// Live counters for the serve engine, shared lock-free between the
+/// admission gate (feeder thread) and the workers. All counters are
+/// monotonic except the two gauges (`queue_depth`,
+/// `in_flight_batches`); per-priority completion latencies sit behind
+/// one mutex touched once per completed request.
+///
+/// The invariant the exactly-once tests pin:
+/// `submitted == admitted + shed_deadline + shed_queue_full +
+/// shed_malformed`, and every admitted request ends up in exactly one
+/// of `completed` or `shed_expired`.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Requests that reached the admission gate.
+    pub submitted: AtomicU64,
+    /// Requests the gate queued for execution.
+    pub admitted: AtomicU64,
+    /// Admitted requests answered with a completion.
+    pub completed: AtomicU64,
+    /// Completions delivered within their deadline (deadline-less
+    /// requests always count) — the goodput numerator.
+    pub completed_in_deadline: AtomicU64,
+    /// Shed at admission: predicted completion past the deadline.
+    pub shed_deadline: AtomicU64,
+    /// Shed at admission: queue at capacity.
+    pub shed_queue_full: AtomicU64,
+    /// Shed at dispatch: deadline expired while queued.
+    pub shed_expired: AtomicU64,
+    /// Shed at admission: malformed request (slow-poison hardening).
+    pub shed_malformed: AtomicU64,
+    /// Responses whose client disconnected before delivery.
+    pub client_gone: AtomicU64,
+    /// Gauge: requests currently queued.
+    pub queue_depth: AtomicU64,
+    /// Gauge: batches currently executing across all workers.
+    pub in_flight_batches: AtomicU64,
+    /// Successful drain/reload cycles.
+    pub reloads: AtomicU64,
+    /// EWMA of batch service time (µs) — the admission gate's wait
+    /// predictor.
+    batch_ewma_us: AtomicU64,
+    /// Completion latencies per priority class.
+    lat: Mutex<[TimingStats; PRIORITY_CLASSES]>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed-request latency under its priority class.
+    pub fn record_latency(&self, priority: usize, us: f64) {
+        let idx = priority.min(PRIORITY_CLASSES - 1);
+        self.lat.lock().unwrap()[idx].record(us);
+    }
+
+    /// Fold one batch service time into the EWMA (α = 0.2). Clamped to
+    /// ≥ 1 µs so "observed" is distinguishable from "no data yet".
+    pub fn observe_batch_us(&self, us: u64) {
+        let old = self.batch_ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us } else { (old * 4 + us) / 5 };
+        self.batch_ewma_us.store(new.max(1), Ordering::Relaxed);
+    }
+
+    /// Current batch-service-time estimate (µs); 0 = no batches yet.
+    pub fn batch_ewma_us(&self) -> u64 {
+        self.batch_ewma_us.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time view of every counter. `elapsed_s` is the serving
+    /// wall time the goodput rate is computed over.
+    pub fn snapshot(&self, elapsed_s: f64) -> StatsSnapshot {
+        let lat = self.lat.lock().unwrap();
+        let per_priority = (0..PRIORITY_CLASSES)
+            .map(|i| PrioritySnapshot {
+                class: PRIORITY_NAMES[i],
+                count: lat[i].count(),
+                p50_us: lat[i].median(),
+                p99_us: lat[i].p99(),
+            })
+            .collect();
+        drop(lat);
+        let good = self.completed_in_deadline.load(Ordering::Relaxed);
+        StatsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            completed_in_deadline: good,
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            shed_malformed: self.shed_malformed.load(Ordering::Relaxed),
+            client_gone: self.client_gone.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            in_flight_batches:
+                self.in_flight_batches.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            batch_ewma_us: self.batch_ewma_us() as f64,
+            elapsed_s,
+            goodput_req_s: if elapsed_s > 0.0 {
+                good as f64 / elapsed_s
+            } else {
+                0.0
+            },
+            per_priority,
+        }
+    }
+}
+
+/// Per-priority-class completion latency summary inside a
+/// [`StatsSnapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct PrioritySnapshot {
+    /// Class name ("high" | "normal" | "low").
+    pub class: &'static str,
+    /// Completions recorded in this class.
+    pub count: usize,
+    /// Median completion latency (µs; NaN when empty).
+    pub p50_us: f64,
+    /// 99th-percentile completion latency (µs; NaN when empty).
+    pub p99_us: f64,
+}
+
+/// Point-in-time view of [`ServeMetrics`] — the `serve --stats-*`
+/// surface and the per-trace record in BENCH_serve.json's `overload`
+/// section. Field meanings mirror the [`ServeMetrics`] counters.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub completed_in_deadline: u64,
+    pub shed_deadline: u64,
+    pub shed_queue_full: u64,
+    pub shed_expired: u64,
+    pub shed_malformed: u64,
+    pub client_gone: u64,
+    pub queue_depth: u64,
+    pub in_flight_batches: u64,
+    pub reloads: u64,
+    /// Batch-service-time EWMA at snapshot time (µs).
+    pub batch_ewma_us: f64,
+    /// Serving wall time the rates are computed over (s).
+    pub elapsed_s: f64,
+    /// In-deadline completions per second.
+    pub goodput_req_s: f64,
+    /// Per-priority completion latency summaries.
+    pub per_priority: Vec<PrioritySnapshot>,
+}
+
+impl StatsSnapshot {
+    /// Total requests shed for any reason.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_deadline + self.shed_queue_full + self.shed_expired
+            + self.shed_malformed
+    }
+
+    /// Serialize for `serve --stats-json` / BENCH_serve.json (NaN
+    /// latencies of empty classes serialize as null).
+    pub fn to_json(&self) -> Json {
+        let prio: Vec<Json> = self
+            .per_priority
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("class", Json::str(p.class)),
+                    ("count", Json::num(p.count as f64)),
+                    ("p50_us", Json::num(p.p50_us)),
+                    ("p99_us", Json::num(p.p99_us)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("completed_in_deadline",
+             Json::num(self.completed_in_deadline as f64)),
+            ("shed_deadline", Json::num(self.shed_deadline as f64)),
+            ("shed_queue_full", Json::num(self.shed_queue_full as f64)),
+            ("shed_expired", Json::num(self.shed_expired as f64)),
+            ("shed_malformed", Json::num(self.shed_malformed as f64)),
+            ("shed_total", Json::num(self.shed_total() as f64)),
+            ("client_gone", Json::num(self.client_gone as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("in_flight_batches",
+             Json::num(self.in_flight_batches as f64)),
+            ("reloads", Json::num(self.reloads as f64)),
+            ("batch_ewma_us", Json::num(self.batch_ewma_us)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("goodput_req_s", Json::num(self.goodput_req_s)),
+            ("per_priority", Json::Arr(prio)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +405,54 @@ mod tests {
             s.record(v);
         }
         assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn serve_metrics_snapshot_and_json_round_trip() {
+        let m = ServeMetrics::new();
+        m.submitted.fetch_add(10, Ordering::Relaxed);
+        m.admitted.fetch_add(8, Ordering::Relaxed);
+        m.completed.fetch_add(7, Ordering::Relaxed);
+        m.completed_in_deadline.fetch_add(6, Ordering::Relaxed);
+        m.shed_deadline.fetch_add(1, Ordering::Relaxed);
+        m.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+        m.shed_expired.fetch_add(1, Ordering::Relaxed);
+        m.record_latency(0, 100.0);
+        m.record_latency(1, 200.0);
+        let s = m.snapshot(2.0);
+        assert_eq!(s.shed_total(), 3);
+        assert_eq!(s.goodput_req_s, 3.0);
+        assert_eq!(s.per_priority.len(), PRIORITY_CLASSES);
+        assert_eq!(s.per_priority[0].count, 1);
+        assert_eq!(s.per_priority[2].count, 0);
+        let back =
+            crate::util::json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("admitted").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(back.get("shed_total").and_then(Json::as_f64),
+                   Some(3.0));
+        let prio = back.get("per_priority").and_then(Json::as_arr)
+            .unwrap();
+        assert_eq!(prio.len(), PRIORITY_CLASSES);
+        // empty low-priority class serializes NaN latencies as null
+        assert_eq!(prio[2].get("p50_us"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn batch_ewma_converges_toward_observations() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.batch_ewma_us(), 0);
+        m.observe_batch_us(1000);
+        assert_eq!(m.batch_ewma_us(), 1000); // first sample taken whole
+        for _ in 0..50 {
+            m.observe_batch_us(2000);
+        }
+        let e = m.batch_ewma_us();
+        assert!(e > 1900 && e <= 2000, "ewma {e} did not converge");
+        // a zero observation (virtual-clock runs) stays distinguishable
+        // from "no data yet"
+        let z = ServeMetrics::new();
+        z.observe_batch_us(0);
+        assert_eq!(z.batch_ewma_us(), 1);
     }
 
     #[test]

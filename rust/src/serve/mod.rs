@@ -1,60 +1,253 @@
-//! Multi-worker batched inference engine — the library-as-deployed
-//! validation path (DESIGN.md S14).
+//! Continuous-batching inference engine with admission control — the
+//! library-as-deployed validation path (DESIGN.md S14).
 //!
 //! MIOpen itself is a primitives library; this module is the serving
-//! coordinator a framework would put on top: a request queue, a dynamic
-//! batcher (batch up to the model's AOT batch size or a timeout,
-//! whichever first), and **N worker threads** pulling batches from one
-//! shared queue. Each worker owns a private warm exec-cache shard, so the
-//! hot path never contends on a cache lock; per-worker [`WorkerStats`]
-//! merge into the global [`ServerStats`] view when the queue drains.
+//! coordinator a framework would put on top. Beyond the original
+//! batch-or-timeout design, the engine now implements the production
+//! serving contract (ROADMAP item 3):
 //!
-//! Everything the workers touch is `Send + Sync` (`Backend`,
-//! `Executable`, the mutex-guarded `Handle` state), so the workers borrow
-//! one `&Handle` through `std::thread::scope` — no `Arc<Handle>` in the
-//! public API, and the single-worker configuration degenerates to the
-//! old one-executor design.
+//! - **Continuous batching** — workers launch as soon as requests are
+//!   available and top up in-flight batch slots from the queue between
+//!   AOT-batch-sized chunks, instead of waiting for a flush window.
+//!   A partial batch still lingers up to `batch_timeout` for company.
+//! - **Admission control** — requests carry an optional deadline and a
+//!   [`Priority`] class. The gate sheds work it cannot serve (malformed
+//!   images, queue at capacity, deadlines unmeetable at current depth
+//!   per the batch-service-time EWMA) with a typed [`Response::Shed`]
+//!   instead of silently queueing; workers shed queued requests whose
+//!   deadline expired before dispatch. Every request gets exactly one
+//!   response: one `Done` or one `Shed`.
+//! - **Drain/reload** — a [`Control::Reload`] quiesces the workers
+//!   between batches, applies a closure against the shared [`Handle`]
+//!   (e.g. [`Handle::reload_artifacts`]), re-derives model parameters,
+//!   and resumes — admitted requests wait in the queue and none are
+//!   dropped. Workers re-warm their private shards on resume.
+//! - **Live observability** — every decision lands in a shared
+//!   [`ServeMetrics`] (queue depth, in-flight batches, shed counts by
+//!   reason, goodput, per-priority latency), snapshottable mid-flight
+//!   via [`Control::Stats`] and returned with the final
+//!   [`ServerStats`].
+//!
+//! Each worker owns a private warm exec-cache shard, so the hot path
+//! never contends on a cache lock; per-worker [`WorkerStats`] merge into
+//! the global [`ServerStats`] view when the queue drains. Everything the
+//! workers touch is `Send + Sync`, so the workers borrow one `&Handle`
+//! through `std::thread::scope`.
+//!
+//! All waits go through an injectable [`Clock`] ([`RealClock`] in
+//! production), so deadline and flush behavior is deterministic under
+//! the test suite's [`VirtualClock`].
+
+pub mod clock;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cache::{CacheStats, ExecCache};
 use crate::handle::Handle;
 use crate::manifest::Artifact;
-use crate::metrics::{TimingStats, Throughput};
+use crate::metrics::{ServeMetrics, StatsSnapshot, TimingStats, Throughput,
+                     PRIORITY_CLASSES};
 use crate::runtime::HostTensor;
 use crate::types::{MiopenError, Result};
+use crate::util::rng::SplitMix64;
+
+pub use clock::{Clock, RealClock, VirtualClock};
+
+/// Signature of the serving model's inference artifact.
+pub const SERVE_INFER_SIG: &str = "cnn_infer-f32";
+/// Signature of the parameter-init artifact feeding [`SERVE_INFER_SIG`].
+pub const SERVE_INIT_SIG: &str = "cnn_init-f32";
+
+/// Request priority class. Workers always pop higher classes first;
+/// the admission gate treats all classes alike (shedding is per-request
+/// deadline/backlog math, not per-class quotas).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    /// Served before everything else.
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Served only when no higher class is waiting.
+    Low,
+}
+
+impl Priority {
+    /// Index into per-priority arrays (0 = high … 2 = low).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Display name, matching `metrics::PRIORITY_NAMES`.
+    pub fn as_str(self) -> &'static str {
+        crate::metrics::PRIORITY_NAMES[self.index()]
+    }
+
+    /// Inverse of [`Priority::index`]; out-of-range maps to `Normal`.
+    pub fn from_index(i: usize) -> Priority {
+        match i {
+            0 => Priority::High,
+            2 => Priority::Low,
+            _ => Priority::Normal,
+        }
+    }
+}
 
 /// One inference request: a single image, flattened C*S*S f32.
+/// Timestamps are µs on the engine's [`Clock`].
 pub struct Request {
     pub id: u64,
     pub image: Vec<f32>,
-    pub submitted: Instant,
+    /// When the client submitted (µs on the serving clock).
+    pub submitted_us: u64,
+    /// Absolute completion deadline (µs on the serving clock); None =
+    /// never shed for time.
+    pub deadline_us: Option<u64>,
+    pub priority: Priority,
+    /// Client-chosen affinity key (hot-key traces group on it; the
+    /// engine carries it through to the [`Completion`] for accounting).
+    pub key: u64,
     pub resp: mpsc::Sender<Response>,
 }
 
+impl Request {
+    /// A normal-priority, deadline-less request stamped on `clock`.
+    pub fn new(id: u64, image: Vec<f32>, clock: &dyn Clock,
+               resp: &mpsc::Sender<Response>) -> Request {
+        Request {
+            id,
+            image,
+            submitted_us: clock.now_us(),
+            deadline_us: None,
+            priority: Priority::Normal,
+            key: id,
+            resp: resp.clone(),
+        }
+    }
+}
+
+/// Why the engine refused to serve a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// At admission: predicted completion time exceeds the deadline at
+    /// the current queue depth.
+    DeadlineUnmeetable,
+    /// At admission: the queue is at `queue_cap`.
+    QueueFull,
+    /// At dispatch: the deadline expired while the request was queued.
+    Expired,
+    /// At admission: the request is malformed (wrong image size) — the
+    /// slow-poison hardening; bad requests can no longer kill workers.
+    Malformed,
+}
+
+impl ShedReason {
+    /// Stable name used in stats output.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::DeadlineUnmeetable => "deadline_unmeetable",
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Expired => "expired",
+            ShedReason::Malformed => "malformed",
+        }
+    }
+}
+
+/// A served inference result.
 #[derive(Debug, Clone)]
-pub struct Response {
+pub struct Completion {
     pub id: u64,
     pub predicted_class: i32,
     pub logits: Vec<f32>,
     /// queue + batch + execute latency, µs
     pub latency_us: f64,
+    pub priority: Priority,
+    /// Which worker executed the batch (hot-key balance accounting).
+    pub worker: usize,
+}
+
+/// A typed refusal — the request was NOT executed.
+#[derive(Debug, Clone)]
+pub struct Shed {
+    pub id: u64,
+    pub reason: ShedReason,
+    pub priority: Priority,
+    /// Queue depth at the shed decision (admission-time sheds only;
+    /// 0 for [`ShedReason::Expired`]).
+    pub queue_depth: usize,
+}
+
+/// Exactly one `Response` is sent per request: `Done` with the result,
+/// or `Shed` with the refusal reason.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// The request was executed.
+    Done(Completion),
+    /// The request was refused without execution.
+    Shed(Shed),
+}
+
+impl Response {
+    /// The request id this response answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Done(c) => c.id,
+            Response::Shed(s) => s.id,
+        }
+    }
+
+    /// True for [`Response::Done`].
+    pub fn is_done(&self) -> bool {
+        matches!(self, Response::Done(_))
+    }
+
+    /// The completion, if served.
+    pub fn as_done(&self) -> Option<&Completion> {
+        match self {
+            Response::Done(c) => Some(c),
+            Response::Shed(_) => None,
+        }
+    }
+
+    /// The completion by value, if served.
+    pub fn into_done(self) -> Option<Completion> {
+        match self {
+            Response::Done(c) => Some(c),
+            Response::Shed(_) => None,
+        }
+    }
+
+    /// The shed record, if refused.
+    pub fn as_shed(&self) -> Option<&Shed> {
+        match self {
+            Response::Done(_) => None,
+            Response::Shed(s) => Some(s),
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Max requests per batch (clamped to the artifact's AOT batch size).
     pub batch_max: usize,
-    /// Flush a partial batch after this long.
+    /// How long a *partial* batch lingers for company before launching
+    /// (continuous batching still tops batches up mid-flight).
     pub batch_timeout: Duration,
     /// Worker threads pulling from the shared batching queue.
     pub workers: usize,
     /// Capacity of each worker's private exec-cache shard.
     pub shard_capacity: usize,
+    /// Admission bound: requests arriving at this queue depth are shed
+    /// with [`ShedReason::QueueFull`] instead of queueing unboundedly.
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -64,6 +257,7 @@ impl Default for ServeConfig {
             batch_timeout: Duration::from_millis(5),
             workers: 1,
             shard_capacity: 32,
+            queue_cap: 1024,
         }
     }
 }
@@ -78,6 +272,14 @@ pub struct WorkerStats {
     pub batches: u64,
     /// This worker's private exec-cache shard counters.
     pub cache: CacheStats,
+    /// Responses this worker could not deliver because the client hung
+    /// up first (previously dropped silently).
+    pub client_gone: u64,
+    /// Requests this worker shed at dispatch because their deadline
+    /// expired while queued.
+    pub shed_expired: u64,
+    /// Times this worker re-warmed its shard after a drain/reload.
+    pub rewarms: u64,
 }
 
 #[derive(Debug, Default)]
@@ -88,37 +290,106 @@ pub struct ServerStats {
     /// Merged exec-cache counters across all worker shards.
     pub shard_cache: CacheStats,
     pub per_worker: Vec<WorkerStats>,
+    /// Total undeliverable responses (worker + admission-gate sides).
+    pub client_gone: u64,
+    /// Final [`ServeMetrics`] view at shutdown — shed counts by reason,
+    /// goodput, per-priority latency.
+    pub snapshot: StatsSnapshot,
+}
+
+// ---------------------------------------------------------------------------
+// Control plane
+// ---------------------------------------------------------------------------
+
+/// A reload action applied against the shared [`Handle`] while the
+/// worker pool is quiesced (e.g. `|h| h.reload_artifacts()`).
+pub type ReloadFn = Box<dyn FnOnce(&Handle) -> Result<()> + Send>;
+
+/// Messages for [`run_server_ctl`]'s control channel.
+pub enum Control {
+    /// Reply with a live [`StatsSnapshot`].
+    Stats(mpsc::Sender<StatsSnapshot>),
+    /// Drain in-flight batches, run `apply` on the handle, re-derive
+    /// model parameters, re-warm the workers, resume. Admitted requests
+    /// wait in the queue; none are dropped. `done` receives the result.
+    ///
+    /// The reload must preserve the serving artifact's image layout —
+    /// a layout-changing swap is reported as an error.
+    Reload {
+        apply: ReloadFn,
+        done: mpsc::Sender<Result<()>>,
+    },
 }
 
 // ---------------------------------------------------------------------------
 // Shared batching queue
 // ---------------------------------------------------------------------------
 
-/// MPMC request queue with close semantics: the feeder pushes, workers
-/// pop batches (first request blocks, the rest accumulate until
-/// `batch_max` or the batching window closes).
+/// What a worker gets back from [`BatchQueue::pull`].
+enum Pull {
+    /// Requests to execute (never empty in normal operation, but may be
+    /// if a drain interrupted the linger window).
+    Batch(Vec<Request>),
+    /// A drain/reload completed while this worker was parked; the value
+    /// is the new queue epoch. The worker must re-warm its shard.
+    Resumed(u64),
+    /// Closed and drained — the worker should exit.
+    Done,
+}
+
+/// MPMC request queue with priority classes, close semantics, and a
+/// drain barrier: the feeder pushes, workers pop batches (first request
+/// blocks, then the batch lingers up to the flush window while
+/// partial), and [`BatchQueue::begin_drain`] parks all workers between
+/// batches until [`BatchQueue::end_drain`].
 struct BatchQueue {
     inner: Mutex<QueueInner>,
-    cv: Condvar,
+    cv: Arc<Condvar>,
+    clock: Arc<dyn Clock>,
 }
 
 struct QueueInner {
-    q: VecDeque<Request>,
+    /// One FIFO per priority class, popped high-first.
+    q: [VecDeque<Request>; PRIORITY_CLASSES],
+    len: usize,
     closed: bool,
+    draining: bool,
+    /// Workers currently parked on the drain barrier.
+    paused: usize,
+    /// Bumped on every end_drain; lets resumed workers know a reload
+    /// happened while they were parked.
+    epoch: u64,
 }
 
 impl BatchQueue {
-    fn new() -> Self {
+    fn new(clock: Arc<dyn Clock>) -> Self {
+        let cv = Arc::new(Condvar::new());
+        clock.subscribe(cv.clone());
         Self {
-            inner: Mutex::new(QueueInner { q: VecDeque::new(),
-                                           closed: false }),
-            cv: Condvar::new(),
+            inner: Mutex::new(QueueInner {
+                q: Default::default(),
+                len: 0,
+                closed: false,
+                draining: false,
+                paused: 0,
+                epoch: 0,
+            }),
+            cv,
+            clock,
         }
     }
 
-    fn push(&self, req: Request) {
-        self.inner.lock().unwrap().q.push_back(req);
-        self.cv.notify_one();
+    fn push(&self, req: Request, metrics: &ServeMetrics) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.q[req.priority.index()].push_back(req);
+        inner.len += 1;
+        metrics.queue_depth.store(inner.len as u64, Ordering::Relaxed);
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
     }
 
     fn close(&self) {
@@ -126,45 +397,132 @@ impl BatchQueue {
         self.cv.notify_all();
     }
 
-    /// Pop the next batch: block for the first request (None once the
-    /// queue is closed AND drained), then keep accumulating until
-    /// `batch_max` requests or `timeout` past the first one.
-    fn next_batch(&self, batch_max: usize, timeout: Duration)
-        -> Option<Vec<Request>> {
+    /// Park new pulls between batches (workers finish their current
+    /// batch, then wait on the barrier).
+    fn begin_drain(&self) {
+        self.inner.lock().unwrap().draining = true;
+        self.cv.notify_all();
+    }
+
+    /// Lift the drain barrier and bump the epoch; parked workers resume
+    /// with [`Pull::Resumed`].
+    fn end_drain(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.draining = false;
+        inner.epoch += 1;
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Block until every live worker is parked on the drain barrier.
+    /// Re-reads `alive` each wakeup so a worker dying mid-drain (its
+    /// exit notifies the condvar) cannot deadlock the reload.
+    fn wait_all_paused(&self, alive: &AtomicUsize) {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.paused < alive.load(Ordering::Acquire) {
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Wake anyone waiting on queue state after a worker exits (the
+    /// feeder's dead-pool abort, a drain waiting on `paused`).
+    fn worker_exited(&self) {
+        self.cv.notify_all();
+    }
+
+    fn pop_one(inner: &mut QueueInner) -> Option<Request> {
+        for p in 0..PRIORITY_CLASSES {
+            if let Some(r) = inner.q[p].pop_front() {
+                inner.len -= 1;
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Grab up to `max` queued requests without blocking — the
+    /// continuous-batching top-up between in-flight chunks. Returns
+    /// nothing while draining so workers quiesce promptly.
+    fn try_take(&self, max: usize, metrics: &ServeMetrics) -> Vec<Request> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.draining {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        while out.len() < max {
+            match Self::pop_one(&mut inner) {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        metrics.queue_depth.store(inner.len as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Worker-side pop. Blocks for the first request, then accumulates
+    /// until `batch_max` requests or `linger_us` past the first one
+    /// (timed on the engine clock). Parks through drain windows and
+    /// reports resumption; returns [`Pull::Done`] once closed AND
+    /// drained.
+    fn pull(&self, batch_max: usize, linger_us: u64,
+            metrics: &ServeMetrics) -> Pull {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            if !inner.q.is_empty() {
+            if inner.draining {
+                inner.paused += 1;
+                self.cv.notify_all();
+                while inner.draining {
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                inner.paused -= 1;
+                return Pull::Resumed(inner.epoch);
+            }
+            if inner.len > 0 {
                 break;
             }
             if inner.closed {
-                return None;
+                return Pull::Done;
             }
             inner = self.cv.wait(inner).unwrap();
         }
         let mut batch = Vec::with_capacity(batch_max);
-        let deadline = Instant::now() + timeout;
-        loop {
-            while batch.len() < batch_max {
-                match inner.q.pop_front() {
-                    Some(r) => batch.push(r),
-                    None => break,
-                }
-            }
-            if batch.len() >= batch_max || inner.closed {
-                break;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (guard, wait) =
-                self.cv.wait_timeout(inner, deadline - now).unwrap();
-            inner = guard;
-            if wait.timed_out() && inner.q.is_empty() {
-                break;
+        while batch.len() < batch_max {
+            match Self::pop_one(&mut inner) {
+                Some(r) => batch.push(r),
+                None => break,
             }
         }
-        Some(batch)
+        if batch.len() < batch_max && !inner.closed && !inner.draining {
+            let deadline =
+                self.clock.now_us().saturating_add(linger_us);
+            loop {
+                let now = self.clock.now_us();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(inner,
+                                  self.clock.wait_cap(deadline - now))
+                    .unwrap();
+                inner = guard;
+                while batch.len() < batch_max {
+                    match Self::pop_one(&mut inner) {
+                        Some(r) => batch.push(r),
+                        None => break,
+                    }
+                }
+                if batch.len() >= batch_max || inner.closed
+                    || inner.draining {
+                    break;
+                }
+            }
+        }
+        metrics.queue_depth.store(inner.len as u64, Ordering::Relaxed);
+        Pull::Batch(batch)
     }
 }
 
@@ -201,54 +559,232 @@ pub fn infer_image_layout(art: &Artifact) -> Result<(usize, usize, Vec<usize>)> 
     Ok((aot_batch, image_elems, spec.shape.clone()))
 }
 
+/// The serving artifact's image layout, shared read-only by workers.
+struct ImageLayout {
+    aot_batch: usize,
+    image_elems: usize,
+    image_shape: Vec<usize>,
+}
+
+/// Everything the feeder and workers share by reference.
+#[derive(Clone, Copy)]
+struct ServeShared<'a> {
+    handle: &'a Handle,
+    queue: &'a BatchQueue,
+    metrics: &'a ServeMetrics,
+    clock: &'a dyn Clock,
+    sig: &'a str,
+    /// Model parameters; swapped by reload, re-read per batch.
+    params: &'a Mutex<Arc<Vec<HostTensor>>>,
+    layout: &'a ImageLayout,
+    batch_max: usize,
+    linger_us: u64,
+    shard_capacity: usize,
+    queue_cap: usize,
+    workers: usize,
+}
+
+/// Predicted completion time (µs) for a request admitted at queue depth
+/// `depth`: the backlog drains `workers × batch_max` requests per EWMA
+/// batch-service period, plus one period for the request's own batch.
+/// With no observations yet (`ewma_us == 0`) the gate is optimistic and
+/// admits — the first batches calibrate it.
+fn admission_estimate_us(now_us: u64, depth: usize, workers: usize,
+                         batch_max: usize, ewma_us: u64) -> u64 {
+    if ewma_us == 0 {
+        return now_us;
+    }
+    let per_wave = (workers.max(1) * batch_max.max(1)) as u64;
+    let waves = depth as u64 / per_wave + 1;
+    now_us.saturating_add(waves.saturating_mul(ewma_us))
+}
+
+fn count_shed(metrics: &ServeMetrics, reason: ShedReason) {
+    let c = match reason {
+        ShedReason::DeadlineUnmeetable => &metrics.shed_deadline,
+        ShedReason::QueueFull => &metrics.shed_queue_full,
+        ShedReason::Expired => &metrics.shed_expired,
+        ShedReason::Malformed => &metrics.shed_malformed,
+    };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Refuse `req` with a typed [`Response::Shed`]. An undeliverable
+/// refusal (client already gone) still counts as `client_gone`.
+fn shed_request(req: Request, reason: ShedReason, depth: usize,
+                metrics: &ServeMetrics) {
+    count_shed(metrics, reason);
+    let sent = req.resp.send(Response::Shed(Shed {
+        id: req.id,
+        reason,
+        priority: req.priority,
+        queue_depth: depth,
+    }));
+    if sent.is_err() {
+        metrics.client_gone.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The admission gate (feeder side): malformed and over-capacity
+/// requests shed immediately; deadlines are checked against the
+/// EWMA-predicted completion time at the current depth.
+fn admit(ctx: &ServeShared<'_>, req: Request) {
+    let metrics = ctx.metrics;
+    metrics.submitted.fetch_add(1, Ordering::Relaxed);
+    if req.image.len() != ctx.layout.image_elems {
+        let depth = ctx.queue.len();
+        shed_request(req, ShedReason::Malformed, depth, metrics);
+        return;
+    }
+    let depth = ctx.queue.len();
+    if depth >= ctx.queue_cap.max(1) {
+        shed_request(req, ShedReason::QueueFull, depth, metrics);
+        return;
+    }
+    if let Some(d) = req.deadline_us {
+        let est = admission_estimate_us(ctx.clock.now_us(), depth,
+                                        ctx.workers, ctx.batch_max,
+                                        metrics.batch_ewma_us());
+        if est > d {
+            shed_request(req, ShedReason::DeadlineUnmeetable, depth,
+                         metrics);
+            return;
+        }
+    }
+    metrics.admitted.fetch_add(1, Ordering::Relaxed);
+    ctx.queue.push(req, metrics);
+}
+
+/// Drain/reload: park every live worker between batches, run `apply`
+/// on the handle, re-validate the serving layout, re-derive model
+/// parameters, clear the shared exec cache, resume. Queued admitted
+/// requests are untouched — zero loss.
+fn do_reload(ctx: &ServeShared<'_>, alive: &AtomicUsize,
+             apply: ReloadFn) -> Result<()> {
+    ctx.queue.begin_drain();
+    ctx.queue.wait_all_paused(alive);
+    let r = (|| {
+        apply(ctx.handle)?;
+        let manifest = ctx.handle.manifest();
+        let infer = manifest.require(ctx.sig)?;
+        let (aot, elems, shape) = infer_image_layout(infer)?;
+        if aot != ctx.layout.aot_batch || elems != ctx.layout.image_elems
+            || shape != ctx.layout.image_shape {
+            return Err(MiopenError::ShapeMismatch(format!(
+                "reload changed the serving image layout {:?} -> {:?}; \
+                 drain-and-restart the server for layout changes",
+                ctx.layout.image_shape, shape)));
+        }
+        ctx.handle.clear_exec_cache();
+        let new_params = ctx.handle.execute_sig(SERVE_INIT_SIG, &[])?;
+        *ctx.params.lock().unwrap() = Arc::new(new_params);
+        Ok(())
+    })();
+    if r.is_ok() {
+        ctx.metrics.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+    ctx.queue.end_drain();
+    r
+}
+
 /// Run the serving engine until the request channel closes: the calling
-/// thread feeds the shared queue while `cfg.workers` scoped workers pull
-/// batches from it. Executes the `cnn_infer` artifact; model parameters
-/// come from `cnn_init`. Returns merged stats; the first worker error
-/// (if any) is propagated after the queue drains.
+/// thread feeds the shared queue through the admission gate while
+/// `cfg.workers` scoped workers pull batches from it. Executes the
+/// `cnn_infer` artifact; model parameters come from `cnn_init`. Returns
+/// merged stats; the first worker error (if any) is propagated after
+/// the queue drains.
 pub fn run_server(handle: &Handle, cfg: &ServeConfig,
                   rx: mpsc::Receiver<Request>) -> Result<ServerStats> {
-    let infer = handle.manifest().require("cnn_infer-f32")?.clone();
-    let (aot_batch, image_elems, image_shape) = infer_image_layout(&infer)?;
+    let (_ctl_tx, ctl_rx) = mpsc::channel();
+    run_server_with(handle, cfg, rx, ctl_rx, Arc::new(RealClock::new()))
+}
 
-    // parameters: the seeded-init artifact (zero inputs, 7 outputs)
-    let params = handle.execute_sig("cnn_init-f32", &[])?;
+/// [`run_server`] with a control channel for live stats and
+/// drain/reload (see [`Control`]).
+pub fn run_server_ctl(handle: &Handle, cfg: &ServeConfig,
+                      rx: mpsc::Receiver<Request>,
+                      ctl: mpsc::Receiver<Control>) -> Result<ServerStats> {
+    run_server_with(handle, cfg, rx, ctl, Arc::new(RealClock::new()))
+}
+
+/// [`run_server_ctl`] on an explicit clock — the deterministic-test
+/// entry point ([`VirtualClock`]); the clock must be the one that
+/// stamped the requests' `submitted_us`/`deadline_us`.
+pub fn run_server_with(handle: &Handle, cfg: &ServeConfig,
+                       rx: mpsc::Receiver<Request>,
+                       ctl: mpsc::Receiver<Control>,
+                       clock: Arc<dyn Clock>) -> Result<ServerStats> {
+    let manifest = handle.manifest();
+    let infer = manifest.require(SERVE_INFER_SIG)?.clone();
+    drop(manifest);
+    let (aot_batch, image_elems, image_shape) = infer_image_layout(&infer)?;
+    let layout = ImageLayout { aot_batch, image_elems, image_shape };
+
+    // parameters: the seeded-init artifact (zero inputs, 7 outputs);
+    // a reload re-derives them against the swapped-in manifest
+    let params =
+        Mutex::new(Arc::new(handle.execute_sig(SERVE_INIT_SIG, &[])?));
 
     // fail fast: prove the model compiles before spawning workers (each
     // worker then warms its own private shard before pulling requests)
     let _ = handle.compile_sig(&infer.sig)?;
 
     let workers = cfg.workers.max(1);
-    let queue = BatchQueue::new();
+    let queue = BatchQueue::new(clock.clone());
     let alive = AtomicUsize::new(workers);
+    let metrics = ServeMetrics::new();
     let start = Instant::now();
+    let start_us = clock.now_us();
+
+    let ctx = ServeShared {
+        handle,
+        queue: &queue,
+        metrics: &metrics,
+        clock: clock.as_ref(),
+        sig: infer.sig.as_str(),
+        params: &params,
+        layout: &layout,
+        batch_max: cfg.batch_max.min(aot_batch).max(1),
+        linger_us: cfg.batch_timeout.as_micros() as u64,
+        shard_capacity: cfg.shard_capacity,
+        queue_cap: cfg.queue_cap,
+        workers,
+    };
 
     let results: Vec<Result<WorkerStats>> = std::thread::scope(|scope| {
         let mut joins = Vec::with_capacity(workers);
         for worker in 0..workers {
-            let queue = &queue;
             let alive = &alive;
-            let infer_sig = infer.sig.as_str();
-            let params = params.as_slice();
-            let image_shape = image_shape.as_slice();
             joins.push(scope.spawn(move || {
-                let res = worker_loop(handle, worker, queue, cfg, infer_sig,
-                                      params, aot_batch, image_elems,
-                                      image_shape);
+                let res = worker_loop(ctx, worker);
                 alive.fetch_sub(1, Ordering::AcqRel);
+                ctx.queue.worker_exited();
                 res
             }));
         }
-        // The calling thread is the feeder. Poll the worker count so a
-        // fully-dead pool aborts the server (dropping queued requests
-        // unblocks their clients) instead of parking forever on a
-        // request channel the clients still hold open.
+        // The calling thread is the feeder + control plane. Poll the
+        // worker count so a fully-dead pool aborts the server (dropping
+        // queued requests unblocks their clients) instead of parking
+        // forever on a request channel the clients still hold open.
         loop {
             if alive.load(Ordering::Acquire) == 0 {
                 break;
             }
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(req) => queue.push(req),
+            // control first: a reload or stats probe must not starve
+            // behind a full request channel
+            match ctl.try_recv() {
+                Ok(Control::Stats(reply)) => {
+                    let elapsed = clock.now_us()
+                        .saturating_sub(start_us) as f64 / 1e6;
+                    let _ = reply.send(metrics.snapshot(elapsed));
+                }
+                Ok(Control::Reload { apply, done }) => {
+                    let _ = done.send(do_reload(&ctx, &alive, apply));
+                }
+                Err(_) => {}
+            }
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(req) => admit(&ctx, req),
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -283,38 +819,78 @@ pub fn run_server(handle: &Handle, cfg: &ServeConfig,
         return Err(e);
     }
     stats.throughput.wall_s = start.elapsed().as_secs_f64();
+    let elapsed = clock.now_us().saturating_sub(start_us) as f64 / 1e6;
+    stats.snapshot = metrics.snapshot(elapsed);
+    stats.client_gone = stats.snapshot.client_gone;
     Ok(stats)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(handle: &Handle, worker: usize, queue: &BatchQueue,
-               cfg: &ServeConfig, sig: &str, params: &[HostTensor],
-               aot_batch: usize, image_elems: usize, image_shape: &[usize])
-    -> Result<WorkerStats> {
-    let batch_max = cfg.batch_max.min(aot_batch).max(1);
-    let shard = ExecCache::new(cfg.shard_capacity.max(1));
+fn worker_loop(ctx: ServeShared<'_>, worker: usize) -> Result<WorkerStats> {
+    let shard = ExecCache::new(ctx.shard_capacity.max(1));
     // warm this worker's shard before it takes traffic
-    let _ = handle.compile_sig_with(&shard, sig)?;
+    let _ = ctx.handle.compile_sig_with(&shard, ctx.sig)?;
     let mut stats = WorkerStats { worker, ..Default::default() };
-    while let Some(mut batch) = queue.next_batch(batch_max, cfg.batch_timeout) {
-        execute_batch(handle, &shard, sig, params, &mut batch, aot_batch,
-                      image_elems, image_shape, &mut stats)?;
+    loop {
+        match ctx.queue.pull(ctx.batch_max, ctx.linger_us, ctx.metrics) {
+            Pull::Done => break,
+            Pull::Resumed(_epoch) => {
+                // the handle was reloaded while this worker was parked:
+                // drop stale executables and re-warm before resuming
+                shard.clear();
+                let _ = ctx.handle.compile_sig_with(&shard, ctx.sig)?;
+                stats.rewarms += 1;
+            }
+            Pull::Batch(mut batch) => {
+                execute_batch(&ctx, &shard, &mut batch, &mut stats)?;
+            }
+        }
     }
     stats.cache = shard.stats();
     Ok(stats)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn execute_batch(handle: &Handle, shard: &ExecCache, sig: &str,
-                 params: &[HostTensor], pending: &mut Vec<Request>,
-                 aot_batch: usize, image_elems: usize, image_shape: &[usize],
-                 stats: &mut WorkerStats) -> Result<()> {
-    while !pending.is_empty() {
+/// Execute `pending` in AOT-batch-sized chunks, shedding expired
+/// requests at dispatch and topping the in-flight set up from the queue
+/// between chunks (continuous batching).
+fn execute_batch(ctx: &ServeShared<'_>, shard: &ExecCache,
+                 pending: &mut Vec<Request>, stats: &mut WorkerStats)
+    -> Result<()> {
+    let aot_batch = ctx.layout.aot_batch;
+    let image_elems = ctx.layout.image_elems;
+    loop {
+        // deadline expiry at dispatch: anything that can no longer be
+        // served in time is shed instead of burning a batch slot
+        let now = ctx.clock.now_us();
+        pending.retain(|req| match req.deadline_us {
+            Some(d) if now > d => {
+                count_shed(ctx.metrics, ShedReason::Expired);
+                stats.shed_expired += 1;
+                let sent = req.resp.send(Response::Shed(Shed {
+                    id: req.id,
+                    reason: ShedReason::Expired,
+                    priority: req.priority,
+                    queue_depth: 0,
+                }));
+                if sent.is_err() {
+                    stats.client_gone += 1;
+                    ctx.metrics.client_gone
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                false
+            }
+            _ => true,
+        });
+        if pending.is_empty() {
+            return Ok(());
+        }
+
         let used = pending.len().min(aot_batch);
         // assemble the fixed-size AOT batch, zero-padding unused rows
         let mut batch = vec![0f32; aot_batch * image_elems];
         for (i, req) in pending.iter().take(used).enumerate() {
             if req.image.len() != image_elems {
+                // the admission gate sheds malformed images; reaching
+                // here means an internal invariant broke
                 return Err(MiopenError::ShapeMismatch(format!(
                     "request {} image has {} elems, expected {image_elems}",
                     req.id, req.image.len())));
@@ -322,53 +898,168 @@ fn execute_batch(handle: &Handle, shard: &ExecCache, sig: &str,
             batch[i * image_elems..(i + 1) * image_elems]
                 .copy_from_slice(&req.image);
         }
-        let x = HostTensor::from_f32(image_shape, &batch);
+        let x = HostTensor::from_f32(&ctx.layout.image_shape, &batch);
 
-        let mut inputs: Vec<HostTensor> = params.to_vec();
+        let params = ctx.params.lock().unwrap().clone();
+        let mut inputs: Vec<HostTensor> = params.as_ref().clone();
         inputs.push(x);
-        let out = handle.execute_sig_with(shard, sig, &inputs)?;
+        ctx.metrics.in_flight_batches.fetch_add(1, Ordering::Relaxed);
+        let t0 = ctx.clock.now_us();
+        let out = ctx.handle.execute_sig_with(shard, ctx.sig, &inputs);
+        ctx.metrics.in_flight_batches.fetch_sub(1, Ordering::Relaxed);
+        let out = out?;
+        ctx.metrics
+            .observe_batch_us(ctx.clock.now_us().saturating_sub(t0));
         let logits = out[0].as_f32()?;
         let preds = out[1].as_i32()?;
         let classes = out[0].spec.shape[1];
 
-        let done = Instant::now();
+        let done = ctx.clock.now_us();
         for (i, req) in pending.drain(..used).enumerate() {
             let latency_us =
-                done.duration_since(req.submitted).as_secs_f64() * 1e6;
+                done.saturating_sub(req.submitted_us) as f64;
             stats.latency.record(latency_us);
-            let _ = req.resp.send(Response {
+            ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            if req.deadline_us.map(|d| done <= d).unwrap_or(true) {
+                ctx.metrics.completed_in_deadline
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            ctx.metrics.record_latency(req.priority.index(), latency_us);
+            let sent = req.resp.send(Response::Done(Completion {
                 id: req.id,
                 predicted_class: *preds.get(i).unwrap_or(&-1),
                 logits: logits[i * classes..(i + 1) * classes].to_vec(),
                 latency_us,
-            });
+                priority: req.priority,
+                worker: stats.worker,
+            }));
+            if sent.is_err() {
+                // the client hung up before its answer was ready —
+                // previously this error was silently discarded
+                stats.client_gone += 1;
+                ctx.metrics.client_gone.fetch_add(1, Ordering::Relaxed);
+            }
         }
         stats.batch_sizes.record(used as f64);
         stats.requests += used as u64;
         stats.batches += 1;
+
+        // continuous batching: refill in-flight slots from the queue
+        // without waiting for another flush window
+        if pending.len() < ctx.batch_max {
+            let room = ctx.batch_max - pending.len();
+            pending.extend(ctx.queue.try_take(room, ctx.metrics));
+        }
     }
-    Ok(())
 }
 
-/// Load generator: submits `n` requests with Poisson arrivals at `rate`
-/// req/s from the current thread (`rate <= 0` floods with no pacing);
-/// returns the response receiver.
+// ---------------------------------------------------------------------------
+// Load generation
+// ---------------------------------------------------------------------------
+
+/// Traffic shaping for [`generate_load_opts`].
+#[derive(Debug, Clone)]
+pub struct LoadOptions {
+    /// Relative deadline (µs after submission) stamped on every
+    /// request; None = no deadlines.
+    pub deadline_us: Option<u64>,
+    /// Sampling weights for the [high, normal, low] priority classes.
+    pub priority_weights: [f64; PRIORITY_CLASSES],
+    /// Fraction of requests aimed at one hot affinity key (key 0).
+    pub hot_fraction: f64,
+    /// Every k-th request is malformed (wrong image size) — the
+    /// slow-poison trace; 0 = never.
+    pub malformed_every: usize,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        Self {
+            deadline_us: None,
+            priority_weights: [0.0, 1.0, 0.0],
+            hot_fraction: 0.0,
+            malformed_every: 0,
+        }
+    }
+}
+
+fn pick_priority(rng: &mut SplitMix64,
+                 w: &[f64; PRIORITY_CLASSES]) -> Priority {
+    let total: f64 = w.iter().filter(|x| **x > 0.0).sum();
+    if total <= 0.0 {
+        return Priority::Normal;
+    }
+    let mut t = rng.next_f64() * total;
+    for (i, &wi) in w.iter().enumerate() {
+        if wi <= 0.0 {
+            continue;
+        }
+        t -= wi;
+        if t <= 0.0 {
+            return Priority::from_index(i);
+        }
+    }
+    Priority::Low
+}
+
+/// Load generator: submits `n` normal-priority, deadline-less requests
+/// with Poisson arrivals at `rate` req/s from the current thread
+/// (`rate <= 0` floods with no pacing); returns the response receiver.
 pub fn generate_load(tx: &mpsc::Sender<Request>, n: usize, rate: f64,
                      image_elems: usize, seed: u64)
     -> mpsc::Receiver<Response> {
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    generate_load_opts(tx, n, rate, image_elems, seed, &clock,
+                       &LoadOptions::default())
+}
+
+/// [`generate_load`] with traffic shaping (deadlines, priority mix,
+/// hot-key skew, malformed poison) on an explicit clock — must be the
+/// serving engine's clock so timestamps share an origin. Pacing reads
+/// the clock too, so a [`VirtualClock`] caller must advance it.
+pub fn generate_load_opts(tx: &mpsc::Sender<Request>, n: usize, rate: f64,
+                          image_elems: usize, seed: u64,
+                          clock: &Arc<dyn Clock>, opts: &LoadOptions)
+    -> mpsc::Receiver<Response> {
     let (resp_tx, resp_rx) = mpsc::channel();
-    let mut rng = crate::util::rng::SplitMix64::new(seed);
+    let mut rng = SplitMix64::new(seed);
+    let mut next_us = clock.now_us() as f64;
     for id in 0..n {
-        let mut image = vec![0f32; image_elems];
+        let malformed =
+            opts.malformed_every > 0 && (id + 1) % opts.malformed_every == 0;
+        let elems = if malformed { image_elems + 1 } else { image_elems };
+        let mut image = vec![0f32; elems];
         rng.fill_normal_f32(&mut image);
+        let hot = opts.hot_fraction > 0.0
+            && rng.next_f64() < opts.hot_fraction;
+        let now = clock.now_us();
         let _ = tx.send(Request {
             id: id as u64,
             image,
-            submitted: Instant::now(),
+            submitted_us: now,
+            deadline_us: opts.deadline_us.map(|d| now.saturating_add(d)),
+            priority: pick_priority(&mut rng, &opts.priority_weights),
+            key: if hot { 0 } else { id as u64 },
             resp: resp_tx.clone(),
         });
         if rate > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(rng.exp_f64(rate)));
+            // absolute Poisson schedule, hybrid sleep+spin: sleeping
+            // each whole gap would oversleep by scheduler jitter at
+            // sub-ms inter-arrival times and silently pace a "2x
+            // capacity" trace well below the intended rate
+            next_us += rng.exp_f64(rate) * 1e6;
+            loop {
+                let remain = next_us - clock.now_us() as f64;
+                if remain <= 0.0 {
+                    break;
+                }
+                if remain > 1500.0 {
+                    std::thread::sleep(Duration::from_micros(
+                        remain as u64 - 1000));
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
         }
     }
     resp_rx
@@ -384,51 +1075,225 @@ mod tests {
         assert_eq!(c.batch_max, 16);
         assert_eq!(c.workers, 1);
         assert!(c.shard_capacity > 0);
+        assert!(c.queue_cap > 0);
         assert!(c.batch_timeout >= Duration::from_millis(1));
     }
 
-    fn dummy_request(id: u64, resp: &mpsc::Sender<Response>) -> Request {
+    #[test]
+    fn priority_round_trips_and_orders() {
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::from_index(p.index()), p);
+        }
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.as_str(), "high");
+        assert_eq!(Priority::from_index(99), Priority::Normal);
+    }
+
+    #[test]
+    fn response_accessors() {
+        let done = Response::Done(Completion {
+            id: 7,
+            predicted_class: 1,
+            logits: vec![0.0],
+            latency_us: 10.0,
+            priority: Priority::High,
+            worker: 0,
+        });
+        let shed = Response::Shed(Shed {
+            id: 9,
+            reason: ShedReason::QueueFull,
+            priority: Priority::Low,
+            queue_depth: 3,
+        });
+        assert_eq!(done.id(), 7);
+        assert_eq!(shed.id(), 9);
+        assert!(done.is_done() && !shed.is_done());
+        assert!(done.as_done().is_some() && done.as_shed().is_none());
+        assert_eq!(shed.as_shed().unwrap().reason.as_str(), "queue_full");
+        assert!(done.into_done().is_some());
+    }
+
+    fn dummy_request(id: u64, priority: Priority, clock: &dyn Clock,
+                     resp: &mpsc::Sender<Response>) -> Request {
         Request {
-            id,
-            image: vec![0.0; 4],
-            submitted: Instant::now(),
-            resp: resp.clone(),
+            priority,
+            ..Request::new(id, vec![0.0; 4], clock, resp)
+        }
+    }
+
+    fn test_queue() -> (BatchQueue, Arc<VirtualClock>, ServeMetrics) {
+        let clock = Arc::new(VirtualClock::new());
+        let q = BatchQueue::new(clock.clone() as Arc<dyn Clock>);
+        (q, clock, ServeMetrics::new())
+    }
+
+    fn pull_batch(q: &BatchQueue, batch_max: usize, linger_us: u64,
+                  m: &ServeMetrics) -> Vec<Request> {
+        match q.pull(batch_max, linger_us, m) {
+            Pull::Batch(b) => b,
+            _ => panic!("expected a batch"),
         }
     }
 
     #[test]
     fn batch_queue_batches_up_to_max() {
-        let q = BatchQueue::new();
+        let (q, clock, m) = test_queue();
         let (tx, _rx) = mpsc::channel();
         for id in 0..5 {
-            q.push(dummy_request(id, &tx));
+            q.push(dummy_request(id, Priority::Normal, clock.as_ref(),
+                                 &tx), &m);
         }
-        let b = q.next_batch(3, Duration::from_millis(1)).unwrap();
-        assert_eq!(b.len(), 3);
-        let b = q.next_batch(3, Duration::from_millis(1)).unwrap();
-        assert_eq!(b.len(), 2);
+        assert_eq!(pull_batch(&q, 3, 0, &m).len(), 3);
+        assert_eq!(pull_batch(&q, 3, 0, &m).len(), 2);
+    }
+
+    #[test]
+    fn batch_queue_pops_high_priority_first() {
+        let (q, clock, m) = test_queue();
+        let (tx, _rx) = mpsc::channel();
+        q.push(dummy_request(0, Priority::Low, clock.as_ref(), &tx), &m);
+        q.push(dummy_request(1, Priority::Normal, clock.as_ref(), &tx),
+               &m);
+        q.push(dummy_request(2, Priority::High, clock.as_ref(), &tx), &m);
+        let b = pull_batch(&q, 3, 0, &m);
+        let prios: Vec<Priority> = b.iter().map(|r| r.priority).collect();
+        assert_eq!(prios,
+                   vec![Priority::High, Priority::Normal, Priority::Low]);
     }
 
     #[test]
     fn batch_queue_close_drains_then_ends() {
-        let q = BatchQueue::new();
+        let (q, clock, m) = test_queue();
         let (tx, _rx) = mpsc::channel();
-        q.push(dummy_request(0, &tx));
+        q.push(dummy_request(0, Priority::Normal, clock.as_ref(), &tx),
+               &m);
         q.close();
-        let b = q.next_batch(4, Duration::from_millis(1)).unwrap();
-        assert_eq!(b.len(), 1);
-        assert!(q.next_batch(4, Duration::from_millis(1)).is_none());
+        assert_eq!(pull_batch(&q, 4, 0, &m).len(), 1);
+        assert!(matches!(q.pull(4, 0, &m), Pull::Done));
+    }
+
+    /// The virtual-clock port of the old sleep-based partial-batch
+    /// timeout test: a lone request must wait out the full batching
+    /// window (no early flush), measured deterministically in virtual
+    /// time.
+    #[test]
+    fn batch_queue_timeout_flushes_partial_batch() {
+        let clock = Arc::new(VirtualClock::new());
+        let q = Arc::new(BatchQueue::new(clock.clone() as Arc<dyn Clock>));
+        let (tx, _rx) = mpsc::channel();
+        q.push(dummy_request(0, Priority::Normal, clock.as_ref(), &tx),
+               &ServeMetrics::new());
+        let (q2, c2) = (q.clone(), clock.clone());
+        let worker = std::thread::spawn(move || {
+            let b = pull_batch(&q2, 8, 20_000, &ServeMetrics::new());
+            (b.len(), c2.now_us())
+        });
+        // drive virtual time until the worker's linger window closes;
+        // outcomes are time-deterministic regardless of interleaving
+        while !worker.is_finished() {
+            clock.advance_us(5_000);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let (len, flushed_at) = worker.join().unwrap();
+        assert_eq!(len, 1);
+        assert!(flushed_at >= 20_000,
+                "partial batch flushed at {flushed_at}us, before the \
+                 20000us batching window elapsed");
+    }
+
+    /// A request arriving mid-window joins the lingering partial batch
+    /// instead of waiting for the next one — deterministic in virtual
+    /// time.
+    #[test]
+    fn late_arrival_joins_lingering_partial_batch() {
+        let clock = Arc::new(VirtualClock::new());
+        let q = Arc::new(BatchQueue::new(clock.clone() as Arc<dyn Clock>));
+        let (tx, _rx) = mpsc::channel();
+        q.push(dummy_request(0, Priority::Normal, clock.as_ref(), &tx),
+               &ServeMetrics::new());
+        let (q2, c2) = (q.clone(), clock.clone());
+        let worker = std::thread::spawn(move || {
+            let b = pull_batch(&q2, 8, 20_000, &ServeMetrics::new());
+            (b.len(), c2.now_us())
+        });
+        // the second request lands at 5000us virtual — inside any
+        // possible 20000us linger window for the first
+        clock.advance_us(5_000);
+        q.push(dummy_request(1, Priority::Normal, clock.as_ref(), &tx),
+               &ServeMetrics::new());
+        while !worker.is_finished() {
+            clock.advance_us(5_000);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let (len, flushed_at) = worker.join().unwrap();
+        assert_eq!(len, 2, "late arrival missed the lingering batch");
+        assert!(flushed_at >= 20_000);
     }
 
     #[test]
-    fn batch_queue_timeout_flushes_partial_batch() {
-        let q = BatchQueue::new();
+    fn drain_parks_workers_and_resume_reports_epoch() {
+        let (q, _clock, _m) = test_queue();
+        let q = Arc::new(q);
+        let alive = AtomicUsize::new(1);
+        let q2 = Arc::clone(&q);
+        let worker = std::thread::spawn(move || {
+            match q2.pull(4, 0, &ServeMetrics::new()) {
+                Pull::Resumed(e) => e,
+                _ => panic!("expected Resumed after a drain window"),
+            }
+        });
+        q.begin_drain();
+        q.wait_all_paused(&alive);
+        // worker is parked between batches; a reload would run here
+        q.end_drain();
+        assert_eq!(worker.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn try_take_respects_drain_and_caps() {
+        let (q, clock, m) = test_queue();
         let (tx, _rx) = mpsc::channel();
-        q.push(dummy_request(0, &tx));
-        let t = Instant::now();
-        let b = q.next_batch(8, Duration::from_millis(20)).unwrap();
-        assert_eq!(b.len(), 1);
-        assert!(t.elapsed() >= Duration::from_millis(20),
-                "partial batch must wait out the batching window");
+        for id in 0..4 {
+            q.push(dummy_request(id, Priority::Normal, clock.as_ref(),
+                                 &tx), &m);
+        }
+        assert_eq!(q.try_take(3, &m).len(), 3);
+        q.begin_drain();
+        assert!(q.try_take(3, &m).is_empty(),
+                "top-up must pause during a drain");
+        q.end_drain();
+        assert_eq!(q.try_take(3, &m).len(), 1);
+        assert_eq!(q.try_take(3, &m).len(), 0);
+    }
+
+    #[test]
+    fn admission_estimate_math() {
+        // no observations: optimistic (estimate == now)
+        assert_eq!(admission_estimate_us(100, 50, 2, 8, 0), 100);
+        // empty queue: one wave for the request's own batch
+        assert_eq!(admission_estimate_us(0, 0, 2, 8, 1000), 1000);
+        // 32 queued / (2 workers * 8 per batch) = 2 waves + own = 3
+        assert_eq!(admission_estimate_us(0, 32, 2, 8, 1000), 3000);
+        // deeper queue -> strictly later estimate
+        assert!(admission_estimate_us(0, 64, 2, 8, 1000)
+                > admission_estimate_us(0, 32, 2, 8, 1000));
+    }
+
+    #[test]
+    fn load_options_priority_sampling() {
+        let mut rng = SplitMix64::new(42);
+        let w = [1.0, 1.0, 1.0];
+        let mut counts = [0usize; PRIORITY_CLASSES];
+        for _ in 0..300 {
+            counts[pick_priority(&mut rng, &w).index()] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 50),
+                "uniform weights must hit every class: {counts:?}");
+        let only_high = [1.0, 0.0, 0.0];
+        for _ in 0..20 {
+            assert_eq!(pick_priority(&mut rng, &only_high),
+                       Priority::High);
+        }
+        assert_eq!(pick_priority(&mut rng, &[0.0; 3]), Priority::Normal);
     }
 }

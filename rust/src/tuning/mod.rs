@@ -87,11 +87,11 @@ impl<'h> TuningSession<'h> {
             }
 
             // Keep only grid points whose tuned artifact actually exists.
+            let manifest = self.handle.manifest();
             let mut available: Vec<TuningParams> = grid
                 .into_iter()
                 .filter(|tp| {
-                    self.handle
-                        .manifest
+                    manifest
                         .get(&solver.artifact_sig(&sig, Some(tp)))
                         .is_some()
                 })
@@ -133,7 +133,7 @@ impl<'h> TuningSession<'h> {
 
             let default_time = {
                 let default_sig = solver.artifact_sig(&sig, None);
-                self.handle.manifest.get(&default_sig).and_then(|_| {
+                manifest.get(&default_sig).and_then(|_| {
                     let exe = self.handle.compile_sig(&default_sig).ok()?;
                     let inputs = self.handle.random_inputs(&default_sig).ok()?;
                     self.handle.time_exec(&exe, &inputs).ok()

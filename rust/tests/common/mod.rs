@@ -53,7 +53,8 @@ pub fn mock_handle(manifest_json: &str, cfg: MockConfig, tag: &str) -> Handle {
 /// Deterministic random inputs for an artifact signature.
 pub fn seeded_inputs(handle: &Handle, sig: &str, seed: u64)
     -> Result<Vec<HostTensor>> {
-    let art = handle.manifest().require(sig)?;
+    let manifest = handle.manifest();
+    let art = manifest.require(sig)?;
     let mut rng = SplitMix64::new(seed);
     Ok(art
         .inputs

@@ -1,20 +1,28 @@
-//! Integration: the batched inference driver + the E2E training loop
-//! (the library-as-deployed paths, DESIGN.md S14/S15).
+//! Integration: the continuous-batching inference engine + the E2E
+//! training loop (the library-as-deployed paths, DESIGN.md S14/S15),
+//! including the adversarial-traffic overload suite.
 
 mod common;
 
 use std::sync::mpsc;
 use std::time::Duration;
 
-use miopen_rs::runtime::HostTensor;
-use miopen_rs::serve::{generate_load, run_server, Request, ServeConfig};
+use miopen_rs::bench::serve::{measure_capacity, run_trace, OverloadConfig,
+                              TraceKind};
+use miopen_rs::runtime::{HostTensor, MockConfig};
+use miopen_rs::serve::{generate_load, run_server, Priority, RealClock,
+                       Request, Response, ServeConfig, ShedReason};
+
+fn infer_image_elems(handle: &miopen_rs::handle::Handle) -> usize {
+    let manifest = handle.manifest();
+    let infer = manifest.require("cnn_infer-f32").unwrap();
+    infer.inputs.last().unwrap().shape[1..].iter().product()
+}
 
 #[test]
 fn server_answers_all_requests_with_batching() {
     let handle = common::cpu_handle("serve-basic");
-    let infer = handle.manifest().require("cnn_infer-f32").unwrap();
-    let image_elems: usize =
-        infer.inputs.last().unwrap().shape[1..].iter().product();
+    let image_elems = infer_image_elems(&handle);
 
     let (tx, rx) = mpsc::channel();
     let n = 40;
@@ -27,7 +35,7 @@ fn server_answers_all_requests_with_batching() {
         ..Default::default()
     };
     let stats = run_server(&handle, &cfg, rx).unwrap();
-    let responses: Vec<_> = loader.join().unwrap().iter().collect();
+    let responses: Vec<Response> = loader.join().unwrap().iter().collect();
 
     assert_eq!(responses.len(), n);
     assert_eq!(stats.throughput.requests, n as u64);
@@ -35,14 +43,16 @@ fn server_answers_all_requests_with_batching() {
             "high-rate load must batch (got {:.2})",
             stats.throughput.mean_batch_size());
     for r in &responses {
-        assert!(r.predicted_class >= 0 && r.predicted_class < 3);
-        assert_eq!(r.logits.len(), 3);
-        assert!(r.latency_us > 0.0);
+        let c = r.as_done().expect("deadline-less load must never shed");
+        assert!(c.predicted_class >= 0 && c.predicted_class < 3);
+        assert_eq!(c.logits.len(), 3);
+        assert!(c.latency_us > 0.0);
     }
     // ids are all answered exactly once
-    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id()).collect();
     ids.sort_unstable();
     assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    assert_eq!(stats.snapshot.shed_total(), 0);
 }
 
 #[test]
@@ -51,9 +61,7 @@ fn multi_worker_server_answers_every_request_exactly_once() {
     // batching queue, every request is answered exactly once and the
     // per-worker stats add up to the global view.
     let handle = common::cpu_handle("serve-multiworker");
-    let infer = handle.manifest().require("cnn_infer-f32").unwrap();
-    let image_elems: usize =
-        infer.inputs.last().unwrap().shape[1..].iter().product();
+    let image_elems = infer_image_elems(&handle);
 
     let (tx, rx) = mpsc::channel();
     let n = 96;
@@ -68,12 +76,13 @@ fn multi_worker_server_answers_every_request_exactly_once() {
         ..Default::default()
     };
     let stats = run_server(&handle, &cfg, rx).unwrap();
-    let responses: Vec<_> = loader.join().unwrap().iter().collect();
+    let responses: Vec<Response> = loader.join().unwrap().iter().collect();
 
     // exactly once: all ids present, none duplicated
-    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id()).collect();
     ids.sort_unstable();
     assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    assert!(responses.iter().all(Response::is_done));
 
     assert_eq!(stats.per_worker.len(), 4);
     assert_eq!(stats.throughput.requests, n as u64);
@@ -96,10 +105,10 @@ fn multi_worker_server_answers_every_request_exactly_once() {
 fn partial_batch_flushes_on_timeout() {
     // Fewer requests than batch_max and the channel stays open: the
     // batching window must flush the partial batch instead of stalling.
+    // (The deterministic virtual-clock twin of this test lives in
+    // serve::tests; this one proves it against the real clock.)
     let handle = common::cpu_handle("serve-flush");
-    let infer = handle.manifest().require("cnn_infer-f32").unwrap();
-    let image_elems: usize =
-        infer.inputs.last().unwrap().shape[1..].iter().product();
+    let image_elems = infer_image_elems(&handle);
 
     let (tx, rx) = mpsc::channel();
     let cfg = ServeConfig {
@@ -110,15 +119,11 @@ fn partial_batch_flushes_on_timeout() {
     };
     let server = std::thread::spawn(move || run_server(&handle, &cfg, rx));
 
+    let clock = RealClock::new();
     let (resp_tx, resp_rx) = mpsc::channel();
     for id in 0..3u64 {
-        tx.send(Request {
-            id,
-            image: vec![0.1; image_elems],
-            submitted: std::time::Instant::now(),
-            resp: resp_tx.clone(),
-        })
-        .unwrap();
+        tx.send(Request::new(id, vec![0.1; image_elems], &clock, &resp_tx))
+            .unwrap();
     }
     // responses must arrive while the request channel is still open —
     // only the timeout flush can deliver them
@@ -128,7 +133,8 @@ fn partial_batch_flushes_on_timeout() {
             .recv_timeout(Duration::from_secs(10))
             .expect("partial batch must flush on timeout"));
     }
-    let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+    assert!(got.iter().all(Response::is_done));
+    let mut ids: Vec<u64> = got.iter().map(|r| r.id()).collect();
     ids.sort_unstable();
     assert_eq!(ids, vec![0, 1, 2]);
 
@@ -138,36 +144,93 @@ fn partial_batch_flushes_on_timeout() {
 }
 
 #[test]
-fn server_rejects_malformed_request() {
+fn malformed_request_is_shed_not_fatal() {
+    // Slow-poison hardening: a malformed request used to propagate into
+    // the worker and kill the server. The admission gate now sheds it
+    // with a typed response while well-formed traffic keeps flowing.
     let handle = common::cpu_handle("serve-badreq");
+    let image_elems = infer_image_elems(&handle);
+    let clock = RealClock::new();
     let (tx, rx) = mpsc::channel();
-    let (resp_tx, _resp_rx) = mpsc::channel();
-    tx.send(Request {
-        id: 0,
-        image: vec![0.0; 7], // wrong size
-        submitted: std::time::Instant::now(),
-        resp: resp_tx,
-    })
-    .unwrap();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    tx.send(Request::new(0, vec![0.0; 7], &clock, &resp_tx)).unwrap();
+    tx.send(Request::new(1, vec![0.0; image_elems], &clock, &resp_tx))
+        .unwrap();
     drop(tx);
-    let err = run_server(&handle, &ServeConfig::default(), rx);
-    assert!(err.is_err());
+    drop(resp_tx);
+
+    let stats = run_server(&handle, &ServeConfig::default(), rx).unwrap();
+    let responses: Vec<Response> = resp_rx.iter().collect();
+    assert_eq!(responses.len(), 2);
+    let bad = responses.iter().find(|r| r.id() == 0).unwrap();
+    assert_eq!(bad.as_shed().expect("malformed must shed").reason,
+               ShedReason::Malformed);
+    assert!(responses.iter().find(|r| r.id() == 1).unwrap().is_done());
+    assert_eq!(stats.snapshot.submitted, 2);
+    assert_eq!(stats.snapshot.admitted, 1);
+    assert_eq!(stats.snapshot.shed_malformed, 1);
+}
+
+#[test]
+fn undelivered_responses_count_client_gone() {
+    // Regression: workers used to ignore the mpsc::Sender error when a
+    // client hung up before its answer was ready, silently dropping the
+    // result. It must now be counted as client_gone.
+    let handle = common::cpu_handle("serve-clientgone");
+    let image_elems = infer_image_elems(&handle);
+    let clock = RealClock::new();
+    let (tx, rx) = mpsc::channel();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    drop(resp_rx); // the client hangs up before the server answers
+    for id in 0..4u64 {
+        tx.send(Request::new(id, vec![0.1; image_elems], &clock, &resp_tx))
+            .unwrap();
+    }
+    drop(tx);
+    drop(resp_tx);
+
+    let stats = run_server(&handle, &ServeConfig::default(), rx).unwrap();
+    // the work was still done and counted, but every delivery failed
+    assert_eq!(stats.throughput.requests, 4);
+    assert_eq!(stats.client_gone, 4);
+    assert_eq!(stats.snapshot.client_gone, 4);
 }
 
 #[test]
 fn dead_worker_pool_aborts_and_unblocks_clients() {
-    // If every worker dies (here: a malformed request kills the only
-    // one) while clients still hold the request channel open, the
-    // server must abort — dropping queued requests so blocked clients
-    // see a disconnect — rather than parking forever on the feeder.
-    let handle = common::cpu_handle("serve-dead-pool");
-    let infer = handle.manifest().require("cnn_infer-f32").unwrap();
-    let image_elems: usize =
-        infer.inputs.last().unwrap().shape[1..].iter().product();
-
+    // If every worker dies while clients still hold the request channel
+    // open, the server must abort — dropping queued requests so blocked
+    // clients see a disconnect — rather than parking forever on the
+    // feeder. Malformed requests no longer kill workers (they shed at
+    // admission), so the failure is injected below the engine with the
+    // mock backend.
+    let manifest = r#"{
+      "version": 1,
+      "artifacts": [
+        {"sig": "cnn_init-f32", "file": "cnn_init-f32.hlo.txt",
+         "primitive": "cnn", "dtype": "f32",
+         "inputs": [],
+         "outputs": [{"shape": [4, 8], "dtype": "f32"}]},
+        {"sig": "cnn_infer-f32", "file": "cnn_infer-f32.hlo.txt",
+         "primitive": "cnn", "dtype": "f32",
+         "inputs": [{"shape": [4, 8], "dtype": "f32"},
+                    {"shape": [4, 8], "dtype": "f32"}],
+         "outputs": [{"shape": [4, 3], "dtype": "f32"},
+                     {"shape": [4], "dtype": "i32"}]}
+      ]
+    }"#;
+    let handle = common::mock_handle(
+        manifest,
+        MockConfig {
+            fail_exec_containing: vec!["cnn_infer".into()],
+            ..Default::default()
+        },
+        "serve-dead-pool",
+    );
+    let clock = RealClock::new();
     let (tx, rx) = mpsc::channel();
     let cfg = ServeConfig {
-        batch_max: 1, // one request per batch: the bad one kills the worker
+        batch_max: 1, // one request per batch: the first one kills the worker
         batch_timeout: Duration::from_millis(0),
         workers: 1,
         ..Default::default()
@@ -175,20 +238,9 @@ fn dead_worker_pool_aborts_and_unblocks_clients() {
     let server = std::thread::spawn(move || run_server(&handle, &cfg, rx));
 
     let (resp_tx, resp_rx) = mpsc::channel();
-    tx.send(Request {
-        id: 0,
-        image: vec![0.0; 7], // malformed: kills the worker
-        submitted: std::time::Instant::now(),
-        resp: resp_tx.clone(),
-    })
-    .unwrap();
-    tx.send(Request {
-        id: 1,
-        image: vec![0.0; image_elems], // well-formed, but left queued
-        submitted: std::time::Instant::now(),
-        resp: resp_tx,
-    })
-    .unwrap();
+    tx.send(Request::new(0, vec![0.0; 8], &clock, &resp_tx)).unwrap();
+    tx.send(Request::new(1, vec![0.0; 8], &clock, &resp_tx)).unwrap();
+    drop(resp_tx);
 
     // tx intentionally stays open: only the dead-pool abort can drop
     // the queued request and disconnect us
@@ -199,6 +251,62 @@ fn dead_worker_pool_aborts_and_unblocks_clients() {
     drop(tx);
     assert!(server.join().unwrap().is_err(),
             "worker error must surface from run_server");
+}
+
+#[test]
+fn adversarial_traces_hold_overload_gates() {
+    // The ISSUE acceptance suite: measure flood capacity once, then
+    // drive every adversarial trace against a live engine and hold the
+    // overload gates — exactly-once delivery everywhere, burst goodput
+    // >= 0.9x capacity with bounded admitted p99 and a successful
+    // mid-trace drain/reload, warm shards + engaged workers under
+    // hot-key skew, and typed shedding of the slow-poison stream.
+    let handle = common::cpu_handle("serve-overload");
+    let cfg = OverloadConfig { requests: 256, ..Default::default() };
+    let capacity = measure_capacity(&handle, &cfg).unwrap();
+    assert!(capacity > 0.0, "capacity flood served nothing");
+
+    for kind in TraceKind::all() {
+        let r = run_trace(&handle, kind, &cfg, capacity).unwrap();
+        assert!(r.exactly_once,
+                "{}: {} done + {} shed != {} requests answered once",
+                r.trace, r.done, r.shed, r.requests);
+        assert_eq!(r.client_gone, 0, "{}: no client ever hung up", r.trace);
+        assert!(r.done >= r.requests / 2,
+                "{}: served {} of {}", r.trace, r.done, r.requests);
+        match kind {
+            TraceKind::Burst => {
+                assert_eq!(r.reloads, 1,
+                           "burst must apply its mid-trace drain/reload");
+                assert!(r.goodput_over_capacity >= 0.9,
+                        "burst goodput {:.1}/s < 0.9x capacity {:.1}/s",
+                        r.goodput_req_s, r.capacity_req_s);
+                // dispatch-time expiry bounds a served request's lateness
+                // by about one batch-service period past its deadline
+                assert!(r.admitted_p99_us <= r.deadline_us as f64 * 1.25,
+                        "burst admitted p99 {:.0}us vs deadline {}us",
+                        r.admitted_p99_us, r.deadline_us);
+            }
+            TraceKind::Diurnal => {
+                assert!(r.goodput_req_s > 0.0);
+            }
+            TraceKind::HotKey => {
+                assert!(r.shard_hit_rate > 0.8,
+                        "hot-key skew must not thrash worker shards: {:.2}",
+                        r.shard_hit_rate);
+                if r.done > 0 {
+                    assert!(r.min_worker_share > 0.0,
+                            "hot-key load must still engage every worker");
+                }
+            }
+            TraceKind::SlowPoison => {
+                assert_eq!(r.shed_malformed, r.requests / 5,
+                           "every 5th request is poison and must shed");
+                assert!(r.shed >= r.shed_malformed,
+                        "typed sheds must cover the poison stream");
+            }
+        }
+    }
 }
 
 #[test]
@@ -266,11 +374,20 @@ fn serve_bench_sweep_scales_and_writes_bench_json() {
     assert_eq!(cold.refined, cold.cold_total,
                "the background refiner must find every cold shape");
 
+    // one overload trace rides along so the JSON "overload" section of
+    // the checked-in artifact is populated by the test run too
+    let capacity = measure_capacity(&handle, &OverloadConfig::default())
+        .unwrap();
+    let overload = vec![run_trace(&handle, TraceKind::SlowPoison,
+                                  &OverloadConfig::default(), capacity)
+        .unwrap()];
+
     let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_serve.json");
     miopen_rs::bench::serve::write_json(&points, &dtype_points,
-                                        &layout_points, Some(&cold), &out)
+                                        &layout_points, Some(&cold),
+                                        &overload, &out)
         .unwrap();
     assert!(out.exists());
 }
@@ -311,6 +428,35 @@ fn server_rejects_malformed_infer_manifest_up_front() {
     };
     let err = miopen_rs::serve::infer_image_layout(&art).unwrap_err();
     assert!(err.to_string().contains("rank-1"), "got: {err}");
+}
+
+#[test]
+fn priority_classes_report_separate_latency_stats() {
+    // Mixed-priority load populates the per-class p50/p99 summaries the
+    // stats snapshot exposes; every class that completed has finite
+    // numbers.
+    let handle = common::cpu_handle("serve-priorities");
+    let image_elems = infer_image_elems(&handle);
+    let clock = RealClock::new();
+    let (tx, rx) = mpsc::channel();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    for id in 0..30u64 {
+        let mut req =
+            Request::new(id, vec![0.1; image_elems], &clock, &resp_tx);
+        req.priority = Priority::from_index((id % 3) as usize);
+        tx.send(req).unwrap();
+    }
+    drop(tx);
+    drop(resp_tx);
+    let stats = run_server(&handle, &ServeConfig::default(), rx).unwrap();
+    assert_eq!(resp_rx.iter().count(), 30);
+    let snap = &stats.snapshot;
+    assert_eq!(snap.per_priority.len(), 3);
+    for p in &snap.per_priority {
+        assert_eq!(p.count, 10, "class {}", p.class);
+        assert!(p.p50_us.is_finite() && p.p99_us >= p.p50_us,
+                "class {}", p.class);
+    }
 }
 
 #[test]

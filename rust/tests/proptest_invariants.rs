@@ -813,6 +813,108 @@ fn prop_bf16_parity_within_documented_eps_bound() {
 }
 
 #[test]
+fn prop_serve_exactly_once() {
+    // The serve engine's delivery contract under random adversarial
+    // mixes (workers, batch sizes, queue bounds, priorities, expired
+    // deadlines, malformed images): every submitted request gets
+    // exactly ONE response — Done or a typed Shed — no id is answered
+    // twice, and a malformed request is never executed.
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    use miopen_rs::serve::{run_server, Priority, RealClock, Request,
+                           Response, ServeConfig, ShedReason};
+
+    let handle = common::cpu_handle("prop-serve");
+    let manifest = handle.manifest();
+    let image_elems: usize = manifest
+        .require("cnn_infer-f32")
+        .unwrap()
+        .inputs
+        .last()
+        .unwrap()
+        .shape[1..]
+        .iter()
+        .product();
+    drop(manifest);
+
+    let scenario_gen = Gen::new(|rng: &mut SplitMix64| {
+        (
+            1 + rng.below(3) as usize,   // workers
+            1 + rng.below(8) as usize,   // batch_max
+            4 + rng.below(64) as usize,  // queue_cap
+            10 + rng.below(51) as usize, // requests
+            rng.next_u64(),              // per-case traffic seed
+        )
+    });
+    forall("serve-exactly-once", &scenario_gen, 8,
+           |&(workers, batch_max, queue_cap, n, seed)| {
+        let mut rng = SplitMix64::new(seed);
+        let clock = RealClock::new();
+        let (tx, rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let mut malformed = std::collections::HashSet::new();
+        for id in 0..n as u64 {
+            let bad = rng.below(6) == 0;
+            let elems = if bad { image_elems + 1 } else { image_elems };
+            if bad {
+                malformed.insert(id);
+            }
+            let mut req =
+                Request::new(id, vec![0.05; elems], &clock, &resp_tx);
+            req.priority = Priority::from_index(rng.below(3) as usize);
+            req.deadline_us = match rng.below(4) {
+                0 => None,
+                // already expired when the admission gate sees it
+                1 => Some(clock.now_us().saturating_sub(1)),
+                // ten seconds out: never shed on a healthy host
+                _ => Some(clock.now_us() + 10_000_000),
+            };
+            tx.send(req).map_err(|e| e.to_string())?;
+        }
+        drop(tx);
+        drop(resp_tx);
+        let cfg = ServeConfig {
+            batch_max,
+            batch_timeout: Duration::from_millis(1),
+            workers,
+            queue_cap,
+            ..Default::default()
+        };
+        run_server(&handle, &cfg, rx).map_err(|e| e.to_string())?;
+        let responses: Vec<Response> = resp_rx.iter().collect();
+        if responses.len() != n {
+            return Err(format!("{} responses for {n} requests",
+                               responses.len()));
+        }
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id()).collect();
+        ids.sort_unstable();
+        if ids != (0..n as u64).collect::<Vec<_>>() {
+            return Err("an id was answered zero or multiple times".into());
+        }
+        for r in &responses {
+            match r {
+                Response::Done(c) => {
+                    if malformed.contains(&c.id) {
+                        return Err(format!(
+                            "malformed request {} was executed", c.id));
+                    }
+                }
+                Response::Shed(s) => {
+                    if malformed.contains(&s.id)
+                        != (s.reason == ShedReason::Malformed) {
+                        return Err(format!(
+                            "request {} shed with wrong reason {:?}",
+                            s.id, s.reason));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_immediate_pick_agrees_with_find_top2() {
     // Warm the full figure-6 set with a real find, then: for any of
     // those shapes, the immediate pick with the shape's own db entry

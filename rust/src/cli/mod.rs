@@ -111,11 +111,25 @@ COMMANDS:
                  --channels C --act relu|...]
   tables       Print the supported-fusion tables (Tables I & II)
   artifacts-check  Verify every manifest artifact exists on disk
+  db           Journal db maintenance and fleet tooling
+                 merge --out DIR IN_DIR... : union find/perf-dbs tuned
+                 on many machines (conflicts resolve by measured time;
+                 legacy JSON inputs migrate forward transparently)
+                 info [--db-dir DIR]    : entry counts, journal bytes,
+                 recovery health counters
+                 compact [--db-dir DIR] : rewrite journals as one
+                 snapshot record each
   info         Platform + manifest + cache summary
 
 GLOBAL OPTIONS:
   --artifacts DIR   artifact directory (default: ./artifacts)
   --db-dir DIR      user db directory
+
+ENVIRONMENT:
+  MIOPEN_RS_DB_READONLY=1       force read-only db mode (serve boots
+                                from the embedded db; saves are skipped)
+  MIOPEN_RS_DB_COMPACT_MIN      journal bytes before compaction (32768)
+  MIOPEN_RS_DB_COMPACT_RATIO    journal/snapshot ratio trigger (4)
 ";
 
 #[cfg(test)]

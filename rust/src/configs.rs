@@ -171,6 +171,18 @@ pub fn tune_configs() -> Vec<ConvConfig> {
     ]
 }
 
+/// The configs the embedded read-only db is generated from (see
+/// `db::embed`): every conv family the builtin manifest serves, so a
+/// binary on an unwritable filesystem still has a ranking for each.
+pub fn embedded_db_configs() -> Vec<ConvConfig> {
+    let mut out = fig6_1x1();
+    out.extend(fig6_non1x1());
+    out.extend(grouped_configs());
+    out.extend(tune_configs());
+    out.dedup();
+    out
+}
+
 pub const DIRECT_BLOCK_K: [usize; 4] = [4, 8, 16, 32];
 
 /// AOT'd blocked-GEMM tile-grid indices (`-gt{i}`) — one artifact per

@@ -1,0 +1,108 @@
+//! Embedded compile-time db (MIOpen's `embed` concern).
+//!
+//! A serving binary on an unwritable filesystem — a scratch-less
+//! container, a read-only system image — must boot and serve instead of
+//! erroring. This module generates a find-db at startup from the same
+//! in-process config enumeration that builds the builtin manifest
+//! ([`crate::configs::embedded_db_configs`]), so read-only mode always
+//! has a solver ranking for every builtin signature: per problem, every
+//! applicable solver ranked by the GCN perf model, filtered to solvers
+//! whose artifact actually exists in the builtin manifest (an embedded
+//! record must be servable, not aspirational).
+//!
+//! The modeled time stands in for `time_us` — honest enough for
+//! ranking, and exactly what immediate mode's calibrated-model fallback
+//! would produce without ever running find. On-disk system/user dbs
+//! (when readable) are overlaid *on top*, so real measurements shadow
+//! the model.
+
+use crate::configs::embedded_db_configs;
+use crate::manifest::Manifest;
+use crate::perfmodel::GcnModel;
+use crate::solvers;
+use crate::types::DType;
+
+use super::{FindDb, FindRecord, PerfDb};
+
+/// Build the embedded find-db: forward-direction f32 records for every
+/// builtin config, ranked by modeled time, restricted to artifacts the
+/// builtin manifest can serve.
+pub fn embedded_find_db() -> FindDb {
+    let manifest = Manifest::builtin();
+    let model = GcnModel::default();
+    let mut db = FindDb::default();
+    for cfg in embedded_db_configs() {
+        let sig = cfg.problem_sig("fwd", DType::F32);
+        let mut records = Vec::new();
+        for solver in solvers::applicable(&sig) {
+            if manifest.get(&solver.artifact_sig(&sig, None)).is_none() {
+                continue;
+            }
+            let t = solver.modeled_time_us(&sig, &model);
+            if !t.is_finite() || t < 0.0 {
+                continue;
+            }
+            records.push(FindRecord {
+                algo: solver.name().to_string(),
+                time_us: t,
+                modeled_time_us: t,
+                workspace_bytes: solver.workspace_bytes(&sig),
+            });
+        }
+        if !records.is_empty() {
+            db.insert(sig.db_key(), records);
+        }
+    }
+    db
+}
+
+/// The embedded perf-db is deliberately empty: shipping tuned kernel
+/// parameters that were never measured on the serving machine could
+/// *regress* the solvers' built-in defaults, whereas an empty perf-db
+/// just means defaults — the safe degraded baseline. (The find-db is
+/// different: some ranking is strictly better than no ranking.)
+pub fn embedded_perf_db() -> PerfDb {
+    PerfDb::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedded_db_covers_builtin_configs_with_servable_records() {
+        let db = embedded_find_db();
+        assert!(!db.is_empty(), "embedded db must not be empty");
+        let manifest = Manifest::builtin();
+        for (key, records) in db.iter() {
+            assert!(!records.is_empty(), "{key}: empty record list");
+            // ranked ascending by the modeled time
+            for w in records.windows(2) {
+                assert!(w[0].time_us <= w[1].time_us,
+                        "{key}: records not ranked");
+            }
+        }
+        // spot-check servability: every embedded record's artifact
+        // resolves against the builtin manifest
+        for cfg in embedded_db_configs() {
+            let sig = cfg.problem_sig("fwd", DType::F32);
+            let Some(records) = db.get(&sig.db_key()) else { continue };
+            for r in records {
+                let solver = solvers::applicable(&sig)
+                    .into_iter()
+                    .find(|s| s.name() == r.algo)
+                    .expect("embedded algo must map to a solver");
+                assert!(
+                    manifest.get(&solver.artifact_sig(&sig, None)).is_some(),
+                    "{}: embedded record '{}' is not servable",
+                    sig.db_key(), r.algo
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn embedded_perf_db_is_empty_by_design() {
+        assert!(embedded_perf_db().is_empty());
+    }
+}

@@ -1,0 +1,579 @@
+//! Injectable filesystem for the db layer (the `Clock` pattern from the
+//! serve engine, applied to persistence).
+//!
+//! Every filesystem touch the [`super::DbStore`] makes goes through the
+//! [`Fs`] trait: [`RealFs`] in production, [`FaultFs`] in tests. The
+//! fault filesystem keeps files in memory, counts every operation, and
+//! can fail an op, short-write it, or "cut power" at the N-th op — after
+//! which [`FaultFs::power_cycle`] simulates what a real disk would keep:
+//! everything fsynced survives, an arbitrary prefix of each unsynced
+//! tail survives, the rest is gone. The crash-at-every-op recovery
+//! proptest in `tests/integration_db.rs` is built on exactly this.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::rng::SplitMix64;
+
+/// Filesystem surface the db layer needs. All methods operate on whole
+/// files; durability is explicit (`sync`/`sync_dir`), matching the
+/// journal's contract that a save is acknowledged only after its record
+/// is fsynced.
+pub trait Fs: Send + Sync {
+    /// Read a whole file. `ErrorKind::NotFound` is a real error here —
+    /// callers that want "missing = empty" use [`read_opt`].
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Create-or-truncate write (not durable until [`Fs::sync`]).
+    fn write(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    /// Append to a file, creating it if missing (not durable until
+    /// [`Fs::sync`]).
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    /// fsync a file's contents.
+    fn sync(&self, path: &Path) -> io::Result<()>;
+    /// fsync a directory (makes renames within it durable).
+    fn sync_dir(&self, dir: &Path) -> io::Result<()>;
+    /// Atomic rename.
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// Remove a file.
+    fn remove(&self, path: &Path) -> io::Result<()>;
+    /// Create a directory and its parents.
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()>;
+    /// Truncate a file to `len` bytes (journal torn-tail recovery).
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()>;
+    /// File length; `Ok(None)` when the file does not exist.
+    fn len(&self, path: &Path) -> io::Result<Option<u64>>;
+    /// List the files in a directory (missing dir = empty).
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>>;
+    /// Can this process write into `dir`? Probed by creating and
+    /// removing a scratch file — the read-only-mode autodetection.
+    fn probe_writable(&self, dir: &Path) -> bool;
+}
+
+/// Read a whole file, mapping `NotFound` to `Ok(None)`. This is the
+/// TOCTOU-free "load if present": no `exists()` pre-check, so a
+/// concurrent compaction/rename between check and read can't turn a
+/// clean miss into an error.
+pub fn read_opt(fs: &dyn Fs, path: &Path) -> io::Result<Option<Vec<u8>>> {
+    match fs.read(path) {
+        Ok(bytes) => Ok(Some(bytes)),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The production filesystem: thin wrappers over `std::fs`.
+#[derive(Debug, Default)]
+pub struct RealFs;
+
+impl Fs for RealFs {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        std::fs::write(path, data)
+    }
+
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        f.write_all(data)
+    }
+
+    fn sync(&self, path: &Path) -> io::Result<()> {
+        std::fs::File::open(path)?.sync_all()
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        // Advisory on platforms that refuse opening directories; on
+        // Linux this is what makes a rename durable.
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(dir)
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()> {
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(len)
+    }
+
+    fn len(&self, path: &Path) -> io::Result<Option<u64>> {
+        match std::fs::metadata(path) {
+            Ok(m) => Ok(Some(m.len())),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        match std::fs::read_dir(dir) {
+            Ok(rd) => rd.map(|e| e.map(|e| e.path())).collect(),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(Vec::new()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn probe_writable(&self, dir: &Path) -> bool {
+        if std::fs::create_dir_all(dir).is_err() {
+            return false;
+        }
+        let probe = dir.join(".miopen-rs-write-probe");
+        match std::fs::write(&probe, b"w") {
+            Ok(()) => {
+                let _ = std::fs::remove_file(&probe);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default, Clone)]
+struct FileBuf {
+    data: Vec<u8>,
+    /// Prefix guaranteed durable (advanced by `sync`). A power cut
+    /// keeps this prefix plus an arbitrary amount of the unsynced tail.
+    synced: usize,
+}
+
+#[derive(Debug)]
+struct FaultState {
+    files: BTreeMap<PathBuf, FileBuf>,
+    /// Monotone operation counter — every [`Fs`] call is one op.
+    ops: u64,
+    /// Cut power at this op index: the op takes partial effect (a short
+    /// write for appends/writes, nothing for the rest), errors, and all
+    /// later ops error until [`FaultFs::power_cycle`].
+    crash_at: Option<u64>,
+    crashed: bool,
+    /// Per-op transient failure probability in 1/1000 (the op fails
+    /// cleanly with no effect; the caller may retry).
+    fail_prob_milli: u32,
+    read_only: bool,
+    rng: SplitMix64,
+}
+
+/// In-memory fault-injecting [`Fs`] for tests.
+///
+/// Semantics modeled after a real disk + POSIX crash behavior:
+/// - data written but not fsynced may be partially or fully lost at a
+///   power cut (an arbitrary prefix of each unsynced tail survives);
+/// - the op that hits `crash_at` is itself torn: an append or write
+///   lands a random prefix of its data before the error;
+/// - renames are atomic (they happen entirely or not at all).
+pub struct FaultFs {
+    state: Mutex<FaultState>,
+}
+
+fn power_cut() -> io::Error {
+    io::Error::other("fault injection: power cut")
+}
+
+fn transient() -> io::Error {
+    io::Error::other("fault injection: transient failure")
+}
+
+fn rofs() -> io::Error {
+    io::Error::new(io::ErrorKind::PermissionDenied,
+                   "fault injection: read-only filesystem")
+}
+
+impl FaultFs {
+    /// New fault filesystem; `seed` drives torn-write lengths and
+    /// transient-failure draws deterministically.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: Mutex::new(FaultState {
+                files: BTreeMap::new(),
+                ops: 0,
+                crash_at: None,
+                crashed: false,
+                fail_prob_milli: 0,
+                read_only: false,
+                rng: SplitMix64::new(seed),
+            }),
+        }
+    }
+
+    /// Total operations performed so far (the crash-at-every-op driver
+    /// runs once to learn this, then replays with `crash_at` = 0..N).
+    pub fn ops(&self) -> u64 {
+        self.state.lock().unwrap().ops
+    }
+
+    /// Cut power at op index `op` (0-based over future ops).
+    pub fn set_crash_at(&self, op: u64) {
+        self.state.lock().unwrap().crash_at = Some(op);
+    }
+
+    /// Fail each op with probability `milli`/1000 (no effect, clean
+    /// error). Used by the concurrent-writer stress test.
+    pub fn set_fail_prob(&self, milli: u32) {
+        self.state.lock().unwrap().fail_prob_milli = milli;
+    }
+
+    /// Make every mutating op fail with `PermissionDenied` (an
+    /// unwritable volume; `probe_writable` reports false).
+    pub fn set_read_only_fs(&self, ro: bool) {
+        self.state.lock().unwrap().read_only = ro;
+    }
+
+    /// Has the injected crash fired?
+    pub fn crashed(&self) -> bool {
+        self.state.lock().unwrap().crashed
+    }
+
+    /// Simulate reboot after a power cut: for every file, the synced
+    /// prefix survives and a random (possibly zero, possibly full)
+    /// prefix of the unsynced tail survives. Clears the crash so the
+    /// filesystem is usable again.
+    pub fn power_cycle(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.crashed = false;
+        st.crash_at = None;
+        let mut keeps = Vec::new();
+        for buf in st.files.values() {
+            let unsynced = buf.data.len().saturating_sub(buf.synced);
+            keeps.push(st.rng.below(unsynced as u64 + 1) as usize);
+        }
+        for (buf, keep) in st.files.values_mut().zip(keeps) {
+            let len = buf.synced + keep;
+            buf.data.truncate(len);
+            buf.synced = buf.data.len();
+        }
+    }
+
+    /// Flip one byte of a file in place (mid-journal corruption — a
+    /// bit-rot scenario, distinct from torn tails).
+    pub fn corrupt_byte(&self, path: &Path, offset: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(buf) = st.files.get_mut(path) {
+            if offset < buf.data.len() {
+                buf.data[offset] ^= 0xFF;
+            }
+        }
+    }
+
+    /// Overwrite a file's bytes directly, bypassing fault injection
+    /// (test setup for foreign/corrupt-file scenarios).
+    pub fn put_file(&self, path: &Path, data: &[u8]) {
+        let mut st = self.state.lock().unwrap();
+        st.files.insert(
+            path.to_path_buf(),
+            FileBuf { synced: data.len(), data: data.to_vec() },
+        );
+    }
+
+    /// Current bytes of a file (test assertions).
+    pub fn file_bytes(&self, path: &Path) -> Option<Vec<u8>> {
+        self.state.lock().unwrap().files.get(path).map(|b| b.data.clone())
+    }
+
+    /// Count one op; error if crashed, crashing, transiently failing,
+    /// or (for mutating ops) read-only. Returns `Ok(true)` when this op
+    /// is the crash op and the caller should apply a torn effect.
+    fn gate(st: &mut FaultState, mutating: bool) -> io::Result<bool> {
+        if st.crashed {
+            return Err(power_cut());
+        }
+        let op = st.ops;
+        st.ops += 1;
+        if st.crash_at == Some(op) {
+            st.crashed = true;
+            return Ok(true);
+        }
+        if mutating && st.read_only {
+            return Err(rofs());
+        }
+        if st.fail_prob_milli > 0
+            && st.rng.below(1000) < st.fail_prob_milli as u64 {
+            return Err(transient());
+        }
+        Ok(false)
+    }
+}
+
+impl Fs for FaultFs {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, false)? {
+            return Err(power_cut());
+        }
+        match st.files.get(path) {
+            Some(buf) => Ok(buf.data.clone()),
+            None => Err(io::Error::from(io::ErrorKind::NotFound)),
+        }
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, true)? {
+            // torn truncating write: old contents gone, a prefix landed
+            let torn = st.rng.below(data.len() as u64 + 1) as usize;
+            st.files.insert(
+                path.to_path_buf(),
+                FileBuf { data: data[..torn].to_vec(), synced: 0 },
+            );
+            return Err(power_cut());
+        }
+        st.files.insert(
+            path.to_path_buf(),
+            FileBuf { data: data.to_vec(), synced: 0 },
+        );
+        Ok(())
+    }
+
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, true)? {
+            let torn = st.rng.below(data.len() as u64 + 1) as usize;
+            st.files
+                .entry(path.to_path_buf())
+                .or_default()
+                .data
+                .extend_from_slice(&data[..torn]);
+            return Err(power_cut());
+        }
+        st.files
+            .entry(path.to_path_buf())
+            .or_default()
+            .data
+            .extend_from_slice(data);
+        Ok(())
+    }
+
+    fn sync(&self, path: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, false)? {
+            return Err(power_cut());
+        }
+        match st.files.get_mut(path) {
+            Some(buf) => {
+                buf.synced = buf.data.len();
+                Ok(())
+            }
+            None => Err(io::Error::from(io::ErrorKind::NotFound)),
+        }
+    }
+
+    fn sync_dir(&self, _dir: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, false)? {
+            return Err(power_cut());
+        }
+        Ok(())
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, true)? {
+            // atomic: a crash at the rename op means it didn't happen
+            return Err(power_cut());
+        }
+        match st.files.remove(from) {
+            Some(mut buf) => {
+                // treat the rename as durable once it succeeds (the
+                // store fsyncs the directory right after; modeling the
+                // metadata journal separately adds nothing the recovery
+                // tests would catch)
+                buf.synced = buf.data.len();
+                st.files.insert(to.to_path_buf(), buf);
+                Ok(())
+            }
+            None => Err(io::Error::from(io::ErrorKind::NotFound)),
+        }
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, true)? {
+            return Err(power_cut());
+        }
+        match st.files.remove(path) {
+            Some(_) => Ok(()),
+            None => Err(io::Error::from(io::ErrorKind::NotFound)),
+        }
+    }
+
+    fn create_dir_all(&self, _dir: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, true)? {
+            return Err(power_cut());
+        }
+        Ok(())
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, true)? {
+            return Err(power_cut());
+        }
+        match st.files.get_mut(path) {
+            Some(buf) => {
+                buf.data.truncate(len as usize);
+                buf.synced = buf.synced.min(buf.data.len());
+                Ok(())
+            }
+            None => Err(io::Error::from(io::ErrorKind::NotFound)),
+        }
+    }
+
+    fn len(&self, path: &Path) -> io::Result<Option<u64>> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, false)? {
+            return Err(power_cut());
+        }
+        Ok(st.files.get(path).map(|b| b.data.len() as u64))
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        let mut st = self.state.lock().unwrap();
+        if FaultFs::gate(&mut st, false)? {
+            return Err(power_cut());
+        }
+        Ok(st
+            .files
+            .keys()
+            .filter(|p| p.parent() == Some(dir))
+            .cloned()
+            .collect())
+    }
+
+    fn probe_writable(&self, _dir: &Path) -> bool {
+        let st = self.state.lock().unwrap();
+        !st.read_only && !st.crashed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> PathBuf {
+        PathBuf::from(s)
+    }
+
+    #[test]
+    fn real_fs_roundtrip_and_missing_len() {
+        let dir = std::env::temp_dir().join(format!(
+            "miopen-rs-fs-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fs = RealFs;
+        fs.create_dir_all(&dir).unwrap();
+        let f = dir.join("a.bin");
+        assert_eq!(fs.len(&f).unwrap(), None);
+        assert!(read_opt(&fs, &f).unwrap().is_none());
+        fs.write(&f, b"hello").unwrap();
+        fs.append(&f, b" world").unwrap();
+        fs.sync(&f).unwrap();
+        assert_eq!(fs.read(&f).unwrap(), b"hello world");
+        fs.truncate(&f, 5).unwrap();
+        assert_eq!(fs.read(&f).unwrap(), b"hello");
+        assert!(fs.probe_writable(&dir));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fault_fs_crash_at_op_then_power_cycle() {
+        let fs = FaultFs::new(1);
+        fs.write(&p("/d/x"), b"abcdef").unwrap(); // op 0
+        fs.sync(&p("/d/x")).unwrap(); // op 1
+        fs.set_crash_at(2);
+        // op 2 crashes: the append lands a torn prefix, then errors
+        let err = fs.append(&p("/d/x"), b"ghijkl").unwrap_err();
+        assert!(err.to_string().contains("power cut"));
+        // everything after the crash errors too
+        assert!(fs.read(&p("/d/x")).is_err());
+        fs.power_cycle();
+        let back = fs.read(&p("/d/x")).unwrap();
+        // the synced prefix always survives; the torn tail is a prefix
+        // of the appended data
+        assert!(back.starts_with(b"abcdef"), "{back:?}");
+        assert!(back.len() <= b"abcdef".len() + b"ghijkl".len());
+    }
+
+    #[test]
+    fn fault_fs_unsynced_data_may_vanish_at_power_cycle() {
+        // deterministic given the seed: whatever survives, it must be
+        // the synced prefix plus a prefix of the unsynced tail
+        for seed in 0..16 {
+            let fs = FaultFs::new(seed);
+            fs.write(&p("/d/y"), b"AA").unwrap();
+            fs.sync(&p("/d/y")).unwrap();
+            fs.append(&p("/d/y"), b"BBBB").unwrap(); // never synced
+            fs.power_cycle();
+            let back = fs.read(&p("/d/y")).unwrap();
+            assert!(back.starts_with(b"AA"));
+            assert!(back.len() >= 2 && back.len() <= 6);
+            assert!(b"AABBBB".starts_with(back.as_slice()));
+        }
+    }
+
+    #[test]
+    fn fault_fs_transient_failures_have_no_effect() {
+        let fs = FaultFs::new(3);
+        fs.set_fail_prob(500);
+        let mut wrote = false;
+        for _ in 0..64 {
+            if fs.append(&p("/d/z"), b"ok").is_ok() {
+                wrote = true;
+                break;
+            }
+            // a failed append must not have landed partial bytes
+            assert!(fs.file_bytes(&p("/d/z")).unwrap_or_default()
+                        .is_empty());
+        }
+        assert!(wrote, "64 tries at 50% must succeed once");
+        fs.set_fail_prob(0);
+        assert_eq!(fs.read(&p("/d/z")).unwrap(), b"ok");
+    }
+
+    #[test]
+    fn fault_fs_read_only_rejects_mutation() {
+        let fs = FaultFs::new(4);
+        fs.write(&p("/d/w"), b"keep").unwrap();
+        fs.set_read_only_fs(true);
+        assert!(!fs.probe_writable(&p("/d")));
+        assert_eq!(fs.append(&p("/d/w"), b"x").unwrap_err().kind(),
+                   io::ErrorKind::PermissionDenied);
+        // reads still work
+        assert_eq!(fs.read(&p("/d/w")).unwrap(), b"keep");
+    }
+
+    #[test]
+    fn fault_fs_rename_is_atomic() {
+        let fs = FaultFs::new(5);
+        fs.write(&p("/d/t.tmp"), b"snap").unwrap(); // op 0
+        fs.sync(&p("/d/t.tmp")).unwrap(); // op 1
+        fs.set_crash_at(2);
+        assert!(fs.rename(&p("/d/t.tmp"), &p("/d/t")).is_err());
+        fs.power_cycle();
+        // crash at the rename op: it never happened
+        assert!(fs.read(&p("/d/t")).is_err());
+        assert_eq!(fs.read(&p("/d/t.tmp")).unwrap(), b"snap");
+        fs.rename(&p("/d/t.tmp"), &p("/d/t")).unwrap();
+        assert_eq!(fs.read(&p("/d/t")).unwrap(), b"snap");
+    }
+}

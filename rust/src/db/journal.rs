@@ -1,0 +1,368 @@
+//! Append-only journal format for the find/perf dbs.
+//!
+//! A db file is a 16-byte versioned header followed by length-prefixed,
+//! CRC-32-checksummed delta records:
+//!
+//! ```text
+//! [magic "MIOPNDB\0" | version u32 LE | kind u8 | 3 reserved]   16 B
+//! [len u32 LE | crc32 u32 LE | payload (JSON, UTF-8)]           8+len B
+//! [len | crc32 | payload] ...
+//! ```
+//!
+//! A save appends one record and fsyncs; it is **acknowledged** only
+//! after the fsync returns. Recovery ([`scan`]) therefore has exactly
+//! three failure shapes to handle, none of which may turn into a hard
+//! load error:
+//!
+//! - **torn tail** — a crash mid-append left an incomplete frame (or an
+//!   incomplete header) at EOF. Detected by a frame extending past EOF
+//!   or < 8 trailing bytes; the tail is truncated back to the last
+//!   complete frame and counted in [`Scan::torn_tail`].
+//! - **corrupt record** — bit rot inside a complete frame (CRC
+//!   mismatch, invalid UTF-8) or an implausible length field. The
+//!   record is skipped and counted; scanning continues when the frame
+//!   boundary is still trustworthy (a bad length ends the scan since
+//!   resync is impossible).
+//! - **foreign file** — the header is not ours (wrong magic, version,
+//!   or kind). The whole file is quarantined by the store, never
+//!   overwritten.
+
+use crate::types::Result;
+use crate::util::json::{self, Json};
+
+use super::{bad, FindDb, PerfDb};
+
+/// File magic (8 bytes).
+pub const MAGIC: &[u8; 8] = b"MIOPNDB\0";
+/// Current journal format version.
+pub const VERSION: u32 = 1;
+/// Header kind byte for find-db journals.
+pub const KIND_FIND: u8 = 1;
+/// Header kind byte for perf-db journals.
+pub const KIND_PERF: u8 = 2;
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Upper bound on a single record's payload (64 MiB); a length field
+/// above this is treated as corruption, not as a real record.
+pub const MAX_RECORD: usize = 1 << 26;
+
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) lookup table, built
+/// at compile time — the repo is dependency-free by design.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 of `data` (the standard zlib/PNG/gzip checksum).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// The 16-byte header for a journal of the given kind.
+pub fn header(kind: u8) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    h[12] = kind;
+    h
+}
+
+/// Frame one payload as `[len][crc][payload]`.
+pub fn encode_record(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Result of scanning a journal's bytes — never an error; every
+/// corruption shape degrades to counters the store reports via metrics.
+#[derive(Debug, Default)]
+pub struct Scan {
+    /// CRC-valid record payloads, in append order.
+    pub payloads: Vec<String>,
+    /// Bytes of the file covered by the header + complete frames. When
+    /// [`Scan::torn_tail`] is set the store truncates the file to this.
+    pub valid_len: u64,
+    /// Complete-but-corrupt records skipped (CRC mismatch, bad UTF-8,
+    /// implausible length).
+    pub corrupt_records: u64,
+    /// An incomplete frame (or incomplete header) sits at EOF — the
+    /// signature of a crash mid-append.
+    pub torn_tail: bool,
+    /// The header is not ours: wrong magic, unsupported version, or the
+    /// other db's kind. The store quarantines the whole file.
+    pub foreign: bool,
+}
+
+/// Scan a journal's raw bytes. See the module docs for the recovery
+/// rules; an empty slice is a valid empty journal.
+pub fn scan(bytes: &[u8], kind: u8) -> Scan {
+    let mut s = Scan::default();
+    if bytes.is_empty() {
+        return s;
+    }
+    let h = header(kind);
+    if bytes.len() < HEADER_LEN {
+        if h.starts_with(bytes) {
+            // crash while writing the very first header
+            s.torn_tail = true;
+        } else {
+            s.foreign = true;
+        }
+        return s;
+    }
+    if bytes[..HEADER_LEN] != h {
+        s.foreign = true;
+        return s;
+    }
+    let mut off = HEADER_LEN;
+    s.valid_len = off as u64;
+    while off < bytes.len() {
+        if bytes.len() - off < 8 {
+            s.torn_tail = true;
+            break;
+        }
+        let len = u32::from_le_bytes(
+            bytes[off..off + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(
+            bytes[off + 4..off + 8].try_into().unwrap());
+        if len > MAX_RECORD {
+            // the length field itself is corrupt; frame boundaries
+            // downstream are meaningless, so stop (compaction will
+            // rewrite the file cleanly from the surviving records)
+            s.corrupt_records += 1;
+            break;
+        }
+        if off + 8 + len > bytes.len() {
+            s.torn_tail = true;
+            break;
+        }
+        let payload = &bytes[off + 8..off + 8 + len];
+        off += 8 + len;
+        if crc32(payload) == crc {
+            match std::str::from_utf8(payload) {
+                Ok(txt) => s.payloads.push(txt.to_string()),
+                Err(_) => s.corrupt_records += 1,
+            }
+        } else {
+            s.corrupt_records += 1;
+        }
+        // advance past complete frames whether good or corrupt: a torn
+        // tail further on must not truncate good records sitting after
+        // a corrupt one
+        s.valid_len = off as u64;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Delta payloads. One record = one acknowledged save: the dirty keys a
+// writer flushed, not the whole db. Replay applies records in append
+// order; a compaction record is simply a delta carrying the full state.
+
+/// Encode a find-db delta: `{"set": {key: [records]}, "del": [keys]}`.
+/// `del` carries the delta's tombstones so invalidations (tuning
+/// dropping a stale entry) survive the journal — an improvement over
+/// the legacy JSON file, which forgot tombstones between processes.
+pub fn find_payload(delta: &FindDb) -> String {
+    let del = Json::Arr(
+        delta.removed.iter().map(|k| Json::str(k.clone())).collect());
+    Json::obj(vec![("set", delta.to_json()), ("del", del)]).to_string()
+}
+
+/// Replay one find-db record onto `db`. Tombstones apply first, then
+/// entries (a key in both was re-inserted after removal — the entry
+/// wins, matching [`FindDb::apply_overlay`]).
+pub fn apply_find(db: &mut FindDb, payload: &str) -> Result<()> {
+    let j = json::parse(payload).map_err(|e| bad(&e.to_string()))?;
+    let set = j.get("set")
+        .ok_or_else(|| bad("find journal record: missing set"))?;
+    let parsed = FindDb::from_json(set)?;
+    if let Some(del) = j.get("del").and_then(Json::as_arr) {
+        for k in del {
+            let k = k.as_str().ok_or_else(|| {
+                bad("find journal record: non-string del key")
+            })?;
+            db.remove(k);
+        }
+    }
+    for (k, recs) in parsed.entries {
+        db.insert(k, recs);
+    }
+    Ok(())
+}
+
+/// Encode a perf-db delta: `{"set": {key: entry}}` (the perf-db has no
+/// removal API, so entries are the whole story).
+pub fn perf_payload(delta: &PerfDb) -> String {
+    Json::obj(vec![("set", delta.to_json())]).to_string()
+}
+
+/// Replay one perf-db record onto `db`.
+pub fn apply_perf(db: &mut PerfDb, payload: &str) -> Result<()> {
+    let j = json::parse(payload).map_err(|e| bad(&e.to_string()))?;
+    let set = j.get("set")
+        .ok_or_else(|| bad("perf journal record: missing set"))?;
+    let parsed = PerfDb::from_json(set)?;
+    for (k, e) in parsed.entries {
+        db.entries.insert(k, e);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::FindRecord;
+
+    #[test]
+    fn crc32_matches_the_standard_check_value() {
+        // the canonical CRC-32 test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn journal_with(kind: u8, payloads: &[&str]) -> Vec<u8> {
+        let mut bytes = header(kind).to_vec();
+        for p in payloads {
+            bytes.extend_from_slice(&encode_record(p.as_bytes()));
+        }
+        bytes
+    }
+
+    #[test]
+    fn scan_reads_back_appended_records() {
+        let bytes = journal_with(KIND_FIND, &["{\"a\":1}", "{\"b\":2}"]);
+        let s = scan(&bytes, KIND_FIND);
+        assert!(!s.foreign && !s.torn_tail);
+        assert_eq!(s.corrupt_records, 0);
+        assert_eq!(s.payloads, vec!["{\"a\":1}", "{\"b\":2}"]);
+        assert_eq!(s.valid_len, bytes.len() as u64);
+    }
+
+    #[test]
+    fn scan_empty_file_is_a_valid_empty_journal() {
+        let s = scan(&[], KIND_FIND);
+        assert!(!s.foreign && !s.torn_tail);
+        assert!(s.payloads.is_empty());
+        assert_eq!(s.valid_len, 0);
+    }
+
+    #[test]
+    fn scan_torn_header_truncates_to_zero() {
+        let bytes = &header(KIND_FIND)[..7];
+        let s = scan(bytes, KIND_FIND);
+        assert!(s.torn_tail && !s.foreign);
+        assert_eq!(s.valid_len, 0);
+    }
+
+    #[test]
+    fn scan_wrong_kind_or_magic_is_foreign() {
+        // a perf journal opened as a find journal must not be truncated
+        // or replayed — quarantine it whole
+        let bytes = journal_with(KIND_PERF, &["{}"]);
+        assert!(scan(&bytes, KIND_FIND).foreign);
+        // legacy JSON file
+        assert!(scan(b"{\"k\": []}", KIND_FIND).foreign);
+        // future format version
+        let mut v2 = journal_with(KIND_FIND, &[]);
+        v2[8] = 2;
+        assert!(scan(&v2, KIND_FIND).foreign);
+    }
+
+    #[test]
+    fn scan_truncates_torn_tail_to_last_complete_frame() {
+        let good = journal_with(KIND_FIND, &["{\"a\":1}"]);
+        let mut bytes = good.clone();
+        bytes.extend_from_slice(&encode_record(b"{\"b\":2}")[..5]);
+        let s = scan(&bytes, KIND_FIND);
+        assert!(s.torn_tail);
+        assert_eq!(s.valid_len, good.len() as u64);
+        assert_eq!(s.payloads.len(), 1);
+        assert_eq!(s.corrupt_records, 0);
+    }
+
+    #[test]
+    fn scan_skips_corrupt_record_and_keeps_reading() {
+        let mut bytes = header(KIND_FIND).to_vec();
+        bytes.extend_from_slice(&encode_record(b"{\"a\":1}"));
+        let start = bytes.len();
+        bytes.extend_from_slice(&encode_record(b"{\"b\":2}"));
+        bytes.extend_from_slice(&encode_record(b"{\"c\":3}"));
+        // flip a payload byte of the middle record (past its 8B frame
+        // header) — CRC now mismatches but the frame length is intact
+        bytes[start + 9] ^= 0xFF;
+        let s = scan(&bytes, KIND_FIND);
+        assert_eq!(s.corrupt_records, 1);
+        assert_eq!(s.payloads, vec!["{\"a\":1}", "{\"c\":3}"]);
+        assert!(!s.torn_tail, "complete frames must not be truncated");
+        assert_eq!(s.valid_len, bytes.len() as u64);
+    }
+
+    #[test]
+    fn scan_implausible_length_stops_without_truncating_good_prefix() {
+        let good = journal_with(KIND_FIND, &["{\"a\":1}"]);
+        let mut bytes = good.clone();
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 12]);
+        let s = scan(&bytes, KIND_FIND);
+        assert_eq!(s.payloads.len(), 1);
+        assert_eq!(s.corrupt_records, 1);
+        assert_eq!(s.valid_len, good.len() as u64);
+    }
+
+    #[test]
+    fn find_payload_roundtrips_entries_and_tombstones() {
+        let mut delta = FindDb::default();
+        delta.insert("p1".into(), vec![FindRecord {
+            algo: "gemm".into(),
+            time_us: 2.0,
+            modeled_time_us: 1.0,
+            workspace_bytes: 64,
+        }]);
+        delta.remove("stale");
+        let payload = find_payload(&delta);
+
+        let mut db = FindDb::default();
+        db.insert("stale".into(), vec![FindRecord {
+            algo: "old".into(),
+            time_us: 9.0,
+            modeled_time_us: 9.0,
+            workspace_bytes: 0,
+        }]);
+        apply_find(&mut db, &payload).unwrap();
+        assert_eq!(db.get("p1").unwrap()[0].algo, "gemm");
+        assert!(db.get("stale").is_none(),
+                "journaled tombstone must delete on replay");
+        assert!(db.removed.contains("stale"),
+                "replay must keep the tombstone for overlay semantics");
+    }
+
+    #[test]
+    fn apply_rejects_garbage_payload_with_db_error() {
+        let mut db = FindDb::default();
+        assert!(apply_find(&mut db, "not json").is_err());
+        assert!(apply_find(&mut db, "{\"del\": []}").is_err());
+        let mut pdb = PerfDb::default();
+        assert!(apply_perf(&mut pdb, "[1,2]").is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! Fleet merge: union find/perf-dbs tuned on many machines
+//! (`miopen db merge`).
+//!
+//! CLBlast's lesson is that per-device tuning pays off at fleet scale
+//! only if results collected on many hosts can be combined. The union
+//! rules resolve conflicts by *evidence*:
+//!
+//! - **find-db**: per (problem key, algo), the record with the lower
+//!   measured `time_us` wins; the union of algos per key is kept, so
+//!   the merged ranking re-sorts across machines.
+//! - **perf-db**: per (problem, solver), a timed entry beats an untimed
+//!   one; two timed entries resolve to the faster measurement; two
+//!   untimed entries (legacy files) resolve to the later input —
+//!   deterministic, and the operator controls the order.
+//!
+//! Inputs may be journals or legacy JSON dirs; loading a legacy dir
+//! migrates it forward as a side effect (see
+//! [`super::DbStore::load_find_db`]).
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::types::Result;
+
+use super::{DbStore, FindDb, FindRecord, PerfDb};
+
+/// What a merge did — printed by the CLI and asserted by tests.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct MergeReport {
+    /// Number of input directories.
+    pub inputs: usize,
+    /// Entries in the merged find-db.
+    pub find_entries: usize,
+    /// Entries in the merged perf-db.
+    pub perf_entries: usize,
+    /// (key, algo) collisions resolved by measured time.
+    pub find_conflicts: u64,
+    /// (problem, solver) collisions with differing params.
+    pub perf_conflicts: u64,
+    /// Legacy JSON inputs migrated while loading.
+    pub migrated_inputs: u64,
+}
+
+/// Union find-dbs: per (key, algo) the fastest measured record wins.
+/// Returns the merged db and the number of conflicts resolved.
+/// Tombstones are not unioned — a fleet merge combines evidence, it
+/// does not propagate one machine's invalidations to the rest.
+pub fn union_find(dbs: &[FindDb]) -> (FindDb, u64) {
+    let mut conflicts = 0u64;
+    // key -> algo -> best record
+    let mut best: BTreeMap<String, BTreeMap<String, FindRecord>> =
+        BTreeMap::new();
+    for db in dbs {
+        for (key, recs) in db.iter() {
+            let per_algo = best.entry(key.clone()).or_default();
+            for r in recs {
+                match per_algo.entry(r.algo.clone()) {
+                    Entry::Vacant(v) => {
+                        v.insert(r.clone());
+                    }
+                    Entry::Occupied(mut o) => {
+                        conflicts += 1;
+                        if r.time_us < o.get().time_us {
+                            o.insert(r.clone());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut out = FindDb::default();
+    for (key, per_algo) in best {
+        out.insert(key, per_algo.into_values().collect());
+    }
+    (out, conflicts)
+}
+
+/// Union perf-dbs: per key a timed entry beats an untimed one, two
+/// timed entries resolve to the faster measurement, two untimed ones to
+/// the later input. Returns the merged db and the count of collisions
+/// where the params actually differed.
+pub fn union_perf(dbs: &[PerfDb]) -> (PerfDb, u64) {
+    let mut conflicts = 0u64;
+    let mut out = PerfDb::default();
+    for db in dbs {
+        for (k, e) in &db.entries {
+            match out.entries.entry(k.clone()) {
+                Entry::Vacant(v) => {
+                    v.insert(e.clone());
+                }
+                Entry::Occupied(mut o) => {
+                    if o.get().params != e.params {
+                        conflicts += 1;
+                    }
+                    let keep_new = match (o.get().time_us, e.time_us) {
+                        (Some(old), Some(new)) => new < old,
+                        (Some(_), None) => false,
+                        (None, _) => true,
+                    };
+                    if keep_new {
+                        o.insert(e.clone());
+                    }
+                }
+            }
+        }
+    }
+    (out, conflicts)
+}
+
+/// Load every input dir (journal or legacy JSON), union, and write the
+/// result into `out_dir` — compacted, so the output is one snapshot
+/// record per db regardless of how fragmented the inputs were.
+pub fn merge_db_dirs(inputs: &[PathBuf], out_dir: &Path)
+    -> Result<MergeReport> {
+    let mut finds = Vec::with_capacity(inputs.len());
+    let mut perfs = Vec::with_capacity(inputs.len());
+    let mut migrated = 0u64;
+    for dir in inputs {
+        let store = DbStore::at(dir);
+        finds.push(store.load_find_db()?);
+        perfs.push(store.load_perf_db()?);
+        migrated += store.health().migrated_files;
+    }
+    let (find, find_conflicts) = union_find(&finds);
+    let (perf, perf_conflicts) = union_perf(&perfs);
+    let out = DbStore::at(out_dir);
+    out.save_find_db(&find)?;
+    out.save_perf_db(&perf)?;
+    out.compact_now()?;
+    Ok(MergeReport {
+        inputs: inputs.len(),
+        find_entries: find.len(),
+        perf_entries: perf.len(),
+        find_conflicts,
+        perf_conflicts,
+        migrated_inputs: migrated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap as Map;
+
+    fn rec(algo: &str, t: f64) -> FindRecord {
+        FindRecord {
+            algo: algo.into(),
+            time_us: t,
+            modeled_time_us: t,
+            workspace_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn union_find_keeps_fastest_record_per_algo_and_unions_algos() {
+        let mut a = FindDb::default();
+        a.insert("p".into(), vec![rec("gemm", 5.0), rec("direct", 9.0)]);
+        let mut b = FindDb::default();
+        b.insert("p".into(), vec![rec("gemm", 3.0), rec("fft", 7.0)]);
+        b.insert("q".into(), vec![rec("gemm", 1.0)]);
+
+        let (merged, conflicts) = union_find(&[a, b]);
+        assert_eq!(conflicts, 1, "only (p, gemm) collided");
+        let p = merged.get("p").unwrap();
+        assert_eq!(p.len(), 3, "algos from both machines present");
+        assert_eq!(p[0].algo, "gemm");
+        assert_eq!(p[0].time_us, 3.0, "the faster machine's gemm won");
+        assert!(merged.get("q").is_some());
+    }
+
+    #[test]
+    fn union_perf_resolves_by_measured_time_then_timedness() {
+        let mut a = PerfDb::default();
+        a.set_timed("p", "gemm", Map::from([("mc".into(), 32i64)]), 5.0);
+        a.set("p", "direct", Map::from([("u".into(), 1i64)]));
+        let mut b = PerfDb::default();
+        b.set_timed("p", "gemm", Map::from([("mc".into(), 64i64)]), 3.0);
+        b.set_timed("p", "direct", Map::from([("u".into(), 2i64)]), 8.0);
+
+        let (merged, conflicts) = union_perf(&[a.clone(), b.clone()]);
+        assert_eq!(conflicts, 2);
+        assert_eq!(merged.get("p", "gemm").unwrap()["mc"], 64,
+                   "faster measurement wins");
+        assert_eq!(merged.get("p", "direct").unwrap()["u"], 2,
+                   "timed beats untimed");
+        // order-independence where evidence decides
+        let (rev, _) = union_perf(&[b, a]);
+        assert_eq!(rev.get("p", "gemm").unwrap()["mc"], 64);
+        assert_eq!(rev.get("p", "direct").unwrap()["u"], 2);
+    }
+
+    #[test]
+    fn union_perf_untimed_collision_takes_later_input() {
+        let mut a = PerfDb::default();
+        a.set("p", "gemm", Map::from([("mc".into(), 16i64)]));
+        let mut b = PerfDb::default();
+        b.set("p", "gemm", Map::from([("mc".into(), 48i64)]));
+        let (merged, conflicts) = union_perf(&[a, b]);
+        assert_eq!(conflicts, 1);
+        assert_eq!(merged.get("p", "gemm").unwrap()["mc"], 48);
+    }
+
+    #[test]
+    fn merge_db_dirs_roundtrip_is_a_superset_of_each_input() {
+        let base = std::env::temp_dir().join(format!(
+            "miopen-rs-fleet-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let dirs: Vec<PathBuf> =
+            (0..3).map(|i| base.join(format!("host{i}"))).collect();
+        let out_dir = base.join("merged");
+
+        for (i, dir) in dirs.iter().enumerate() {
+            let store = DbStore::at(dir);
+            let mut f = FindDb::default();
+            f.insert("shared".to_string(),
+                     vec![rec("gemm", 10.0 - i as f64)]);
+            f.insert(format!("only{i}"), vec![rec("direct", 2.0)]);
+            store.save_find_db(&f).unwrap();
+            let mut p = PerfDb::default();
+            p.set_timed("shared", "gemm",
+                        Map::from([("mc".into(), i as i64)]),
+                        10.0 - i as f64);
+            store.save_perf_db(&p).unwrap();
+        }
+
+        let report = merge_db_dirs(&dirs, &out_dir).unwrap();
+        assert_eq!(report.inputs, 3);
+        assert_eq!(report.find_entries, 4, "shared + only0..2");
+        assert_eq!(report.find_conflicts, 2);
+        assert_eq!(report.perf_conflicts, 2);
+
+        let merged = DbStore::at(&out_dir);
+        let find = merged.load_find_db().unwrap();
+        let perf = merged.load_perf_db().unwrap();
+        // lossless: the union re-splits to a superset of every input
+        for (i, dir) in dirs.iter().enumerate() {
+            let input = DbStore::at(dir).load_find_db().unwrap();
+            for (k, _) in input.iter() {
+                assert!(find.get(k).is_some(),
+                        "merged db lost key '{k}' from host{i}");
+            }
+        }
+        // conflicts resolved by measured time: host2 was fastest
+        assert_eq!(find.get("shared").unwrap()[0].time_us, 8.0);
+        assert_eq!(perf.get("shared", "gemm").unwrap()["mc"], 2);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn merge_migrates_legacy_json_inputs_transparently() {
+        let base = std::env::temp_dir().join(format!(
+            "miopen-rs-fleetlegacy-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let legacy_dir = base.join("legacy_host");
+        std::fs::create_dir_all(&legacy_dir).unwrap();
+        let mut f = FindDb::default();
+        f.insert("old".into(), vec![rec("gemm", 4.0)]);
+        std::fs::write(legacy_dir.join("find.json"),
+                       f.to_json().to_string()).unwrap();
+
+        let out_dir = base.join("merged");
+        let report = merge_db_dirs(&[legacy_dir.clone()], &out_dir).unwrap();
+        assert_eq!(report.migrated_inputs, 1);
+        assert!(legacy_dir.join("find.db").exists(),
+                "the legacy input itself moved forward to a journal");
+        let merged = DbStore::at(&out_dir).load_find_db().unwrap();
+        assert!(merged.get("old").is_some());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -5,14 +5,40 @@
 //! results so later runs skip benchmarking. Both ship as a read-only
 //! *system* db and are overlaid by a writable *user* db in the user's
 //! config directory — user entries shadow system entries.
+//!
+//! Persistence is a crash-safe append-only journal per db (see
+//! [`journal`] for the format and recovery rules): a save appends one
+//! checksummed delta record and fsyncs before acknowledging, so
+//! concurrent writers sharing a directory union instead of clobbering,
+//! and a crash at any instruction leaves a file that recovery can
+//! always load — torn tails truncated, corrupt records skipped and
+//! counted, foreign/unreadable files quarantined rather than
+//! overwritten. Every filesystem touch goes through the injectable
+//! [`fs::Fs`] trait so the fault-injection suite can cut power at every
+//! single operation and prove those properties.
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::io::Write as _;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
 
+use crate::metrics::DbHealth;
 use crate::types::{MiopenError, Result};
 use crate::util::json::{self, Json};
+
+pub mod embed;
+pub mod fs;
+pub mod journal;
+pub mod merge;
+pub mod sharded;
+
+pub use embed::{embedded_find_db, embedded_perf_db};
+pub use fs::{FaultFs, Fs, RealFs};
+pub use merge::{merge_db_dirs, union_find, union_perf, MergeReport};
+pub use sharded::{ShardedFindDb, ShardedPerfDb};
+
+use fs::read_opt;
 
 /// One algorithm's measured/modeled performance for a problem (the
 /// persisted form of `miopenConvAlgoPerf_t`).
@@ -27,8 +53,8 @@ pub struct FindRecord {
 /// find-db: problem key -> ranked records.
 ///
 /// Removals are remembered as tombstones so an overlay (user over
-/// system, or in-memory over on-disk during merge-on-save) can *hide*
-/// an entry the session invalidated — without tombstones a tuning
+/// system, or a journal replay over earlier records) can *hide* an
+/// entry the session invalidated — without tombstones a tuning
 /// session's find-db invalidation would resurrect from the layer below.
 #[derive(Debug, Default, Clone)]
 pub struct FindDb {
@@ -64,6 +90,12 @@ impl FindDb {
         self.entries.is_empty()
     }
 
+    /// Is there anything to persist? (Entries *or* tombstones — a
+    /// delta that only invalidates still must reach the journal.)
+    pub fn has_changes(&self) -> bool {
+        !self.entries.is_empty() || !self.removed.is_empty()
+    }
+
     /// Iterate (key, ranked records) — the immediate-mode neighbor
     /// index is built from this view.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &[FindRecord])> {
@@ -71,8 +103,8 @@ impl FindDb {
     }
 
     /// Apply `other` on top of self: `other`'s tombstones delete, its
-    /// entries overwrite. Shared by [`FindDb::merged_with`] and the
-    /// store's merge-on-save.
+    /// entries overwrite. Shared by [`FindDb::merged_with`] and journal
+    /// replay.
     pub fn apply_overlay(&mut self, other: &FindDb) {
         for k in &other.removed {
             self.entries.remove(k);
@@ -167,25 +199,56 @@ impl FindDb {
     }
 }
 
+/// One tuned-parameter set plus the measured time that won it. The
+/// time is what fleet merge resolves conflicts by: between two machines'
+/// tunings for the same (problem, solver), the faster measurement wins.
+/// `None` marks entries tuned before times were recorded (legacy files)
+/// — they lose to any timed entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfEntry {
+    pub params: BTreeMap<String, i64>,
+    pub time_us: Option<f64>,
+}
+
 /// perf-db: (problem key, solver) -> tuned parameters.
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct PerfDb {
-    entries: BTreeMap<String, BTreeMap<String, i64>>,
+    entries: BTreeMap<String, PerfEntry>,
 }
 
 impl PerfDb {
-    fn key(problem: &str, solver: &str) -> String {
+    pub(crate) fn key(problem: &str, solver: &str) -> String {
         format!("{problem}::{solver}")
     }
 
     pub fn get(&self, problem: &str, solver: &str)
         -> Option<&BTreeMap<String, i64>> {
+        self.entries.get(&Self::key(problem, solver)).map(|e| &e.params)
+    }
+
+    /// Full entry, including the measured time (merge tooling).
+    pub fn get_entry(&self, problem: &str, solver: &str)
+        -> Option<&PerfEntry> {
         self.entries.get(&Self::key(problem, solver))
     }
 
     pub fn set(&mut self, problem: &str, solver: &str,
                params: BTreeMap<String, i64>) {
-        self.entries.insert(Self::key(problem, solver), params);
+        self.entries.insert(Self::key(problem, solver),
+                            PerfEntry { params, time_us: None });
+    }
+
+    /// Record tuned params together with the time they measured — the
+    /// tuner uses this so fleet merge can pick winners by evidence.
+    pub fn set_timed(&mut self, problem: &str, solver: &str,
+                     params: BTreeMap<String, i64>, time_us: f64) {
+        let t = if time_us.is_finite() && time_us >= 0.0 {
+            Some(time_us)
+        } else {
+            None
+        };
+        self.entries.insert(Self::key(problem, solver),
+                            PerfEntry { params, time_us: t });
     }
 
     pub fn len(&self) -> usize {
@@ -205,48 +268,140 @@ impl PerfDb {
 
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
-        for (k, params) in &self.entries {
+        for (k, e) in &self.entries {
             let mut p = BTreeMap::new();
-            for (pk, pv) in params {
+            for (pk, pv) in &e.params {
                 p.insert(pk.clone(), Json::num(*pv as f64));
             }
-            obj.insert(k.clone(), Json::Obj(p));
+            let mut pairs = vec![("params", Json::Obj(p))];
+            if let Some(t) = e.time_us {
+                pairs.push(("time_us", Json::num(t)));
+            }
+            obj.insert(k.clone(), Json::obj(pairs));
         }
         Json::Obj(obj)
     }
 
+    /// Parse a persisted perf-db. Accepts both the current form
+    /// (`{"params": {...}, "time_us": t}`) and the legacy params-direct
+    /// form (`{"block_k": 16}`) so pre-journal files migrate without a
+    /// conversion step — legacy entries load with `time_us: None`.
     pub fn from_json(j: &Json) -> Result<PerfDb> {
         let obj = j.as_obj().ok_or_else(|| bad("perf-db root not object"))?;
-        let mut entries = BTreeMap::new();
-        for (k, v) in obj {
+        let parse_params = |v: &Json| -> Result<BTreeMap<String, i64>> {
             let params = v.as_obj().ok_or_else(|| bad("perf-db entry"))?;
             let mut p = BTreeMap::new();
             for (pk, pv) in params {
                 p.insert(pk.clone(),
                          pv.as_i64().ok_or_else(|| bad("perf param"))?);
             }
-            entries.insert(k.clone(), p);
+            Ok(p)
+        };
+        let mut entries = BTreeMap::new();
+        for (k, v) in obj {
+            let entry = match v.get("params") {
+                Some(params) => {
+                    let time_us = match v.get("time_us") {
+                        None | Some(Json::Null) => None,
+                        Some(t) => {
+                            let t = t.as_f64().ok_or_else(|| bad(&format!(
+                                "perf-db entry '{k}': non-numeric time_us")))?;
+                            if !t.is_finite() || t < 0.0 {
+                                return Err(bad(&format!(
+                                    "perf-db entry '{k}': time_us = {t} is \
+                                     not a finite non-negative time")));
+                            }
+                            Some(t)
+                        }
+                    };
+                    PerfEntry { params: parse_params(params)?, time_us }
+                }
+                None => PerfEntry {
+                    params: parse_params(v)?,
+                    time_us: None,
+                },
+            };
+            entries.insert(k.clone(), entry);
         }
         Ok(PerfDb { entries })
     }
 }
 
-fn bad(msg: &str) -> MiopenError {
+pub(crate) fn bad(msg: &str) -> MiopenError {
     MiopenError::Db(msg.to_string())
 }
 
+// ---------------------------------------------------------------------------
+
+/// Journal file names (legacy JSON names kept for migration).
+const FIND_JOURNAL: &str = "find.db";
+const PERF_JOURNAL: &str = "perf.db";
+const FIND_LEGACY: &str = "find.json";
+const PERF_LEGACY: &str = "perf.json";
+
+/// Default compaction floor: journals below this never compact.
+const COMPACT_MIN_BYTES: u64 = 32 * 1024;
+/// Default compaction ratio: compact once the journal is this many
+/// times larger than a fresh snapshot would be.
+const COMPACT_RATIO: u64 = 4;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_flag(name: &str) -> bool {
+    matches!(std::env::var(name).as_deref(), Ok("1") | Ok("true"))
+}
+
+/// Process-wide per-directory lock registry: two `DbStore`s over the
+/// same directory (a tune session and a serve handle, or a test's
+/// second store) share one mutex, so their append+compact cycles can't
+/// interleave. Cross-process writers are safe too — appends union on
+/// replay — but compaction-vs-append races are excluded only within
+/// the process.
+fn dir_lock(dir: &Path) -> Arc<Mutex<()>> {
+    static LOCKS: OnceLock<Mutex<BTreeMap<PathBuf, Arc<Mutex<()>>>>> =
+        OnceLock::new();
+    let map = LOCKS.get_or_init(|| Mutex::new(BTreeMap::new()));
+    map.lock().unwrap().entry(dir.to_path_buf()).or_default().clone()
+}
+
+#[derive(Debug, Default)]
+struct DbMetrics {
+    corrupt_records: AtomicU64,
+    torn_truncations: AtomicU64,
+    quarantined_files: AtomicU64,
+    migrated_files: AtomicU64,
+    compactions: AtomicU64,
+    saves_skipped_read_only: AtomicU64,
+}
+
 /// Storage of the two dbs on disk (the "designated directory on the
-/// user's system" of §III-B).
+/// user's system" of §III-B), as append-only journals.
 ///
-/// Saves are **merge-on-save**: under the store's lock the on-disk db
-/// is reloaded and the in-memory db overlaid onto it before the atomic
-/// write-then-rename (both fsynced), so two writers sharing a directory
-/// — a foreground tune session and the background immediate-mode
-/// refiner, or two handles — can't clobber each other's entries.
+/// A save appends one checksummed delta record (the writer's dirty
+/// keys) and fsyncs before returning — so it is **acknowledged** only
+/// once durable, and concurrent writers sharing a directory union
+/// instead of clobbering. Loads replay the journal, truncating torn
+/// tails and skipping corrupt records (counted in [`DbStore::health`]);
+/// an unrecognizable file is quarantined (renamed aside), never
+/// silently overwritten. Once a journal outgrows its snapshot by
+/// `MIOPEN_RS_DB_COMPACT_RATIO` (and `MIOPEN_RS_DB_COMPACT_MIN` bytes)
+/// it is compacted via an atomic write-then-rename.
+///
+/// In read-only mode (`MIOPEN_RS_DB_READONLY=1`, an explicit opt-in, or
+/// an unwritable directory) saves become counted no-ops and load-time
+/// repairs are skipped — a serving binary on a read-only filesystem
+/// boots and serves instead of erroring.
 pub struct DbStore {
     pub dir: PathBuf,
-    /// Serializes load-modify-save cycles within this process.
-    lock: Mutex<()>,
+    fs: Arc<dyn Fs>,
+    /// Per-directory (process-wide) lock serializing append/compact.
+    lock: Arc<Mutex<()>>,
+    metrics: DbMetrics,
+    read_only: AtomicBool,
+    compact_min_bytes: u64,
+    compact_ratio: u64,
 }
 
 impl DbStore {
@@ -258,74 +413,434 @@ impl DbStore {
                 let home = std::env::var("HOME").unwrap_or_else(|_| ".".into());
                 PathBuf::from(home).join(".config").join("miopen-rs")
             });
-        Self { dir, lock: Mutex::new(()) }
+        Self::at(dir)
     }
 
     pub fn at(dir: impl AsRef<Path>) -> Self {
-        Self { dir: dir.as_ref().to_path_buf(), lock: Mutex::new(()) }
+        Self::at_with_fs(dir, Arc::new(RealFs))
     }
 
-    fn load_json(&self, name: &str) -> Result<Option<Json>> {
-        let path = self.dir.join(name);
-        if !path.exists() {
-            return Ok(None);
+    /// Store over an injected filesystem (fault-injection tests pass a
+    /// [`FaultFs`] here; production uses [`DbStore::at`]).
+    pub fn at_with_fs(dir: impl AsRef<Path>, fs: Arc<dyn Fs>) -> Self {
+        let dir = dir.as_ref().to_path_buf();
+        Self {
+            lock: dir_lock(&dir),
+            dir,
+            fs,
+            metrics: DbMetrics::default(),
+            read_only: AtomicBool::new(env_flag("MIOPEN_RS_DB_READONLY")),
+            compact_min_bytes: env_u64("MIOPEN_RS_DB_COMPACT_MIN",
+                                       COMPACT_MIN_BYTES),
+            compact_ratio: env_u64("MIOPEN_RS_DB_COMPACT_RATIO",
+                                   COMPACT_RATIO).max(1),
         }
-        let text = std::fs::read_to_string(path)?;
-        Ok(Some(json::parse(&text).map_err(|e| MiopenError::Db(e.to_string()))?))
     }
 
-    /// Write-then-rename with fsync of both the temp file (contents
-    /// durable before the rename publishes them) and the directory (the
-    /// rename itself durable) — without these a crash could publish an
-    /// empty or truncated db despite the "atomic" rename.
-    fn save_json(&self, name: &str, j: &Json) -> Result<()> {
-        std::fs::create_dir_all(&self.dir)?;
-        let tmp = self.dir.join(format!("{name}.tmp"));
-        let path = self.dir.join(name);
-        let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(j.to_string().as_bytes())?;
-        f.sync_all()?;
-        drop(f);
-        std::fs::rename(&tmp, &path)?;
-        if let Ok(d) = std::fs::File::open(&self.dir) {
-            // Directory fsync is advisory on platforms that refuse
-            // opening directories; on Linux it makes the rename durable.
-            let _ = d.sync_all();
+    /// Override the compaction thresholds (tests use tiny values so the
+    /// fault-injection suite exercises compaction crash points).
+    pub fn with_compaction(mut self, min_bytes: u64, ratio: u64) -> Self {
+        self.compact_min_bytes = min_bytes;
+        self.compact_ratio = ratio.max(1);
+        self
+    }
+
+    /// Saves become counted no-ops; load-time repairs (truncation,
+    /// quarantine renames, legacy migration) are skipped.
+    pub fn set_read_only(&self, ro: bool) {
+        self.read_only.store(ro, Ordering::Release);
+    }
+
+    pub fn read_only(&self) -> bool {
+        self.read_only.load(Ordering::Acquire)
+    }
+
+    /// Can this process write into the store's directory? (Probed with
+    /// a scratch file; the handle downgrades to read-only mode when
+    /// this fails.)
+    pub fn probe_writable(&self) -> bool {
+        self.fs.probe_writable(&self.dir)
+    }
+
+    /// Recovery/quarantine counters for this store (surfaced in the
+    /// serve engine's [`crate::metrics::StatsSnapshot`]).
+    pub fn health(&self) -> DbHealth {
+        let m = &self.metrics;
+        DbHealth {
+            corrupt_records: m.corrupt_records.load(Ordering::Relaxed),
+            torn_truncations: m.torn_truncations.load(Ordering::Relaxed),
+            quarantined_files: m.quarantined_files.load(Ordering::Relaxed),
+            migrated_files: m.migrated_files.load(Ordering::Relaxed),
+            compactions: m.compactions.load(Ordering::Relaxed),
+            saves_skipped_read_only:
+                m.saves_skipped_read_only.load(Ordering::Relaxed),
+            read_only: self.read_only(),
+        }
+    }
+
+    /// Journal sizes in bytes: (find, perf). Missing files count as 0.
+    pub fn journal_len_bytes(&self) -> (u64, u64) {
+        let len = |name: &str| {
+            self.fs.len(&self.dir.join(name)).ok().flatten().unwrap_or(0)
+        };
+        (len(FIND_JOURNAL), len(PERF_JOURNAL))
+    }
+
+    /// Rename an unrecognizable db file aside (`<name>.corrupt-<ts>`)
+    /// so the evidence survives for inspection instead of being
+    /// clobbered by the next save. Best-effort; always counted.
+    fn quarantine(&self, name: &str) {
+        self.metrics.quarantined_files.fetch_add(1, Ordering::Relaxed);
+        if self.read_only() {
+            return;
+        }
+        let from = self.dir.join(name);
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        for attempt in 0..16 {
+            let to = if attempt == 0 {
+                self.dir.join(format!("{name}.corrupt-{ts}"))
+            } else {
+                self.dir.join(format!("{name}.corrupt-{ts}.{attempt}"))
+            };
+            if let Ok(None) = self.fs.len(&to) {
+                let _ = self.fs.rename(&from, &to);
+                let _ = self.fs.sync_dir(&self.dir);
+                return;
+            }
+        }
+    }
+
+    // -- find-db ------------------------------------------------------
+
+    pub fn load_find_db(&self) -> Result<FindDb> {
+        let _g = self.lock.lock().unwrap();
+        self.load_find_locked()
+    }
+
+    fn load_find_locked(&self) -> Result<FindDb> {
+        let path = self.dir.join(FIND_JOURNAL);
+        match read_opt(self.fs.as_ref(), &path)? {
+            Some(bytes) => {
+                let scan = journal::scan(&bytes, journal::KIND_FIND);
+                if scan.foreign {
+                    self.quarantine(FIND_JOURNAL);
+                    return Ok(FindDb::default());
+                }
+                if scan.torn_tail {
+                    self.metrics.torn_truncations
+                        .fetch_add(1, Ordering::Relaxed);
+                    if !self.read_only() {
+                        let _ = self.fs.truncate(&path, scan.valid_len);
+                        let _ = self.fs.sync(&path);
+                    }
+                }
+                if scan.corrupt_records > 0 {
+                    self.metrics.corrupt_records
+                        .fetch_add(scan.corrupt_records, Ordering::Relaxed);
+                }
+                let mut db = FindDb::default();
+                let mut bad_payloads = 0;
+                for p in &scan.payloads {
+                    if journal::apply_find(&mut db, p).is_err() {
+                        bad_payloads += 1;
+                    }
+                }
+                if bad_payloads > 0 {
+                    self.metrics.corrupt_records
+                        .fetch_add(bad_payloads, Ordering::Relaxed);
+                }
+                Ok(db)
+            }
+            None => match self.read_legacy_find()? {
+                Some(db) => {
+                    self.migrate_find(&db);
+                    Ok(db)
+                }
+                None => Ok(FindDb::default()),
+            },
+        }
+    }
+
+    /// Parse a pre-journal `find.json`. An unreadable one is
+    /// quarantined (the old behavior treated it as empty, and the next
+    /// merge-on-save *destroyed* the evidence) and reported as empty.
+    fn read_legacy_find(&self) -> Result<Option<FindDb>> {
+        let path = self.dir.join(FIND_LEGACY);
+        let Some(bytes) = read_opt(self.fs.as_ref(), &path)? else {
+            return Ok(None);
+        };
+        let parsed = std::str::from_utf8(&bytes)
+            .ok()
+            .and_then(|t| json::parse(t).ok())
+            .and_then(|j| FindDb::from_json(&j).ok());
+        match parsed {
+            Some(db) => Ok(Some(db)),
+            None => {
+                self.quarantine(FIND_LEGACY);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Forward-migrate a legacy JSON db: write it as a snapshot journal
+    /// and move the JSON aside. Best-effort — a failure leaves the
+    /// legacy file authoritative for the next load.
+    fn migrate_find(&self, db: &FindDb) {
+        if self.read_only() {
+            return;
+        }
+        if self.write_find_journal(db).is_ok() {
+            let from = self.dir.join(FIND_LEGACY);
+            let to = self.dir.join(format!("{FIND_LEGACY}.migrated"));
+            let _ = self.fs.rename(&from, &to);
+            let _ = self.fs.sync_dir(&self.dir);
+            self.metrics.migrated_files.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Full journal rewrite (migration + compaction): header plus one
+    /// snapshot record carrying all entries *and* tombstones, published
+    /// by the same fsynced write-then-rename the legacy store used.
+    fn write_find_journal(&self, db: &FindDb) -> Result<()> {
+        self.fs.create_dir_all(&self.dir)?;
+        let mut bytes = journal::header(journal::KIND_FIND).to_vec();
+        if db.has_changes() {
+            bytes.extend_from_slice(&journal::encode_record(
+                journal::find_payload(db).as_bytes()));
+        }
+        let tmp = self.dir.join(format!("{FIND_JOURNAL}.tmp"));
+        self.fs.write(&tmp, &bytes)?;
+        self.fs.sync(&tmp)?;
+        self.fs.rename(&tmp, &self.dir.join(FIND_JOURNAL))?;
+        self.fs.sync_dir(&self.dir)?;
+        Ok(())
+    }
+
+    /// Make sure the find journal exists before the first append:
+    /// adopts a legacy JSON db (so its entries aren't shadowed by a
+    /// fresh journal) or writes a bare header.
+    fn ensure_find_locked(&self) -> Result<()> {
+        let path = self.dir.join(FIND_JOURNAL);
+        if self.fs.len(&path)?.is_some() {
+            return Ok(());
+        }
+        let base = self.load_find_locked()?;
+        if self.fs.len(&path)?.is_none() {
+            self.write_find_journal(&base)?;
         }
         Ok(())
     }
 
-    pub fn load_find_db(&self) -> Result<FindDb> {
-        Ok(match self.load_json("find.json")? {
-            Some(j) => FindDb::from_json(&j)?,
-            None => FindDb::default(),
-        })
+    /// Persist `db` as one journal delta record. Concurrent writers
+    /// union on replay (tombstoned keys delete, entries overwrite), so
+    /// a tune session and the background refiner sharing a directory
+    /// can't clobber each other. Returns only after the record is
+    /// fsynced — an `Ok` here is the durability acknowledgement the
+    /// crash-recovery suite holds the store to.
+    pub fn save_find_db(&self, db: &FindDb) -> Result<()> {
+        if self.read_only() {
+            self.metrics.saves_skipped_read_only
+                .fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        let _g = self.lock.lock().unwrap();
+        self.ensure_find_locked()?;
+        let path = self.dir.join(FIND_JOURNAL);
+        let rec = journal::encode_record(
+            journal::find_payload(db).as_bytes());
+        self.fs.append(&path, &rec)?;
+        self.fs.sync(&path)?;
+        // acknowledged from here on — compaction failures must not
+        // un-acknowledge a durable save
+        self.maybe_compact_find_locked();
+        Ok(())
     }
 
-    /// Persist `db`, merged over whatever is on disk (tombstoned keys
-    /// are dropped, `db`'s entries win). An unreadable/corrupt on-disk
-    /// db is treated as empty so a save can always recover the file.
-    pub fn save_find_db(&self, db: &FindDb) -> Result<()> {
-        let _g = self.lock.lock().unwrap();
-        let mut on_disk = self.load_find_db().unwrap_or_default();
-        on_disk.apply_overlay(db);
-        self.save_json("find.json", &on_disk.to_json())
+    fn maybe_compact_find_locked(&self) {
+        let path = self.dir.join(FIND_JOURNAL);
+        let len = match self.fs.len(&path) {
+            Ok(Some(l)) => l,
+            _ => return,
+        };
+        if len < self.compact_min_bytes {
+            return;
+        }
+        let Ok(db) = self.load_find_locked() else { return };
+        let snap = (journal::HEADER_LEN + 8
+            + journal::find_payload(&db).len()) as u64;
+        if len <= snap.saturating_mul(self.compact_ratio) {
+            return;
+        }
+        if self.write_find_journal(&db).is_ok() {
+            self.metrics.compactions.fetch_add(1, Ordering::Relaxed);
+        }
     }
+
+    // -- perf-db ------------------------------------------------------
 
     pub fn load_perf_db(&self) -> Result<PerfDb> {
-        Ok(match self.load_json("perf.json")? {
-            Some(j) => PerfDb::from_json(&j)?,
-            None => PerfDb::default(),
-        })
+        let _g = self.lock.lock().unwrap();
+        self.load_perf_locked()
     }
 
-    /// Persist `db`, merged over the on-disk perf-db (see
-    /// [`DbStore::save_find_db`]; the perf-db has no removal API, so a
-    /// plain entry overlay is complete).
+    fn load_perf_locked(&self) -> Result<PerfDb> {
+        let path = self.dir.join(PERF_JOURNAL);
+        match read_opt(self.fs.as_ref(), &path)? {
+            Some(bytes) => {
+                let scan = journal::scan(&bytes, journal::KIND_PERF);
+                if scan.foreign {
+                    self.quarantine(PERF_JOURNAL);
+                    return Ok(PerfDb::default());
+                }
+                if scan.torn_tail {
+                    self.metrics.torn_truncations
+                        .fetch_add(1, Ordering::Relaxed);
+                    if !self.read_only() {
+                        let _ = self.fs.truncate(&path, scan.valid_len);
+                        let _ = self.fs.sync(&path);
+                    }
+                }
+                if scan.corrupt_records > 0 {
+                    self.metrics.corrupt_records
+                        .fetch_add(scan.corrupt_records, Ordering::Relaxed);
+                }
+                let mut db = PerfDb::default();
+                let mut bad_payloads = 0;
+                for p in &scan.payloads {
+                    if journal::apply_perf(&mut db, p).is_err() {
+                        bad_payloads += 1;
+                    }
+                }
+                if bad_payloads > 0 {
+                    self.metrics.corrupt_records
+                        .fetch_add(bad_payloads, Ordering::Relaxed);
+                }
+                Ok(db)
+            }
+            None => match self.read_legacy_perf()? {
+                Some(db) => {
+                    self.migrate_perf(&db);
+                    Ok(db)
+                }
+                None => Ok(PerfDb::default()),
+            },
+        }
+    }
+
+    fn read_legacy_perf(&self) -> Result<Option<PerfDb>> {
+        let path = self.dir.join(PERF_LEGACY);
+        let Some(bytes) = read_opt(self.fs.as_ref(), &path)? else {
+            return Ok(None);
+        };
+        let parsed = std::str::from_utf8(&bytes)
+            .ok()
+            .and_then(|t| json::parse(t).ok())
+            .and_then(|j| PerfDb::from_json(&j).ok());
+        match parsed {
+            Some(db) => Ok(Some(db)),
+            None => {
+                self.quarantine(PERF_LEGACY);
+                Ok(None)
+            }
+        }
+    }
+
+    fn migrate_perf(&self, db: &PerfDb) {
+        if self.read_only() {
+            return;
+        }
+        if self.write_perf_journal(db).is_ok() {
+            let from = self.dir.join(PERF_LEGACY);
+            let to = self.dir.join(format!("{PERF_LEGACY}.migrated"));
+            let _ = self.fs.rename(&from, &to);
+            let _ = self.fs.sync_dir(&self.dir);
+            self.metrics.migrated_files.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn write_perf_journal(&self, db: &PerfDb) -> Result<()> {
+        self.fs.create_dir_all(&self.dir)?;
+        let mut bytes = journal::header(journal::KIND_PERF).to_vec();
+        if !db.is_empty() {
+            bytes.extend_from_slice(&journal::encode_record(
+                journal::perf_payload(db).as_bytes()));
+        }
+        let tmp = self.dir.join(format!("{PERF_JOURNAL}.tmp"));
+        self.fs.write(&tmp, &bytes)?;
+        self.fs.sync(&tmp)?;
+        self.fs.rename(&tmp, &self.dir.join(PERF_JOURNAL))?;
+        self.fs.sync_dir(&self.dir)?;
+        Ok(())
+    }
+
+    fn ensure_perf_locked(&self) -> Result<()> {
+        let path = self.dir.join(PERF_JOURNAL);
+        if self.fs.len(&path)?.is_some() {
+            return Ok(());
+        }
+        let base = self.load_perf_locked()?;
+        if self.fs.len(&path)?.is_none() {
+            self.write_perf_journal(&base)?;
+        }
+        Ok(())
+    }
+
+    /// Persist `db` as one journal delta record (see
+    /// [`DbStore::save_find_db`]; the perf-db has no removal API, so
+    /// entry overlay on replay is the complete story).
     pub fn save_perf_db(&self, db: &PerfDb) -> Result<()> {
+        if self.read_only() {
+            self.metrics.saves_skipped_read_only
+                .fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
         let _g = self.lock.lock().unwrap();
-        let on_disk = self.load_perf_db().unwrap_or_default();
-        self.save_json("perf.json", &on_disk.merged_with(db).to_json())
+        self.ensure_perf_locked()?;
+        let path = self.dir.join(PERF_JOURNAL);
+        let rec = journal::encode_record(
+            journal::perf_payload(db).as_bytes());
+        self.fs.append(&path, &rec)?;
+        self.fs.sync(&path)?;
+        self.maybe_compact_perf_locked();
+        Ok(())
+    }
+
+    fn maybe_compact_perf_locked(&self) {
+        let path = self.dir.join(PERF_JOURNAL);
+        let len = match self.fs.len(&path) {
+            Ok(Some(l)) => l,
+            _ => return,
+        };
+        if len < self.compact_min_bytes {
+            return;
+        }
+        let Ok(db) = self.load_perf_locked() else { return };
+        let snap = (journal::HEADER_LEN + 8
+            + journal::perf_payload(&db).len()) as u64;
+        if len <= snap.saturating_mul(self.compact_ratio) {
+            return;
+        }
+        if self.write_perf_journal(&db).is_ok() {
+            self.metrics.compactions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Compact both journals now (`miopen db compact`). Unlike the
+    /// opportunistic post-save compaction this one reports errors.
+    pub fn compact_now(&self) -> Result<()> {
+        if self.read_only() {
+            return Err(bad("db store is read-only"));
+        }
+        let _g = self.lock.lock().unwrap();
+        let f = self.load_find_locked()?;
+        self.write_find_journal(&f)?;
+        let p = self.load_perf_locked()?;
+        self.write_perf_journal(&p)?;
+        self.metrics.compactions.fetch_add(2, Ordering::Relaxed);
+        Ok(())
     }
 }
 
@@ -340,6 +855,13 @@ mod tests {
             modeled_time_us: t * 0.5,
             workspace_bytes: 128,
         }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "miopen-rs-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -392,6 +914,29 @@ mod tests {
         let j = merged.to_json();
         let back = PerfDb::from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, merged);
+    }
+
+    #[test]
+    fn perf_db_records_measured_time_and_reads_legacy_form() {
+        let mut db = PerfDb::default();
+        db.set_timed("p", "gemm",
+                     BTreeMap::from([("mc".into(), 64i64)]), 12.5);
+        let e = db.get_entry("p", "gemm").unwrap();
+        assert_eq!(e.time_us, Some(12.5));
+        let back = PerfDb::from_json(
+            &json::parse(&db.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, db);
+
+        // the pre-journal params-direct form still parses (time: None)
+        let legacy = r#"{"p::gemm": {"mc": 64}}"#;
+        let old = PerfDb::from_json(&json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(old.get("p", "gemm").unwrap()["mc"], 64);
+        assert_eq!(old.get_entry("p", "gemm").unwrap().time_us, None);
+
+        // a non-finite time is rejected, not stored
+        let mut inf = PerfDb::default();
+        inf.set_timed("p", "gemm", BTreeMap::new(), f64::INFINITY);
+        assert_eq!(inf.get_entry("p", "gemm").unwrap().time_us, None);
     }
 
     #[test]
@@ -464,10 +1009,8 @@ mod tests {
     fn merge_on_save_keeps_concurrent_writers_entries() {
         // regression: save used to blindly overwrite find.json, so a
         // tune session and the background refiner sharing a db dir lost
-        // each other's updates.
-        let dir = std::env::temp_dir().join(format!(
-            "miopen-rs-dbmerge-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        // each other's updates. The journal unions deltas on replay.
+        let dir = tmp_dir("dbmerge");
         let store = DbStore::at(&dir);
 
         let mut tune_view = FindDb::default();
@@ -481,10 +1024,10 @@ mod tests {
 
         let loaded = store.load_find_db().unwrap();
         assert!(loaded.get("tuned_key").is_some(),
-                "merge-on-save must preserve the first writer's entry");
+                "delta saves must preserve the first writer's entry");
         assert!(loaded.get("cold_key").is_some());
 
-        // tombstones delete through the merge
+        // tombstones delete through the journal
         let mut invalidator = FindDb::default();
         invalidator.remove("tuned_key");
         store.save_find_db(&invalidator).unwrap();
@@ -497,9 +1040,7 @@ mod tests {
 
     #[test]
     fn merge_on_save_parallel_writers_lose_nothing() {
-        let dir = std::env::temp_dir().join(format!(
-            "miopen-rs-dbpar-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = tmp_dir("dbpar");
         let store = DbStore::at(&dir);
         std::thread::scope(|s| {
             for t in 0..4 {
@@ -522,9 +1063,7 @@ mod tests {
 
     #[test]
     fn store_persists_to_disk() {
-        let dir = std::env::temp_dir().join(format!(
-            "miopen-rs-dbtest-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = tmp_dir("dbtest");
         let store = DbStore::at(&dir);
         assert!(store.load_find_db().unwrap().is_empty());
 
@@ -539,5 +1078,152 @@ mod tests {
         store.save_perf_db(&pdb).unwrap();
         assert_eq!(store.load_perf_db().unwrap(), pdb);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_json_migrates_forward_transparently() {
+        let dir = tmp_dir("dbmigrate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut legacy = FindDb::default();
+        legacy.insert("old_key".into(), vec![rec("gemm", 4.0)]);
+        std::fs::write(dir.join("find.json"),
+                       legacy.to_json().to_string()).unwrap();
+        std::fs::write(dir.join("perf.json"),
+                       r#"{"p::gemm": {"mc": 8}}"#).unwrap();
+
+        let store = DbStore::at(&dir);
+        let loaded = store.load_find_db().unwrap();
+        assert_eq!(loaded.get("old_key").unwrap()[0].algo, "gemm");
+        let perf = store.load_perf_db().unwrap();
+        assert_eq!(perf.get("p", "gemm").unwrap()["mc"], 8);
+
+        // the JSON moved aside, the journal is now authoritative
+        assert!(!dir.join("find.json").exists());
+        assert!(dir.join("find.json.migrated").exists());
+        assert!(dir.join("find.db").exists());
+        assert_eq!(store.health().migrated_files, 2);
+
+        // and the migrated entries survive a save + reload cycle
+        let mut delta = FindDb::default();
+        delta.insert("new_key".into(), vec![rec("direct", 1.0)]);
+        store.save_find_db(&delta).unwrap();
+        let loaded = store.load_find_db().unwrap();
+        assert!(loaded.get("old_key").is_some());
+        assert!(loaded.get("new_key").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_legacy_db_is_quarantined_not_clobbered() {
+        // regression: a corrupt find.json used to load as empty and be
+        // *overwritten* by the next merge-on-save, destroying the
+        // evidence. It must be renamed aside and counted.
+        let dir = tmp_dir("dbquarantine");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("find.json"), b"{not json at all").unwrap();
+
+        let store = DbStore::at(&dir);
+        assert!(store.load_find_db().unwrap().is_empty(),
+                "corruption must degrade to empty, not a hard failure");
+        assert_eq!(store.health().quarantined_files, 1);
+        assert!(!dir.join("find.json").exists());
+        let quarantined = std::fs::read_dir(&dir).unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy()
+                         .starts_with("find.json.corrupt-"))
+            .count();
+        assert_eq!(quarantined, 1, "the corrupt file must survive, renamed");
+
+        // saving now works and does not touch the quarantined file
+        let mut db = FindDb::default();
+        db.insert("k".into(), vec![rec("a", 1.0)]);
+        store.save_find_db(&db).unwrap();
+        assert!(store.load_find_db().unwrap().get("k").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_only_store_skips_saves_and_counts_them() {
+        let dir = tmp_dir("dbro");
+        let store = DbStore::at(&dir);
+        store.set_read_only(true);
+        let mut db = FindDb::default();
+        db.insert("k".into(), vec![rec("a", 1.0)]);
+        store.save_find_db(&db).unwrap();
+        store.save_perf_db(&PerfDb::default()).unwrap();
+        assert_eq!(store.health().saves_skipped_read_only, 2);
+        assert!(store.health().read_only);
+        assert!(!dir.join("find.db").exists(),
+                "read-only mode must not create files");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_journal_record_is_skipped_and_counted() {
+        let fs = Arc::new(FaultFs::new(11));
+        let dir = PathBuf::from("/virt/db");
+        let store = DbStore::at_with_fs(&dir, fs.clone());
+        for i in 0..3 {
+            let mut db = FindDb::default();
+            db.insert(format!("k{i}"), vec![rec("gemm", 1.0 + i as f64)]);
+            store.save_find_db(&db).unwrap();
+        }
+        // flip one byte inside the second record's payload
+        let bytes = fs.file_bytes(&dir.join("find.db")).unwrap();
+        let first_rec_end = {
+            let off = journal::HEADER_LEN;
+            let len = u32::from_le_bytes(
+                bytes[off..off + 4].try_into().unwrap()) as usize;
+            off + 8 + len
+        };
+        fs.corrupt_byte(&dir.join("find.db"), first_rec_end + 9);
+
+        let loaded = store.load_find_db().unwrap();
+        assert!(loaded.get("k0").is_some());
+        assert!(loaded.get("k1").is_none(), "corrupt record must be skipped");
+        assert!(loaded.get("k2").is_some(),
+                "records after the corrupt one must still load");
+        assert_eq!(store.health().corrupt_records, 1);
+    }
+
+    #[test]
+    fn foreign_journal_is_quarantined_whole() {
+        let fs = Arc::new(FaultFs::new(12));
+        let dir = PathBuf::from("/virt/foreign");
+        let store = DbStore::at_with_fs(&dir, fs.clone());
+        // a perf journal sitting at the find journal's path
+        let mut bytes = journal::header(journal::KIND_PERF).to_vec();
+        bytes.extend_from_slice(&journal::encode_record(b"{\"set\":{}}"));
+        fs.put_file(&dir.join("find.db"), &bytes);
+        assert!(store.load_find_db().unwrap().is_empty());
+        assert_eq!(store.health().quarantined_files, 1);
+        assert!(fs.file_bytes(&dir.join("find.db")).is_none(),
+                "the foreign file must have been renamed aside");
+    }
+
+    #[test]
+    fn journal_compacts_once_ratio_exceeded() {
+        let fs = Arc::new(FaultFs::new(13));
+        let dir = PathBuf::from("/virt/compact");
+        let store = DbStore::at_with_fs(&dir, fs.clone())
+            .with_compaction(64, 2);
+        // overwrite one key many times: the journal grows, the
+        // snapshot doesn't — compaction must kick in
+        for i in 0..32 {
+            let mut db = FindDb::default();
+            db.insert("hot".into(), vec![rec("gemm", i as f64 + 1.0)]);
+            store.save_find_db(&db).unwrap();
+        }
+        assert!(store.health().compactions >= 1,
+                "32 overwrites at ratio 2 must have compacted");
+        let loaded = store.load_find_db().unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded.get("hot").unwrap()[0].time_us, 32.0);
+        // the compacted file is small again
+        let (find_len, _) = store.journal_len_bytes();
+        let snap = (journal::HEADER_LEN + 8
+            + journal::find_payload(&loaded).len()) as u64;
+        assert!(find_len <= snap.saturating_mul(2),
+                "{find_len} bytes after compaction vs snapshot {snap}");
     }
 }

@@ -1,0 +1,345 @@
+//! Lock-striped in-memory db fronts.
+//!
+//! The handle's user dbs used to be one `Mutex<FindDb>` /
+//! `Mutex<PerfDb>` — every concurrent writer (a foreground tune
+//! session, find steps on serve workers, the background immediate-mode
+//! refiner) serialized on a single lock, and every save flushed the
+//! *whole* db. These fronts stripe the key space over 16 shards (FNV-1a
+//! on the key) so disjoint writers proceed in parallel, and track dirty
+//! keys per shard so a save journals only the delta since the last
+//! flush ([`ShardedFindDb::take_dirty`]).
+//!
+//! Failure contract: if persisting a taken delta fails, the caller
+//! hands it back via `mark_dirty` so the next save retries it —
+//! acknowledged-save semantics end-to-end.
+
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+use super::{FindDb, FindRecord, PerfDb, PerfEntry};
+
+const SHARDS: usize = 16;
+
+/// FNV-1a, folded onto a shard index. Stable across runs (no
+/// RandomState) so tests can reason about placement.
+fn shard_of(key: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % SHARDS as u64) as usize
+}
+
+#[derive(Default)]
+struct FindShard {
+    db: FindDb,
+    /// Keys inserted since the last [`ShardedFindDb::take_dirty`].
+    dirty_set: BTreeSet<String>,
+    /// Keys removed (tombstoned) since the last flush.
+    dirty_del: BTreeSet<String>,
+}
+
+/// Sharded find-db front (user layer). Keys are partitioned, so the
+/// merged [`ShardedFindDb::snapshot`] is a plain union.
+pub struct ShardedFindDb {
+    shards: Vec<Mutex<FindShard>>,
+}
+
+impl Default for ShardedFindDb {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedFindDb {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(FindShard::default()))
+                .collect(),
+        }
+    }
+
+    /// Seed the shards from a loaded db (handle creation). Everything
+    /// starts clean — it is already on disk.
+    pub fn with_db(db: FindDb) -> Self {
+        let out = Self::new();
+        for (k, v) in db.entries {
+            let mut sh = out.shards[shard_of(&k)].lock().unwrap();
+            sh.db.entries.insert(k, v);
+        }
+        for k in db.removed {
+            let mut sh = out.shards[shard_of(&k)].lock().unwrap();
+            sh.db.removed.insert(k);
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<Vec<FindRecord>> {
+        let sh = self.shards[shard_of(key)].lock().unwrap();
+        sh.db.get(key).map(<[FindRecord]>::to_vec)
+    }
+
+    pub fn insert(&self, key: String, records: Vec<FindRecord>) {
+        let mut sh = self.shards[shard_of(&key)].lock().unwrap();
+        sh.dirty_del.remove(&key);
+        sh.dirty_set.insert(key.clone());
+        sh.db.insert(key, records);
+    }
+
+    pub fn remove(&self, key: &str) {
+        let mut sh = self.shards[shard_of(key)].lock().unwrap();
+        sh.dirty_set.remove(key);
+        sh.dirty_del.insert(key.to_string());
+        sh.db.remove(key);
+    }
+
+    /// Full merged view (entries + tombstones) — the handle's
+    /// `find_db()` overlay and the immediate-mode neighbor index build
+    /// from this. Shards are snapshotted one at a time; keys are
+    /// partitioned so the union is exact, though not a single atomic
+    /// cut across shards.
+    pub fn snapshot(&self) -> FindDb {
+        let mut out = FindDb::default();
+        for shard in &self.shards {
+            let sh = shard.lock().unwrap();
+            for (k, v) in &sh.db.entries {
+                out.entries.insert(k.clone(), v.clone());
+            }
+            for k in &sh.db.removed {
+                out.removed.insert(k.clone());
+            }
+        }
+        out
+    }
+
+    /// Drain the dirty keys into a delta db for journaling; clears the
+    /// dirty flags. `None` when nothing changed since the last flush.
+    pub fn take_dirty(&self) -> Option<FindDb> {
+        let mut delta = FindDb::default();
+        for shard in &self.shards {
+            let mut sh = shard.lock().unwrap();
+            for k in std::mem::take(&mut sh.dirty_set) {
+                if let Some(v) = sh.db.entries.get(&k) {
+                    delta.entries.insert(k, v.clone());
+                }
+            }
+            for k in std::mem::take(&mut sh.dirty_del) {
+                delta.removed.insert(k);
+            }
+        }
+        if delta.has_changes() { Some(delta) } else { None }
+    }
+
+    /// Hand a failed delta back so the next save retries it. A key the
+    /// shard has since re-written stays tracked by its newer state.
+    pub fn mark_dirty(&self, delta: &FindDb) {
+        for k in delta.entries.keys() {
+            let mut sh = self.shards[shard_of(k)].lock().unwrap();
+            if sh.db.entries.contains_key(k) {
+                sh.dirty_set.insert(k.clone());
+            } else {
+                sh.dirty_del.insert(k.clone());
+            }
+        }
+        for k in &delta.removed {
+            let mut sh = self.shards[shard_of(k)].lock().unwrap();
+            if sh.db.entries.contains_key(k) {
+                sh.dirty_set.insert(k.clone());
+            } else {
+                sh.dirty_del.insert(k.clone());
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct PerfShard {
+    db: PerfDb,
+    dirty: BTreeSet<String>,
+}
+
+/// Sharded perf-db front (user layer); see [`ShardedFindDb`].
+pub struct ShardedPerfDb {
+    shards: Vec<Mutex<PerfShard>>,
+}
+
+impl Default for ShardedPerfDb {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedPerfDb {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(PerfShard::default()))
+                .collect(),
+        }
+    }
+
+    pub fn with_db(db: PerfDb) -> Self {
+        let out = Self::new();
+        for (k, v) in db.entries {
+            let mut sh = out.shards[shard_of(&k)].lock().unwrap();
+            sh.db.entries.insert(k, v);
+        }
+        out
+    }
+
+    /// Tuned params for (problem, solver), cloned out of the shard (the
+    /// find path holds no shard lock while compiling).
+    pub fn get(&self, problem: &str, solver: &str)
+        -> Option<std::collections::BTreeMap<String, i64>> {
+        let key = PerfDb::key(problem, solver);
+        let sh = self.shards[shard_of(&key)].lock().unwrap();
+        sh.db.entries.get(&key).map(|e| e.params.clone())
+    }
+
+    pub fn set(&self, problem: &str, solver: &str,
+               params: std::collections::BTreeMap<String, i64>) {
+        let key = PerfDb::key(problem, solver);
+        let mut sh = self.shards[shard_of(&key)].lock().unwrap();
+        sh.dirty.insert(key.clone());
+        sh.db.entries.insert(key, PerfEntry { params, time_us: None });
+    }
+
+    /// Record tuned params with their measured time (see
+    /// [`PerfDb::set_timed`]).
+    pub fn set_timed(&self, problem: &str, solver: &str,
+                     params: std::collections::BTreeMap<String, i64>,
+                     time_us: f64) {
+        let key = PerfDb::key(problem, solver);
+        let t = if time_us.is_finite() && time_us >= 0.0 {
+            Some(time_us)
+        } else {
+            None
+        };
+        let mut sh = self.shards[shard_of(&key)].lock().unwrap();
+        sh.dirty.insert(key.clone());
+        sh.db.entries.insert(key, PerfEntry { params, time_us: t });
+    }
+
+    pub fn snapshot(&self) -> PerfDb {
+        let mut out = PerfDb::default();
+        for shard in &self.shards {
+            let sh = shard.lock().unwrap();
+            for (k, v) in &sh.db.entries {
+                out.entries.insert(k.clone(), v.clone());
+            }
+        }
+        out
+    }
+
+    pub fn take_dirty(&self) -> Option<PerfDb> {
+        let mut delta = PerfDb::default();
+        for shard in &self.shards {
+            let mut sh = shard.lock().unwrap();
+            for k in std::mem::take(&mut sh.dirty) {
+                if let Some(v) = sh.db.entries.get(&k) {
+                    delta.entries.insert(k, v.clone());
+                }
+            }
+        }
+        if delta.is_empty() { None } else { Some(delta) }
+    }
+
+    pub fn mark_dirty(&self, delta: &PerfDb) {
+        for k in delta.entries.keys() {
+            let mut sh = self.shards[shard_of(k)].lock().unwrap();
+            if sh.db.entries.contains_key(k) {
+                sh.dirty.insert(k.clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn rec(algo: &str, t: f64) -> FindRecord {
+        FindRecord {
+            algo: algo.into(),
+            time_us: t,
+            modeled_time_us: t,
+            workspace_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn dirty_tracking_yields_only_the_delta() {
+        let db = ShardedFindDb::new();
+        db.insert("a".into(), vec![rec("gemm", 1.0)]);
+        db.insert("b".into(), vec![rec("direct", 2.0)]);
+        let d1 = db.take_dirty().unwrap();
+        assert_eq!(d1.len(), 2);
+        assert!(db.take_dirty().is_none(), "flags cleared after take");
+
+        db.insert("c".into(), vec![rec("fft", 3.0)]);
+        db.remove("a");
+        let d2 = db.take_dirty().unwrap();
+        assert_eq!(d2.len(), 1, "only 'c' is a fresh entry");
+        assert!(d2.removed.contains("a"), "the removal is in the delta");
+        assert!(!d2.entries.contains_key("b"),
+                "clean keys stay out of the delta");
+
+        // the full snapshot still has everything current
+        let snap = db.snapshot();
+        assert!(snap.get("a").is_none());
+        assert!(snap.get("b").is_some() && snap.get("c").is_some());
+        assert!(snap.removed.contains("a"));
+    }
+
+    #[test]
+    fn mark_dirty_requeues_a_failed_delta() {
+        let db = ShardedFindDb::new();
+        db.insert("k".into(), vec![rec("gemm", 1.0)]);
+        db.remove("gone");
+        let delta = db.take_dirty().unwrap();
+        assert!(db.take_dirty().is_none());
+        // "save failed" — hand it back
+        db.mark_dirty(&delta);
+        let retry = db.take_dirty().unwrap();
+        assert!(retry.entries.contains_key("k"));
+        assert!(retry.removed.contains("gone"));
+    }
+
+    #[test]
+    fn concurrent_shard_writers_do_not_lose_inserts() {
+        let db = ShardedFindDb::new();
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let db = &db;
+                s.spawn(move || {
+                    for i in 0..64 {
+                        db.insert(format!("t{t}_k{i}"),
+                                  vec![rec("gemm", i as f64)]);
+                    }
+                });
+            }
+        });
+        assert_eq!(db.snapshot().len(), 8 * 64);
+        assert_eq!(db.take_dirty().unwrap().len(), 8 * 64);
+    }
+
+    #[test]
+    fn perf_front_roundtrip_and_dirty() {
+        let db = ShardedPerfDb::new();
+        db.set_timed("p", "gemm", BTreeMap::from([("mc".into(), 64i64)]),
+                     9.0);
+        assert_eq!(db.get("p", "gemm").unwrap()["mc"], 64);
+        let d = db.take_dirty().unwrap();
+        assert_eq!(d.get_entry("p", "gemm").unwrap().time_us, Some(9.0));
+        assert!(db.take_dirty().is_none());
+        db.mark_dirty(&d);
+        assert!(db.take_dirty().is_some());
+
+        let seeded = ShardedPerfDb::with_db(db.snapshot());
+        assert_eq!(seeded.get("p", "gemm").unwrap()["mc"], 64);
+        assert!(seeded.take_dirty().is_none(), "seeded state is clean");
+    }
+}

@@ -185,7 +185,7 @@ impl Handle {
         };
         results.sort_by(|a, b| sort_key(a).total_cmp(&sort_key(b)));
 
-        self.user_find.lock().unwrap().insert(
+        self.user_find.insert(
             key,
             results
                 .iter()
@@ -214,7 +214,6 @@ impl Handle {
         let key = sig.db_key();
         // Per-entry lookups (user shadows system) instead of a full
         // merged clone — this is the warm path, called per request.
-        let user_perf = self.user_perf.lock().unwrap();
         let system_perf = self.system_perf();
         let manifest = self.manifest();
         let solvers = crate::solvers::applicable(sig);
@@ -224,10 +223,10 @@ impl Handle {
             else {
                 continue; // stale record: solver no longer applicable
             };
-            let tuned = user_perf
+            let tuned = self.user_perf
                 .get(&key, solver.name())
-                .or_else(|| system_perf.get(&key, solver.name()))
-                .map(|params| solver.artifact_sig(sig, Some(params)))
+                .or_else(|| system_perf.get(&key, solver.name()).cloned())
+                .map(|params| solver.artifact_sig(sig, Some(&params)))
                 .filter(|s| manifest.get(s).is_some());
             let art_sig = match tuned {
                 Some(s) => s,

@@ -22,7 +22,8 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::cache::{compile_cached, CacheStats, DiskCache, ExecCache};
-use crate::db::{DbStore, FindDb, PerfDb};
+use crate::db::{embedded_find_db, embedded_perf_db, DbStore, FindDb,
+                PerfDb, ShardedFindDb, ShardedPerfDb};
 use crate::manifest::Manifest;
 use crate::perfmodel::GcnModel;
 #[cfg(feature = "pjrt")]
@@ -77,6 +78,10 @@ pub struct HandleOptions {
     pub artifacts_dir: Option<PathBuf>,
     /// User db directory; None = $MIOPEN_RS_DB_DIR or ~/.config/miopen-rs.
     pub db_dir: Option<PathBuf>,
+    /// Force db read-only mode: saves become counted no-ops and the
+    /// embedded compile-time db backs the find-db. Also triggered by
+    /// `MIOPEN_RS_DB_READONLY=1` or an unwritable db directory.
+    pub db_read_only: bool,
     /// In-memory executable cache capacity.
     pub exec_cache_capacity: usize,
     /// Timed iterations per algorithm in the find step.
@@ -92,6 +97,7 @@ impl Default for HandleOptions {
             backend: BackendChoice::auto(),
             artifacts_dir: None,
             db_dir: None,
+            db_read_only: false,
             exec_cache_capacity: 256,
             find_iters: 3,
             warmup_iters: 1,
@@ -106,9 +112,9 @@ pub struct Handle {
     pub(crate) exec_cache: ExecCache,
     pub(crate) disk_cache: DiskCache,
     system_find: RwLock<Arc<FindDb>>,
-    pub(crate) user_find: Mutex<FindDb>,
+    pub(crate) user_find: ShardedFindDb,
     system_perf: RwLock<Arc<PerfDb>>,
-    pub(crate) user_perf: Mutex<PerfDb>,
+    pub(crate) user_perf: ShardedPerfDb,
     pub(crate) db_store: DbStore,
     pub(crate) model: GcnModel,
     pub(crate) rng: Mutex<SplitMix64>,
@@ -144,13 +150,27 @@ impl Handle {
         let dir = opts
             .artifacts_dir
             .unwrap_or_else(crate::testutil::artifacts_dir);
-        let (manifest, system_find, system_perf) =
-            Self::load_artifact_set(&dir, is_interp)?;
 
         let db_store = match opts.db_dir {
             Some(d) => DbStore::at(d),
             None => DbStore::user_default(),
         };
+        // Degraded read-only serving: an explicit opt-in, the env flag
+        // (absorbed by DbStore), or an unwritable db directory. The
+        // short-circuit means an explicit flag never probes the dir.
+        let read_only = opts.db_read_only
+            || db_store.read_only()
+            || !db_store.probe_writable();
+        db_store.set_read_only(read_only);
+
+        let (manifest, mut system_find, mut system_perf) =
+            Self::load_artifact_set(&dir, is_interp)?;
+        if read_only {
+            (system_find, system_perf) =
+                Self::overlay_embedded(system_find, system_perf);
+        }
+
+        // Loads work on a read-only store too — repairs are skipped.
         let user_find = db_store.load_find_db().unwrap_or_default();
         let user_perf = db_store.load_perf_db().unwrap_or_default();
 
@@ -160,9 +180,9 @@ impl Handle {
             exec_cache: ExecCache::new(opts.exec_cache_capacity),
             disk_cache: DiskCache::new(),
             system_find: RwLock::new(Arc::new(system_find)),
-            user_find: Mutex::new(user_find),
+            user_find: ShardedFindDb::with_db(user_find),
             system_perf: RwLock::new(Arc::new(system_perf)),
-            user_perf: Mutex::new(user_perf),
+            user_perf: ShardedPerfDb::with_db(user_perf),
             db_store,
             model: GcnModel::default(),
             rng: Mutex::new(SplitMix64::new(opts.seed)),
@@ -189,9 +209,22 @@ impl Handle {
             Manifest::load(dir)?
         };
         let system_store = DbStore::at(dir.join("system_db"));
+        // The artifacts directory is never ours to repair or migrate —
+        // system dbs are read in place, whatever their format vintage.
+        system_store.set_read_only(true);
         let system_find = system_store.load_find_db().unwrap_or_default();
         let system_perf = system_store.load_perf_db().unwrap_or_default();
         Ok((manifest, system_find, system_perf))
+    }
+
+    /// Put the embedded compile-time db *under* the system dbs: real
+    /// measurements from disk shadow the model-ranked embedded records,
+    /// but every builtin signature keeps a servable ranking even when
+    /// no db file is readable (the read-only degraded mode).
+    fn overlay_embedded(system_find: FindDb, system_perf: PerfDb)
+        -> (FindDb, PerfDb) {
+        (embedded_find_db().merged_with(&system_find),
+         embedded_perf_db().merged_with(&system_perf))
     }
 
     /// Convenience: mock-backed handle for tests (no PJRT, no artifacts
@@ -204,9 +237,9 @@ impl Handle {
             exec_cache: ExecCache::new(64),
             disk_cache: DiskCache::new(),
             system_find: RwLock::new(Arc::new(FindDb::default())),
-            user_find: Mutex::new(FindDb::default()),
+            user_find: ShardedFindDb::new(),
             system_perf: RwLock::new(Arc::new(PerfDb::default())),
-            user_perf: Mutex::new(PerfDb::default()),
+            user_perf: ShardedPerfDb::new(),
             db_store: DbStore::at(db_dir.clone()),
             model: GcnModel::default(),
             rng: Mutex::new(SplitMix64::new(7)),
@@ -282,8 +315,11 @@ impl Handle {
     /// the "a tuning run just refreshed the system dbs on disk" path.
     /// On error nothing is swapped.
     pub fn reload_artifacts(&self) -> Result<()> {
-        let (m, f, p) = Self::load_artifact_set(&self.artifacts_dir,
-                                                self.builtin_fallback)?;
+        let (m, mut f, mut p) = Self::load_artifact_set(
+            &self.artifacts_dir, self.builtin_fallback)?;
+        if self.db_read_only() {
+            (f, p) = Self::overlay_embedded(f, p);
+        }
         self.reload_with(m, f, p);
         Ok(())
     }
@@ -295,6 +331,13 @@ impl Handle {
     /// The user db store (`save_dbs` persists here).
     pub fn db_store(&self) -> &DbStore {
         &self.db_store
+    }
+
+    /// Is this handle serving in degraded read-only db mode? (Explicit
+    /// opt-in, `MIOPEN_RS_DB_READONLY=1`, or an unwritable db dir; the
+    /// embedded db backs the find-db and saves are skipped.)
+    pub fn db_read_only(&self) -> bool {
+        self.db_store.read_only()
     }
 
     pub fn cache_stats(&self) -> (CacheStats, CacheStats) {
@@ -388,18 +431,32 @@ impl Handle {
 
     /// Merged find-db view (user shadows system).
     pub fn find_db(&self) -> FindDb {
-        self.system_find().merged_with(&self.user_find.lock().unwrap())
+        self.system_find().merged_with(&self.user_find.snapshot())
     }
 
     /// Merged perf-db view.
     pub fn perf_db(&self) -> PerfDb {
-        self.system_perf().merged_with(&self.user_perf.lock().unwrap())
+        self.system_perf().merged_with(&self.user_perf.snapshot())
     }
 
     /// Persist the user dbs (find results + tuned params survive the
-    /// process, §III-B "serialized to a designated directory").
+    /// process, §III-B "serialized to a designated directory"). Only
+    /// the keys dirtied since the last save are journaled; a failed
+    /// delta is re-marked dirty so the next save retries it — nothing
+    /// is dropped between an error and the retry.
     pub fn save_dbs(&self) -> Result<()> {
-        self.db_store.save_find_db(&self.user_find.lock().unwrap())?;
-        self.db_store.save_perf_db(&self.user_perf.lock().unwrap())
+        if let Some(delta) = self.user_find.take_dirty() {
+            if let Err(e) = self.db_store.save_find_db(&delta) {
+                self.user_find.mark_dirty(&delta);
+                return Err(e);
+            }
+        }
+        if let Some(delta) = self.user_perf.take_dirty() {
+            if let Err(e) = self.db_store.save_perf_db(&delta) {
+                self.user_perf.mark_dirty(&delta);
+                return Err(e);
+            }
+        }
+        Ok(())
     }
 }

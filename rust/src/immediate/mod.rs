@@ -437,8 +437,10 @@ impl Refiner {
     }
 
     /// Worker loop: pop shapes, run find, persist the upgraded user
-    /// dbs. Returns when [`Refiner::close`] is called and the queue is
-    /// empty. Run on a scoped thread so `handle` can be borrowed.
+    /// dbs (an acknowledged, checksummed journal append; a no-op when
+    /// the store is read-only). Returns when [`Refiner::close`] is
+    /// called and the queue is empty. Run on a scoped thread so
+    /// `handle` can be borrowed.
     pub fn worker(&self, handle: &Handle) {
         loop {
             let problem = {

@@ -83,6 +83,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("fusion-check") => cmd_fusion_check(args),
         Some("tables") => cmd_tables(),
         Some("artifacts-check") => cmd_artifacts_check(args),
+        Some("db") => cmd_db(args),
         Some("info") => cmd_info(args),
         _ => {
             print!("{USAGE}");
@@ -198,6 +199,10 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let handle = make_handle(args)?;
+    if handle.db_read_only() {
+        println!("db: read-only mode — serving from the embedded db, \
+                  saves are skipped");
+    }
     if args.flag("immediate") {
         return serve_immediate_demo(&handle);
     }
@@ -651,6 +656,76 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
         std::process::exit(2);
     }
     Ok(())
+}
+
+fn cmd_db(args: &Args) -> Result<()> {
+    use miopen_rs::db::{merge_db_dirs, DbStore};
+
+    match args.positional.first().map(String::as_str) {
+        Some("merge") => {
+            let out = args.opt("out").ok_or_else(|| {
+                miopen_rs::types::MiopenError::BadDescriptor(
+                    "db merge requires --out <dir>".into())
+            })?;
+            let inputs: Vec<PathBuf> = args.positional[1..]
+                .iter()
+                .map(PathBuf::from)
+                .collect();
+            if inputs.is_empty() {
+                return Err(miopen_rs::types::MiopenError::BadDescriptor(
+                    "db merge requires at least one input dir".into()));
+            }
+            let report = merge_db_dirs(&inputs, &PathBuf::from(out))?;
+            println!("merged {} input dir(s) into {out}", report.inputs);
+            println!("find-db: {} entries ({} conflicts resolved by \
+                      measured time)",
+                     report.find_entries, report.find_conflicts);
+            println!("perf-db: {} entries ({} conflicts)",
+                     report.perf_entries, report.perf_conflicts);
+            if report.migrated_inputs > 0 {
+                println!("migrated {} legacy JSON db(s) forward",
+                         report.migrated_inputs);
+            }
+            Ok(())
+        }
+        Some("info") => {
+            let store = match args.opt("db-dir") {
+                Some(dir) => DbStore::at(PathBuf::from(dir)),
+                None => DbStore::user_default(),
+            };
+            let find = store.load_find_db()?;
+            let perf = store.load_perf_db()?;
+            let (find_bytes, perf_bytes) = store.journal_len_bytes();
+            println!("db dir: {}", store.dir.display());
+            println!("find-db: {} entries, journal {find_bytes} bytes",
+                     find.len());
+            println!("perf-db: {} entries, journal {perf_bytes} bytes",
+                     perf.len());
+            let h = store.health();
+            println!("health: {} corrupt record(s) skipped, {} torn \
+                      tail(s) truncated, {} file(s) quarantined, {} \
+                      migrated",
+                     h.corrupt_records, h.torn_truncations,
+                     h.quarantined_files, h.migrated_files);
+            Ok(())
+        }
+        Some("compact") => {
+            let store = match args.opt("db-dir") {
+                Some(dir) => DbStore::at(PathBuf::from(dir)),
+                None => DbStore::user_default(),
+            };
+            let before = store.journal_len_bytes();
+            store.compact_now()?;
+            let after = store.journal_len_bytes();
+            println!("compacted {}: find {} -> {} bytes, perf {} -> {} \
+                      bytes",
+                     store.dir.display(), before.0, after.0, before.1,
+                     after.1);
+            Ok(())
+        }
+        other => Err(miopen_rs::types::MiopenError::BadDescriptor(format!(
+            "db: expected merge|info|compact, got {other:?}"))),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

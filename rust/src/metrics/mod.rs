@@ -242,7 +242,47 @@ impl ServeMetrics {
                 0.0
             },
             per_priority,
+            db: DbHealth::default(),
         }
+    }
+}
+
+/// Db-layer recovery/quarantine counters, snapshotted from
+/// `DbStore::health()` into [`StatsSnapshot::db`] so serving exposes
+/// persistence health next to its traffic counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DbHealth {
+    /// Checksummed journal records skipped as corrupt on load.
+    pub corrupt_records: u64,
+    /// Torn journal tails truncated during recovery.
+    pub torn_truncations: u64,
+    /// Unrecognizable db files renamed aside (`*.corrupt-<ts>`).
+    pub quarantined_files: u64,
+    /// Legacy JSON dbs migrated forward to the journal format.
+    pub migrated_files: u64,
+    /// Journal compactions performed.
+    pub compactions: u64,
+    /// Saves skipped because the store is read-only.
+    pub saves_skipped_read_only: u64,
+    /// Is the store currently in read-only (degraded) mode?
+    pub read_only: bool,
+}
+
+impl DbHealth {
+    /// Serialize under the snapshot's `db` key.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("corrupt_records", Json::num(self.corrupt_records as f64)),
+            ("torn_truncations",
+             Json::num(self.torn_truncations as f64)),
+            ("quarantined_files",
+             Json::num(self.quarantined_files as f64)),
+            ("migrated_files", Json::num(self.migrated_files as f64)),
+            ("compactions", Json::num(self.compactions as f64)),
+            ("saves_skipped_read_only",
+             Json::num(self.saves_skipped_read_only as f64)),
+            ("read_only", Json::Bool(self.read_only)),
+        ])
     }
 }
 
@@ -285,6 +325,9 @@ pub struct StatsSnapshot {
     pub goodput_req_s: f64,
     /// Per-priority completion latency summaries.
     pub per_priority: Vec<PrioritySnapshot>,
+    /// Db-layer health at snapshot time (filled in by the serve engine
+    /// from the handle's store; defaults to zeros elsewhere).
+    pub db: DbHealth,
 }
 
 impl StatsSnapshot {
@@ -329,6 +372,7 @@ impl StatsSnapshot {
             ("elapsed_s", Json::num(self.elapsed_s)),
             ("goodput_req_s", Json::num(self.goodput_req_s)),
             ("per_priority", Json::Arr(prio)),
+            ("db", self.db.to_json()),
         ])
     }
 }

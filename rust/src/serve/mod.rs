@@ -776,7 +776,9 @@ pub fn run_server_with(handle: &Handle, cfg: &ServeConfig,
                 Ok(Control::Stats(reply)) => {
                     let elapsed = clock.now_us()
                         .saturating_sub(start_us) as f64 / 1e6;
-                    let _ = reply.send(metrics.snapshot(elapsed));
+                    let mut snap = metrics.snapshot(elapsed);
+                    snap.db = handle.db_store().health();
+                    let _ = reply.send(snap);
                 }
                 Ok(Control::Reload { apply, done }) => {
                     let _ = done.send(do_reload(&ctx, &alive, apply));
@@ -821,6 +823,7 @@ pub fn run_server_with(handle: &Handle, cfg: &ServeConfig,
     stats.throughput.wall_s = start.elapsed().as_secs_f64();
     let elapsed = clock.now_us().saturating_sub(start_us) as f64 / 1e6;
     stats.snapshot = metrics.snapshot(elapsed);
+    stats.snapshot.db = handle.db_store().health();
     stats.client_gone = stats.snapshot.client_gone;
     Ok(stats)
 }

@@ -146,10 +146,11 @@ impl<'h> TuningSession<'h> {
                 .map(|(p, t)| (p.clone(), *t))
                 .expect("non-empty");
 
-            self.handle.user_perf.lock().unwrap().set(
+            self.handle.user_perf.set_timed(
                 &key,
                 solver.name(),
                 best_params.clone(),
+                best_time_us,
             );
 
             results.push(TuneResult {
@@ -172,7 +173,7 @@ impl<'h> TuningSession<'h> {
         // benchmarked against the pre-tuning artifact set — its times and
         // implied signatures would shadow the new winners forever. Drop
         // it so the next find re-benchmarks with the tuned variants.
-        self.handle.user_find.lock().unwrap().remove(&key);
+        self.handle.user_find.remove(&key);
 
         self.handle.save_dbs()?;
         Ok(results)

@@ -1,0 +1,425 @@
+//! Fault-injected integration suite for the journal db layer
+//! (ISSUE 9): crash-at-every-op recovery, concurrent writers under
+//! transient failures, on-disk bit rot, and read-only degraded serving.
+//!
+//! The central property: a save that returned `Ok` ("acknowledged") is
+//! durable across a power cut at ANY later filesystem operation, and a
+//! crash at any operation at all leaves files that recovery loads
+//! without a hard failure — torn tails truncated, corrupt records
+//! skipped and counted.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use miopen_rs::db::{journal, DbStore, FaultFs, FindDb, FindRecord, PerfDb};
+use miopen_rs::descriptors::{ConvDesc, FilterDesc, TensorDesc};
+use miopen_rs::find::{ConvProblem, FindOptions};
+use miopen_rs::handle::{BackendChoice, Handle, HandleOptions};
+use miopen_rs::serve::{generate_load, run_server, Response, ServeConfig};
+use miopen_rs::testutil::prop::{forall, usize_in};
+use miopen_rs::types::DType;
+use miopen_rs::util::rng::SplitMix64;
+
+fn rec(t: f64) -> FindRecord {
+    FindRecord {
+        algo: "gemm".into(),
+        time_us: t,
+        modeled_time_us: t * 0.5,
+        workspace_bytes: 64,
+    }
+}
+
+/// One workload step against the store. Keys come from a small pool so
+/// removes hit earlier inserts and journal replay ordering matters.
+#[derive(Debug, Clone)]
+enum Step {
+    FindInsert { key: usize, t: f64 },
+    FindRemove { key: usize },
+    PerfSet { key: usize, v: i64 },
+}
+
+fn steps_for(seed: u64) -> Vec<Step> {
+    let mut rng = SplitMix64::new(seed ^ 0xD15E_A5E0);
+    (0..8)
+        .map(|_| match rng.below(5) {
+            0 => Step::FindRemove { key: rng.below(3) as usize },
+            1 | 2 => Step::FindInsert {
+                key: rng.below(3) as usize,
+                t: 1.0 + rng.below(100) as f64,
+            },
+            _ => Step::PerfSet {
+                key: rng.below(3) as usize,
+                v: 1 + rng.below(64) as i64,
+            },
+        })
+        .collect()
+}
+
+fn perf_params(v: i64) -> BTreeMap<String, i64> {
+    BTreeMap::from([("block_k".to_string(), v)])
+}
+
+/// Run the workload against `store`, returning per-step ack results.
+fn run_workload(store: &DbStore, steps: &[Step]) -> Vec<bool> {
+    steps
+        .iter()
+        .map(|s| match s {
+            Step::FindInsert { key, t } => {
+                let mut delta = FindDb::default();
+                delta.insert(format!("k{key}"), vec![rec(*t)]);
+                store.save_find_db(&delta).is_ok()
+            }
+            Step::FindRemove { key } => {
+                let mut delta = FindDb::default();
+                delta.remove(&format!("k{key}"));
+                store.save_find_db(&delta).is_ok()
+            }
+            Step::PerfSet { key, v } => {
+                let mut delta = PerfDb::default();
+                delta.set_timed(&format!("p{key}"), "gemm",
+                                perf_params(*v), *v as f64);
+                store.save_perf_db(&delta).is_ok()
+            }
+        })
+        .collect()
+}
+
+/// The tentpole property: cut power at EVERY filesystem operation the
+/// workload performs, reopen, and prove recovery never hard-fails and
+/// never loses an acknowledged save. Tiny compaction thresholds pull the
+/// compaction rewrite (tmp write + rename) into the crash surface too.
+#[test]
+fn crash_at_every_op_recovers_every_acknowledged_save() {
+    forall("crash-at-every-op", &usize_in(0, 1_000_000), 8, |&seed| {
+        let seed = seed as u64;
+        let steps = steps_for(seed);
+        let dir = PathBuf::from(format!("/crashdb-{seed}"));
+
+        // baseline: no faults — learn the op count, and every save acks
+        let fs = Arc::new(FaultFs::new(seed));
+        let store = DbStore::at_with_fs(&dir, fs.clone())
+            .with_compaction(256, 2);
+        let acked = run_workload(&store, &steps);
+        if acked.iter().any(|a| !a) {
+            return Err("baseline save failed without faults".into());
+        }
+        let total_ops = fs.ops();
+
+        for crash_at in 0..total_ops {
+            let fs = Arc::new(FaultFs::new(seed));
+            fs.set_crash_at(crash_at);
+            let store = DbStore::at_with_fs(&dir, fs.clone())
+                .with_compaction(256, 2);
+            let acked = run_workload(&store, &steps);
+
+            // acked model + whether the LAST attempted op per key acked
+            // (an un-acked op may be partially durable, so its keys get
+            // no exact-content assertion)
+            let mut find_state: BTreeMap<String, Option<f64>> =
+                BTreeMap::new();
+            let mut perf_state: BTreeMap<String, i64> = BTreeMap::new();
+            let mut find_settled: BTreeMap<String, bool> = BTreeMap::new();
+            let mut perf_settled: BTreeMap<String, bool> = BTreeMap::new();
+            for (s, &ok) in steps.iter().zip(&acked) {
+                match s {
+                    Step::FindInsert { key, t } => {
+                        let k = format!("k{key}");
+                        find_settled.insert(k.clone(), ok);
+                        if ok {
+                            find_state.insert(k, Some(*t));
+                        }
+                    }
+                    Step::FindRemove { key } => {
+                        let k = format!("k{key}");
+                        find_settled.insert(k.clone(), ok);
+                        if ok {
+                            find_state.insert(k, None);
+                        }
+                    }
+                    Step::PerfSet { key, v } => {
+                        let k = format!("p{key}");
+                        perf_settled.insert(k.clone(), ok);
+                        if ok {
+                            perf_state.insert(k, *v);
+                        }
+                    }
+                }
+            }
+
+            fs.power_cycle();
+            let reopened = DbStore::at_with_fs(&dir, fs.clone());
+            let find = reopened.load_find_db().map_err(|e| {
+                format!("crash_at={crash_at}: find load hard-failed: {e}")
+            })?;
+            let perf = reopened.load_perf_db().map_err(|e| {
+                format!("crash_at={crash_at}: perf load hard-failed: {e}")
+            })?;
+
+            for (k, settled) in &find_settled {
+                if !settled {
+                    continue;
+                }
+                let want = find_state.get(k).cloned().flatten();
+                let got = find.get(k).map(|r| r.to_vec());
+                match (want, got) {
+                    (Some(t), Some(r)) if r == [rec(t)] => {}
+                    (None, None) => {}
+                    (want, got) => {
+                        return Err(format!(
+                            "crash_at={crash_at}: acked find key '{k}' \
+                             wanted {want:?}, recovered {got:?}"));
+                    }
+                }
+            }
+            for (k, settled) in &perf_settled {
+                if !settled {
+                    continue;
+                }
+                let want = perf_state.get(k).map(|v| perf_params(*v));
+                let got = perf.get(k, "gemm").cloned();
+                if want != got {
+                    return Err(format!(
+                        "crash_at={crash_at}: acked perf key '{k}' \
+                         wanted {want:?}, recovered {got:?}"));
+                }
+            }
+
+            // the recovered store must be fully usable again
+            let mut delta = FindDb::default();
+            delta.insert("post-recovery".into(), vec![rec(2.5)]);
+            reopened.save_find_db(&delta).map_err(|e| {
+                format!("crash_at={crash_at}: post-recovery save: {e}")
+            })?;
+            let back = reopened.load_find_db().map_err(|e| {
+                format!("crash_at={crash_at}: post-recovery load: {e}")
+            })?;
+            if back.get("post-recovery").is_none() {
+                return Err(format!(
+                    "crash_at={crash_at}: post-recovery save not visible"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite 3: two `DbStore`s over one directory, three writer threads
+/// (tune-, find- and refiner-shaped traffic) under random transient
+/// filesystem failures with bounded retries — no acknowledged entry may
+/// be lost, ever.
+#[test]
+fn concurrent_writers_under_transient_faults_lose_no_acked_entry() {
+    const PER_THREAD: usize = 24;
+    const RETRIES: usize = 500;
+
+    let fs = Arc::new(FaultFs::new(0xBEEF));
+    fs.set_fail_prob(120); // 12% of filesystem ops fail transiently
+    let dir = PathBuf::from("/stressdb");
+    let s1 = DbStore::at_with_fs(&dir, fs.clone()).with_compaction(512, 2);
+    let s2 = DbStore::at_with_fs(&dir, fs.clone()).with_compaction(512, 2);
+
+    let acked_find: Mutex<Vec<(String, f64)>> = Mutex::new(Vec::new());
+    let acked_perf: Mutex<Vec<(String, i64)>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        // "tuner": perf-db winners through store 1
+        scope.spawn(|| {
+            for i in 0..PER_THREAD {
+                let key = format!("tune{i}");
+                let mut delta = PerfDb::default();
+                delta.set_timed(&key, "gemm", perf_params(i as i64),
+                                10.0 + i as f64);
+                for _ in 0..RETRIES {
+                    if s1.save_perf_db(&delta).is_ok() {
+                        acked_perf.lock().unwrap().push((key, i as i64));
+                        break;
+                    }
+                }
+            }
+        });
+        // "find": find-db results through store 1
+        scope.spawn(|| {
+            for i in 0..PER_THREAD {
+                let key = format!("find-a{i}");
+                let t = 1.0 + i as f64;
+                let mut delta = FindDb::default();
+                delta.insert(key.clone(), vec![rec(t)]);
+                for _ in 0..RETRIES {
+                    if s1.save_find_db(&delta).is_ok() {
+                        acked_find.lock().unwrap().push((key, t));
+                        break;
+                    }
+                }
+            }
+        });
+        // "refiner": a second process-alike writer through store 2
+        scope.spawn(|| {
+            for i in 0..PER_THREAD {
+                let key = format!("find-b{i}");
+                let t = 100.0 + i as f64;
+                let mut delta = FindDb::default();
+                delta.insert(key.clone(), vec![rec(t)]);
+                for _ in 0..RETRIES {
+                    if s2.save_find_db(&delta).is_ok() {
+                        acked_find.lock().unwrap().push((key, t));
+                        break;
+                    }
+                }
+            }
+        });
+    });
+
+    // with bounded retries at this failure rate every save must land —
+    // keeps the durability assertions below meaningful for all keys
+    let finds = acked_find.into_inner().unwrap();
+    let perfs = acked_perf.into_inner().unwrap();
+    assert_eq!(finds.len(), 2 * PER_THREAD, "a find save never acked");
+    assert_eq!(perfs.len(), PER_THREAD, "a perf save never acked");
+
+    fs.set_fail_prob(0);
+    let fresh = DbStore::at_with_fs(&dir, fs.clone());
+    let find = fresh.load_find_db().unwrap();
+    let perf = fresh.load_perf_db().unwrap();
+    for (key, t) in &finds {
+        assert_eq!(find.get(key), Some(&[rec(*t)][..]),
+                   "acked find entry '{key}' lost");
+    }
+    for (key, v) in &perfs {
+        assert_eq!(perf.get(key, "gemm"), Some(&perf_params(*v)),
+                   "acked perf entry '{key}' lost");
+    }
+}
+
+/// On-disk (RealFs) bit rot inside a committed record: the flipped
+/// record fails its CRC and is skipped + counted; every other record
+/// still loads, and the store keeps working.
+#[test]
+fn bit_rot_on_disk_skips_the_bad_record_and_keeps_the_rest() {
+    let dir = common::temp_db_dir("db-bitrot");
+    let store = DbStore::at(&dir);
+    for (i, t) in [(0, 3.0), (1, 5.0), (2, 7.0)] {
+        let mut delta = FindDb::default();
+        delta.insert(format!("k{i}"), vec![rec(t)]);
+        store.save_find_db(&delta).unwrap();
+    }
+
+    // flip one byte inside the SECOND record's payload
+    let path = dir.join("find.db");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let h = journal::HEADER_LEN;
+    let len1 = u32::from_le_bytes(bytes[h..h + 4].try_into().unwrap())
+        as usize;
+    let rec2_payload = h + 8 + len1 + 8;
+    bytes[rec2_payload + 2] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let reopened = DbStore::at(&dir);
+    let db = reopened.load_find_db().unwrap();
+    assert!(db.get("k0").is_some(), "record before the rot survives");
+    assert!(db.get("k1").is_none(), "the rotted record is dropped");
+    assert!(db.get("k2").is_some(),
+            "records AFTER a corrupt one still replay");
+    assert!(reopened.health().corrupt_records >= 1);
+
+    // still writable: a later save + load sees old and new entries
+    let mut delta = FindDb::default();
+    delta.insert("k3".into(), vec![rec(9.0)]);
+    reopened.save_find_db(&delta).unwrap();
+    let back = DbStore::at(&dir).load_find_db().unwrap();
+    assert!(back.get("k0").is_some() && back.get("k3").is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite 5 / degraded serving: a handle forced read-only boots from
+/// the embedded compile-time db, serves real traffic, reports
+/// `read_only` through the stats snapshot, and skips (counts) saves
+/// without ever creating journal files.
+#[test]
+fn read_only_handle_boots_from_embedded_db_and_serves() {
+    let db_dir = common::temp_db_dir("db-ro");
+    let handle = Handle::new(HandleOptions {
+        backend: BackendChoice::auto(),
+        db_dir: Some(db_dir.clone()),
+        db_read_only: true,
+        find_iters: 2,
+        warmup_iters: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(handle.db_read_only());
+    assert!(!handle.find_db().is_empty(),
+            "the embedded db must back the find-db in read-only mode");
+
+    // immediate selection works with zero writable state
+    let problem = ConvProblem::forward(
+        TensorDesc::nchw(4, 16, 28, 28, DType::F32),
+        FilterDesc::kcrs(32, 16, 3, 3, DType::F32),
+        ConvDesc::simple(1, 1),
+    );
+    handle.immediate_algo(&problem).unwrap();
+
+    // the serve engine boots and answers every request
+    let image_elems = {
+        let manifest = handle.manifest();
+        let infer = manifest
+            .require(miopen_rs::serve::SERVE_INFER_SIG)
+            .unwrap();
+        let (_, elems, _) =
+            miopen_rs::serve::infer_image_layout(infer).unwrap();
+        elems
+    };
+    let (tx, rx) = mpsc::channel();
+    let n = 16;
+    let loader = std::thread::spawn(move || {
+        generate_load(&tx, n, 2000.0, image_elems, 21)
+    });
+    let cfg = ServeConfig {
+        batch_max: 8,
+        batch_timeout: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let stats = run_server(&handle, &cfg, rx).unwrap();
+    let responses: Vec<Response> = loader.join().unwrap().iter().collect();
+    assert_eq!(responses.iter().filter(|r| r.is_done()).count(), n);
+    assert!(stats.snapshot.db.read_only,
+            "DbHealth in the stats snapshot must flag read-only mode");
+
+    // a find dirties the user layer; the save is a counted no-op and no
+    // journal file ever appears in the directory
+    handle
+        .find_convolution_opt(&problem, &FindOptions {
+            exhaustive: true,
+            ..Default::default()
+        })
+        .unwrap();
+    handle.save_dbs().unwrap();
+    assert!(handle.db_store().health().saves_skipped_read_only >= 1);
+    assert!(!db_dir.join("find.db").exists());
+    assert!(!db_dir.join("perf.db").exists());
+    let _ = std::fs::remove_dir_all(&db_dir);
+}
+
+/// An unwritable filesystem (no explicit flag) downgrades the store to
+/// read-only automatically — the FaultFs analog of booting a container
+/// with a read-only volume mount.
+#[test]
+fn unwritable_filesystem_autodetects_read_only_mode() {
+    let fs = Arc::new(FaultFs::new(0xA11));
+    let dir = PathBuf::from("/ro-volume");
+    fs.set_read_only_fs(true);
+    let store = DbStore::at_with_fs(&dir, fs.clone());
+    assert!(!store.probe_writable());
+    store.set_read_only(!store.probe_writable());
+    assert!(store.read_only());
+
+    // saves are acknowledged-as-skipped, not errors
+    let mut delta = FindDb::default();
+    delta.insert("k".into(), vec![rec(1.0)]);
+    store.save_find_db(&delta).unwrap();
+    assert_eq!(store.health().saves_skipped_read_only, 1);
+    assert!(fs.file_bytes(&dir.join("find.db")).is_none(),
+            "no write may reach a read-only volume");
+}

@@ -446,8 +446,14 @@ fn prop_perf_db_read_after_write() {
         }),
         miopen_rs::testutil::prop::usize_in(1, 8),
     );
-    let dir = common::temp_db_dir("prop-perfdb");
+    let base = common::temp_db_dir("prop-perfdb");
+    // journal saves are deltas that union on replay, so each case needs
+    // its own directory for the strict-equality check below
+    let case = std::sync::atomic::AtomicUsize::new(0);
     forall("perf-db-read-after-write", &entry_gen, 60, |entries| {
+        let dir = base.join(format!(
+            "case{}",
+            case.fetch_add(1, std::sync::atomic::Ordering::Relaxed)));
         let mut db = PerfDb::default();
         // PerfDb::set is last-write-wins; verify against the deduped view
         let mut expect = std::collections::BTreeMap::new();

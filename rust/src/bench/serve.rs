@@ -19,7 +19,7 @@ use crate::metrics::TimingStats;
 use crate::serve::{generate_load, generate_load_opts, run_server,
                    run_server_ctl, Clock, Control, LoadOptions, RealClock,
                    Request, Response, ServeConfig, ServerStats, ShedReason,
-                   SERVE_INFER_SIG};
+                   TenantId, TenantPolicy, TenantQuota, SERVE_INFER_SIG};
 use crate::types::{MiopenError, Result};
 use crate::util::json::Json;
 
@@ -719,6 +719,222 @@ pub fn run_overload(handle: &Handle, kinds: &[TraceKind],
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Two-tenant isolation trace
+// ---------------------------------------------------------------------------
+
+/// Outcome of the two-tenant flood trace (ROADMAP item 3's acceptance
+/// gate): tenant A floods at 10× its rate quota while tenant B sends a
+/// steady in-quota stream; B is first measured running alone on an
+/// identical engine, and isolation is B's contended goodput/p99
+/// relative to that solo baseline.
+#[derive(Debug, Clone)]
+pub struct TwoTenantResult {
+    /// Requests tenant A (the flooder) submitted.
+    pub requests_a: usize,
+    /// Requests tenant B (the in-quota tenant) submitted.
+    pub requests_b: usize,
+    /// Flood capacity (req/s) measured before the trace.
+    pub capacity_req_s: f64,
+    /// Relative deadline stamped on every request (µs).
+    pub deadline_us: u64,
+    /// Tenant A's token-bucket rate quota (req/s); A offers 10× this.
+    pub quota_a_req_s: f64,
+    /// Tenant B in-deadline completions per second, running alone.
+    pub solo_goodput_req_s: f64,
+    /// Tenant B served-request p50, running alone (µs).
+    pub solo_p50_us: f64,
+    /// Tenant B served-request p99, running alone (µs).
+    pub solo_p99_us: f64,
+    /// Tenant B in-deadline completions per second, under A's flood.
+    pub contended_goodput_req_s: f64,
+    /// Tenant B served-request p50 under A's flood (µs).
+    pub contended_p50_us: f64,
+    /// Tenant B served-request p99 under A's flood (µs).
+    pub contended_p99_us: f64,
+    /// contended / solo goodput — the CI gate is ≥ 0.95.
+    pub goodput_ratio: f64,
+    /// contended / solo p99 — the CI gate is ≤ 1.2 (with a small
+    /// absolute cushion for sub-ms baselines).
+    pub p99_ratio: f64,
+    /// Tenant A requests served (its in-quota trickle).
+    pub done_a: usize,
+    /// Tenant A requests shed with `quota_exceeded` — must be > 0 or
+    /// the quota never engaged and the trace proved nothing.
+    pub shed_quota_a: u64,
+    /// Tenant B requests shed with `quota_exceeded` — must be 0: an
+    /// in-quota tenant is never quota-shed.
+    pub shed_quota_b: u64,
+    /// Every id in both runs answered exactly once.
+    pub exactly_once: bool,
+}
+
+/// Feed one engine from several concurrent load-generator threads (one
+/// per stream) and collect each stream's responses separately.
+fn run_tenant_streams(handle: &Handle, serve_cfg: &ServeConfig,
+                      image_elems: usize,
+                      streams: Vec<(usize, f64, LoadOptions, u64)>)
+    -> Result<(Vec<Vec<Response>>, ServerStats)> {
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (responses, stats) = std::thread::scope(|scope| {
+        let server = scope.spawn(|| run_server(handle, serve_cfg, rx));
+        let mut gens = Vec::new();
+        for (n, rate, opts, seed) in streams {
+            let tx = tx.clone();
+            let clock = clock.clone();
+            gens.push(scope.spawn(move || {
+                generate_load_opts(&tx, n, rate, image_elems, seed,
+                                   &clock, &opts)
+            }));
+        }
+        drop(tx);
+        let rxs: Vec<_> = gens
+            .into_iter()
+            .map(|g| g.join().expect("two-tenant load generator"))
+            .collect();
+        let stats = server.join().expect("two-tenant server");
+        let responses: Vec<Vec<Response>> = rxs
+            .into_iter()
+            .map(|rx| rx.iter().collect())
+            .collect();
+        (responses, stats)
+    });
+    Ok((responses, stats?))
+}
+
+/// (in-deadline done, done, shed, quota sheds, served-latency stats)
+/// for one tenant's response stream. In-deadline is judged from the
+/// served latency against the relative deadline, which is exactly how
+/// the engine stamps absolute deadlines.
+fn tenant_outcome(responses: &[Response], deadline_us: u64)
+    -> (usize, usize, usize, u64, TimingStats) {
+    let mut lat = TimingStats::new();
+    let (mut in_deadline, mut done, mut shed) = (0usize, 0usize, 0usize);
+    let mut shed_quota = 0u64;
+    for r in responses {
+        match r {
+            Response::Done(c) => {
+                done += 1;
+                lat.record(c.latency_us);
+                if c.latency_us <= deadline_us as f64 {
+                    in_deadline += 1;
+                }
+            }
+            Response::Shed(s) => {
+                shed += 1;
+                if s.reason == ShedReason::QuotaExceeded {
+                    shed_quota += 1;
+                }
+            }
+        }
+    }
+    (in_deadline, done, shed, shed_quota, lat)
+}
+
+/// Run the two-tenant isolation trace. Tenant A (id 1) gets a rate
+/// quota of capacity/4 with a small burst and a depth cap, and floods
+/// at 10× that quota; tenant B (id 2) is unlimited and paced steadily
+/// at capacity/4 — comfortably inside what the engine can serve.
+/// Tenant B runs once alone and once under the flood on identical
+/// engines; isolation holds when its goodput and p99 are statistically
+/// unchanged (`goodput_ratio`/`p99_ratio`).
+pub fn run_two_tenant(handle: &Handle, cfg: &OverloadConfig,
+                      capacity: f64) -> Result<TwoTenantResult> {
+    let manifest = handle.manifest();
+    let infer = manifest.require(SERVE_INFER_SIG)?;
+    let (_, image_elems, _) = crate::serve::infer_image_layout(infer)?;
+    drop(manifest);
+
+    let cap = capacity.max(1.0);
+    let quota_a = cap / 4.0;
+    let rate_b = cap / 4.0;
+    let n_b = cfg.requests.max(8);
+    // A floods at 10× quota for as long as B's stream lasts:
+    // (10 × cap/4) × (n_b / (cap/4)) = 10 × n_b requests
+    let n_a = 10 * n_b;
+    let per_batch_us = cfg.batch_max as f64 * 1e6 / cap;
+    let deadline_us =
+        ((per_batch_us * 10.0) as u64).clamp(50_000, 2_000_000);
+
+    let mut policy = TenantPolicy::default();
+    policy.set(TenantId(1), TenantQuota {
+        weight: 1,
+        rate_per_s: quota_a,
+        burst: 16.0,
+        depth_cap: 64,
+    });
+    let serve_cfg = ServeConfig {
+        batch_max: cfg.batch_max,
+        batch_timeout: cfg.batch_timeout,
+        workers: cfg.workers,
+        queue_cap: cfg.queue_cap,
+        tenants: policy,
+        ..Default::default()
+    };
+
+    let opts_for = |tenant: u32| LoadOptions {
+        deadline_us: Some(deadline_us),
+        tenants: vec![TenantId(tenant)],
+        ..LoadOptions::default()
+    };
+
+    // B's offered window is the same in both runs, so goodput compares
+    // completions over the identical denominator
+    let window_s = n_b as f64 / rate_b;
+
+    // solo baseline: tenant B alone on an identical engine
+    let (solo_resp, _solo_stats) = run_tenant_streams(
+        handle, &serve_cfg, image_elems,
+        vec![(n_b, rate_b, opts_for(2), 0x7E4A17)])?;
+    let (solo_good, solo_done, solo_shed, solo_quota_shed, solo_lat) =
+        tenant_outcome(&solo_resp[0], deadline_us);
+
+    // contended: A floods from its own thread while B paces steadily
+    let (resp, _stats) = run_tenant_streams(
+        handle, &serve_cfg, image_elems,
+        vec![(n_a, 10.0 * quota_a, opts_for(1), 0xF100D),
+             (n_b, rate_b, opts_for(2), 0x7E4A17)])?;
+    let (_, done_a, shed_a, shed_quota_a, _) =
+        tenant_outcome(&resp[0], deadline_us);
+    let (cont_good, done_b, shed_b, shed_quota_b, cont_lat) =
+        tenant_outcome(&resp[1], deadline_us);
+
+    let exactly_once = solo_done + solo_shed == n_b
+        && solo_resp[0].len() == n_b
+        && done_a + shed_a == n_a && resp[0].len() == n_a
+        && done_b + shed_b == n_b && resp[1].len() == n_b;
+
+    let solo_goodput = solo_good as f64 / window_s;
+    let cont_goodput = cont_good as f64 / window_s;
+    let solo_p99 = solo_lat.p99();
+    let cont_p99 = cont_lat.p99();
+    let b_tenant_quota_sheds = solo_quota_shed + shed_quota_b;
+    Ok(TwoTenantResult {
+        requests_a: n_a,
+        requests_b: n_b,
+        capacity_req_s: cap,
+        deadline_us,
+        quota_a_req_s: quota_a,
+        solo_goodput_req_s: solo_goodput,
+        solo_p50_us: solo_lat.median(),
+        solo_p99_us: solo_p99,
+        contended_goodput_req_s: cont_goodput,
+        contended_p50_us: cont_lat.median(),
+        contended_p99_us: cont_p99,
+        goodput_ratio: if solo_goodput > 0.0 {
+            cont_goodput / solo_goodput
+        } else {
+            0.0
+        },
+        p99_ratio: if solo_p99 > 0.0 { cont_p99 / solo_p99 } else { 0.0 },
+        done_a,
+        shed_quota_a,
+        shed_quota_b: b_tenant_quota_sheds,
+        exactly_once,
+    })
+}
+
 /// Throughput ratio of `workers_b` over `workers_a`, compared only
 /// between points with the *same* (batch_max, rate) configuration so
 /// the number measures worker scaling, not batching differences. The
@@ -749,7 +965,8 @@ pub fn speedup(points: &[SweepPoint], workers_a: usize, workers_b: usize)
 pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
                layout: &[LayoutServePoint],
                cold: Option<&ColdShapeBench>,
-               overload: &[TraceResult]) -> Json {
+               overload: &[TraceResult],
+               two_tenant: Option<&TwoTenantResult>) -> Json {
     let arr: Vec<Json> = points
         .iter()
         .map(|p| {
@@ -820,7 +1037,7 @@ pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
             ("agreement_total", Json::num(c.agreement_total as f64)),
         ]));
     }
-    if !overload.is_empty() {
+    if !overload.is_empty() || two_tenant.is_some() {
         let arr: Vec<Json> = overload
             .iter()
             .map(|t| {
@@ -848,20 +1065,48 @@ pub fn to_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
                 ])
             })
             .collect();
-        root.insert("overload".to_string(), Json::Arr(arr));
+        let mut section = BTreeMap::new();
+        section.insert("traces".to_string(), Json::Arr(arr));
+        if let Some(tt) = two_tenant {
+            section.insert("two_tenant".to_string(), Json::obj(vec![
+                ("requests_a", Json::num(tt.requests_a as f64)),
+                ("requests_b", Json::num(tt.requests_b as f64)),
+                ("capacity_req_s", Json::num(tt.capacity_req_s)),
+                ("deadline_us", Json::num(tt.deadline_us as f64)),
+                ("quota_a_req_s", Json::num(tt.quota_a_req_s)),
+                ("solo_goodput_req_s",
+                 Json::num(tt.solo_goodput_req_s)),
+                ("solo_p50_us", Json::num(tt.solo_p50_us)),
+                ("solo_p99_us", Json::num(tt.solo_p99_us)),
+                ("contended_goodput_req_s",
+                 Json::num(tt.contended_goodput_req_s)),
+                ("contended_p50_us", Json::num(tt.contended_p50_us)),
+                ("contended_p99_us", Json::num(tt.contended_p99_us)),
+                ("goodput_ratio", Json::num(tt.goodput_ratio)),
+                ("p99_ratio", Json::num(tt.p99_ratio)),
+                ("done_a", Json::num(tt.done_a as f64)),
+                ("shed_quota_a", Json::num(tt.shed_quota_a as f64)),
+                ("shed_quota_b", Json::num(tt.shed_quota_b as f64)),
+                ("exactly_once", Json::Bool(tt.exactly_once)),
+            ]));
+        }
+        root.insert("overload".to_string(), Json::Obj(section));
     }
     Json::Obj(root)
 }
 
 /// Serialize and write `BENCH_serve.json` (worker sweep + per-dtype and
 /// per-layout warm-serve points + the cold-shape immediate-mode
-/// scenario + the adversarial overload traces).
+/// scenario + the adversarial overload traces under `overload.traces`
+/// and the two-tenant isolation trace under `overload.two_tenant`).
 pub fn write_json(points: &[SweepPoint], dtype: &[DtypeServePoint],
                   layout: &[LayoutServePoint],
                   cold: Option<&ColdShapeBench>, overload: &[TraceResult],
+                  two_tenant: Option<&TwoTenantResult>,
                   path: &Path) -> Result<()> {
     std::fs::write(path,
-                   to_json(points, dtype, layout, cold, overload)
+                   to_json(points, dtype, layout, cold, overload,
+                           two_tenant)
                        .to_string())?;
     Ok(())
 }
@@ -944,7 +1189,7 @@ mod tests {
             p50_us: 95.0,
             p99_us: 150.0,
         }];
-        let j = to_json(&pts, &dtype, &layout, Some(&cold), &[]);
+        let j = to_json(&pts, &dtype, &layout, Some(&cold), &[], None);
         assert_eq!(j.get("points").and_then(Json::as_arr).unwrap().len(), 2);
         let s = j.get("speedup_4w_over_1w").and_then(Json::as_f64).unwrap();
         assert!((s - 2.5).abs() < 1e-9);
@@ -970,7 +1215,7 @@ mod tests {
 
     #[test]
     fn json_omits_cold_shapes_when_absent() {
-        let j = to_json(&[], &[], &[], None, &[]);
+        let j = to_json(&[], &[], &[], None, &[], None);
         assert!(j.get("cold_shapes").is_none());
         assert!(j.get("overload").is_none(),
                 "empty overload must not emit a section");
@@ -1024,9 +1269,10 @@ mod tests {
             min_worker_share: 0.4,
             shard_hit_rate: 0.99,
         };
-        let j = to_json(&[], &[], &[], None, &[t]);
+        let j = to_json(&[], &[], &[], None, &[t], None);
         let back = crate::util::json::parse(&j.to_string()).unwrap();
-        let arr = back.get("overload").and_then(Json::as_arr).unwrap();
+        let section = back.get("overload").unwrap();
+        let arr = section.get("traces").and_then(Json::as_arr).unwrap();
         assert_eq!(arr.len(), 1);
         let b = &arr[0];
         assert_eq!(b.get("trace").and_then(Json::as_str), Some("burst"));
@@ -1037,6 +1283,50 @@ mod tests {
             .and_then(Json::as_f64)
             .unwrap();
         assert!((g - 0.975).abs() < 1e-9);
+        // no two_tenant run -> no two_tenant key, but the section exists
+        assert!(section.get("two_tenant").is_none());
+    }
+
+    #[test]
+    fn two_tenant_json_round_trips() {
+        let tt = TwoTenantResult {
+            requests_a: 1920,
+            requests_b: 192,
+            capacity_req_s: 800.0,
+            deadline_us: 100_000,
+            quota_a_req_s: 200.0,
+            solo_goodput_req_s: 200.0,
+            solo_p50_us: 4_000.0,
+            solo_p99_us: 9_000.0,
+            contended_goodput_req_s: 196.0,
+            contended_p50_us: 4_200.0,
+            contended_p99_us: 9_800.0,
+            goodput_ratio: 0.98,
+            p99_ratio: 9_800.0 / 9_000.0,
+            done_a: 180,
+            shed_quota_a: 1600,
+            shed_quota_b: 0,
+            exactly_once: true,
+        };
+        // a two_tenant result alone is enough to emit the section
+        let j = to_json(&[], &[], &[], None, &[], Some(&tt));
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        let section = back.get("overload").unwrap();
+        assert_eq!(section.get("traces").and_then(Json::as_arr)
+                       .map(<[Json]>::len),
+                   Some(0));
+        let t = section.get("two_tenant").unwrap();
+        assert_eq!(t.get("requests_a").and_then(Json::as_i64),
+                   Some(1920));
+        assert_eq!(t.get("shed_quota_a").and_then(Json::as_i64),
+                   Some(1600));
+        assert_eq!(t.get("shed_quota_b").and_then(Json::as_i64), Some(0));
+        assert_eq!(t.get("exactly_once").and_then(Json::as_bool),
+                   Some(true));
+        let g = t.get("goodput_ratio").and_then(Json::as_f64).unwrap();
+        assert!((g - 0.98).abs() < 1e-9);
+        let p = t.get("p99_ratio").and_then(Json::as_f64).unwrap();
+        assert!(p > 1.0 && p < 1.2);
     }
 
     #[test]

@@ -91,15 +91,24 @@ COMMANDS:
                  print the final stats snapshot as JSON]
                  [--immediate: figure-6 shapes through immediate
                  selection + background refiner instead]
+                 [--tenants N: spread synthetic load round-robin over
+                 tenant ids 1..=N] [--tenant-weight id=w,...: fair-share
+                 weights] [--tenant-quota id=rate[:burst],...: token-
+                 bucket admission quotas, req/s] [--tenant-depth
+                 id=cap,...: per-tenant queue depth caps]
+                 [--tenant-config FILE: JSON tenant policy; flags
+                 override]
   serve-bench  Sweep workers x batch x arrival rate + the cold-shape
                immediate-mode scenario; writes BENCH_serve.json
                (p50/p99, throughput, cache hit rates, cold-vs-warm)
                  [--requests N] [--workers 1,2,4] [--batches 16]
                  [--rates 0] [--timeout-ms T] [--cold-rounds N]
                  [--out FILE]
-                 [--trace burst,diurnal,hotkey,poison|all: adversarial
-                 overload traces with a mid-burst drain/reload, written
-                 to the overload section] [--trace-requests N]
+                 [--trace burst,diurnal,hotkey,poison,two_tenant|all:
+                 adversarial overload traces with a mid-burst
+                 drain/reload (two_tenant: flooding tenant A vs
+                 in-quota tenant B isolation run), written to the
+                 overload section] [--trace-requests N]
                  [--trace-workers W] [--trace-batch B] [--queue-cap N]
   kernel-bench Naive-vs-blocked GEMM GFLOP/s sweep + arena-on/off warm
                conv latency; writes BENCH_kernels.json

@@ -17,7 +17,8 @@ use miopen_rs::fusion::{enumerate_supported, FusionOp, FusionPlan};
 use miopen_rs::handle::{Handle, HandleOptions};
 use miopen_rs::prelude::DType;
 use miopen_rs::serve::{generate_load_opts, run_server_ctl, Clock, Control,
-                       LoadOptions, RealClock, ServeConfig};
+                       LoadOptions, RealClock, ServeConfig, TenantId,
+                       TenantPolicy};
 use miopen_rs::tuning::{format_params, TuneOptions, TuningSession};
 use miopen_rs::types::Result;
 
@@ -208,12 +209,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let n = args.opt_usize("requests", 64);
     let rate = args.opt_f64("rate", 200.0);
+    // per-tenant policy: config file first, then the spec flags layer
+    // overrides on top of it
+    let mut policy = TenantPolicy::default();
+    if let Some(path) = args.opt("tenant-config") {
+        policy = TenantPolicy::from_json_str(
+            &std::fs::read_to_string(path)?)?;
+    }
+    if let Some(spec) = args.opt("tenant-weight") {
+        policy.apply_weight_spec(spec)?;
+    }
+    if let Some(spec) = args.opt("tenant-quota") {
+        policy.apply_quota_spec(spec)?;
+    }
+    if let Some(spec) = args.opt("tenant-depth") {
+        policy.apply_depth_spec(spec)?;
+    }
     let cfg = ServeConfig {
         batch_max: args.opt_usize("batch", 16),
         batch_timeout: Duration::from_millis(
             args.opt_usize("timeout-ms", 5) as u64),
         workers: args.opt_usize("workers", 1),
         queue_cap: args.opt_usize("queue-cap", 1024),
+        tenants: policy,
         ..Default::default()
     };
     let manifest = handle.manifest();
@@ -227,6 +245,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             0 => None,
             ms => Some(ms as u64 * 1000),
         },
+        // --tenants N splits the load round-robin over tenant ids 1..=N
+        tenants: (1..=args.opt_usize("tenants", 0))
+            .map(|i| TenantId(i as u32))
+            .collect(),
         ..Default::default()
     };
     let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
@@ -278,9 +300,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("throughput: {:.1} req/s (goodput {:.1}/s)",
              stats.throughput.req_per_s(), snap.goodput_req_s);
     println!("shed: {} deadline, {} queue-full, {} expired, \
-              {} malformed; {} client-gone",
+              {} malformed, {} quota; {} client-gone",
              snap.shed_deadline, snap.shed_queue_full, snap.shed_expired,
-             snap.shed_malformed, snap.client_gone);
+             snap.shed_malformed, snap.shed_quota, snap.client_gone);
+    if snap.per_tenant.len() > 1 {
+        for t in &snap.per_tenant {
+            println!("tenant {}: {} submitted, {} admitted, {} done, \
+                      {} quota-shed, goodput {:.1}/s, p99 {:.0}us",
+                     t.tenant, t.submitted, t.admitted, t.completed,
+                     t.shed_quota, t.goodput_req_s, t.p99_us);
+        }
+    }
     println!("shard cache: {:.0}% hits over {} lookups",
              stats.shard_cache.hit_rate() * 100.0,
              stats.shard_cache.lookups);
@@ -441,18 +471,27 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // smoke run stays fast): burst/diurnal/hotkey/poison against a
     // freshly measured flood capacity.
     let mut overload = Vec::new();
+    let mut two_tenant = None;
     if let Some(spec) = args.opt("trace") {
+        let mut want_two_tenant = false;
         let kinds: Vec<sb::TraceKind> = if spec == "all" {
+            want_two_tenant = true;
             sb::TraceKind::all()
         } else {
             spec.split(',')
-                .filter_map(|t| sb::TraceKind::parse(t.trim()))
+                .map(str::trim)
+                .filter(|t| {
+                    let tt = *t == "two_tenant" || *t == "two-tenant";
+                    want_two_tenant |= tt;
+                    !tt
+                })
+                .filter_map(sb::TraceKind::parse)
                 .collect()
         };
-        if kinds.is_empty() {
+        if kinds.is_empty() && !want_two_tenant {
             return Err(miopen_rs::types::MiopenError::BadDescriptor(
                 format!("--trace {spec}: expected burst|diurnal|hotkey|\
-                         poison|all (comma-separated)")));
+                         poison|two_tenant|all (comma-separated)")));
         }
         let ocfg = sb::OverloadConfig {
             requests: args.opt_usize("trace-requests", 192),
@@ -461,28 +500,46 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             queue_cap: args.opt_usize("queue-cap", 256),
             ..Default::default()
         };
-        overload = sb::run_overload(&handle, &kinds, &ocfg)?;
-        let mut ot = miopen_rs::bench::Table::new(
-            &["trace", "done", "shed", "goodput/cap", "p99_us",
-              "deadline_us", "1:1", "reloads"]);
-        for t in &overload {
-            ot.row(vec![
-                t.trace.clone(),
-                t.done.to_string(),
-                t.shed.to_string(),
-                format!("{:.2}", t.goodput_over_capacity),
-                format!("{:.0}", t.admitted_p99_us),
-                t.deadline_us.to_string(),
-                if t.exactly_once { "yes".into() } else { "NO".into() },
-                t.reloads.to_string(),
-            ]);
+        if !kinds.is_empty() {
+            overload = sb::run_overload(&handle, &kinds, &ocfg)?;
+            let mut ot = miopen_rs::bench::Table::new(
+                &["trace", "done", "shed", "goodput/cap", "p99_us",
+                  "deadline_us", "1:1", "reloads"]);
+            for t in &overload {
+                ot.row(vec![
+                    t.trace.clone(),
+                    t.done.to_string(),
+                    t.shed.to_string(),
+                    format!("{:.2}", t.goodput_over_capacity),
+                    format!("{:.0}", t.admitted_p99_us),
+                    t.deadline_us.to_string(),
+                    if t.exactly_once { "yes".into() }
+                    else { "NO".into() },
+                    t.reloads.to_string(),
+                ]);
+            }
+            ot.print();
         }
-        ot.print();
+        if want_two_tenant {
+            let capacity = sb::measure_capacity(&handle, &ocfg)?;
+            let tt = sb::run_two_tenant(&handle, &ocfg, capacity)?;
+            println!("two-tenant: A flooded {} req at 10x quota \
+                      ({} quota-shed, {} served); B {} req in-quota",
+                     tt.requests_a, tt.shed_quota_a, tt.done_a,
+                     tt.requests_b);
+            println!("  B solo:      goodput {:.1}/s, p99 {:.0}us",
+                     tt.solo_goodput_req_s, tt.solo_p99_us);
+            println!("  B contended: goodput {:.1}/s, p99 {:.0}us \
+                      (goodput ratio {:.3}, p99 ratio {:.3})",
+                     tt.contended_goodput_req_s, tt.contended_p99_us,
+                     tt.goodput_ratio, tt.p99_ratio);
+            two_tenant = Some(tt);
+        }
     }
 
     let out = PathBuf::from(args.opt("out").unwrap_or("BENCH_serve.json"));
     sb::write_json(&points, &dtype_points, &layout_points, Some(&cold),
-                   &overload, &out)?;
+                   &overload, two_tenant.as_ref(), &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }

@@ -2,6 +2,7 @@
 //! plus the serve engine's live counters ([`ServeMetrics`]) and their
 //! point-in-time view ([`StatsSnapshot`]).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -138,6 +139,37 @@ pub const PRIORITY_CLASSES: usize = 3;
 pub const PRIORITY_NAMES: [&str; PRIORITY_CLASSES] =
     ["high", "normal", "low"];
 
+/// Identifier of a serving tenant. Legacy (tenant-unaware) callers land
+/// on [`TenantId::DEFAULT`], which the fairness scheduler and quota
+/// gate treat like any other tenant: one sub-queue, one weight, one
+/// optional quota.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+         Default)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    /// The tenant requests belong to when none is set.
+    pub const DEFAULT: TenantId = TenantId(0);
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Per-tenant accumulators behind [`ServeMetrics`]'s tenant map.
+#[derive(Debug, Default, Clone)]
+struct TenantCounters {
+    submitted: u64,
+    admitted: u64,
+    completed: u64,
+    completed_in_deadline: u64,
+    shed_quota: u64,
+    shed_other: u64,
+    latency: TimingStats,
+}
+
 /// Live counters for the serve engine, shared lock-free between the
 /// admission gate (feeder thread) and the workers. All counters are
 /// monotonic except the two gauges (`queue_depth`,
@@ -146,8 +178,8 @@ pub const PRIORITY_NAMES: [&str; PRIORITY_CLASSES] =
 ///
 /// The invariant the exactly-once tests pin:
 /// `submitted == admitted + shed_deadline + shed_queue_full +
-/// shed_malformed`, and every admitted request ends up in exactly one
-/// of `completed` or `shed_expired`.
+/// shed_malformed + shed_quota`, and every admitted request ends up in
+/// exactly one of `completed` or `shed_expired`.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
     /// Requests that reached the admission gate.
@@ -167,6 +199,9 @@ pub struct ServeMetrics {
     pub shed_expired: AtomicU64,
     /// Shed at admission: malformed request (slow-poison hardening).
     pub shed_malformed: AtomicU64,
+    /// Shed at admission: the tenant is over its token-bucket rate
+    /// quota or per-tenant queue-depth cap.
+    pub shed_quota: AtomicU64,
     /// Responses whose client disconnected before delivery.
     pub client_gone: AtomicU64,
     /// Gauge: requests currently queued.
@@ -180,6 +215,9 @@ pub struct ServeMetrics {
     batch_ewma_us: AtomicU64,
     /// Completion latencies per priority class.
     lat: Mutex<[TimingStats; PRIORITY_CLASSES]>,
+    /// Per-tenant traffic counters (BTreeMap: the snapshot lists
+    /// tenants in stable id order).
+    tenants: Mutex<BTreeMap<TenantId, TenantCounters>>,
 }
 
 impl ServeMetrics {
@@ -206,6 +244,44 @@ impl ServeMetrics {
         self.batch_ewma_us.load(Ordering::Relaxed)
     }
 
+    /// Count one request reaching the admission gate under `tenant`.
+    pub fn tenant_submitted(&self, tenant: TenantId) {
+        self.tenants.lock().unwrap().entry(tenant).or_default()
+            .submitted += 1;
+    }
+
+    /// Count one admission under `tenant`.
+    pub fn tenant_admitted(&self, tenant: TenantId) {
+        self.tenants.lock().unwrap().entry(tenant).or_default()
+            .admitted += 1;
+    }
+
+    /// Count one completion under `tenant`; `in_deadline` feeds the
+    /// per-tenant goodput numerator, `latency_us` the p50/p99 summary.
+    pub fn tenant_completed(&self, tenant: TenantId, in_deadline: bool,
+                            latency_us: f64) {
+        let mut map = self.tenants.lock().unwrap();
+        let c = map.entry(tenant).or_default();
+        c.completed += 1;
+        if in_deadline {
+            c.completed_in_deadline += 1;
+        }
+        c.latency.record(latency_us);
+    }
+
+    /// Count one shed under `tenant`; `quota` separates
+    /// quota-exceeded sheds (the fairness gate's own refusals) from
+    /// every other reason.
+    pub fn tenant_shed(&self, tenant: TenantId, quota: bool) {
+        let mut map = self.tenants.lock().unwrap();
+        let c = map.entry(tenant).or_default();
+        if quota {
+            c.shed_quota += 1;
+        } else {
+            c.shed_other += 1;
+        }
+    }
+
     /// Point-in-time view of every counter. `elapsed_s` is the serving
     /// wall time the goodput rate is computed over.
     pub fn snapshot(&self, elapsed_s: f64) -> StatsSnapshot {
@@ -219,6 +295,27 @@ impl ServeMetrics {
             })
             .collect();
         drop(lat);
+        let tenants = self.tenants.lock().unwrap();
+        let per_tenant = tenants
+            .iter()
+            .map(|(&tenant, c)| TenantSnapshot {
+                tenant,
+                submitted: c.submitted,
+                admitted: c.admitted,
+                completed: c.completed,
+                completed_in_deadline: c.completed_in_deadline,
+                shed_quota: c.shed_quota,
+                shed_other: c.shed_other,
+                goodput_req_s: if elapsed_s > 0.0 {
+                    c.completed_in_deadline as f64 / elapsed_s
+                } else {
+                    0.0
+                },
+                p50_us: c.latency.median(),
+                p99_us: c.latency.p99(),
+            })
+            .collect();
+        drop(tenants);
         let good = self.completed_in_deadline.load(Ordering::Relaxed);
         StatsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -229,6 +326,7 @@ impl ServeMetrics {
             shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
             shed_expired: self.shed_expired.load(Ordering::Relaxed),
             shed_malformed: self.shed_malformed.load(Ordering::Relaxed),
+            shed_quota: self.shed_quota.load(Ordering::Relaxed),
             client_gone: self.client_gone.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             in_flight_batches:
@@ -242,6 +340,7 @@ impl ServeMetrics {
                 0.0
             },
             per_priority,
+            per_tenant,
             db: DbHealth::default(),
         }
     }
@@ -286,6 +385,51 @@ impl DbHealth {
     }
 }
 
+/// Per-tenant traffic summary inside a [`StatsSnapshot`] — the
+/// observable the two-tenant isolation gates read.
+#[derive(Debug, Clone, Default)]
+pub struct TenantSnapshot {
+    /// Tenant the counters belong to.
+    pub tenant: TenantId,
+    /// Requests that reached the admission gate.
+    pub submitted: u64,
+    /// Requests the gate queued for execution.
+    pub admitted: u64,
+    /// Admitted requests answered with a completion.
+    pub completed: u64,
+    /// Completions delivered within their deadline.
+    pub completed_in_deadline: u64,
+    /// Sheds with `ShedReason::QuotaExceeded` (rate or depth quota).
+    pub shed_quota: u64,
+    /// Sheds for every other reason.
+    pub shed_other: u64,
+    /// In-deadline completions per second over the snapshot window.
+    pub goodput_req_s: f64,
+    /// Median completion latency (µs; NaN when empty).
+    pub p50_us: f64,
+    /// 99th-percentile completion latency (µs; NaN when empty).
+    pub p99_us: f64,
+}
+
+impl TenantSnapshot {
+    /// Serialize one element of the snapshot's `per_tenant` array.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenant", Json::num(self.tenant.0 as f64)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("completed_in_deadline",
+             Json::num(self.completed_in_deadline as f64)),
+            ("shed_quota", Json::num(self.shed_quota as f64)),
+            ("shed_other", Json::num(self.shed_other as f64)),
+            ("goodput_req_s", Json::num(self.goodput_req_s)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p99_us", Json::num(self.p99_us)),
+        ])
+    }
+}
+
 /// Per-priority-class completion latency summary inside a
 /// [`StatsSnapshot`].
 #[derive(Debug, Clone, Default)]
@@ -313,6 +457,8 @@ pub struct StatsSnapshot {
     pub shed_queue_full: u64,
     pub shed_expired: u64,
     pub shed_malformed: u64,
+    /// Sheds at admission for per-tenant quota (rate or depth cap).
+    pub shed_quota: u64,
     pub client_gone: u64,
     pub queue_depth: u64,
     pub in_flight_batches: u64,
@@ -325,6 +471,9 @@ pub struct StatsSnapshot {
     pub goodput_req_s: f64,
     /// Per-priority completion latency summaries.
     pub per_priority: Vec<PrioritySnapshot>,
+    /// Per-tenant traffic summaries in tenant-id order (only tenants
+    /// that submitted at least one request appear).
+    pub per_tenant: Vec<TenantSnapshot>,
     /// Db-layer health at snapshot time (filled in by the serve engine
     /// from the handle's store; defaults to zeros elsewhere).
     pub db: DbHealth,
@@ -334,7 +483,12 @@ impl StatsSnapshot {
     /// Total requests shed for any reason.
     pub fn shed_total(&self) -> u64 {
         self.shed_deadline + self.shed_queue_full + self.shed_expired
-            + self.shed_malformed
+            + self.shed_malformed + self.shed_quota
+    }
+
+    /// The per-tenant summary for `tenant`, if it submitted anything.
+    pub fn tenant(&self, tenant: TenantId) -> Option<&TenantSnapshot> {
+        self.per_tenant.iter().find(|t| t.tenant == tenant)
     }
 
     /// Serialize for `serve --stats-json` / BENCH_serve.json (NaN
@@ -362,6 +516,7 @@ impl StatsSnapshot {
             ("shed_queue_full", Json::num(self.shed_queue_full as f64)),
             ("shed_expired", Json::num(self.shed_expired as f64)),
             ("shed_malformed", Json::num(self.shed_malformed as f64)),
+            ("shed_quota", Json::num(self.shed_quota as f64)),
             ("shed_total", Json::num(self.shed_total() as f64)),
             ("client_gone", Json::num(self.client_gone as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
@@ -372,6 +527,9 @@ impl StatsSnapshot {
             ("elapsed_s", Json::num(self.elapsed_s)),
             ("goodput_req_s", Json::num(self.goodput_req_s)),
             ("per_priority", Json::Arr(prio)),
+            ("per_tenant",
+             Json::Arr(self.per_tenant.iter()
+                 .map(TenantSnapshot::to_json).collect())),
             ("db", self.db.to_json()),
         ])
     }
@@ -479,6 +637,54 @@ mod tests {
         assert_eq!(prio.len(), PRIORITY_CLASSES);
         // empty low-priority class serializes NaN latencies as null
         assert_eq!(prio[2].get("p50_us"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn tenant_counters_snapshot_in_stable_order() {
+        let m = ServeMetrics::new();
+        // interleave two tenants out of id order
+        m.tenant_submitted(TenantId(7));
+        m.tenant_submitted(TenantId(2));
+        m.tenant_submitted(TenantId(2));
+        m.tenant_admitted(TenantId(2));
+        m.tenant_completed(TenantId(2), true, 120.0);
+        m.tenant_shed(TenantId(7), true);
+        m.tenant_shed(TenantId(2), false);
+        let s = m.snapshot(2.0);
+        assert_eq!(s.per_tenant.len(), 2);
+        assert_eq!(s.per_tenant[0].tenant, TenantId(2));
+        assert_eq!(s.per_tenant[1].tenant, TenantId(7));
+        let t2 = s.tenant(TenantId(2)).unwrap();
+        assert_eq!((t2.submitted, t2.admitted, t2.completed), (2, 1, 1));
+        assert_eq!(t2.completed_in_deadline, 1);
+        assert_eq!((t2.shed_quota, t2.shed_other), (0, 1));
+        assert_eq!(t2.goodput_req_s, 0.5);
+        assert_eq!(t2.p50_us, 120.0);
+        let t7 = s.tenant(TenantId(7)).unwrap();
+        assert_eq!(t7.shed_quota, 1);
+        assert!(t7.p50_us.is_nan());
+        assert!(s.tenant(TenantId(9)).is_none());
+    }
+
+    #[test]
+    fn shed_quota_counts_into_totals_and_json() {
+        let m = ServeMetrics::new();
+        m.shed_quota.fetch_add(3, Ordering::Relaxed);
+        m.tenant_submitted(TenantId::DEFAULT);
+        m.tenant_shed(TenantId::DEFAULT, true);
+        let s = m.snapshot(1.0);
+        assert_eq!(s.shed_total(), 3);
+        let back =
+            crate::util::json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("shed_quota").and_then(Json::as_f64),
+                   Some(3.0));
+        let pt = back.get("per_tenant").and_then(Json::as_arr).unwrap();
+        assert_eq!(pt.len(), 1);
+        assert_eq!(pt[0].get("tenant").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(pt[0].get("shed_quota").and_then(Json::as_f64),
+                   Some(1.0));
+        // empty tenant latency serializes NaN as null
+        assert_eq!(pt[0].get("p99_us"), Some(&Json::Null));
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Injectable time source for the serve engine (test infrastructure).
 //!
 //! Every wait the batcher performs — the partial-batch linger window,
-//! deadline math in the admission gate, expiry checks at dispatch — goes
-//! through a [`Clock`] so tests can drive them deterministically. The
+//! deadline math in the admission gate, expiry checks at dispatch, the
+//! per-tenant quota buckets' token refill — goes through a [`Clock`] so
+//! tests can drive them deterministically. The
 //! production [`RealClock`] is anchored to one process-wide `Instant`
 //! origin (so independently constructed real clocks agree on `now_us`
 //! and latency math never mixes origins); the [`VirtualClock`] only
@@ -34,6 +35,16 @@ pub trait Clock: Send + Sync + std::fmt::Debug {
     /// Register a condvar to notify whenever time advances. No-op on
     /// the real clock — real time never needs to wake sleepers early.
     fn subscribe(&self, cv: Arc<Condvar>);
+
+    /// Microseconds elapsed on this clock since `since_us`, saturating
+    /// at 0 (a caller holding a "future" stamp reads no elapsed time,
+    /// never a wraparound). The per-tenant quota buckets integrate
+    /// their refill rate over exactly this window, so quota refill is
+    /// deterministic under a [`VirtualClock`] like every other engine
+    /// wait.
+    fn elapsed_us_since(&self, since_us: u64) -> u64 {
+        self.now_us().saturating_sub(since_us)
+    }
 }
 
 /// One process-wide origin so every [`RealClock`] agrees on `now_us`.
@@ -129,6 +140,18 @@ mod tests {
         assert_eq!(c.now_us(), 1500);
         c.advance_us(500);
         assert_eq!(c.now_us(), 2000);
+    }
+
+    #[test]
+    fn elapsed_since_saturates() {
+        let c = VirtualClock::new();
+        c.advance_us(250);
+        assert_eq!(c.elapsed_us_since(100), 150);
+        assert_eq!(c.elapsed_us_since(250), 0);
+        // a stamp from the future reads 0, not a u64 wraparound
+        assert_eq!(c.elapsed_us_since(10_000), 0);
+        let r = RealClock::new();
+        assert_eq!(r.elapsed_us_since(u64::MAX), 0);
     }
 
     #[test]

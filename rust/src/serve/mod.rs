@@ -24,9 +24,17 @@
 //!   dropped. Workers re-warm their private shards on resume.
 //! - **Live observability** — every decision lands in a shared
 //!   [`ServeMetrics`] (queue depth, in-flight batches, shed counts by
-//!   reason, goodput, per-priority latency), snapshottable mid-flight
-//!   via [`Control::Stats`] and returned with the final
-//!   [`ServerStats`].
+//!   reason, goodput, per-priority latency, per-tenant counters),
+//!   snapshottable mid-flight via [`Control::Stats`] and returned with
+//!   the final [`ServerStats`].
+//! - **Multi-tenant fairness** — requests carry a [`TenantId`]
+//!   (legacy callers land on [`TenantId::DEFAULT`]); the queue is
+//!   per-tenant sub-queues drained by deficit-weighted round-robin
+//!   ([`fair::FairQueue`]), and admission enforces per-tenant
+//!   token-bucket rate quotas and queue-depth caps
+//!   ([`fair::TenantGate`]) with [`ShedReason::QuotaExceeded`] — one
+//!   tenant flooding at 10× its quota cannot starve another tenant's
+//!   in-quota traffic.
 //!
 //! Each worker owns a private warm exec-cache shard, so the hot path
 //! never contends on a cache lock; per-worker [`WorkerStats`] merge into
@@ -39,8 +47,8 @@
 //! the test suite's [`VirtualClock`].
 
 pub mod clock;
+pub mod fair;
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -55,7 +63,9 @@ use crate::runtime::HostTensor;
 use crate::types::{MiopenError, Result};
 use crate::util::rng::SplitMix64;
 
+pub use crate::metrics::TenantId;
 pub use clock::{Clock, RealClock, VirtualClock};
+pub use fair::{FairQueue, TenantGate, TenantPolicy, TenantQuota};
 
 /// Signature of the serving model's inference artifact.
 pub const SERVE_INFER_SIG: &str = "cnn_infer-f32";
@@ -115,11 +125,15 @@ pub struct Request {
     /// Client-chosen affinity key (hot-key traces group on it; the
     /// engine carries it through to the [`Completion`] for accounting).
     pub key: u64,
+    /// Which tenant submitted the request — the fairness/quota axis.
+    /// Legacy callers get [`TenantId::DEFAULT`].
+    pub tenant: TenantId,
     pub resp: mpsc::Sender<Response>,
 }
 
 impl Request {
-    /// A normal-priority, deadline-less request stamped on `clock`.
+    /// A normal-priority, deadline-less default-tenant request stamped
+    /// on `clock`.
     pub fn new(id: u64, image: Vec<f32>, clock: &dyn Clock,
                resp: &mpsc::Sender<Response>) -> Request {
         Request {
@@ -129,6 +143,7 @@ impl Request {
             deadline_us: None,
             priority: Priority::Normal,
             key: id,
+            tenant: TenantId::DEFAULT,
             resp: resp.clone(),
         }
     }
@@ -147,6 +162,9 @@ pub enum ShedReason {
     /// At admission: the request is malformed (wrong image size) — the
     /// slow-poison hardening; bad requests can no longer kill workers.
     Malformed,
+    /// At admission: the tenant is over its token-bucket rate quota or
+    /// its per-tenant queue-depth cap ([`fair::TenantGate`]).
+    QuotaExceeded,
 }
 
 impl ShedReason {
@@ -157,6 +175,7 @@ impl ShedReason {
             ShedReason::QueueFull => "queue_full",
             ShedReason::Expired => "expired",
             ShedReason::Malformed => "malformed",
+            ShedReason::QuotaExceeded => "quota_exceeded",
         }
     }
 }
@@ -248,6 +267,10 @@ pub struct ServeConfig {
     /// Admission bound: requests arriving at this queue depth are shed
     /// with [`ShedReason::QueueFull`] instead of queueing unboundedly.
     pub queue_cap: usize,
+    /// Per-tenant quotas and DRR weights; the default policy gives
+    /// every tenant weight 1, unlimited rate, and no depth cap —
+    /// single-tenant callers see exactly the old behavior.
+    pub tenants: TenantPolicy,
 }
 
 impl Default for ServeConfig {
@@ -258,6 +281,7 @@ impl Default for ServeConfig {
             workers: 1,
             shard_capacity: 32,
             queue_cap: 1024,
+            tenants: TenantPolicy::default(),
         }
     }
 }
@@ -337,7 +361,8 @@ enum Pull {
     Done,
 }
 
-/// MPMC request queue with priority classes, close semantics, and a
+/// MPMC request queue with per-tenant DRR scheduling (priority classes
+/// pop high-first within a tenant's turn), close semantics, and a
 /// drain barrier: the feeder pushes, workers pop batches (first request
 /// blocks, then the batch lingers up to the flush window while
 /// partial), and [`BatchQueue::begin_drain`] parks all workers between
@@ -349,9 +374,8 @@ struct BatchQueue {
 }
 
 struct QueueInner {
-    /// One FIFO per priority class, popped high-first.
-    q: [VecDeque<Request>; PRIORITY_CLASSES],
-    len: usize,
+    /// Per-tenant sub-queues drained deficit-weighted round-robin.
+    fq: FairQueue,
     closed: bool,
     draining: bool,
     /// Workers currently parked on the drain barrier.
@@ -362,13 +386,12 @@ struct QueueInner {
 }
 
 impl BatchQueue {
-    fn new(clock: Arc<dyn Clock>) -> Self {
+    fn new(clock: Arc<dyn Clock>, policy: TenantPolicy) -> Self {
         let cv = Arc::new(Condvar::new());
         clock.subscribe(cv.clone());
         Self {
             inner: Mutex::new(QueueInner {
-                q: Default::default(),
-                len: 0,
+                fq: FairQueue::new(policy),
                 closed: false,
                 draining: false,
                 paused: 0,
@@ -381,15 +404,21 @@ impl BatchQueue {
 
     fn push(&self, req: Request, metrics: &ServeMetrics) {
         let mut inner = self.inner.lock().unwrap();
-        inner.q[req.priority.index()].push_back(req);
-        inner.len += 1;
-        metrics.queue_depth.store(inner.len as u64, Ordering::Relaxed);
+        inner.fq.push(req);
+        metrics.queue_depth.store(inner.fq.len() as u64,
+                                  Ordering::Relaxed);
         drop(inner);
         self.cv.notify_all();
     }
 
     fn len(&self) -> usize {
-        self.inner.lock().unwrap().len
+        self.inner.lock().unwrap().fq.len()
+    }
+
+    /// Queued requests for one tenant — the admission gate's depth-cap
+    /// input.
+    fn tenant_len(&self, tenant: TenantId) -> usize {
+        self.inner.lock().unwrap().fq.tenant_len(tenant)
     }
 
     fn close(&self) {
@@ -430,16 +459,6 @@ impl BatchQueue {
         self.cv.notify_all();
     }
 
-    fn pop_one(inner: &mut QueueInner) -> Option<Request> {
-        for p in 0..PRIORITY_CLASSES {
-            if let Some(r) = inner.q[p].pop_front() {
-                inner.len -= 1;
-                return Some(r);
-            }
-        }
-        None
-    }
-
     /// Grab up to `max` queued requests without blocking — the
     /// continuous-batching top-up between in-flight chunks. Returns
     /// nothing while draining so workers quiesce promptly.
@@ -453,12 +472,13 @@ impl BatchQueue {
         }
         let mut out = Vec::new();
         while out.len() < max {
-            match Self::pop_one(&mut inner) {
+            match inner.fq.pop() {
                 Some(r) => out.push(r),
                 None => break,
             }
         }
-        metrics.queue_depth.store(inner.len as u64, Ordering::Relaxed);
+        metrics.queue_depth.store(inner.fq.len() as u64,
+                                  Ordering::Relaxed);
         out
     }
 
@@ -480,7 +500,7 @@ impl BatchQueue {
                 inner.paused -= 1;
                 return Pull::Resumed(inner.epoch);
             }
-            if inner.len > 0 {
+            if !inner.fq.is_empty() {
                 break;
             }
             if inner.closed {
@@ -490,7 +510,7 @@ impl BatchQueue {
         }
         let mut batch = Vec::with_capacity(batch_max);
         while batch.len() < batch_max {
-            match Self::pop_one(&mut inner) {
+            match inner.fq.pop() {
                 Some(r) => batch.push(r),
                 None => break,
             }
@@ -510,7 +530,7 @@ impl BatchQueue {
                     .unwrap();
                 inner = guard;
                 while batch.len() < batch_max {
-                    match Self::pop_one(&mut inner) {
+                    match inner.fq.pop() {
                         Some(r) => batch.push(r),
                         None => break,
                     }
@@ -521,7 +541,8 @@ impl BatchQueue {
                 }
             }
         }
-        metrics.queue_depth.store(inner.len as u64, Ordering::Relaxed);
+        metrics.queue_depth.store(inner.fq.len() as u64,
+                                  Ordering::Relaxed);
         Pull::Batch(batch)
     }
 }
@@ -582,18 +603,26 @@ struct ServeShared<'a> {
     shard_capacity: usize,
     queue_cap: usize,
     workers: usize,
+    /// Per-tenant token buckets + policy (depth caps, DRR weights).
+    gate: &'a TenantGate,
 }
+
+/// Cold-start prior for the admission EWMA: until the first batch
+/// completes, assume a batch-service period of 1ms. The gate used to
+/// return `now_us` (predict 0µs of service) with no observations, which
+/// admitted *any* deadline at *any* backlog depth unboundedly — a flood
+/// arriving before first light queued thousands of doomed requests.
+pub(crate) const COLD_START_BATCH_US: u64 = 1_000;
 
 /// Predicted completion time (µs) for a request admitted at queue depth
 /// `depth`: the backlog drains `workers × batch_max` requests per EWMA
 /// batch-service period, plus one period for the request's own batch.
-/// With no observations yet (`ewma_us == 0`) the gate is optimistic and
-/// admits — the first batches calibrate it.
+/// With no observations yet (`ewma_us == 0`) the
+/// [`COLD_START_BATCH_US`] prior substitutes, so backlog depth still
+/// gates admission before the first batch calibrates the EWMA.
 fn admission_estimate_us(now_us: u64, depth: usize, workers: usize,
                          batch_max: usize, ewma_us: u64) -> u64 {
-    if ewma_us == 0 {
-        return now_us;
-    }
+    let ewma_us = if ewma_us == 0 { COLD_START_BATCH_US } else { ewma_us };
     let per_wave = (workers.max(1) * batch_max.max(1)) as u64;
     let waves = depth as u64 / per_wave + 1;
     now_us.saturating_add(waves.saturating_mul(ewma_us))
@@ -605,6 +634,7 @@ fn count_shed(metrics: &ServeMetrics, reason: ShedReason) {
         ShedReason::QueueFull => &metrics.shed_queue_full,
         ShedReason::Expired => &metrics.shed_expired,
         ShedReason::Malformed => &metrics.shed_malformed,
+        ShedReason::QuotaExceeded => &metrics.shed_quota,
     };
     c.fetch_add(1, Ordering::Relaxed);
 }
@@ -614,6 +644,8 @@ fn count_shed(metrics: &ServeMetrics, reason: ShedReason) {
 fn shed_request(req: Request, reason: ShedReason, depth: usize,
                 metrics: &ServeMetrics) {
     count_shed(metrics, reason);
+    metrics.tenant_shed(req.tenant,
+                        reason == ShedReason::QuotaExceeded);
     let sent = req.resp.send(Response::Shed(Shed {
         id: req.id,
         reason,
@@ -626,11 +658,15 @@ fn shed_request(req: Request, reason: ShedReason, depth: usize,
 }
 
 /// The admission gate (feeder side): malformed and over-capacity
-/// requests shed immediately; deadlines are checked against the
-/// EWMA-predicted completion time at the current depth.
+/// requests shed immediately, then the tenant's depth cap, then
+/// deadlines against the EWMA-predicted completion time at the current
+/// depth, and the tenant's rate quota last — a token is only consumed
+/// by a request that every other check would admit, so sheds for other
+/// reasons never burn quota.
 fn admit(ctx: &ServeShared<'_>, req: Request) {
     let metrics = ctx.metrics;
     metrics.submitted.fetch_add(1, Ordering::Relaxed);
+    metrics.tenant_submitted(req.tenant);
     if req.image.len() != ctx.layout.image_elems {
         let depth = ctx.queue.len();
         shed_request(req, ShedReason::Malformed, depth, metrics);
@@ -639,6 +675,11 @@ fn admit(ctx: &ServeShared<'_>, req: Request) {
     let depth = ctx.queue.len();
     if depth >= ctx.queue_cap.max(1) {
         shed_request(req, ShedReason::QueueFull, depth, metrics);
+        return;
+    }
+    let depth_cap = ctx.gate.policy().get(req.tenant).depth_cap;
+    if depth_cap > 0 && ctx.queue.tenant_len(req.tenant) >= depth_cap {
+        shed_request(req, ShedReason::QuotaExceeded, depth, metrics);
         return;
     }
     if let Some(d) = req.deadline_us {
@@ -651,7 +692,12 @@ fn admit(ctx: &ServeShared<'_>, req: Request) {
             return;
         }
     }
+    if !ctx.gate.try_admit(req.tenant, ctx.clock) {
+        shed_request(req, ShedReason::QuotaExceeded, depth, metrics);
+        return;
+    }
     metrics.admitted.fetch_add(1, Ordering::Relaxed);
+    metrics.tenant_admitted(req.tenant);
     ctx.queue.push(req, metrics);
 }
 
@@ -730,7 +776,8 @@ pub fn run_server_with(handle: &Handle, cfg: &ServeConfig,
     let _ = handle.compile_sig(&infer.sig)?;
 
     let workers = cfg.workers.max(1);
-    let queue = BatchQueue::new(clock.clone());
+    let queue = BatchQueue::new(clock.clone(), cfg.tenants.clone());
+    let gate = TenantGate::new(cfg.tenants.clone());
     let alive = AtomicUsize::new(workers);
     let metrics = ServeMetrics::new();
     let start = Instant::now();
@@ -749,6 +796,7 @@ pub fn run_server_with(handle: &Handle, cfg: &ServeConfig,
         shard_capacity: cfg.shard_capacity,
         queue_cap: cfg.queue_cap,
         workers,
+        gate: &gate,
     };
 
     let results: Vec<Result<WorkerStats>> = std::thread::scope(|scope| {
@@ -867,6 +915,7 @@ fn execute_batch(ctx: &ServeShared<'_>, shard: &ExecCache,
         pending.retain(|req| match req.deadline_us {
             Some(d) if now > d => {
                 count_shed(ctx.metrics, ShedReason::Expired);
+                ctx.metrics.tenant_shed(req.tenant, false);
                 stats.shed_expired += 1;
                 let sent = req.resp.send(Response::Shed(Shed {
                     id: req.id,
@@ -923,10 +972,14 @@ fn execute_batch(ctx: &ServeShared<'_>, shard: &ExecCache,
                 done.saturating_sub(req.submitted_us) as f64;
             stats.latency.record(latency_us);
             ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
-            if req.deadline_us.map(|d| done <= d).unwrap_or(true) {
+            let in_deadline =
+                req.deadline_us.map(|d| done <= d).unwrap_or(true);
+            if in_deadline {
                 ctx.metrics.completed_in_deadline
                     .fetch_add(1, Ordering::Relaxed);
             }
+            ctx.metrics.tenant_completed(req.tenant, in_deadline,
+                                         latency_us);
             ctx.metrics.record_latency(req.priority.index(), latency_us);
             let sent = req.resp.send(Response::Done(Completion {
                 id: req.id,
@@ -973,6 +1026,10 @@ pub struct LoadOptions {
     /// Every k-th request is malformed (wrong image size) — the
     /// slow-poison trace; 0 = never.
     pub malformed_every: usize,
+    /// Tenants to stamp on requests round-robin (request `i` gets
+    /// `tenants[i % len]`); empty = everything on
+    /// [`TenantId::DEFAULT`], the legacy single-tenant shape.
+    pub tenants: Vec<TenantId>,
 }
 
 impl Default for LoadOptions {
@@ -982,6 +1039,7 @@ impl Default for LoadOptions {
             priority_weights: [0.0, 1.0, 0.0],
             hot_fraction: 0.0,
             malformed_every: 0,
+            tenants: Vec::new(),
         }
     }
 }
@@ -1036,6 +1094,11 @@ pub fn generate_load_opts(tx: &mpsc::Sender<Request>, n: usize, rate: f64,
         let hot = opts.hot_fraction > 0.0
             && rng.next_f64() < opts.hot_fraction;
         let now = clock.now_us();
+        let tenant = if opts.tenants.is_empty() {
+            TenantId::DEFAULT
+        } else {
+            opts.tenants[id % opts.tenants.len()]
+        };
         let _ = tx.send(Request {
             id: id as u64,
             image,
@@ -1043,6 +1106,7 @@ pub fn generate_load_opts(tx: &mpsc::Sender<Request>, n: usize, rate: f64,
             deadline_us: opts.deadline_us.map(|d| now.saturating_add(d)),
             priority: pick_priority(&mut rng, &opts.priority_weights),
             key: if hot { 0 } else { id as u64 },
+            tenant,
             resp: resp_tx.clone(),
         });
         if rate > 0.0 {
@@ -1126,7 +1190,8 @@ mod tests {
 
     fn test_queue() -> (BatchQueue, Arc<VirtualClock>, ServeMetrics) {
         let clock = Arc::new(VirtualClock::new());
-        let q = BatchQueue::new(clock.clone() as Arc<dyn Clock>);
+        let q = BatchQueue::new(clock.clone() as Arc<dyn Clock>,
+                                TenantPolicy::default());
         (q, clock, ServeMetrics::new())
     }
 
@@ -1182,7 +1247,8 @@ mod tests {
     #[test]
     fn batch_queue_timeout_flushes_partial_batch() {
         let clock = Arc::new(VirtualClock::new());
-        let q = Arc::new(BatchQueue::new(clock.clone() as Arc<dyn Clock>));
+        let q = Arc::new(BatchQueue::new(clock.clone() as Arc<dyn Clock>,
+                                         TenantPolicy::default()));
         let (tx, _rx) = mpsc::channel();
         q.push(dummy_request(0, Priority::Normal, clock.as_ref(), &tx),
                &ServeMetrics::new());
@@ -1210,7 +1276,8 @@ mod tests {
     #[test]
     fn late_arrival_joins_lingering_partial_batch() {
         let clock = Arc::new(VirtualClock::new());
-        let q = Arc::new(BatchQueue::new(clock.clone() as Arc<dyn Clock>));
+        let q = Arc::new(BatchQueue::new(clock.clone() as Arc<dyn Clock>,
+                                         TenantPolicy::default()));
         let (tx, _rx) = mpsc::channel();
         q.push(dummy_request(0, Priority::Normal, clock.as_ref(), &tx),
                &ServeMetrics::new());
@@ -1271,8 +1338,10 @@ mod tests {
 
     #[test]
     fn admission_estimate_math() {
-        // no observations: optimistic (estimate == now)
-        assert_eq!(admission_estimate_us(100, 50, 2, 8, 0), 100);
+        // no observations: the cold-start prior substitutes for the
+        // EWMA — depth 50 / (2×8 per wave) = 3 waves + own = 4 à 1ms
+        assert_eq!(admission_estimate_us(100, 50, 2, 8, 0),
+                   100 + 4 * COLD_START_BATCH_US);
         // empty queue: one wave for the request's own batch
         assert_eq!(admission_estimate_us(0, 0, 2, 8, 1000), 1000);
         // 32 queued / (2 workers * 8 per batch) = 2 waves + own = 3
@@ -1280,6 +1349,130 @@ mod tests {
         // deeper queue -> strictly later estimate
         assert!(admission_estimate_us(0, 64, 2, 8, 1000)
                 > admission_estimate_us(0, 32, 2, 8, 1000));
+    }
+
+    /// Cold-start regression (satellite fix): with zero completed
+    /// batches the gate used to predict `now` (0µs of service) and
+    /// admit ANY deadline at ANY backlog. The prior must make a deep
+    /// backlog fail a tight deadline even before the EWMA has data,
+    /// while a realistic deadline still admits (gate stays optimistic
+    /// enough to take first traffic).
+    #[test]
+    fn admission_cold_start_is_not_unboundedly_optimistic() {
+        let clock = VirtualClock::new();
+        clock.advance_us(500);
+        let now = clock.now_us();
+        // deep backlog, 1 worker × batch 8 → 126 waves at the 1ms
+        // prior ≈ 126ms out; a 5ms deadline must NOT admit
+        let est = admission_estimate_us(now, 1000, 1, 8, 0);
+        assert!(est > now, "cold-start estimate must not be `now`");
+        assert!(est > now + 5_000,
+                "deep cold backlog passed a 5ms deadline: est {est}");
+        // empty queue cold: one prior wave — a 5ms deadline admits
+        let est0 = admission_estimate_us(now, 0, 1, 8, 0);
+        assert_eq!(est0, now + COLD_START_BATCH_US);
+        assert!(est0 <= now + 5_000);
+        // first observation replaces the prior entirely
+        let m = ServeMetrics::new();
+        m.observe_batch_us(7_000);
+        assert_eq!(admission_estimate_us(now, 0, 1, 8, m.batch_ewma_us()),
+                   now + 7_000);
+    }
+
+    /// Satellite: a drain/reload racing admission at a tenant's depth
+    /// cap must neither lose admitted requests nor leak quota tokens —
+    /// the PR 8 zero-loss guarantee extended to per-tenant sub-queues,
+    /// pinned at the queue/gate component level on a virtual clock.
+    #[test]
+    fn drain_at_tenant_depth_cap_loses_nothing() {
+        let clock = Arc::new(VirtualClock::new());
+        let mut policy = TenantPolicy::default();
+        policy.set(TenantId(1), TenantQuota {
+            rate_per_s: 100.0,
+            burst: 4.0,
+            depth_cap: 4,
+            ..TenantQuota::default()
+        });
+        let q = Arc::new(BatchQueue::new(clock.clone() as Arc<dyn Clock>,
+                                         policy.clone()));
+        let gate = TenantGate::new(policy);
+        let m = ServeMetrics::new();
+        let (tx, _rx) = mpsc::channel();
+
+        // admit tenant 1 to its depth cap, consuming its full burst
+        for id in 0..4u64 {
+            assert!(gate.try_admit(TenantId(1), clock.as_ref()));
+            let mut r = dummy_request(id, Priority::Normal,
+                                      clock.as_ref(), &tx);
+            r.tenant = TenantId(1);
+            q.push(r, &m);
+        }
+        assert_eq!(q.tenant_len(TenantId(1)), 4);
+        assert_eq!(gate.tokens(TenantId(1), clock.as_ref()), 0.0);
+
+        // a 5th arrival at the cap would shed QuotaExceeded WITHOUT
+        // consuming a token (admission checks depth before the bucket)
+        assert!(q.tenant_len(TenantId(1)) >= 4);
+
+        // reload window: park a worker on the barrier, drain, resume
+        let alive = AtomicUsize::new(1);
+        let q2 = Arc::clone(&q);
+        let worker = std::thread::spawn(move || {
+            match q2.pull(8, 0, &ServeMetrics::new()) {
+                Pull::Resumed(e) => e,
+                _ => panic!("expected Resumed through the drain"),
+            }
+        });
+        q.begin_drain();
+        q.wait_all_paused(&alive);
+        // mid-reload: queue contents and bucket state are untouched
+        assert_eq!(q.tenant_len(TenantId(1)), 4);
+        assert_eq!(gate.tokens(TenantId(1), clock.as_ref()), 0.0,
+                   "reload leaked quota tokens");
+        q.end_drain();
+        assert_eq!(worker.join().unwrap(), 1);
+
+        // zero loss: all 4 admitted requests come out, in order
+        let b = pull_batch(&q, 8, 0, &m);
+        let ids: Vec<u64> = b.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(q.tenant_len(TenantId(1)), 0);
+        // tokens refill only with clock time, not with the reload:
+        // 10ms at 100/s = 1 token
+        clock.advance_us(10_000);
+        let toks = gate.tokens(TenantId(1), clock.as_ref());
+        assert!((toks - 1.0).abs() < 1e-9,
+                "expected exactly 1 refilled token, got {toks}");
+    }
+
+    #[test]
+    fn drr_queue_interleaves_tenants_under_backlog() {
+        // engine-level shape of the fairness contract: with two
+        // backlogged tenants at weights 2:1, a batch pull serves them
+        // 2:1 interleaved rather than FIFO exhausting the flooder
+        let clock = Arc::new(VirtualClock::new());
+        let mut policy = TenantPolicy::default();
+        policy.set(TenantId(1), TenantQuota {
+            weight: 2, ..TenantQuota::default()
+        });
+        let q = BatchQueue::new(clock.clone() as Arc<dyn Clock>, policy);
+        let m = ServeMetrics::new();
+        let (tx, _rx) = mpsc::channel();
+        for id in 0..6u64 {
+            let mut r = dummy_request(id, Priority::Normal,
+                                      clock.as_ref(), &tx);
+            r.tenant = TenantId(1);
+            q.push(r, &m);
+        }
+        for id in 6..9u64 {
+            let mut r = dummy_request(id, Priority::Normal,
+                                      clock.as_ref(), &tx);
+            r.tenant = TenantId(2);
+            q.push(r, &m);
+        }
+        let b = pull_batch(&q, 9, 0, &m);
+        let order: Vec<u32> = b.iter().map(|r| r.tenant.0).collect();
+        assert_eq!(order, vec![1, 1, 2, 1, 1, 2, 1, 1, 2]);
     }
 
     #[test]

@@ -921,6 +921,166 @@ fn prop_serve_exactly_once() {
 }
 
 #[test]
+fn prop_serve_tenant_fairness() {
+    // The multi-tenant scheduling contract under random tenant mixes:
+    // (1) the deficit-weighted round-robin queue converges every
+    // backlogged tenant's served share to its weight ratio within one
+    // turn's slack; (2) a live server still answers every request
+    // exactly once whatever tenants it carries; (3) a tenant with no
+    // rate quota and no depth cap is never shed QuotaExceeded, and the
+    // per-tenant counters reconcile exactly with what each tenant
+    // submitted.
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    use miopen_rs::serve::{run_server, FairQueue, Priority, RealClock,
+                           Request, Response, ServeConfig, ShedReason,
+                           TenantId, TenantPolicy, TenantQuota};
+
+    let handle = common::cpu_handle("prop-tenant-fair");
+    let manifest = handle.manifest();
+    let image_elems: usize = manifest
+        .require("cnn_infer-f32")
+        .unwrap()
+        .inputs
+        .last()
+        .unwrap()
+        .shape[1..]
+        .iter()
+        .product();
+    drop(manifest);
+
+    let scenario_gen = Gen::new(|rng: &mut SplitMix64| {
+        let tenants = 2 + rng.below(3) as usize; // 2..=4 tenants
+        let weights: Vec<u64> =
+            (0..tenants).map(|_| 1 + rng.below(4)).collect();
+        (
+            weights,
+            1 + rng.below(3) as usize,   // workers
+            1 + rng.below(8) as usize,   // batch_max
+            20 + rng.below(41) as usize, // requests
+            rng.next_u64(),              // per-case traffic seed
+        )
+    });
+    forall("serve-tenant-fairness", &scenario_gen, 6, |case| {
+        let (ref weights, workers, batch_max, n, seed) = *case;
+        let tenants = weights.len();
+        let mut policy = TenantPolicy::new();
+        for (i, &w) in weights.iter().enumerate() {
+            // weights only: unlimited rate, no depth cap — the server
+            // half of this property may never shed QuotaExceeded
+            policy.set(TenantId(i as u32 + 1),
+                       TenantQuota { weight: w,
+                                     ..TenantQuota::default() });
+        }
+
+        // (1) deterministic DRR share convergence on the bare queue
+        let clock = RealClock::new();
+        let (fq_tx, _fq_rx) = mpsc::channel();
+        let mut fq = FairQueue::new(policy.clone());
+        let rounds = 8u64;
+        let maxw = *weights.iter().max().unwrap();
+        for t in 0..tenants {
+            for id in 0..(rounds + 2) * maxw {
+                let mut req =
+                    Request::new(id, vec![0.0; 4], &clock, &fq_tx);
+                req.tenant = TenantId(t as u32 + 1);
+                fq.push(req);
+            }
+        }
+        let total_w: u64 = weights.iter().sum();
+        let mut served = vec![0u64; tenants];
+        for _ in 0..rounds * total_w {
+            let req = fq
+                .pop()
+                .ok_or_else(|| "queue drained early".to_string())?;
+            served[req.tenant.0 as usize - 1] += 1;
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            let want = rounds * w;
+            if served[i].abs_diff(want) > w {
+                return Err(format!(
+                    "tenant {} (weight {w}) served {} of ~{want} in \
+                     {rounds} rounds of {weights:?}",
+                    i + 1, served[i]));
+            }
+        }
+
+        // (2)+(3) a live server over the same policy
+        let mut rng = SplitMix64::new(seed);
+        let (tx, rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let mut submitted = vec![0u64; tenants];
+        for id in 0..n as u64 {
+            let t = rng.below(tenants as u64) as usize;
+            submitted[t] += 1;
+            let mut req = Request::new(id, vec![0.05; image_elems],
+                                       &clock, &resp_tx);
+            req.tenant = TenantId(t as u32 + 1);
+            req.priority = Priority::from_index(rng.below(3) as usize);
+            tx.send(req).map_err(|e| e.to_string())?;
+        }
+        drop(tx);
+        drop(resp_tx);
+        let cfg = ServeConfig {
+            batch_max,
+            batch_timeout: Duration::from_millis(1),
+            workers,
+            tenants: policy,
+            ..Default::default()
+        };
+        let stats = run_server(&handle, &cfg, rx)
+            .map_err(|e| e.to_string())?;
+        let responses: Vec<Response> = resp_rx.iter().collect();
+
+        let mut ids: Vec<u64> =
+            responses.iter().map(|r| r.id()).collect();
+        ids.sort_unstable();
+        if ids != (0..n as u64).collect::<Vec<_>>() {
+            return Err(format!(
+                "{} responses for {n} requests (lost or duplicated)",
+                responses.len()));
+        }
+        for r in &responses {
+            if let Some(s) = r.as_shed() {
+                if s.reason == ShedReason::QuotaExceeded {
+                    return Err(format!(
+                        "unlimited-quota tenant shed QuotaExceeded \
+                         (id {})", s.id));
+                }
+            }
+        }
+        for (i, &sub) in submitted.iter().enumerate() {
+            let id = TenantId(i as u32 + 1);
+            let Some(t) = stats.snapshot.tenant(id) else {
+                if sub == 0 {
+                    continue;
+                }
+                return Err(format!(
+                    "tenant {id} missing from the snapshot"));
+            };
+            if t.submitted != sub {
+                return Err(format!(
+                    "tenant {id}: counted {} submitted, sent {sub}",
+                    t.submitted));
+            }
+            if t.shed_quota != 0 {
+                return Err(format!(
+                    "tenant {id}: {} quota sheds without a quota",
+                    t.shed_quota));
+            }
+            if t.submitted != t.admitted + t.shed_quota + t.shed_other
+                || t.admitted != t.completed
+            {
+                return Err(format!(
+                    "tenant {id}: counters do not reconcile: {t:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_immediate_pick_agrees_with_find_top2() {
     // Warm the full figure-6 set with a real find, then: for any of
     // those shapes, the immediate pick with the shape's own db entry
